@@ -1,0 +1,172 @@
+//! End-to-end MIPS serving driver — the repo's full-system validation.
+//!
+//! Builds a synthetic retrieval database (4 shards x 16384 x 64-d Gaussian
+//! vectors), starts the coordinator (dynamic batcher -> router -> per-shard
+//! workers -> global merge), and drives an open-loop query stream through
+//! it, reporting throughput, latency percentiles, batch statistics and
+//! measured recall@K against an exact oracle.
+//!
+//! Backend: uses the AOT `mips_fused` PJRT artifact when `make artifacts`
+//! has produced one (all three layers composing: Pallas kernel -> HLO ->
+//! PJRT -> Rust coordinator); otherwise falls back to the native Rust
+//! kernel and says so.
+//!
+//! Run: `cargo run --release --example mips_serving [-- --queries 512 --pjrt]`
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use fastk::coordinator::{
+    BackendFactory, BatcherConfig, MipsService, NativeBackend, PjrtBackend, Query,
+    ServiceConfig, ShardBackend,
+};
+use fastk::recall::{expected_recall, RecallConfig};
+use fastk::runtime::Executor;
+use fastk::topk::{exact, TwoStageParams};
+use fastk::util::cli::Args;
+use fastk::util::stats::{fmt_ns, Summary};
+use fastk::util::Rng;
+
+const ARTIFACT: &str = "mips_fused_q8_d64_n16384_k128";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let num_queries = args.usize_or("queries", 512);
+    let shards = args.usize_or("shards", 4);
+    let shard_size = 16_384usize;
+    let d = 64usize;
+    let k = 128usize;
+    let want_pjrt = args.bool_or("pjrt", Path::new("artifacts/manifest.json").exists());
+
+    let mut rng = Rng::new(20_250_710);
+    let n_total = shards * shard_size;
+    println!("database: {shards} shards x {shard_size} x {d}-d ({n_total} vectors)");
+    let db: Vec<f32> = (0..n_total * d).map(|_| rng.next_gaussian() as f32).collect();
+
+    // Shard-local operator parameters (what the artifacts were built with).
+    let params = TwoStageParams::auto(shard_size, k, 0.95).unwrap();
+    println!(
+        "shard operator: K'={} B={} ({} candidates, E[recall]={:.4})",
+        params.local_k,
+        params.buckets,
+        params.num_candidates(),
+        expected_recall(&RecallConfig::new(
+            shard_size as u64,
+            k as u64,
+            params.buckets as u64,
+            params.local_k as u64
+        ))
+    );
+
+    // Backends: PJRT if available (the three-layer path), else native.
+    let use_pjrt = want_pjrt
+        && Executor::new(Path::new("artifacts"))
+            .map(|e| e.manifest.find(ARTIFACT).is_some())
+            .unwrap_or(false);
+    println!(
+        "backend: {}",
+        if use_pjrt {
+            "PJRT (AOT Pallas fused matmul+stage1 artifact)"
+        } else {
+            "native Rust kernel (run `make artifacts` for the PJRT path)"
+        }
+    );
+
+    let mut factories: Vec<BackendFactory> = Vec::new();
+    let mut offsets = Vec::new();
+    for s in 0..shards {
+        let chunk = db[s * shard_size * d..(s + 1) * shard_size * d].to_vec();
+        offsets.push(s * shard_size);
+        if use_pjrt {
+            factories.push(Box::new(move || {
+                let exec = Executor::new(Path::new("artifacts"))?;
+                let compiled = exec.compile(ARTIFACT)?;
+                Ok(Box::new(PjrtBackend::new(compiled, &chunk, d)?) as Box<dyn ShardBackend>)
+            }));
+        } else {
+            factories.push(Box::new(move || {
+                Ok(Box::new(NativeBackend::new(chunk, d, k, Some(params)))
+                    as Box<dyn ShardBackend>)
+            }));
+        }
+    }
+
+    let svc = MipsService::start(
+        ServiceConfig {
+            d,
+            k,
+            batcher: BatcherConfig {
+                max_batch: 8, // the artifact's compiled batch
+                max_delay: Duration::from_millis(2),
+            },
+        },
+        factories,
+        offsets,
+    )?;
+
+    // Open-loop stream: all queries submitted up front (peak-load regime).
+    println!("submitting {num_queries} queries (open loop) ...");
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(num_queries);
+    for id in 0..num_queries {
+        let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let rx = svc.submit(Query {
+            id: id as u64,
+            vector: q.clone(),
+        })?;
+        pending.push((q, rx));
+    }
+    let mut responses = Vec::with_capacity(num_queries);
+    for (q, rx) in pending {
+        responses.push((q, rx.recv()?));
+    }
+    let wall = t0.elapsed();
+
+    // Latency statistics from per-request measurements.
+    let lat: Vec<f64> = responses
+        .iter()
+        .map(|(_, r)| r.total_latency.as_secs_f64() * 1e9)
+        .collect();
+    let s = Summary::from_samples(&lat);
+    println!("\n=== results ===");
+    println!(
+        "wall {:.2}s  throughput {:.1} qps  batches {} (mean size {:.2})",
+        wall.as_secs_f64(),
+        num_queries as f64 / wall.as_secs_f64(),
+        svc.metrics.batches(),
+        svc.metrics.mean_batch_size()
+    );
+    println!(
+        "latency: mean {} p50 {} p90 {} p99 {} max {}",
+        fmt_ns(s.mean),
+        fmt_ns(s.p50),
+        fmt_ns(s.p90),
+        fmt_ns(s.p99),
+        fmt_ns(s.max)
+    );
+
+    // Recall@K against an exact full-database oracle on sampled queries.
+    let sample = responses.len().min(24);
+    let mut hit = 0usize;
+    for (q, resp) in responses.iter().take(sample) {
+        let scores: Vec<f32> = (0..n_total)
+            .map(|j| {
+                let v = &db[j * d..(j + 1) * d];
+                q.iter().zip(v).map(|(a, b)| a * b).sum()
+            })
+            .collect();
+        let want: std::collections::HashSet<usize> = exact::topk_quickselect(&scores, k)
+            .into_iter()
+            .map(|c| c.index as usize)
+            .collect();
+        hit += resp.results.iter().filter(|(i, _)| want.contains(i)).count();
+    }
+    let recall = hit as f64 / (sample * k) as f64;
+    println!("measured recall@{k}: {recall:.4} over {sample} sampled queries");
+    assert!(recall > 0.93, "recall regression: {recall}");
+
+    println!("metrics: {}", svc.metrics.summary());
+    svc.shutdown();
+    println!("OK");
+    Ok(())
+}

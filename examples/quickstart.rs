@@ -1,0 +1,57 @@
+//! Quickstart: the paper's user-facing API in ~40 lines.
+//!
+//! `approx_top_k(array, K, recall_target)` — no manual tuning: parameter
+//! selection (paper Appendix A.10) picks `(K', B)` automatically, then the
+//! generalized two-stage operator runs.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fastk::recall::{expected_recall, RecallConfig};
+use fastk::topk::{exact, recall_of, TwoStageParams, TwoStageTopK};
+use fastk::util::Rng;
+
+fn main() {
+    let n = 262_144;
+    let k = 1024;
+    let recall_target = 0.95;
+
+    // 1. Auto-select algorithm parameters for (N, K, recall_target).
+    let params = TwoStageParams::auto(n, k, recall_target).expect("feasible");
+    let cfg = RecallConfig::new(
+        n as u64,
+        k as u64,
+        params.buckets as u64,
+        params.local_k as u64,
+    );
+    println!(
+        "selected K'={} B={} -> {} candidates (expected recall {:.4})",
+        params.local_k,
+        params.buckets,
+        params.num_candidates(),
+        expected_recall(&cfg)
+    );
+
+    // 2. Run the two-stage approximate Top-K on random data.
+    let mut rng = Rng::new(7);
+    let mut values = vec![0f32; n];
+    rng.fill_f32(&mut values);
+
+    let mut operator = TwoStageTopK::new(params);
+    let t0 = std::time::Instant::now();
+    let approx = operator.run(&values);
+    let approx_time = t0.elapsed();
+
+    // 3. Compare against the exact oracle.
+    let t1 = std::time::Instant::now();
+    let exact_top = exact::topk_sort(&values, k);
+    let exact_time = t1.elapsed();
+
+    println!(
+        "approx: {:?}  exact(full sort): {:?}  speedup {:.1}x",
+        approx_time,
+        exact_time,
+        exact_time.as_secs_f64() / approx_time.as_secs_f64()
+    );
+    println!("measured recall@{k}: {:.4}", recall_of(&exact_top, &approx));
+    println!("top-3: {:?}", &approx[..3]);
+}

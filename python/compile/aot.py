@@ -1,0 +1,229 @@
+"""AOT compile path: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Every artifact is described in ``artifacts/manifest.json`` (name, file,
+input/output shapes+dtypes, algorithm parameters) — the Rust runtime loads
+the manifest, compiles each module on the PJRT CPU client once, and serves
+from the compiled executables. Python never runs on the request path.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as models
+from . import params as P
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return jnp.dtype(dt).name
+
+
+def _spec_json(spec):
+    return {"shape": list(spec.shape), "dtype": _dtype_name(spec.dtype)}
+
+
+def lower_entry(name, fn, specs, params, out_dir):
+    """Lower ``fn`` at ``specs``, write ``<name>.hlo.txt``, return the
+    manifest entry."""
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # Output specs from the jitted signature.
+    out_shapes = jax.eval_shape(fn, *specs)
+    flat, _ = jax.tree_util.tree_flatten(out_shapes)
+    return {
+        "name": name,
+        "file": fname,
+        "inputs": [_spec_json(s) for s in specs],
+        "outputs": [_spec_json(s) for s in flat],
+        "params": params,
+    }
+
+
+def default_artifact_set(quick=False):
+    """The artifact variants the Rust coordinator and examples expect.
+
+    Sizes are CPU-PJRT friendly (the Pallas kernels are interpret-lowered;
+    the TPU-scale shapes of Tables 2/3 are exercised by the cost model and
+    the native Rust implementation instead).
+    """
+    entries = []
+
+    # --- unfused approximate Top-K ------------------------------------
+    # Serving shard shape: batch 8 x 16384, top-128 at 95% target.
+    n, k, r = 16_384, 128, 0.95
+    auto = P.select_parameters(n, k, r)
+    assert auto is not None
+    local_k, buckets = auto
+    entries.append(
+        dict(
+            kind="approx_topk",
+            name=f"approx_topk_b8_n{n}_k{k}_kp{local_k}_bb{buckets}",
+            batch=8,
+            n=n,
+            k=k,
+            local_k=local_k,
+            buckets=buckets,
+            recall_target=r,
+        )
+    )
+    # Chern et al. baseline config at the same target (K'=1, their B).
+    chern = P.chern_baseline_config(n, k, r)
+    assert chern is not None
+    entries.append(
+        dict(
+            kind="approx_topk",
+            name=f"approx_topk_chern_b8_n{n}_k{k}_bb{chern[1]}",
+            batch=8,
+            n=n,
+            k=k,
+            local_k=chern[0],
+            buckets=chern[1],
+            recall_target=r,
+        )
+    )
+    # Exact baseline.
+    entries.append(
+        dict(kind="exact_topk", name=f"exact_topk_b8_n{n}_k{k}", batch=8, n=n, k=k)
+    )
+    # Small smoke-test variant (fast to execute in integration tests).
+    entries.append(
+        dict(
+            kind="approx_topk",
+            name="approx_topk_b4_n2048_k32_kp2_bb256",
+            batch=4,
+            n=2048,
+            k=32,
+            local_k=2,
+            buckets=256,
+            recall_target=None,
+        )
+    )
+
+    if not quick:
+        # --- MIPS shard kernels (the serving hot path) ----------------
+        q, d, shard_n, shard_k = 8, 64, 16_384, 128
+        mips_cfg = P.select_parameters(shard_n, shard_k, 0.95)
+        mkp, mbb = mips_cfg
+        entries.append(
+            dict(
+                kind="mips_fused",
+                name=f"mips_fused_q{q}_d{d}_n{shard_n}_k{shard_k}",
+                queries=q,
+                d=d,
+                n=shard_n,
+                k=shard_k,
+                local_k=mkp,
+                buckets=mbb,
+                recall_target=0.95,
+            )
+        )
+        entries.append(
+            dict(
+                kind="mips_unfused",
+                name=f"mips_unfused_q{q}_d{d}_n{shard_n}_k{shard_k}",
+                queries=q,
+                d=d,
+                n=shard_n,
+                k=shard_k,
+                local_k=mkp,
+                buckets=mbb,
+                recall_target=0.95,
+            )
+        )
+        entries.append(
+            dict(
+                kind="mips_exact",
+                name=f"mips_exact_q{q}_d{d}_n{shard_n}_k{shard_k}",
+                queries=q,
+                d=d,
+                n=shard_n,
+                k=shard_k,
+            )
+        )
+        # --- sparse MLP forward (A.13-style example) -------------------
+        entries.append(
+            dict(
+                kind="sparse_mlp",
+                name="sparse_mlp_t64_dm128_ff2048_k64",
+                tokens=64,
+                d_model=128,
+                d_ff=2048,
+                k=64,
+                local_k=2,
+                buckets=256,
+            )
+        )
+    return entries
+
+
+def build_entry(e, out_dir):
+    kind = e["kind"]
+    if kind == "approx_topk":
+        fn, specs = models.build_approx_topk(
+            e["batch"], e["n"], e["buckets"], e["local_k"], e["k"]
+        )
+    elif kind == "exact_topk":
+        fn, specs = models.build_exact_topk(e["batch"], e["n"], e["k"])
+    elif kind == "mips_fused":
+        fn, specs = models.build_mips_fused(
+            e["queries"], e["d"], e["n"], e["buckets"], e["local_k"], e["k"]
+        )
+    elif kind == "mips_unfused":
+        fn, specs = models.build_mips_unfused(
+            e["queries"], e["d"], e["n"], e["buckets"], e["local_k"], e["k"]
+        )
+    elif kind == "mips_exact":
+        fn, specs = models.build_mips_exact(e["queries"], e["d"], e["n"], e["k"])
+    elif kind == "sparse_mlp":
+        fn, specs = models.build_sparse_mlp_block(
+            e["tokens"], e["d_model"], e["d_ff"], e["buckets"], e["local_k"], e["k"]
+        )
+    else:
+        raise ValueError(f"unknown artifact kind {kind}")
+    return lower_entry(e["name"], fn, specs, e, out_dir)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="only the small smoke artifacts"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "artifacts": []}
+    for e in default_artifact_set(quick=args.quick):
+        print(f"lowering {e['name']} ...", flush=True)
+        manifest["artifacts"].append(build_entry(e, args.out_dir))
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for the generalized two-stage approximate Top-K.
+
+All kernels are lowered with ``interpret=True`` so the AOT HLO runs on the
+CPU PJRT plugin (real-TPU lowering emits Mosaic custom-calls the CPU client
+cannot execute). The kernel *structure* -- strided buckets on the minor axis,
+``[batch, K', B]`` state layout, branchless select-based updates -- is the
+paper's TPU design, preserved verbatim.
+"""
+
+from .partial_reduce import generalized_partial_reduce, make_generalized_approx_topk
+from .fused_matmul import (
+    matmul_fused_generalized_partial_reduce,
+    make_matmul_fused_generalized_approx_topk,
+)
+from . import ref
+
+__all__ = [
+    "generalized_partial_reduce",
+    "make_generalized_approx_topk",
+    "matmul_fused_generalized_partial_reduce",
+    "make_matmul_fused_generalized_approx_topk",
+    "ref",
+]

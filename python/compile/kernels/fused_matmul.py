@@ -1,0 +1,192 @@
+"""Matmul-fused generalized partial-reduce Pallas kernel (paper Appendix
+A.9).
+
+Fuses the first stage of the approximate Top-K into the epilogue of a
+``[B, D] x [D, N]`` matmul: the logits tile lives only in the accumulator
+(VMEM scratch in the paper; a local value here) and the top-K' state update
+consumes it directly, so the full ``[B, N]`` logits tensor never reaches
+HBM. This is what removes the memory-bound logits write that dominates
+unfused MIPS (paper §7.3, Appendix A.12).
+
+Simplification vs the paper's listing: the contraction axis is processed in
+a single block (``contracting_tile == D``). The paper's multi-step
+contraction loop with a VMEM accumulator exists to bound VMEM at very large
+D; our AOT targets have D <= 512 where a single block is both simpler and
+faster. The reduction-axis grid, bucket layout, state update and
+initialize-on-first-step logic all follow the listing.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .partial_reduce import (
+    PALLAS_TPU_BLOCKSPEC_MINOR_MULTIPLE,
+    _compute_dtype,
+    _pick_batch_tile,
+    _pick_reduction_tile,
+)
+
+
+def matmul_fused_generalized_partial_reduce(
+    lhs, rhs, local_K, num_buckets, tunable_params=None, interpret=True, **kwargs
+):
+    """Build the fused kernel for ``lhs @ rhs`` followed by stage 1.
+
+    Args:
+      lhs: ShapeDtypeStruct ``[batch, D]`` (queries).
+      rhs: ShapeDtypeStruct ``[D, N]`` (database).
+      local_K: per-bucket selection count K'.
+      num_buckets: bucket count B (multiple of 128 dividing N).
+
+    Returns a binary function ``(lhs, rhs) -> (values, indices)`` with
+    outputs ``[batch, num_buckets * local_K]`` in the stage-1 state layout.
+    """
+    tunable_params = dict(tunable_params or {})
+    batch_size, contracting_dims = lhs.shape
+    contracting_dims_rhs, reduction_dims = rhs.shape
+    if contracting_dims != contracting_dims_rhs:
+        raise ValueError("lhs/rhs contraction mismatch")
+    if reduction_dims % num_buckets != 0:
+        raise ValueError(f"num_buckets={num_buckets} must divide N={reduction_dims}")
+    if num_buckets % PALLAS_TPU_BLOCKSPEC_MINOR_MULTIPLE != 0:
+        raise ValueError("num_buckets must be a multiple of 128")
+    if num_buckets >= reduction_dims:
+        raise ValueError("num_buckets must be < N")
+    if lhs.dtype != rhs.dtype:
+        raise ValueError("lhs/rhs dtype mismatch")
+
+    num_elements = num_buckets * local_K
+    output_shape = (batch_size, num_elements)
+
+    batch_tile_size = tunable_params.get("batch_tile_size") or _pick_batch_tile(
+        batch_size
+    )
+    assert batch_size % batch_tile_size == 0
+
+    reduction_tile_size = tunable_params.get(
+        "reduction_tile_size"
+    ) or _pick_reduction_tile(reduction_dims, num_buckets, 4096)
+    assert reduction_dims % reduction_tile_size == 0
+    assert reduction_tile_size % num_buckets == 0
+
+    lhs_tile_shape = (batch_tile_size, contracting_dims)
+    rhs_tile_shape = (contracting_dims, reduction_tile_size)
+    output_tile_shape = (batch_tile_size, num_elements)
+    iteration_bounds = (
+        batch_size // batch_tile_size,
+        reduction_dims // reduction_tile_size,
+    )
+
+    compute_type = _compute_dtype(jnp.float32)
+
+    def _kernel(lhs_ref, rhs_ref, values_ref, indices_ref):
+        assert values_ref.shape == indices_ref.shape
+        tile_r = pl.program_id(1)
+
+        @pl.when(tile_r == 0)
+        def initialize_outputs():
+            values_ref[...] = jnp.full_like(values_ref, -jnp.inf)
+            # See partial_reduce.py: zero indices so K' > bucket-size
+            # configurations never expose uninitialized memory.
+            indices_ref[...] = jnp.zeros_like(indices_ref)
+
+        # Single-block contraction: the logits tile exists only here — this
+        # is the fusion (no HBM round-trip for the [batch, N] tensor).
+        acc = jnp.matmul(
+            lhs_ref[...], rhs_ref[...], preferred_element_type=jnp.float32
+        )
+
+        num_iterations_over_outputs = reduction_tile_size // num_buckets
+        for iter_idx in range(num_iterations_over_outputs):
+            chunk = acc[:, iter_idx * num_buckets : (iter_idx + 1) * num_buckets]
+            chunk = chunk.astype(compute_type)
+
+            iota = jax.lax.broadcasted_iota(indices_ref.dtype, chunk.shape, 1)
+            iota += tile_r * reduction_tile_size + iter_idx * num_buckets
+
+            values_by_k, indices_by_k = [], []
+            for k in range(local_K):
+                sl = pl.ds(start=k * num_buckets, size=num_buckets)
+                values_by_k.append(values_ref[:, sl].astype(compute_type))
+                indices_by_k.append(indices_ref[:, sl])
+
+            pred = chunk >= values_by_k[-1]
+            values_by_k[-1] = jax.lax.select(pred, chunk, values_by_k[-1])
+            indices_by_k[-1] = jax.lax.select(pred, iota, indices_by_k[-1])
+            for k in reversed(range(1, local_K)):
+                # Input-vs-next-rank comparison removes the loop-carried
+                # dependency (paper Section 6.3).
+                pred = chunk > values_by_k[k - 1]
+
+                values_to_shift = values_by_k[k]
+                values_by_k[k] = jax.lax.select(
+                    pred, values_by_k[k - 1], values_to_shift
+                )
+                values_by_k[k - 1] = jax.lax.select(
+                    pred, values_to_shift, values_by_k[k - 1]
+                )
+
+                indices_to_shift = indices_by_k[k]
+                indices_by_k[k] = jax.lax.select(
+                    pred, indices_by_k[k - 1], indices_to_shift
+                )
+                indices_by_k[k - 1] = jax.lax.select(
+                    pred, indices_to_shift, indices_by_k[k - 1]
+                )
+
+            for k in range(local_K):
+                sl = pl.ds(start=k * num_buckets, size=num_buckets)
+                values_ref[:, sl] = values_by_k[k].astype(values_ref.dtype)
+                indices_ref[:, sl] = indices_by_k[k]
+
+    def wrapper(lhs_val, rhs_val):
+        return pl.pallas_call(
+            _kernel,
+            in_specs=[
+                pl.BlockSpec(lhs_tile_shape, lambda i, j: (i, 0)),
+                pl.BlockSpec(rhs_tile_shape, lambda i, j: (0, j)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct(output_shape, jnp.float32),
+                jax.ShapeDtypeStruct(output_shape, jnp.int32),
+            ],
+            out_specs=[
+                pl.BlockSpec(output_tile_shape, lambda i, j: (i, 0)),
+                pl.BlockSpec(output_tile_shape, lambda i, j: (i, 0)),
+            ],
+            grid=iteration_bounds,
+            interpret=interpret,
+            **kwargs,
+        )(lhs_val, rhs_val)
+
+    return wrapper
+
+
+def make_matmul_fused_generalized_approx_topk(
+    lhs, rhs, num_buckets, local_K, global_K, interpret=True, **kwargs
+):
+    """Fused MIPS Top-K: fused matmul + stage 1, then sort and slice."""
+    partial_reduce_fn = matmul_fused_generalized_partial_reduce(
+        lhs, rhs, local_K, num_buckets, interpret=interpret, **kwargs
+    )
+
+    def wrapper(lhs_val, rhs_val):
+        bucket_values, bucket_indices = partial_reduce_fn(lhs_val, rhs_val)
+        values, indices = jax.lax.sort_key_val(
+            bucket_values, bucket_indices, is_stable=False
+        )
+        values = jnp.flip(values[..., -global_K:], axis=-1)
+        indices = jnp.flip(indices[..., -global_K:], axis=-1)
+        return values, indices
+
+    return wrapper
+
+
+def matmul_fused_generalized_approx_topk(lhs, rhs, *args, **kwargs):
+    """Eager convenience wrapper."""
+    lhs_spec = jax.ShapeDtypeStruct(lhs.shape, lhs.dtype)
+    rhs_spec = jax.ShapeDtypeStruct(rhs.shape, rhs.dtype)
+    return make_matmul_fused_generalized_approx_topk(
+        lhs_spec, rhs_spec, *args, **kwargs
+    )(lhs, rhs)

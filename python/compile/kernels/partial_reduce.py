@@ -1,0 +1,229 @@
+"""Unfused generalized partial-reduce Pallas kernel (paper Appendix A.8).
+
+First stage of the generalized two-stage approximate Top-K: elements
+separated by a stride of ``num_buckets`` form a bucket; each bucket tracks
+its top-``local_K`` (values, indices) lists online, in descending order,
+with a branchless insert + single-bubble-pass update (paper Algorithm 1/2).
+
+State layout is ``[batch, local_K, num_buckets]`` flattened to
+``[batch, local_K * num_buckets]`` so the minor-most axis is the bucket
+axis, matching the input's logical ``[batch, N / B, B]`` view — the update
+vectorizes trivially across the lane (bucket) axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Pallas TPU block-spec alignment requirements (kept under interpret=True so
+# the lowered HLO matches what a real TPU build would see structurally).
+PALLAS_TPU_BLOCKSPEC_MAJOR_MULTIPLE = 8
+PALLAS_TPU_BLOCKSPEC_MINOR_MULTIPLE = 128
+
+
+def get_all_factors(n):
+    """All divisors of ``n`` (paper Appendix A.7, with the perfect-square
+    off-by-one fixed — see compile.params.get_all_factors)."""
+    small = [i for i in range(1, int(n**0.5) + 1) if n % i == 0]
+    return set(small + [n // f for f in small])
+
+
+def _compute_dtype(dtype):
+    """Promote to the 32-bit compute type (Mosaic lacks narrow compares)."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.float32
+    if jnp.issubdtype(dtype, jnp.signedinteger):
+        return jnp.int32
+    if jnp.issubdtype(dtype, jnp.unsignedinteger):
+        return jnp.uint32
+    raise TypeError(f"unsupported dtype {dtype}")
+
+
+def _pick_batch_tile(batch_size, cap=2048):
+    factors = get_all_factors(batch_size)
+    legal = {
+        f
+        for f in factors
+        if f % PALLAS_TPU_BLOCKSPEC_MAJOR_MULTIPLE == 0 or f == batch_size
+    }
+    candidates = {f for f in legal if f <= cap}
+    return max(candidates) if candidates else batch_size
+
+
+def _pick_reduction_tile(reduction_dims, num_buckets, cap):
+    factors = get_all_factors(reduction_dims)
+    legal = {
+        f
+        for f in factors
+        if f % num_buckets == 0 and f % PALLAS_TPU_BLOCKSPEC_MINOR_MULTIPLE == 0
+    }
+    if not legal:
+        raise ValueError(
+            f"no legal reduction tile for N={reduction_dims}, B={num_buckets}"
+        )
+    candidates = {f for f in legal if f <= max(cap, num_buckets)}
+    return max(candidates) if candidates else min(legal)
+
+
+def generalized_partial_reduce(
+    inputs, local_K, num_buckets, tunable_params=None, interpret=True, **kwargs
+):
+    """Build the first-stage kernel for ``inputs`` (a ShapeDtypeStruct).
+
+    Returns a unary function ``x -> (values, indices)`` with outputs of
+    shape ``[batch, num_buckets * local_K]``; ``values[b, k*B + j]`` is the
+    rank-``k`` element of bucket ``j`` (descending).
+    """
+    tunable_params = dict(tunable_params or {})
+    batch_size, reduction_dims = inputs.shape
+    if reduction_dims % num_buckets != 0:
+        raise ValueError(f"num_buckets={num_buckets} must divide N={reduction_dims}")
+    if local_K < 1:
+        raise ValueError("local_K must be >= 1")
+
+    num_elements = num_buckets * local_K
+    output_shape = (batch_size, num_elements)
+
+    batch_tile_size = tunable_params.get("batch_tile_size") or _pick_batch_tile(
+        batch_size
+    )
+    assert batch_size % batch_tile_size == 0
+
+    reduction_tile_size = tunable_params.get(
+        "reduction_tile_size"
+    ) or _pick_reduction_tile(reduction_dims, num_buckets, 32_768)
+    assert reduction_dims % reduction_tile_size == 0
+    assert reduction_tile_size % num_buckets == 0
+
+    input_tile_shape = (batch_tile_size, reduction_tile_size)
+    iteration_bounds = (
+        batch_size // batch_tile_size,
+        reduction_dims // reduction_tile_size,
+    )
+    # Outputs are not blocked along the reduction axis (non-consecutive grid
+    # points may not write the same output slice).
+    output_tile_shape = (batch_tile_size, num_elements)
+
+    compute_type = _compute_dtype(inputs.dtype)
+
+    def _kernel(inputs_ref, values_ref, indices_ref):
+        assert values_ref.shape == indices_ref.shape
+        tile_r = pl.program_id(1)
+
+        # Sequential grid execution is guaranteed on TPU; the first
+        # reduction step of each batch tile initializes the state.
+        @pl.when(tile_r == 0)
+        def initialize_outputs():
+            values_ref[...] = jnp.full_like(values_ref, -jnp.inf)
+            # The paper skips the index init ("non-strict comparators
+            # guarantee the indices will be updated") — true only when every
+            # bucket receives >= K' elements. When K' exceeds the bucket
+            # size the tail slots are never written, and an AOT artifact
+            # must not return uninitialized memory, so we zero them.
+            indices_ref[...] = jnp.zeros_like(indices_ref)
+
+        # Unrolled passes over the bucket axis: state loads/stores for the
+        # same buckets run consecutively so they stay in registers/cache.
+        num_iterations_over_outputs = reduction_tile_size // num_buckets
+        for iter_idx in range(num_iterations_over_outputs):
+            chunk = inputs_ref[
+                :, pl.ds(start=iter_idx * num_buckets, size=num_buckets)
+            ].astype(compute_type)
+
+            iota = jax.lax.broadcasted_iota(indices_ref.dtype, chunk.shape, 1)
+            iota += tile_r * reduction_tile_size + iter_idx * num_buckets
+
+            # Load the top-K' state for this bucket chunk.
+            values_by_k, indices_by_k = [], []
+            for k in range(local_K):
+                sl = pl.ds(start=k * num_buckets, size=num_buckets)
+                values_by_k.append(values_ref[:, sl].astype(compute_type))
+                indices_by_k.append(indices_ref[:, sl])
+
+            # Insert at the tail (one compare + two selects).
+            pred = chunk >= values_by_k[-1]
+            values_by_k[-1] = jax.lax.select(pred, chunk, values_by_k[-1])
+            indices_by_k[-1] = jax.lax.select(pred, iota, indices_by_k[-1])
+
+            # Single bubble pass. Comparing the *input* (not the shifted
+            # element) against the next rank removes the loop-carried
+            # dependency (paper Section 6.3).
+            for k in reversed(range(1, local_K)):
+                pred = chunk > values_by_k[k - 1]
+
+                values_to_shift = values_by_k[k]
+                values_by_k[k] = jax.lax.select(
+                    pred, values_by_k[k - 1], values_to_shift
+                )
+                values_by_k[k - 1] = jax.lax.select(
+                    pred, values_to_shift, values_by_k[k - 1]
+                )
+
+                indices_to_shift = indices_by_k[k]
+                indices_by_k[k] = jax.lax.select(
+                    pred, indices_by_k[k - 1], indices_to_shift
+                )
+                indices_by_k[k - 1] = jax.lax.select(
+                    pred, indices_to_shift, indices_by_k[k - 1]
+                )
+
+            # Store the updated state.
+            for k in range(local_K):
+                sl = pl.ds(start=k * num_buckets, size=num_buckets)
+                values_ref[:, sl] = values_by_k[k].astype(values_ref.dtype)
+                indices_ref[:, sl] = indices_by_k[k]
+
+    def wrapper(x):
+        return pl.pallas_call(
+            _kernel,
+            in_specs=[pl.BlockSpec(input_tile_shape, lambda i, j: (i, j))],
+            out_shape=[
+                jax.ShapeDtypeStruct(output_shape, jnp.float32),
+                jax.ShapeDtypeStruct(output_shape, jnp.int32),
+            ],
+            out_specs=[
+                pl.BlockSpec(output_tile_shape, lambda i, j: (i, 0)),
+                pl.BlockSpec(output_tile_shape, lambda i, j: (i, 0)),
+            ],
+            grid=iteration_bounds,
+            interpret=interpret,
+            **kwargs,
+        )(x)
+
+    return wrapper
+
+
+def make_generalized_approx_topk(
+    operand, num_buckets, local_K, global_K, interpret=True, **kwargs
+):
+    """Full two-stage operator: partial reduce, then ``sort_key_val`` and a
+    top-``global_K`` slice (paper Appendix A.8's wrapper)."""
+    partial_reduce_fn = generalized_partial_reduce(
+        operand, local_K, num_buckets, interpret=interpret, **kwargs
+    )
+
+    def wrapper(x):
+        bucket_values, bucket_indices = partial_reduce_fn(x)
+        values, indices = jax.lax.sort_key_val(
+            bucket_values, bucket_indices, is_stable=False
+        )
+        values = jnp.flip(values[..., -global_K:], axis=-1)
+        indices = jnp.flip(indices[..., -global_K:], axis=-1)
+        return values, indices
+
+    return wrapper
+
+
+def generalized_approx_topk(x, num_buckets, local_K, global_K, **kwargs):
+    """Eager convenience wrapper."""
+    spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    fn = make_generalized_approx_topk(spec, num_buckets, local_K, global_K, **kwargs)
+    return fn(x)
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_builder(shape, dtype_name, num_buckets, local_K, global_K):
+    spec = jax.ShapeDtypeStruct(shape, jnp.dtype(dtype_name))
+    return make_generalized_approx_topk(spec, num_buckets, local_K, global_K)

@@ -1,0 +1,78 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks the kernels against.
+They implement the same bucket semantics — elements separated by a stride of
+``num_buckets`` form a bucket; state layout ``[batch, K' * B]`` with the
+bucket axis minor — using only ``jax.lax.top_k`` / ``jnp`` reductions.
+
+Tie-breaking note: the Pallas kernel inserts with ``>=`` (the *last* equal
+element wins) while ``jax.lax.top_k`` prefers the first occurrence. Tests
+therefore use distinct values (random permutations); on distinct inputs the
+oracles and kernels must agree exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def partial_reduce_ref(x, local_K, num_buckets):
+    """Reference first stage.
+
+    Args:
+      x: ``[batch, N]`` array, ``N % num_buckets == 0``.
+      local_K: per-bucket selection count K'.
+      num_buckets: bucket count B.
+
+    Returns:
+      ``(values, indices)`` of shape ``[batch, local_K * num_buckets]`` in
+      the kernel's state layout: position ``k * B + j`` holds the rank-``k``
+      (descending) element of bucket ``j`` and its index into ``x``'s row.
+    """
+    batch, n = x.shape
+    assert n % num_buckets == 0
+    rows = n // num_buckets
+    local_K_eff = min(local_K, rows)
+    # [batch, rows, B] -> bucket-major [batch, B, rows].
+    xr = x.reshape(batch, rows, num_buckets).transpose(0, 2, 1)
+    vals, row_idx = jax.lax.top_k(xr, local_K_eff)  # [batch, B, K_eff]
+    # Row index j within bucket b corresponds to input index j * B + b.
+    idx = row_idx * num_buckets + jnp.arange(num_buckets)[None, :, None]
+    if local_K_eff < local_K:
+        # Kernel state has -inf padding when K' exceeds the bucket size.
+        pad = local_K - local_K_eff
+        vals = jnp.pad(vals, ((0, 0), (0, 0), (0, pad)), constant_values=-jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, 0), (0, pad)), constant_values=0)
+    # [batch, B, K'] -> [batch, K', B] -> flat.
+    vals = vals.transpose(0, 2, 1).reshape(batch, local_K * num_buckets)
+    idx = idx.transpose(0, 2, 1).reshape(batch, local_K * num_buckets)
+    return vals.astype(jnp.float32), idx.astype(jnp.int32)
+
+
+def approx_topk_ref(x, num_buckets, local_K, global_K):
+    """Reference two-stage approximate Top-K (stage 1 oracle + exact
+    selection over the candidates)."""
+    vals, idx = partial_reduce_ref(x, local_K, num_buckets)
+    svals, sidx = jax.lax.sort_key_val(vals, idx, is_stable=False)
+    svals = jnp.flip(svals[..., -global_K:], axis=-1)
+    sidx = jnp.flip(sidx[..., -global_K:], axis=-1)
+    return svals, sidx
+
+
+def exact_topk_ref(x, k):
+    """Exact Top-K oracle (``jax.lax.top_k``)."""
+    vals, idx = jax.lax.top_k(x, k)
+    return vals.astype(jnp.float32), idx.astype(jnp.int32)
+
+
+def mips_scores_ref(queries, database):
+    """Reference MIPS logits: ``queries @ database``.
+
+    queries: ``[Q, D]``; database: ``[D, N]`` -> ``[Q, N]`` f32.
+    """
+    return jnp.matmul(queries.astype(jnp.float32), database.astype(jnp.float32))
+
+
+def recall_against_exact(approx_idx, exact_idx):
+    """Mean recall@K of approx index rows against exact index rows."""
+    hits = (approx_idx[..., :, None] == exact_idx[..., None, :]).any(-1)
+    return hits.mean()

@@ -1,0 +1,150 @@
+"""Layer-2 JAX compute graphs (built on the Layer-1 Pallas kernels).
+
+Everything here is *build-time only*: ``aot.py`` lowers these functions to
+HLO text once and the Rust coordinator executes the artifacts via PJRT.
+
+Graphs:
+
+- :func:`build_approx_topk`: the paper's headline operator — unfused
+  generalized two-stage approximate Top-K over ``[batch, N]``.
+- :func:`build_exact_topk`: ``jax.lax.top_k`` baseline.
+- :func:`build_mips_fused` / :func:`build_mips_unfused`: MIPS scoring
+  (``queries @ shard``) + Top-K, with the first stage fused into the matmul
+  or as a separate kernel (paper §7.3 / Table 3).
+- :func:`build_sparse_mlp_block`: an A.13-style non-gated SquaredReLU MLP
+  block whose hidden activations are sparsified with the approximate Top-K
+  (forward pass; used by the ``sparse_mlp`` example).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_matmul import make_matmul_fused_generalized_approx_topk
+from .kernels.partial_reduce import (
+    generalized_partial_reduce,
+    make_generalized_approx_topk,
+)
+
+
+def build_approx_topk(batch, n, num_buckets, local_k, k, dtype=jnp.float32):
+    """Unfused two-stage approximate Top-K: ``[batch, n] -> ([batch, k],
+    [batch, k])`` (values, indices)."""
+    spec = jax.ShapeDtypeStruct((batch, n), dtype)
+    fn = make_generalized_approx_topk(spec, num_buckets, local_k, k)
+
+    def model(x):
+        return fn(x)
+
+    return model, (spec,)
+
+
+def build_partial_reduce(batch, n, num_buckets, local_k, dtype=jnp.float32):
+    """Stage 1 only (for the runtime's stage-split execution mode)."""
+    spec = jax.ShapeDtypeStruct((batch, n), dtype)
+    fn = generalized_partial_reduce(spec, local_k, num_buckets)
+
+    def model(x):
+        return fn(x)
+
+    return model, (spec,)
+
+
+def _exact_topk_via_sort(x, k):
+    """Exact Top-K lowered as sort_key_val + slice.
+
+    ``jax.lax.top_k`` lowers to a `topk(..., largest=true)` HLO op that the
+    runtime's xla_extension 0.5.1 text parser rejects; a full variadic sort
+    is standard HLO and is also exactly what the paper's "exact baseline"
+    costs. Tie order differs from top_k (descending-by-index on equal
+    values); all cross-checks use distinct inputs.
+    """
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    sv, si = jax.lax.sort_key_val(x.astype(jnp.float32), iota, is_stable=False)
+    v = jnp.flip(sv[..., -k:], axis=-1)
+    i = jnp.flip(si[..., -k:], axis=-1)
+    return v, i
+
+
+def build_exact_topk(batch, n, k, dtype=jnp.float32):
+    """Exact baseline (full-sort lowering; see `_exact_topk_via_sort`)."""
+    spec = jax.ShapeDtypeStruct((batch, n), dtype)
+
+    def model(x):
+        return _exact_topk_via_sort(x, k)
+
+    return model, (spec,)
+
+
+def build_mips_fused(
+    queries, d, n, num_buckets, local_k, k, dtype=jnp.float32
+):
+    """Fused MIPS: matmul+stage-1 in one Pallas kernel, then sort+slice."""
+    lhs = jax.ShapeDtypeStruct((queries, d), dtype)
+    rhs = jax.ShapeDtypeStruct((d, n), dtype)
+    fn = make_matmul_fused_generalized_approx_topk(
+        lhs, rhs, num_buckets, local_k, k
+    )
+
+    def model(q, db):
+        return fn(q, db)
+
+    return model, (lhs, rhs)
+
+
+def build_mips_unfused(
+    queries, d, n, num_buckets, local_k, k, dtype=jnp.float32
+):
+    """Unfused MIPS: XLA matmul writes logits, then the two-stage Top-K."""
+    lhs = jax.ShapeDtypeStruct((queries, d), dtype)
+    rhs = jax.ShapeDtypeStruct((d, n), dtype)
+    topk_spec = jax.ShapeDtypeStruct((queries, n), jnp.float32)
+    topk = make_generalized_approx_topk(topk_spec, num_buckets, local_k, k)
+
+    def model(q, db):
+        scores = jnp.matmul(
+            q.astype(jnp.float32), db.astype(jnp.float32)
+        )
+        return topk(scores)
+
+    return model, (lhs, rhs)
+
+
+def build_mips_exact(queries, d, n, k, dtype=jnp.float32):
+    """Exact MIPS baseline: matmul + ``jax.lax.top_k``."""
+    lhs = jax.ShapeDtypeStruct((queries, d), dtype)
+    rhs = jax.ShapeDtypeStruct((d, n), dtype)
+
+    def model(q, db):
+        scores = jnp.matmul(q.astype(jnp.float32), db.astype(jnp.float32))
+        return _exact_topk_via_sort(scores, k)
+
+    return model, (lhs, rhs)
+
+
+def build_sparse_mlp_block(
+    tokens, d_model, d_ff, num_buckets, local_k, k, dtype=jnp.float32
+):
+    """A.13-style sparse MLP forward pass.
+
+    ``h = sqrelu(x @ W_up)``; keep only the approximate top-k activations
+    per token (everything else zeroed); ``y = h_sparse @ W_down``. Returns
+    ``(y, topk_indices)``.
+    """
+    x_spec = jax.ShapeDtypeStruct((tokens, d_model), dtype)
+    up_spec = jax.ShapeDtypeStruct((d_model, d_ff), dtype)
+    down_spec = jax.ShapeDtypeStruct((d_ff, d_model), dtype)
+
+    h_spec = jax.ShapeDtypeStruct((tokens, d_ff), jnp.float32)
+    topk = make_generalized_approx_topk(h_spec, num_buckets, local_k, k)
+
+    def model(x, w_up, w_down):
+        h = jnp.matmul(x.astype(jnp.float32), w_up.astype(jnp.float32))
+        h = jnp.square(jnp.maximum(h, 0.0))  # SquaredReLU
+        vals, idx = topk(h)
+        # Scatter the kept activations back into a sparse hidden tensor.
+        mask = jnp.zeros_like(h)
+        mask = jax.vmap(lambda m, i, v: m.at[i].set(v))(mask, idx, vals)
+        y = jnp.matmul(mask, w_down.astype(jnp.float32))
+        return y, idx
+
+    return model, (x_spec, up_spec, down_spec)

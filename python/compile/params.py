@@ -1,0 +1,150 @@
+"""Algorithm parameter selection (paper Appendix A.10) — Python mirror.
+
+The Rust coordinator owns the production selection path
+(``fastk::params``); this module mirrors it for the compile path so
+``aot.py`` can choose ``(K', B)`` when building artifacts, and for
+cross-language golden tests (`python/tests/test_params.py` asserts both
+implementations select identical configurations).
+"""
+
+import warnings
+
+import numpy as np
+
+BUCKET_MULTIPLE = 128
+
+
+def get_all_factors(n):
+    # Note: the paper's Listing A.7 uses range(1, ceil(sqrt(n))) which drops
+    # the square root of perfect squares (e.g. 512 for N=262144) — silently
+    # excluding exactly the B=512 configuration its own Table 2 highlights.
+    # We include the root.
+    small = [i for i in range(1, int(np.sqrt(n)) + 1) if n % i == 0]
+    pair = [n // f for f in small]
+    return set(small + pair)
+
+
+def expected_recall_mc(N, B, K_global, K_local, num_trials, rng=None):
+    """Monte-Carlo expected recall (paper Listing A.10.1)."""
+    assert N % B == 0
+    rng = rng or np.random.default_rng(0)
+    bucket_size = N // B
+    X = rng.hypergeometric(K_global, N - K_global, bucket_size, size=num_trials)
+    num_collisions = B * np.maximum(X - K_local, 0)
+    recall = 1 - num_collisions / K_global
+    return float(np.mean(recall)), float(np.std(recall, ddof=1) / np.sqrt(num_trials))
+
+
+def _ln_choose(n, k):
+    from scipy.special import gammaln  # pragma: no cover
+
+    return gammaln(n + 1) - gammaln(k + 1) - gammaln(n - k + 1)
+
+
+def expected_recall_exact(N, B, K_global, K_local):
+    """Exact expected recall (Theorem 1), log-space hypergeometric sum.
+
+    Mirrors ``fastk::recall::exact::expected_recall``.
+    """
+    assert N % B == 0
+    bucket = N // B
+    hi = min(K_global, bucket)
+    lo = K_local + 1
+    if lo > hi:
+        return 1.0
+    r = np.arange(lo, hi + 1, dtype=np.float64)
+    # ln pmf of Hypergeometric(N, K, bucket) at r via lgamma.
+    from math import lgamma
+
+    def lnc(n, k):
+        if k < 0 or k > n:
+            return -np.inf
+        return lgamma(n + 1) - lgamma(k + 1) - lgamma(n - k + 1)
+
+    ln_pmf = np.array(
+        [
+            lnc(K_global, int(ri))
+            + lnc(N - K_global, bucket - int(ri))
+            - lnc(N, bucket)
+            for ri in r
+        ]
+    )
+    excess = float(np.sum((r - K_local) * np.exp(ln_pmf)))
+    return float(np.clip(1.0 - B * excess / K_global, 0.0, 1.0))
+
+
+def legal_bucket_counts(input_size):
+    """Multiples of 128 that divide ``input_size``, descending."""
+    return sorted(
+        (
+            d
+            for d in get_all_factors(input_size)
+            if d % BUCKET_MULTIPLE == 0 and d < input_size
+        ),
+        reverse=True,
+    )
+
+
+def select_parameters(
+    input_size,
+    K,
+    recall_target,
+    allowed_local_K=(1, 2, 3, 4),
+    method="exact",
+    rng=None,
+):
+    """Find ``(local_K, num_buckets)`` minimizing ``B * K'`` subject to the
+    recall target (paper Listing A.10.2). Returns None if infeasible.
+
+    ``method``: "exact" uses the Theorem-1 closed form (default, matches the
+    Rust implementation); "mc" uses the paper's adaptive Monte-Carlo sweep.
+    """
+    if not (0.0 <= recall_target < 1.0):
+        raise ValueError("recall_target must be in [0, 1)")
+    if recall_target >= 0.995 and method == "mc":
+        warnings.warn(
+            f"recall_target of {recall_target} too high for reliable MC "
+            "selection of algorithm.",
+            RuntimeWarning,
+        )
+    rng = rng or np.random.default_rng(0)
+    allowed_num_buckets = legal_bucket_counts(input_size)
+    best_config = None
+    best_num_elements = np.inf
+    for local_K in sorted(allowed_local_K):
+        for num_buckets in allowed_num_buckets:
+            if num_buckets * local_K < K:
+                break
+            if method == "exact":
+                recall = expected_recall_exact(input_size, num_buckets, K, local_K)
+            else:
+                num_trials = 4096
+                recall, err = expected_recall_mc(
+                    input_size, num_buckets, K, local_K, num_trials, rng
+                )
+                while err * 3 > 0.005:
+                    num_trials *= 2
+                    recall, err = expected_recall_mc(
+                        input_size, num_buckets, K, local_K, num_trials, rng
+                    )
+            if recall < recall_target:
+                break
+            num_elements = num_buckets * local_K
+            if num_elements < best_num_elements:
+                best_config = (local_K, num_buckets)
+                best_num_elements = num_elements
+    return best_config
+
+
+def chern_buckets(K, recall_target):
+    """Chern et al. (2022)'s bucket formula ``K/(1-r)`` (the baseline)."""
+    return K / (1.0 - recall_target)
+
+
+def chern_baseline_config(input_size, K, recall_target):
+    """K'=1 with Chern's bucket count, rounded to the next legal B."""
+    needed = chern_buckets(K, recall_target)
+    legal = [b for b in legal_bucket_counts(input_size) if b >= needed]
+    if not legal:
+        return None
+    return (1, min(legal))

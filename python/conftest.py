@@ -1,0 +1,7 @@
+"""Make `compile.*` importable regardless of pytest's invocation directory
+(both `cd python && pytest tests/` and `pytest python/tests/` work)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

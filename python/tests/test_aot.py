@@ -1,0 +1,79 @@
+"""AOT pipeline tests: manifest round-trip and HLO-text invariants."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as models
+
+
+def test_to_hlo_text_smoke():
+    fn, specs = models.build_exact_topk(2, 256, 8)
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_lower_entry_writes_file_and_manifest_entry():
+    with tempfile.TemporaryDirectory() as d:
+        fn, specs = models.build_approx_topk(2, 1024, 128, 2, 16)
+        e = aot.lower_entry("t", fn, specs, {"kind": "approx_topk"}, d)
+        assert os.path.exists(os.path.join(d, "t.hlo.txt"))
+        assert e["inputs"] == [{"shape": [2, 1024], "dtype": "float32"}]
+        assert e["outputs"] == [
+            {"shape": [2, 16], "dtype": "float32"},
+            {"shape": [2, 16], "dtype": "int32"},
+        ]
+
+
+def test_quick_artifact_set_builds():
+    with tempfile.TemporaryDirectory() as d:
+        entries = aot.default_artifact_set(quick=True)
+        assert len(entries) >= 3
+        manifest = [aot.build_entry(e, d) for e in entries]
+        # Every artifact file exists and parses as non-trivial HLO.
+        for m in manifest:
+            p = os.path.join(d, m["file"])
+            assert os.path.getsize(p) > 200
+        # JSON-serializable end to end.
+        json.dumps(manifest)
+
+
+def test_artifact_names_unique():
+    names = [e["name"] for e in aot.default_artifact_set(quick=False)]
+    assert len(names) == len(set(names))
+
+
+def test_repo_manifest_consistent_if_present():
+    """If `make artifacts` has run, validate the real manifest."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    for e in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(art, e["file"])), e["file"]
+        assert e["inputs"] and e["outputs"]
+
+
+def test_sparse_mlp_model_semantics():
+    """The sparse MLP keeps exactly k nonzero hidden activations/token."""
+    fn, specs = models.build_sparse_mlp_block(8, 32, 256, 128, 2, 16)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 32)).astype(np.float32))
+    w_up = jnp.asarray(rng.standard_normal((32, 256)).astype(np.float32))
+    w_down = jnp.asarray(rng.standard_normal((256, 32)).astype(np.float32))
+    y, idx = fn(x, w_up, w_down)
+    assert y.shape == (8, 32)
+    assert idx.shape == (8, 16)
+    # Indices are unique per token.
+    for row in np.asarray(idx):
+        assert len(set(row.tolist())) == len(row)

@@ -1,0 +1,155 @@
+"""L1 correctness: the unfused Pallas partial-reduce kernel vs the pure-jnp
+oracle. This is the core correctness signal for the whole stack — the AOT
+artifacts embed exactly this kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.partial_reduce import (
+    generalized_approx_topk,
+    generalized_partial_reduce,
+)
+
+
+def distinct_input(batch, n, seed):
+    """Random permutation rows: fully distinct values so tie-breaking
+    differences between kernel and oracle cannot matter."""
+    rng = np.random.default_rng(seed)
+    rows = [rng.permutation(n).astype(np.float32) for _ in range(batch)]
+    return jnp.asarray(np.stack(rows))
+
+
+def run_partial_reduce(x, local_k, buckets):
+    spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    fn = generalized_partial_reduce(spec, local_k, buckets)
+    return fn(x)
+
+
+@pytest.mark.parametrize("local_k", [1, 2, 3, 4])
+@pytest.mark.parametrize("buckets", [128, 256])
+def test_partial_reduce_matches_ref(local_k, buckets):
+    x = distinct_input(2, 1024, seed=local_k * 100 + buckets)
+    v, i = run_partial_reduce(x, local_k, buckets)
+    rv, ri = ref.partial_reduce_ref(x, local_k, buckets)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_state_layout_is_rank_major_bucket_minor():
+    # Construct a known input: bucket j's best is at row 3, value 1000+j.
+    batch, rows, buckets = 1, 4, 128
+    x = np.zeros((batch, rows * buckets), np.float32)
+    for j in range(buckets):
+        x[0, 3 * buckets + j] = 1000.0 + j
+        x[0, 1 * buckets + j] = 500.0 + j  # second best in row 1
+    v, i = run_partial_reduce(jnp.asarray(x), 2, buckets)
+    v, i = np.asarray(v), np.asarray(i)
+    for j in range(buckets):
+        assert v[0, j] == 1000.0 + j  # rank 0 slot of bucket j
+        assert i[0, j] == 3 * buckets + j
+        assert v[0, buckets + j] == 500.0 + j  # rank 1 slot
+        assert i[0, buckets + j] == 1 * buckets + j
+
+
+def test_values_match_gathered_indices():
+    x = distinct_input(2, 2048, seed=7)
+    v, i = run_partial_reduce(x, 3, 256)
+    gathered = jnp.take_along_axis(x, i, axis=1)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(gathered))
+
+
+def test_full_two_stage_matches_exact_when_capacity_suffices():
+    # K' * B >= N: nothing can be dropped, approx == exact.
+    x = distinct_input(2, 512, seed=3)
+    v, i = generalized_approx_topk(x, 128, 4, 16)
+    ev, ei = ref.exact_topk_ref(x, 16)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(ev))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ei))
+
+
+def test_two_stage_matches_ref_pipeline():
+    x = distinct_input(4, 4096, seed=11)
+    v, i = generalized_approx_topk(x, 256, 2, 64)
+    rv, ri = ref.approx_topk_ref(x, 256, 2, 64)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+
+
+def test_recall_is_high_at_selected_params():
+    # kp=2, B=256 on n=2048, K=32: expected recall per Theorem 1 is ~0.98+.
+    x = distinct_input(8, 2048, seed=13)
+    v, i = generalized_approx_topk(x, 256, 2, 32)
+    ev, ei = ref.exact_topk_ref(x, 32)
+    rec = float(ref.recall_against_exact(np.asarray(i), np.asarray(ei)))
+    assert rec > 0.9, rec
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_dtypes_promote_to_32bit_compute(dtype):
+    rng = np.random.default_rng(5)
+    if dtype == jnp.bfloat16:
+        # bf16 has 8 mantissa bits: keep values in [0, 256) so a permutation
+        # stays distinct after the cast (ties would legitimately differ
+        # between the kernel's `>=` insert and top_k's first-match).
+        x = jnp.asarray(rng.permutation(256).reshape(1, 256).astype(np.float32))
+        x = x.astype(dtype)
+    elif dtype == jnp.int32:
+        x = jnp.asarray(rng.permutation(1024).reshape(1, 1024).astype(np.int32))
+    else:
+        x = jnp.asarray(rng.permutation(1024).reshape(1, 1024).astype(np.float32))
+    v, i = run_partial_reduce(x, 2, 128)
+    rv, ri = ref.partial_reduce_ref(x.astype(jnp.float32), 2, 128)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_rejects_bad_bucket_count():
+    spec = jax.ShapeDtypeStruct((2, 1000), jnp.float32)
+    with pytest.raises(ValueError):
+        generalized_partial_reduce(spec, 2, 300)  # 300 does not divide 1000
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    batch=st.sampled_from([1, 2, 4]),
+    rows=st.integers(min_value=2, max_value=8),
+    buckets=st.sampled_from([128, 256]),
+    local_k=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_kernel_equals_ref(batch, rows, buckets, local_k, seed):
+    """Property sweep over shapes and K': kernel == oracle on distinct
+    inputs."""
+    n = rows * buckets
+    x = distinct_input(batch, n, seed)
+    v, i = run_partial_reduce(x, local_k, buckets)
+    rv, ri = ref.partial_reduce_ref(x, local_k, buckets)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(min_value=2, max_value=6),
+    local_k=st.integers(min_value=1, max_value=3),
+    k=st.sampled_from([8, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_two_stage_subset_invariants(rows, local_k, k, seed):
+    """The approximate result is always a plausible subset: values match the
+    input at the reported indices, descending, no duplicates."""
+    buckets = 128
+    n = rows * buckets
+    if buckets * local_k < k:
+        return
+    x = distinct_input(1, n, seed)
+    v, i = generalized_approx_topk(x, buckets, local_k, k)
+    v, i = np.asarray(v)[0], np.asarray(i)[0]
+    xr = np.asarray(x)[0]
+    assert len(set(i.tolist())) == len(i)
+    np.testing.assert_array_equal(v, xr[i])
+    assert (np.diff(v) <= 0).all()

@@ -1,0 +1,94 @@
+"""L2 model-graph tests: shapes, composability, and semantic checks of the
+builders `aot.py` lowers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as models
+from compile.kernels import ref
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+def test_approx_topk_shapes():
+    fn, specs = models.build_approx_topk(4, 2048, 256, 2, 64)
+    out = jax.eval_shape(fn, *specs)
+    v, i = out
+    assert v.shape == (4, 64) and v.dtype == jnp.float32
+    assert i.shape == (4, 64) and i.dtype == jnp.int32
+
+
+def test_partial_reduce_shapes():
+    fn, specs = models.build_partial_reduce(2, 1024, 128, 3)
+    v, i = jax.eval_shape(fn, *specs)
+    assert v.shape == (2, 3 * 128)
+    assert i.shape == (2, 3 * 128)
+
+
+def test_exact_topk_matches_lax():
+    fn, _ = models.build_exact_topk(2, 512, 16)
+    x = rand((2, 512), seed=1)
+    v, i = fn(x)
+    lv, li = jax.lax.top_k(x, 16)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(lv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(li))
+
+
+def test_mips_fused_and_unfused_agree():
+    q = rand((8, 32), seed=2)
+    db = rand((32, 1024), seed=3)
+    fused, _ = models.build_mips_fused(8, 32, 1024, 128, 2, 32)
+    unfused, _ = models.build_mips_unfused(8, 32, 1024, 128, 2, 32)
+    fv, fi = fused(q, db)
+    uv, ui = unfused(q, db)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(ui))
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(uv), rtol=1e-5, atol=1e-5)
+
+
+def test_mips_exact_is_upper_bound_on_recall():
+    q = rand((4, 16), seed=4)
+    db = rand((16, 2048), seed=5)
+    ex, _ = models.build_mips_exact(4, 16, 2048, 64)
+    ap, _ = models.build_mips_fused(4, 16, 2048, 256, 2, 64)
+    ev, ei = ex(q, db)
+    av, ai = ap(q, db)
+    rec = float(ref.recall_against_exact(np.asarray(ai), np.asarray(ei)))
+    assert rec > 0.95  # (2048, 64, 256, 2) expected recall ~0.999
+    # approx values are a subset of the true score distribution
+    scores = ref.mips_scores_ref(q, db)
+    gathered = np.take_along_axis(np.asarray(scores), np.asarray(ai), axis=1)
+    np.testing.assert_allclose(np.asarray(av), gathered, rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_mlp_output_shapes_and_sparsity():
+    fn, specs = models.build_sparse_mlp_block(8, 16, 512, 128, 2, 32)
+    x = rand((8, 16), seed=6)
+    wu = rand((16, 512), seed=7, scale=0.25)
+    wd = rand((512, 16), seed=8, scale=0.06)
+    y, idx = fn(x, wu, wd)
+    assert y.shape == (8, 16)
+    assert idx.shape == (8, 32)
+    # Reconstruct: y must equal (sparse h) @ wd.
+    h = np.asarray(jnp.square(jnp.maximum(ref.mips_scores_ref(x, wu), 0.0)))
+    hs = np.zeros_like(h)
+    for t in range(8):
+        cols = np.asarray(idx)[t]
+        hs[t, cols] = h[t, cols]
+    want = hs @ np.asarray(wd)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "builder,args",
+    [
+        (models.build_approx_topk, (2, 1000, 100, 2, 16)),  # B does not divide N
+    ],
+)
+def test_invalid_shapes_rejected(builder, args):
+    with pytest.raises((ValueError, AssertionError)):
+        builder(*args)

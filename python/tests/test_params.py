@@ -1,0 +1,91 @@
+"""Parameter-selection tests (paper Appendix A.10) + cross-language goldens.
+
+The golden values here are asserted identically by the Rust test suite
+(`fastk::params::select::tests`); if either implementation drifts, one of
+the two suites fails.
+"""
+
+import numpy as np
+import pytest
+
+from compile import params as P
+
+
+def test_legal_bucket_counts():
+    bs = P.legal_bucket_counts(262_144)
+    assert bs == sorted(bs, reverse=True)
+    for b in bs:
+        assert b % 128 == 0 and 262_144 % b == 0 and b < 262_144
+    assert P.legal_bucket_counts(999) == []
+
+
+def test_exact_recall_against_paper_table2():
+    # Spot values from Table 2 (MC means; tolerance = reported std + eps).
+    cases = [
+        (1, 16_384, 0.972, 0.007),
+        (2, 4_096, 0.991, 0.005),
+        (4, 512, 0.963, 0.009),
+        (6, 256, 0.951, 0.010),
+    ]
+    for local_k, buckets, want, tol in cases:
+        got = P.expected_recall_exact(262_144, buckets, 1024, local_k)
+        assert abs(got - want) <= tol, (local_k, buckets, got)
+
+
+def test_exact_matches_mc():
+    rng = np.random.default_rng(0)
+    for (n, b, k, kp) in [(262_144, 8_192, 1024, 1), (15_360, 512, 480, 2)]:
+        exact = P.expected_recall_exact(n, b, k, kp)
+        mc, err = P.expected_recall_mc(n, b, k, kp, 40_000, rng)
+        assert abs(exact - mc) < 4 * err + 1e-3, (exact, mc, err)
+
+
+def test_select_parameters_golden_section71():
+    # Golden (shared with Rust): N=262144, K=1024, r=0.95 -> (4, 512).
+    assert P.select_parameters(262_144, 1024, 0.95) == (4, 512)
+    # K'=1 only -> B=16384.
+    assert P.select_parameters(262_144, 1024, 0.95, allowed_local_K=[1]) == (
+        1,
+        16_384,
+    )
+    # 99%: K'=1 -> 65536.
+    assert P.select_parameters(262_144, 1024, 0.99, allowed_local_K=[1]) == (
+        1,
+        65_536,
+    )
+
+
+def test_select_parameters_golden_aot_shard():
+    # The artifact set's serving shard: N=16384, K=128, r=0.95 -> (3, 128):
+    # 384 candidates at expected recall 0.978.
+    assert P.select_parameters(16_384, 128, 0.95) == (3, 128)
+
+
+def test_mc_selection_close_to_exact():
+    rng = np.random.default_rng(3)
+    got = P.select_parameters(262_144, 1024, 0.95, method="mc", rng=rng)
+    kp, b = got
+    exact = P.select_parameters(262_144, 1024, 0.95)
+    assert kp * b <= 2 * exact[0] * exact[1]
+
+
+def test_chern_baseline_config():
+    kp, b = P.chern_baseline_config(262_144, 1024, 0.95)
+    assert kp == 1
+    assert b >= P.chern_buckets(1024, 0.95)
+    # Chern's B for 95% is 20480 -> next legal is 32768 (divisor of 2^18).
+    assert b == 32_768
+
+
+def test_select_infeasible():
+    assert P.select_parameters(999, 10, 0.9) is None
+
+
+def test_recall_target_validation():
+    with pytest.raises(ValueError):
+        P.select_parameters(1024, 16, 1.5)
+
+
+def test_high_target_warns_mc():
+    with pytest.warns(RuntimeWarning):
+        P.select_parameters(4096, 16, 0.996, method="mc")

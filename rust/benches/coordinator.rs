@@ -1,0 +1,133 @@
+//! Coordinator ablation bench: serving throughput/latency vs batching
+//! policy and shard count (native backend; the PJRT path is exercised by
+//! `examples/mips_serving.rs`).
+//!
+//! Not a paper table — supports DESIGN.md §Perf (L3 should not be the
+//! bottleneck: coordinator overhead per request must be small relative to
+//! the kernel time).
+
+use std::time::{Duration, Instant};
+
+use fastk::bench_harness::{banner, Table};
+use fastk::coordinator::{
+    BackendFactory, BatcherConfig, MipsService, NativeBackend, Query, ServiceConfig,
+    ShardBackend,
+};
+use fastk::topk::TwoStageParams;
+use fastk::util::stats::fmt_ns;
+use fastk::util::Rng;
+
+fn run_config(
+    shards: usize,
+    shard_size: usize,
+    d: usize,
+    k: usize,
+    max_batch: usize,
+    max_delay: Duration,
+    queries: usize,
+) -> (f64, f64, f64, f64) {
+    let mut rng = Rng::new(77);
+    let db: Vec<f32> = (0..shards * shard_size * d)
+        .map(|_| rng.next_gaussian() as f32)
+        .collect();
+    let params = TwoStageParams::auto(shard_size, k, 0.95).unwrap();
+    let mut factories: Vec<BackendFactory> = Vec::new();
+    let mut offsets = Vec::new();
+    for s in 0..shards {
+        let chunk = db[s * shard_size * d..(s + 1) * shard_size * d].to_vec();
+        offsets.push(s * shard_size);
+        factories.push(Box::new(move || {
+            Ok(Box::new(NativeBackend::new(chunk, d, k, Some(params)))
+                as Box<dyn ShardBackend>)
+        }));
+    }
+    let svc = MipsService::start(
+        ServiceConfig {
+            d,
+            k,
+            batcher: BatcherConfig {
+                max_batch,
+                max_delay,
+            },
+        },
+        factories,
+        offsets,
+    )
+    .unwrap();
+
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for id in 0..queries {
+        let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        pending.push(svc.submit(Query {
+            id: id as u64,
+            vector: q,
+        }).unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let qps = queries as f64 / wall;
+    let p50 = svc.metrics.latency_percentile_ns(0.5);
+    let p99 = svc.metrics.latency_percentile_ns(0.99);
+    let mean_batch = svc.metrics.mean_batch_size();
+    svc.shutdown();
+    (qps, p50, p99, mean_batch)
+}
+
+fn main() {
+    let (shard_size, d, k, queries) = (4_096usize, 32usize, 64usize, 192usize);
+
+    banner("batching policy sweep (2 shards x 4096 x 32-d, K=64, open loop)");
+    let mut t = Table::new(&["max_batch", "max_delay", "qps", "p50", "p99", "mean batch"]);
+    for (mb, delay_us) in [
+        (1usize, 0u64),
+        (4, 500),
+        (8, 1_000),
+        (16, 2_000),
+        (32, 4_000),
+    ] {
+        let (qps, p50, p99, mean_batch) = run_config(
+            2,
+            shard_size,
+            d,
+            k,
+            mb,
+            Duration::from_micros(delay_us),
+            queries,
+        );
+        t.row(vec![
+            mb.to_string(),
+            format!("{delay_us}us"),
+            format!("{qps:.0}"),
+            fmt_ns(p50),
+            fmt_ns(p99),
+            format!("{mean_batch:.1}"),
+        ]);
+    }
+    t.print();
+
+    banner("shard-count sweep (total 16384 vectors, batch 8)");
+    let mut t2 = Table::new(&["shards", "shard size", "qps", "p50", "p99"]);
+    for shards in [1usize, 2, 4, 8] {
+        let (qps, p50, p99, _) = run_config(
+            shards,
+            16_384 / shards,
+            d,
+            k,
+            8,
+            Duration::from_millis(1),
+            queries,
+        );
+        t2.row(vec![
+            shards.to_string(),
+            (16_384 / shards).to_string(),
+            format!("{qps:.0}"),
+            fmt_ns(p50),
+            fmt_ns(p99),
+        ]);
+    }
+    t2.print();
+    println!("(single-core machine: shard parallelism cannot speed up compute,\n but the coordinator overhead stays flat — the L3 non-bottleneck claim)");
+}

@@ -1,0 +1,69 @@
+//! Paper Figure 10 (Appendix A.11): recall vs number of first-stage output
+//! elements for K' in 1..=8 — the Pareto frontier improves with K'.
+//!
+//! Workload: top-3360 (~0.8%) of 430,080, simulated runs (positional
+//! simulation, 1024 trials — the same protocol as the paper) plus the exact
+//! expectation.
+
+use fastk::bench_harness::{banner, Table};
+use fastk::recall::{expected_recall, RecallConfig};
+use fastk::sim::simulate_positions;
+use fastk::util::Rng;
+
+fn main() {
+    let (n, k) = (430_080usize, 3_360usize);
+    banner(&format!("Figure 10: recall vs output elements, top-{k} of {n}"));
+    let buckets: Vec<usize> = fastk::params::legal_bucket_counts(n as u64)
+        .into_iter()
+        .map(|b| b as usize)
+        .filter(|&b| b >= 1_280 && b <= 107_520)
+        .collect();
+    let mut rng = Rng::new(1010);
+    let mut t = Table::new(&["K'", "BUCKETS", "ELEMENTS", "E[RECALL] exact", "SIMULATED (1024 runs)"]);
+    let mut pareto: Vec<(usize, usize, f64)> = Vec::new(); // (kp, elements, recall)
+    for kp in [1usize, 2, 3, 4, 6, 8] {
+        for &b in &buckets {
+            if b * kp < k {
+                continue;
+            }
+            let elements = b * kp;
+            if elements > 262_144 {
+                continue;
+            }
+            let exact = expected_recall(&RecallConfig::new(
+                n as u64, k as u64, b as u64, kp as u64,
+            ));
+            if exact < 0.5 {
+                continue;
+            }
+            let sim = simulate_positions(n, k, b, kp, 1_024, &mut rng);
+            t.row(vec![
+                kp.to_string(),
+                b.to_string(),
+                elements.to_string(),
+                format!("{exact:.4}"),
+                format!("{:.4}±{:.4}", sim.mean, sim.std / 32.0),
+            ]);
+            pareto.push((kp, elements, exact));
+        }
+    }
+    t.print();
+
+    // The Figure-10 claim: at (roughly) equal element counts, recall rises
+    // with K'. Check a few element budgets.
+    banner("Pareto check: recall at ~equal element budgets");
+    for budget in [13_440usize, 26_880, 53_760] {
+        let mut line = format!("elements~{budget}:");
+        for kp in [1usize, 2, 4] {
+            if let Some((_, e, r)) = pareto
+                .iter()
+                .filter(|(p, e, _)| *p == kp && *e <= budget)
+                .max_by_key(|(_, e, _)| *e)
+            {
+                line += &format!("  K'={kp}: {r:.4} ({e} elts)");
+            }
+        }
+        println!("{line}");
+    }
+    println!("(the paper's separation between K' curves should be visible above)");
+}

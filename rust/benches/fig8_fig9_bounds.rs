@@ -1,0 +1,66 @@
+//! Paper Figures 8 and 9 (Appendix A.5): tightness of the K'=1 recall
+//! bounds.
+//!
+//! Fig 8: exact expected recall vs our Theorem-1 bound (1 - K/2(1/B - 1/N))
+//! vs Chern et al.'s bound (1 - K/B) as B sweeps.
+//! Fig 9: the binomial-series expansions — quadratic (the bound) and
+//! quartic ("nearly exact").
+
+use fastk::bench_harness::{banner, Table};
+use fastk::recall::bounds::{
+    binomial_expansion_recall, chern_recall_bound_linear, exact_recall_kp1,
+    ours_recall_bound,
+};
+
+fn main() {
+    let (n, k) = (262_144u64, 1024u64);
+    banner(&format!("Figure 8: bound tightness, K'=1, N={n}, K={k}"));
+    let mut t = Table::new(&["BUCKETS", "EXACT", "OURS (Thm1)", "CHERN", "ours gap", "chern gap"]);
+    let mut ours_max_gap = 0.0f64;
+    let mut chern_max_gap = 0.0f64;
+    for shift in 10..=17 {
+        let b = 1u64 << shift;
+        let exact = exact_recall_kp1(n, k, b);
+        let ours = ours_recall_bound(n, k, b);
+        let chern = chern_recall_bound_linear(k, b);
+        let og = exact - ours;
+        let cg = exact - chern;
+        ours_max_gap = ours_max_gap.max(og);
+        chern_max_gap = chern_max_gap.max(cg);
+        assert!(ours <= exact + 1e-9, "bound must hold");
+        assert!(chern <= ours + 1e-9, "ours must dominate chern");
+        t.row(vec![
+            b.to_string(),
+            format!("{exact:.4}"),
+            format!("{ours:.4}"),
+            format!("{chern:.4}"),
+            format!("{og:.4}"),
+            format!("{cg:.4}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "max gap: ours {ours_max_gap:.4} vs chern {chern_max_gap:.4} ({:.1}x tighter)",
+        chern_max_gap / ours_max_gap.max(1e-12)
+    );
+
+    banner("Figure 9: binomial-expansion orders vs exact");
+    let mut t9 = Table::new(&["BUCKETS", "EXACT", "QUADRATIC", "QUARTIC", "|quartic-exact|"]);
+    let mut worst = 0.0f64;
+    for shift in 11..=17 {
+        let b = 1u64 << shift;
+        let exact = exact_recall_kp1(n, k, b);
+        let quad = binomial_expansion_recall(n, k, b, 2);
+        let quart = binomial_expansion_recall(n, k, b, 4);
+        worst = worst.max((quart - exact).abs());
+        t9.row(vec![
+            b.to_string(),
+            format!("{exact:.6}"),
+            format!("{quad:.6}"),
+            format!("{quart:.6}"),
+            format!("{:.2e}", (quart - exact).abs()),
+        ]);
+    }
+    t9.print();
+    println!("quartic max error {worst:.2e} (paper: 'practically indistinguishable')");
+}

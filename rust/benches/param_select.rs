@@ -1,0 +1,86 @@
+//! Paper Appendix A.10.3: computational cost of the parameter-selection
+//! routine.
+//!
+//! The paper evaluates eight representative configurations (16k–917k
+//! elements, K 128–3360, 95% target), reporting configs evaluated, samples
+//! drawn and sub-second completion. This bench reproduces that protocol
+//! with both the paper's adaptive-MC evaluator and our exact evaluator,
+//! plus the cache-reuse behaviour.
+
+use fastk::bench_harness::{banner, bench_config, Table};
+use fastk::params::{select_parameters, select_parameters_mc, ParamCache};
+use fastk::util::stats::fmt_ns;
+use std::time::Duration;
+
+fn main() {
+    banner("A.10.3: parameter-selection cost (95% recall target)");
+    // Eight representative configurations in the paper's ranges.
+    let configs: &[(u64, u64)] = &[
+        (16_384, 128),
+        (32_768, 256),
+        (65_536, 512),
+        (131_072, 1_024),
+        (262_144, 1_024),
+        (430_080, 3_360),
+        (524_288, 2_048),
+        (917_504, 3_584),
+    ];
+    let mut t = Table::new(&[
+        "N",
+        "K",
+        "selected",
+        "exact time",
+        "mc time",
+        "mc configs",
+        "mc samples",
+    ]);
+    let mut total_exact = 0.0;
+    let mut total_mc = 0.0;
+    for &(n, k) in configs {
+        let exact_r = bench_config(
+            "exact",
+            0,
+            2,
+            10,
+            Duration::from_millis(50),
+            &mut || {
+                std::hint::black_box(select_parameters(n, k, 0.95, &[1, 2, 3, 4]));
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let (sel, stats) = select_parameters_mc(n, k, 0.95, &[1, 2, 3, 4], 7);
+        let mc_time = t0.elapsed();
+        total_exact += exact_r.min_s();
+        total_mc += mc_time.as_secs_f64();
+        let sel_s = sel
+            .map(|s| format!("K'={} B={}", s.cfg.local_k, s.cfg.buckets))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            n.to_string(),
+            k.to_string(),
+            sel_s,
+            fmt_ns(exact_r.summary.min),
+            fmt_ns(mc_time.as_secs_f64() * 1e9),
+            stats.configs_evaluated.to_string(),
+            stats.mc_samples_drawn.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ntotals: exact {:.3}s, adaptive-MC {:.3}s over 8 configs (paper: <1s on a desktop CPU)",
+        total_exact, total_mc
+    );
+
+    banner("cache reuse (identical transformer layers)");
+    let mut cache = ParamCache::new();
+    let t0 = std::time::Instant::now();
+    for _layer in 0..42 {
+        std::hint::black_box(cache.get(262_144, 1024, 0.95, &[1, 2, 3, 4]));
+    }
+    println!(
+        "42 identical layers: {} total, {} hits / {} misses",
+        fmt_ns(t0.elapsed().as_secs_f64() * 1e9),
+        cache.hits,
+        cache.misses
+    );
+}

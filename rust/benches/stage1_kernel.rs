@@ -1,0 +1,65 @@
+//! Stage-1 ablation bench (not a paper table; supports DESIGN.md §Perf):
+//!
+//! - scaling of the online top-K' update with K' (ops/element = 5K'-2;
+//!   on CPU the analogue is the branch-vs-bandwidth balance),
+//! - generic vs const-specialized update loop,
+//! - K'=1 strided max (the Chern baseline) as the floor.
+//!
+//! Reports effective GB/s of input consumption — the CPU counterpart of
+//! the paper's "stage 1 stays memory-bound until K'~6" claim.
+
+use fastk::bench_harness::{banner, bench, Table};
+use fastk::topk::{TwoStageParams, TwoStageTopK};
+use fastk::util::stats::fmt_ns;
+use fastk::util::Rng;
+
+fn main() {
+    banner("stage-1 kernel: throughput vs K' (N=262144, B=512)");
+    let n = 262_144usize;
+    let b = 512usize;
+    let mut rng = Rng::new(8);
+    let mut input = vec![0f32; n];
+    rng.fill_f32(&mut input);
+
+    let mut t = Table::new(&["K'", "time", "GB/s in", "ns/elt", "vs K'=1"]);
+    let mut base = 0.0f64;
+    for kp in [1usize, 2, 3, 4, 6, 8] {
+        let params = TwoStageParams::new(n, 64, b, kp);
+        let mut op = TwoStageTopK::new(params);
+        let r = bench(&format!("k'={kp}"), || {
+            op.stage1(&input);
+            std::hint::black_box(op.state());
+        });
+        let secs = r.min_s();
+        if kp == 1 {
+            base = secs;
+        }
+        t.row(vec![
+            kp.to_string(),
+            fmt_ns(r.summary.min),
+            format!("{:.2}", n as f64 * 4.0 / secs / 1e9),
+            format!("{:.2}", secs * 1e9 / n as f64),
+            format!("{:.2}x", secs / base),
+        ]);
+    }
+    t.print();
+
+    banner("bucket-count sweep at K'=4 (state footprint vs cache)");
+    let mut t2 = Table::new(&["BUCKETS", "state KiB", "time", "GB/s in"]);
+    for b in [128usize, 512, 2048, 8192, 32_768] {
+        let params = TwoStageParams::new(n, 64, b, 4);
+        let mut op = TwoStageTopK::new(params);
+        let r = bench(&format!("b={b}"), || {
+            op.stage1(&input);
+            std::hint::black_box(op.state());
+        });
+        t2.row(vec![
+            b.to_string(),
+            format!("{}", b * 4 * 8 / 1024),
+            fmt_ns(r.summary.min),
+            format!("{:.2}", n as f64 * 4.0 / r.min_s() / 1e9),
+        ]);
+    }
+    t2.print();
+    println!("(expect a knee once the [K'][B] state spills the innermost cache)");
+}

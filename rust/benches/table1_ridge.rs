@@ -1,0 +1,45 @@
+//! Paper Table 1: peak throughput and ridge points of accelerators,
+//! plus the measured host-CPU row from the Fig-4 probe.
+
+use fastk::bench_harness::{banner, Table};
+use fastk::hw::ridge_table;
+use fastk::perfmodel::vpu_probe::{run_probe, ProbeKernel};
+
+fn main() {
+    banner("Table 1: subsystem throughputs and ridge points");
+    let mut t = Table::new(&[
+        "DEVICE",
+        "beta (TB/s)",
+        "gamma (TFLOP/s)",
+        "pi (TFLOP/s)",
+        "ops/128-d dot",
+        "ops/4 bytes",
+    ]);
+    for row in ridge_table() {
+        t.row(vec![
+            row.device.to_string(),
+            format!("{:.3}", row.beta_tb_s),
+            format!("{:.2}", row.gamma_tflops),
+            format!("{:.0}", row.pi_tflops),
+            format!("~{:.0}", row.ops_per_128d_dot),
+            format!("~{:.0}", row.ops_per_4_bytes),
+        ]);
+    }
+    // Measured host row (this machine's "VPU"): the probe is the same
+    // methodology the paper used to estimate TPUv5e's gamma (Appendix A.1).
+    let probe = run_probe(ProbeKernel::Fibonacci, 1 << 18, &[1, 2, 4, 8, 16, 32, 64], 3);
+    let gamma = probe.throughput_ops_per_s;
+    let beta = probe.bandwidth_bytes_per_s;
+    t.row(vec![
+        "Host CPU (measured)".to_string(),
+        format!("{:.4}", beta / 1e12),
+        format!("{:.4}", gamma / 1e12),
+        "-".to_string(),
+        "-".to_string(),
+        format!("~{:.0}", gamma / (beta / 4.0)),
+    ]);
+    t.print();
+    println!(
+        "\npaper row check (TPUv5e): beta=819 GB/s gamma~6.14 pi=197 -> ~8 ops/dot, ~30 ops/4B"
+    );
+}

@@ -1,0 +1,119 @@
+//! Paper Table 2: recall and two-stage runtime vs (K', B) for selecting the
+//! top-1024 of 262,144 elements (batch 8).
+//!
+//! Three runtime columns per row:
+//!   - model-predicted TPUv5e stage times (the paper's platform), and
+//!   - measured CPU wall-clock of the native Rust implementation
+//!     (stage 1 + stage 2), batch 8 amortized per call.
+//!
+//! The paper's claims to check: recall matches its reported values; total
+//! time drops ~an order of magnitude from the K'=1 baseline to K'=4 at
+//! equal recall; stage-1 (model) stays flat until K'~6.
+
+use fastk::bench_harness::{banner, bench, Table};
+use fastk::hw::{Accelerator, AcceleratorId};
+use fastk::perfmodel::predict_table2_row;
+use fastk::recall::{expected_recall, RecallConfig};
+use fastk::topk::{TwoStageParams, TwoStageTopK};
+use fastk::util::stats::fmt_ns;
+use fastk::util::Rng;
+
+const N: usize = 262_144;
+const K: usize = 1024;
+const BATCH: usize = 8;
+
+fn main() {
+    banner("Table 2: top-1024 of 262,144 (batch 8)");
+    let rows: &[(usize, usize)] = &[
+        (1, 131_072),
+        (1, 65_536),
+        (1, 32_768),
+        (1, 16_384),
+        (1, 8_192),
+        (2, 4_096),
+        (2, 2_048),
+        (3, 2_048),
+        (3, 1_024),
+        (4, 1_024),
+        (4, 512),
+        (5, 512),
+        (6, 512),
+        (6, 256),
+        (8, 512),
+        (10, 256),
+        (12, 128),
+        (16, 128),
+    ];
+
+    let v5e = Accelerator::get(AcceleratorId::TpuV5e);
+    let mut rng = Rng::new(2);
+    let inputs: Vec<Vec<f32>> = (0..BATCH)
+        .map(|_| {
+            let mut v = vec![0f32; N];
+            rng.fill_f32(&mut v);
+            v
+        })
+        .collect();
+
+    let mut table = Table::new(&[
+        "K'",
+        "BUCKETS",
+        "ELEMENTS",
+        "E[RECALL]",
+        "v5e S1",
+        "v5e S2",
+        "v5e TOTAL",
+        "cpu S1",
+        "cpu TOTAL",
+    ]);
+    let mut totals = std::collections::BTreeMap::new();
+    for &(kp, b) in rows {
+        let cfg = RecallConfig::new(N as u64, K as u64, b as u64, kp as u64);
+        let recall = expected_recall(&cfg);
+        let model = predict_table2_row(&v5e, BATCH as u64, &cfg);
+
+        let params = TwoStageParams::new(N, K, b, kp);
+        let mut op = TwoStageTopK::new(params);
+        // Measured: stage 1 only.
+        let s1 = bench(&format!("s1 k'={kp} b={b}"), || {
+            for x in &inputs {
+                op.stage1(x);
+                std::hint::black_box(op.state());
+            }
+        });
+        // Measured: both stages.
+        let tot = bench(&format!("total k'={kp} b={b}"), || {
+            for x in &inputs {
+                let r = op.run(x);
+                std::hint::black_box(&r);
+            }
+        });
+        totals.insert((kp, b), tot.min_s());
+        table.row(vec![
+            kp.to_string(),
+            b.to_string(),
+            (kp * b).to_string(),
+            format!("{recall:.3}"),
+            fmt_ns(model.stage1_s * 1e9),
+            fmt_ns(model.stage2_s * 1e9),
+            fmt_ns(model.total_s() * 1e9),
+            fmt_ns(s1.summary.min / BATCH as f64),
+            fmt_ns(tot.summary.min / BATCH as f64),
+        ]);
+    }
+    table.print();
+
+    // Headline claims.
+    let base99 = totals[&(1, 65_536)];
+    let ours99 = totals[&(4, 1_024)];
+    println!(
+        "\n99%-recall speedup (K'=1 B=65536 -> K'=4 B=1024): {:.1}x measured CPU (paper: ~11x on TPUv5e)",
+        base99 / ours99
+    );
+    let base95 = totals[&(1, 16_384)];
+    let ours95 = totals[&(4, 512)];
+    println!(
+        "95%-recall speedup (K'=1 B=16384 -> K'=4 B=512): {:.1}x measured CPU",
+        base95 / ours95
+    );
+}

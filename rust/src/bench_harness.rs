@@ -1,0 +1,157 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Used by the `harness = false` bench binaries under `rust/benches/`.
+//! Provides warmup + timed iterations with min/mean/p50 reporting, and a
+//! paper-style table printer so every bench emits the same rows/series the
+//! paper reports.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{fmt_ns, Summary};
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean / 1e9
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.summary.min / 1e9
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then timed runs until both
+/// `min_iters` iterations and `min_time` have elapsed (capped at
+/// `max_iters`). Reports per-iteration nanoseconds.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_config(name, 2, 5, 300, Duration::from_millis(300), &mut f)
+}
+
+/// Fully-parameterized variant.
+pub fn bench_config<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    min_time: Duration,
+    f: &mut F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters
+        || (start.elapsed() < min_time && samples.len() < max_iters)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iterations: samples.len(),
+        summary: Summary::from_samples(&samples),
+    }
+}
+
+/// Print one result line.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10} {:>10} {:>10}  (n={})",
+        r.name,
+        fmt_ns(r.summary.min),
+        fmt_ns(r.summary.mean),
+        fmt_ns(r.summary.p50),
+        r.iterations
+    );
+}
+
+/// Paper-style table printer.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len().max(8)).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(&cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * (self.widths.len() - 1);
+        println!("{}", "-".repeat(total));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// Section banner for bench output.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0u64;
+        let r = bench_config(
+            "noop",
+            1,
+            3,
+            10,
+            Duration::from_millis(1),
+            &mut || {
+                count += 1;
+            },
+        );
+        assert!(r.iterations >= 3);
+        assert!(count as usize >= r.iterations);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["A", "LONG_HEADER"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333333333".into(), "4".into()]);
+        t.print(); // smoke: no panic
+        assert_eq!(t.rows.len(), 2);
+    }
+}

@@ -1,0 +1,226 @@
+//! Service/launcher configuration (JSON).
+//!
+//! Example config (see `examples/serve.json` written by `fastk init-config`):
+//!
+//! ```json
+//! {
+//!   "d": 64, "k": 128,
+//!   "shards": 4, "shard_size": 16384,
+//!   "recall_target": 0.95,
+//!   "batch_max": 8, "batch_delay_us": 2000,
+//!   "backend": "native",
+//!   "artifact": "mips_fused_q8_d64_n16384_k128",
+//!   "artifact_dir": "artifacts",
+//!   "seed": 42
+//! }
+//! ```
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::BatcherConfig;
+use crate::util::json::Json;
+
+/// Which execution backend shards use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust matmul + two-stage kernel.
+    Native,
+    /// AOT artifacts through PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+/// Full launcher configuration.
+#[derive(Debug, Clone)]
+pub struct LauncherConfig {
+    pub d: usize,
+    pub k: usize,
+    pub shards: usize,
+    pub shard_size: usize,
+    pub recall_target: f64,
+    pub batcher: BatcherConfig,
+    pub backend: BackendKind,
+    pub artifact: Option<String>,
+    pub artifact_dir: String,
+    pub seed: u64,
+}
+
+impl Default for LauncherConfig {
+    fn default() -> Self {
+        LauncherConfig {
+            d: 64,
+            k: 128,
+            shards: 4,
+            shard_size: 16_384,
+            recall_target: 0.95,
+            batcher: BatcherConfig::default(),
+            backend: BackendKind::Native,
+            artifact: None,
+            artifact_dir: "artifacts".to_string(),
+            seed: 42,
+        }
+    }
+}
+
+impl LauncherConfig {
+    pub fn from_file(path: &Path) -> Result<LauncherConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<LauncherConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut c = LauncherConfig::default();
+        let usize_field = |key: &str, default: usize| -> Result<usize> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_usize()
+                    .with_context(|| format!("config field `{key}` must be a non-negative integer")),
+            }
+        };
+        c.d = usize_field("d", c.d)?;
+        c.k = usize_field("k", c.k)?;
+        c.shards = usize_field("shards", c.shards)?;
+        c.shard_size = usize_field("shard_size", c.shard_size)?;
+        if let Some(v) = j.get("recall_target") {
+            c.recall_target = v.as_f64().context("recall_target must be a number")?;
+        }
+        c.batcher.max_batch = usize_field("batch_max", c.batcher.max_batch)?;
+        let delay_us = usize_field(
+            "batch_delay_us",
+            c.batcher.max_delay.as_micros() as usize,
+        )?;
+        c.batcher.max_delay = Duration::from_micros(delay_us as u64);
+        if let Some(v) = j.get("backend") {
+            c.backend = match v.as_str() {
+                Some("native") => BackendKind::Native,
+                Some("pjrt") => BackendKind::Pjrt,
+                other => anyhow::bail!("unknown backend {other:?}"),
+            };
+        }
+        if let Some(v) = j.get("artifact") {
+            c.artifact = v.as_str().map(|s| s.to_string());
+        }
+        if let Some(v) = j.get("artifact_dir") {
+            c.artifact_dir = v
+                .as_str()
+                .context("artifact_dir must be a string")?
+                .to_string();
+        }
+        if let Some(v) = j.get("seed") {
+            c.seed = v.as_i64().context("seed must be an integer")? as u64;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.d > 0 && self.k > 0, "d and k must be positive");
+        anyhow::ensure!(self.shards > 0, "need at least one shard");
+        anyhow::ensure!(
+            self.k <= self.shard_size,
+            "k={} exceeds shard_size={}",
+            self.k,
+            self.shard_size
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.recall_target),
+            "recall_target must be in [0,1)"
+        );
+        anyhow::ensure!(self.batcher.max_batch >= 1, "batch_max must be >= 1");
+        if self.backend == BackendKind::Pjrt {
+            anyhow::ensure!(
+                self.artifact.is_some(),
+                "pjrt backend requires `artifact`"
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize back to JSON (for `init-config`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("d", Json::num(self.d as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("shard_size", Json::num(self.shard_size as f64)),
+            ("recall_target", Json::num(self.recall_target)),
+            ("batch_max", Json::num(self.batcher.max_batch as f64)),
+            (
+                "batch_delay_us",
+                Json::num(self.batcher.max_delay.as_micros() as f64),
+            ),
+            (
+                "backend",
+                Json::str(match self.backend {
+                    BackendKind::Native => "native",
+                    BackendKind::Pjrt => "pjrt",
+                }),
+            ),
+            (
+                "artifact",
+                self.artifact
+                    .as_ref()
+                    .map(|a| Json::str(a))
+                    .unwrap_or(Json::Null),
+            ),
+            ("artifact_dir", Json::str(&self.artifact_dir)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        LauncherConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = LauncherConfig::from_json(
+            r#"{"d": 32, "k": 16, "shards": 2, "shard_size": 1024,
+                "recall_target": 0.9, "batch_max": 4, "batch_delay_us": 500,
+                "backend": "pjrt", "artifact": "mips_fused_x", "seed": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(c.d, 32);
+        assert_eq!(c.k, 16);
+        assert_eq!(c.backend, BackendKind::Pjrt);
+        assert_eq!(c.batcher.max_delay, Duration::from_micros(500));
+        assert_eq!(c.artifact.as_deref(), Some("mips_fused_x"));
+    }
+
+    #[test]
+    fn partial_config_uses_defaults() {
+        let c = LauncherConfig::from_json(r#"{"d": 8}"#).unwrap();
+        assert_eq!(c.d, 8);
+        assert_eq!(c.k, LauncherConfig::default().k);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(LauncherConfig::from_json(r#"{"backend": "gpu"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"k": 0}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"backend": "pjrt"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"k": 99999, "shard_size": 10}"#).is_err());
+        assert!(LauncherConfig::from_json("{").is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = LauncherConfig::default();
+        let text = c.to_json().to_string();
+        let c2 = LauncherConfig::from_json(&text).unwrap();
+        assert_eq!(c2.d, c.d);
+        assert_eq!(c2.backend, c.backend);
+        assert_eq!(c2.batcher.max_delay, c.batcher.max_delay);
+    }
+}

@@ -1,0 +1,159 @@
+//! Dynamic batching: collect requests into batches bounded by size and a
+//! formation deadline (the standard serving trade-off: larger batches
+//! amortize kernel cost; the deadline bounds queueing latency).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batch formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch (typically the artifact's compiled batch).
+    pub max_batch: usize,
+    /// Maximum time to wait for the batch to fill after the first request.
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Pulls items from an mpsc receiver and forms batches per the policy.
+pub struct DynamicBatcher<T> {
+    rx: Receiver<T>,
+    pub config: BatcherConfig,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(rx: Receiver<T>, config: BatcherConfig) -> Self {
+        assert!(config.max_batch >= 1);
+        DynamicBatcher { rx, config }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is closed
+    /// and drained. A batch is emitted when it reaches `max_batch` or when
+    /// `max_delay` has elapsed since its first element arrived.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // Block indefinitely for the first element.
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.config.max_delay;
+        while batch.len() < self.config.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::thread;
+
+    #[test]
+    fn fills_to_max_batch_without_waiting() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_secs(10),
+            },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 64,
+                max_delay: Duration::from_millis(5),
+            },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn returns_none_on_closed_empty_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = DynamicBatcher::new(rx, BatcherConfig::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn drains_after_sender_drop() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 10,
+                max_delay: Duration::from_millis(1),
+            },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![7, 8]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_all_delivered() {
+        let (tx, rx) = channel();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..25 {
+                    tx.send(t * 100 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 8,
+                max_delay: Duration::from_millis(1),
+            },
+        );
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 8);
+            seen.extend(batch);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        seen.sort_unstable();
+        let mut want: Vec<i32> = (0..4).flat_map(|t| (0..25).map(move |i| t * 100 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+    }
+}

@@ -1,0 +1,121 @@
+//! Global merge of per-shard top-k lists — the coordinator-level "second
+//! stage". Each shard returns its local top-k with shard-local indices; the
+//! merge translates to global indices and selects the global top-k.
+
+use crate::topk::{exact, Candidate};
+
+/// A shard's result for one query (shard-local candidate indices).
+#[derive(Debug, Clone)]
+pub struct ShardTopK {
+    pub shard: usize,
+    pub candidates: Vec<Candidate>,
+}
+
+/// Merge shard-local top-k lists into the global top-k.
+///
+/// `shard_offsets[s]` is the global index of shard s's first vector. Since
+/// each shard list is already sorted, the cheap path is a k-way merge; for
+/// the small list counts here, collect + quickselect is equally fast and
+/// reuses the canonical tie-break.
+pub fn merge_shard_results(
+    per_shard: &[ShardTopK],
+    shard_offsets: &[usize],
+    k: usize,
+) -> Vec<(usize, f32)> {
+    let mut all: Vec<(usize, f32)> = Vec::with_capacity(per_shard.len() * k);
+    for st in per_shard {
+        let off = shard_offsets[st.shard];
+        for c in &st.candidates {
+            all.push((off + c.index as usize, c.value));
+        }
+    }
+    // Select top-k by value (ties: ascending global index).
+    let vals: Vec<f32> = all.iter().map(|&(_, v)| v).collect();
+    let top = exact::topk_quickselect(&vals, k);
+    let mut out: Vec<(usize, f32)> = top
+        .into_iter()
+        .map(|c| all[c.index as usize])
+        .collect();
+    // Canonicalize order on global indices for deterministic output.
+    out.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    out.truncate(k);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(index: u32, value: f32) -> Candidate {
+        Candidate { index, value }
+    }
+
+    #[test]
+    fn merges_two_shards() {
+        let per_shard = vec![
+            ShardTopK {
+                shard: 0,
+                candidates: vec![cand(3, 9.0), cand(1, 5.0)],
+            },
+            ShardTopK {
+                shard: 1,
+                candidates: vec![cand(0, 8.0), cand(2, 7.0)],
+            },
+        ];
+        let merged = merge_shard_results(&per_shard, &[0, 100], 3);
+        assert_eq!(merged, vec![(3, 9.0), (100, 8.0), (102, 7.0)]);
+    }
+
+    #[test]
+    fn global_indices_respect_offsets() {
+        let per_shard = vec![ShardTopK {
+            shard: 1,
+            candidates: vec![cand(5, 1.0)],
+        }];
+        let merged = merge_shard_results(&per_shard, &[0, 1000], 1);
+        assert_eq!(merged, vec![(1005, 1.0)]);
+    }
+
+    #[test]
+    fn k_larger_than_candidates() {
+        let per_shard = vec![ShardTopK {
+            shard: 0,
+            candidates: vec![cand(0, 1.0)],
+        }];
+        let merged = merge_shard_results(&per_shard, &[0], 5);
+        assert_eq!(merged.len(), 1);
+    }
+
+    #[test]
+    fn merge_equals_global_exact() {
+        // Sharded exact top-k merged == unsharded exact top-k.
+        use crate::topk::exact::topk_sort;
+        use crate::util::Rng;
+        let mut rng = Rng::new(11);
+        let n = 1024;
+        let shards = 4;
+        let k = 16;
+        let values: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let per: Vec<ShardTopK> = (0..shards)
+            .map(|s| {
+                let lo = s * n / shards;
+                let hi = (s + 1) * n / shards;
+                ShardTopK {
+                    shard: s,
+                    candidates: topk_sort(&values[lo..hi], k),
+                }
+            })
+            .collect();
+        let offsets: Vec<usize> = (0..shards).map(|s| s * n / shards).collect();
+        let merged = merge_shard_results(&per, &offsets, k);
+        let want: Vec<(usize, f32)> = topk_sort(&values, k)
+            .into_iter()
+            .map(|c| (c.index as usize, c.value))
+            .collect();
+        assert_eq!(merged, want);
+    }
+}

@@ -1,0 +1,121 @@
+//! Service metrics: request latency, batch sizes, throughput.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{fmt_ns, LatencyHistogram, Welford};
+
+/// Thread-safe service metrics.
+#[derive(Debug)]
+pub struct ServiceMetrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Debug)]
+struct Inner {
+    latency: LatencyHistogram,
+    queue_latency: LatencyHistogram,
+    batch_sizes: Welford,
+    requests: u64,
+    batches: u64,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        ServiceMetrics {
+            inner: Mutex::new(Inner {
+                latency: LatencyHistogram::new(),
+                queue_latency: LatencyHistogram::new(),
+                batch_sizes: Welford::new(),
+                requests: 0,
+                batches: 0,
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_request(&self, total: Duration, queued: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.latency.record(total);
+        m.queue_latency.record(queued);
+        m.requests += 1;
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batch_sizes.push(size as f64);
+        m.batches += 1;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.inner.lock().unwrap().batches
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        self.inner.lock().unwrap().batch_sizes.mean()
+    }
+
+    pub fn throughput_per_s(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        m.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn latency_percentile_ns(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().latency.percentile_ns(q)
+    }
+
+    pub fn mean_latency_ns(&self) -> f64 {
+        self.inner.lock().unwrap().latency.mean_ns()
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        format!(
+            "requests={} batches={} mean_batch={:.2} lat(mean={} p50={} p99={}) queue(p50={})",
+            m.requests,
+            m.batches,
+            m.batch_sizes.mean(),
+            fmt_ns(m.latency.mean_ns()),
+            fmt_ns(m.latency.percentile_ns(0.5)),
+            fmt_ns(m.latency.percentile_ns(0.99)),
+            fmt_ns(m.queue_latency.percentile_ns(0.5)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = ServiceMetrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        for i in 1..=10 {
+            m.record_request(
+                Duration::from_micros(i * 100),
+                Duration::from_micros(i * 10),
+            );
+        }
+        assert_eq!(m.requests(), 10);
+        assert_eq!(m.batches(), 2);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+        assert!(m.mean_latency_ns() > 0.0);
+        let s = m.summary();
+        assert!(s.contains("requests=10"));
+        assert!(m.throughput_per_s() > 0.0);
+    }
+}

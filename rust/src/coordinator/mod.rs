@@ -1,0 +1,38 @@
+//! L3 serving coordinator: a MIPS (maximum inner-product search) service
+//! built around the generalized two-stage approximate Top-K.
+//!
+//! Architecture (vLLM-router-like, thread-based — tokio is unavailable in
+//! this offline environment, see DESIGN.md §9):
+//!
+//! ```text
+//!  clients ──submit──► [DynamicBatcher] ──batches──► router thread
+//!                                                        │ scatter
+//!                                       ┌────────────────┼────────────────┐
+//!                                   [ShardWorker 0] [ShardWorker 1] ... (threads)
+//!                                       │  fused matmul+stage1+stage2     │
+//!                                       └────────────────┼────────────────┘
+//!                                                        │ gather
+//!                                                 [global merge]  = one more
+//!                                                        │          "stage 2"
+//!                                                  per-query responses
+//! ```
+//!
+//! Each shard holds a slice of the database and runs the paper's operator
+//! (through PJRT artifacts or the native Rust kernel); the router merges
+//! per-shard top-k lists into the global top-k. Batching pads to the
+//! artifact's compiled batch size (HLO shapes are static).
+
+pub mod backend;
+pub mod batcher;
+pub mod merge;
+pub mod metrics;
+pub mod net;
+pub mod service;
+pub mod shard;
+
+pub use backend::{BackendFactory, NativeBackend, PjrtBackend, ShardBackend};
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use merge::merge_shard_results;
+pub use metrics::ServiceMetrics;
+pub use service::{MipsService, Query, Response, ServiceConfig};
+pub use shard::{ShardHandle, ShardResult};

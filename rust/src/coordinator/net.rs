@@ -1,0 +1,302 @@
+//! TCP front end for the MIPS service: a JSON-lines protocol so external
+//! clients can query the coordinator (the deployment story for the
+//! launcher's `serve` mode).
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! -> {"id": 1, "vector": [0.1, -0.2, ...]}
+//! <- {"id": 1, "results": [[17, 0.93], [4, 0.88], ...], "latency_us": 812}
+//! -> {"cmd": "stats"}
+//! <- {"stats": "requests=... p50=..."}
+//! -> {"cmd": "shutdown"}       (stops the listener)
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+use super::service::MipsService;
+
+/// A running TCP front end.
+pub struct NetServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the given service.
+    /// Connections are handled on per-client threads.
+    pub fn start(addr: &str, service: Arc<MipsService>) -> anyhow::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        // Accept loop with a poll timeout so shutdown is prompt.
+        listener.set_nonblocking(true)?;
+        let join = std::thread::Builder::new()
+            .name("fastk-net-accept".into())
+            .spawn(move || {
+                let mut clients = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let svc = service.clone();
+                            let flag = stop2.clone();
+                            clients.push(std::thread::spawn(move || {
+                                let _ = handle_client(stream, svc, flag);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in clients {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(NetServer {
+            addr: local,
+            stop,
+            join: Some(join),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn handle_client(
+    stream: TcpStream,
+    service: Arc<MipsService>,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    // Poll with a read timeout so server shutdown can't deadlock on a
+    // client that keeps its connection open without sending.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // read_line may return WouldBlock mid-line; partial bytes stay in
+        // `line` and the next call appends the remainder, so only clear
+        // after a complete line is processed.
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    continue; // partial line, keep accumulating
+                }
+                if !line.trim().is_empty() {
+                    let reply = match handle_line(&line, &service, &stop) {
+                        Ok(Some(j)) => j,
+                        Ok(None) => break, // shutdown command
+                        Err(e) => {
+                            Json::obj(vec![("error", Json::str(&format!("{e:#}")))])
+                        }
+                    };
+                    writer.write_all(reply.to_string().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                }
+                line.clear();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+    Ok(())
+}
+
+fn handle_line(
+    line: &str,
+    service: &MipsService,
+    stop: &AtomicBool,
+) -> anyhow::Result<Option<Json>> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+    if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "stats" => Ok(Some(Json::obj(vec![(
+                "stats",
+                Json::str(&service.metrics.summary()),
+            )]))),
+            "shutdown" => {
+                stop.store(true, Ordering::Relaxed);
+                Ok(None)
+            }
+            other => anyhow::bail!("unknown cmd `{other}`"),
+        };
+    }
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_i64())
+        .ok_or_else(|| anyhow::anyhow!("missing id"))? as u64;
+    let vector: Vec<f32> = j
+        .get("vector")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing vector"))?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as f32))
+        .collect::<Option<_>>()
+        .ok_or_else(|| anyhow::anyhow!("vector must be numeric"))?;
+
+    let t0 = std::time::Instant::now();
+    let resp = service.query(id, vector)?;
+    let results = Json::Arr(
+        resp.results
+            .iter()
+            .map(|&(i, v)| Json::Arr(vec![Json::num(i as f64), Json::num(v as f64)]))
+            .collect(),
+    );
+    Ok(Some(Json::obj(vec![
+        ("id", Json::num(resp.id as f64)),
+        ("results", results),
+        (
+            "latency_us",
+            Json::num(t0.elapsed().as_micros() as f64),
+        ),
+    ])))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{BackendFactory, NativeBackend, ShardBackend};
+    use crate::coordinator::{BatcherConfig, ServiceConfig};
+    use crate::util::Rng;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn tiny_service() -> Arc<MipsService> {
+        let d = 8;
+        let k = 4;
+        let n = 64;
+        let mut rng = Rng::new(4);
+        let db: Vec<f32> = (0..n * d).map(|_| rng.next_f32()).collect();
+        let factories: Vec<BackendFactory> = vec![Box::new(move || {
+            Ok(Box::new(NativeBackend::exact(db, d, k)) as Box<dyn ShardBackend>)
+        })];
+        Arc::new(
+            MipsService::start(
+                ServiceConfig {
+                    d,
+                    k,
+                    batcher: BatcherConfig {
+                        max_batch: 4,
+                        max_delay: std::time::Duration::from_micros(200),
+                    },
+                },
+                factories,
+                vec![0],
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn query_round_trip_over_tcp() {
+        let svc = tiny_service();
+        let server = NetServer::start("127.0.0.1:0", svc).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        let q = r#"{"id": 7, "vector": [1,1,1,1,1,1,1,1]}"#;
+        conn.write_all(q.as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(conn.try_clone().unwrap())
+            .read_line(&mut line)
+            .unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(7));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 4);
+        // Descending scores.
+        let scores: Vec<f64> = results
+            .iter()
+            .map(|r| r.as_arr().unwrap()[1].as_f64().unwrap())
+            .collect();
+        assert!(scores.windows(2).all(|w| w[0] >= w[1]));
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_and_errors() {
+        let svc = tiny_service();
+        let server = NetServer::start("127.0.0.1:0", svc).unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+
+        w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("stats").is_some());
+
+        line.clear();
+        w.write_all(b"not json\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("error").is_some());
+
+        line.clear();
+        w.write_all(b"{\"id\": 1, \"vector\": [1, 2]}\n").unwrap(); // wrong dim
+        r.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("error").is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_tcp_clients() {
+        let svc = tiny_service();
+        let server = NetServer::start("127.0.0.1:0", svc).unwrap();
+        let addr = server.addr;
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            joins.push(std::thread::spawn(move || {
+                let conn = TcpStream::connect(addr).unwrap();
+                let mut w = conn.try_clone().unwrap();
+                let mut r = BufReader::new(conn);
+                for i in 0..5u64 {
+                    let id = t * 100 + i;
+                    let msg = format!(
+                        "{{\"id\": {id}, \"vector\": [1,0,1,0,1,0,1,0]}}\n"
+                    );
+                    w.write_all(msg.as_bytes()).unwrap();
+                    let mut line = String::new();
+                    r.read_line(&mut line).unwrap();
+                    let j = Json::parse(&line).unwrap();
+                    assert_eq!(j.get("id").unwrap().as_i64(), Some(id as i64));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,328 @@
+//! The MIPS serving front end: accepts queries, batches them, scatters to
+//! shard workers, gathers and merges, and replies per request.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::backend::BackendFactory;
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::merge::{merge_shard_results, ShardTopK};
+use super::metrics::ServiceMetrics;
+use super::shard::{ShardHandle, ShardResult};
+
+/// One retrieval request.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: u64,
+    /// Length-d query vector.
+    pub vector: Vec<f32>,
+}
+
+/// The reply: global top-k (index, score) plus timing.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub results: Vec<(usize, f32)>,
+    pub total_latency: Duration,
+    pub queue_latency: Duration,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub d: usize,
+    pub k: usize,
+    pub batcher: BatcherConfig,
+}
+
+struct Pending {
+    query: Query,
+    enqueued: Instant,
+    reply: Sender<Response>,
+}
+
+/// A running MIPS service (router thread + shard worker threads).
+pub struct MipsService {
+    tx: Sender<Pending>,
+    pub metrics: Arc<ServiceMetrics>,
+    config: ServiceConfig,
+    router: Option<JoinHandle<()>>,
+}
+
+impl MipsService {
+    /// Start the service over the given shard backend factories (each
+    /// factory runs inside its worker thread — PJRT handles are
+    /// thread-bound). `shard_offsets[s]` maps shard-local to global indices.
+    pub fn start(
+        config: ServiceConfig,
+        backends: Vec<BackendFactory>,
+        shard_offsets: Vec<usize>,
+    ) -> anyhow::Result<MipsService> {
+        anyhow::ensure!(!backends.is_empty(), "need at least one shard");
+        anyhow::ensure!(backends.len() == shard_offsets.len());
+        let metrics = Arc::new(ServiceMetrics::new());
+        let shards: Vec<ShardHandle> = backends
+            .into_iter()
+            .enumerate()
+            .map(|(s, f)| ShardHandle::spawn(s, f))
+            .collect::<anyhow::Result<_>>()?;
+
+        let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
+        let m = metrics.clone();
+        let cfg = config.clone();
+        let router = std::thread::Builder::new()
+            .name("fastk-router".into())
+            .spawn(move || {
+                let batcher = DynamicBatcher::new(rx, cfg.batcher);
+                while let Some(batch) = batcher.next_batch() {
+                    m.record_batch(batch.len());
+                    Self::process_batch(&cfg, &shards, &shard_offsets, batch, &m);
+                }
+                // Dropping `shards` joins the workers.
+            })
+            .expect("spawn router");
+
+        Ok(MipsService {
+            tx,
+            metrics,
+            config,
+            router: Some(router),
+        })
+    }
+
+    fn process_batch(
+        cfg: &ServiceConfig,
+        shards: &[ShardHandle],
+        shard_offsets: &[usize],
+        batch: Vec<Pending>,
+        metrics: &ServiceMetrics,
+    ) {
+        let nq = batch.len();
+        let dispatch_start = Instant::now();
+        // Pack the query block once; shards share it via Arc.
+        let mut block = Vec::with_capacity(nq * cfg.d);
+        for p in &batch {
+            debug_assert_eq!(p.query.vector.len(), cfg.d);
+            block.extend_from_slice(&p.query.vector);
+        }
+        let block = Arc::new(block);
+
+        // Scatter.
+        let (reply_tx, reply_rx) = channel();
+        let mut live = 0usize;
+        for h in shards {
+            if h.submit(block.clone(), nq, reply_tx.clone()).is_ok() {
+                live += 1;
+            }
+        }
+        drop(reply_tx);
+
+        // Gather.
+        let mut per_shard_ok: Vec<ShardResult> = Vec::with_capacity(live);
+        for res in reply_rx {
+            per_shard_ok.push(res);
+        }
+
+        // Merge + reply per query.
+        for (qi, p) in batch.into_iter().enumerate() {
+            let lists: Vec<ShardTopK> = per_shard_ok
+                .iter()
+                .filter_map(|r| match &r.per_query {
+                    Ok(pq) => Some(ShardTopK {
+                        shard: r.shard,
+                        candidates: pq[qi].clone(),
+                    }),
+                    Err(_) => None,
+                })
+                .collect();
+            let results = merge_shard_results(&lists, shard_offsets, cfg.k);
+            let now = Instant::now();
+            let resp = Response {
+                id: p.query.id,
+                results,
+                total_latency: now - p.enqueued,
+                queue_latency: dispatch_start - p.enqueued,
+            };
+            metrics.record_request(resp.total_latency, resp.queue_latency);
+            let _ = p.reply.send(resp);
+        }
+    }
+
+    /// Submit a query; the response arrives on the returned receiver.
+    pub fn submit(&self, query: Query) -> anyhow::Result<Receiver<Response>> {
+        anyhow::ensure!(
+            query.vector.len() == self.config.d,
+            "query dim {} != service dim {}",
+            query.vector.len(),
+            self.config.d
+        );
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Pending {
+                query,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("service is shut down"))?;
+        Ok(reply_rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn query(&self, id: u64, vector: Vec<f32>) -> anyhow::Result<Response> {
+        let rx = self.submit(Query { id, vector })?;
+        rx.recv().map_err(|_| anyhow::anyhow!("service dropped the request"))
+    }
+
+    /// Graceful shutdown: stop accepting, drain, join.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx; // closes the router's receiver after drain
+        if let Some(j) = self.router.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for MipsService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{BackendFactory, NativeBackend};
+    use crate::topk::TwoStageParams;
+    use crate::util::Rng;
+
+    fn build_service(
+        n_total: usize,
+        shards: usize,
+        d: usize,
+        k: usize,
+        approx: bool,
+        seed: u64,
+    ) -> (MipsService, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let db: Vec<f32> = (0..n_total * d).map(|_| rng.next_gaussian() as f32).collect();
+        let per = n_total / shards;
+        let mut backends: Vec<BackendFactory> = Vec::new();
+        let mut offsets = Vec::new();
+        for s in 0..shards {
+            let chunk = db[s * per * d..(s + 1) * per * d].to_vec();
+            let params = if approx {
+                Some(TwoStageParams::new(per, k, per / 16, 2))
+            } else {
+                None
+            };
+            backends.push(Box::new(move || {
+                Ok(Box::new(NativeBackend::new(chunk, d, k, params))
+                    as Box<dyn crate::coordinator::ShardBackend>)
+            }));
+            offsets.push(s * per);
+        }
+        let svc = MipsService::start(
+            ServiceConfig {
+                d,
+                k,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(1),
+                },
+            },
+            backends,
+            offsets,
+        )
+        .unwrap();
+        (svc, db)
+    }
+
+    fn exact_oracle(db: &[f32], d: usize, q: &[f32], k: usize) -> Vec<usize> {
+        let n = db.len() / d;
+        let scores: Vec<f32> = (0..n)
+            .map(|j| {
+                let v = &db[j * d..(j + 1) * d];
+                q.iter().zip(v).map(|(a, b)| a * b).sum()
+            })
+            .collect();
+        crate::topk::exact::topk_sort(&scores, k)
+            .into_iter()
+            .map(|c| c.index as usize)
+            .collect()
+    }
+
+    #[test]
+    fn exact_service_matches_oracle() {
+        let (svc, db) = build_service(512, 4, 8, 5, false, 3);
+        let mut rng = Rng::new(99);
+        for id in 0..6 {
+            let q: Vec<f32> = (0..8).map(|_| rng.next_gaussian() as f32).collect();
+            let resp = svc.query(id, q.clone()).unwrap();
+            let got: Vec<usize> = resp.results.iter().map(|&(i, _)| i).collect();
+            assert_eq!(got, exact_oracle(&db, 8, &q, 5), "query {id}");
+        }
+        assert_eq!(svc.metrics.requests(), 6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn approx_service_high_recall() {
+        let (svc, db) = build_service(4096, 4, 16, 16, true, 7);
+        let mut rng = Rng::new(5);
+        let mut hits = 0usize;
+        let trials = 8;
+        for id in 0..trials {
+            let q: Vec<f32> = (0..16).map(|_| rng.next_gaussian() as f32).collect();
+            let resp = svc.query(id as u64, q.clone()).unwrap();
+            let got: std::collections::HashSet<usize> =
+                resp.results.iter().map(|&(i, _)| i).collect();
+            let want = exact_oracle(&db, 16, &q, 16);
+            hits += want.iter().filter(|i| got.contains(i)).count();
+        }
+        let recall = hits as f64 / (trials * 16) as f64;
+        assert!(recall > 0.9, "recall={recall}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_get_their_own_answers() {
+        let (svc, db) = build_service(512, 2, 8, 3, false, 13);
+        let svc = Arc::new(svc);
+        let db = Arc::new(db);
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let svc = svc.clone();
+            let db = db.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 + t);
+                for i in 0..10u64 {
+                    let q: Vec<f32> = (0..8).map(|_| rng.next_gaussian() as f32).collect();
+                    let id = t * 1000 + i;
+                    let resp = svc.query(id, q.clone()).unwrap();
+                    assert_eq!(resp.id, id);
+                    let got: Vec<usize> = resp.results.iter().map(|&(x, _)| x).collect();
+                    assert_eq!(got, exact_oracle(&db, 8, &q, 3), "client {t} query {i}");
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(svc.metrics.requests(), 80);
+        // Batching actually happened under concurrency.
+        assert!(svc.metrics.batches() <= 80);
+    }
+
+    #[test]
+    fn rejects_wrong_dim() {
+        let (svc, _) = build_service(128, 2, 8, 3, false, 1);
+        assert!(svc.query(0, vec![1.0; 4]).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Shard workers: one thread per database shard, each owning a
+//! [`ShardBackend`](super::backend::ShardBackend) and serving scatter
+//! requests from the router.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::topk::Candidate;
+
+use super::backend::{BackendFactory, ShardBackend};
+
+/// A scatter request: score this query batch, reply on `reply`.
+struct ShardRequest {
+    /// Row-major `[nq, d]` query block (shared across shards via Arc).
+    queries: std::sync::Arc<Vec<f32>>,
+    nq: usize,
+    reply: Sender<ShardResult>,
+}
+
+/// A shard's answer for a whole batch.
+#[derive(Debug)]
+pub struct ShardResult {
+    pub shard: usize,
+    /// Per-query top-k with shard-local indices.
+    pub per_query: anyhow::Result<Vec<Vec<Candidate>>>,
+}
+
+/// Handle to a running shard worker thread.
+pub struct ShardHandle {
+    pub shard: usize,
+    pub size: usize,
+    tx: Sender<ShardRequest>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ShardHandle {
+    /// Spawn a worker thread; the backend is constructed *inside* the
+    /// thread (PJRT handles are thread-bound). Returns an error if the
+    /// factory fails.
+    pub fn spawn(shard: usize, factory: BackendFactory) -> anyhow::Result<ShardHandle> {
+        let (tx, rx): (Sender<ShardRequest>, Receiver<ShardRequest>) = channel();
+        let (init_tx, init_rx) = channel::<anyhow::Result<usize>>();
+        let join = std::thread::Builder::new()
+            .name(format!("fastk-shard-{shard}"))
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => {
+                        let _ = init_tx.send(Ok(b.shard_size()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let per_query = backend.score_topk(&req.queries, req.nq);
+                    // The router may have given up (shutdown); ignore send
+                    // failures.
+                    let _ = req.reply.send(ShardResult { shard, per_query });
+                }
+            })
+            .expect("spawn shard thread");
+        let size = init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("shard {shard} worker died during init"))??;
+        Ok(ShardHandle {
+            shard,
+            size,
+            tx,
+            join: Some(join),
+        })
+    }
+
+    /// Convenience for already-constructed (Send-able) backends: wraps them
+    /// in a factory. Used by tests and native-backend setups.
+    pub fn spawn_native(
+        shard: usize,
+        backend: super::backend::NativeBackend,
+    ) -> ShardHandle {
+        Self::spawn(shard, Box::new(move || Ok(Box::new(backend) as Box<dyn ShardBackend>)))
+            .expect("native backend factory cannot fail")
+    }
+
+    /// Scatter a batch to this shard; the result arrives on `reply`.
+    pub fn submit(
+        &self,
+        queries: std::sync::Arc<Vec<f32>>,
+        nq: usize,
+        reply: Sender<ShardResult>,
+    ) -> anyhow::Result<()> {
+        self.tx
+            .send(ShardRequest { queries, nq, reply })
+            .map_err(|_| anyhow::anyhow!("shard {} worker is gone", self.shard))
+    }
+}
+
+impl Drop for ShardHandle {
+    fn drop(&mut self) {
+        // Close the channel, then join the worker.
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn shard_worker_round_trip() {
+        let d = 4;
+        let n = 32;
+        let mut rng = Rng::new(2);
+        let db: Vec<f32> = (0..n * d).map(|_| rng.next_f32()).collect();
+        let h = ShardHandle::spawn_native(7, NativeBackend::exact(db, d, 3));
+        assert_eq!(h.size, n);
+
+        let queries = Arc::new(vec![1.0f32; 2 * d]);
+        let (reply_tx, reply_rx) = channel();
+        h.submit(queries, 2, reply_tx).unwrap();
+        let res = reply_rx.recv().unwrap();
+        assert_eq!(res.shard, 7);
+        let per_query = res.per_query.unwrap();
+        assert_eq!(per_query.len(), 2);
+        assert_eq!(per_query[0].len(), 3);
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let r = ShardHandle::spawn(0, Box::new(|| anyhow::bail!("boom")));
+        assert!(r.is_err());
+        assert!(format!("{:#}", r.err().unwrap()).contains("boom"));
+    }
+
+    #[test]
+    fn multiple_shards_in_parallel() {
+        let d = 4;
+        let n = 16;
+        let mut handles = Vec::new();
+        for s in 0..3 {
+            let db: Vec<f32> = (0..n * d).map(|i| (i + s) as f32).collect();
+            handles.push(ShardHandle::spawn_native(s, NativeBackend::exact(db, d, 2)));
+        }
+        let queries = Arc::new(vec![0.5f32; d]);
+        let (reply_tx, reply_rx) = channel();
+        for h in &handles {
+            h.submit(queries.clone(), 1, reply_tx.clone()).unwrap();
+        }
+        drop(reply_tx);
+        let mut seen: Vec<usize> = reply_rx.iter().map(|r| r.shard).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+}

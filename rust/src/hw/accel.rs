@@ -1,0 +1,135 @@
+//! Datasheet-derived accelerator descriptions (paper Table 1).
+
+/// Identifier for the accelerators the paper tabulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AcceleratorId {
+    /// NVIDIA A100 PCIe (40/80 GB).
+    A100Pcie,
+    /// NVIDIA H100 SXM.
+    H100Sxm,
+    /// Google TPU v4.
+    TpuV4,
+    /// Google TPU v5e — the paper's empirical platform.
+    TpuV5e,
+    /// This machine's CPU (filled in by the Fig-4-style probe at runtime);
+    /// defaults are rough single-core numbers so the model stays usable
+    /// without calibration.
+    HostCpu,
+}
+
+impl AcceleratorId {
+    pub fn all_paper() -> &'static [AcceleratorId] {
+        &[
+            AcceleratorId::A100Pcie,
+            AcceleratorId::H100Sxm,
+            AcceleratorId::TpuV4,
+            AcceleratorId::TpuV5e,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AcceleratorId::A100Pcie => "A100 PCIe",
+            AcceleratorId::H100Sxm => "H100 SXM",
+            AcceleratorId::TpuV4 => "TPUv4",
+            AcceleratorId::TpuV5e => "TPUv5e",
+            AcceleratorId::HostCpu => "Host CPU",
+        }
+    }
+}
+
+/// Subsystem peak throughputs (paper §2.3 notation).
+#[derive(Debug, Clone, Copy)]
+pub struct Accelerator {
+    pub id: AcceleratorId,
+    /// β: peak HBM bandwidth, bytes/second.
+    pub beta_bytes_per_s: f64,
+    /// γ: peak vector (VPU / CUDA-core) throughput, FP32 FLOP/s.
+    pub gamma_flops: f64,
+    /// π: peak matrix (MXU / TensorCore) throughput, BF16 FLOP/s.
+    pub pi_flops: f64,
+    /// Native vector lane width (elements of 4 bytes) — 8x128 on TPUs.
+    pub vector_lanes: usize,
+}
+
+impl Accelerator {
+    /// Table-1 datasheet values.
+    pub fn get(id: AcceleratorId) -> Accelerator {
+        match id {
+            AcceleratorId::A100Pcie => Accelerator {
+                id,
+                beta_bytes_per_s: 1.935e12,
+                gamma_flops: 19.5e12,
+                pi_flops: 312e12,
+                vector_lanes: 32,
+            },
+            AcceleratorId::H100Sxm => Accelerator {
+                id,
+                beta_bytes_per_s: 3.35e12,
+                gamma_flops: 67e12,
+                pi_flops: 1.979e15,
+                vector_lanes: 32,
+            },
+            AcceleratorId::TpuV4 => Accelerator {
+                id,
+                beta_bytes_per_s: 1.2e12,
+                gamma_flops: 4.3e12,
+                pi_flops: 275e12,
+                vector_lanes: 8 * 128,
+            },
+            AcceleratorId::TpuV5e => Accelerator {
+                id,
+                // 819 GB/s HBM; γ estimated in the paper's Appendix A.1.
+                beta_bytes_per_s: 819e9,
+                gamma_flops: 6.14e12,
+                pi_flops: 197e12,
+                vector_lanes: 8 * 128,
+            },
+            AcceleratorId::HostCpu => Accelerator {
+                id,
+                // Rough single-core defaults: ~20 GB/s DRAM stream,
+                // ~30 GFLOP/s scalar-ish vector f32, no matrix unit (model
+                // matmul on the same ALUs).
+                beta_bytes_per_s: 20e9,
+                gamma_flops: 30e9,
+                pi_flops: 60e9,
+                vector_lanes: 8,
+            },
+        }
+    }
+
+    /// Override throughputs (used after the Fig-4-style calibration probe).
+    pub fn with_measured(mut self, beta: f64, gamma: f64, pi: f64) -> Accelerator {
+        self.beta_bytes_per_s = beta;
+        self.gamma_flops = gamma;
+        self.pi_flops = pi;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_datasheet_values() {
+        let v5e = Accelerator::get(AcceleratorId::TpuV5e);
+        assert_eq!(v5e.beta_bytes_per_s, 819e9);
+        assert!((v5e.gamma_flops - 6.14e12).abs() < 1e9);
+        assert_eq!(v5e.pi_flops, 197e12);
+
+        let a100 = Accelerator::get(AcceleratorId::A100Pcie);
+        assert_eq!(a100.beta_bytes_per_s, 1.935e12);
+        assert_eq!(a100.gamma_flops, 19.5e12);
+        assert_eq!(a100.pi_flops, 312e12);
+    }
+
+    #[test]
+    fn mxu_dominates_vpu_everywhere() {
+        // π >> γ is the premise of the whole paper (§2.1).
+        for &id in AcceleratorId::all_paper() {
+            let a = Accelerator::get(id);
+            assert!(a.pi_flops / a.gamma_flops > 10.0, "{:?}", id);
+        }
+    }
+}

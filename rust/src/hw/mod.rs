@@ -1,0 +1,15 @@
+//! Accelerator hardware models and ridge-point analysis (paper §2.3,
+//! Table 1).
+//!
+//! An accelerator is characterized by three subsystem throughputs:
+//! `β` (HBM bytes/s), `γ` (VPU FLOP/s), `π` (MXU FLOP/s). A kernel is
+//! characterized by its usage of each (`M` bytes, `O_vpu`, `O_mxu`); the
+//! runtime estimate is `max(M/β, O_vpu/γ, O_mxu/π)` and the *ridge points*
+//! quantify how many VPU ops fit per 128-d MXU dot product / per 4 bytes of
+//! HBM traffic while staying non-VPU-bound.
+
+pub mod accel;
+pub mod ridge;
+
+pub use accel::{Accelerator, AcceleratorId};
+pub use ridge::{ridge_table, KernelUsage, RidgePoints, RuntimeEstimate};

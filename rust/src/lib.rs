@@ -1,0 +1,24 @@
+//! fastk — generalized two-stage approximate Top-K.
+//!
+//! Reproduction of Samaga et al., "A Faster Generalized Two-Stage
+//! Approximate Top-K" (TMLR 2025). Three-layer architecture:
+//!
+//! - **L1** (build time): Pallas kernels in `python/compile/kernels/`.
+//! - **L2** (build time): JAX models in `python/compile/model.py`, AOT
+//!   lowered to HLO text artifacts by `python/compile/aot.py`.
+//! - **L3** (runtime, this crate): coordinator that loads the artifacts via
+//!   PJRT and serves approximate Top-K / MIPS workloads, plus the analytic
+//!   machinery of the paper (recall theory, parameter selection, ridge-point
+//!   performance model) and pure-Rust reference/baseline implementations.
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod hw;
+pub mod params;
+pub mod runtime;
+pub mod perfmodel;
+pub mod recall;
+pub mod sim;
+pub mod topk;
+pub mod util;

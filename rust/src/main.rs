@@ -1,0 +1,500 @@
+//! fastk — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!
+//! - `params`    auto-select (K′, B) for (N, K, recall_target)
+//! - `recall`    exact + Monte-Carlo expected recall of a configuration
+//! - `table1`    regenerate paper Table 1 (ridge points)
+//! - `table2`    regenerate paper Table 2 (recall + modeled runtime)
+//! - `table3`    regenerate paper Table 3 (MIPS breakdown, model)
+//! - `probe`     Fig-4-style host vector-throughput probe
+//! - `serve`     start the MIPS service from a JSON config and run a load test
+//! - `init-config` write a default serve config
+//! - `selftest`  load AOT artifacts through PJRT and cross-check vs native
+//!
+//! The benches under `rust/benches/` regenerate every paper table/figure
+//! with full workloads; these subcommands are the interactive entry points.
+
+use std::path::Path;
+
+use fastk::config::{BackendKind, LauncherConfig};
+use fastk::coordinator::{
+    BackendFactory, MipsService, NativeBackend, PjrtBackend, ServiceConfig, ShardBackend,
+};
+use fastk::hw::{Accelerator, AcceleratorId};
+use fastk::perfmodel::{self, predict_table2_row, vpu_probe};
+use fastk::recall::{self, RecallConfig};
+use fastk::runtime::{Executor, HostTensor};
+use fastk::topk::{self, TwoStageParams};
+use fastk::util::cli::Args;
+use fastk::util::stats::fmt_ns;
+use fastk::util::Rng;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        return;
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    let result = match cmd.as_str() {
+        "params" => cmd_params(&args),
+        "recall" => cmd_recall(&args),
+        "table1" => cmd_table1(&args),
+        "table2" => cmd_table2(&args),
+        "table3" => cmd_table3(&args),
+        "probe" => cmd_probe(&args),
+        "serve" => cmd_serve(&args),
+        "init-config" => cmd_init_config(&args),
+        "selftest" => cmd_selftest(&args),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "fastk — generalized two-stage approximate Top-K (paper reproduction)\n\
+         \n\
+         usage: fastk <command> [--flags]\n\
+         \n\
+         commands:\n\
+         \x20 params      --n 262144 --k 1024 --recall 0.95 [--max-local-k 4] [--mc]\n\
+         \x20 recall      --n 262144 --k 1024 --buckets 512 --local-k 4 [--trials 100000]\n\
+         \x20 table1\n\
+         \x20 table2      [--batch 8]\n\
+         \x20 table3\n\
+         \x20 probe       [--elements 1048576] [--max-steps 128]\n\
+         \x20 serve       [--config serve.json] [--queries 256]\n\
+         \x20 init-config [--out serve.json]\n\
+         \x20 selftest    [--artifacts artifacts]\n"
+    );
+}
+
+fn cmd_params(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["n", "k", "recall", "max-local-k", "mc", "seed"]);
+    let n = args.usize_or("n", 262_144) as u64;
+    let k = args.usize_or("k", 1024) as u64;
+    let r = args.f64_or("recall", 0.95);
+    let max_kp = args.usize_or("max-local-k", 4) as u64;
+    let allowed: Vec<u64> = (1..=max_kp).collect();
+
+    if args.bool_or("mc", false) {
+        let (sel, stats) =
+            fastk::params::select_parameters_mc(n, k, r, &allowed, args.u64_or("seed", 0));
+        match sel {
+            Some(s) => println!(
+                "MC selection: K'={} B={} ({} elements, recall {:.4}) \
+                 [{} configs, {} samples]",
+                s.cfg.local_k,
+                s.cfg.buckets,
+                s.cfg.num_elements(),
+                s.expected_recall,
+                stats.configs_evaluated,
+                stats.mc_samples_drawn
+            ),
+            None => println!("infeasible"),
+        }
+        return Ok(());
+    }
+    match fastk::params::select_parameters(n, k, r, &allowed) {
+        Some(cfg) => {
+            let baseline = fastk::params::select_parameters(n, k, r, &[1]);
+            println!(
+                "selected: K'={} B={} -> {} second-stage elements (recall {:.4})",
+                cfg.local_k,
+                cfg.buckets,
+                cfg.num_elements(),
+                recall::expected_recall(&cfg)
+            );
+            if let Some(b) = baseline {
+                println!(
+                    "K'=1 baseline: B={} -> {} elements ({:.1}x reduction)",
+                    b.buckets,
+                    b.num_elements(),
+                    b.num_elements() as f64 / cfg.num_elements() as f64
+                );
+            }
+        }
+        None => println!("infeasible: no legal bucket count meets the target"),
+    }
+    Ok(())
+}
+
+fn cmd_recall(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["n", "k", "buckets", "local-k", "trials", "seed"]);
+    let cfg = RecallConfig::new(
+        args.usize_or("n", 262_144) as u64,
+        args.usize_or("k", 1024) as u64,
+        args.usize_or("buckets", 512) as u64,
+        args.usize_or("local-k", 4) as u64,
+    );
+    let exact = recall::expected_recall(&cfg);
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let mc = recall::estimate(&cfg, args.u64_or("trials", 100_000), &mut rng);
+    println!(
+        "N={} K={} B={} K'={}  ({} candidates)",
+        cfg.n,
+        cfg.k,
+        cfg.buckets,
+        cfg.local_k,
+        cfg.num_elements()
+    );
+    println!("exact (Theorem 1): {exact:.6}");
+    println!("monte carlo:       {:.6} ± {:.6}", mc.recall, mc.std_error);
+    if cfg.local_k == 1 {
+        println!(
+            "bounds: ours {:.6}, chern {:.6}",
+            recall::bounds::ours_recall_bound(cfg.n, cfg.k, cfg.buckets),
+            recall::bounds::chern_recall_bound_linear(cfg.k, cfg.buckets)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&[]);
+    println!(
+        "{:<10} {:>9} {:>12} {:>11} {:>18} {:>16}",
+        "DEVICE", "β (TB/s)", "γ (TFLOP/s)", "π (TFLOP/s)", "ops per 128-d dot", "ops per 4 bytes"
+    );
+    for row in fastk::hw::ridge_table() {
+        println!(
+            "{:<10} {:>9.3} {:>12.2} {:>11.0} {:>18.0} {:>16.0}",
+            row.device,
+            row.beta_tb_s,
+            row.gamma_tflops,
+            row.pi_tflops,
+            row.ops_per_128d_dot,
+            row.ops_per_4_bytes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["batch"]);
+    let batch = args.usize_or("batch", 8) as u64;
+    let v5e = Accelerator::get(AcceleratorId::TpuV5e);
+    let rows: &[(u64, u64)] = &[
+        (1, 131_072),
+        (1, 65_536),
+        (1, 32_768),
+        (1, 16_384),
+        (1, 8_192),
+        (2, 4_096),
+        (2, 2_048),
+        (3, 2_048),
+        (3, 1_024),
+        (4, 1_024),
+        (4, 512),
+        (5, 512),
+        (6, 512),
+        (6, 256),
+        (8, 512),
+        (10, 256),
+        (12, 128),
+        (16, 128),
+    ];
+    println!(
+        "{:>3} {:>8} {:>9} {:>9}   {:>9} {:>9} {:>9}",
+        "K'", "BUCKETS", "ELEMENTS", "E[RECALL]", "STAGE1", "STAGE2", "TOTAL"
+    );
+    for &(kp, b) in rows {
+        let cfg = RecallConfig::new(262_144, 1024, b, kp);
+        let r = recall::expected_recall(&cfg);
+        let t = predict_table2_row(&v5e, batch, &cfg);
+        println!(
+            "{:>3} {:>8} {:>9} {:>9.3}   {:>9} {:>9} {:>9}",
+            kp,
+            b,
+            cfg.num_elements(),
+            r,
+            fmt_ns(t.stage1_s * 1e9),
+            fmt_ns(t.stage2_s * 1e9),
+            fmt_ns(t.total_s() * 1e9)
+        );
+    }
+    println!(
+        "\n(model-predicted TPUv5e latencies; run `cargo bench --bench table2_unfused`\n for measured CPU latencies of the native Rust implementation)"
+    );
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&[]);
+    let v5e = Accelerator::get(AcceleratorId::TpuV5e);
+    let shape = perfmodel::matmul::MatmulShape {
+        b: 1024,
+        d: 128,
+        n: 1_000_000,
+        elem_bytes: 4,
+    };
+    let k1 = RecallConfig::new(1_000_000, 1024, 100_000, 1);
+    let k4 = RecallConfig::new(1_000_000, 1024, 2_000, 4);
+    let exact_s = perfmodel::predict::predict_exact_topk(&v5e, 1024, 1_000_000);
+    let mm = perfmodel::matmul::predict_unfused(&v5e, &shape).seconds;
+    println!(
+        "{:<26} {:>9} {:>9} {:>9} {:>9}",
+        "ALGORITHM", "MATMUL", "STAGE1", "STAGE2", "TOTAL"
+    );
+    println!(
+        "{:<26} {:>9} {:>9} {:>9} {:>9}",
+        "exact (full sort)",
+        fmt_ns(mm * 1e9),
+        "-",
+        fmt_ns(exact_s * 1e9),
+        fmt_ns((mm + exact_s) * 1e9)
+    );
+    for (label, cfg, fused) in [
+        ("K'=1 unfused", k1, false),
+        ("K'=4 unfused", k4, false),
+        ("K'=4 fused", k4, true),
+    ] {
+        let p = perfmodel::predict_table3(&v5e, &shape, &cfg, fused);
+        println!(
+            "{:<26} {:>9} {:>9} {:>9} {:>9}",
+            label,
+            fmt_ns(p.matmul_s * 1e9),
+            p.stage1_s
+                .map(|s| fmt_ns(s * 1e9))
+                .unwrap_or_else(|| "FUSED".into()),
+            fmt_ns(p.stage2_s * 1e9),
+            fmt_ns(p.total_s() * 1e9)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_probe(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["elements", "max-steps"]);
+    let elements = args.usize_or("elements", 1 << 20);
+    let max_steps = args.usize_or("max-steps", 128) as u64;
+    let mut steps = vec![1u64];
+    while *steps.last().unwrap() < max_steps {
+        let next = steps.last().unwrap() * 2;
+        steps.push(next);
+    }
+    for kernel in [
+        vpu_probe::ProbeKernel::Fibonacci,
+        vpu_probe::ProbeKernel::FastExponentiation,
+    ] {
+        let r = vpu_probe::run_probe(kernel, elements, &steps, 3);
+        println!("{kernel:?}:");
+        for p in &r.points {
+            println!(
+                "  steps={:<5} time={}",
+                p.ops_per_element,
+                fmt_ns(p.seconds * 1e9)
+            );
+        }
+        println!(
+            "  fitted throughput: {:.2} Gops/s, overhead {}, bandwidth {:.2} GB/s\n",
+            r.throughput_ops_per_s / 1e9,
+            fmt_ns(r.overhead_s * 1e9),
+            r.bandwidth_bytes_per_s / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn cmd_init_config(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["out"]);
+    let out = args.str_or("out", "serve.json");
+    std::fs::write(&out, LauncherConfig::default().to_json().to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["config", "queries"]);
+    let cfg = match args.get("config") {
+        Some(p) => LauncherConfig::from_file(Path::new(p))?,
+        None => LauncherConfig::default(),
+    };
+    let queries = args.usize_or("queries", 256);
+    run_serve(&cfg, queries)
+}
+
+/// Build and drive the service per config.
+fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
+    let mut rng = Rng::new(cfg.seed);
+    println!(
+        "building database: {} shards x {} vectors x {}-d ({} backend)",
+        cfg.shards,
+        cfg.shard_size,
+        cfg.d,
+        match cfg.backend {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    );
+    let n_total = cfg.shards * cfg.shard_size;
+    let db: Vec<f32> = (0..n_total * cfg.d)
+        .map(|_| rng.next_gaussian() as f32)
+        .collect();
+
+    let params = TwoStageParams::auto(cfg.shard_size, cfg.k, cfg.recall_target)
+        .ok_or_else(|| anyhow::anyhow!("no feasible two-stage params for shard"))?;
+    println!(
+        "per-shard operator: K'={} B={} ({} candidates, expected recall {:.4})",
+        params.local_k,
+        params.buckets,
+        params.num_candidates(),
+        recall::expected_recall(&RecallConfig::new(
+            params.n as u64,
+            params.k as u64,
+            params.buckets as u64,
+            params.local_k as u64
+        ))
+    );
+
+    let mut factories: Vec<BackendFactory> = Vec::new();
+    let mut offsets = Vec::new();
+    for s in 0..cfg.shards {
+        let chunk =
+            db[s * cfg.shard_size * cfg.d..(s + 1) * cfg.shard_size * cfg.d].to_vec();
+        let d = cfg.d;
+        let k = cfg.k;
+        offsets.push(s * cfg.shard_size);
+        match cfg.backend {
+            BackendKind::Native => factories.push(Box::new(move || {
+                Ok(Box::new(NativeBackend::new(chunk, d, k, Some(params)))
+                    as Box<dyn ShardBackend>)
+            })),
+            BackendKind::Pjrt => {
+                let dir = cfg.artifact_dir.clone();
+                let artifact = cfg.artifact.clone().unwrap();
+                factories.push(Box::new(move || {
+                    let exec = Executor::new(Path::new(&dir))?;
+                    let compiled = exec.compile(&artifact)?;
+                    Ok(Box::new(PjrtBackend::new(compiled, &chunk, d)?)
+                        as Box<dyn ShardBackend>)
+                }));
+            }
+        }
+    }
+
+    let svc = MipsService::start(
+        ServiceConfig {
+            d: cfg.d,
+            k: cfg.k,
+            batcher: cfg.batcher,
+        },
+        factories,
+        offsets,
+    )?;
+
+    // Open-loop load: submit all queries, then collect.
+    println!("serving {num_queries} queries ...");
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(num_queries);
+    for id in 0..num_queries {
+        let q: Vec<f32> = (0..cfg.d).map(|_| rng.next_gaussian() as f32).collect();
+        pending.push((
+            q.clone(),
+            svc.submit(fastk::coordinator::Query {
+                id: id as u64,
+                vector: q,
+            })?,
+        ));
+    }
+    let mut responses = Vec::with_capacity(num_queries);
+    for (q, rx) in pending {
+        responses.push((q, rx.recv()?));
+    }
+    let wall = t0.elapsed();
+
+    // Recall vs the exact oracle on a sample of queries.
+    let sample = responses.len().min(32);
+    let mut hit = 0usize;
+    for (q, resp) in responses.iter().take(sample) {
+        let scores: Vec<f32> = (0..n_total)
+            .map(|j| {
+                let v = &db[j * cfg.d..(j + 1) * cfg.d];
+                q.iter().zip(v).map(|(a, b)| a * b).sum()
+            })
+            .collect();
+        let exact: std::collections::HashSet<usize> =
+            topk::exact::topk_quickselect(&scores, cfg.k)
+                .into_iter()
+                .map(|c| c.index as usize)
+                .collect();
+        hit += resp
+            .results
+            .iter()
+            .filter(|(i, _)| exact.contains(i))
+            .count();
+    }
+    println!(
+        "done in {:.2}s: throughput {:.1} qps, measured recall@{} = {:.4} ({} queries sampled)",
+        wall.as_secs_f64(),
+        num_queries as f64 / wall.as_secs_f64(),
+        cfg.k,
+        hit as f64 / (sample * cfg.k) as f64,
+        sample
+    );
+    println!("metrics: {}", svc.metrics.summary());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["artifacts"]);
+    let dir = args.str_or("artifacts", "artifacts");
+    let exec = Executor::new(Path::new(&dir))?;
+    println!("platform: {}", exec.platform());
+    println!("artifacts in manifest: {}", exec.manifest.entries.len());
+
+    // Cross-check the small approx_topk artifact against the native oracle.
+    let entry = exec
+        .manifest
+        .find("approx_topk_b4_n2048_k32_kp2_bb256")
+        .ok_or_else(|| anyhow::anyhow!("smoke artifact missing — run `make artifacts`"))?
+        .clone();
+    let compiled = exec.compile(&entry.name)?;
+    let batch = entry.param_usize("batch").unwrap();
+    let n = entry.param_usize("n").unwrap();
+    let k = entry.param_usize("k").unwrap();
+    let buckets = entry.param_usize("buckets").unwrap();
+    let local_k = entry.param_usize("local_k").unwrap();
+
+    let mut rng = Rng::new(123);
+    let mut x = vec![0f32; batch * n];
+    rng.fill_f32(&mut x);
+    let out = compiled.run(&[HostTensor::F32(x.clone())])?;
+    let values = out[0].as_f32().unwrap();
+    let indices = out[1].as_i32().unwrap();
+
+    let mut ts = topk::TwoStageTopK::new(TwoStageParams::new(n, k, buckets, local_k));
+    let mut mismatches = 0;
+    for b in 0..batch {
+        let row = &x[b * n..(b + 1) * n];
+        let want = ts.run(row);
+        for (j, w) in want.iter().enumerate() {
+            let got_v = values[b * k + j];
+            let got_i = indices[b * k + j] as u32;
+            if got_v != w.value || got_i != w.index {
+                mismatches += 1;
+            }
+        }
+    }
+    anyhow::ensure!(
+        mismatches == 0,
+        "PJRT artifact disagrees with the native kernel on {mismatches} slots"
+    );
+    println!("selftest OK: PJRT approx_topk == native kernel on {batch}x{n}");
+    Ok(())
+}

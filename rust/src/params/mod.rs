@@ -1,0 +1,22 @@
+//! Automatic algorithm-parameter selection (paper Appendix A.10).
+//!
+//! Implements the paper's user-facing contract: given `(N, K,
+//! recall_target)` choose `(K′, B)` minimizing the second-stage input size
+//! `B·K′` subject to
+//!
+//! - expected recall ≥ target (Theorem-1 exact expression, or the paper's
+//!   adaptive Monte-Carlo estimator),
+//! - implementation constraints: `B` a multiple of the 128-wide lane axis
+//!   and a divisor of `N` (paper §7.1 / Fig. 3),
+//! - `B·K′ ≥ K` (the second stage must have at least K candidates).
+//!
+//! The sweep enumerates bucket counts in descending order and early-exits
+//! when the target is missed (recall is monotone in B), exactly as in
+//! Listing A.10.2.
+
+mod select;
+
+pub use select::{
+    legal_bucket_counts, select_parameters, select_parameters_mc, select_with,
+    ParamCache, RecallEval, Selection, SweepStats,
+};

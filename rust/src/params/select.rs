@@ -1,0 +1,306 @@
+//! The parameter sweep (paper Listing A.10.2) with both exact and
+//! Monte-Carlo recall evaluation.
+
+use std::collections::HashMap;
+
+use crate::recall::{estimate_adaptive, expected_recall, RecallConfig};
+use crate::util::{divisors, Rng};
+
+/// Lane-width alignment required of bucket counts by the TPU kernel
+/// (paper: "the number of buckets to be a multiple of 128").
+pub const BUCKET_MULTIPLE: u64 = 128;
+
+/// How to evaluate expected recall during the sweep.
+#[derive(Debug, Clone, Copy)]
+pub enum RecallEval {
+    /// Theorem-1 closed form (fast, exact — our default).
+    Exact,
+    /// The paper's adaptive Monte-Carlo estimator (tolerance at 3σ).
+    MonteCarlo { tol: f64, seed: u64 },
+}
+
+/// A selected configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Selection {
+    pub cfg: RecallConfig,
+    /// Expected recall of the selected configuration (by the chosen
+    /// evaluator).
+    pub expected_recall: f64,
+}
+
+/// Sweep instrumentation (paper A.10.3 reports configs evaluated and
+/// samples drawn).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepStats {
+    pub configs_evaluated: u64,
+    pub mc_samples_drawn: u64,
+}
+
+/// Bucket counts that satisfy the implementation constraints: multiples of
+/// 128 that divide `n`, descending.
+pub fn legal_bucket_counts(n: u64) -> Vec<u64> {
+    let mut out: Vec<u64> = divisors(n as usize)
+        .into_iter()
+        .map(|d| d as u64)
+        .filter(|&d| d % BUCKET_MULTIPLE == 0 && d < n)
+        .collect();
+    out.reverse();
+    out
+}
+
+/// The paper's `select_parameters(input_size, K, recall_target,
+/// allowed_local_K)` with a pluggable recall evaluator. Returns the config
+/// minimizing `B·K′` (ties go to the smaller K′, as in Listing A.10.2) and
+/// sweep statistics.
+pub fn select_with(
+    n: u64,
+    k: u64,
+    recall_target: f64,
+    allowed_local_k: &[u64],
+    eval: RecallEval,
+) -> (Option<Selection>, SweepStats) {
+    assert!(k >= 1 && k <= n);
+    assert!(
+        (0.0..1.0).contains(&recall_target),
+        "recall_target must be in [0, 1)"
+    );
+    let buckets = legal_bucket_counts(n);
+    let mut allowed: Vec<u64> = allowed_local_k.to_vec();
+    allowed.sort_unstable();
+
+    let mut stats = SweepStats::default();
+    let mut best: Option<Selection> = None;
+    let mut best_elements = u64::MAX;
+    let mut rng = match eval {
+        RecallEval::MonteCarlo { seed, .. } => Rng::new(seed),
+        _ => Rng::new(0),
+    };
+
+    for &local_k in &allowed {
+        // Descending bucket counts: recall decreases as B shrinks, so we
+        // can break at the first miss.
+        for &b in &buckets {
+            if b * local_k < k {
+                break; // even smaller B can only be worse
+            }
+            let cfg = RecallConfig::new(n, k, b, local_k);
+            stats.configs_evaluated += 1;
+            let recall = match eval {
+                RecallEval::Exact => expected_recall(&cfg),
+                RecallEval::MonteCarlo { tol, .. } => {
+                    let est = estimate_adaptive(&cfg, tol, 4096, 1 << 24, &mut rng);
+                    stats.mc_samples_drawn += est.num_trials;
+                    est.recall
+                }
+            };
+            if recall < recall_target {
+                break;
+            }
+            let elements = cfg.num_elements();
+            // Strict `<` keeps the smaller K′ on ties (allowed is ascending).
+            if elements < best_elements {
+                best_elements = elements;
+                best = Some(Selection {
+                    cfg,
+                    expected_recall: recall,
+                });
+            }
+        }
+    }
+    (best, stats)
+}
+
+/// Exact-evaluator convenience wrapper returning just the config.
+pub fn select_parameters(
+    n: u64,
+    k: u64,
+    recall_target: f64,
+    allowed_local_k: &[u64],
+) -> Option<RecallConfig> {
+    select_with(n, k, recall_target, allowed_local_k, RecallEval::Exact)
+        .0
+        .map(|s| s.cfg)
+}
+
+/// Monte-Carlo evaluator (the paper's Listing A.10.2 behaviour: tolerance
+/// 0.005 at 3σ).
+pub fn select_parameters_mc(
+    n: u64,
+    k: u64,
+    recall_target: f64,
+    allowed_local_k: &[u64],
+    seed: u64,
+) -> (Option<Selection>, SweepStats) {
+    select_with(
+        n,
+        k,
+        recall_target,
+        allowed_local_k,
+        RecallEval::MonteCarlo { tol: 0.005, seed },
+    )
+}
+
+/// Memoized selection, keyed by `(N, K, recall_target_milli, allowed_set)`.
+/// The paper notes selections are cached and reused across identical layers.
+#[derive(Debug, Default)]
+pub struct ParamCache {
+    map: HashMap<(u64, u64, u64, Vec<u64>), Option<RecallConfig>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ParamCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(
+        &mut self,
+        n: u64,
+        k: u64,
+        recall_target: f64,
+        allowed_local_k: &[u64],
+    ) -> Option<RecallConfig> {
+        let key = (
+            n,
+            k,
+            (recall_target * 1e6).round() as u64,
+            allowed_local_k.to_vec(),
+        );
+        if let Some(v) = self.map.get(&key) {
+            self.hits += 1;
+            return *v;
+        }
+        self.misses += 1;
+        let v = select_parameters(n, k, recall_target, allowed_local_k);
+        self.map.insert(key, v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    #[test]
+    fn legal_buckets_constraints() {
+        let bs = legal_bucket_counts(262_144);
+        assert!(!bs.is_empty());
+        assert!(bs.windows(2).all(|w| w[0] > w[1]), "descending");
+        for &b in &bs {
+            assert_eq!(b % 128, 0);
+            assert_eq!(262_144 % b, 0);
+            assert!(b < 262_144);
+        }
+        // Non-power-of-two N still has legal counts if 128 | some divisor.
+        let bs2 = legal_bucket_counts(430_080); // 2^12 * 105
+        assert!(bs2.contains(&13_440)); // 128 * 105
+        assert!(!bs2.contains(&6_720)); // divisor of N but not 128-aligned
+        // N with no 128-multiple divisors -> empty.
+        assert!(legal_bucket_counts(999).is_empty());
+    }
+
+    /// Section 7.1's headline: for N=262144, K=1024, r=0.95 the sweep picks
+    /// K'=4, B=512 (2048 elements) — an 8x reduction over K'=1 (16384).
+    #[test]
+    fn paper_example_selection() {
+        let sel = select_parameters(262_144, 1024, 0.95, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(sel.local_k, 4);
+        assert_eq!(sel.buckets, 512);
+        let sel_k1 = select_parameters(262_144, 1024, 0.95, &[1]).unwrap();
+        assert_eq!(sel_k1.buckets, 16_384);
+        assert_eq!(sel_k1.num_elements() / sel.num_elements(), 8);
+    }
+
+    /// 99% target from Table 2 discussion: K'=1 needs 65536, K'=4 needs 4096
+    /// (B=1024).
+    #[test]
+    fn paper_99_selection() {
+        let sel_k1 = select_parameters(262_144, 1024, 0.99, &[1]).unwrap();
+        assert_eq!(sel_k1.buckets, 65_536);
+        let sel = select_parameters(262_144, 1024, 0.99, &[1, 2, 3, 4]).unwrap();
+        assert!(sel.local_k >= 3, "selected {sel:?}");
+        assert!(sel.num_elements() <= 4_096);
+    }
+
+    #[test]
+    fn mc_selection_agrees_with_exact_mostly() {
+        let (mc, stats) = select_parameters_mc(262_144, 1024, 0.95, &[1, 2, 3, 4], 7);
+        let exact = select_parameters(262_144, 1024, 0.95, &[1, 2, 3, 4]).unwrap();
+        let mc = mc.unwrap();
+        // MC noise may flip a borderline bucket count by one step; accept
+        // equal or adjacent num_elements.
+        let ratio = mc.cfg.num_elements() as f64 / exact.num_elements() as f64;
+        assert!((0.5..=2.0).contains(&ratio), "mc={mc:?} exact={exact:?}");
+        assert!(stats.mc_samples_drawn > 0);
+        assert!(stats.configs_evaluated > 0);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        // No legal bucket counts.
+        assert_eq!(select_parameters(999, 10, 0.9, &[1, 2]), None);
+    }
+
+    #[test]
+    fn cache_hits() {
+        let mut c = ParamCache::new();
+        let a = c.get(262_144, 1024, 0.95, &[1, 2, 3, 4]);
+        let b = c.get(262_144, 1024, 0.95, &[1, 2, 3, 4]);
+        assert_eq!(a, b);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn prop_selection_meets_target_and_is_minimal() {
+        property("selection meets target & minimal", 25, |g| {
+            let n = *g.choose(&[65_536u64, 262_144, 430_080, 1 << 20]);
+            let k = *g.choose(&[64u64, 128, 512, 1024, 3360]);
+            let r = *g.choose(&[0.8, 0.9, 0.95, 0.99]);
+            let allowed = [1u64, 2, 3, 4];
+            if let Some(sel) = select_parameters(n, k, r, &allowed) {
+                // Meets target.
+                assert!(expected_recall(&sel) >= r, "{sel:?} misses {r}");
+                // Constraints hold.
+                assert_eq!(sel.buckets % 128, 0);
+                assert_eq!(n % sel.buckets, 0);
+                assert!(sel.num_elements() >= k);
+                // Minimality: no legal config with fewer elements meets the
+                // target (exhaustive check).
+                for &kp in &allowed {
+                    for &b in &legal_bucket_counts(n) {
+                        if b * kp < sel.num_elements() && b * kp >= k {
+                            let c = RecallConfig::new(n, k, b, kp);
+                            assert!(
+                                expected_recall(&c) < r,
+                                "better config exists: {c:?} vs {sel:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_never_worse_than_k1_baseline() {
+        // Paper §7.1: "since we always select the best K' in [1,4], our
+        // method never performs worse than the baseline by construction."
+        property("K'<=4 never worse than K'=1", 20, |g| {
+            let n = *g.choose(&[65_536u64, 262_144, 1 << 20]);
+            let k = *g.choose(&[128u64, 1024, 4096]);
+            let r = *g.choose(&[0.9, 0.95, 0.99]);
+            let ours = select_parameters(n, k, r, &[1, 2, 3, 4]);
+            let base = select_parameters(n, k, r, &[1]);
+            match (ours, base) {
+                (Some(o), Some(b)) => {
+                    assert!(o.num_elements() <= b.num_elements());
+                }
+                (None, Some(b)) => panic!("ours infeasible but baseline found {b:?}"),
+                _ => {}
+            }
+        });
+    }
+}

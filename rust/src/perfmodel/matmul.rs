@@ -1,0 +1,201 @@
+//! Matrix-multiplication cost model and the fused-stage-1 analysis
+//! (paper §7.3 and Appendix A.12).
+//!
+//! MIPS multiplies queries `[B, D]` by a database `[D, N]`. Unfused, the
+//! `[B, N]` logits tensor must round-trip through HBM — at MIPS shapes
+//! (D in the low hundreds) that write dominates, so the matmul is
+//! memory-bound with arithmetic intensity `≈ (2/E)·min(B, D)` (A.12).
+//! Fusing stage 1 into the matmul epilogue removes the output write and
+//! adds `(5K′−2)` VPU ops per output element that overlap with MXU work.
+
+use crate::hw::ridge::{estimate_runtime, KernelUsage, RuntimeEstimate};
+use crate::hw::Accelerator;
+
+use super::stage1;
+
+/// A `[b, d] x [d, n]` matmul with `elem_bytes`-sized operands and an
+/// f32 accumulator/output.
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulShape {
+    pub b: u64,
+    pub d: u64,
+    pub n: u64,
+    pub elem_bytes: u64,
+}
+
+impl MatmulShape {
+    pub fn flops(&self) -> f64 {
+        2.0 * self.b as f64 * self.d as f64 * self.n as f64
+    }
+
+    /// Appendix A.12 arithmetic intensity (flops per byte), exact form.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let e = self.elem_bytes as f64;
+        let (b, d, n) = (self.b as f64, self.d as f64, self.n as f64);
+        2.0 * b * d * n / (e * (b * d + d * n + b * n))
+    }
+
+    /// A.12's bound: intensity ≤ (2/E)·min(B, D).
+    pub fn intensity_bound(&self) -> f64 {
+        2.0 / self.elem_bytes as f64 * self.b.min(self.d) as f64
+    }
+}
+
+/// Usage of the plain (unfused) matmul: operands in, f32 logits out.
+pub fn usage_unfused(s: &MatmulShape) -> KernelUsage {
+    let in_bytes = (s.b * s.d + s.d * s.n) * s.elem_bytes;
+    let out_bytes = s.b * s.n * 4;
+    KernelUsage {
+        hbm_bytes: (in_bytes + out_bytes) as f64,
+        vpu_ops: 0.0,
+        mxu_ops: s.flops(),
+    }
+}
+
+/// Usage of the matmul with stage 1 fused into its epilogue: the `[B, N]`
+/// logits never reach HBM; stage-1 state writes are `2·B_buckets·K′` words
+/// per query row.
+pub fn usage_fused(s: &MatmulShape, buckets: u64, local_k: u64) -> KernelUsage {
+    let in_bytes = (s.b * s.d + s.d * s.n) * s.elem_bytes;
+    let state_bytes = 2 * s.b * buckets * local_k * 4;
+    KernelUsage {
+        hbm_bytes: (in_bytes + state_bytes) as f64,
+        vpu_ops: (s.b * s.n * stage1::ops_per_element(local_k)) as f64,
+        mxu_ops: s.flops(),
+    }
+}
+
+pub fn predict_unfused(accel: &Accelerator, s: &MatmulShape) -> RuntimeEstimate {
+    estimate_runtime(accel, &usage_unfused(s))
+}
+
+pub fn predict_fused(
+    accel: &Accelerator,
+    s: &MatmulShape,
+    buckets: u64,
+    local_k: u64,
+) -> RuntimeEstimate {
+    estimate_runtime(accel, &usage_fused(s, buckets, local_k))
+}
+
+/// Fusion headroom (paper §5 / A.10.4): the number of VPU ops available per
+/// output element while the kernel stays bound by its current bottleneck.
+/// For an MXU-bound matmul with contraction D this is
+/// `γ/(π/(2D))` ops per output element.
+pub fn fused_vpu_budget_per_element(accel: &Accelerator, s: &MatmulShape) -> f64 {
+    // The fused kernel must spend at least max(MXU time, operand-read time)
+    // regardless of the epilogue; every VPU cycle inside that window is
+    // free. (The logits write is eliminated by fusion, so it is *not* part
+    // of the floor.)
+    let operand_bytes = ((s.b * s.d + s.d * s.n) * s.elem_bytes) as f64;
+    let floor_s = (operand_bytes / accel.beta_bytes_per_s).max(s.flops() / accel.pi_flops);
+    floor_s * accel.gamma_flops / (s.b as f64 * s.n as f64)
+}
+
+/// Max K′ whose `(5K′−2)` budget fits in the fused headroom.
+pub fn fused_local_k_ceiling(accel: &Accelerator, s: &MatmulShape) -> u64 {
+    let budget = fused_vpu_budget_per_element(accel, s);
+    (((budget + 2.0) / 5.0).floor() as u64).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::ridge::Bottleneck;
+    use crate::hw::{Accelerator, AcceleratorId};
+
+    fn v5e() -> Accelerator {
+        Accelerator::get(AcceleratorId::TpuV5e)
+    }
+
+    /// Paper Table 3 shape: 1024 queries x 1M 128-d vectors, f32.
+    fn mips() -> MatmulShape {
+        MatmulShape {
+            b: 1024,
+            d: 128,
+            n: 1_000_000,
+            elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn a12_intensity_bound_holds() {
+        let s = mips();
+        assert!(s.arithmetic_intensity() <= s.intensity_bound() + 1e-9);
+        // With D << N and B >> D, intensity ≈ (2/E)·D.
+        assert!((s.arithmetic_intensity() - 2.0 / 4.0 * 128.0).abs() < 10.0);
+    }
+
+    /// Table 3: the MIPS matmul takes ~7.3ms on TPUv5e and is memory-bound
+    /// (dominated by the 4 GB logits write).
+    #[test]
+    fn table3_matmul_magnitude() {
+        let est = predict_unfused(&v5e(), &mips());
+        let ms = est.seconds * 1e3;
+        assert_eq!(est.bottleneck, Bottleneck::Memory);
+        assert!(
+            (ms - 7.32).abs() / 7.32 < 0.35,
+            "unfused matmul model {ms:.2}ms vs paper 7.32ms"
+        );
+    }
+
+    /// Fusing removes the logits write: the fused kernel must be faster
+    /// than the unfused matmul alone (paper: 6.55ms fused vs 7.31 + 10.8).
+    #[test]
+    fn fusion_removes_output_write() {
+        let s = mips();
+        let unfused = predict_unfused(&v5e(), &s);
+        let fused = predict_fused(&v5e(), &s, 2048, 4);
+        assert!(
+            fused.seconds < unfused.seconds,
+            "fused {:.2}ms vs unfused {:.2}ms",
+            fused.seconds * 1e3,
+            unfused.seconds * 1e3
+        );
+        // And far below unfused matmul + unfused stage 1 (paper's point).
+        let stage1 = stage1::predict(
+            &v5e(),
+            &stage1::Stage1Shape {
+                batch: 1024,
+                n: 1_000_000,
+                buckets: 2048,
+                local_k: 4,
+                elem_bytes: 4,
+            },
+        );
+        assert!(fused.seconds < unfused.seconds + stage1.seconds);
+    }
+
+    /// §5's observation: with 128-d dot products the headroom is only ~4–8
+    /// ops/element, but larger contractions scale it by D/128.
+    #[test]
+    fn fused_budget_grows_with_contraction() {
+        let small = MatmulShape {
+            b: 4096,
+            d: 128,
+            n: 65_536,
+            elem_bytes: 2,
+        };
+        let large = MatmulShape {
+            b: 4096,
+            d: 1024,
+            n: 65_536,
+            elem_bytes: 2,
+        };
+        let bs = fused_vpu_budget_per_element(&v5e(), &small);
+        let bl = fused_vpu_budget_per_element(&v5e(), &large);
+        assert!(bl > bs * 4.0, "small={bs:.1} large={bl:.1}");
+        assert!(fused_local_k_ceiling(&v5e(), &large) > fused_local_k_ceiling(&v5e(), &small));
+    }
+
+    #[test]
+    fn flops_formula() {
+        let s = MatmulShape {
+            b: 2,
+            d: 3,
+            n: 4,
+            elem_bytes: 4,
+        };
+        assert_eq!(s.flops(), 48.0);
+    }
+}

@@ -1,0 +1,173 @@
+//! Sparse-MLP training cost breakdown (paper Appendix A.13).
+//!
+//! A non-gated Gemma-2-9B-like MLP block with SquaredReLU and Top-K-enforced
+//! activation sparsity: `d_model = 3584`, `d_ff = 24576`, seq 1024, batch 8,
+//! K = 512 (~2%), 95% recall target. The paper reports (fwd+bwd, per
+//! block): dense MLP 33 ms, attention 16 ms, sparse MLP with Chern et al.'s
+//! Top-K 89 ms, with ours 38 ms.
+
+use crate::hw::Accelerator;
+use crate::recall::RecallConfig;
+#[cfg(test)]
+use crate::recall::expected_recall;
+
+use super::{stage1, stage2};
+use crate::recall::bounds;
+
+/// The A.13 workload description.
+#[derive(Debug, Clone, Copy)]
+pub struct MlpWorkload {
+    pub d_model: u64,
+    pub d_ff: u64,
+    pub tokens: u64,
+    pub k: u64,
+    pub recall_target: f64,
+}
+
+impl MlpWorkload {
+    /// Gemma-2-9B non-gated variant from A.13.
+    pub fn gemma2_9b() -> MlpWorkload {
+        MlpWorkload {
+            d_model: 3584,
+            d_ff: 24_576,
+            tokens: 8 * 1024,
+            k: 512,
+            recall_target: 0.95,
+        }
+    }
+}
+
+/// Dense MLP block time (fwd + activation-grad bwd: 4 block matmuls; the
+/// paper's 33 ms corresponds to ~90% MXU utilization of this count).
+pub fn dense_mlp_seconds(accel: &Accelerator, w: &MlpWorkload) -> f64 {
+    let per_matmul = 2.0 * w.d_model as f64 * w.d_ff as f64 * w.tokens as f64;
+    let matmuls = 4.0; // up + down fwd, and their dgrads
+    matmuls * per_matmul / accel.pi_flops
+}
+
+/// Top-K overhead per training step with a given `(B, K′)` config:
+/// one stage-1 pass over the `[tokens, d_ff]` activations + stage-2 sort.
+pub fn topk_overhead_seconds(accel: &Accelerator, w: &MlpWorkload, cfg: &RecallConfig) -> f64 {
+    assert_eq!(cfg.n, w.d_ff);
+    let s1 = stage1::predict(
+        accel,
+        &stage1::Stage1Shape {
+            batch: w.tokens,
+            n: w.d_ff,
+            buckets: cfg.buckets,
+            local_k: cfg.local_k,
+            elem_bytes: 4,
+        },
+    );
+    let s2 = stage2::predict(
+        accel,
+        &stage2::Stage2Shape {
+            batch: w.tokens,
+            n: cfg.num_elements(),
+        },
+    );
+    s1.seconds + s2.seconds
+}
+
+/// Chern et al.'s configuration for this workload: K′=1 with their bucket
+/// formula `B ≈ K/(1−r)`, rounded up to a 128-multiple divisor-friendly B.
+pub fn chern_config(w: &MlpWorkload) -> RecallConfig {
+    let b_needed = bounds::chern_buckets_simplified(w.k, w.recall_target);
+    let mut b = crate::util::round_up(b_needed.ceil() as usize, 128) as u64;
+    // keep B | d_ff when possible (d_ff = 24576 = 192*128)
+    while w.d_ff % b != 0 && b < w.d_ff {
+        b += 128;
+    }
+    RecallConfig::new(w.d_ff, w.k, b.min(w.d_ff), 1)
+}
+
+/// Our configuration: smallest `B·K′` (K′ ≤ 4) meeting the recall target
+/// under the implementation constraints (B multiple of 128 dividing d_ff).
+pub fn ours_config(w: &MlpWorkload) -> RecallConfig {
+    crate::params::select_parameters(w.d_ff, w.k, w.recall_target, &[1, 2, 3, 4])
+        .expect("feasible config exists for the A.13 workload")
+}
+
+/// The full A.13 row set.
+#[derive(Debug, Clone, Copy)]
+pub struct MlpBreakdown {
+    pub dense_ms: f64,
+    pub chern_sparse_ms: f64,
+    pub ours_sparse_ms: f64,
+    pub chern_cfg: RecallConfig,
+    pub ours_cfg: RecallConfig,
+}
+
+pub fn breakdown(accel: &Accelerator, w: &MlpWorkload) -> MlpBreakdown {
+    let dense = dense_mlp_seconds(accel, w);
+    let chern_cfg = chern_config(w);
+    let ours_cfg = ours_config(w);
+    let chern = dense + topk_overhead_seconds(accel, w, &chern_cfg);
+    let ours = dense + topk_overhead_seconds(accel, w, &ours_cfg);
+    MlpBreakdown {
+        dense_ms: dense * 1e3,
+        chern_sparse_ms: chern * 1e3,
+        ours_sparse_ms: ours * 1e3,
+        chern_cfg,
+        ours_cfg,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::AcceleratorId;
+
+    fn v5e() -> Accelerator {
+        Accelerator::get(AcceleratorId::TpuV5e)
+    }
+
+    /// A.13 headline: dense ~33ms, Chern ~89ms (2.7x dense), ours ~38ms
+    /// (+5ms over dense).
+    #[test]
+    fn a13_breakdown_shape() {
+        let w = MlpWorkload::gemma2_9b();
+        let b = breakdown(&v5e(), &w);
+        // Dense model: 4 matmuls at peak = 29.3ms; paper measured 33ms.
+        assert!(
+            (b.dense_ms - 33.0).abs() / 33.0 < 0.2,
+            "dense={:.1}ms",
+            b.dense_ms
+        );
+        // Chern overhead takes the block to ~2.2-3.2x dense.
+        let chern_ratio = b.chern_sparse_ms / b.dense_ms;
+        assert!(
+            chern_ratio > 2.0 && chern_ratio < 3.5,
+            "chern={:.1}ms ratio={chern_ratio:.2}",
+            b.chern_sparse_ms
+        );
+        // Ours: modest overhead (paper: +5ms on 33ms).
+        let ours_overhead = b.ours_sparse_ms - b.dense_ms;
+        assert!(
+            ours_overhead > 0.5 && ours_overhead < 12.0,
+            "ours overhead={ours_overhead:.1}ms"
+        );
+        // And ours is >2x faster than Chern's sparse block.
+        assert!(b.chern_sparse_ms / b.ours_sparse_ms > 2.0);
+    }
+
+    #[test]
+    fn both_configs_meet_recall_target() {
+        let w = MlpWorkload::gemma2_9b();
+        assert!(expected_recall(&chern_config(&w)) >= w.recall_target);
+        assert!(expected_recall(&ours_config(&w)) >= w.recall_target);
+    }
+
+    #[test]
+    fn ours_config_much_smaller() {
+        let w = MlpWorkload::gemma2_9b();
+        let c = chern_config(&w);
+        let o = ours_config(&w);
+        assert!(
+            c.num_elements() as f64 / o.num_elements() as f64 > 3.0,
+            "chern={} ours={}",
+            c.num_elements(),
+            o.num_elements()
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Kernel cost models built on the ridge-point framework (paper §2.3)
+//! that substitute for TPUv5e wall-clock measurements in this CPU-only
+//! environment (see DESIGN.md §Hardware-Adaptation).
+//!
+//! Each model counts a kernel's HBM bytes, VPU ops and MXU ops and applies
+//! `runtime = max(M/β, O_vpu/γ, O_mxu/π)` (eq. 1). Constants are
+//! *calibrated once* against the paper's published TPUv5e tables and then
+//! validated module-wide:
+//!
+//! - stage-1: `(5K′ − 2)` VPU ops per element (paper §6.3) — no free
+//!   constants; reproduces Table 2's "flat until K′≈6" behaviour.
+//! - stage-2: bitonic `sort_key_val` with L(L+1)/2 stages and
+//!   [`stage2::OPS_PER_ELEMENT_STAGE`] VPU ops per element-stage plus a
+//!   fixed launch overhead, fitted to two rows of Table 2 and validated
+//!   against the rest (<10% error).
+//! - matmul: MXU flops + operand/result HBM traffic with the A.12
+//!   arithmetic-intensity analysis for the fused variant.
+
+pub mod matmul;
+pub mod mlp;
+pub mod predict;
+pub mod stage1;
+pub mod stage2;
+pub mod vpu_probe;
+
+pub use predict::{predict_table2_row, predict_table3, Table3Prediction, TwoStageTiming};

@@ -1,0 +1,181 @@
+//! End-to-end runtime predictions for the paper's Tables 2 and 3.
+
+use crate::hw::Accelerator;
+use crate::recall::RecallConfig;
+
+use super::{matmul, stage1, stage2};
+
+/// Predicted timing of an unfused two-stage approximate Top-K call.
+#[derive(Debug, Clone, Copy)]
+pub struct TwoStageTiming {
+    pub stage1_s: f64,
+    pub stage2_s: f64,
+}
+
+impl TwoStageTiming {
+    pub fn total_s(&self) -> f64 {
+        self.stage1_s + self.stage2_s
+    }
+}
+
+/// Predict one row of Table 2: unfused two-stage approximate Top-K on
+/// `[batch, N]` with the given `(B, K′)`.
+pub fn predict_table2_row(
+    accel: &Accelerator,
+    batch: u64,
+    cfg: &RecallConfig,
+) -> TwoStageTiming {
+    let s1 = stage1::predict(
+        accel,
+        &stage1::Stage1Shape {
+            batch,
+            n: cfg.n,
+            buckets: cfg.buckets,
+            local_k: cfg.local_k,
+            elem_bytes: 4,
+        },
+    );
+    let s2 = stage2::predict(
+        accel,
+        &stage2::Stage2Shape {
+            batch,
+            n: cfg.num_elements(),
+        },
+    );
+    TwoStageTiming {
+        stage1_s: s1.seconds,
+        stage2_s: s2.seconds,
+    }
+}
+
+/// One row of Table 3: MIPS (matmul + two-stage Top-K), fused or unfused.
+#[derive(Debug, Clone, Copy)]
+pub struct Table3Prediction {
+    pub matmul_s: f64,
+    /// None when the first stage is fused into the matmul.
+    pub stage1_s: Option<f64>,
+    pub stage2_s: f64,
+}
+
+impl Table3Prediction {
+    pub fn total_s(&self) -> f64 {
+        self.matmul_s + self.stage1_s.unwrap_or(0.0) + self.stage2_s
+    }
+}
+
+/// Predict a Table-3 row. `fused` folds stage 1 into the matmul epilogue.
+pub fn predict_table3(
+    accel: &Accelerator,
+    shape: &matmul::MatmulShape,
+    cfg: &RecallConfig,
+    fused: bool,
+) -> Table3Prediction {
+    assert_eq!(shape.n, cfg.n, "matmul output width must equal Top-K input N");
+    let s2 = stage2::predict(
+        accel,
+        &stage2::Stage2Shape {
+            batch: shape.b,
+            n: cfg.num_elements(),
+        },
+    )
+    .seconds;
+    if fused {
+        let mm = matmul::predict_fused(accel, shape, cfg.buckets, cfg.local_k);
+        Table3Prediction {
+            matmul_s: mm.seconds,
+            stage1_s: None,
+            stage2_s: s2,
+        }
+    } else {
+        let mm = matmul::predict_unfused(accel, shape);
+        let s1 = stage1::predict(
+            accel,
+            &stage1::Stage1Shape {
+                batch: shape.b,
+                n: cfg.n,
+                buckets: cfg.buckets,
+                local_k: cfg.local_k,
+                elem_bytes: 4,
+            },
+        );
+        Table3Prediction {
+            matmul_s: mm.seconds,
+            stage1_s: Some(s1.seconds),
+            stage2_s: s2,
+        }
+    }
+}
+
+/// Exact Top-K (`jax.lax.top_k` stand-in): a full sort of the N-length row.
+pub fn predict_exact_topk(accel: &Accelerator, batch: u64, n: u64) -> f64 {
+    stage2::predict(accel, &stage2::Stage2Shape { batch, n }).seconds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::AcceleratorId;
+
+    fn v5e() -> Accelerator {
+        Accelerator::get(AcceleratorId::TpuV5e)
+    }
+
+    /// Table 2 "Total" column sanity: our K′=4/B=512 config must beat the
+    /// K′=1/B=32768 config (same ~96-99% recall band) by a large factor.
+    #[test]
+    fn table2_totals_favor_generalized() {
+        let a = v5e();
+        let base = predict_table2_row(&a, 8, &RecallConfig::new(262_144, 1024, 32_768, 1));
+        let ours = predict_table2_row(&a, 8, &RecallConfig::new(262_144, 1024, 512, 4));
+        // Paper: 155us vs 20us => ~7.7x.
+        let speedup = base.total_s() / ours.total_s();
+        assert!(speedup > 4.0, "speedup={speedup:.1}");
+        // And the paper's headline 99%-recall comparison: K'=1 B=65536
+        // (326us) vs K'=4 B=1024 (27us) => ~11x.
+        let b99 = predict_table2_row(&a, 8, &RecallConfig::new(262_144, 1024, 65_536, 1));
+        let o99 = predict_table2_row(&a, 8, &RecallConfig::new(262_144, 1024, 1_024, 4));
+        let s99 = b99.total_s() / o99.total_s();
+        assert!(s99 > 7.0, "99% speedup={s99:.1}");
+    }
+
+    /// Table 3 shape: stage-2 (3.51ms) below half the matmul (7.31ms) at
+    /// K′=4, and the fused variant's total ~2x below the unfused.
+    #[test]
+    fn table3_shape() {
+        let a = v5e();
+        let shape = matmul::MatmulShape {
+            b: 1024,
+            d: 128,
+            n: 1_000_000,
+            elem_bytes: 4,
+        };
+        // K'=4 @99% for N=1e6, K=1024: paper uses B*K' = 8192 elements.
+        let cfg = RecallConfig::new(1_000_000, 1024, 2_000, 4);
+        let unfused = predict_table3(&a, &shape, &cfg, false);
+        let fused = predict_table3(&a, &shape, &cfg, true);
+        // Paper: stage 2 (3.51ms) falls below half the measured matmul
+        // (7.31ms); our matmul model is slightly optimistic (5.6ms), so
+        // assert the qualitative claim: stage 2 is no longer the bottleneck.
+        assert!(unfused.stage2_s < unfused.matmul_s * 0.7);
+        assert!(fused.total_s() < unfused.total_s());
+        // Paper: exact=594ms, approx_max_k=127ms, ours K'=4 unfused=22ms,
+        // fused=10ms. Check ordering and rough factors.
+        let exact = predict_exact_topk(&a, 1024, 1_000_000) + unfused.matmul_s;
+        assert!(exact / unfused.total_s() > 10.0, "exact/unfused={}", exact / unfused.total_s());
+        assert!(exact / fused.total_s() > 20.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul output width")]
+    fn mismatched_shapes_rejected() {
+        let a = v5e();
+        let shape = matmul::MatmulShape {
+            b: 8,
+            d: 128,
+            n: 1024,
+            elem_bytes: 4,
+        };
+        let cfg = RecallConfig::new(2048, 16, 128, 1);
+        predict_table3(&a, &shape, &cfg, false);
+    }
+}

@@ -1,0 +1,128 @@
+//! First-stage (partial reduce) cost model — paper §6.3 and §7.2.
+//!
+//! The online top-K′ update costs `5K′ − 2` VPU ops per input element
+//! (1 compare + 2 selects for the insert, and 1 compare + 4 selects per
+//! bubble position × (K′−1)). The unfused kernel streams the whole input
+//! from HBM once and writes the 2·B·K′ state words back.
+
+use crate::hw::ridge::{estimate_runtime, KernelUsage, RuntimeEstimate};
+use crate::hw::Accelerator;
+
+/// VPU operations per input element for the online top-K′ update
+/// (paper §6.3: "(5K′ − 2) operations").
+pub fn ops_per_element(local_k: u64) -> u64 {
+    assert!(local_k >= 1);
+    5 * local_k - 2
+}
+
+/// Shape of an unfused stage-1 invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct Stage1Shape {
+    pub batch: u64,
+    /// Reduction length N.
+    pub n: u64,
+    pub buckets: u64,
+    pub local_k: u64,
+    /// Element size in bytes (4 for f32/i32 compute; the paper promotes
+    /// everything to 32-bit because Mosaic lacks narrow compares).
+    pub elem_bytes: u64,
+}
+
+/// Subsystem usage of the unfused stage-1 kernel.
+pub fn usage(s: &Stage1Shape) -> KernelUsage {
+    let in_bytes = s.batch * s.n * s.elem_bytes;
+    // Values + indices state written once at the end.
+    let out_bytes = 2 * s.batch * s.buckets * s.local_k * 4;
+    KernelUsage {
+        hbm_bytes: (in_bytes + out_bytes) as f64,
+        vpu_ops: (s.batch * s.n * ops_per_element(s.local_k)) as f64,
+        mxu_ops: 0.0,
+    }
+}
+
+/// Fixed kernel launch overhead (seconds) observed on TPUv5e: Table 2's
+/// stage-1 times have a ~2–3 µs floor beyond the pure streaming time.
+pub const LAUNCH_OVERHEAD_S: f64 = 2.5e-6;
+
+/// Predicted wall-clock of the unfused stage-1 kernel.
+pub fn predict(accel: &Accelerator, s: &Stage1Shape) -> RuntimeEstimate {
+    let mut est = estimate_runtime(accel, &usage(s));
+    est.seconds += LAUNCH_OVERHEAD_S;
+    est
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{Accelerator, AcceleratorId};
+    use crate::hw::ridge::Bottleneck;
+
+    fn v5e() -> Accelerator {
+        Accelerator::get(AcceleratorId::TpuV5e)
+    }
+
+    fn shape(local_k: u64, buckets: u64) -> Stage1Shape {
+        Stage1Shape {
+            batch: 8,
+            n: 262_144,
+            buckets,
+            local_k,
+            elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn ops_formula() {
+        assert_eq!(ops_per_element(1), 3); // Chern et al.'s 3-op budget
+        assert_eq!(ops_per_element(4), 18);
+        assert_eq!(ops_per_element(6), 28);
+    }
+
+    /// Table 2: stage-1 latency is ~12–16 µs and flat from K′=1 to K′=6
+    /// (memory-bound), then grows (VPU-bound): 23 µs at K′=12, 29 µs at 16.
+    #[test]
+    fn table2_stage1_shape() {
+        let t = |kp, b| predict(&v5e(), &shape(kp, b)).seconds * 1e6;
+        let t1 = t(1, 32_768);
+        let t4 = t(4, 1_024);
+        let t6 = t(6, 512);
+        let t12 = t(12, 128);
+        let t16 = t(16, 128);
+        // Flat region: within 20% of each other.
+        assert!((t4 - t1).abs() / t1 < 0.20, "t1={t1} t4={t4}");
+        assert!((t6 - t1).abs() / t1 < 0.25, "t1={t1} t6={t6}");
+        // Paper magnitudes (µs), generous 35% tolerance for the model.
+        for (got, want) in [(t1, 13.0), (t4, 13.0), (t12, 23.0), (t16, 29.0)] {
+            assert!(
+                (got - want).abs() / want < 0.35,
+                "got {got:.1}us want ~{want}us"
+            );
+        }
+        // Growth region is monotone.
+        assert!(t12 > t6 * 1.3);
+        assert!(t16 > t12 * 1.15);
+    }
+
+    #[test]
+    fn bottleneck_transitions_at_ridge_point() {
+        // Memory-bound through K'=6, VPU-bound from K'=7 on TPUv5e.
+        for kp in 1..=6 {
+            let est = predict(&v5e(), &shape(kp, 512));
+            assert_eq!(est.bottleneck, Bottleneck::Memory, "K'={kp}");
+        }
+        for kp in 7..=16 {
+            let est = predict(&v5e(), &shape(kp, 128));
+            assert_eq!(est.bottleneck, Bottleneck::Vpu, "K'={kp}");
+        }
+    }
+
+    #[test]
+    fn usage_scales_linearly_in_batch_and_n() {
+        let s1 = shape(2, 1024);
+        let mut s2 = s1;
+        s2.batch *= 2;
+        let u1 = usage(&s1);
+        let u2 = usage(&s2);
+        assert!((u2.vpu_ops / u1.vpu_ops - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,174 @@
+//! Vector-throughput estimation probe (paper Appendix A.1, Figure 4).
+//!
+//! The paper times two VPU-bound kernel families — a Fibonacci chain of
+//! dependent adds and repeated squaring ("fast exponentiation") — over a
+//! large array while sweeping the op count per element, then fits
+//! `time = num_ops/throughput + overhead` on the linear (compute-bound)
+//! region; the inverse slope estimates peak VPU throughput.
+//!
+//! Here the same probe runs on the host CPU (our stand-in vector unit) and
+//! doubles as the calibration source for [`AcceleratorId::HostCpu`].
+
+use std::time::Instant;
+
+/// One probe sample: ops per element vs measured seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbePoint {
+    pub ops_per_element: u64,
+    pub seconds: f64,
+}
+
+/// Result of a probe run: raw points + fitted throughput.
+#[derive(Debug, Clone)]
+pub struct ProbeResult {
+    pub points: Vec<ProbePoint>,
+    /// Fitted ops/second (inverse slope of the linear region).
+    pub throughput_ops_per_s: f64,
+    /// Fitted fixed overhead per pass, seconds.
+    pub overhead_s: f64,
+    /// Memory-streaming bandwidth implied by the flat region, bytes/s.
+    pub bandwidth_bytes_per_s: f64,
+}
+
+/// Fibonacci-chain kernel: per element, `steps` dependent f32 additions.
+/// Matches the paper's `fibonacci(x, y, n)` probe.
+fn fibonacci_pass(x: &[f32], y: &[f32], out: &mut [f32], steps: u64) {
+    for i in 0..out.len() {
+        let mut a = x[i];
+        let mut b = y[i];
+        for _ in 0..steps {
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        out[i] = b;
+    }
+}
+
+/// Fast-exponentiation kernel: per element, `steps` dependent squarings.
+fn fastexp_pass(x: &[f32], out: &mut [f32], steps: u64) {
+    for i in 0..out.len() {
+        let mut z = x[i];
+        for _ in 0..steps {
+            z = z * z;
+        }
+        out[i] = z;
+    }
+}
+
+/// Which of the two paper kernels to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeKernel {
+    Fibonacci,
+    FastExponentiation,
+}
+
+/// Run the probe: time `kernel` over `elements` f32 values for each step
+/// count in `steps`, repeating `reps` times and keeping the minimum.
+pub fn run_probe(
+    kernel: ProbeKernel,
+    elements: usize,
+    steps: &[u64],
+    reps: usize,
+) -> ProbeResult {
+    let x: Vec<f32> = (0..elements).map(|i| (i % 97) as f32 * 1e-3 + 0.5).collect();
+    let y: Vec<f32> = (0..elements).map(|i| (i % 89) as f32 * 1e-3 + 0.25).collect();
+    let mut out = vec![0f32; elements];
+
+    let mut points = Vec::with_capacity(steps.len());
+    for &s in steps {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            match kernel {
+                ProbeKernel::Fibonacci => fibonacci_pass(&x, &y, &mut out, s),
+                ProbeKernel::FastExponentiation => fastexp_pass(&x, &mut out, s),
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            best = best.min(dt);
+        }
+        // Defeat dead-code elimination.
+        std::hint::black_box(&out);
+        points.push(ProbePoint {
+            ops_per_element: s,
+            seconds: best,
+        });
+    }
+    fit(points, elements)
+}
+
+/// Fit `time = ops/throughput + overhead` on the linear region (paper's
+/// model). The linear region is taken as the upper half of the step sweep,
+/// where compute dominates the memory stream.
+pub fn fit(points: Vec<ProbePoint>, elements: usize) -> ProbeResult {
+    assert!(points.len() >= 4, "need >= 4 probe points");
+    let half = points.len() / 2;
+    let lin = &points[half..];
+    // Least squares on (total_ops, seconds).
+    let n = lin.len() as f64;
+    let xs: Vec<f64> = lin
+        .iter()
+        .map(|p| p.ops_per_element as f64 * elements as f64)
+        .collect();
+    let ys: Vec<f64> = lin.iter().map(|p| p.seconds).collect();
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let intercept = (sy - slope * sx) / n;
+    // Flat region estimates the streaming bandwidth (3 arrays x 4 bytes).
+    let flat_s = points[0].seconds;
+    let bytes = 3.0 * elements as f64 * 4.0;
+    ProbeResult {
+        points,
+        throughput_ops_per_s: 1.0 / slope.max(1e-18),
+        overhead_s: intercept.max(0.0),
+        bandwidth_bytes_per_s: bytes / flat_s.max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_synthetic_line() {
+        // time = ops/1e9 + 1e-4
+        let elements = 1000;
+        let points: Vec<ProbePoint> = (1..=16)
+            .map(|s| ProbePoint {
+                ops_per_element: s * 8,
+                seconds: (s * 8) as f64 * elements as f64 / 1e9 + 1e-4,
+            })
+            .collect();
+        let r = fit(points, elements);
+        assert!(
+            (r.throughput_ops_per_s - 1e9).abs() / 1e9 < 1e-6,
+            "thr={}",
+            r.throughput_ops_per_s
+        );
+        assert!((r.overhead_s - 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn probe_runs_and_scales() {
+        // Small but real run: time must grow with step count in the
+        // compute-bound region.
+        let steps: Vec<u64> = vec![1, 2, 4, 8, 16, 32, 64, 128];
+        let r = run_probe(ProbeKernel::Fibonacci, 1 << 14, &steps, 2);
+        assert!(r.throughput_ops_per_s > 1e7, "thr={}", r.throughput_ops_per_s);
+        assert!(r.throughput_ops_per_s < 1e12);
+        let t_small = r.points[2].seconds;
+        let t_big = r.points.last().unwrap().seconds;
+        assert!(t_big > t_small, "{t_big} vs {t_small}");
+    }
+
+    #[test]
+    fn fastexp_probe_runs() {
+        let steps: Vec<u64> = vec![1, 2, 4, 8, 16, 32];
+        let r = run_probe(ProbeKernel::FastExponentiation, 1 << 13, &steps, 2);
+        assert!(r.throughput_ops_per_s.is_finite());
+        assert!(r.bandwidth_bytes_per_s > 0.0);
+    }
+}

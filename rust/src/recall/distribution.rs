@@ -1,0 +1,151 @@
+//! The full error distribution of recall — the paper's remaining open
+//! problem beyond the variance ("understanding the variability induced by
+//! collisions could yield a more complete picture").
+//!
+//! Three tools:
+//!
+//! - [`recall_pmf_mc`]: the Monte-Carlo PMF of recall over exact positional
+//!   simulations of the joint bucket distribution (recall is supported on
+//!   the lattice `1 − j/K`, so a PMF — not a density — is the right
+//!   object).
+//! - [`tail_bound`]: a distribution-free lower-tail bound via
+//!   Chebyshev/Cantelli on the exact mean ([`expected_recall`]) and exact
+//!   variance ([`recall_variance`]): `P[recall ≤ E − t] ≤ σ²/(σ² + t²)`.
+//! - [`quantile_mc`]: MC quantiles, cross-checked against the bound.
+
+use super::exact::{expected_recall, RecallConfig};
+use super::variance::recall_variance;
+use crate::util::Rng;
+
+/// Empirical PMF of recall: `(support value, probability)` pairs, ascending.
+pub fn recall_pmf_mc(
+    cfg: &RecallConfig,
+    trials: u64,
+    rng: &mut Rng,
+) -> Vec<(f64, f64)> {
+    let n = cfg.n as usize;
+    let k = cfg.k as usize;
+    let b = cfg.buckets as usize;
+    let kp = cfg.local_k;
+    let mut counts = std::collections::BTreeMap::<u64, u64>::new();
+    let mut bucket_counts = vec![0u32; b];
+    for _ in 0..trials {
+        bucket_counts.fill(0);
+        for pos in rng.sample_distinct(n, k) {
+            bucket_counts[pos % b] += 1;
+        }
+        let excess: u64 = bucket_counts
+            .iter()
+            .map(|&c| (c as u64).saturating_sub(kp))
+            .sum();
+        *counts.entry(excess).or_default() += 1;
+    }
+    counts
+        .into_iter()
+        .rev() // larger excess = smaller recall; emit ascending recall
+        .map(|(excess, c)| {
+            (
+                1.0 - excess as f64 / cfg.k as f64,
+                c as f64 / trials as f64,
+            )
+        })
+        .collect()
+}
+
+/// Cantelli lower-tail bound: `P[recall ≤ E[recall] − t]` for `t > 0`,
+/// using the exact mean and variance (no simulation).
+pub fn tail_bound(cfg: &RecallConfig, t: f64) -> f64 {
+    assert!(t > 0.0);
+    let var = recall_variance(cfg);
+    (var / (var + t * t)).min(1.0)
+}
+
+/// Monte-Carlo quantile of recall (q in [0,1]: q=0.01 is the 1%-worst run).
+pub fn quantile_mc(cfg: &RecallConfig, q: f64, trials: u64, rng: &mut Rng) -> f64 {
+    assert!((0.0..=1.0).contains(&q));
+    let pmf = recall_pmf_mc(cfg, trials, rng);
+    let mut cum = 0.0;
+    for &(value, p) in &pmf {
+        cum += p;
+        if cum >= q {
+            return value;
+        }
+    }
+    pmf.last().map(|&(v, _)| v).unwrap_or(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RecallConfig {
+        RecallConfig::new(15_360, 480, 512, 1)
+    }
+
+    #[test]
+    fn pmf_is_normalized_and_on_lattice() {
+        let mut rng = Rng::new(3);
+        let pmf = recall_pmf_mc(&cfg(), 2_000, &mut rng);
+        let total: f64 = pmf.iter().map(|&(_, p)| p).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        for w in pmf.windows(2) {
+            assert!(w[0].0 < w[1].0, "ascending support");
+        }
+        // Lattice: values are 1 - j/K.
+        for &(v, _) in &pmf {
+            let j = (1.0 - v) * 480.0;
+            assert!((j - j.round()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pmf_mean_matches_exact() {
+        let mut rng = Rng::new(5);
+        let pmf = recall_pmf_mc(&cfg(), 8_000, &mut rng);
+        let mean: f64 = pmf.iter().map(|&(v, p)| v * p).sum();
+        let exact = expected_recall(&cfg());
+        assert!((mean - exact).abs() < 3e-3, "mc mean {mean} vs exact {exact}");
+    }
+
+    #[test]
+    fn tail_bound_holds_empirically() {
+        let mut rng = Rng::new(7);
+        let c = cfg();
+        let e = expected_recall(&c);
+        for t in [0.01, 0.02, 0.04] {
+            let bound = tail_bound(&c, t);
+            // Empirical tail from the PMF.
+            let pmf = recall_pmf_mc(&c, 6_000, &mut rng);
+            let emp: f64 = pmf
+                .iter()
+                .filter(|&&(v, _)| v <= e - t)
+                .map(|&(_, p)| p)
+                .sum();
+            assert!(
+                emp <= bound + 0.02,
+                "t={t}: empirical {emp} exceeds bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bracket_mean() {
+        let mut rng = Rng::new(11);
+        let c = cfg();
+        let q01 = quantile_mc(&c, 0.01, 6_000, &mut rng);
+        let q50 = quantile_mc(&c, 0.50, 6_000, &mut rng);
+        let q99 = quantile_mc(&c, 0.99, 6_000, &mut rng);
+        assert!(q01 <= q50 && q50 <= q99);
+        let e = expected_recall(&c);
+        assert!(q01 < e && e < q99, "{q01} {e} {q99}");
+    }
+
+    #[test]
+    fn degenerate_distribution_when_capacity_suffices() {
+        let mut rng = Rng::new(13);
+        let c = RecallConfig::new(1024, 16, 256, 4); // K' * B >> K
+        let pmf = recall_pmf_mc(&c, 500, &mut rng);
+        assert_eq!(pmf.len(), 1);
+        assert_eq!(pmf[0], (1.0, 1.0));
+    }
+}

@@ -1,0 +1,232 @@
+//! Exact expected recall (paper Theorem 1).
+//!
+//! `E[recall] = 1 − (B/K) · E[max(0, X − K′)]` with
+//! `X ~ Hypergeometric(N, K, N/B)`. This is the paper's *exact* probabilistic
+//! model (in contrast to Key et al. (2024)'s binomial approximation and
+//! Chern et al. (2022)'s birthday-problem bound).
+
+use super::hypergeom::Hypergeometric;
+
+/// Algorithm configuration for recall purposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecallConfig {
+    /// Array length N.
+    pub n: u64,
+    /// Number of top elements requested, K.
+    pub k: u64,
+    /// Number of buckets B (must divide N).
+    pub buckets: u64,
+    /// Per-bucket selection count K′ (`local_k` in the paper's code).
+    pub local_k: u64,
+}
+
+impl RecallConfig {
+    pub fn new(n: u64, k: u64, buckets: u64, local_k: u64) -> Self {
+        assert!(n > 0 && k > 0 && buckets > 0 && local_k > 0);
+        assert!(k <= n, "K={k} must be <= N={n}");
+        assert!(
+            n % buckets == 0,
+            "buckets={buckets} must divide N={n} (paper implementation constraint)"
+        );
+        assert!(buckets <= n);
+        RecallConfig {
+            n,
+            k,
+            buckets,
+            local_k,
+        }
+    }
+
+    /// Bucket size N/B.
+    pub fn bucket_size(&self) -> u64 {
+        self.n / self.buckets
+    }
+
+    /// Number of first-stage output elements B·K′ (second-stage input size).
+    pub fn num_elements(&self) -> u64 {
+        self.buckets * self.local_k
+    }
+
+    /// The marginal per-bucket distribution of true-top-K counts.
+    pub fn bucket_distribution(&self) -> Hypergeometric {
+        Hypergeometric::new(self.n, self.k, self.bucket_size())
+    }
+}
+
+/// Expected number of excess collisions `B · E[max(0, X − K′)]`.
+pub fn expected_excess_collisions(cfg: &RecallConfig) -> f64 {
+    cfg.buckets as f64 * cfg.bucket_distribution().expected_excess(cfg.local_k)
+}
+
+/// Exact expected recall per Theorem 1. Clamped to [0, 1].
+pub fn expected_recall(cfg: &RecallConfig) -> f64 {
+    let r = 1.0 - expected_excess_collisions(cfg) / cfg.k as f64;
+    r.clamp(0.0, 1.0)
+}
+
+/// Smallest B (over the given candidate list, ascending) achieving the
+/// target expected recall, or None. Candidates must be divisors of N.
+pub fn min_buckets_for_recall(
+    n: u64,
+    k: u64,
+    local_k: u64,
+    target: f64,
+    candidates: &[u64],
+) -> Option<u64> {
+    for &b in candidates {
+        if b > n || n % b != 0 {
+            continue;
+        }
+        let cfg = RecallConfig::new(n, k, b, local_k);
+        if expected_recall(&cfg) >= target {
+            return Some(b);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    #[test]
+    fn perfect_recall_when_bucket_capacity_suffices() {
+        // If K' >= bucket size, nothing can be dropped.
+        let cfg = RecallConfig::new(1024, 64, 128, 8); // bucket size 8 = K'
+        assert!((expected_recall(&cfg) - 1.0).abs() < 1e-12);
+        // If K' >= K, nothing can be dropped either.
+        let cfg = RecallConfig::new(1024, 4, 128, 4);
+        assert!((expected_recall(&cfg) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_bucket_recall() {
+        // B=1: everything is in one bucket; recall = K'/K for K' < K.
+        let cfg = RecallConfig::new(1024, 16, 1, 4);
+        assert!((expected_recall(&cfg) - 0.25).abs() < 1e-10);
+        let cfg = RecallConfig::new(1024, 16, 1, 16);
+        assert!((expected_recall(&cfg) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recall_monotone_in_buckets() {
+        // More buckets => fewer collisions => recall non-decreasing.
+        let mut prev = 0.0;
+        for b in [64u64, 128, 256, 512, 1024, 2048] {
+            let cfg = RecallConfig::new(262_144, 1024, b, 1);
+            let r = expected_recall(&cfg);
+            assert!(r >= prev - 1e-12, "B={b}: {r} < {prev}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn recall_monotone_in_local_k() {
+        let mut prev = 0.0;
+        for kp in 1..=8u64 {
+            let cfg = RecallConfig::new(262_144, 1024, 512, kp);
+            let r = expected_recall(&cfg);
+            assert!(r >= prev - 1e-12, "K'={kp}: {r} < {prev}");
+            prev = r;
+        }
+    }
+
+    /// Paper Table 2 (left): exact expected recall for selecting top-1024
+    /// from 262,144 elements. The paper reports Monte-Carlo means ±std; our
+    /// exact values must land inside those intervals.
+    #[test]
+    fn table2_recall_values() {
+        let cases: &[(u64, u64, f64, f64)] = &[
+            // (local_k, buckets, paper_recall, paper_std)
+            (1, 131_072, 0.998, 0.001),
+            (1, 65_536, 0.992, 0.002),
+            (1, 32_768, 0.987, 0.005),
+            (1, 16_384, 0.972, 0.006),
+            (1, 8_192, 0.942, 0.008),
+            (2, 4_096, 0.991, 0.004),
+            (2, 2_048, 0.968, 0.007),
+            (3, 2_048, 0.996, 0.003),
+            (3, 1_024, 0.977, 0.006),
+            (4, 1_024, 0.996, 0.003),
+            (4, 512, 0.963, 0.008),
+            (5, 512, 0.989, 0.005),
+            (6, 512, 0.997, 0.003),
+            (6, 256, 0.951, 0.009),
+            // Paper's (8, 512) row reports 0.992, but the paper's own
+            // hypergeometric model gives 0.99987 (mean 2 specials/bucket,
+            // P[X>8] ~ 2e-4): inconsistent with every neighbouring row
+            // (K'=6,B=512 -> 0.997; K'=10,B=256 -> 0.999). We treat it as a
+            // typo and exclude it; see EXPERIMENTS.md.
+            (10, 256, 0.999, 0.002),
+            (12, 128, 0.984, 0.007),
+            (16, 128, 0.999, 0.002),
+        ];
+        for &(local_k, buckets, want, tol) in cases {
+            let cfg = RecallConfig::new(262_144, 1024, buckets, local_k);
+            let got = expected_recall(&cfg);
+            assert!(
+                (got - want).abs() <= tol + 0.002,
+                "K'={local_k} B={buckets}: got {got:.4}, paper {want:.3}±{tol:.3}"
+            );
+        }
+    }
+
+    /// Paper Section 7.1: 95% recall for K=1024, N=262144 needs 16384
+    /// elements at K'=1 but only 2048 at K'=4 (8x reduction).
+    #[test]
+    fn section_7_1_reduction_example() {
+        let r1 = expected_recall(&RecallConfig::new(262_144, 1024, 16_384, 1));
+        assert!(r1 >= 0.95, "K'=1 B=16384: {r1}");
+        let r1_smaller = expected_recall(&RecallConfig::new(262_144, 1024, 8_192, 1));
+        assert!(r1_smaller < 0.95, "K'=1 B=8192 should miss 95%: {r1_smaller}");
+        let r4 = expected_recall(&RecallConfig::new(262_144, 1024, 512, 4));
+        assert!(r4 >= 0.95, "K'=4 B=512 (2048 elements): {r4}");
+    }
+
+    #[test]
+    fn min_buckets_search() {
+        let candidates: Vec<u64> = (7..=18).map(|e| 1u64 << e).collect();
+        let b = min_buckets_for_recall(262_144, 1024, 1, 0.95, &candidates).unwrap();
+        assert_eq!(b, 16_384);
+        let b4 = min_buckets_for_recall(262_144, 1024, 4, 0.95, &candidates).unwrap();
+        assert_eq!(b4, 512);
+        // Impossible target with tiny candidates only.
+        assert_eq!(min_buckets_for_recall(262_144, 1024, 1, 0.9999, &[128]), None);
+    }
+
+    #[test]
+    fn prop_recall_in_unit_interval_and_excess_consistent() {
+        property("recall in [0,1]", 80, |g| {
+            let n = *g.choose(&[4096u64, 65_536, 262_144, 430_080]);
+            let divs = crate::util::divisors(n as usize);
+            let b = *g.choose(&divs) as u64;
+            if b == 0 {
+                return;
+            }
+            let k = (g.usize_in(1..=2048) as u64).min(n);
+            let local_k = g.usize_in(1..=16) as u64;
+            let cfg = RecallConfig::new(n, k, b, local_k);
+            let r = expected_recall(&cfg);
+            assert!((0.0..=1.0).contains(&r));
+            let excess = expected_excess_collisions(&cfg);
+            assert!(excess >= -1e-9 && excess <= k as f64 + 1e-9);
+        });
+    }
+
+    #[test]
+    fn prop_recall_exact_when_num_elements_ge_n() {
+        property("B*K' >= N implies recall 1", 40, |g| {
+            let n = *g.choose(&[1024u64, 4096, 16_384]);
+            let b = *g.choose(&[256u64, 512, 1024]);
+            if n % b != 0 {
+                return;
+            }
+            let bucket = n / b;
+            let local_k = bucket; // selects the whole bucket
+            let k = g.usize_in(1..=n as usize) as u64;
+            let cfg = RecallConfig::new(n, k, b, local_k);
+            assert!((expected_recall(&cfg) - 1.0).abs() < 1e-12);
+        });
+    }
+}

@@ -1,0 +1,350 @@
+//! Hypergeometric distribution machinery in log space.
+//!
+//! The paper's exact recall model (Section 6.2 / Theorem 1) reduces to
+//! moments of `X ~ Hypergeometric(N, K, N/B)`: the number of "special"
+//! (true top-K) elements landing in one bucket of size N/B. Everything is
+//! computed with log-gamma for numerical stability at the paper's scales
+//! (N up to 4e9 in Figure 3).
+
+/// ln Γ(x) via the Lanczos approximation (|error| < 1e-13 for x > 0).
+pub fn ln_gamma(x: f64) -> f64 {
+    assert!(x > 0.0, "ln_gamma domain: x > 0, got {x}");
+    // g = 7, n = 9 Lanczos coefficients.
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// ln C(n, k); `-inf` when k < 0 or k > n.
+pub fn ln_choose(n: u64, k: i64) -> f64 {
+    if k < 0 || k as u64 > n {
+        return f64::NEG_INFINITY;
+    }
+    let k = k as u64;
+    if k == 0 || k == n {
+        return 0.0;
+    }
+    ln_gamma(n as f64 + 1.0) - ln_gamma(k as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0)
+}
+
+/// Hypergeometric(N, K, n): draws n from a population of N with K successes.
+#[derive(Debug, Clone, Copy)]
+pub struct Hypergeometric {
+    /// Population size (array length N).
+    pub population: u64,
+    /// Number of success states (the K true top elements).
+    pub successes: u64,
+    /// Number of draws (bucket size N/B).
+    pub draws: u64,
+}
+
+impl Hypergeometric {
+    pub fn new(population: u64, successes: u64, draws: u64) -> Self {
+        assert!(successes <= population, "K <= N required");
+        assert!(draws <= population, "draws <= N required");
+        Hypergeometric {
+            population,
+            successes,
+            draws,
+        }
+    }
+
+    /// Support of X: [max(0, n+K-N), min(K, n)].
+    pub fn support(&self) -> (u64, u64) {
+        let lo = (self.draws + self.successes).saturating_sub(self.population);
+        let hi = self.successes.min(self.draws);
+        (lo, hi)
+    }
+
+    /// ln P[X = r].
+    pub fn ln_pmf(&self, r: u64) -> f64 {
+        let (lo, hi) = self.support();
+        if r < lo || r > hi {
+            return f64::NEG_INFINITY;
+        }
+        ln_choose(self.successes, r as i64)
+            + ln_choose(
+                self.population - self.successes,
+                self.draws as i64 - r as i64,
+            )
+            - ln_choose(self.population, self.draws as i64)
+    }
+
+    /// P[X = r].
+    pub fn pmf(&self, r: u64) -> f64 {
+        self.ln_pmf(r).exp()
+    }
+
+    /// E[X] = n·K/N.
+    pub fn mean(&self) -> f64 {
+        self.draws as f64 * self.successes as f64 / self.population as f64
+    }
+
+    /// Variance of X.
+    pub fn variance(&self) -> f64 {
+        let (nn, kk, n) = (
+            self.population as f64,
+            self.successes as f64,
+            self.draws as f64,
+        );
+        if nn <= 1.0 {
+            return 0.0;
+        }
+        n * (kk / nn) * (1.0 - kk / nn) * (nn - n) / (nn - 1.0)
+    }
+
+    /// E[max(0, X − t)]: the expected number of *excess* successes beyond a
+    /// threshold t — the paper's per-bucket excess-collision count with
+    /// t = K′.
+    ///
+    /// Two evaluation strategies keep this O(t) / O(σ) instead of
+    /// O(|support|) (Figure 3 sweeps N up to 2²⁶ with K up to 25%·N, where
+    /// the support has millions of points):
+    ///
+    /// - when t is below the mean, use the identity
+    ///   `E[max(0, X−t)] = (E[X] − t) + E[max(0, t−X)]` whose complementary
+    ///   sum has at most t terms;
+    /// - otherwise sum the tail directly, stopping once past
+    ///   mean + 16σ with a negligible running term.
+    pub fn expected_excess(&self, t: u64) -> f64 {
+        let (lo, hi) = self.support();
+        if t >= hi {
+            return 0.0;
+        }
+        let mean = self.mean();
+        if (t as f64) < mean && t <= 4096 {
+            // Complementary short sum: r in [lo, t).
+            let mut acc = mean - t as f64;
+            for r in lo..t {
+                acc += (t - r) as f64 * self.pmf(r);
+            }
+            return acc.max(0.0);
+        }
+        // Direct tail sum with a far-tail cutoff.
+        let sigma = self.variance().sqrt();
+        let cutoff = (mean + 16.0 * sigma + 8.0).ceil() as u64;
+        let start = t.saturating_add(1).max(lo);
+        let mut acc = 0.0f64;
+        for r in start..=hi {
+            let p = self.pmf(r);
+            acc += (r - t) as f64 * p;
+            if r > cutoff && (r - t) as f64 * p < acc * 1e-15 + 1e-300 {
+                break;
+            }
+        }
+        acc
+    }
+
+    /// P[X = 0] (used by the Theorem-1 K′=1 closed form).
+    pub fn p_zero(&self) -> f64 {
+        self.pmf(0)
+    }
+
+    /// Draw one sample (inverse-CDF over the support; fine for our sizes
+    /// because the support is at most min(K, N/B) long and we start the scan
+    /// at the mode's side with cumulative accumulation).
+    pub fn sample(&self, rng: &mut crate::util::Rng) -> u64 {
+        let u = rng.next_f64();
+        let (lo, hi) = self.support();
+        let mut cum = 0.0;
+        for r in lo..=hi {
+            cum += self.pmf(r);
+            if u < cum {
+                return r;
+            }
+        }
+        hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    fn exact_choose(n: u64, k: u64) -> f64 {
+        // Only safe for small n; used to validate ln_choose.
+        let mut acc = 1.0f64;
+        for i in 0..k {
+            acc = acc * (n - i) as f64 / (i + 1) as f64;
+        }
+        acc
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0) - 0.0).abs() < 1e-12);
+        assert!((ln_gamma(2.0) - 0.0).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-11); // Γ(5)=4!
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-11);
+        // Large argument against Stirling-dominated value Γ(171) finite check
+        assert!(ln_gamma(1e6).is_finite());
+    }
+
+    #[test]
+    fn ln_choose_matches_exact_small() {
+        for n in 0..=30u64 {
+            for k in 0..=n {
+                let got = ln_choose(n, k as i64).exp();
+                let want = exact_choose(n, k);
+                assert!(
+                    (got - want).abs() / want.max(1.0) < 1e-10,
+                    "C({n},{k}): got {got} want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ln_choose_out_of_range() {
+        assert_eq!(ln_choose(5, -1), f64::NEG_INFINITY);
+        assert_eq!(ln_choose(5, 6), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn pmf_sums_to_one() {
+        for &(n, k, d) in &[(100u64, 10u64, 20u64), (262_144, 1024, 256), (50, 50, 25)] {
+            let h = Hypergeometric::new(n, k, d);
+            let (lo, hi) = h.support();
+            let total: f64 = (lo..=hi).map(|r| h.pmf(r)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "sum={total} for ({n},{k},{d})");
+        }
+    }
+
+    #[test]
+    fn mean_matches_formula() {
+        let h = Hypergeometric::new(1000, 100, 50);
+        let (lo, hi) = h.support();
+        let mean: f64 = (lo..=hi).map(|r| r as f64 * h.pmf(r)).sum();
+        assert!((mean - h.mean()).abs() < 1e-9);
+        assert!((h.mean() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_excess_zero_threshold_is_mean() {
+        // E[max(0, X - 0)] = E[X].
+        let h = Hypergeometric::new(10_000, 100, 500);
+        assert!((h.expected_excess(0) - h.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_excess_decreasing_in_threshold() {
+        let h = Hypergeometric::new(262_144, 1024, 256);
+        let mut prev = f64::INFINITY;
+        for t in 0..8 {
+            let e = h.expected_excess(t);
+            assert!(e <= prev + 1e-12, "t={t}: {e} > {prev}");
+            assert!(e >= 0.0);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn expected_excess_above_support_is_zero() {
+        let h = Hypergeometric::new(100, 5, 10);
+        assert_eq!(h.expected_excess(10), 0.0);
+    }
+
+    #[test]
+    fn expected_excess_strategies_agree() {
+        // Both evaluation paths must agree with a brute-force tail sum.
+        for &(n, k, d) in &[(4096u64, 256u64, 512u64), (65_536, 8_192, 1_024)] {
+            let h = Hypergeometric::new(n, k, d);
+            let (lo, hi) = h.support();
+            for t in [0u64, 1, 2, 8, 64, 200] {
+                let brute: f64 = (t.max(lo).saturating_add(1).max(lo)..=hi)
+                    .map(|r| r.saturating_sub(t) as f64 * h.pmf(r))
+                    .sum();
+                let fast = h.expected_excess(t);
+                assert!(
+                    (fast - brute).abs() < 1e-9 * (1.0 + brute),
+                    "({n},{k},{d}) t={t}: fast={fast} brute={brute}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn expected_excess_fast_at_figure3_scale() {
+        // The Figure-3 extreme: N=2^26, K=N/4, one bucket of 2^19 — support
+        // has ~131k points; must evaluate in O(σ), not O(support).
+        let h = Hypergeometric::new(1 << 26, 1 << 24, 1 << 19);
+        let t0 = std::time::Instant::now();
+        let e = h.expected_excess(4); // K'=4 far below mean (131072/4)
+        assert!(e > 0.0 && e.is_finite());
+        // Mean excess ≈ mean - K' here.
+        assert!((e - (h.mean() - 4.0)).abs() / h.mean() < 1e-6);
+        assert!(t0.elapsed().as_millis() < 200, "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn variance_formula() {
+        let h = Hypergeometric::new(1000, 100, 50);
+        let (lo, hi) = h.support();
+        let mean = h.mean();
+        let var: f64 = (lo..=hi)
+            .map(|r| (r as f64 - mean).powi(2) * h.pmf(r))
+            .sum();
+        assert!((var - h.variance()).abs() < 1e-9, "{} vs {}", var, h.variance());
+    }
+
+    #[test]
+    fn sample_mean_converges() {
+        let h = Hypergeometric::new(4096, 64, 256);
+        let mut rng = crate::util::Rng::new(123);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| h.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - h.mean()).abs() < 0.1, "mean={mean} want {}", h.mean());
+    }
+
+    #[test]
+    fn prop_excess_bounded_by_mean_and_nonneg() {
+        property("excess in [0, mean]", 60, |g| {
+            let n = *g.choose(&[1024u64, 4096, 65_536, 262_144]);
+            let k = *g.choose(&[16u64, 128, 1024]);
+            let b = *g.choose(&[64u64, 128, 512, 1024]);
+            if n % b != 0 || k > n {
+                return;
+            }
+            let h = Hypergeometric::new(n, k, n / b);
+            let t = g.usize_in(0..=8) as u64;
+            let e = h.expected_excess(t);
+            let cap = h.mean() * (1.0 + 1e-9) + 1e-9;
+            assert!(e >= 0.0 && e <= cap, "e={e} mean={}", h.mean());
+        });
+    }
+
+    #[test]
+    fn prop_pmf_normalized() {
+        property("pmf normalized", 40, |g| {
+            let n = g.usize_in(10..=5000) as u64;
+            let k = g.usize_in(1..=n as usize) as u64;
+            let d = g.usize_in(1..=n as usize) as u64;
+            let h = Hypergeometric::new(n, k, d);
+            let (lo, hi) = h.support();
+            let total: f64 = (lo..=hi).map(|r| h.pmf(r)).sum();
+            assert!((total - 1.0).abs() < 1e-8, "sum={total} ({n},{k},{d})");
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! Monte-Carlo estimation of expected recall (paper Appendix A.10.1).
+//!
+//! Mirrors the paper's `expected_recall_mc`: draw `X ~ Hypergeometric(
+//! N, K, N/B)` samples, compute `1 − B·max(0, X − K′)/K` per sample, and
+//! average. The adaptive driver (`estimate_adaptive`) doubles the sample
+//! count until the 3σ confidence half-width is within the tolerance, exactly
+//! as in the paper's parameter sweep (A.10.2).
+
+use super::exact::RecallConfig;
+use crate::util::{stats::Welford, Rng};
+
+/// A Monte-Carlo recall estimate with its standard error.
+#[derive(Debug, Clone, Copy)]
+pub struct McEstimate {
+    pub recall: f64,
+    pub std_error: f64,
+    pub num_trials: u64,
+}
+
+/// Fixed-size Monte-Carlo estimate of expected recall.
+pub fn estimate(cfg: &RecallConfig, num_trials: u64, rng: &mut Rng) -> McEstimate {
+    assert!(num_trials >= 2);
+    let h = cfg.bucket_distribution();
+    let mut w = Welford::new();
+    for _ in 0..num_trials {
+        let x = h.sample(rng);
+        let collisions = cfg.buckets as f64 * x.saturating_sub(cfg.local_k) as f64;
+        w.push(1.0 - collisions / cfg.k as f64);
+    }
+    McEstimate {
+        recall: w.mean(),
+        std_error: w.sem(),
+        num_trials,
+    }
+}
+
+/// Adaptive estimate: doubles trials until `3·SE <= tol` (paper: tol=0.005).
+pub fn estimate_adaptive(
+    cfg: &RecallConfig,
+    tol: f64,
+    initial_trials: u64,
+    max_trials: u64,
+    rng: &mut Rng,
+) -> McEstimate {
+    let mut trials = initial_trials.max(16);
+    loop {
+        let est = estimate(cfg, trials, rng);
+        if est.std_error * 3.0 <= tol || trials >= max_trials {
+            return est;
+        }
+        trials *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recall::exact::expected_recall;
+    use crate::util::check::property;
+
+    #[test]
+    fn mc_matches_exact_within_4_sigma() {
+        let mut rng = Rng::new(2024);
+        for &(n, k, b, kp) in &[
+            (262_144u64, 1024u64, 8_192u64, 1u64),
+            (262_144, 1024, 512, 4),
+            (430_080, 3_360, 2_048, 2),
+            (15_360, 480, 512, 1),
+        ] {
+            let cfg = RecallConfig::new(n, k, b, kp);
+            let exact = expected_recall(&cfg);
+            let est = estimate(&cfg, 20_000, &mut rng);
+            let sigma = est.std_error.max(1e-6);
+            assert!(
+                (est.recall - exact).abs() < 4.0 * sigma + 1e-4,
+                "cfg={cfg:?}: mc={:.5} exact={exact:.5} se={sigma:.6}",
+                est.recall,
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_hits_tolerance() {
+        let mut rng = Rng::new(7);
+        let cfg = RecallConfig::new(262_144, 1024, 2_048, 2);
+        let est = estimate_adaptive(&cfg, 0.005, 1024, 1 << 22, &mut rng);
+        assert!(est.std_error * 3.0 <= 0.005, "se={}", est.std_error);
+        let exact = expected_recall(&cfg);
+        assert!((est.recall - exact).abs() < 0.005, "mc={} exact={exact}", est.recall);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = RecallConfig::new(65_536, 256, 1_024, 1);
+        let a = estimate(&cfg, 5_000, &mut Rng::new(99));
+        let b = estimate(&cfg, 5_000, &mut Rng::new(99));
+        assert_eq!(a.recall, b.recall);
+        assert_eq!(a.std_error, b.std_error);
+    }
+
+    #[test]
+    fn prop_mc_consistent_with_exact() {
+        property("mc within 5 sigma of exact", 15, |g| {
+            let n = *g.choose(&[65_536u64, 262_144]);
+            let b = *g.choose(&[512u64, 1_024, 4_096]);
+            let k = *g.choose(&[128u64, 512, 1_024]);
+            let kp = g.usize_in(1..=4) as u64;
+            let cfg = RecallConfig::new(n, k, b, kp);
+            let exact = expected_recall(&cfg);
+            if exact > 0.999 {
+                // Rare-event regime: with 8k samples the excess event may
+                // never fire, making the SE a meaningless zero.
+                return;
+            }
+            let est = estimate(&cfg, 8_000, g.rng());
+            let sigma = est.std_error.max(1e-6);
+            assert!(
+                (est.recall - exact).abs() < 5.0 * sigma + 2e-4,
+                "cfg={cfg:?} mc={} exact={exact}",
+                est.recall
+            );
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! Recall theory for the generalized two-stage approximate Top-K
+//! (paper Sections 5, 6.2, Theorem 1, Appendices A.4, A.5, A.10.1).
+//!
+//! - [`hypergeom`]: log-space hypergeometric distribution (the per-bucket
+//!   marginal of true-top-K counts under random placement).
+//! - [`exact`]: Theorem 1's exact expected recall.
+//! - [`mc`]: Monte-Carlo estimation with the paper's adaptive stopping rule.
+//! - [`bounds`]: Chern et al.'s bound, our 2×-tighter K′=1 bound, and the
+//!   Appendix-A.5 binomial-series approximations.
+
+pub mod bounds;
+pub mod distribution;
+pub mod exact;
+pub mod hypergeom;
+pub mod mc;
+pub mod variance;
+
+pub use exact::{expected_excess_collisions, expected_recall, RecallConfig};
+pub use hypergeom::Hypergeometric;
+pub use mc::{estimate, estimate_adaptive, McEstimate};
+pub use variance::{recall_std, recall_variance};

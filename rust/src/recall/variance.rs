@@ -1,0 +1,197 @@
+//! Variance of the recall — one of the paper's stated open problems.
+//!
+//! The paper's Limitations section: *"our analysis focuses on expected
+//! recall and does not characterize its variance or the full error
+//! distribution."* This module closes that gap for the random-placement
+//! model:
+//!
+//! With `Y_b = max(0, X_b − K′)` the per-bucket excess and
+//! `recall = 1 − (Σ_b Y_b)/K`,
+//!
+//! `Var[recall] = (B·Var[Y] + B(B−1)·Cov[Y_1, Y_2]) / K²`.
+//!
+//! The marginal `X_b` is Hypergeometric(N, K, m) with `m = N/B`; the pair
+//! `(X_1, X_2)` follows the two-block multivariate hypergeometric:
+//!
+//! `P[X_1 = r, X_2 = s] = [C(K,r)·C(N−K, m−r)/C(N,m)] ·
+//!                        [C(K−r, s)·C(N−K−m+r, m−s)/C(N−m, m)]`.
+//!
+//! The bucket counts are negatively correlated (they share the K
+//! specials), so the covariance term *reduces* the variance below the
+//! independent-bucket approximation — exactly the effect Key et al.'s
+//! binomial model cannot capture.
+
+use super::exact::RecallConfig;
+use super::hypergeom::{ln_choose, Hypergeometric};
+
+/// Exact Var[recall] under the paper's random-placement model.
+pub fn recall_variance(cfg: &RecallConfig) -> f64 {
+    let (n, k, b, kp) = (cfg.n, cfg.k, cfg.buckets, cfg.local_k);
+    let m = cfg.bucket_size();
+    if b == 1 {
+        return 0.0; // single bucket: excess is deterministic (K - K')⁺
+    }
+
+    // Marginal moments of Y = max(0, X - K').
+    let h = Hypergeometric::new(n, k, m);
+    let (lo, hi) = h.support();
+    let mut e_y = 0.0f64;
+    let mut e_y2 = 0.0f64;
+    for r in lo..=hi {
+        let y = r.saturating_sub(kp) as f64;
+        if y > 0.0 {
+            let p = h.pmf(r);
+            e_y += y * p;
+            e_y2 += y * y * p;
+        }
+    }
+    let var_y = e_y2 - e_y * e_y;
+
+    // Pairwise E[Y1·Y2] over the joint support (both tails are short: only
+    // r, s > K' contribute).
+    let mut e_y1y2 = 0.0f64;
+    let start = (kp + 1).max(lo);
+    for r in start..=hi {
+        let y1 = (r - kp) as f64;
+        let ln_p_r = ln_choose(k, r as i64) + ln_choose(n - k, m as i64 - r as i64)
+            - ln_choose(n, m as i64);
+        // Second bucket conditional on the first: population N-m with K-r
+        // specials, draw m.
+        let k2 = k - r;
+        let n2 = n - m;
+        let hi2 = k2.min(m);
+        if kp + 1 > hi2 {
+            continue;
+        }
+        for s in (kp + 1)..=hi2 {
+            let y2 = (s - kp) as f64;
+            let ln_p_s = ln_choose(k2, s as i64)
+                + ln_choose(n2 - k2, m as i64 - s as i64)
+                - ln_choose(n2, m as i64);
+            e_y1y2 += y1 * y2 * (ln_p_r + ln_p_s).exp();
+        }
+    }
+    let cov = e_y1y2 - e_y * e_y;
+
+    let var_total = b as f64 * var_y + (b as f64) * (b as f64 - 1.0) * cov;
+    (var_total / (k as f64 * k as f64)).max(0.0)
+}
+
+/// Standard deviation of recall.
+pub fn recall_std(cfg: &RecallConfig) -> f64 {
+    recall_variance(cfg).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recall::exact::expected_recall;
+    use crate::sim::simulate_positions;
+    use crate::util::check::property;
+    use crate::util::Rng;
+
+    /// The exact variance must match the empirical variance of positional
+    /// simulations (which realize the true joint distribution).
+    #[test]
+    fn matches_simulation_variance() {
+        let mut rng = Rng::new(77);
+        for &(n, k, b, kp) in &[
+            (15_360u64, 480u64, 512u64, 1u64),
+            (15_360, 480, 256, 2),
+            (4_096, 64, 256, 1),
+            (8_192, 256, 512, 2),
+        ] {
+            let cfg = RecallConfig::new(n, k, b, kp);
+            let exact_std = recall_std(&cfg);
+            let sim = simulate_positions(
+                n as usize,
+                k as usize,
+                b as usize,
+                kp as usize,
+                6_000,
+                &mut rng,
+            );
+            // Std of a std estimate ~ std/sqrt(2(n-1)); allow 6 of those.
+            let tol = exact_std / (2.0 * 6_000f64).sqrt() * 6.0 + 5e-4;
+            assert!(
+                (sim.std - exact_std).abs() < tol,
+                "({n},{k},{b},{kp}): sim std {:.5} vs exact {exact_std:.5}",
+                sim.std
+            );
+        }
+    }
+
+    /// Negative inter-bucket correlation: the exact variance must not
+    /// exceed the independent-bucket upper bound B·Var[Y]/K².
+    #[test]
+    fn never_exceeds_independent_approximation() {
+        for &(n, k, b, kp) in &[
+            (262_144u64, 1024u64, 8_192u64, 1u64),
+            (15_360, 480, 512, 1),
+            (65_536, 512, 1_024, 2),
+        ] {
+            let cfg = RecallConfig::new(n, k, b, kp);
+            let h = cfg.bucket_distribution();
+            let (lo, hi) = h.support();
+            let mut e_y = 0.0;
+            let mut e_y2 = 0.0;
+            for r in lo..=hi {
+                let y = r.saturating_sub(kp) as f64;
+                let p = h.pmf(r);
+                e_y += y * p;
+                e_y2 += y * y * p;
+            }
+            let indep = b as f64 * (e_y2 - e_y * e_y) / (k * k) as f64;
+            let exact = recall_variance(&cfg);
+            assert!(
+                exact <= indep * (1.0 + 1e-9) + 1e-15,
+                "({n},{k},{b},{kp}): exact {exact} > indep {indep}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_variance_cases() {
+        // K' >= bucket size: recall deterministic 1.
+        let cfg = RecallConfig::new(1024, 64, 128, 8);
+        assert!(recall_variance(&cfg) < 1e-15);
+        // Single bucket: deterministic.
+        let cfg1 = RecallConfig::new(1024, 64, 1, 4);
+        assert_eq!(recall_variance(&cfg1), 0.0);
+    }
+
+    /// Paper Table 2 reports simulated ±std around 0.002..0.008 for the
+    /// mid-recall rows; the exact std should be in that band.
+    #[test]
+    fn table2_std_magnitudes() {
+        let cfg = RecallConfig::new(262_144, 1024, 16_384, 1); // recall .972
+        let s = recall_std(&cfg);
+        assert!(s > 0.001 && s < 0.012, "std={s}");
+        let cfg2 = RecallConfig::new(262_144, 1024, 512, 4); // recall .963
+        let s2 = recall_std(&cfg2);
+        assert!(s2 > 0.002 && s2 < 0.015, "std={s2}");
+    }
+
+    #[test]
+    fn prop_variance_nonneg_and_small_at_high_recall() {
+        property("variance sane", 30, |g| {
+            let n = *g.choose(&[8_192u64, 65_536]);
+            let divs: Vec<u64> = crate::util::divisors(n as usize)
+                .into_iter()
+                .map(|d| d as u64)
+                .filter(|&d| d >= 64 && d < n)
+                .collect();
+            let b = *g.choose(&divs);
+            let k = (g.usize_in(8..=512) as u64).min(n / 4);
+            let kp = g.usize_in(1..=4) as u64;
+            let cfg = RecallConfig::new(n, k, b, kp);
+            let v = recall_variance(&cfg);
+            assert!(v >= 0.0 && v.is_finite());
+            // Recall lives in [0,1] => Var <= 1/4 (Popoviciu).
+            assert!(v <= 0.25 + 1e-12, "v={v}");
+            if expected_recall(&cfg) > 0.9999 {
+                assert!(v < 1e-4, "near-deterministic recall, v={v}");
+            }
+        });
+    }
+}

@@ -1,0 +1,235 @@
+//! AOT artifact manifest (`artifacts/manifest.json`).
+//!
+//! The Python compile path (`python/compile/aot.py`) writes one HLO-text
+//! file per model variant plus a manifest describing shapes, dtypes and the
+//! algorithm parameters each artifact was built with. The runtime loads the
+//! manifest once and compiles artifacts on demand.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    BF16,
+}
+
+impl DType {
+    pub fn from_name(s: &str) -> Option<DType> {
+        match s {
+            "float32" | "f32" => Some(DType::F32),
+            "int32" | "i32" => Some(DType::I32),
+            "bfloat16" | "bf16" => Some(DType::BF16),
+            _ => None,
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 => 2,
+        }
+    }
+}
+
+/// Shape + dtype of one artifact operand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec, String> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or("missing shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .and_then(DType::from_name)
+            .ok_or("missing/unknown dtype")?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Raw `params` object (kind, n, k, buckets, local_k, ...).
+    pub params: BTreeMap<String, Json>,
+}
+
+impl ArtifactEntry {
+    pub fn kind(&self) -> Option<&str> {
+        self.params.get("kind").and_then(|j| j.as_str())
+    }
+
+    pub fn param_usize(&self, key: &str) -> Option<usize> {
+        self.params.get(key).and_then(|j| j.as_usize())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let format = j.get("format").and_then(|f| f.as_usize());
+        anyhow::ensure!(format == Some(1), "unsupported manifest format {format:?}");
+        let mut entries = Vec::new();
+        for e in j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing artifacts array"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let file = PathBuf::from(
+                e.get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing file"))?,
+            );
+            let parse_specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing {key}"))?
+                    .iter()
+                    .map(|s| {
+                        TensorSpec::from_json(s)
+                            .map_err(|m| anyhow::anyhow!("artifact {name}: {m}"))
+                    })
+                    .collect()
+            };
+            let inputs = parse_specs("inputs")?;
+            let outputs = parse_specs("outputs")?;
+            let params = e
+                .get("params")
+                .and_then(|p| p.as_obj())
+                .cloned()
+                .unwrap_or_default();
+            entries.push(ArtifactEntry {
+                name,
+                file,
+                inputs,
+                outputs,
+                params,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// First entry of a given kind.
+    pub fn find_kind(&self, kind: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.kind() == Some(kind))
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": [
+        {
+          "name": "approx_topk_b8_n16384_k128_kp3_bb128",
+          "file": "approx_topk_b8_n16384_k128_kp3_bb128.hlo.txt",
+          "inputs": [{"shape": [8, 16384], "dtype": "float32"}],
+          "outputs": [
+            {"shape": [8, 128], "dtype": "float32"},
+            {"shape": [8, 128], "dtype": "int32"}
+          ],
+          "params": {"kind": "approx_topk", "n": 16384, "k": 128,
+                     "local_k": 3, "buckets": 128, "batch": 8,
+                     "recall_target": 0.95}
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.kind(), Some("approx_topk"));
+        assert_eq!(e.inputs[0].shape, vec![8, 16384]);
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.outputs[1].dtype, DType::I32);
+        assert_eq!(e.param_usize("buckets"), Some(128));
+        assert_eq!(e.inputs[0].elements(), 8 * 16384);
+        assert!(m.find("approx_topk_b8_n16384_k128_kp3_bb128").is_some());
+        assert!(m.find_kind("approx_topk").is_some());
+        assert!(m.find_kind("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(Path::new("."), r#"{"format": 2, "artifacts": []}"#).is_err());
+        assert!(Manifest::parse(Path::new("."), "not json").is_err());
+        assert!(Manifest::parse(Path::new("."), r#"{"format": 1}"#).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // make artifacts not run yet
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.entries.is_empty());
+        for e in &m.entries {
+            assert!(m.hlo_path(e).exists(), "{:?}", e.file);
+        }
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert_eq!(DType::from_name("float32"), Some(DType::F32));
+        assert_eq!(DType::from_name("float64"), None);
+    }
+}

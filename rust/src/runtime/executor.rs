@@ -1,0 +1,192 @@
+//! PJRT execution of AOT artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One [`Executor`] owns the client and a cache of compiled executables so
+//! each artifact compiles exactly once per process (compilation is the
+//! expensive step; execution is the request path).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+
+use super::artifacts::{ArtifactEntry, DType, Manifest, TensorSpec};
+
+/// A host-side tensor handed to / returned from an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct CompiledArtifact {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledArtifact {
+    /// Execute with host tensors; validates shapes/dtypes against the
+    /// manifest entry and returns one host tensor per declared output.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "artifact {}: expected {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            ensure!(
+                t.len() == spec.elements(),
+                "artifact {} input {i}: expected {} elements, got {}",
+                self.entry.name,
+                spec.elements(),
+                t.len()
+            );
+            ensure!(
+                t.dtype() == spec.dtype,
+                "artifact {} input {i}: dtype mismatch",
+                self.entry.name
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match t {
+                HostTensor::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+                HostTensor::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the result is always a
+        // tuple, even for single outputs.
+        let parts = result.to_tuple()?;
+        ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "artifact {}: expected {} outputs, got {}",
+            self.entry.name,
+            self.entry.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.entry.outputs)
+            .map(|(lit, spec)| literal_to_host(lit, spec))
+            .collect()
+    }
+}
+
+fn literal_to_host(lit: xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+    match spec.dtype {
+        DType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?)),
+        DType::I32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?)),
+        DType::BF16 => {
+            let conv = lit.convert(xla::PrimitiveType::F32)?;
+            Ok(HostTensor::F32(conv.to_vec::<f32>()?))
+        }
+    }
+}
+
+/// Owns the PJRT client, the manifest, and the executable cache.
+pub struct Executor {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<CompiledArtifact>>>,
+}
+
+impl Executor {
+    /// Create a CPU-PJRT executor over the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Executor> {
+        let manifest = Manifest::load(artifact_dir)
+            .with_context(|| format!("loading manifest from {artifact_dir:?}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Executor {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn compile(&self, name: &str) -> Result<std::sync::Arc<CompiledArtifact>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))?
+            .clone();
+        let path = self.manifest.hlo_path(&entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let compiled = std::sync::Arc::new(CompiledArtifact { entry, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Compile the first artifact of a given kind.
+    pub fn compile_kind(&self, kind: &str) -> Result<std::sync::Arc<CompiledArtifact>> {
+        let name = self
+            .manifest
+            .find_kind(kind)
+            .with_context(|| format!("no artifact of kind `{kind}`"))?
+            .name
+            .clone();
+        self.compile(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Executor integration tests live in rust/tests/integration_runtime.rs —
+    // they require `make artifacts` to have run. Unit-level coverage of the
+    // manifest parsing is in artifacts.rs.
+}

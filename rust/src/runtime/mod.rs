@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python is never invoked here — the Rust binary is self-contained once
+//! `make artifacts` has run.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactEntry, DType, Manifest, TensorSpec};
+pub use executor::{CompiledArtifact, Executor, HostTensor};

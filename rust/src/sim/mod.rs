@@ -1,0 +1,139 @@
+//! Randomized algorithm simulator (paper Appendix A.3, Figures 6, 7, 10).
+//!
+//! Two levels of fidelity:
+//!
+//! - [`simulate_positions`]: places the K true-top elements uniformly at
+//!   random and counts per-bucket excess directly — the distributional
+//!   equivalent of a full run, used for large trial counts.
+//! - [`simulate_full`]: actually executes [`TwoStageTopK`] on random values
+//!   and measures recall against the exact oracle — the ground truth the
+//!   paper's Figure 6/7 "simulated" series corresponds to.
+
+use crate::topk::{exact::topk_sort, recall_of, TwoStageParams, TwoStageTopK};
+use crate::util::{stats::Welford, Rng};
+
+/// Mean ± sample std of recall over `trials` runs.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    pub mean: f64,
+    pub std: f64,
+    pub trials: u64,
+}
+
+/// Position-level simulation: one trial places K special elements at
+/// distinct uniform positions and computes recall from per-bucket excess.
+pub fn simulate_positions(
+    n: usize,
+    k: usize,
+    buckets: usize,
+    local_k: usize,
+    trials: u64,
+    rng: &mut Rng,
+) -> SimResult {
+    assert!(n % buckets == 0);
+    let mut counts = vec![0u32; buckets];
+    let mut w = Welford::new();
+    for _ in 0..trials {
+        counts.fill(0);
+        // Strided bucketing: bucket(index) = index mod B.
+        for pos in rng.sample_distinct(n, k) {
+            counts[pos % buckets] += 1;
+        }
+        let excess: u64 = counts
+            .iter()
+            .map(|&c| (c as u64).saturating_sub(local_k as u64))
+            .sum();
+        w.push(1.0 - excess as f64 / k as f64);
+    }
+    SimResult {
+        mean: w.mean(),
+        std: w.std(),
+        trials,
+    }
+}
+
+/// Full-algorithm simulation: runs the real two-stage operator on random
+/// float arrays (paper: "randomly generated integers"; floats give the same
+/// uniform-placement distribution with fewer ties).
+pub fn simulate_full(params: TwoStageParams, trials: u64, rng: &mut Rng) -> SimResult {
+    let mut ts = TwoStageTopK::new(params);
+    let mut w = Welford::new();
+    let mut values = vec![0f32; params.n];
+    for _ in 0..trials {
+        rng.fill_f32(&mut values);
+        let got = ts.run(&values);
+        let want = topk_sort(&values, params.k);
+        w.push(recall_of(&want, &got));
+    }
+    SimResult {
+        mean: w.mean(),
+        std: w.std(),
+        trials,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recall::{expected_recall, RecallConfig};
+    use crate::util::check::property;
+
+    #[test]
+    fn positions_matches_exact_formula() {
+        let mut rng = Rng::new(42);
+        for &(n, k, b, kp) in &[
+            (15_360usize, 480usize, 512usize, 1usize),
+            (15_360, 480, 256, 2),
+            (8_192, 128, 512, 1),
+        ] {
+            let exact = expected_recall(&RecallConfig::new(
+                n as u64, k as u64, b as u64, kp as u64,
+            ));
+            let sim = simulate_positions(n, k, b, kp, 3_000, &mut rng);
+            let se = sim.std / (sim.trials as f64).sqrt();
+            assert!(
+                (sim.mean - exact).abs() < 5.0 * se + 2e-3,
+                "({n},{k},{b},{kp}): sim {:.4} vs exact {exact:.4}",
+                sim.mean
+            );
+        }
+    }
+
+    #[test]
+    fn full_algorithm_matches_positions() {
+        // Figure 6/7's claim: Monte-Carlo/positional estimates agree with
+        // real algorithm runs.
+        let mut rng = Rng::new(7);
+        let params = TwoStageParams::new(4_096, 64, 256, 1);
+        let full = simulate_full(params, 80, &mut rng);
+        let pos = simulate_positions(4_096, 64, 256, 1, 4_000, &mut rng);
+        let se = full.std / (full.trials as f64).sqrt() + pos.std / (pos.trials as f64).sqrt();
+        assert!(
+            (full.mean - pos.mean).abs() < 4.0 * se + 5e-3,
+            "full {:.4} vs positions {:.4}",
+            full.mean,
+            pos.mean
+        );
+    }
+
+    #[test]
+    fn prop_positions_sim_unbiased() {
+        property("positional sim tracks theory", 10, |g| {
+            let b = *g.choose(&[128usize, 256, 512]);
+            let rows = *g.choose(&[8usize, 16, 32]);
+            let n = b * rows;
+            let k = g.usize_in(16..=256).min(n / 4);
+            let kp = g.usize_in(1..=3);
+            let exact = expected_recall(&RecallConfig::new(
+                n as u64, k as u64, b as u64, kp as u64,
+            ));
+            let sim = simulate_positions(n, k, b, kp, 2_000, g.rng());
+            let se = sim.std / (sim.trials as f64).sqrt();
+            assert!(
+                (sim.mean - exact).abs() < 6.0 * se + 3e-3,
+                "sim {:.4} vs exact {exact:.4}",
+                sim.mean
+            );
+        });
+    }
+}

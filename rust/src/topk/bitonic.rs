@@ -1,0 +1,139 @@
+//! Bitonic key-value sorting network.
+//!
+//! Mirrors the TPU second stage (`jax.lax.sort_key_val` lowers to a bitonic
+//! network on padded power-of-two lengths). Used by the CPU two-stage
+//! implementation when exact structural parity with the TPU kernel is
+//! wanted, and by the stage-2 ablation bench (`stage2_select`) to compare
+//! network sort vs quickselect on the merged candidates.
+
+use super::Candidate;
+
+/// Sort candidates descending (canonical order) with a bitonic network.
+/// Non-power-of-two inputs are padded with -inf sentinels and the padding
+/// is stripped afterwards, exactly like the TPU kernel's padding story.
+pub fn bitonic_sort(c: &mut Vec<Candidate>) {
+    let n = c.len();
+    if n <= 1 {
+        return;
+    }
+    let padded = n.next_power_of_two();
+    // Sentinel: worst possible candidate (value -inf, max index).
+    c.resize(
+        padded,
+        Candidate {
+            index: u32::MAX,
+            value: f32::NEG_INFINITY,
+        },
+    );
+    bitonic_pow2(c);
+    c.truncate(n);
+}
+
+/// In-place bitonic sort of a power-of-two slice, descending canonical
+/// order. Iterative form: for each merge size `size`, compare-exchange
+/// across strides size/2, size/4, ..., 1.
+fn bitonic_pow2(c: &mut [Candidate]) {
+    let n = c.len();
+    debug_assert!(n.is_power_of_two());
+    let mut size = 2;
+    while size <= n {
+        let mut stride = size / 2;
+        while stride > 0 {
+            for i in 0..n {
+                let j = i ^ stride;
+                if j > i {
+                    // Direction: ascending blocks of `size` alternate; we
+                    // want global descending, so flip.
+                    let descending = (i & size) == 0;
+                    let a_beats_b = c[i].beats(&c[j]);
+                    if descending != a_beats_b {
+                        c.swap(i, j);
+                    }
+                }
+            }
+            stride /= 2;
+        }
+        size *= 2;
+    }
+}
+
+/// Number of compare-exchange operations the network performs on `n`
+/// (padded) elements — used to cross-check the stage-2 cost model.
+pub fn compare_exchange_count(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let padded = n.next_power_of_two() as u64;
+    let l = crate::util::ceil_log2(padded as usize) as u64;
+    padded / 2 * l * (l + 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::sort_candidates;
+    use crate::util::check::property;
+
+    fn mk(vals: &[f32]) -> Vec<Candidate> {
+        vals.iter()
+            .enumerate()
+            .map(|(i, &v)| Candidate {
+                index: i as u32,
+                value: v,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sorts_pow2() {
+        let mut c = mk(&[3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]);
+        let mut want = c.clone();
+        sort_candidates(&mut want);
+        bitonic_sort(&mut c);
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn sorts_non_pow2_with_padding() {
+        let mut c = mk(&[2.0, 7.0, 1.0, 8.0, 2.0]);
+        let mut want = c.clone();
+        sort_candidates(&mut want);
+        bitonic_sort(&mut c);
+        assert_eq!(c.len(), 5);
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        let mut empty: Vec<Candidate> = Vec::new();
+        bitonic_sort(&mut empty);
+        assert!(empty.is_empty());
+        let mut one = mk(&[1.0]);
+        bitonic_sort(&mut one);
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn ce_count_matches_formula() {
+        // n=8: L=3, stages=6, n/2*stages = 24.
+        assert_eq!(compare_exchange_count(8), 24);
+        assert_eq!(compare_exchange_count(1), 0);
+        // Padding: n=5 behaves like 8.
+        assert_eq!(compare_exchange_count(5), 24);
+    }
+
+    #[test]
+    fn prop_matches_comparison_sort() {
+        property("bitonic == comparison sort", 40, |g| {
+            let n = g.usize_in(1..=300);
+            let vals: Vec<f32> = (0..n)
+                .map(|_| (g.rng().next_usize(50) as f32) - 25.0)
+                .collect();
+            let mut c = mk(&vals);
+            let mut want = c.clone();
+            sort_candidates(&mut want);
+            bitonic_sort(&mut c);
+            assert_eq!(c, want, "n={n}");
+        });
+    }
+}

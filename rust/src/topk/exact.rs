@@ -1,0 +1,266 @@
+//! Exact Top-K baselines (the `jax.lax.top_k` stand-ins).
+//!
+//! Three algorithms with identical output semantics (canonical order:
+//! descending value, ties by ascending index):
+//!
+//! - [`topk_sort`]: full sort — O(n log n), the reference oracle.
+//! - [`topk_heap`]: size-k min-heap — O(n log k), good for small k.
+//! - [`topk_quickselect`]: Hoare partition to isolate the top-k block, then
+//!   sort the block — O(n + k log k) expected, the fast exact baseline.
+
+use super::{sort_candidates, Candidate};
+
+/// Exact top-k by full sort. The oracle all other implementations are
+/// tested against.
+pub fn topk_sort(values: &[f32], k: usize) -> Vec<Candidate> {
+    let k = k.min(values.len());
+    let mut all: Vec<Candidate> = values
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| Candidate {
+            index: i as u32,
+            value: v,
+        })
+        .collect();
+    sort_candidates(&mut all);
+    all.truncate(k);
+    all
+}
+
+/// Exact top-k with a bounded min-heap.
+pub fn topk_heap(values: &[f32], k: usize) -> Vec<Candidate> {
+    let k = k.min(values.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    // `heap` is a min-heap under the canonical order: heap[0] is the
+    // *worst* retained candidate.
+    let mut heap: Vec<Candidate> = Vec::with_capacity(k);
+
+    #[inline]
+    fn sift_up(heap: &mut [Candidate], mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if heap[parent].beats(&heap[i]) {
+                heap.swap(parent, i);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    #[inline]
+    fn sift_down(heap: &mut [Candidate], mut i: usize) {
+        let n = heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut worst = i;
+            if l < n && heap[worst].beats(&heap[l]) {
+                worst = l;
+            }
+            if r < n && heap[worst].beats(&heap[r]) {
+                worst = r;
+            }
+            if worst == i {
+                break;
+            }
+            heap.swap(i, worst);
+            i = worst;
+        }
+    }
+
+    for (i, &v) in values.iter().enumerate() {
+        let c = Candidate {
+            index: i as u32,
+            value: v,
+        };
+        if heap.len() < k {
+            heap.push(c);
+            let last = heap.len() - 1;
+            sift_up(&mut heap, last);
+        } else if c.beats(&heap[0]) {
+            heap[0] = c;
+            sift_down(&mut heap, 0);
+        }
+    }
+    sort_candidates(&mut heap);
+    heap
+}
+
+/// Exact top-k by in-place quickselect over candidate indices, then sorting
+/// the selected block. Deterministic pivots (median-of-three) keep the
+/// expected O(n) behaviour on our random workloads.
+pub fn topk_quickselect(values: &[f32], k: usize) -> Vec<Candidate> {
+    let k = k.min(values.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut c: Vec<Candidate> = values
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| Candidate {
+            index: i as u32,
+            value: v,
+        })
+        .collect();
+    let n = c.len();
+    if k < n {
+        select_top(&mut c, k);
+    }
+    c.truncate(k);
+    sort_candidates(&mut c);
+    c
+}
+
+/// Partition `c` so that the k candidates best under the canonical order
+/// occupy c[0..k] (in arbitrary order). Exposed crate-wide so the
+/// two-stage operator can select in place over its candidate scratch
+/// without reallocating (perf log, EXPERIMENTS.md §Perf).
+///
+/// Three-way (Dutch-national-flag) partition: the pivot's equal band is
+/// non-empty on every pass (the pivot is an element of the segment), so the
+/// segment strictly shrinks and termination is structural — a plain Hoare
+/// partition here can livelock when median-of-three interacts with the
+/// strict `beats` total order.
+pub(crate) fn select_top(c: &mut [Candidate], k: usize) {
+    let (mut lo, mut hi) = (0usize, c.len());
+    let mut want = k;
+    while hi - lo > 1 {
+        if want == 0 || want >= hi - lo {
+            return;
+        }
+        let mid = lo + (hi - lo) / 2;
+        let pivot = median3(c[lo], c[mid], c[hi - 1]);
+        // c[lo..lt) beats pivot; c[lt..i) == pivot; c[gt..hi) beaten.
+        let mut lt = lo;
+        let mut i = lo;
+        let mut gt = hi;
+        while i < gt {
+            if c[i].beats(&pivot) {
+                c.swap(lt, i);
+                lt += 1;
+                i += 1;
+            } else if pivot.beats(&c[i]) {
+                gt -= 1;
+                c.swap(i, gt);
+            } else {
+                i += 1;
+            }
+        }
+        debug_assert!(gt > lt, "pivot band must be non-empty");
+        let left = lt - lo;
+        let eq = gt - lt;
+        if want <= left {
+            hi = lt;
+        } else if want <= left + eq {
+            return; // the pivot band completes the block
+        } else {
+            want -= left + eq;
+            lo = gt;
+        }
+    }
+}
+
+fn median3(a: Candidate, b: Candidate, c: Candidate) -> Candidate {
+    // Middle element under `beats`.
+    let (lo, hi) = if a.beats(&b) { (b, a) } else { (a, b) };
+    if c.beats(&hi) {
+        hi
+    } else if lo.beats(&c) {
+        lo
+    } else {
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use crate::util::Rng;
+
+    fn random_values(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 100.0 - 50.0).collect()
+    }
+
+    #[test]
+    fn all_agree_on_small_fixed_input() {
+        let v = [3.0f32, -1.0, 7.5, 7.5, 0.0, 2.0, 7.5, -9.0];
+        for k in 0..=v.len() {
+            let a = topk_sort(&v, k);
+            let b = topk_heap(&v, k);
+            let c = topk_quickselect(&v, k);
+            assert_eq!(a, b, "heap k={k}");
+            assert_eq!(a, c, "quickselect k={k}");
+        }
+        // Ties at 7.5 resolve by ascending index: 2, 3, 6.
+        let top3 = topk_sort(&v, 3);
+        assert_eq!(
+            top3.iter().map(|c| c.index).collect::<Vec<_>>(),
+            vec![2, 3, 6]
+        );
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let v = [1.0f32, 2.0];
+        assert_eq!(topk_sort(&v, 10).len(), 2);
+        assert_eq!(topk_heap(&v, 10).len(), 2);
+        assert_eq!(topk_quickselect(&v, 10).len(), 2);
+    }
+
+    #[test]
+    fn empty_and_zero_k() {
+        assert!(topk_sort(&[], 5).is_empty());
+        assert!(topk_heap(&[1.0], 0).is_empty());
+        assert!(topk_quickselect(&[], 0).is_empty());
+    }
+
+    #[test]
+    fn handles_negative_and_duplicate_heavy() {
+        let v = vec![-1.0f32; 1000];
+        let got = topk_quickselect(&v, 10);
+        assert_eq!(got.len(), 10);
+        // All equal: indices 0..10 by tie-break.
+        assert_eq!(
+            got.iter().map(|c| c.index).collect::<Vec<_>>(),
+            (0..10).collect::<Vec<u32>>()
+        );
+    }
+
+    #[test]
+    fn prop_heap_and_quickselect_match_sort() {
+        property("exact implementations agree", 60, |g| {
+            let n = g.usize_in(1..=2000);
+            let k = g.usize_in(0..=n);
+            // Mix of continuous and heavily-tied discrete values.
+            let vals: Vec<f32> = if g.bool() {
+                (0..n).map(|_| g.rng().next_f32()).collect()
+            } else {
+                (0..n).map(|_| (g.rng().next_usize(7) as f32) - 3.0).collect()
+            };
+            let want = topk_sort(&vals, k);
+            assert_eq!(topk_heap(&vals, k), want, "heap n={n} k={k}");
+            assert_eq!(topk_quickselect(&vals, k), want, "qs n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn prop_output_is_sorted_canonical() {
+        property("canonical order", 30, |g| {
+            let n = g.usize_in(1..=500);
+            let k = g.usize_in(1..=n);
+            let mut rng = g.rng().split();
+            let vals = random_values(&mut rng, n);
+            let got = topk_quickselect(&vals, k);
+            for w in got.windows(2) {
+                assert!(w[0].beats(&w[1]));
+            }
+            // Values must match the input at the reported indices.
+            for c in &got {
+                assert_eq!(vals[c.index as usize], c.value);
+            }
+        });
+    }
+}

@@ -1,0 +1,91 @@
+//! Pure-Rust Top-K substrate.
+//!
+//! These implementations serve three roles:
+//!
+//! 1. **Baselines** for the paper's comparisons (`exact` stands in for
+//!    `jax.lax.top_k`; [`twostage`] with `local_k = 1` and Chern et al.'s
+//!    bucket formula stands in for `jax.lax.approx_max_k`).
+//! 2. **Oracles** for testing the Pallas kernels loaded through PJRT.
+//! 3. The **measured hot path** for the CPU-side performance study (the
+//!    TPU numbers are modeled; see DESIGN.md §Hardware-Adaptation).
+//!
+//! All implementations share one total order: descending by value, ties
+//! broken by ascending index, so results are comparable element-wise.
+
+pub mod bitonic;
+pub mod exact;
+pub mod streaming;
+pub mod twostage;
+
+pub use streaming::StreamingTopK;
+pub use twostage::{TwoStageParams, TwoStageTopK};
+
+/// A scored candidate: index into the input array and its value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub index: u32,
+    pub value: f32,
+}
+
+impl Candidate {
+    /// The shared total order: larger value first; ties by smaller index.
+    #[inline]
+    pub fn beats(&self, other: &Candidate) -> bool {
+        self.value > other.value
+            || (self.value == other.value && self.index < other.index)
+    }
+}
+
+/// Sort candidates into the canonical order (descending value, index ties
+/// ascending).
+pub fn sort_candidates(c: &mut [Candidate]) {
+    c.sort_unstable_by(|a, b| {
+        b.value
+            .partial_cmp(&a.value)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.index.cmp(&b.index))
+    });
+}
+
+/// Recall of `approx` against the exact top-k `exact`: |approx ∩ exact| / k.
+/// Compares by index.
+pub fn recall_of(exact: &[Candidate], approx: &[Candidate]) -> f64 {
+    if exact.is_empty() {
+        return 1.0;
+    }
+    let set: std::collections::HashSet<u32> = exact.iter().map(|c| c.index).collect();
+    let hit = approx.iter().filter(|c| set.contains(&c.index)).count();
+    hit as f64 / exact.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beats_total_order() {
+        let a = Candidate { index: 0, value: 2.0 };
+        let b = Candidate { index: 1, value: 1.0 };
+        let c = Candidate { index: 2, value: 2.0 };
+        assert!(a.beats(&b));
+        assert!(!b.beats(&a));
+        assert!(a.beats(&c)); // tie -> smaller index
+        assert!(!c.beats(&a));
+        assert!(!a.beats(&a));
+    }
+
+    #[test]
+    fn recall_counts_overlap() {
+        let e = [
+            Candidate { index: 1, value: 9.0 },
+            Candidate { index: 2, value: 8.0 },
+        ];
+        let a = [
+            Candidate { index: 2, value: 8.0 },
+            Candidate { index: 7, value: 7.0 },
+        ];
+        assert_eq!(recall_of(&e, &a), 0.5);
+        assert_eq!(recall_of(&e, &e), 1.0);
+        assert_eq!(recall_of(&[], &a), 1.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Streaming two-stage Top-K: maintain the approximate top-K of a value
+//! stream that arrives in chunks.
+//!
+//! This is the decode-time shape of the paper's KV-cache / attention
+//! use cases (Tang et al., Yang et al. in the intro): scores arrive one
+//! chunk per step, the first stage folds each chunk into its bucket state
+//! online (no stored history), and the second stage can be queried at any
+//! point. The bucket of element `i` is `i mod B` over the *global* stream
+//! offset, so a streamed run is bit-identical to a batch run over the
+//! concatenated input — property-tested below.
+
+use super::twostage::Stage1State;
+use super::{exact, Candidate};
+
+/// Streaming state: a first stage that accepts arbitrary-length chunks.
+#[derive(Debug, Clone)]
+pub struct StreamingTopK {
+    /// Bucket count and per-bucket K′ (N in `params` is not used for
+    /// streaming: the stream length is unbounded).
+    pub buckets: usize,
+    pub local_k: usize,
+    pub k: usize,
+    state: Stage1State,
+    /// Global offset of the next element.
+    offset: u64,
+}
+
+impl StreamingTopK {
+    pub fn new(buckets: usize, local_k: usize, k: usize) -> Self {
+        assert!(buckets > 0 && local_k > 0 && k > 0);
+        assert!(
+            buckets * local_k >= k,
+            "B*K' must be >= K for the second stage"
+        );
+        StreamingTopK {
+            buckets,
+            local_k,
+            k,
+            state: Stage1State::with_dims(buckets, local_k),
+            offset: 0,
+        }
+    }
+
+    /// Number of stream elements consumed so far.
+    pub fn len(&self) -> u64 {
+        self.offset
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offset == 0
+    }
+
+    /// Fold a chunk of values into the bucket state.
+    pub fn push(&mut self, chunk: &[f32]) {
+        let b = self.buckets;
+        let kp = self.local_k;
+        let vals = &mut self.state.values;
+        let idxs = &mut self.state.indices;
+        for (j, &x) in chunk.iter().enumerate() {
+            let global = self.offset + j as u64;
+            let lane = (global % b as u64) as usize;
+            let last = (kp - 1) * b + lane;
+            if x >= vals[last] {
+                vals[last] = x;
+                idxs[last] = global as u32;
+                let mut r = kp - 1;
+                while r > 0 {
+                    let hi = (r - 1) * b + lane;
+                    let lo = r * b + lane;
+                    if x > vals[hi] {
+                        vals.swap(hi, lo);
+                        idxs.swap(hi, lo);
+                        r -= 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        self.offset += chunk.len() as u64;
+    }
+
+    /// Current approximate top-K of everything pushed so far.
+    pub fn topk(&self) -> Vec<Candidate> {
+        let mut cands: Vec<Candidate> = self
+            .state
+            .values
+            .iter()
+            .zip(self.state.indices.iter())
+            .filter(|(v, _)| **v > f32::NEG_INFINITY)
+            .map(|(&value, &index)| Candidate { index, value })
+            .collect();
+        let k = self.k.min(cands.len());
+        if k < cands.len() {
+            exact::select_top(&mut cands, k);
+        }
+        cands.truncate(k);
+        super::sort_candidates(&mut cands);
+        cands
+    }
+
+    /// Reset to an empty stream.
+    pub fn reset(&mut self) {
+        self.state.reset();
+        self.offset = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::twostage::{TwoStageParams, TwoStageTopK};
+    use crate::topk::{exact::topk_sort, recall_of};
+    use crate::util::check::property;
+    use crate::util::Rng;
+
+    #[test]
+    fn streamed_equals_batch() {
+        let (b, kp, k) = (64usize, 2usize, 16usize);
+        let n = 64 * 32;
+        let mut rng = Rng::new(5);
+        let mut values = vec![0f32; n];
+        rng.fill_f32(&mut values);
+
+        let mut batch = TwoStageTopK::new(TwoStageParams::new(n, k, b, kp));
+        let want = batch.run(&values);
+
+        let mut stream = StreamingTopK::new(b, kp, k);
+        for chunk in values.chunks(100) {
+            stream.push(chunk);
+        }
+        assert_eq!(stream.topk(), want);
+        assert_eq!(stream.len(), n as u64);
+    }
+
+    #[test]
+    fn incremental_recall_grows_with_capacity() {
+        // With K' = stream-rows the result is exact.
+        let (b, kp, k) = (32usize, 4usize, 8usize);
+        let mut rng = Rng::new(9);
+        let values: Vec<f32> = (0..b * kp).map(|_| rng.next_f32()).collect();
+        let mut s = StreamingTopK::new(b, kp, k);
+        s.push(&values);
+        let exact = topk_sort(&values, k);
+        assert_eq!(recall_of(&exact, &s.topk()), 1.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut s = StreamingTopK::new(16, 1, 4);
+        s.push(&[5.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.topk().len(), 4);
+        s.reset();
+        assert!(s.is_empty());
+        assert!(s.topk().is_empty());
+    }
+
+    #[test]
+    fn decode_step_scenario() {
+        // KV-cache style: one score-chunk per decode step; querying after
+        // each step always returns the current stream's top scores.
+        let mut rng = Rng::new(11);
+        let mut s = StreamingTopK::new(128, 2, 32);
+        let mut all = Vec::new();
+        for _step in 0..50 {
+            let chunk: Vec<f32> = (0..128).map(|_| rng.next_f32()).collect();
+            all.extend_from_slice(&chunk);
+            s.push(&chunk);
+        }
+        let got = s.topk();
+        let want = topk_sort(&all, 32);
+        // 128 buckets x K'=2 over 50 chunks: expected recall per Theorem 1
+        // for (6400, 32, 128, 2) is ~0.999.
+        assert!(recall_of(&want, &got) >= 0.9);
+        // Every reported value matches the stream.
+        for c in &got {
+            assert_eq!(all[c.index as usize], c.value);
+        }
+    }
+
+    #[test]
+    fn prop_stream_chunking_invariant() {
+        property("chunking does not change the result", 25, |g| {
+            let b = *g.choose(&[16usize, 64]);
+            let rows = g.usize_in(2..=20);
+            let n = b * rows;
+            let kp = g.usize_in(1..=3);
+            let k = g.usize_in(1..=(b * kp).min(n));
+            let values: Vec<f32> = (0..n).map(|_| g.rng().next_f32()).collect();
+
+            let mut one = StreamingTopK::new(b, kp, k);
+            one.push(&values);
+
+            let mut many = StreamingTopK::new(b, kp, k);
+            let mut rest: &[f32] = &values;
+            while !rest.is_empty() {
+                let take = g.usize_in(1..=rest.len());
+                many.push(&rest[..take]);
+                rest = &rest[take..];
+            }
+            assert_eq!(one.topk(), many.topk());
+        });
+    }
+}

@@ -1,0 +1,606 @@
+//! The generalized two-stage approximate Top-K on CPU (paper §6.1/§6.3).
+//!
+//! Stage 1 mirrors the Pallas kernel's structure exactly (see
+//! `python/compile/kernels/partial_reduce.py`): elements separated by a
+//! stride of B form a bucket, per-bucket state is a descending top-K′ list
+//! updated online with the insert + single-bubble-pass routine
+//! (Algorithm 1), state is laid out `[K′][B]` so the inner loop runs
+//! lane-parallel over buckets (Algorithm 2), and insertion uses `>=` while
+//! the bubble pass uses `>` — matching the kernel's tie behaviour.
+//!
+//! Stage 2 selects the top K of the `B·K′` merged candidates (quickselect
+//! by default; [`bitonic`](super::bitonic) for structural parity with TPU).
+
+use super::exact;
+use super::Candidate;
+
+/// Algorithm parameters (validated).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TwoStageParams {
+    /// Input length N.
+    pub n: usize,
+    /// Requested top-K.
+    pub k: usize,
+    /// Bucket count B (must divide N).
+    pub buckets: usize,
+    /// Per-bucket selection K′.
+    pub local_k: usize,
+}
+
+impl TwoStageParams {
+    pub fn new(n: usize, k: usize, buckets: usize, local_k: usize) -> Self {
+        assert!(n > 0 && k > 0 && buckets > 0 && local_k > 0);
+        assert!(k <= n, "K={k} > N={n}");
+        assert!(
+            n % buckets == 0,
+            "buckets={buckets} must divide N={n} (implementation constraint)"
+        );
+        assert!(
+            buckets * local_k >= k,
+            "B*K' = {} < K = {k}: stage 2 cannot produce K results",
+            buckets * local_k
+        );
+        TwoStageParams {
+            n,
+            k,
+            buckets,
+            local_k,
+        }
+    }
+
+    /// From the paper's auto-selection (`approx_top_k(x, K, recall_target)`).
+    pub fn auto(n: usize, k: usize, recall_target: f64) -> Option<Self> {
+        let cfg =
+            crate::params::select_parameters(n as u64, k as u64, recall_target, &[1, 2, 3, 4])?;
+        Some(TwoStageParams::new(
+            n,
+            k,
+            cfg.buckets as usize,
+            cfg.local_k as usize,
+        ))
+    }
+
+    /// Chern et al. (2022) baseline: K′=1 with their bucket formula
+    /// `B ≥ K/(1−r)`, rounded up to the next legal bucket count.
+    pub fn chern_baseline(n: usize, k: usize, recall_target: f64) -> Option<Self> {
+        let needed = crate::recall::bounds::chern_buckets_simplified(k as u64, recall_target);
+        let legal = crate::params::legal_bucket_counts(n as u64);
+        // legal is descending; pick the smallest legal >= needed.
+        let b = legal
+            .iter()
+            .copied()
+            .filter(|&b| b as f64 >= needed)
+            .min()?;
+        Some(TwoStageParams::new(n, k, b as usize, 1))
+    }
+
+    /// Our improved-bound K′=1 baseline (Theorem 1's B formula).
+    pub fn ours_k1_baseline(n: usize, k: usize, recall_target: f64) -> Option<Self> {
+        let needed = crate::recall::bounds::ours_buckets(n as u64, k as u64, recall_target);
+        let legal = crate::params::legal_bucket_counts(n as u64);
+        let b = legal
+            .iter()
+            .copied()
+            .filter(|&b| b as f64 >= needed && b >= k as u64)
+            .min()?;
+        Some(TwoStageParams::new(n, k, b as usize, 1))
+    }
+
+    pub fn num_candidates(&self) -> usize {
+        self.buckets * self.local_k
+    }
+
+    pub fn bucket_size(&self) -> usize {
+        self.n / self.buckets
+    }
+}
+
+/// Reusable first-stage state: values and indices, each `[K′][B]` with the
+/// bucket axis minor (the paper's `[batch, K′, B]` layout).
+#[derive(Debug, Clone)]
+pub struct Stage1State {
+    pub values: Vec<f32>,
+    pub indices: Vec<u32>,
+    /// K′ this state was sized for (rank count).
+    pub local_k: usize,
+    buckets: usize,
+}
+
+impl Stage1State {
+    pub fn new(params: &TwoStageParams) -> Self {
+        Self::with_dims(params.buckets, params.local_k)
+    }
+
+    /// Construct directly from (B, K′) — used by the streaming operator,
+    /// where no fixed input length N exists.
+    pub fn with_dims(buckets: usize, local_k: usize) -> Self {
+        assert!(buckets > 0 && local_k > 0);
+        Stage1State {
+            values: vec![f32::NEG_INFINITY; buckets * local_k],
+            indices: vec![0; buckets * local_k],
+            local_k,
+            buckets,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.values.fill(f32::NEG_INFINITY);
+        self.indices.fill(0);
+    }
+
+    /// The top-`rank` value slot for `bucket` (rank 0 = best).
+    #[inline]
+    pub fn slot(&self, rank: usize, bucket: usize) -> (f32, u32) {
+        let i = rank * self.buckets + bucket;
+        (self.values[i], self.indices[i])
+    }
+}
+
+/// The two-stage approximate Top-K operator. Reuses internal scratch, so
+/// construct once per shape and call [`run`](Self::run) per input.
+#[derive(Debug, Clone)]
+pub struct TwoStageTopK {
+    pub params: TwoStageParams,
+    state: Stage1State,
+    /// Candidate scratch reused across stage-2 calls (avoids two
+    /// allocations + copies per run; see EXPERIMENTS.md §Perf).
+    cand_scratch: Vec<Candidate>,
+}
+
+impl TwoStageTopK {
+    pub fn new(params: TwoStageParams) -> Self {
+        let state = Stage1State::new(&params);
+        TwoStageTopK {
+            params,
+            state,
+            cand_scratch: Vec::with_capacity(params.num_candidates()),
+        }
+    }
+
+    /// Run both stages on one row of N values.
+    pub fn run(&mut self, values: &[f32]) -> Vec<Candidate> {
+        self.stage1(values);
+        self.stage2()
+    }
+
+    /// Stage 1 only: populate the per-bucket top-K′ state.
+    pub fn stage1(&mut self, values: &[f32]) {
+        let p = &self.params;
+        assert_eq!(values.len(), p.n, "input length mismatch");
+        self.state.reset();
+        match p.local_k {
+            1 => self.stage1_k1(values),
+            2 => self.stage1_fixed::<2>(values),
+            3 => self.stage1_fixed::<3>(values),
+            4 => self.stage1_fixed::<4>(values),
+            5 => self.stage1_fixed::<5>(values),
+            6 => self.stage1_fixed::<6>(values),
+            8 => self.stage1_fixed::<8>(values),
+            _ => self.stage1_generic(values),
+        }
+    }
+
+    /// Generic online update (Algorithm 1/2), any K′.
+    fn stage1_generic(&mut self, values: &[f32]) {
+        let b = self.params.buckets;
+        let kp = self.params.local_k;
+        let vals = &mut self.state.values;
+        let idxs = &mut self.state.indices;
+        let rows = self.params.n / b;
+        for row in 0..rows {
+            let base = row * b;
+            let input_row = &values[base..base + b];
+            for lane in 0..b {
+                let x = input_row[lane];
+                let last = (kp - 1) * b + lane;
+                // Insert at the tail slot (non-strict, like the kernel).
+                if x >= vals[last] {
+                    vals[last] = x;
+                    idxs[last] = (base + lane) as u32;
+                    // Single bubble pass toward rank 0. The kernel's
+                    // loop-carried-dependency elimination (compare the
+                    // *input* against the next rank) is what makes this a
+                    // single pass: x is the only element that can move up.
+                    let mut r = kp - 1;
+                    while r > 0 {
+                        let hi = (r - 1) * b + lane;
+                        let lo = r * b + lane;
+                        if x > vals[hi] {
+                            vals.swap(hi, lo);
+                            idxs.swap(hi, lo);
+                            r -= 1;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// K′=1 specialization: a strided max (Chern et al.'s first stage).
+    /// Branchless select form — the CPU analogue of the TPU kernel's
+    /// "no early exit, keep it vectorizable" rule (§6.3): the compiler
+    /// auto-vectorizes the lane loop because there is no data-dependent
+    /// branch — plus lane blocking for cache residency at large B.
+    fn stage1_k1(&mut self, values: &[f32]) {
+        let b = self.params.buckets;
+        let rows = self.params.n / b;
+        let lane_block = 4096usize;
+        let mut block_start = 0;
+        while block_start < b {
+            let block_end = (block_start + lane_block).min(b);
+            let vals = &mut self.state.values[block_start..block_end];
+            let idxs = &mut self.state.indices[block_start..block_end];
+            for row in 0..rows {
+                let base = row * b + block_start;
+                let input_row = &values[base..base + (block_end - block_start)];
+                for (lane, ((&x, v), i)) in input_row
+                    .iter()
+                    .zip(vals.iter_mut())
+                    .zip(idxs.iter_mut())
+                    .enumerate()
+                {
+                    let take = x >= *v;
+                    *v = if take { x } else { *v };
+                    *i = if take { (base + lane) as u32 } else { *i };
+                }
+            }
+            block_start = block_end;
+        }
+    }
+
+    /// Const-K′ specialization with a two-phase row pass (perf log,
+    /// EXPERIMENTS.md §Perf):
+    ///
+    /// 1. **Mask scan** — a branchless, auto-vectorizable sweep compares
+    ///    the input lane against the bucket's tail (rank K′−1) value and
+    ///    packs the outcomes into a u64 bitmask. This is the CPU
+    ///    re-derivation of the paper's "no early exit keeps it
+    ///    vectorizable" rule: the hot comparison runs 8-wide with no
+    ///    data-dependent branch.
+    /// 2. **Sparse insert** — only the set bits (an element enters the
+    ///    top-K′ of its bucket ~K′·ln(rows)/rows of the time) pay the
+    ///    scalar insert + bubble.
+    fn stage1_fixed<const KP: usize>(&mut self, values: &[f32]) {
+        let b = self.params.buckets;
+        debug_assert_eq!(self.params.local_k, KP);
+        let rows = self.params.n / b;
+        // Lane blocking (perf log): iterate a block of buckets over *all*
+        // rows before moving to the next block, so the block's [K'][lanes]
+        // state stays L1/L2-resident — the paper's "schedule loop
+        // iterations so state loads/stores to the same buckets run
+        // consecutively", re-derived for CPU caches. Block sized so
+        // values+indices for KP ranks fit in ~32 KiB.
+        let lane_block = (4096 / KP).max(64);
+        let mut block_start = 0;
+        while block_start < b {
+            let block_end = (block_start + lane_block).min(b);
+            self.stage1_fixed_block::<KP>(values, rows, block_start, block_end);
+            block_start = block_end;
+        }
+    }
+
+    #[inline]
+    fn stage1_fixed_block<const KP: usize>(
+        &mut self,
+        values: &[f32],
+        rows: usize,
+        block_start: usize,
+        block_end: usize,
+    ) {
+        let b = self.params.buckets;
+        let vals = &mut self.state.values;
+        let idxs = &mut self.state.indices;
+        let tail_off = (KP - 1) * b;
+        for row in 0..rows {
+            let base = row * b;
+            let input_row = &values[base..base + b];
+            let mut lane = block_start;
+            while lane < block_end {
+                let end = (lane + 64).min(block_end);
+                // Phase 1: branchless tail-compare producing byte flags —
+                // a plain compare+store loop that LLVM vectorizes (the
+                // `(cond as u64) << j` mask-pack form does not).
+                let mut flags = [0u8; 64];
+                {
+                    let tail = &vals[tail_off + lane..tail_off + end];
+                    for ((f, &x), &t) in flags
+                        .iter_mut()
+                        .zip(input_row[lane..end].iter())
+                        .zip(tail.iter())
+                    {
+                        *f = (x >= t) as u8;
+                    }
+                }
+                // Collapse flags to a bitmask 8 bytes at a time.
+                let mut mask: u64 = 0;
+                for (j8, chunk8) in flags.chunks_exact(8).enumerate() {
+                    let w = u64::from_le_bytes(chunk8.try_into().unwrap());
+                    if w == 0 {
+                        continue;
+                    }
+                    for (j, &byte) in chunk8.iter().enumerate() {
+                        mask |= (byte as u64) << (j8 * 8 + j);
+                    }
+                }
+                // Phase 2: scalar insert+bubble on the (rare) hits.
+                while mask != 0 {
+                    let j = mask.trailing_zeros() as usize;
+                    mask &= mask - 1;
+                    let l = lane + j;
+                    let x = input_row[l];
+                    let last = tail_off + l;
+                    vals[last] = x;
+                    idxs[last] = (base + l) as u32;
+                    let mut r = KP - 1;
+                    while r > 0 {
+                        let hi = (r - 1) * b + l;
+                        let lo = r * b + l;
+                        if x > vals[hi] {
+                            vals.swap(hi, lo);
+                            idxs.swap(hi, lo);
+                            r -= 1;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                lane = end;
+            }
+        }
+    }
+
+    /// Stage 2: top-K of the merged candidates (skipping -inf slots that
+    /// occur when K′ exceeds a bucket's size). Selects in place over a
+    /// reused scratch buffer — no per-call allocation after warmup.
+    pub fn stage2(&mut self) -> Vec<Candidate> {
+        self.cand_scratch.clear();
+        if self.params.local_k > self.params.bucket_size() {
+            // -inf padding slots possible: filter them out.
+            self.cand_scratch.extend(
+                self.state
+                    .values
+                    .iter()
+                    .zip(self.state.indices.iter())
+                    .filter(|(v, _)| **v > f32::NEG_INFINITY)
+                    .map(|(&value, &index)| Candidate { index, value }),
+            );
+        } else {
+            self.cand_scratch.extend(
+                self.state
+                    .values
+                    .iter()
+                    .zip(self.state.indices.iter())
+                    .map(|(&value, &index)| Candidate { index, value }),
+            );
+        }
+        let k = self.params.k.min(self.cand_scratch.len());
+        if k < self.cand_scratch.len() {
+            exact::select_top(&mut self.cand_scratch, k);
+        }
+        let mut out = self.cand_scratch[..k].to_vec();
+        super::sort_candidates(&mut out);
+        out
+    }
+
+    /// Read-only view of the first-stage state (for tests and the runtime
+    /// cross-check against the Pallas kernel).
+    pub fn state(&self) -> &Stage1State {
+        &self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::{exact::topk_sort, recall_of};
+    use crate::util::check::property;
+    use crate::util::Rng;
+
+    fn random_values(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32()).collect()
+    }
+
+    #[test]
+    fn perfect_recall_when_capacity_suffices() {
+        // K' = bucket size: stage 1 keeps everything.
+        let p = TwoStageParams::new(64, 16, 8, 8);
+        let mut ts = TwoStageTopK::new(p);
+        let mut rng = Rng::new(1);
+        let v = random_values(&mut rng, 64);
+        let got = ts.run(&v);
+        let want = topk_sort(&v, 16);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fig5_walkthrough() {
+        // Paper Figure 5: 20 elements, 4 buckets, top-3, K'=1. Buckets group
+        // elements separated by stride 4.
+        // Construct values where two of the top-3 collide in bucket 0:
+        // indices 0 and 4 are both in bucket 0 (0%4 == 4%4 == 0).
+        let mut v = vec![0.0f32; 20];
+        v[0] = 100.0; // top-1, bucket 0
+        v[4] = 99.0; // top-2, bucket 0 (collides; will be dropped)
+        v[7] = 98.0; // top-3, bucket 3
+        let p = TwoStageParams::new(20, 3, 4, 1);
+        let mut ts = TwoStageTopK::new(p);
+        let got = ts.run(&v);
+        let got_idx: Vec<u32> = got.iter().map(|c| c.index).collect();
+        assert!(got_idx.contains(&0));
+        assert!(got_idx.contains(&7));
+        assert!(!got_idx.contains(&4), "collided element must be dropped");
+        let exact = topk_sort(&v, 3);
+        assert!((recall_of(&exact, &got) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_assignment_is_strided() {
+        // With B=4, N=8: bucket 1 sees indices 1 and 5.
+        let v = [0.0f32, 5.0, 0.0, 0.0, 0.0, 9.0, 0.0, 0.0];
+        let p = TwoStageParams::new(8, 1, 4, 1);
+        let mut ts = TwoStageTopK::new(p);
+        ts.stage1(&v);
+        let (val, idx) = ts.state().slot(0, 1);
+        assert_eq!(val, 9.0);
+        assert_eq!(idx, 5);
+    }
+
+    #[test]
+    fn state_is_descending_per_bucket() {
+        let mut rng = Rng::new(3);
+        let v = random_values(&mut rng, 1024);
+        let p = TwoStageParams::new(1024, 32, 128, 4);
+        let mut ts = TwoStageTopK::new(p);
+        ts.stage1(&v);
+        for bucket in 0..128 {
+            for r in 1..4 {
+                let (hi, _) = ts.state().slot(r - 1, bucket);
+                let (lo, _) = ts.state().slot(r, bucket);
+                assert!(hi >= lo, "bucket {bucket} rank {r}: {hi} < {lo}");
+            }
+        }
+    }
+
+    #[test]
+    fn stage1_state_matches_per_bucket_exact_topk() {
+        let mut rng = Rng::new(17);
+        let n = 4096;
+        let b = 256;
+        let kp = 3;
+        let v = random_values(&mut rng, n);
+        let p = TwoStageParams::new(n, 64, b, kp);
+        let mut ts = TwoStageTopK::new(p);
+        ts.stage1(&v);
+        for bucket in 0..b {
+            // Gather this bucket's elements and take exact top-K'.
+            let members: Vec<f32> = (0..n / b).map(|j| v[j * b + bucket]).collect();
+            let want = topk_sort(&members, kp);
+            for (r, w) in want.iter().enumerate() {
+                let (val, idx) = ts.state().slot(r, bucket);
+                assert_eq!(val, w.value, "bucket {bucket} rank {r}");
+                // Translate member index back to the input index.
+                assert_eq!(idx as usize % b, bucket);
+                assert_eq!(v[idx as usize], w.value);
+            }
+        }
+    }
+
+    #[test]
+    fn measured_recall_matches_theory() {
+        // Run the full algorithm on random data and compare against the
+        // Theorem-1 expectation at a few configs.
+        let mut rng = Rng::new(2025);
+        for &(n, k, b, kp, trials) in
+            &[(8192usize, 128usize, 512usize, 1usize, 60usize), (8192, 128, 128, 2, 60)]
+        {
+            let theory = crate::recall::expected_recall(&crate::recall::RecallConfig::new(
+                n as u64, k as u64, b as u64, kp as u64,
+            ));
+            let p = TwoStageParams::new(n, k, b, kp);
+            let mut ts = TwoStageTopK::new(p);
+            let mut total = 0.0;
+            for _ in 0..trials {
+                let v = random_values(&mut rng, n);
+                let got = ts.run(&v);
+                let want = topk_sort(&v, k);
+                total += recall_of(&want, &got);
+            }
+            let mean = total / trials as f64;
+            // Binomial-ish std err: sqrt(p(1-p)/ (K*trials)) — generous 4σ.
+            let se = (theory * (1.0 - theory) / (k * trials) as f64).sqrt() + 0.01;
+            assert!(
+                (mean - theory).abs() < 4.0 * se,
+                "({n},{k},{b},{kp}): measured {mean:.4} vs theory {theory:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_params_match_paper_example() {
+        let p = TwoStageParams::auto(262_144, 1024, 0.95).unwrap();
+        assert_eq!((p.local_k, p.buckets), (4, 512));
+        let c = TwoStageParams::chern_baseline(262_144, 1024, 0.95).unwrap();
+        assert_eq!(c.local_k, 1);
+        // Chern's formula: K/(1-r) = 20480 -> next legal divisor >= that.
+        assert!(c.buckets >= 20_480);
+        let o1 = TwoStageParams::ours_k1_baseline(262_144, 1024, 0.95).unwrap();
+        // Our bound: K/(2(1-r+K/2N)) ≈ 9552 -> 16384 after rounding.
+        assert!(o1.buckets < c.buckets, "ours={} chern={}", o1.buckets, c.buckets);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn rejects_non_dividing_buckets() {
+        TwoStageParams::new(100, 10, 7, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "stage 2 cannot produce")]
+    fn rejects_insufficient_candidates() {
+        TwoStageParams::new(128, 64, 16, 1);
+    }
+
+    #[test]
+    fn prop_subset_of_input_and_no_duplicates() {
+        property("two-stage output well-formed", 40, |g| {
+            let b = *g.choose(&[16usize, 32, 64]);
+            let rows = g.usize_in(2..=32);
+            let n = b * rows;
+            let kp = g.usize_in(1..=4.min(rows));
+            let k = g.usize_in(1..=(b * kp).min(n));
+            let p = TwoStageParams::new(n, k, b, kp);
+            let mut ts = TwoStageTopK::new(p);
+            let v: Vec<f32> = (0..n).map(|_| g.rng().next_f32()).collect();
+            let got = ts.run(&v);
+            assert_eq!(got.len(), k.min(p.num_candidates()));
+            let mut seen = std::collections::HashSet::new();
+            for c in &got {
+                assert!(seen.insert(c.index), "duplicate index {}", c.index);
+                assert_eq!(v[c.index as usize], c.value);
+            }
+            // Canonical ordering.
+            for w in got.windows(2) {
+                assert!(w[0].beats(&w[1]) || (w[0].value == w[1].value));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_generic_and_fixed_agree() {
+        property("stage1 specializations agree", 30, |g| {
+            let b = *g.choose(&[16usize, 128]);
+            let rows = g.usize_in(4..=16);
+            let n = b * rows;
+            let kp = g.usize_in(2..=4);
+            let v: Vec<f32> = (0..n).map(|_| g.rng().next_f32()).collect();
+            let p = TwoStageParams::new(n, 8, b, kp);
+            let mut fixed = TwoStageTopK::new(p);
+            fixed.stage1(&v);
+            let mut generic = TwoStageTopK::new(p);
+            generic.stage1_generic(&v);
+            assert_eq!(fixed.state().values, generic.state().values);
+            assert_eq!(fixed.state().indices, generic.state().indices);
+        });
+    }
+
+    #[test]
+    fn prop_recall_one_when_kprime_covers_k() {
+        property("K' >= K => exact", 20, |g| {
+            let b = *g.choose(&[32usize, 64]);
+            let rows = g.usize_in(8..=16);
+            let n = b * rows;
+            let k = g.usize_in(1..=4);
+            let kp = k.min(rows); // K' >= K (k <= 4 <= rows)
+            if kp < k {
+                return;
+            }
+            let v: Vec<f32> = (0..n).map(|_| g.rng().next_f32()).collect();
+            let mut ts = TwoStageTopK::new(TwoStageParams::new(n, k, b, kp));
+            let got = ts.run(&v);
+            let want = topk_sort(&v, k);
+            assert_eq!(recall_of(&want, &got), 1.0);
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] (a seeded value source). The
+//! runner executes it for many seeded cases; on failure it reports the case
+//! seed so the exact counterexample can be replayed deterministically:
+//!
+//! ```no_run
+//! use fastk::util::check::{property, Gen};
+//! property("reverse is involutive", 64, |g: &mut Gen| {
+//!     let v = g.vec_u32(0..=16, 1000);
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::RangeInclusive;
+
+/// Seeded value source handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer in an inclusive range.
+    pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.next_usize(hi - lo + 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_usize(xs.len())]
+    }
+
+    /// Vector of random length in `len` with elements < `bound`.
+    pub fn vec_u32(&mut self, len: RangeInclusive<usize>, bound: u32) -> Vec<u32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.next_below(bound as u64) as u32).collect()
+    }
+
+    /// Vector of f32 with distinct-ish values (uniform [0,1)).
+    pub fn vec_f32(&mut self, len: RangeInclusive<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.next_f32()).collect()
+    }
+
+    /// Access the underlying RNG for custom draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// A divisor of `n` chosen uniformly from all divisors.
+    pub fn divisor_of(&mut self, n: usize) -> usize {
+        let divs = crate::util::divisors(n);
+        *self.choose(&divs)
+    }
+}
+
+/// Run `cases` seeded instances of a property. Panics (with the case seed)
+/// on the first failure. `FASTK_CHECK_CASES` overrides the case count and
+/// `FASTK_CHECK_SEED` replays a single case.
+pub fn property<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut f: F) {
+    if let Ok(seed) = std::env::var("FASTK_CHECK_SEED") {
+        let seed: u64 = seed.parse().expect("FASTK_CHECK_SEED must be u64");
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case: 0,
+        };
+        f(&mut g);
+        return;
+    }
+    let cases = std::env::var("FASTK_CHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    for case in 0..cases {
+        // Stable per-property seed: hash of name + case index.
+        let seed = fnv1a(name.as_bytes()) ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                case,
+            };
+            f(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property `{name}` failed at case {case} \
+                 (replay with FASTK_CHECK_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("trivially true", 10, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with FASTK_CHECK_SEED=")]
+    fn failing_property_reports_seed() {
+        property("always fails", 5, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        property("ranges", 50, |g| {
+            let x = g.usize_in(3..=9);
+            assert!((3..=9).contains(&x));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_u32(2..=5, 10);
+            assert!(v.len() >= 2 && v.len() <= 5);
+            assert!(v.iter().all(|&x| x < 10));
+        });
+    }
+
+    #[test]
+    fn divisor_gen_divides() {
+        property("divisors divide", 50, |g| {
+            let n = g.usize_in(1..=10_000);
+            let d = g.divisor_of(n);
+            assert_eq!(n % d, 0);
+        });
+    }
+}

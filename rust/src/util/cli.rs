@@ -1,0 +1,162 @@
+//! Tiny command-line flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments. Positionals must precede flags (a bare `--flag` would
+//! otherwise ambiguously capture the next positional as its value). Each
+//! subcommand in `main.rs` declares its flags up front so `--help` output
+//! and unknown-flag errors are uniform.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. Flags may be `--name value`, `--name=value`, or a
+    /// bare `--name` (stored as "true"). Everything else is positional.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Peek: if the next token is not a flag, it's this flag's value.
+                    let takes_value =
+                        matches!(it.peek(), Some(n) if !n.starts_with("--"));
+                    if takes_value {
+                        flags.insert(name.to_string(), it.next().unwrap());
+                    } else {
+                        flags.insert(name.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { flags, positional }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.replace('_', "").parse().unwrap_or_else(|_| {
+                    panic!("flag --{name} expects an integer, got `{v}`")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.usize_or(name, default as usize) as u64
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("flag --{name} expects a number, got `{v}`")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, name: &str, default: bool) -> bool {
+        match self.get(name) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("flag --{name} expects a bool, got `{v}`"),
+        }
+    }
+
+    /// Error out on flags not in the allowed set (catches typos).
+    pub fn reject_unknown(&self, allowed: &[&str]) {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                panic!(
+                    "unknown flag --{k}; allowed: {}",
+                    allowed
+                        .iter()
+                        .map(|a| format!("--{a}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_flag_styles() {
+        let a = parse(&["pos1", "pos2", "--n", "42", "--name=abc", "--verbose"]);
+        assert_eq!(a.usize_or("n", 0), 42);
+        assert_eq!(a.str_or("name", ""), "abc");
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional(), &["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("r", 0.95), 0.95);
+        assert!(!a.bool_or("x", false));
+    }
+
+    #[test]
+    fn underscore_separators() {
+        let a = parse(&["--n", "262_144"]);
+        assert_eq!(a.usize_or("n", 0), 262144);
+    }
+
+    #[test]
+    fn bare_flag_before_flag() {
+        let a = parse(&["--fused", "--n", "8"]);
+        assert!(a.bool_or("fused", false));
+        assert_eq!(a.usize_or("n", 0), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown flag")]
+    fn unknown_flag_rejected() {
+        let a = parse(&["--whoops", "1"]);
+        a.reject_unknown(&["n", "k"]);
+    }
+
+    #[test]
+    fn float_flags() {
+        let a = parse(&["--recall", "0.99"]);
+        assert_eq!(a.f64_or("recall", 0.0), 0.99);
+    }
+}

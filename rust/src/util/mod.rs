@@ -1,0 +1,90 @@
+//! Small self-contained utilities (PRNG, stats, JSON, CLI parsing, property
+//! testing). Everything here is dependency-free; the offline environment has
+//! no serde/clap/criterion/proptest, so these modules stand in for them.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+/// All divisors of `n` in ascending order.
+pub fn divisors(n: usize) -> Vec<usize> {
+    assert!(n > 0);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            small.push(i);
+            if i != n / i {
+                large.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Smallest multiple of `m` that is >= `n`.
+pub fn round_up(n: usize, m: usize) -> usize {
+    assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// True if `n` is a power of two (n > 0).
+pub fn is_pow2(n: usize) -> bool {
+    n > 0 && n & (n - 1) == 0
+}
+
+/// Smallest power of two >= n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// ceil(log2(n)) for n >= 1.
+pub fn ceil_log2(n: usize) -> u32 {
+    assert!(n >= 1);
+    usize::BITS - (n - 1).leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_correct() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(divisors(97), vec![1, 97]); // prime
+        let d = divisors(262_144);
+        assert_eq!(d.len(), 19); // 2^18 has 19 divisors
+        assert!(d.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn round_up_cases() {
+        assert_eq!(round_up(0, 128), 0);
+        assert_eq!(round_up(1, 128), 128);
+        assert_eq!(round_up(128, 128), 128);
+        assert_eq!(round_up(129, 128), 256);
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(1024));
+        assert!(!is_pow2(1000));
+        assert_eq!(next_pow2(1000), 1024);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+}

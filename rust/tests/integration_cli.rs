@@ -1,0 +1,114 @@
+//! End-to-end CLI tests: run the `fastk` binary as a subprocess, the way a
+//! user would.
+
+use std::process::Command;
+
+fn fastk() -> Command {
+    // cargo builds the bin for integration tests; CARGO_BIN_EXE_<name>.
+    Command::new(env!("CARGO_BIN_EXE_fastk"))
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = fastk().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["params", "recall", "table1", "table2", "serve", "selftest"] {
+        assert!(s.contains(cmd), "help missing `{cmd}`");
+    }
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let out = fastk().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn params_reproduces_paper_selection() {
+    let out = fastk()
+        .args(["params", "--n", "262144", "--k", "1024", "--recall", "0.95"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("K'=4 B=512"), "got: {s}");
+    assert!(s.contains("8.0x reduction"), "got: {s}");
+}
+
+#[test]
+fn recall_command_outputs_exact_and_mc() {
+    let out = fastk()
+        .args([
+            "recall", "--n", "262144", "--k", "1024", "--buckets", "512", "--local-k",
+            "4", "--trials", "20000",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("exact (Theorem 1): 0.96"), "got: {s}");
+}
+
+#[test]
+fn table1_prints_all_devices() {
+    let out = fastk().arg("table1").output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    for dev in ["A100", "H100", "TPUv4", "TPUv5e"] {
+        assert!(s.contains(dev), "table1 missing {dev}");
+    }
+}
+
+#[test]
+fn init_config_then_serve_small() {
+    let dir = std::env::temp_dir().join(format!("fastk-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("serve.json");
+    // A deliberately tiny native-backend config so the load test is fast.
+    std::fs::write(
+        &cfg_path,
+        r#"{"d": 16, "k": 16, "shards": 2, "shard_size": 1024,
+            "recall_target": 0.9, "batch_max": 4, "batch_delay_us": 500,
+            "backend": "native", "seed": 5}"#,
+    )
+    .unwrap();
+    let out = fastk()
+        .args([
+            "serve",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--queries",
+            "32",
+        ])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {s}\nstderr: {e}");
+    assert!(s.contains("throughput"), "got: {s}");
+    assert!(s.contains("recall@16"), "got: {s}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn selftest_passes_when_artifacts_exist() {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json");
+    if !manifest.exists() {
+        eprintln!("skipping selftest: artifacts not built");
+        return;
+    }
+    let out = fastk()
+        .args([
+            "selftest",
+            "--artifacts",
+            manifest.parent().unwrap().to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {s}\nstderr: {e}");
+    assert!(s.contains("selftest OK"), "got: {s}");
+}

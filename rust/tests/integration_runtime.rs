@@ -1,0 +1,212 @@
+//! Integration tests over the real AOT artifacts through PJRT.
+//!
+//! These require `make artifacts` to have run; they skip (pass trivially,
+//! with a note on stderr) when `artifacts/manifest.json` is absent so that
+//! `cargo test` works on a fresh checkout. CI order is: `make artifacts`
+//! then `cargo test`.
+
+use std::path::{Path, PathBuf};
+
+use fastk::coordinator::{
+    BackendFactory, BatcherConfig, MipsService, NativeBackend, PjrtBackend, ServiceConfig,
+    ShardBackend,
+};
+use fastk::runtime::{Executor, HostTensor};
+use fastk::topk::{self, TwoStageParams};
+use fastk::util::Rng;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_approx_topk_matches_native_kernel() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = Executor::new(&dir).unwrap();
+    let entry = exec
+        .manifest
+        .find("approx_topk_b4_n2048_k32_kp2_bb256")
+        .expect("smoke artifact")
+        .clone();
+    let compiled = exec.compile(&entry.name).unwrap();
+    let (batch, n, k) = (4usize, 2048usize, 32usize);
+
+    let mut rng = Rng::new(42);
+    let mut x = vec![0f32; batch * n];
+    rng.fill_f32(&mut x);
+    let out = compiled.run(&[HostTensor::F32(x.clone())]).unwrap();
+    let values = out[0].as_f32().unwrap();
+    let indices = out[1].as_i32().unwrap();
+
+    let mut ts = topk::TwoStageTopK::new(TwoStageParams::new(n, k, 256, 2));
+    for b in 0..batch {
+        let want = ts.run(&x[b * n..(b + 1) * n]);
+        for (j, w) in want.iter().enumerate() {
+            assert_eq!(values[b * k + j], w.value, "row {b} slot {j}");
+            assert_eq!(indices[b * k + j] as u32, w.index, "row {b} slot {j}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_exact_topk_matches_rust_exact() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = Executor::new(&dir).unwrap();
+    let Some(entry) = exec.manifest.find_kind("exact_topk") else {
+        return;
+    };
+    let entry = entry.clone();
+    let batch = entry.param_usize("batch").unwrap();
+    let n = entry.param_usize("n").unwrap();
+    let k = entry.param_usize("k").unwrap();
+    let compiled = exec.compile(&entry.name).unwrap();
+
+    let mut rng = Rng::new(7);
+    // Use distinct values (permutation) so tie-breaking can't differ.
+    let mut x = Vec::with_capacity(batch * n);
+    for _ in 0..batch {
+        let mut row: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        rng.shuffle(&mut row);
+        x.extend_from_slice(&row);
+    }
+    let out = compiled.run(&[HostTensor::F32(x.clone())]).unwrap();
+    let values = out[0].as_f32().unwrap();
+    let indices = out[1].as_i32().unwrap();
+    for b in 0..batch {
+        let want = topk::exact::topk_sort(&x[b * n..(b + 1) * n], k);
+        for (j, w) in want.iter().enumerate() {
+            assert_eq!(values[b * k + j], w.value, "row {b} slot {j}");
+            assert_eq!(indices[b * k + j] as u32, w.index, "row {b} slot {j}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_mips_fused_agrees_with_native_scoring() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = Executor::new(&dir).unwrap();
+    let Some(entry) = exec.manifest.find_kind("mips_fused") else {
+        return;
+    };
+    let entry = entry.clone();
+    let d = entry.param_usize("d").unwrap();
+    let n = entry.param_usize("n").unwrap();
+    let k = entry.param_usize("k").unwrap();
+    let buckets = entry.param_usize("buckets").unwrap();
+    let local_k = entry.param_usize("local_k").unwrap();
+    let compiled = exec.compile(&entry.name).unwrap();
+
+    let mut rng = Rng::new(3);
+    let db: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+    let mut pjrt = PjrtBackend::new(compiled, &db, d).unwrap();
+    let mut native = NativeBackend::new(
+        db.clone(),
+        d,
+        k,
+        Some(TwoStageParams::new(n, k, buckets, local_k)),
+    );
+
+    let nq = 3; // partial batch exercises padding
+    let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+    let got = pjrt.score_topk(&queries, nq).unwrap();
+    let want = native.score_topk(&queries, nq).unwrap();
+    assert_eq!(got.len(), nq);
+    for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.len(), k);
+        // Index sets must agree except where f32 matmul rounding reorders
+        // near-equal scores; compare as sets with a tolerance fallback.
+        let gs: std::collections::HashSet<u32> = g.iter().map(|c| c.index).collect();
+        let ws: std::collections::HashSet<u32> = w.iter().map(|c| c.index).collect();
+        let overlap = gs.intersection(&ws).count();
+        assert!(
+            overlap as f64 >= 0.97 * k as f64,
+            "query {qi}: only {overlap}/{k} indices agree"
+        );
+        // Values at agreed indices match to matmul tolerance.
+        for c in g {
+            if let Some(wc) = w.iter().find(|x| x.index == c.index) {
+                assert!(
+                    (c.value - wc.value).abs() <= 1e-3 * (1.0 + wc.value.abs()),
+                    "query {qi} idx {}: {} vs {}",
+                    c.index,
+                    c.value,
+                    wc.value
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn coordinator_serves_through_pjrt_backend() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = Executor::new(&dir).unwrap();
+    let Some(entry) = exec.manifest.find_kind("mips_fused") else {
+        return;
+    };
+    let entry = entry.clone();
+    let d = entry.param_usize("d").unwrap();
+    let n = entry.param_usize("n").unwrap();
+    let k = entry.param_usize("k").unwrap();
+    let name = entry.name.clone();
+
+    let shards = 2usize;
+    let mut rng = Rng::new(11);
+    let db: Vec<f32> = (0..shards * n * d)
+        .map(|_| rng.next_gaussian() as f32)
+        .collect();
+
+    let mut factories: Vec<BackendFactory> = Vec::new();
+    let mut offsets = Vec::new();
+    for s in 0..shards {
+        let chunk = db[s * n * d..(s + 1) * n * d].to_vec();
+        let dir = dir.clone();
+        let name = name.clone();
+        offsets.push(s * n);
+        factories.push(Box::new(move || {
+            let exec = Executor::new(&dir)?;
+            let compiled = exec.compile(&name)?;
+            Ok(Box::new(PjrtBackend::new(compiled, &chunk, d)?) as Box<dyn ShardBackend>)
+        }));
+    }
+    let svc = MipsService::start(
+        ServiceConfig {
+            d,
+            k,
+            batcher: BatcherConfig::default(),
+        },
+        factories,
+        offsets,
+    )
+    .unwrap();
+
+    // A couple of queries; check recall against the exact oracle.
+    let mut hit = 0usize;
+    let queries = 2;
+    for id in 0..queries {
+        let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let resp = svc.query(id, q.clone()).unwrap();
+        assert_eq!(resp.results.len(), k);
+        let scores: Vec<f32> = (0..shards * n)
+            .map(|j| {
+                let v = &db[j * d..(j + 1) * d];
+                q.iter().zip(v).map(|(a, b)| a * b).sum()
+            })
+            .collect();
+        let want: std::collections::HashSet<usize> =
+            topk::exact::topk_quickselect(&scores, k)
+                .into_iter()
+                .map(|c| c.index as usize)
+                .collect();
+        hit += resp.results.iter().filter(|(i, _)| want.contains(i)).count();
+    }
+    let recall = hit as f64 / (queries as usize * k) as f64;
+    assert!(recall > 0.9, "pjrt coordinator recall {recall}");
+    svc.shutdown();
+}
