@@ -1,0 +1,116 @@
+//! Parallel Stage-1 scaling bench: single-thread vs multi-thread
+//! throughput of the `topk::parallel` engine across thread counts and
+//! batch sizes (supports the multi-core tentpole; not a paper table — the
+//! paper's lane-parallel axis is the TPU VPU, this is its CPU analogue).
+//!
+//! Reports per-query time and effective input GB/s for:
+//!
+//! - the sequential `TwoStageTopK` baseline,
+//! - `ParallelTwoStageTopK` at 1/2/4/8 threads (single query), and
+//! - `run_batch` at batch sizes 1/4/16 (dispatch amortization).
+//!
+//! Emits the shared bench JSON schema when `FASTK_BENCH_JSON=<dir>` is set.
+
+use fastk::bench_harness::{banner, bench, maybe_write_json, BenchResult, Table};
+use fastk::topk::{ParallelTwoStageTopK, TwoStageParams, TwoStageTopK};
+use fastk::util::stats::fmt_ns;
+use fastk::util::Rng;
+
+fn gb_per_s(n: usize, secs: f64) -> f64 {
+    n as f64 * 4.0 / secs / 1e9
+}
+
+fn main() {
+    let n = 1 << 20; // N = 2^20: the acceptance-scale single-query workload
+    let k = 1024usize;
+    let (b, kp) = (2048usize, 4usize);
+    let params = TwoStageParams::new(n, k, b, kp);
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let mut rng = Rng::new(13);
+    let mut input = vec![0f32; n];
+    rng.fill_f32(&mut input);
+    let mut all_results: Vec<BenchResult> = Vec::new();
+
+    banner(&format!(
+        "single-query scaling: N={n}, K={k}, B={b}, K'={kp} ({cores} cores available)"
+    ));
+    let mut seq = TwoStageTopK::new(params);
+    let seq_r = bench("sequential", || {
+        std::hint::black_box(seq.run(&input));
+    });
+    let seq_s = seq_r.min_s();
+
+    let mut t = Table::new(&["ENGINE", "THREADS", "time/query", "GB/s in", "vs sequential"]);
+    t.row(vec![
+        "sequential".into(),
+        "1".into(),
+        fmt_ns(seq_r.summary.min),
+        format!("{:.2}", gb_per_s(n, seq_s)),
+        "1.00x".into(),
+    ]);
+    all_results.push(seq_r);
+
+    let mut one_thread_s = seq_s;
+    for threads in [1usize, 2, 4, 8] {
+        let mut par = ParallelTwoStageTopK::new(params, threads);
+        let r = bench(&format!("parallel_t{threads}"), || {
+            std::hint::black_box(par.run(&input));
+        });
+        let secs = r.min_s();
+        if threads == 1 {
+            one_thread_s = secs;
+        }
+        t.row(vec![
+            "parallel".into(),
+            threads.to_string(),
+            fmt_ns(r.summary.min),
+            format!("{:.2}", gb_per_s(n, secs)),
+            format!("{:.2}x", seq_s / secs),
+        ]);
+        all_results.push(r);
+    }
+    t.print();
+    println!(
+        "(acceptance check: >= 2x single-query Stage-1 throughput at 4 threads\n\
+         for N >= 2^20 — compare the parallel 4-thread row against 1 thread)"
+    );
+
+    banner("batched throughput: run_batch amortizing pool dispatch");
+    let batch_queries: Vec<Vec<f32>> = (0..16)
+        .map(|_| {
+            let mut v = vec![0f32; n];
+            rng.fill_f32(&mut v);
+            v
+        })
+        .collect();
+    let threads = cores.max(2).min(8);
+    let mut par = ParallelTwoStageTopK::new(params, threads);
+    let mut t2 = Table::new(&["BATCH", "THREADS", "time/query", "queries/s"]);
+    for batch in [1usize, 4, 16] {
+        let refs: Vec<&[f32]> = batch_queries[..batch].iter().map(|q| q.as_slice()).collect();
+        let r = bench(&format!("batch{batch}_t{threads}"), || {
+            std::hint::black_box(par.run_batch(&refs));
+        });
+        let per_query_s = r.min_s() / batch as f64;
+        t2.row(vec![
+            batch.to_string(),
+            threads.to_string(),
+            fmt_ns(r.summary.min / batch as f64),
+            format!("{:.1}", 1.0 / per_query_s),
+        ]);
+        all_results.push(r);
+    }
+    t2.print();
+
+    let speedup4 = all_results
+        .iter()
+        .find(|r| r.name == "parallel_t4")
+        .map(|r| one_thread_s / r.min_s())
+        .unwrap_or(0.0);
+    println!(
+        "\n4-thread vs 1-thread parallel engine: {speedup4:.2}x \
+         (on a {cores}-core host; scaling saturates at the core count)"
+    );
+
+    maybe_write_json("parallel_scaling", &all_results);
+}

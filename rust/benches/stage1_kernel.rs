@@ -8,7 +8,7 @@
 //! Reports effective GB/s of input consumption — the CPU counterpart of
 //! the paper's "stage 1 stays memory-bound until K'~6" claim.
 
-use fastk::bench_harness::{banner, bench, Table};
+use fastk::bench_harness::{banner, bench, maybe_write_json, BenchResult, Table};
 use fastk::topk::{TwoStageParams, TwoStageTopK};
 use fastk::util::stats::fmt_ns;
 use fastk::util::Rng;
@@ -20,6 +20,7 @@ fn main() {
     let mut rng = Rng::new(8);
     let mut input = vec![0f32; n];
     rng.fill_f32(&mut input);
+    let mut all_results: Vec<BenchResult> = Vec::new();
 
     let mut t = Table::new(&["K'", "time", "GB/s in", "ns/elt", "vs K'=1"]);
     let mut base = 0.0f64;
@@ -41,6 +42,7 @@ fn main() {
             format!("{:.2}", secs * 1e9 / n as f64),
             format!("{:.2}x", secs / base),
         ]);
+        all_results.push(r);
     }
     t.print();
 
@@ -59,7 +61,9 @@ fn main() {
             fmt_ns(r.summary.min),
             format!("{:.2}", n as f64 * 4.0 / r.min_s() / 1e9),
         ]);
+        all_results.push(r);
     }
     t2.print();
     println!("(expect a knee once the [K'][B] state spills the innermost cache)");
+    maybe_write_json("stage1_kernel", &all_results);
 }

@@ -1,12 +1,15 @@
 //! Minimal benchmark harness (criterion is unavailable offline).
 //!
 //! Used by the `harness = false` bench binaries under `rust/benches/`.
-//! Provides warmup + timed iterations with min/mean/p50 reporting, and a
+//! Provides warmup + timed iterations with min/mean/p50 reporting, a
 //! paper-style table printer so every bench emits the same rows/series the
-//! paper reports.
+//! paper reports, and a shared JSON result schema ([`results_to_json`])
+//! written when `FASTK_BENCH_JSON=<dir>` is set so runs can be diffed
+//! across machines and commits.
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::{fmt_ns, Summary};
 
 /// Timing result of one benchmark case.
@@ -124,6 +127,46 @@ pub fn banner(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// The shared per-result JSON schema every bench emits: name, iteration
+/// count, and the timing summary in nanoseconds.
+pub fn result_to_json(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&r.name)),
+        ("iterations", Json::num(r.iterations as f64)),
+        ("min_ns", Json::num(r.summary.min)),
+        ("mean_ns", Json::num(r.summary.mean)),
+        ("p50_ns", Json::num(r.summary.p50)),
+        ("p90_ns", Json::num(r.summary.p90)),
+        ("p99_ns", Json::num(r.summary.p99)),
+        ("max_ns", Json::num(r.summary.max)),
+        ("std_ns", Json::num(r.summary.std)),
+    ])
+}
+
+/// A whole bench run in the shared schema:
+/// `{"bench": <name>, "results": [<result_to_json>, ...]}`.
+pub fn results_to_json(bench: &str, results: &[BenchResult]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("results", Json::Arr(results.iter().map(result_to_json).collect())),
+    ])
+}
+
+/// When `FASTK_BENCH_JSON=<dir>` is set, write `<dir>/<bench>.json` in the
+/// shared schema; otherwise do nothing. Bench binaries call this once at
+/// the end of `main`.
+pub fn maybe_write_json(bench: &str, results: &[BenchResult]) {
+    let Ok(dir) = std::env::var("FASTK_BENCH_JSON") else {
+        return;
+    };
+    let path = std::path::Path::new(&dir).join(format!("{bench}.json"));
+    let _ = std::fs::create_dir_all(&dir);
+    match std::fs::write(&path, results_to_json(bench, results).to_string()) {
+        Ok(()) => println!("(bench results written to {})", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +187,21 @@ mod tests {
         assert!(r.iterations >= 3);
         assert!(count as usize >= r.iterations);
         assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn json_schema_round_trips() {
+        let r = bench_config("probe", 0, 2, 4, Duration::from_millis(1), &mut || {});
+        let j = results_to_json("unit_test", &[r]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit_test"));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        let first = &results[0];
+        assert_eq!(first.get("name").unwrap().as_str(), Some("probe"));
+        for key in ["iterations", "min_ns", "mean_ns", "p50_ns", "p99_ns"] {
+            assert!(first.get(key).unwrap().as_f64().is_some(), "missing {key}");
+        }
     }
 
     #[test]

@@ -26,8 +26,11 @@ use crate::util::json::Json;
 /// Which execution backend shards use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
-    /// Pure-Rust matmul + two-stage kernel.
+    /// Pure-Rust matmul + two-stage kernel (single core per shard).
     Native,
+    /// Pure-Rust matmul + the multi-core `topk::parallel` engine
+    /// (`threads` Stage-1 workers per shard).
+    NativeParallel,
     /// AOT artifacts through PJRT (requires `make artifacts`).
     Pjrt,
 }
@@ -42,6 +45,9 @@ pub struct LauncherConfig {
     pub recall_target: f64,
     pub batcher: BatcherConfig,
     pub backend: BackendKind,
+    /// Stage-1 worker threads per shard for the `native-parallel` backend
+    /// (0 = one per available core).
+    pub threads: usize,
     pub artifact: Option<String>,
     pub artifact_dir: String,
     pub seed: u64,
@@ -57,6 +63,7 @@ impl Default for LauncherConfig {
             recall_target: 0.95,
             batcher: BatcherConfig::default(),
             backend: BackendKind::Native,
+            threads: 0,
             artifact: None,
             artifact_dir: "artifacts".to_string(),
             seed: 42,
@@ -95,9 +102,11 @@ impl LauncherConfig {
             c.batcher.max_delay.as_micros() as usize,
         )?;
         c.batcher.max_delay = Duration::from_micros(delay_us as u64);
+        c.threads = usize_field("threads", c.threads)?;
         if let Some(v) = j.get("backend") {
             c.backend = match v.as_str() {
                 Some("native") => BackendKind::Native,
+                Some("native-parallel") => BackendKind::NativeParallel,
                 Some("pjrt") => BackendKind::Pjrt,
                 other => anyhow::bail!("unknown backend {other:?}"),
             };
@@ -158,9 +167,11 @@ impl LauncherConfig {
                 "backend",
                 Json::str(match self.backend {
                     BackendKind::Native => "native",
+                    BackendKind::NativeParallel => "native-parallel",
                     BackendKind::Pjrt => "pjrt",
                 }),
             ),
+            ("threads", Json::num(self.threads as f64)),
             (
                 "artifact",
                 self.artifact
@@ -196,6 +207,19 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Pjrt);
         assert_eq!(c.batcher.max_delay, Duration::from_micros(500));
         assert_eq!(c.artifact.as_deref(), Some("mips_fused_x"));
+    }
+
+    #[test]
+    fn parses_native_parallel_backend() {
+        let c = LauncherConfig::from_json(
+            r#"{"backend": "native-parallel", "threads": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(c.backend, BackendKind::NativeParallel);
+        assert_eq!(c.threads, 4);
+        // threads defaults to 0 (= one worker per core).
+        let c0 = LauncherConfig::from_json(r#"{"backend": "native-parallel"}"#).unwrap();
+        assert_eq!(c0.threads, 0);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! coordinator, tests and benches can run with either:
 //!
 //! - [`NativeBackend`]: pure-Rust matmul + [`TwoStageTopK`] (no artifacts
-//!   required; also the correctness oracle), or
+//!   required; also the correctness oracle),
+//! - [`ParallelNativeBackend`]: the same matmul feeding the batched
+//!   multi-core [`ParallelTwoStageTopK`] engine — Stage 1 sharded across a
+//!   worker pool, one Stage 2 per query, or
 //! - [`PjrtBackend`]: the AOT `mips_fused` artifact through PJRT — the
 //!   production configuration where the scoring matmul and stage 1 are one
 //!   fused kernel.
@@ -15,7 +18,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::runtime::{CompiledArtifact, HostTensor};
-use crate::topk::{exact, Candidate, TwoStageParams, TwoStageTopK};
+use crate::topk::{exact, Candidate, ParallelTwoStageTopK, TwoStageParams, TwoStageTopK};
 
 /// Batched shard scoring: `queries` is row-major `[nq, d]`.
 ///
@@ -37,6 +40,20 @@ pub trait ShardBackend {
 
 /// Constructs a backend inside the worker thread that will own it.
 pub type BackendFactory = Box<dyn FnOnce() -> anyhow::Result<Box<dyn ShardBackend>> + Send>;
+
+/// Score one query against a row-major `[n, d]` database:
+/// `out[j] = <q, database_j>`. Shared by the native backends.
+fn score_row(database: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d);
+    for (j, s) in out.iter_mut().enumerate() {
+        let v = &database[j * d..(j + 1) * d];
+        let mut acc = 0f32;
+        for i in 0..d {
+            acc += q[i] * v[i];
+        }
+        *s = acc;
+    }
+}
 
 /// Pure-Rust backend: explicit matmul then the two-stage operator (or exact
 /// top-k when `params` is None — the oracle configuration).
@@ -81,16 +98,7 @@ impl NativeBackend {
     }
 
     fn score_into_scratch(&mut self, q: &[f32]) {
-        debug_assert_eq!(q.len(), self.d);
-        let d = self.d;
-        for (j, s) in self.scores_scratch.iter_mut().enumerate() {
-            let v = &self.database[j * d..(j + 1) * d];
-            let mut acc = 0f32;
-            for i in 0..d {
-                acc += q[i] * v[i];
-            }
-            *s = acc;
-        }
+        score_row(&self.database, self.d, q, &mut self.scores_scratch);
     }
 }
 
@@ -108,6 +116,87 @@ impl ShardBackend for NativeBackend {
             out.push(top);
         }
         Ok(out)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn shard_size(&self) -> usize {
+        self.n
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+}
+
+/// Multi-core native backend: the [`NativeBackend`] matmul followed by the
+/// batched [`ParallelTwoStageTopK`] engine. The whole query batch formed by
+/// the dynamic batcher arrives in one `score_topk` call, is scored into a
+/// `[nq, N]` scratch, and runs through the worker pool in a single
+/// `run_batch` dispatch — pool setup and channel hops amortize across the
+/// batch. Results are identical to [`NativeBackend`] with the same params.
+///
+/// Scoring itself still runs on the shard thread; only the Top-K stages are
+/// parallel. At high `d` the matmul dominates, so moving scoring into the
+/// worker pool is the natural next step (tracked on the ROADMAP).
+pub struct ParallelNativeBackend {
+    /// Row-major database: `db[j * d .. (j+1) * d]` is vector j.
+    database: Vec<f32>,
+    d: usize,
+    n: usize,
+    k: usize,
+    operator: ParallelTwoStageTopK,
+    /// `[nq, n]` score scratch, grown on demand and reused across batches.
+    scores: Vec<f32>,
+}
+
+impl ParallelNativeBackend {
+    /// `database` is `[n, d]` row-major. `threads` sizes the Stage-1 worker
+    /// pool (clamped to `[1, B]`; pass
+    /// `std::thread::available_parallelism()` for one worker per core).
+    pub fn new(
+        database: Vec<f32>,
+        d: usize,
+        k: usize,
+        params: TwoStageParams,
+        threads: usize,
+    ) -> Self {
+        assert!(d > 0 && !database.is_empty());
+        assert_eq!(database.len() % d, 0);
+        let n = database.len() / d;
+        assert_eq!(params.n, n, "two-stage N must equal shard size");
+        assert_eq!(params.k, k);
+        ParallelNativeBackend {
+            database,
+            d,
+            n,
+            k,
+            operator: ParallelTwoStageTopK::new(params, threads),
+            scores: Vec::new(),
+        }
+    }
+
+    /// Number of Stage-1 pool workers actually running.
+    pub fn threads(&self) -> usize {
+        self.operator.threads()
+    }
+}
+
+impl ShardBackend for ParallelNativeBackend {
+    fn score_topk(&mut self, queries: &[f32], nq: usize) -> Result<Vec<Vec<Candidate>>> {
+        anyhow::ensure!(queries.len() == nq * self.d, "bad query buffer");
+        let d = self.d;
+        let n = self.n;
+        self.scores.resize(nq * n, 0.0);
+        for qi in 0..nq {
+            let q = &queries[qi * d..(qi + 1) * d];
+            let row = &mut self.scores[qi * n..(qi + 1) * n];
+            score_row(&self.database, d, q, row);
+        }
+        let rows: Vec<&[f32]> = self.scores.chunks(n).take(nq).collect();
+        Ok(self.operator.run_batch(&rows))
     }
 
     fn dim(&self) -> usize {
@@ -268,6 +357,49 @@ mod tests {
         let recall = total / nq as f64;
         // Theorem-1 expectation for (4096, 32, 256, 2) is ~0.9995.
         assert!(recall > 0.95, "recall={recall}");
+    }
+
+    #[test]
+    fn parallel_backend_matches_sequential_native() {
+        let d = 16;
+        let n = 2048;
+        let k = 32;
+        let mut rng = Rng::new(21);
+        let db = make_db(&mut rng, n, d);
+        let params = TwoStageParams::new(n, k, 128, 2);
+        let mut sequential = NativeBackend::new(db.clone(), d, k, Some(params));
+        let nq = 6;
+        let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+        let want = sequential.score_topk(&queries, nq).unwrap();
+        for threads in [1usize, 2, 4] {
+            let mut parallel = ParallelNativeBackend::new(db.clone(), d, k, params, threads);
+            assert_eq!(parallel.dim(), d);
+            assert_eq!(parallel.shard_size(), n);
+            assert_eq!(parallel.k(), k);
+            let got = parallel.score_topk(&queries, nq).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_backend_reusable_across_batches() {
+        let d = 8;
+        let n = 512;
+        let k = 16;
+        let mut rng = Rng::new(40);
+        let db = make_db(&mut rng, n, d);
+        let params = TwoStageParams::new(n, k, 64, 1);
+        let mut parallel = ParallelNativeBackend::new(db.clone(), d, k, params, 2);
+        let mut oracle = NativeBackend::new(db, d, k, Some(params));
+        // A larger batch followed by a smaller one exercises scratch reuse.
+        for &nq in &[5usize, 2] {
+            let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+            assert_eq!(
+                parallel.score_topk(&queries, nq).unwrap(),
+                oracle.score_topk(&queries, nq).unwrap(),
+                "nq={nq}"
+            );
+        }
     }
 
     #[test]

@@ -30,7 +30,9 @@ pub mod net;
 pub mod service;
 pub mod shard;
 
-pub use backend::{BackendFactory, NativeBackend, PjrtBackend, ShardBackend};
+pub use backend::{
+    BackendFactory, NativeBackend, ParallelNativeBackend, PjrtBackend, ShardBackend,
+};
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use merge::merge_shard_results;
 pub use metrics::ServiceMetrics;

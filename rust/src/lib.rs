@@ -9,7 +9,9 @@
 //! - **L3** (runtime, this crate): coordinator that loads the artifacts via
 //!   PJRT and serves approximate Top-K / MIPS workloads, plus the analytic
 //!   machinery of the paper (recall theory, parameter selection, ridge-point
-//!   performance model) and pure-Rust reference/baseline implementations.
+//!   performance model) and pure-Rust reference/baseline implementations —
+//!   including the multi-core batched engine in [`topk::parallel`] that
+//!   shards the first stage's bucket state across a worker pool.
 
 pub mod bench_harness;
 pub mod config;

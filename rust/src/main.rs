@@ -19,7 +19,8 @@ use std::path::Path;
 
 use fastk::config::{BackendKind, LauncherConfig};
 use fastk::coordinator::{
-    BackendFactory, MipsService, NativeBackend, PjrtBackend, ServiceConfig, ShardBackend,
+    BackendFactory, MipsService, NativeBackend, ParallelNativeBackend, PjrtBackend,
+    ServiceConfig, ShardBackend,
 };
 use fastk::hw::{Accelerator, AcceleratorId};
 use fastk::perfmodel::{self, predict_table2_row, vpu_probe};
@@ -331,14 +332,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// Build and drive the service per config.
 fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     let mut rng = Rng::new(cfg.seed);
+    // 0 = auto: split the available cores across the shards (all shard
+    // workers run a batch concurrently, so per-shard pools must share).
+    let threads = if cfg.threads == 0 {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        (cores / cfg.shards).max(1)
+    } else {
+        cfg.threads
+    };
     println!(
         "building database: {} shards x {} vectors x {}-d ({} backend)",
         cfg.shards,
         cfg.shard_size,
         cfg.d,
         match cfg.backend {
-            BackendKind::Native => "native",
-            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native".to_string(),
+            BackendKind::NativeParallel => format!("native-parallel, {threads} threads/shard"),
+            BackendKind::Pjrt => "pjrt".to_string(),
         }
     );
     let n_total = cfg.shards * cfg.shard_size;
@@ -372,6 +382,10 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         match cfg.backend {
             BackendKind::Native => factories.push(Box::new(move || {
                 Ok(Box::new(NativeBackend::new(chunk, d, k, Some(params)))
+                    as Box<dyn ShardBackend>)
+            })),
+            BackendKind::NativeParallel => factories.push(Box::new(move || {
+                Ok(Box::new(ParallelNativeBackend::new(chunk, d, k, params, threads))
                     as Box<dyn ShardBackend>)
             })),
             BackendKind::Pjrt => {

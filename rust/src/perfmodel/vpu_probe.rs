@@ -7,7 +7,8 @@
 //! region; the inverse slope estimates peak VPU throughput.
 //!
 //! Here the same probe runs on the host CPU (our stand-in vector unit) and
-//! doubles as the calibration source for [`AcceleratorId::HostCpu`].
+//! doubles as the calibration source for
+//! [`AcceleratorId::HostCpu`](crate::hw::AcceleratorId::HostCpu).
 
 use std::time::Instant;
 

@@ -14,9 +14,11 @@
 
 pub mod bitonic;
 pub mod exact;
+pub mod parallel;
 pub mod streaming;
 pub mod twostage;
 
+pub use parallel::ParallelTwoStageTopK;
 pub use streaming::StreamingTopK;
 pub use twostage::{TwoStageParams, TwoStageTopK};
 

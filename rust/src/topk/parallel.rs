@@ -1,0 +1,519 @@
+//! Multi-core two-stage approximate Top-K: Stage 1 sharded across a
+//! reusable worker pool, Stage 2 run once over the merged candidates.
+//!
+//! The paper's first stage is embarrassingly parallel across buckets: the
+//! per-bucket top-K′ state of bucket `j` depends only on the elements
+//! `{ i : i mod B == j }`, in stream order. This module exploits that on
+//! CPU the same way the TPU kernel exploits the 128-wide lane axis — by
+//! partitioning the *bucket* (lane) axis, never the reduction axis, so the
+//! per-bucket online update ([`TwoStageTopK`](super::TwoStageTopK)'s
+//! Algorithm 1/2) is executed bit-identically and the parallel engine
+//! returns exactly the same candidates as the sequential operator.
+//!
+//! Design:
+//!
+//! - [`ParallelTwoStageTopK::new`] spawns a persistent `std::thread` pool.
+//!   Worker `w` owns the contiguous lane range `[w·B/T, (w+1)·B/T)` and a
+//!   private `[K′][lanes]` slice of the lane-parallel state
+//!   ([`Stage1State`](super::twostage::Stage1State) with the worker's lane
+//!   count as its minor width), so no state is shared and no locks are
+//!   taken on the hot path.
+//! - [`ParallelTwoStageTopK::run`] / [`ParallelTwoStageTopK::run_batch`]
+//!   dispatch one job per worker (a whole batch per job, amortizing the
+//!   two channel hops per worker across all queries), block until every
+//!   worker has replied, merge the per-worker candidate lists, and run
+//!   Stage 2 (in-place quickselect + canonical sort) once per query.
+//! - Workers read the input through a raw-pointer handle; safety comes
+//!   from the dispatch protocol: the submitting call does not return (or
+//!   unwind past the borrow) until every worker has either replied or
+//!   exited, so the borrow strictly outlives all reads.
+//!
+//! ```
+//! use fastk::topk::{ParallelTwoStageTopK, TwoStageParams, TwoStageTopK};
+//!
+//! let params = TwoStageParams::new(4096, 64, 256, 2);
+//! let values: Vec<f32> = (0..4096u64)
+//!     .map(|i| ((i * 2654435761) % 4096) as f32)
+//!     .collect();
+//! let mut sequential = TwoStageTopK::new(params);
+//! let mut parallel = ParallelTwoStageTopK::new(params, 4);
+//! assert_eq!(parallel.run(&values), sequential.run(&values));
+//! ```
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::exact;
+use super::twostage::{Stage1State, TwoStageParams};
+use super::Candidate;
+
+/// A raw view of one query row, sendable to workers.
+///
+/// Safety contract: the pool guarantees every worker has finished reading
+/// (replied or exited) before the dispatching call releases the borrow the
+/// handle was built from — see [`ParallelTwoStageTopK::run_batch`].
+struct SliceHandle {
+    ptr: *const f32,
+    len: usize,
+}
+
+unsafe impl Send for SliceHandle {}
+
+impl SliceHandle {
+    fn new(slice: &[f32]) -> SliceHandle {
+        SliceHandle {
+            ptr: slice.as_ptr(),
+            len: slice.len(),
+        }
+    }
+
+    /// # Safety
+    /// The referenced slice must outlive every use of the returned
+    /// reference; the pool's reply barrier enforces this.
+    unsafe fn get<'a>(&self) -> &'a [f32] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+/// One dispatched unit of work: a whole query batch plus the reply channel.
+struct Job {
+    queries: Vec<SliceHandle>,
+    reply: Sender<Reply>,
+}
+
+/// A worker's answer: its lane-range candidates for every query in the job.
+struct Reply {
+    worker: usize,
+    candidates: Vec<Vec<Candidate>>,
+}
+
+/// Worker-private Stage-1 state over a contiguous lane (bucket) range.
+struct LaneState {
+    /// `[K′][lanes]` values/indices, lane-minor — the worker's slice of the
+    /// global `[K′][B]` state.
+    state: Stage1State,
+    /// First owned global bucket.
+    lane_lo: usize,
+    /// Number of owned buckets.
+    lanes: usize,
+    /// Global bucket count B (the input stride).
+    buckets: usize,
+    /// Input length N.
+    n: usize,
+    local_k: usize,
+}
+
+impl LaneState {
+    fn new(params: &TwoStageParams, lane_lo: usize, lane_hi: usize) -> LaneState {
+        assert!(lane_lo < lane_hi && lane_hi <= params.buckets);
+        LaneState {
+            state: Stage1State::with_dims(lane_hi - lane_lo, params.local_k),
+            lane_lo,
+            lanes: lane_hi - lane_lo,
+            buckets: params.buckets,
+            n: params.n,
+            local_k: params.local_k,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.state.reset();
+    }
+
+    /// Fold one full input row-major pass over the owned lane range. The
+    /// update is the same insert + single-bubble-pass as the sequential
+    /// kernel (insert on `>=`, bubble on `>`), so per-bucket state is
+    /// bit-identical to a sequential run.
+    fn fold(&mut self, values: &[f32]) {
+        debug_assert_eq!(values.len(), self.n);
+        let rows = self.n / self.buckets;
+        if self.local_k == 1 {
+            self.fold_k1(values, rows);
+            return;
+        }
+        // Lane blocking as in the sequential kernel: keep a block's
+        // [K'][lanes] state cache-resident across all rows.
+        let lane_block = (4096 / self.local_k).max(64);
+        let mut start = 0;
+        while start < self.lanes {
+            let end = (start + lane_block).min(self.lanes);
+            self.fold_block(values, rows, start, end);
+            start = end;
+        }
+    }
+
+    /// K′ ≥ 2: branchless tail-compare sweep packing hit flags into a
+    /// bitmask, then scalar insert + bubble on the (rare) hits — the
+    /// two-phase scheme of the sequential `stage1_fixed` path, restricted
+    /// to this worker's lanes.
+    fn fold_block(&mut self, values: &[f32], rows: usize, start: usize, end: usize) {
+        let b = self.buckets;
+        let lanes = self.lanes;
+        let kp = self.local_k;
+        let lane_lo = self.lane_lo;
+        let vals = &mut self.state.values;
+        let idxs = &mut self.state.indices;
+        let tail_off = (kp - 1) * lanes;
+        for row in 0..rows {
+            let row_base = row * b + lane_lo;
+            let input_row = &values[row_base..row_base + lanes];
+            let mut lane = start;
+            while lane < end {
+                let chunk_end = (lane + 64).min(end);
+                let mut flags = [0u8; 64];
+                {
+                    let tail = &vals[tail_off + lane..tail_off + chunk_end];
+                    for ((f, &x), &t) in flags
+                        .iter_mut()
+                        .zip(input_row[lane..chunk_end].iter())
+                        .zip(tail.iter())
+                    {
+                        *f = (x >= t) as u8;
+                    }
+                }
+                let mut mask: u64 = 0;
+                for (j8, chunk8) in flags.chunks_exact(8).enumerate() {
+                    let w = u64::from_le_bytes(chunk8.try_into().unwrap());
+                    if w == 0 {
+                        continue;
+                    }
+                    for (j, &byte) in chunk8.iter().enumerate() {
+                        mask |= (byte as u64) << (j8 * 8 + j);
+                    }
+                }
+                while mask != 0 {
+                    let j = mask.trailing_zeros() as usize;
+                    mask &= mask - 1;
+                    let l = lane + j;
+                    let x = input_row[l];
+                    let slot = tail_off + l;
+                    vals[slot] = x;
+                    idxs[slot] = (row_base + l) as u32;
+                    let mut r = kp - 1;
+                    while r > 0 {
+                        let hi = (r - 1) * lanes + l;
+                        let lo = r * lanes + l;
+                        if x > vals[hi] {
+                            vals.swap(hi, lo);
+                            idxs.swap(hi, lo);
+                            r -= 1;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                lane = chunk_end;
+            }
+        }
+    }
+
+    /// K′ = 1: branchless strided max over the owned lanes.
+    fn fold_k1(&mut self, values: &[f32], rows: usize) {
+        let b = self.buckets;
+        let lanes = self.lanes;
+        let lane_lo = self.lane_lo;
+        let vals = &mut self.state.values;
+        let idxs = &mut self.state.indices;
+        for row in 0..rows {
+            let row_base = row * b + lane_lo;
+            let input_row = &values[row_base..row_base + lanes];
+            for (lane, ((&x, v), i)) in input_row
+                .iter()
+                .zip(vals.iter_mut())
+                .zip(idxs.iter_mut())
+                .enumerate()
+            {
+                let take = x >= *v;
+                *v = if take { x } else { *v };
+                *i = if take { (row_base + lane) as u32 } else { *i };
+            }
+        }
+    }
+
+    /// Emit this worker's candidates. `filter_padding` mirrors the
+    /// sequential Stage 2: `-inf` slots (possible only when K′ exceeds the
+    /// bucket size) are dropped.
+    fn candidates(&self, filter_padding: bool) -> Vec<Candidate> {
+        let mut out = Vec::with_capacity(self.state.values.len());
+        for (&value, &index) in self.state.values.iter().zip(self.state.indices.iter()) {
+            if filter_padding && !(value > f32::NEG_INFINITY) {
+                continue;
+            }
+            out.push(Candidate { index, value });
+        }
+        out
+    }
+}
+
+fn worker_loop(worker: usize, rx: Receiver<Job>, mut state: LaneState, filter_padding: bool) {
+    while let Ok(job) = rx.recv() {
+        let mut out = Vec::with_capacity(job.queries.len());
+        for q in &job.queries {
+            // Safety: the dispatcher blocks on our reply (sent below, or the
+            // channel closing if we unwind) before releasing the borrow.
+            let values = unsafe { q.get() };
+            state.reset();
+            state.fold(values);
+            out.push(state.candidates(filter_padding));
+        }
+        let _ = job.reply.send(Reply {
+            worker,
+            candidates: out,
+        });
+    }
+}
+
+struct LaneWorker {
+    tx: Option<Sender<Job>>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// The parallel two-stage operator: construct once per shape, reuse across
+/// queries (the pool, per-worker state and candidate scratch all persist).
+///
+/// Produces exactly the same output as the sequential
+/// [`TwoStageTopK`](super::TwoStageTopK) for identical inputs, at any
+/// thread count.
+pub struct ParallelTwoStageTopK {
+    pub params: TwoStageParams,
+    workers: Vec<LaneWorker>,
+    cand_scratch: Vec<Candidate>,
+}
+
+impl ParallelTwoStageTopK {
+    /// Spawn a pool of `threads` Stage-1 workers (clamped to `[1, B]`),
+    /// each owning a contiguous lane range. Non-divisible `B / threads`
+    /// splits are balanced to within one lane.
+    pub fn new(params: TwoStageParams, threads: usize) -> ParallelTwoStageTopK {
+        let t = threads.clamp(1, params.buckets);
+        let filter_padding = params.local_k > params.bucket_size();
+        let mut workers = Vec::with_capacity(t);
+        for w in 0..t {
+            let lane_lo = w * params.buckets / t;
+            let lane_hi = (w + 1) * params.buckets / t;
+            let (tx, rx) = channel::<Job>();
+            let state = LaneState::new(&params, lane_lo, lane_hi);
+            let join = std::thread::Builder::new()
+                .name(format!("fastk-stage1-{w}"))
+                .spawn(move || worker_loop(w, rx, state, filter_padding))
+                .expect("spawn stage-1 worker");
+            workers.push(LaneWorker {
+                tx: Some(tx),
+                join: Some(join),
+            });
+        }
+        ParallelTwoStageTopK {
+            params,
+            workers,
+            cand_scratch: Vec::with_capacity(params.num_candidates()),
+        }
+    }
+
+    /// Number of pool workers (may be lower than requested when B is small).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run both stages on one row of N values.
+    pub fn run(&mut self, values: &[f32]) -> Vec<Candidate> {
+        self.run_batch(&[values]).pop().unwrap()
+    }
+
+    /// Batched entry point: run both stages for every query, amortizing
+    /// pool dispatch (two channel hops per worker) across the whole batch.
+    /// Equivalent to calling [`run`](Self::run) per query.
+    pub fn run_batch(&mut self, queries: &[&[f32]]) -> Vec<Vec<Candidate>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        for q in queries {
+            assert_eq!(q.len(), self.params.n, "input length mismatch");
+        }
+
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let mut dispatched = 0usize;
+        for w in &self.workers {
+            let job = Job {
+                queries: queries.iter().map(|q| SliceHandle::new(q)).collect(),
+                reply: reply_tx.clone(),
+            };
+            if w.tx.as_ref().expect("pool shut down").send(job).is_ok() {
+                dispatched += 1;
+            }
+        }
+        drop(reply_tx);
+
+        // Reply barrier: drain until every sender is gone. Each worker holds
+        // exactly one sender (inside its Job) and drops it on reply or on
+        // unwind, so after this loop no worker can still be reading the
+        // query slices — only then is it safe to return (or panic).
+        let mut per_worker: Vec<Vec<Vec<Candidate>>> = vec![Vec::new(); self.workers.len()];
+        let mut replied = 0usize;
+        for reply in reply_rx {
+            per_worker[reply.worker] = reply.candidates;
+            replied += 1;
+        }
+        assert!(
+            dispatched == self.workers.len() && replied == self.workers.len(),
+            "stage-1 worker died (dispatched {dispatched}, replied {replied}/{})",
+            self.workers.len()
+        );
+
+        // Stage 2 per query over the merged candidates: in-place quickselect
+        // on the reused scratch, then the canonical sort. The candidate
+        // *set* equals the sequential one, and the canonical total order is
+        // strict, so the sorted top-K is identical.
+        let mut out = Vec::with_capacity(queries.len());
+        for qi in 0..queries.len() {
+            self.cand_scratch.clear();
+            for worker_cands in &per_worker {
+                self.cand_scratch.extend_from_slice(&worker_cands[qi]);
+            }
+            let k = self.params.k.min(self.cand_scratch.len());
+            if k < self.cand_scratch.len() {
+                exact::select_top(&mut self.cand_scratch, k);
+            }
+            let mut top = self.cand_scratch[..k].to_vec();
+            super::sort_candidates(&mut top);
+            out.push(top);
+        }
+        out
+    }
+}
+
+impl Drop for ParallelTwoStageTopK {
+    fn drop(&mut self) {
+        // Close every job channel, then join the workers.
+        for w in &mut self.workers {
+            drop(w.tx.take());
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::TwoStageTopK;
+    use crate::util::check::property;
+    use crate::util::Rng;
+
+    fn random_values(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32()).collect()
+    }
+
+    #[test]
+    fn matches_sequential_across_thread_counts() {
+        let mut rng = Rng::new(71);
+        // (n, k, buckets, local_k) — includes a non-power-of-two bucket
+        // count (50) whose lane split across 4 workers is non-divisible
+        // (13/12/13/12), and a K'=1 configuration for the strided-max path.
+        for &(n, k, b, kp) in &[
+            (4096usize, 64usize, 256usize, 2usize),
+            (4096, 128, 512, 1),
+            (1000, 16, 50, 2),
+            (2048, 200, 128, 4),
+        ] {
+            let params = TwoStageParams::new(n, k, b, kp);
+            let values = random_values(&mut rng, n);
+            let mut sequential = TwoStageTopK::new(params);
+            let want = sequential.run(&values);
+            for threads in [1usize, 2, 4] {
+                let mut parallel = ParallelTwoStageTopK::new(params, threads);
+                assert_eq!(
+                    parallel.run(&values),
+                    want,
+                    "({n},{k},{b},{kp}) threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_sequential_when_padding_slots_exist() {
+        // K' > bucket size: -inf padding slots must be filtered exactly
+        // like the sequential stage 2.
+        let params = TwoStageParams::new(64, 24, 16, 8); // bucket size 4 < K'=8
+        let mut rng = Rng::new(9);
+        let values = random_values(&mut rng, 64);
+        let mut sequential = TwoStageTopK::new(params);
+        let want = sequential.run(&values);
+        for threads in [1usize, 2, 4] {
+            let mut parallel = ParallelTwoStageTopK::new(params, threads);
+            assert_eq!(parallel.run(&values), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn batch_equals_looped() {
+        let params = TwoStageParams::new(2048, 64, 256, 2);
+        let mut rng = Rng::new(17);
+        let queries: Vec<Vec<f32>> = (0..5).map(|_| random_values(&mut rng, 2048)).collect();
+        let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+
+        let mut parallel = ParallelTwoStageTopK::new(params, 3);
+        let batched = parallel.run_batch(&refs);
+        assert_eq!(batched.len(), queries.len());
+
+        let mut sequential = TwoStageTopK::new(params);
+        for (qi, q) in queries.iter().enumerate() {
+            assert_eq!(batched[qi], parallel.run(q), "batched vs looped, query {qi}");
+            assert_eq!(batched[qi], sequential.run(q), "batched vs sequential, query {qi}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let params = TwoStageParams::new(256, 8, 32, 1);
+        let mut parallel = ParallelTwoStageTopK::new(params, 2);
+        assert!(parallel.run_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn thread_count_is_clamped() {
+        let params = TwoStageParams::new(64, 4, 8, 1);
+        // More threads than buckets: clamped to B workers.
+        let parallel = ParallelTwoStageTopK::new(params, 64);
+        assert_eq!(parallel.threads(), 8);
+        // Zero threads: clamped to one worker.
+        let parallel = ParallelTwoStageTopK::new(params, 0);
+        assert_eq!(parallel.threads(), 1);
+    }
+
+    #[test]
+    fn operator_is_reusable_across_queries() {
+        let params = TwoStageParams::new(1024, 32, 128, 2);
+        let mut parallel = ParallelTwoStageTopK::new(params, 2);
+        let mut sequential = TwoStageTopK::new(params);
+        let mut rng = Rng::new(33);
+        for round in 0..4 {
+            let values = random_values(&mut rng, 1024);
+            assert_eq!(parallel.run(&values), sequential.run(&values), "round {round}");
+        }
+    }
+
+    #[test]
+    fn prop_parallel_equals_sequential() {
+        property("parallel == sequential", 30, |g| {
+            let b = *g.choose(&[16usize, 50, 128, 192]);
+            let rows = g.usize_in(2..=16);
+            let n = b * rows;
+            let kp = g.usize_in(1..=4.min(rows + 2));
+            let k = g.usize_in(1..=(b * kp).min(n));
+            let threads = g.usize_in(1..=5);
+            let params = TwoStageParams::new(n, k, b, kp);
+            let values: Vec<f32> = (0..n).map(|_| g.rng().next_f32()).collect();
+            let mut sequential = TwoStageTopK::new(params);
+            let mut parallel = ParallelTwoStageTopK::new(params, threads);
+            assert_eq!(
+                parallel.run(&values),
+                sequential.run(&values),
+                "({n},{k},{b},{kp}) threads={threads}"
+            );
+        });
+    }
+}

@@ -28,6 +28,18 @@ pub struct TwoStageParams {
 }
 
 impl TwoStageParams {
+    /// Validate and build a parameter set: `buckets` must divide `n` and
+    /// the first stage must produce at least `k` candidates
+    /// (`buckets · local_k ≥ k`).
+    ///
+    /// ```
+    /// use fastk::topk::TwoStageParams;
+    ///
+    /// // N=4096 in B=256 buckets, keep K'=2 per bucket, select K=64.
+    /// let params = TwoStageParams::new(4096, 64, 256, 2);
+    /// assert_eq!(params.bucket_size(), 16);
+    /// assert_eq!(params.num_candidates(), 512);
+    /// ```
     pub fn new(n: usize, k: usize, buckets: usize, local_k: usize) -> Self {
         assert!(n > 0 && k > 0 && buckets > 0 && local_k > 0);
         assert!(k <= n, "K={k} > N={n}");
@@ -157,7 +169,20 @@ impl TwoStageTopK {
         }
     }
 
-    /// Run both stages on one row of N values.
+    /// Run both stages on one row of N values — the top-level two-stage
+    /// entry point. Returns up to K candidates in canonical order
+    /// (descending value, ties by ascending index).
+    ///
+    /// ```
+    /// use fastk::topk::{TwoStageParams, TwoStageTopK};
+    ///
+    /// let mut operator = TwoStageTopK::new(TwoStageParams::new(64, 4, 8, 4));
+    /// let values: Vec<f32> = (0..64).map(|i| ((i * 37) % 64) as f32).collect();
+    /// let top = operator.run(&values);
+    /// assert_eq!(top.len(), 4);
+    /// assert_eq!(top[0].value, 63.0);
+    /// assert!(top.windows(2).all(|w| w[0].value >= w[1].value));
+    /// ```
     pub fn run(&mut self, values: &[f32]) -> Vec<Candidate> {
         self.stage1(values);
         self.stage2()

@@ -1,0 +1,194 @@
+//! Std-only stub of the `xla` (PJRT) crate.
+//!
+//! The offline build environment cannot link the real PJRT runtime, so this
+//! workspace member provides the exact API surface `fastk::runtime` uses —
+//! [`PjRtClient`], [`PjRtLoadedExecutable`], [`Literal`], [`HloModuleProto`],
+//! [`XlaComputation`] — with the same shapes and error plumbing. Client
+//! construction ([`PjRtClient::cpu`]) fails with a descriptive error, so
+//! everything downstream of `Executor::new` degrades gracefully: code that
+//! gates on the executor (the integration tests, `fastk selftest`, the PJRT
+//! serving backend) reports PJRT as unavailable instead of failing to build.
+//!
+//! Handle types carry a `PhantomData<Rc<()>>` marker so they are `!Send`,
+//! matching the real crate's thread-bound PJRT handles — the coordinator's
+//! "construct backends inside their worker thread" discipline stays honest
+//! under the stub.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result<T, xla::Error>`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (std-only `xla` stub; \
+         link the real xla crate to execute AOT artifacts)"
+    ))
+}
+
+/// XLA element types (only the ones the runtime converts between).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+    Bf16,
+}
+
+/// Rust scalar types a [`Literal`] can be built from / read into.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// A host-side tensor literal. The stub tracks only the element count —
+/// enough to validate reshapes; data access reports PJRT as unavailable.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elements: usize,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            elements: data.len(),
+        }
+    }
+
+    /// Reinterpret the literal with the given dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let wanted: i64 = dims.iter().product();
+        if wanted < 0 || wanted as usize != self.elements {
+            return Err(Error(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.elements
+            )));
+        }
+        Ok(self.clone())
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy the literal out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    /// Convert to another element type.
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal> {
+        Err(unavailable("Literal::convert"))
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({path})"
+        )))
+    }
+}
+
+/// An XLA computation ready to compile.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer returned by execution. Thread-bound (`!Send`).
+pub struct PjRtBuffer {
+    _thread_bound: PhantomData<Rc<()>>,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable. Thread-bound (`!Send`).
+pub struct PjRtLoadedExecutable {
+    _thread_bound: PhantomData<Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; one result buffer list per device.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client. Thread-bound (`!Send`).
+pub struct PjRtClient {
+    _thread_bound: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails under the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Name of the backing platform.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err}").contains("PJRT is unavailable"));
+    }
+
+    #[test]
+    fn literal_reshape_validates_element_count() {
+        let lit = Literal::vec1(&[1.0f32; 12]);
+        assert!(lit.reshape(&[3, 4]).is_ok());
+        assert!(lit.reshape(&[5, 5]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn hlo_parse_reports_unavailable() {
+        let err = HloModuleProto::from_text_file("x.hlo.txt").err().unwrap();
+        assert!(format!("{err}").contains("x.hlo.txt"));
+    }
+}
