@@ -1,0 +1,176 @@
+//! Fused vs unfused score+select pipeline sweep (supports the fused-MIPS
+//! tentpole; the paper's §7.3 TPU analogue is the fused matmul+stage-1
+//! Pallas kernel).
+//!
+//! Compares the two `ParallelNativeBackend` pipelines end-to-end on one
+//! shard — unfused (single-threaded `score_tile` matmul into a `[nq, N]`
+//! scratch, worker pool for the Top-K stages only) vs fused (each pool
+//! worker scores its own lane range's database rows tile by tile and
+//! streams them into its Stage-1 state) — across `d`, thread count and
+//! batch size. At high `d` the matmul dominates, so the fused pipeline's
+//! advantage grows with `d` and thread count.
+//!
+//! Emits the shared bench JSON schema when `FASTK_BENCH_JSON=<dir>` is
+//! set. Set `FASTK_BENCH_SMOKE=1` to run tiny shapes (seconds, for CI
+//! schema checks) instead of the full sweep.
+
+use fastk::bench_harness::{banner, bench, maybe_write_json, BenchResult, Table};
+use fastk::coordinator::{ParallelNativeBackend, ShardBackend};
+use fastk::topk::TwoStageParams;
+use fastk::util::stats::fmt_ns;
+use fastk::util::Rng;
+
+struct Sweep {
+    n: usize,
+    k: usize,
+    buckets: usize,
+    local_k: usize,
+    dims: Vec<usize>,
+    threads: Vec<usize>,
+    batches: Vec<usize>,
+}
+
+fn main() {
+    let smoke = std::env::var("FASTK_BENCH_SMOKE")
+        .map(|v| v != "0")
+        .unwrap_or(false);
+    let sweep = if smoke {
+        Sweep {
+            n: 256,
+            k: 16,
+            buckets: 32,
+            local_k: 2,
+            dims: vec![8, 24],
+            threads: vec![1, 2],
+            batches: vec![1, 3],
+        }
+    } else {
+        Sweep {
+            n: 8192,
+            k: 128,
+            buckets: 512,
+            local_k: 2,
+            dims: vec![64, 256, 1024],
+            threads: vec![1, 2, 4],
+            batches: vec![1, 8],
+        }
+    };
+    let params = TwoStageParams::new(sweep.n, sweep.k, sweep.buckets, sweep.local_k);
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let max_batch = *sweep.batches.iter().max().unwrap();
+    let mut rng = Rng::new(29);
+    let mut all_results: Vec<BenchResult> = Vec::new();
+
+    banner(&format!(
+        "fused vs unfused score+select: N={}, K={}, B={}, K'={} per shard \
+         ({cores} cores available{})",
+        sweep.n,
+        sweep.k,
+        sweep.buckets,
+        sweep.local_k,
+        if smoke { ", SMOKE shapes" } else { "" }
+    ));
+
+    for &d in &sweep.dims {
+        let db: Vec<f32> = (0..sweep.n * d).map(|_| rng.next_gaussian() as f32).collect();
+        let queries: Vec<f32> = (0..max_batch * d)
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        let mut table = Table::new(&[
+            "d", "THREADS", "BATCH", "unfused/query", "fused/query", "SPEEDUP",
+        ]);
+        for &threads in &sweep.threads {
+            let mut unfused = ParallelNativeBackend::with_pipeline(
+                db.clone(),
+                d,
+                sweep.k,
+                params,
+                threads,
+                false,
+                0,
+            );
+            let mut fused = ParallelNativeBackend::with_pipeline(
+                db.clone(),
+                d,
+                sweep.k,
+                params,
+                threads,
+                true,
+                0,
+            );
+            // Correctness guard before timing: the two pipelines must be
+            // bit-identical.
+            assert_eq!(
+                fused.score_topk(&queries, max_batch).unwrap(),
+                unfused.score_topk(&queries, max_batch).unwrap(),
+                "fused != unfused at d={d}, threads={threads}"
+            );
+            for &batch in &sweep.batches {
+                let q = &queries[..batch * d];
+                let r_unfused = bench(&format!("unfused_d{d}_t{threads}_b{batch}"), || {
+                    std::hint::black_box(unfused.score_topk(q, batch).unwrap());
+                });
+                let r_fused = bench(&format!("fused_d{d}_t{threads}_b{batch}"), || {
+                    std::hint::black_box(fused.score_topk(q, batch).unwrap());
+                });
+                table.row(vec![
+                    d.to_string(),
+                    threads.to_string(),
+                    batch.to_string(),
+                    fmt_ns(r_unfused.summary.min / batch as f64),
+                    fmt_ns(r_fused.summary.min / batch as f64),
+                    format!("{:.2}x", r_unfused.min_s() / r_fused.min_s()),
+                ]);
+                all_results.push(r_unfused);
+                all_results.push(r_fused);
+            }
+        }
+        table.print();
+    }
+
+    // Acceptance check: fused >= unfused throughput at d >= 256 with >= 4
+    // threads (on the smoke shapes, the largest swept config stands in).
+    let d_target = if smoke { *sweep.dims.last().unwrap() } else { 256 };
+    let t_target = *sweep.threads.iter().max().unwrap();
+    let min_s = |name: &str| {
+        all_results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.min_s())
+    };
+    let mut failed = false;
+    match (
+        min_s(&format!("unfused_d{d_target}_t{t_target}_b{max_batch}")),
+        min_s(&format!("fused_d{d_target}_t{t_target}_b{max_batch}")),
+    ) {
+        (Some(u), Some(f)) => {
+            println!(
+                "\nacceptance: fused vs unfused at d={d_target}, {t_target} threads, \
+                 batch {max_batch}: {:.2}x (target >= 1.00x)",
+                u / f
+            );
+            // Enforce on full runs only: smoke shapes are too small to be
+            // a meaningful perf gate (they exist for the JSON schema
+            // check).
+            if !smoke && f > u {
+                eprintln!("FAIL: fused pipeline is slower than unfused at the target shape");
+                failed = true;
+            }
+        }
+        // The gate must never silently vanish: if the result names drift
+        // from the lookup strings, fail the run (smoke included, so CI
+        // catches the drift).
+        _ => {
+            eprintln!(
+                "FAIL: acceptance results missing for d={d_target}, t={t_target}, \
+                 b={max_batch} — bench result names drifted?"
+            );
+            failed = true;
+        }
+    }
+
+    maybe_write_json("fused_pipeline", &all_results);
+    if failed {
+        std::process::exit(1);
+    }
+}

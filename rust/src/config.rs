@@ -28,8 +28,10 @@ use crate::util::json::Json;
 pub enum BackendKind {
     /// Pure-Rust matmul + two-stage kernel (single core per shard).
     Native,
-    /// Pure-Rust matmul + the multi-core `topk::parallel` engine
-    /// (`threads` Stage-1 workers per shard).
+    /// Pure-Rust multi-core engine (`threads` workers per shard): by
+    /// default the fused tiled score+select pipeline (`topk::fused` —
+    /// scoring runs inside the worker pool); `"fused": false` reverts to
+    /// shard-thread scoring feeding the `topk::parallel` Top-K pool.
     NativeParallel,
     /// AOT artifacts through PJRT (requires `make artifacts`).
     Pjrt,
@@ -48,6 +50,13 @@ pub struct LauncherConfig {
     /// Stage-1 worker threads per shard for the `native-parallel` backend
     /// (0 = one per available core).
     pub threads: usize,
+    /// For the `native-parallel` backend: fuse scoring into the worker
+    /// pool (the tiled score+select pipeline) instead of scoring on the
+    /// shard thread. Results are bit-identical either way.
+    pub fused: bool,
+    /// Fused-pipeline tile size in stream rows (0 = auto, ~256 KiB of
+    /// database rows per tile). Ignored when `fused` is false.
+    pub tile_rows: usize,
     pub artifact: Option<String>,
     pub artifact_dir: String,
     pub seed: u64,
@@ -64,6 +73,8 @@ impl Default for LauncherConfig {
             batcher: BatcherConfig::default(),
             backend: BackendKind::Native,
             threads: 0,
+            fused: true,
+            tile_rows: 0,
             artifact: None,
             artifact_dir: "artifacts".to_string(),
             seed: 42,
@@ -103,6 +114,10 @@ impl LauncherConfig {
         )?;
         c.batcher.max_delay = Duration::from_micros(delay_us as u64);
         c.threads = usize_field("threads", c.threads)?;
+        if let Some(v) = j.get("fused") {
+            c.fused = v.as_bool().context("fused must be a boolean")?;
+        }
+        c.tile_rows = usize_field("tile_rows", c.tile_rows)?;
         if let Some(v) = j.get("backend") {
             c.backend = match v.as_str() {
                 Some("native") => BackendKind::Native,
@@ -172,6 +187,8 @@ impl LauncherConfig {
                 }),
             ),
             ("threads", Json::num(self.threads as f64)),
+            ("fused", Json::Bool(self.fused)),
+            ("tile_rows", Json::num(self.tile_rows as f64)),
             (
                 "artifact",
                 self.artifact
@@ -217,9 +234,24 @@ mod tests {
         .unwrap();
         assert_eq!(c.backend, BackendKind::NativeParallel);
         assert_eq!(c.threads, 4);
-        // threads defaults to 0 (= one worker per core).
+        // threads defaults to 0 (= one worker per core); the fused
+        // pipeline with auto tiling is the default.
         let c0 = LauncherConfig::from_json(r#"{"backend": "native-parallel"}"#).unwrap();
         assert_eq!(c0.threads, 0);
+        assert!(c0.fused);
+        assert_eq!(c0.tile_rows, 0);
+    }
+
+    #[test]
+    fn parses_fused_toggle_and_tile_knob() {
+        let c = LauncherConfig::from_json(
+            r#"{"backend": "native-parallel", "fused": false, "tile_rows": 8}"#,
+        )
+        .unwrap();
+        assert!(!c.fused);
+        assert_eq!(c.tile_rows, 8);
+        assert!(LauncherConfig::from_json(r#"{"fused": "yes"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"tile_rows": -1}"#).is_err());
     }
 
     #[test]

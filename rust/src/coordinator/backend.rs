@@ -6,19 +6,28 @@
 //!
 //! - [`NativeBackend`]: pure-Rust matmul + [`TwoStageTopK`] (no artifacts
 //!   required; also the correctness oracle),
-//! - [`ParallelNativeBackend`]: the same matmul feeding the batched
-//!   multi-core [`ParallelTwoStageTopK`] engine — Stage 1 sharded across a
-//!   worker pool, one Stage 2 per query, or
+//! - [`ParallelNativeBackend`]: the multi-core path. Fused (the default),
+//!   it runs the [`FusedParallelMips`] engine — scoring and Stage 1 as one
+//!   tiled pipeline inside the worker pool, each worker scoring the
+//!   database rows of its own lane range. Unfused, it scores on the shard
+//!   thread into a `[nq, N]` scratch and feeds the batched
+//!   [`ParallelTwoStageTopK`] engine. Both are bit-identical to
+//!   [`NativeBackend`] with the same params (every native dot product goes
+//!   through [`topk::kernel::score_tile`](crate::topk::kernel::score_tile)),
+//!   or
 //! - [`PjrtBackend`]: the AOT `mips_fused` artifact through PJRT — the
 //!   production configuration where the scoring matmul and stage 1 are one
-//!   fused kernel.
+//!   fused kernel on the accelerator.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::runtime::{CompiledArtifact, HostTensor};
-use crate::topk::{exact, Candidate, ParallelTwoStageTopK, TwoStageParams, TwoStageTopK};
+use crate::topk::kernel::score_tile;
+use crate::topk::{
+    exact, Candidate, FusedParallelMips, ParallelTwoStageTopK, TwoStageParams, TwoStageTopK,
+};
 
 /// Batched shard scoring: `queries` is row-major `[nq, d]`.
 ///
@@ -41,24 +50,10 @@ pub trait ShardBackend {
 /// Constructs a backend inside the worker thread that will own it.
 pub type BackendFactory = Box<dyn FnOnce() -> anyhow::Result<Box<dyn ShardBackend>> + Send>;
 
-/// Score one query against a row-major `[n, d]` database:
-/// `out[j] = <q, database_j>`. Shared by the native backends.
-fn score_row(database: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(q.len(), d);
-    for (j, s) in out.iter_mut().enumerate() {
-        let v = &database[j * d..(j + 1) * d];
-        let mut acc = 0f32;
-        for i in 0..d {
-            acc += q[i] * v[i];
-        }
-        *s = acc;
-    }
-}
-
 /// Pure-Rust backend: explicit matmul then the two-stage operator (or exact
 /// top-k when `params` is None — the oracle configuration).
 pub struct NativeBackend {
-    /// Column-major database: `db[j * d .. (j+1) * d]` is vector j.
+    /// Row-major database: `db[j * d .. (j+1) * d]` is vector j.
     database: Vec<f32>,
     d: usize,
     n: usize,
@@ -98,7 +93,9 @@ impl NativeBackend {
     }
 
     fn score_into_scratch(&mut self, q: &[f32]) {
-        score_row(&self.database, self.d, q, &mut self.scores_scratch);
+        // The whole database is one tile of the shared micro-kernel, so
+        // scores here are bit-identical to every other native path.
+        score_tile(&self.database, self.d, q, &mut self.scores_scratch);
     }
 }
 
@@ -131,31 +128,49 @@ impl ShardBackend for NativeBackend {
     }
 }
 
-/// Multi-core native backend: the [`NativeBackend`] matmul followed by the
-/// batched [`ParallelTwoStageTopK`] engine. The whole query batch formed by
-/// the dynamic batcher arrives in one `score_topk` call, is scored into a
-/// `[nq, N]` scratch, and runs through the worker pool in a single
-/// `run_batch` dispatch — pool setup and channel hops amortize across the
-/// batch. Results are identical to [`NativeBackend`] with the same params.
+/// The multi-core execution pipeline behind [`ParallelNativeBackend`].
+enum ParallelEngine {
+    /// Score on the shard thread into a `[nq, N]` scratch, then Stage 1
+    /// across the worker pool — the pre-fusion pipeline, kept for A/B
+    /// measurement (`benches/fused_pipeline.rs`) and as a second oracle.
+    Unfused {
+        operator: ParallelTwoStageTopK,
+        /// `[nq, n]` score scratch, grown on demand and reused.
+        scores: Vec<f32>,
+    },
+    /// Scoring fused into the pool: each worker scores the database rows
+    /// of its lane range tile by tile and streams them into its Stage-1
+    /// state. No materialized score matrix.
+    Fused(FusedParallelMips),
+}
+
+/// Multi-core native backend over the lane-parallel worker pool.
 ///
-/// Scoring itself still runs on the shard thread; only the Top-K stages are
-/// parallel. At high `d` the matmul dominates, so moving scoring into the
-/// worker pool is the natural next step (tracked on the ROADMAP).
+/// In the default **fused** configuration the whole query batch formed by
+/// the dynamic batcher arrives in one `score_topk` call and is handed
+/// straight to [`FusedParallelMips`]: each pool worker scores its own lane
+/// range's database rows with the shared
+/// [`score_tile`](crate::topk::kernel::score_tile) micro-kernel and feeds
+/// its Stage-1 state directly, so the scoring matmul parallelizes with
+/// Stage 1 and the `O(nq·N)` score scratch never exists. The **unfused**
+/// configuration (config `"fused": false`) preserves the pre-fusion
+/// pipeline: single-threaded scoring into a scratch, pool for the Top-K
+/// stages only. Both return results bit-identical to [`NativeBackend`]
+/// with the same params.
 pub struct ParallelNativeBackend {
-    /// Row-major database: `db[j * d .. (j+1) * d]` is vector j.
-    database: Vec<f32>,
+    /// Shared row-major database: `db[j * d .. (j+1) * d]` is vector j.
+    database: Arc<Vec<f32>>,
     d: usize,
     n: usize,
     k: usize,
-    operator: ParallelTwoStageTopK,
-    /// `[nq, n]` score scratch, grown on demand and reused across batches.
-    scores: Vec<f32>,
+    engine: ParallelEngine,
 }
 
 impl ParallelNativeBackend {
-    /// `database` is `[n, d]` row-major. `threads` sizes the Stage-1 worker
-    /// pool (clamped to `[1, B]`; pass
-    /// `std::thread::available_parallelism()` for one worker per core).
+    /// Fused pipeline with auto tile sizing — the production default.
+    /// `database` is `[n, d]` row-major. `threads` sizes the worker pool
+    /// (clamped to `[1, B]`; pass `std::thread::available_parallelism()`
+    /// for one worker per core).
     pub fn new(
         database: Vec<f32>,
         d: usize,
@@ -163,24 +178,61 @@ impl ParallelNativeBackend {
         params: TwoStageParams,
         threads: usize,
     ) -> Self {
+        Self::with_pipeline(database, d, k, params, threads, true, 0)
+    }
+
+    /// Full-control constructor: `fused` selects the pipeline (see the
+    /// type docs), `tile_rows` is the fused engine's stream-rows-per-tile
+    /// knob (0 = auto, ignored when unfused).
+    pub fn with_pipeline(
+        database: Vec<f32>,
+        d: usize,
+        k: usize,
+        params: TwoStageParams,
+        threads: usize,
+        fused: bool,
+        tile_rows: usize,
+    ) -> Self {
         assert!(d > 0 && !database.is_empty());
         assert_eq!(database.len() % d, 0);
         let n = database.len() / d;
         assert_eq!(params.n, n, "two-stage N must equal shard size");
         assert_eq!(params.k, k);
+        let database = Arc::new(database);
+        let engine = if fused {
+            ParallelEngine::Fused(FusedParallelMips::new(
+                database.clone(),
+                d,
+                params,
+                threads,
+                tile_rows,
+            ))
+        } else {
+            ParallelEngine::Unfused {
+                operator: ParallelTwoStageTopK::new(params, threads),
+                scores: Vec::new(),
+            }
+        };
         ParallelNativeBackend {
             database,
             d,
             n,
             k,
-            operator: ParallelTwoStageTopK::new(params, threads),
-            scores: Vec::new(),
+            engine,
         }
     }
 
-    /// Number of Stage-1 pool workers actually running.
+    /// Number of pool workers actually running.
     pub fn threads(&self) -> usize {
-        self.operator.threads()
+        match &self.engine {
+            ParallelEngine::Unfused { operator, .. } => operator.threads(),
+            ParallelEngine::Fused(engine) => engine.threads(),
+        }
+    }
+
+    /// Whether scoring is fused into the worker pool.
+    pub fn is_fused(&self) -> bool {
+        matches!(self.engine, ParallelEngine::Fused(_))
     }
 }
 
@@ -189,14 +241,19 @@ impl ShardBackend for ParallelNativeBackend {
         anyhow::ensure!(queries.len() == nq * self.d, "bad query buffer");
         let d = self.d;
         let n = self.n;
-        self.scores.resize(nq * n, 0.0);
-        for qi in 0..nq {
-            let q = &queries[qi * d..(qi + 1) * d];
-            let row = &mut self.scores[qi * n..(qi + 1) * n];
-            score_row(&self.database, d, q, row);
+        match &mut self.engine {
+            ParallelEngine::Fused(engine) => Ok(engine.run_batch(queries, nq)),
+            ParallelEngine::Unfused { operator, scores } => {
+                scores.resize(nq * n, 0.0);
+                for qi in 0..nq {
+                    let q = &queries[qi * d..(qi + 1) * d];
+                    let row = &mut scores[qi * n..(qi + 1) * n];
+                    score_tile(&self.database, d, q, row);
+                }
+                let rows: Vec<&[f32]> = scores.chunks(n).take(nq).collect();
+                Ok(operator.run_batch(&rows))
+            }
         }
-        let rows: Vec<&[f32]> = self.scores.chunks(n).take(nq).collect();
-        Ok(self.operator.run_batch(&rows))
     }
 
     fn dim(&self) -> usize {
@@ -214,12 +271,17 @@ impl ShardBackend for ParallelNativeBackend {
 
 /// PJRT backend: drives the fused `mips_fused_*` artifact. The database is
 /// bound at construction (it is an artifact input, passed on every call —
-/// PJRT CPU keeps it host-side, so this costs a copy; a production TPU
-/// deployment would use device-resident buffers).
+/// PJRT CPU keeps it host-side; a production TPU deployment would use
+/// device-resident buffers). Both artifact inputs are held as
+/// [`HostTensor`]s and *borrowed* by each compiled-batch chunk via
+/// [`CompiledArtifact::run_ref`], so a call costs no `O(n·d)` copies.
 pub struct PjrtBackend {
     artifact: Arc<CompiledArtifact>,
-    /// `[d, n]` row-major (transposed database, the artifact's rhs layout).
-    database_t: Vec<f32>,
+    /// `[d, n]` row-major (transposed database, the artifact's rhs layout),
+    /// wrapped once at construction.
+    database_t: HostTensor,
+    /// Reusable `[batch, d]` padded query chunk.
+    padded: HostTensor,
     d: usize,
     n: usize,
     k: usize,
@@ -250,7 +312,8 @@ impl PjrtBackend {
         }
         Ok(PjrtBackend {
             artifact,
-            database_t,
+            database_t: HostTensor::F32(database_t),
+            padded: HostTensor::F32(vec![0f32; batch * d]),
             d,
             n,
             k,
@@ -268,17 +331,20 @@ impl ShardBackend for PjrtBackend {
     fn score_topk(&mut self, queries: &[f32], nq: usize) -> Result<Vec<Vec<Candidate>>> {
         anyhow::ensure!(queries.len() == nq * self.d, "bad query buffer");
         let mut out = Vec::with_capacity(nq);
-        // Static shapes: run in compiled-batch chunks, padding the tail.
-        let mut padded = vec![0f32; self.batch * self.d];
+        // Static shapes: run in compiled-batch chunks, padding the tail in
+        // the reusable chunk buffer.
         let mut start = 0;
         while start < nq {
             let take = (nq - start).min(self.batch);
-            padded.fill(0.0);
-            padded[..take * self.d]
-                .copy_from_slice(&queries[start * self.d..(start + take) * self.d]);
-            let results = self
-                .artifact
-                .run(&[HostTensor::F32(padded.clone()), HostTensor::F32(self.database_t.clone())])?;
+            {
+                let HostTensor::F32(padded) = &mut self.padded else {
+                    unreachable!("padded is constructed as F32");
+                };
+                padded.fill(0.0);
+                padded[..take * self.d]
+                    .copy_from_slice(&queries[start * self.d..(start + take) * self.d]);
+            }
+            let results = self.artifact.run_ref(&[&self.padded, &self.database_t])?;
             let values = results[0].as_f32().unwrap();
             let indices = results[1].as_i32().unwrap();
             for qi in 0..take {
@@ -313,6 +379,7 @@ impl ShardBackend for PjrtBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check::property;
     use crate::util::Rng;
 
     fn make_db(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
@@ -360,7 +427,9 @@ mod tests {
     }
 
     #[test]
-    fn parallel_backend_matches_sequential_native() {
+    fn fused_backend_matches_sequential_native() {
+        // The headline property: the fused pipeline is bit-identical to the
+        // sequential oracle at every thread count.
         let d = 16;
         let n = 2048;
         let k = 32;
@@ -373,9 +442,38 @@ mod tests {
         let want = sequential.score_topk(&queries, nq).unwrap();
         for threads in [1usize, 2, 4] {
             let mut parallel = ParallelNativeBackend::new(db.clone(), d, k, params, threads);
+            assert!(parallel.is_fused());
             assert_eq!(parallel.dim(), d);
             assert_eq!(parallel.shard_size(), n);
             assert_eq!(parallel.k(), k);
+            let got = parallel.score_topk(&queries, nq).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn unfused_backend_matches_sequential_native() {
+        let d = 16;
+        let n = 2048;
+        let k = 32;
+        let mut rng = Rng::new(22);
+        let db = make_db(&mut rng, n, d);
+        let params = TwoStageParams::new(n, k, 128, 2);
+        let mut sequential = NativeBackend::new(db.clone(), d, k, Some(params));
+        let nq = 4;
+        let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+        let want = sequential.score_topk(&queries, nq).unwrap();
+        for threads in [1usize, 3] {
+            let mut parallel = ParallelNativeBackend::with_pipeline(
+                db.clone(),
+                d,
+                k,
+                params,
+                threads,
+                false,
+                0,
+            );
+            assert!(!parallel.is_fused());
             let got = parallel.score_topk(&queries, nq).unwrap();
             assert_eq!(got, want, "threads={threads}");
         }
@@ -400,6 +498,59 @@ mod tests {
                 "nq={nq}"
             );
         }
+    }
+
+    #[test]
+    fn prop_fused_and_unfused_match_the_oracle() {
+        // Thread counts {1, 2, 4}, non-divisible lane splits (B=50),
+        // d off the accumulator width, explicit tile sizes that leave
+        // ragged tails, and ragged nq — all bit-identical to the
+        // sequential NativeBackend.
+        property("parallel backends == sequential backend", 12, |g| {
+            let b = *g.choose(&[32usize, 50, 64]);
+            let rows = g.usize_in(4..=10);
+            let n = b * rows;
+            let kp = g.usize_in(1..=3);
+            let k = g.usize_in(1..=(b * kp).min(n));
+            let d = *g.choose(&[3usize, 8, 13, 24]);
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let tile_rows = g.usize_in(0..=rows + 1);
+            let nq = g.usize_in(1..=5);
+            let params = TwoStageParams::new(n, k, b, kp);
+            let db: Vec<f32> = (0..n * d).map(|_| g.rng().next_gaussian() as f32).collect();
+            let queries: Vec<f32> =
+                (0..nq * d).map(|_| g.rng().next_gaussian() as f32).collect();
+            let mut oracle = NativeBackend::new(db.clone(), d, k, Some(params));
+            let want = oracle.score_topk(&queries, nq).unwrap();
+            let mut fused = ParallelNativeBackend::with_pipeline(
+                db.clone(),
+                d,
+                k,
+                params,
+                threads,
+                true,
+                tile_rows,
+            );
+            assert_eq!(
+                fused.score_topk(&queries, nq).unwrap(),
+                want,
+                "fused (n={n},k={k},b={b},kp={kp},d={d},t={threads},tile={tile_rows},nq={nq})"
+            );
+            let mut unfused = ParallelNativeBackend::with_pipeline(
+                db.clone(),
+                d,
+                k,
+                params,
+                threads,
+                false,
+                0,
+            );
+            assert_eq!(
+                unfused.score_topk(&queries, nq).unwrap(),
+                want,
+                "unfused (n={n},k={k},b={b},kp={kp},d={d},t={threads},nq={nq})"
+            );
+        });
     }
 
     #[test]

@@ -11,7 +11,11 @@
 //!   machinery of the paper (recall theory, parameter selection, ridge-point
 //!   performance model) and pure-Rust reference/baseline implementations —
 //!   including the multi-core batched engine in [`topk::parallel`] that
-//!   shards the first stage's bucket state across a worker pool.
+//!   shards the first stage's bucket state across a worker pool, and the
+//!   fused score+select pipeline in [`topk::fused`] that moves the scoring
+//!   matmul into the same pool (the CPU analogue of the paper's fused MIPS
+//!   kernel), both built on the shared [`topk::kernel`] dot-product
+//!   micro-kernel.
 
 pub mod bench_harness;
 pub mod config;

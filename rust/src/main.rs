@@ -347,7 +347,14 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         cfg.d,
         match cfg.backend {
             BackendKind::Native => "native".to_string(),
-            BackendKind::NativeParallel => format!("native-parallel, {threads} threads/shard"),
+            BackendKind::NativeParallel => format!(
+                "native-parallel, {threads} threads/shard, {}",
+                if cfg.fused {
+                    "fused score+select"
+                } else {
+                    "unfused"
+                }
+            ),
             BackendKind::Pjrt => "pjrt".to_string(),
         }
     );
@@ -384,10 +391,14 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
                 Ok(Box::new(NativeBackend::new(chunk, d, k, Some(params)))
                     as Box<dyn ShardBackend>)
             })),
-            BackendKind::NativeParallel => factories.push(Box::new(move || {
-                Ok(Box::new(ParallelNativeBackend::new(chunk, d, k, params, threads))
-                    as Box<dyn ShardBackend>)
-            })),
+            BackendKind::NativeParallel => {
+                let (fused, tile_rows) = (cfg.fused, cfg.tile_rows);
+                factories.push(Box::new(move || {
+                    Ok(Box::new(ParallelNativeBackend::with_pipeline(
+                        chunk, d, k, params, threads, fused, tile_rows,
+                    )) as Box<dyn ShardBackend>)
+                }))
+            }
             BackendKind::Pjrt => {
                 let dir = cfg.artifact_dir.clone();
                 let artifact = cfg.artifact.clone().unwrap();

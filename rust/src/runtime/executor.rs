@@ -65,6 +65,15 @@ impl CompiledArtifact {
     /// Execute with host tensors; validates shapes/dtypes against the
     /// manifest entry and returns one host tensor per declared output.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_ref(&refs)
+    }
+
+    /// [`run`](Self::run) over *borrowed* tensors: callers that keep
+    /// long-lived inputs (e.g. a shard database bound at construction, or
+    /// a reusable padded query chunk) pass them by reference on every call
+    /// instead of cloning their backing buffers.
+    pub fn run_ref(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         ensure!(
             inputs.len() == self.entry.inputs.len(),
             "artifact {}: expected {} inputs, got {}",
@@ -73,7 +82,7 @@ impl CompiledArtifact {
             inputs.len()
         );
         let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (t, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+        for (i, (&t, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
             ensure!(
                 t.len() == spec.elements(),
                 "artifact {} input {i}: expected {} elements, got {}",

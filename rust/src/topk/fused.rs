@@ -1,0 +1,389 @@
+//! Fused score+select: the scoring matmul and Stage 1 as one tiled
+//! pipeline inside the lane-parallel worker pool.
+//!
+//! This is the CPU re-derivation of the paper's §7.3 fused MIPS kernel
+//! (where fusing the scoring matmul with the first-stage bucket selection
+//! is what unlocks the order-of-magnitude TPU speedup): instead of
+//! materializing a full `[nq, N]` score matrix on the shard thread and
+//! only then handing rows to the Top-K pool, each pool worker *owns the
+//! database rows of its lane range* and does both halves of the work
+//! itself.
+//!
+//! Lane ownership: element `i` of the score vector belongs to bucket
+//! `i mod B`, so the worker that owns lanes `[lane_lo, lane_hi)` owns
+//! exactly the database rows `{ i : i mod B ∈ [lane_lo, lane_hi) }` —
+//! which, for each stream row `r ∈ [0, N/B)`, form the *contiguous* row
+//! range `[r·B + lane_lo, r·B + lane_hi)`. Each worker walks its stream
+//! rows in ascending order in tiles of `tile_rows`, scores every tile row
+//! range against each query with the shared
+//! [`score_tile`](super::kernel::score_tile) micro-kernel, and streams the
+//! resulting `(index, score)` tiles straight into its private per-query
+//! [`Stage1State`] via [`Stage1State::ingest_tile`] — the `O(nq·N)` score
+//! scratch never exists.
+//!
+//! Determinism: per-bucket stream order is ascending `i` (rows ascend,
+//! lanes within a row ascend), every dot product goes through the one
+//! shared reduction order of `score_tile`, and the Stage-1 update is the
+//! same insert + single-bubble-pass — so the fused engine returns
+//! candidates bit-identical to scoring with `score_tile` and running the
+//! sequential [`TwoStageTopK`](super::TwoStageTopK), at any thread count,
+//! lane split, or tile size.
+//!
+//! Tiling: queries in the batch re-read each database tile while it is
+//! cache-resident (tile-major outer loop, queries inner), so a batch of
+//! `nq` queries reads the database from memory once per tile instead of
+//! `nq` times end-to-end. `tile_rows = 0` auto-sizes tiles to ~256 KiB of
+//! database rows.
+
+use std::sync::Arc;
+
+use super::kernel::score_tile;
+use super::parallel::{merge_stage2, state_candidates, LanePool, SliceHandle};
+use super::twostage::{Stage1State, TwoStageParams};
+use super::Candidate;
+
+/// Auto tile sizing target: keep one tile's database rows around this many
+/// bytes so the tile stays L2-resident while every query in the batch
+/// re-reads it.
+const TILE_TARGET_BYTES: usize = 256 * 1024;
+
+/// One dispatched fused job: the packed `[nq, d]` query block.
+struct FusedJob {
+    queries: SliceHandle,
+    nq: usize,
+}
+
+/// Worker-private half of the fused pipeline: the shared database handle,
+/// this worker's lane range, and its per-query Stage-1 states.
+struct FusedLaneState {
+    /// Shared `[n, d]` row-major database (read-only on the hot path).
+    database: Arc<Vec<f32>>,
+    d: usize,
+    /// First owned global bucket (lane).
+    lane_lo: usize,
+    /// Number of owned buckets.
+    lanes: usize,
+    /// Global bucket count B.
+    buckets: usize,
+    /// Stream rows: N / B.
+    rows: usize,
+    /// Stream rows per tile (≥ 1).
+    tile_rows: usize,
+    local_k: usize,
+    filter_padding: bool,
+    /// One `[K′][lanes]` state per query in the batch, grown on demand and
+    /// reused across batches.
+    states: Vec<Stage1State>,
+    /// `[lanes]` score scratch for one stream row.
+    scores: Vec<f32>,
+}
+
+impl FusedLaneState {
+    /// Score-and-select the worker's lane range for a packed `[nq, d]`
+    /// query block; returns this worker's candidates per query.
+    fn run(&mut self, queries: &[f32], nq: usize) -> Vec<Vec<Candidate>> {
+        debug_assert_eq!(queries.len(), nq * self.d);
+        while self.states.len() < nq {
+            self.states.push(Stage1State::with_dims(self.lanes, self.local_k));
+        }
+        for state in &mut self.states[..nq] {
+            state.reset();
+        }
+        let d = self.d;
+        let b = self.buckets;
+        let lane_lo = self.lane_lo;
+        let lanes = self.lanes;
+        let mut tile_start = 0;
+        while tile_start < self.rows {
+            let tile_end = (tile_start + self.tile_rows).min(self.rows);
+            for (qi, state) in self.states[..nq].iter_mut().enumerate() {
+                let q = &queries[qi * d..(qi + 1) * d];
+                for row in tile_start..tile_end {
+                    let base = row * b + lane_lo;
+                    let db_rows = &self.database[base * d..(base + lanes) * d];
+                    score_tile(db_rows, d, q, &mut self.scores);
+                    state.ingest_tile(base as u32, 0, &self.scores);
+                }
+            }
+            tile_start = tile_end;
+        }
+        self.states[..nq]
+            .iter()
+            .map(|state| state_candidates(state, self.filter_padding))
+            .collect()
+    }
+}
+
+/// The fused score+select MIPS engine: construct once per (database,
+/// params) shape, reuse across query batches — the pool, per-worker
+/// states, and scratch all persist.
+///
+/// Returns candidates bit-identical to the sequential
+/// [`NativeBackend`](crate::coordinator::NativeBackend) (scoring through
+/// the shared [`kernel`](super::kernel) then running
+/// [`TwoStageTopK`](super::TwoStageTopK)) with the same params, at any
+/// thread count or tile size.
+pub struct FusedParallelMips {
+    pub params: TwoStageParams,
+    d: usize,
+    pool: LanePool<FusedJob>,
+    cand_scratch: Vec<Candidate>,
+}
+
+impl FusedParallelMips {
+    /// Spawn the fused pool over a `[n, d]` row-major `database` with
+    /// `n = params.n` vectors. `threads` sizes the pool (clamped to
+    /// `[1, B]`; non-divisible lane splits balance to within one lane).
+    /// `tile_rows = 0` auto-sizes tiles (~256 KiB of database rows per
+    /// tile); any other value is the stream-row count per tile.
+    pub fn new(
+        database: Arc<Vec<f32>>,
+        d: usize,
+        params: TwoStageParams,
+        threads: usize,
+        tile_rows: usize,
+    ) -> FusedParallelMips {
+        assert!(d > 0, "d must be positive");
+        assert_eq!(
+            database.len(),
+            params.n * d,
+            "database must hold params.n = {} vectors of length {d}",
+            params.n
+        );
+        let t = threads.clamp(1, params.buckets);
+        let filter_padding = params.local_k > params.bucket_size();
+        let rows = params.n / params.buckets;
+        let states: Vec<FusedLaneState> = (0..t)
+            .map(|w| {
+                let lane_lo = w * params.buckets / t;
+                let lane_hi = (w + 1) * params.buckets / t;
+                let lanes = lane_hi - lane_lo;
+                let tr = if tile_rows == 0 {
+                    (TILE_TARGET_BYTES / (lanes * d * 4)).clamp(1, rows)
+                } else {
+                    tile_rows
+                };
+                FusedLaneState {
+                    database: database.clone(),
+                    d,
+                    lane_lo,
+                    lanes,
+                    buckets: params.buckets,
+                    rows,
+                    tile_rows: tr,
+                    local_k: params.local_k,
+                    filter_padding,
+                    states: Vec::new(),
+                    scores: vec![0.0; lanes],
+                }
+            })
+            .collect();
+        let pool = LanePool::spawn(
+            "fastk-fused",
+            states,
+            |state: &mut FusedLaneState, job: &FusedJob| {
+                // Safety: the dispatcher blocks on the reply barrier before
+                // releasing the query-block borrow.
+                let queries = unsafe { job.queries.get() };
+                state.run(queries, job.nq)
+            },
+        );
+        FusedParallelMips {
+            params,
+            d,
+            pool,
+            cand_scratch: Vec::with_capacity(params.num_candidates()),
+        }
+    }
+
+    /// Number of pool workers (may be lower than requested when B is small).
+    pub fn threads(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Vector dimensionality the engine scores against.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Fused scoring + two-stage Top-K for a packed `[nq, d]` query block:
+    /// per-query top-K candidates with database-row indices, canonical
+    /// (descending) order.
+    pub fn run_batch(&mut self, queries: &[f32], nq: usize) -> Vec<Vec<Candidate>> {
+        assert_eq!(queries.len(), nq * self.d, "query block size mismatch");
+        if nq == 0 {
+            return Vec::new();
+        }
+        let per_worker = self.pool.dispatch(|_| FusedJob {
+            queries: SliceHandle::new(queries),
+            nq,
+        });
+        merge_stage2(&per_worker, nq, self.params.k, &mut self.cand_scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::kernel;
+    use crate::topk::TwoStageTopK;
+    use crate::util::check::property;
+    use crate::util::Rng;
+
+    fn make_db(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    /// The unfused oracle: score with the shared kernel, then run the
+    /// sequential operator — exactly what `NativeBackend` does.
+    fn oracle_batch(
+        db: &[f32],
+        d: usize,
+        params: TwoStageParams,
+        queries: &[f32],
+        nq: usize,
+    ) -> Vec<Vec<Candidate>> {
+        let mut op = TwoStageTopK::new(params);
+        let mut scores = vec![0f32; params.n];
+        (0..nq)
+            .map(|qi| {
+                kernel::score_tile(db, d, &queries[qi * d..(qi + 1) * d], &mut scores);
+                op.run(&scores)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_oracle_across_thread_counts() {
+        let mut rng = Rng::new(41);
+        let (n, d, k, b, kp) = (1024usize, 16usize, 32usize, 128usize, 2usize);
+        let params = TwoStageParams::new(n, k, b, kp);
+        let db = make_db(&mut rng, n, d);
+        let nq = 3;
+        let queries = make_db(&mut rng, nq, d);
+        let want = oracle_batch(&db, d, params, &queries, nq);
+        let shared = Arc::new(db);
+        for threads in [1usize, 2, 4] {
+            let mut fused = FusedParallelMips::new(shared.clone(), d, params, threads, 0);
+            assert_eq!(fused.run_batch(&queries, nq), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_on_non_divisible_lane_splits() {
+        // B=50 across 4 workers -> 13/12/13/12 lanes.
+        let mut rng = Rng::new(43);
+        let (n, d, k, b, kp) = (600usize, 8usize, 16usize, 50usize, 2usize);
+        let params = TwoStageParams::new(n, k, b, kp);
+        let db = make_db(&mut rng, n, d);
+        let nq = 2;
+        let queries = make_db(&mut rng, nq, d);
+        let want = oracle_batch(&db, d, params, &queries, nq);
+        let mut fused = FusedParallelMips::new(Arc::new(db), d, params, 4, 0);
+        assert_eq!(fused.run_batch(&queries, nq), want);
+    }
+
+    #[test]
+    fn matches_oracle_when_d_is_not_a_multiple_of_the_accumulator_width() {
+        let mut rng = Rng::new(47);
+        for &d in &[kernel::ACC_LANES - 1, kernel::ACC_LANES + 5] {
+            let (n, k, b, kp) = (512usize, 16usize, 64usize, 2usize);
+            let params = TwoStageParams::new(n, k, b, kp);
+            let db = make_db(&mut rng, n, d);
+            let nq = 2;
+            let queries = make_db(&mut rng, nq, d);
+            let want = oracle_batch(&db, d, params, &queries, nq);
+            let mut fused = FusedParallelMips::new(Arc::new(db), d, params, 3, 0);
+            assert_eq!(fused.run_batch(&queries, nq), want, "d={d}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_at_every_tile_size() {
+        // rows = 16; tile_rows 5 leaves a ragged final tile, 1 is the
+        // degenerate row-at-a-time pipeline, 100 is one tile for
+        // everything.
+        let mut rng = Rng::new(53);
+        let (n, d, k, b, kp) = (1024usize, 12usize, 24usize, 64usize, 3usize);
+        let params = TwoStageParams::new(n, k, b, kp);
+        let db = make_db(&mut rng, n, d);
+        let nq = 2;
+        let queries = make_db(&mut rng, nq, d);
+        let want = oracle_batch(&db, d, params, &queries, nq);
+        let shared = Arc::new(db);
+        for tile_rows in [1usize, 5, 16, 100] {
+            let mut fused = FusedParallelMips::new(shared.clone(), d, params, 2, tile_rows);
+            assert_eq!(fused.run_batch(&queries, nq), want, "tile_rows={tile_rows}");
+        }
+    }
+
+    #[test]
+    fn ragged_batches_and_reuse() {
+        // Growing then shrinking nq across calls exercises per-query state
+        // growth and reset; odd nq exercises ragged tails end-to-end.
+        let mut rng = Rng::new(59);
+        let (n, d, k, b, kp) = (512usize, 8usize, 16usize, 64usize, 1usize);
+        let params = TwoStageParams::new(n, k, b, kp);
+        let db = make_db(&mut rng, n, d);
+        let shared = Arc::new(db.clone());
+        let mut fused = FusedParallelMips::new(shared, d, params, 2, 0);
+        for &nq in &[1usize, 5, 2, 3] {
+            let queries = make_db(&mut rng, nq, d);
+            assert_eq!(
+                fused.run_batch(&queries, nq),
+                oracle_batch(&db, d, params, &queries, nq),
+                "nq={nq}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let params = TwoStageParams::new(64, 4, 8, 1);
+        let mut rng = Rng::new(61);
+        let db = make_db(&mut rng, 64, 4);
+        let mut fused = FusedParallelMips::new(Arc::new(db), 4, params, 2, 0);
+        assert!(fused.run_batch(&[], 0).is_empty());
+    }
+
+    #[test]
+    fn padding_slots_are_filtered() {
+        // K' > bucket size: -inf padding slots must be dropped exactly like
+        // the sequential stage 2.
+        let params = TwoStageParams::new(64, 24, 16, 8); // bucket size 4 < K'=8
+        let mut rng = Rng::new(67);
+        let d = 6;
+        let db = make_db(&mut rng, 64, d);
+        let queries = make_db(&mut rng, 2, d);
+        let want = oracle_batch(&db, d, params, &queries, 2);
+        let mut fused = FusedParallelMips::new(Arc::new(db), d, params, 3, 0);
+        assert_eq!(fused.run_batch(&queries, 2), want);
+    }
+
+    #[test]
+    fn prop_fused_equals_unfused_oracle() {
+        property("fused == score_tile + sequential two-stage", 25, |g| {
+            let b = *g.choose(&[16usize, 50, 96]);
+            let rows = g.usize_in(2..=12);
+            let n = b * rows;
+            let kp = g.usize_in(1..=3);
+            let k = g.usize_in(1..=(b * kp).min(n));
+            let d = g.usize_in(1..=20);
+            let threads = g.usize_in(1..=5);
+            let tile_rows = g.usize_in(0..=rows + 2);
+            let nq = g.usize_in(1..=4);
+            let params = TwoStageParams::new(n, k, b, kp);
+            let db: Vec<f32> = (0..n * d).map(|_| g.rng().next_gaussian() as f32).collect();
+            let queries: Vec<f32> =
+                (0..nq * d).map(|_| g.rng().next_gaussian() as f32).collect();
+            let want = oracle_batch(&db, d, params, &queries, nq);
+            let mut fused =
+                FusedParallelMips::new(Arc::new(db), d, params, threads, tile_rows);
+            assert_eq!(
+                fused.run_batch(&queries, nq),
+                want,
+                "(n={n},k={k},b={b},kp={kp},d={d},threads={threads},tile={tile_rows},nq={nq})"
+            );
+        });
+    }
+}

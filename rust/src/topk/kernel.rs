@@ -1,0 +1,139 @@
+//! The CPU scoring micro-kernel shared by every native backend.
+//!
+//! [`score_tile`] computes inner products of one query against a tile of
+//! consecutive row-major database vectors with a *fixed, tiling-independent
+//! reduction order*: [`ACC_LANES`] split accumulators over the depth axis
+//! (so the compiler can keep several FMA chains in flight instead of
+//! serializing on one), combined pairwise, then a scalar tail for
+//! `d % ACC_LANES` in ascending order.
+//!
+//! Fixing the order is what makes the fused pipeline testable: the
+//! sequential [`NativeBackend`](crate::coordinator::NativeBackend), the
+//! unfused parallel backend, and the fused score+select workers all funnel
+//! every dot product through this one routine, so a database row's score is
+//! bit-identical no matter which worker computed it or how the rows were
+//! tiled — and therefore the candidate lists are too.
+
+/// Split-accumulator count (and depth unroll) of [`score_tile`]. Public so
+/// tests can deliberately exercise the `d % ACC_LANES != 0` tail.
+pub const ACC_LANES: usize = 8;
+
+/// Score one query against a tile of `out.len()` consecutive database
+/// vectors: `out[j] = <q, rows[j*d .. (j+1)*d]>`.
+///
+/// Reduction order (fixed; see module docs): accumulator `l` sums the
+/// products at depths `i ≡ l (mod ACC_LANES)` over the aligned prefix, the
+/// accumulators combine as `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`, and the
+/// tail depths are added last in ascending `i`.
+pub fn score_tile(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(rows.len(), out.len() * d);
+    let aligned = d - d % ACC_LANES;
+    let (q_main, q_tail) = q.split_at(aligned);
+    for (j, s) in out.iter_mut().enumerate() {
+        let v = &rows[j * d..(j + 1) * d];
+        let (v_main, v_tail) = v.split_at(aligned);
+        let mut acc = [0f32; ACC_LANES];
+        for (qc, vc) in q_main
+            .chunks_exact(ACC_LANES)
+            .zip(v_main.chunks_exact(ACC_LANES))
+        {
+            for l in 0..ACC_LANES {
+                acc[l] += qc[l] * vc[l];
+            }
+        }
+        let mut sum = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+            + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for (a, b) in q_tail.iter().zip(v_tail.iter()) {
+            sum += a * b;
+        }
+        *s = sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_dot(q: &[f32], v: &[f32]) -> f64 {
+        q.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum()
+    }
+
+    #[test]
+    fn matches_naive_dot_within_tolerance() {
+        let mut rng = Rng::new(11);
+        for &d in &[1usize, 3, 7, 8, 13, 64, 100, 256] {
+            let n = 9;
+            let rows: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let mut out = vec![0f32; n];
+            score_tile(&rows, d, &q, &mut out);
+            for (j, &got) in out.iter().enumerate() {
+                let want = naive_dot(&q, &rows[j * d..(j + 1) * d]);
+                let scale = 1.0 + want.abs();
+                assert!(
+                    ((got as f64) - want).abs() < 1e-4 * scale,
+                    "d={d} row {j}: got {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiling_does_not_change_the_sum() {
+        // The invariant the fused pipeline rests on: a row's score does not
+        // depend on which tile it was computed in.
+        let mut rng = Rng::new(23);
+        for &d in &[8usize, 13, 96] {
+            let n = 24;
+            let rows: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let mut whole = vec![0f32; n];
+            score_tile(&rows, d, &q, &mut whole);
+            for tile in [1usize, 5, 7, n] {
+                let mut pieced = vec![0f32; n];
+                let mut start = 0;
+                while start < n {
+                    let end = (start + tile).min(n);
+                    score_tile(
+                        &rows[start * d..end * d],
+                        d,
+                        &q,
+                        &mut pieced[start..end],
+                    );
+                    start = end;
+                }
+                assert_eq!(whole, pieced, "d={d} tile={tile}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_is_a_no_op() {
+        let q = [1.0f32, 2.0];
+        let mut out: Vec<f32> = Vec::new();
+        score_tile(&[], 2, &q, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn exact_on_integer_data() {
+        // Small integer values are exact in f32 regardless of summation
+        // order, so the kernel must reproduce the naive sum bit-for-bit.
+        let d = 11; // exercises the tail path (11 % 8 == 3)
+        let n = 4;
+        let rows: Vec<f32> = (0..n * d).map(|i| ((i % 5) as f32) - 2.0).collect();
+        let q: Vec<f32> = (0..d).map(|i| ((i % 3) as f32) - 1.0).collect();
+        let mut out = vec![0f32; n];
+        score_tile(&rows, d, &q, &mut out);
+        for (j, &got) in out.iter().enumerate() {
+            let want: f32 = q
+                .iter()
+                .zip(&rows[j * d..(j + 1) * d])
+                .map(|(a, b)| a * b)
+                .sum();
+            assert_eq!(got, want, "row {j}");
+        }
+    }
+}

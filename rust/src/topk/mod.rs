@@ -14,10 +14,13 @@
 
 pub mod bitonic;
 pub mod exact;
+pub mod fused;
+pub mod kernel;
 pub mod parallel;
 pub mod streaming;
 pub mod twostage;
 
+pub use fused::FusedParallelMips;
 pub use parallel::ParallelTwoStageTopK;
 pub use streaming::StreamingTopK;
 pub use twostage::{TwoStageParams, TwoStageTopK};

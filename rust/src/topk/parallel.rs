@@ -12,12 +12,19 @@
 //!
 //! Design:
 //!
-//! - [`ParallelTwoStageTopK::new`] spawns a persistent `std::thread` pool.
-//!   Worker `w` owns the contiguous lane range `[w·B/T, (w+1)·B/T)` and a
-//!   private `[K′][lanes]` slice of the lane-parallel state
-//!   ([`Stage1State`](super::twostage::Stage1State) with the worker's lane
-//!   count as its minor width), so no state is shared and no locks are
-//!   taken on the hot path.
+//! - `LanePool` (crate-internal) is the shared pool substrate: it spawns
+//!   persistent `std::thread` workers over per-worker lane state,
+//!   dispatches one job per worker, and blocks on a reply barrier until
+//!   every worker has answered. Two engines run on it:
+//!   [`ParallelTwoStageTopK`] here (jobs
+//!   carry pre-materialized score rows) and the fused score+select
+//!   pipeline in [`fused`](super::fused) (jobs carry the raw query batch
+//!   and each worker scores its own lane range's database rows).
+//! - [`ParallelTwoStageTopK::new`] gives worker `w` the contiguous lane
+//!   range `[w·B/T, (w+1)·B/T)` and a private `[K′][lanes]` slice of the
+//!   lane-parallel state ([`Stage1State`](super::twostage::Stage1State)
+//!   with the worker's lane count as its minor width), so no state is
+//!   shared and no locks are taken on the hot path.
 //! - [`ParallelTwoStageTopK::run`] / [`ParallelTwoStageTopK::run_batch`]
 //!   dispatch one job per worker (a whole batch per job, amortizing the
 //!   two channel hops per worker across all queries), block until every
@@ -40,19 +47,19 @@
 //! assert_eq!(parallel.run(&values), sequential.run(&values));
 //! ```
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
 
 use super::exact;
 use super::twostage::{Stage1State, TwoStageParams};
 use super::Candidate;
 
-/// A raw view of one query row, sendable to workers.
+/// A raw view of one slice of f32s, sendable to workers.
 ///
 /// Safety contract: the pool guarantees every worker has finished reading
 /// (replied or exited) before the dispatching call releases the borrow the
-/// handle was built from — see [`ParallelTwoStageTopK::run_batch`].
-struct SliceHandle {
+/// handle was built from — see [`LanePool::dispatch`].
+pub(super) struct SliceHandle {
     ptr: *const f32,
     len: usize,
 }
@@ -60,7 +67,7 @@ struct SliceHandle {
 unsafe impl Send for SliceHandle {}
 
 impl SliceHandle {
-    fn new(slice: &[f32]) -> SliceHandle {
+    pub(super) fn new(slice: &[f32]) -> SliceHandle {
         SliceHandle {
             ptr: slice.as_ptr(),
             len: slice.len(),
@@ -70,14 +77,15 @@ impl SliceHandle {
     /// # Safety
     /// The referenced slice must outlive every use of the returned
     /// reference; the pool's reply barrier enforces this.
-    unsafe fn get<'a>(&self) -> &'a [f32] {
+    pub(super) unsafe fn get<'a>(&self) -> &'a [f32] {
         std::slice::from_raw_parts(self.ptr, self.len)
     }
 }
 
-/// One dispatched unit of work: a whole query batch plus the reply channel.
-struct Job {
-    queries: Vec<SliceHandle>,
+/// One dispatched unit of work: an engine-specific payload plus the reply
+/// channel the worker answers on.
+struct PoolJob<J> {
+    payload: J,
     reply: Sender<Reply>,
 }
 
@@ -85,6 +93,159 @@ struct Job {
 struct Reply {
     worker: usize,
     candidates: Vec<Vec<Candidate>>,
+}
+
+struct PoolWorker<J> {
+    tx: Option<Sender<PoolJob<J>>>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// A persistent pool of lane workers, generic over the job payload — the
+/// shared substrate of the score-fed engine below and the fused
+/// score+select engine in [`fused`](super::fused).
+///
+/// Worker `w` owns `states[w]` for the pool's lifetime; every job is served
+/// by `run(&mut states[w], &payload)`, which returns the worker's
+/// per-query candidate lists.
+pub(super) struct LanePool<J: Send + 'static> {
+    workers: Vec<PoolWorker<J>>,
+}
+
+impl<J: Send + 'static> LanePool<J> {
+    /// Spawn one named worker thread per element of `states`.
+    pub(super) fn spawn<S, F>(name: &str, states: Vec<S>, run: F) -> LanePool<J>
+    where
+        S: Send + 'static,
+        F: Fn(&mut S, &J) -> Vec<Vec<Candidate>> + Send + Clone + 'static,
+    {
+        let mut workers = Vec::with_capacity(states.len());
+        for (w, mut state) in states.into_iter().enumerate() {
+            let (tx, rx) = channel::<PoolJob<J>>();
+            let run = run.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("{name}-{w}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        let candidates = run(&mut state, &job.payload);
+                        let _ = job.reply.send(Reply {
+                            worker: w,
+                            candidates,
+                        });
+                    }
+                })
+                .expect("spawn lane worker");
+            workers.push(PoolWorker {
+                tx: Some(tx),
+                join: Some(join),
+            });
+        }
+        LanePool { workers }
+    }
+
+    /// Number of pool workers.
+    pub(super) fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Dispatch one job per worker (`payload(w)` builds worker `w`'s) and
+    /// block until every worker has replied. Returns the per-worker
+    /// candidate lists, indexed `[worker][query]`.
+    ///
+    /// Reply barrier: the receive loop drains until every reply sender is
+    /// gone. Each worker holds exactly one sender (inside its job) and
+    /// drops it on reply or on unwind, so after the loop no worker can
+    /// still be reading any [`SliceHandle`] the payloads carried — only
+    /// then is it safe to return (or panic).
+    pub(super) fn dispatch(
+        &self,
+        payload: impl FnMut(usize) -> J,
+    ) -> Vec<Vec<Vec<Candidate>>> {
+        // Build every payload before sending any: once a job (possibly
+        // carrying a `SliceHandle` into caller-owned memory) is in flight,
+        // nothing on this path may panic before the barrier below — a
+        // panicking `payload` closure must unwind *here*, with no job sent.
+        let payloads: Vec<J> = (0..self.workers.len()).map(payload).collect();
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let mut dispatched = 0usize;
+        for (worker, payload) in self.workers.iter().zip(payloads) {
+            let job = PoolJob {
+                payload,
+                reply: reply_tx.clone(),
+            };
+            if worker.tx.as_ref().expect("pool shut down").send(job).is_ok() {
+                dispatched += 1;
+            }
+        }
+        drop(reply_tx);
+
+        let mut per_worker: Vec<Vec<Vec<Candidate>>> = vec![Vec::new(); self.workers.len()];
+        let mut replied = 0usize;
+        for reply in reply_rx {
+            per_worker[reply.worker] = reply.candidates;
+            replied += 1;
+        }
+        assert!(
+            dispatched == self.workers.len() && replied == self.workers.len(),
+            "lane worker died (dispatched {dispatched}, replied {replied}/{})",
+            self.workers.len()
+        );
+        per_worker
+    }
+}
+
+impl<J: Send + 'static> Drop for LanePool<J> {
+    fn drop(&mut self) {
+        // Close every job channel, then join the workers.
+        for w in &mut self.workers {
+            drop(w.tx.take());
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Emit a worker state's candidates. `filter_padding` mirrors the
+/// sequential Stage 2: `-inf` slots (possible only when K′ exceeds the
+/// bucket size) are dropped.
+pub(super) fn state_candidates(state: &Stage1State, filter_padding: bool) -> Vec<Candidate> {
+    let mut out = Vec::with_capacity(state.values.len());
+    for (&value, &index) in state.values.iter().zip(state.indices.iter()) {
+        if filter_padding && !(value > f32::NEG_INFINITY) {
+            continue;
+        }
+        out.push(Candidate { index, value });
+    }
+    out
+}
+
+/// Stage 2 per query over the merged per-worker candidates: in-place
+/// quickselect on the reused scratch, then the canonical sort. The
+/// candidate *set* equals the sequential one, and the canonical total order
+/// is strict, so the sorted top-K is identical.
+pub(super) fn merge_stage2(
+    per_worker: &[Vec<Vec<Candidate>>],
+    nq: usize,
+    k: usize,
+    scratch: &mut Vec<Candidate>,
+) -> Vec<Vec<Candidate>> {
+    let mut out = Vec::with_capacity(nq);
+    for qi in 0..nq {
+        scratch.clear();
+        for worker_cands in per_worker {
+            scratch.extend_from_slice(&worker_cands[qi]);
+        }
+        let kq = k.min(scratch.len());
+        if kq < scratch.len() {
+            exact::select_top(scratch, kq);
+        }
+        let mut top = scratch[..kq].to_vec();
+        super::sort_candidates(&mut top);
+        out.push(top);
+    }
+    out
 }
 
 /// Worker-private Stage-1 state over a contiguous lane (bucket) range.
@@ -120,15 +281,20 @@ impl LaneState {
         self.state.reset();
     }
 
-    /// Fold one full input row-major pass over the owned lane range. The
-    /// update is the same insert + single-bubble-pass as the sequential
-    /// kernel (insert on `>=`, bubble on `>`), so per-bucket state is
+    /// Fold one full materialized input pass over the owned lane range by
+    /// streaming row slices through
+    /// [`Stage1State::ingest_tile`] — the same insert + single-bubble-pass
+    /// update as the sequential kernel, so per-bucket state is
     /// bit-identical to a sequential run.
     fn fold(&mut self, values: &[f32]) {
         debug_assert_eq!(values.len(), self.n);
         let rows = self.n / self.buckets;
         if self.local_k == 1 {
-            self.fold_k1(values, rows);
+            for row in 0..rows {
+                let row_base = row * self.buckets + self.lane_lo;
+                self.state
+                    .ingest_tile(row_base as u32, 0, &values[row_base..row_base + self.lanes]);
+            }
             return;
         }
         // Lane blocking as in the sequential kernel: keep a block's
@@ -137,135 +303,17 @@ impl LaneState {
         let mut start = 0;
         while start < self.lanes {
             let end = (start + lane_block).min(self.lanes);
-            self.fold_block(values, rows, start, end);
+            for row in 0..rows {
+                let row_base = row * self.buckets + self.lane_lo;
+                self.state.ingest_tile(
+                    (row_base + start) as u32,
+                    start,
+                    &values[row_base + start..row_base + end],
+                );
+            }
             start = end;
         }
     }
-
-    /// K′ ≥ 2: branchless tail-compare sweep packing hit flags into a
-    /// bitmask, then scalar insert + bubble on the (rare) hits — the
-    /// two-phase scheme of the sequential `stage1_fixed` path, restricted
-    /// to this worker's lanes.
-    fn fold_block(&mut self, values: &[f32], rows: usize, start: usize, end: usize) {
-        let b = self.buckets;
-        let lanes = self.lanes;
-        let kp = self.local_k;
-        let lane_lo = self.lane_lo;
-        let vals = &mut self.state.values;
-        let idxs = &mut self.state.indices;
-        let tail_off = (kp - 1) * lanes;
-        for row in 0..rows {
-            let row_base = row * b + lane_lo;
-            let input_row = &values[row_base..row_base + lanes];
-            let mut lane = start;
-            while lane < end {
-                let chunk_end = (lane + 64).min(end);
-                let mut flags = [0u8; 64];
-                {
-                    let tail = &vals[tail_off + lane..tail_off + chunk_end];
-                    for ((f, &x), &t) in flags
-                        .iter_mut()
-                        .zip(input_row[lane..chunk_end].iter())
-                        .zip(tail.iter())
-                    {
-                        *f = (x >= t) as u8;
-                    }
-                }
-                let mut mask: u64 = 0;
-                for (j8, chunk8) in flags.chunks_exact(8).enumerate() {
-                    let w = u64::from_le_bytes(chunk8.try_into().unwrap());
-                    if w == 0 {
-                        continue;
-                    }
-                    for (j, &byte) in chunk8.iter().enumerate() {
-                        mask |= (byte as u64) << (j8 * 8 + j);
-                    }
-                }
-                while mask != 0 {
-                    let j = mask.trailing_zeros() as usize;
-                    mask &= mask - 1;
-                    let l = lane + j;
-                    let x = input_row[l];
-                    let slot = tail_off + l;
-                    vals[slot] = x;
-                    idxs[slot] = (row_base + l) as u32;
-                    let mut r = kp - 1;
-                    while r > 0 {
-                        let hi = (r - 1) * lanes + l;
-                        let lo = r * lanes + l;
-                        if x > vals[hi] {
-                            vals.swap(hi, lo);
-                            idxs.swap(hi, lo);
-                            r -= 1;
-                        } else {
-                            break;
-                        }
-                    }
-                }
-                lane = chunk_end;
-            }
-        }
-    }
-
-    /// K′ = 1: branchless strided max over the owned lanes.
-    fn fold_k1(&mut self, values: &[f32], rows: usize) {
-        let b = self.buckets;
-        let lanes = self.lanes;
-        let lane_lo = self.lane_lo;
-        let vals = &mut self.state.values;
-        let idxs = &mut self.state.indices;
-        for row in 0..rows {
-            let row_base = row * b + lane_lo;
-            let input_row = &values[row_base..row_base + lanes];
-            for (lane, ((&x, v), i)) in input_row
-                .iter()
-                .zip(vals.iter_mut())
-                .zip(idxs.iter_mut())
-                .enumerate()
-            {
-                let take = x >= *v;
-                *v = if take { x } else { *v };
-                *i = if take { (row_base + lane) as u32 } else { *i };
-            }
-        }
-    }
-
-    /// Emit this worker's candidates. `filter_padding` mirrors the
-    /// sequential Stage 2: `-inf` slots (possible only when K′ exceeds the
-    /// bucket size) are dropped.
-    fn candidates(&self, filter_padding: bool) -> Vec<Candidate> {
-        let mut out = Vec::with_capacity(self.state.values.len());
-        for (&value, &index) in self.state.values.iter().zip(self.state.indices.iter()) {
-            if filter_padding && !(value > f32::NEG_INFINITY) {
-                continue;
-            }
-            out.push(Candidate { index, value });
-        }
-        out
-    }
-}
-
-fn worker_loop(worker: usize, rx: Receiver<Job>, mut state: LaneState, filter_padding: bool) {
-    while let Ok(job) = rx.recv() {
-        let mut out = Vec::with_capacity(job.queries.len());
-        for q in &job.queries {
-            // Safety: the dispatcher blocks on our reply (sent below, or the
-            // channel closing if we unwind) before releasing the borrow.
-            let values = unsafe { q.get() };
-            state.reset();
-            state.fold(values);
-            out.push(state.candidates(filter_padding));
-        }
-        let _ = job.reply.send(Reply {
-            worker,
-            candidates: out,
-        });
-    }
-}
-
-struct LaneWorker {
-    tx: Option<Sender<Job>>,
-    join: Option<JoinHandle<()>>,
 }
 
 /// The parallel two-stage operator: construct once per shape, reuse across
@@ -276,7 +324,7 @@ struct LaneWorker {
 /// thread count.
 pub struct ParallelTwoStageTopK {
     pub params: TwoStageParams,
-    workers: Vec<LaneWorker>,
+    pool: LanePool<Vec<SliceHandle>>,
     cand_scratch: Vec<Candidate>,
 }
 
@@ -287,31 +335,42 @@ impl ParallelTwoStageTopK {
     pub fn new(params: TwoStageParams, threads: usize) -> ParallelTwoStageTopK {
         let t = threads.clamp(1, params.buckets);
         let filter_padding = params.local_k > params.bucket_size();
-        let mut workers = Vec::with_capacity(t);
-        for w in 0..t {
-            let lane_lo = w * params.buckets / t;
-            let lane_hi = (w + 1) * params.buckets / t;
-            let (tx, rx) = channel::<Job>();
-            let state = LaneState::new(&params, lane_lo, lane_hi);
-            let join = std::thread::Builder::new()
-                .name(format!("fastk-stage1-{w}"))
-                .spawn(move || worker_loop(w, rx, state, filter_padding))
-                .expect("spawn stage-1 worker");
-            workers.push(LaneWorker {
-                tx: Some(tx),
-                join: Some(join),
-            });
-        }
+        let states: Vec<LaneState> = (0..t)
+            .map(|w| {
+                LaneState::new(
+                    &params,
+                    w * params.buckets / t,
+                    (w + 1) * params.buckets / t,
+                )
+            })
+            .collect();
+        let pool = LanePool::spawn(
+            "fastk-stage1",
+            states,
+            move |state: &mut LaneState, queries: &Vec<SliceHandle>| {
+                let mut out = Vec::with_capacity(queries.len());
+                for q in queries {
+                    // Safety: the dispatcher blocks on our reply (sent by the
+                    // pool loop, or the channel closing if we unwind) before
+                    // releasing the borrow.
+                    let values = unsafe { q.get() };
+                    state.reset();
+                    state.fold(values);
+                    out.push(state_candidates(&state.state, filter_padding));
+                }
+                out
+            },
+        );
         ParallelTwoStageTopK {
             params,
-            workers,
+            pool,
             cand_scratch: Vec::with_capacity(params.num_candidates()),
         }
     }
 
     /// Number of pool workers (may be lower than requested when B is small).
     pub fn threads(&self) -> usize {
-        self.workers.len()
+        self.pool.workers()
     }
 
     /// Run both stages on one row of N values.
@@ -329,69 +388,15 @@ impl ParallelTwoStageTopK {
         for q in queries {
             assert_eq!(q.len(), self.params.n, "input length mismatch");
         }
-
-        let (reply_tx, reply_rx) = channel::<Reply>();
-        let mut dispatched = 0usize;
-        for w in &self.workers {
-            let job = Job {
-                queries: queries.iter().map(|q| SliceHandle::new(q)).collect(),
-                reply: reply_tx.clone(),
-            };
-            if w.tx.as_ref().expect("pool shut down").send(job).is_ok() {
-                dispatched += 1;
-            }
-        }
-        drop(reply_tx);
-
-        // Reply barrier: drain until every sender is gone. Each worker holds
-        // exactly one sender (inside its Job) and drops it on reply or on
-        // unwind, so after this loop no worker can still be reading the
-        // query slices — only then is it safe to return (or panic).
-        let mut per_worker: Vec<Vec<Vec<Candidate>>> = vec![Vec::new(); self.workers.len()];
-        let mut replied = 0usize;
-        for reply in reply_rx {
-            per_worker[reply.worker] = reply.candidates;
-            replied += 1;
-        }
-        assert!(
-            dispatched == self.workers.len() && replied == self.workers.len(),
-            "stage-1 worker died (dispatched {dispatched}, replied {replied}/{})",
-            self.workers.len()
-        );
-
-        // Stage 2 per query over the merged candidates: in-place quickselect
-        // on the reused scratch, then the canonical sort. The candidate
-        // *set* equals the sequential one, and the canonical total order is
-        // strict, so the sorted top-K is identical.
-        let mut out = Vec::with_capacity(queries.len());
-        for qi in 0..queries.len() {
-            self.cand_scratch.clear();
-            for worker_cands in &per_worker {
-                self.cand_scratch.extend_from_slice(&worker_cands[qi]);
-            }
-            let k = self.params.k.min(self.cand_scratch.len());
-            if k < self.cand_scratch.len() {
-                exact::select_top(&mut self.cand_scratch, k);
-            }
-            let mut top = self.cand_scratch[..k].to_vec();
-            super::sort_candidates(&mut top);
-            out.push(top);
-        }
-        out
-    }
-}
-
-impl Drop for ParallelTwoStageTopK {
-    fn drop(&mut self) {
-        // Close every job channel, then join the workers.
-        for w in &mut self.workers {
-            drop(w.tx.take());
-        }
-        for w in &mut self.workers {
-            if let Some(j) = w.join.take() {
-                let _ = j.join();
-            }
-        }
+        let per_worker = self
+            .pool
+            .dispatch(|_| queries.iter().map(|q| SliceHandle::new(q)).collect());
+        merge_stage2(
+            &per_worker,
+            queries.len(),
+            self.params.k,
+            &mut self.cand_scratch,
+        )
     }
 }
 

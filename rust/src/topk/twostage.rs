@@ -146,6 +146,99 @@ impl Stage1State {
         let i = rank * self.buckets + bucket;
         (self.values[i], self.indices[i])
     }
+
+    /// Bucket count (the state's minor width).
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.buckets
+    }
+
+    /// Stream one tile of `(index, score)` pairs into the state:
+    /// `scores[j]` is the value of element `base_index + j`, which belongs
+    /// to bucket `lane0 + j` of *this* state.
+    ///
+    /// The update is the kernel's insert + single-bubble-pass (insert on
+    /// `>=`, bubble on `>`), applied in ascending `j`, so feeding a
+    /// bucket's elements tile by tile in stream order produces exactly the
+    /// state a materialized [`TwoStageTopK::stage1`] pass would — this is
+    /// what lets the fused score+select pipeline ingest scores as they are
+    /// computed instead of requiring a full `&[f32]` row. Uses the same
+    /// two-phase scheme as the fixed-K′ specializations: a branchless
+    /// tail-compare sweep packing hit flags into a bitmask, then scalar
+    /// insert + bubble on the (rare) hits.
+    pub fn ingest_tile(&mut self, base_index: u32, lane0: usize, scores: &[f32]) {
+        debug_assert!(lane0 + scores.len() <= self.buckets);
+        if self.local_k == 1 {
+            // Branchless strided max, as in the K′=1 specialization.
+            let vals = &mut self.values[lane0..lane0 + scores.len()];
+            let idxs = &mut self.indices[lane0..lane0 + scores.len()];
+            for (j, ((&x, v), i)) in scores
+                .iter()
+                .zip(vals.iter_mut())
+                .zip(idxs.iter_mut())
+                .enumerate()
+            {
+                let take = x >= *v;
+                *v = if take { x } else { *v };
+                *i = if take { base_index + j as u32 } else { *i };
+            }
+            return;
+        }
+        let b = self.buckets;
+        let kp = self.local_k;
+        let tail_off = (kp - 1) * b;
+        let end = lane0 + scores.len();
+        let mut lane = lane0;
+        while lane < end {
+            let chunk_end = (lane + 64).min(end);
+            // Phase 1: branchless tail-compare producing byte flags (the
+            // vectorizable form; see `stage1_fixed_block`).
+            let mut flags = [0u8; 64];
+            {
+                let tail = &self.values[tail_off + lane..tail_off + chunk_end];
+                for ((f, &x), &t) in flags
+                    .iter_mut()
+                    .zip(scores[lane - lane0..chunk_end - lane0].iter())
+                    .zip(tail.iter())
+                {
+                    *f = (x >= t) as u8;
+                }
+            }
+            let mut mask: u64 = 0;
+            for (j8, chunk8) in flags.chunks_exact(8).enumerate() {
+                let w = u64::from_le_bytes(chunk8.try_into().unwrap());
+                if w == 0 {
+                    continue;
+                }
+                for (j, &byte) in chunk8.iter().enumerate() {
+                    mask |= (byte as u64) << (j8 * 8 + j);
+                }
+            }
+            // Phase 2: scalar insert + bubble on the hits.
+            while mask != 0 {
+                let j = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                let l = lane + j;
+                let x = scores[l - lane0];
+                let slot = tail_off + l;
+                self.values[slot] = x;
+                self.indices[slot] = base_index + (l - lane0) as u32;
+                let mut r = kp - 1;
+                while r > 0 {
+                    let hi = (r - 1) * b + l;
+                    let lo = r * b + l;
+                    if x > self.values[hi] {
+                        self.values.swap(hi, lo);
+                        self.indices.swap(hi, lo);
+                        r -= 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            lane = chunk_end;
+        }
+    }
 }
 
 /// The two-stage approximate Top-K operator. Reuses internal scratch, so
@@ -509,6 +602,51 @@ mod tests {
                 assert_eq!(idx as usize % b, bucket);
                 assert_eq!(v[idx as usize], w.value);
             }
+        }
+    }
+
+    #[test]
+    fn ingest_tile_matches_materialized_stage1() {
+        // Streaming (index, score) tiles through `ingest_tile` must
+        // reproduce a materialized `stage1` pass bit-for-bit, for every K′
+        // path and for lane tiles that split rows at awkward boundaries.
+        let mut rng = Rng::new(77);
+        for &(n, b, kp) in &[
+            (512usize, 64usize, 1usize),
+            (512, 64, 2),
+            (768, 96, 3),
+            (500, 50, 5),
+        ] {
+            let v = random_values(&mut rng, n);
+            let p = TwoStageParams::new(n, 8, b, kp);
+            let mut ts = TwoStageTopK::new(p);
+            ts.stage1(&v);
+            let rows = n / b;
+            // Whole-row tiles.
+            let mut st = Stage1State::new(&p);
+            assert_eq!(st.width(), b);
+            for row in 0..rows {
+                st.ingest_tile((row * b) as u32, 0, &v[row * b..(row + 1) * b]);
+            }
+            assert_eq!(st.values, ts.state().values, "({n},{b},{kp}) whole rows");
+            assert_eq!(st.indices, ts.state().indices, "({n},{b},{kp}) whole rows");
+            // Ragged lane tiles: width 17 divides neither B nor the 64-lane
+            // chunk the insert sweep uses internally.
+            let mut st2 = Stage1State::new(&p);
+            for row in 0..rows {
+                let mut lane = 0;
+                while lane < b {
+                    let end = (lane + 17).min(b);
+                    st2.ingest_tile(
+                        (row * b + lane) as u32,
+                        lane,
+                        &v[row * b + lane..row * b + end],
+                    );
+                    lane = end;
+                }
+            }
+            assert_eq!(st2.values, ts.state().values, "({n},{b},{kp}) ragged tiles");
+            assert_eq!(st2.indices, ts.state().indices, "({n},{b},{kp}) ragged tiles");
         }
     }
 
