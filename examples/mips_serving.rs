@@ -20,7 +20,8 @@ use fastk::coordinator::{
     BackendFactory, BatcherConfig, MipsService, NativeBackend, PjrtBackend, Query,
     ServiceConfig, ShardBackend,
 };
-use fastk::recall::{expected_recall, RecallConfig};
+use fastk::params::RecallEval;
+use fastk::plan::{plan_serve, PlanRequest};
 use fastk::runtime::Executor;
 use fastk::topk::{exact, TwoStageParams};
 use fastk::util::cli::Args;
@@ -43,20 +44,22 @@ fn main() -> anyhow::Result<()> {
     println!("database: {shards} shards x {shard_size} x {d}-d ({n_total} vectors)");
     let db: Vec<f32> = (0..n_total * d).map(|_| rng.next_gaussian() as f32).collect();
 
-    // Shard-local operator parameters (what the artifacts were built with).
-    let params = TwoStageParams::auto(shard_size, k, 0.95).unwrap();
-    println!(
-        "shard operator: K'={} B={} ({} candidates, E[recall]={:.4})",
-        params.local_k,
-        params.buckets,
-        params.num_candidates(),
-        expected_recall(&RecallConfig::new(
-            shard_size as u64,
-            k as u64,
-            params.buckets as u64,
-            params.local_k as u64
-        ))
-    );
+    // Per-shard (B, K') from a 0.95 *merged* recall target: the serve
+    // planner composes Theorem-1 recall exactly across the shards, so it
+    // never buys more candidates than targeting 0.95 on every shard in
+    // isolation would (and here buys fewer).
+    let (plan, _) = plan_serve(&PlanRequest {
+        shards: shards as u64,
+        shard_size: shard_size as u64,
+        k: k as u64,
+        recall_target: 0.95,
+        allowed_local_k: vec![1, 2, 3, 4],
+        eval: RecallEval::Exact,
+    });
+    let plan = plan.expect("feasible plan for the demo shapes");
+    println!("serve plan: {}", plan.describe());
+    let params =
+        TwoStageParams::new(shard_size, k, plan.buckets as usize, plan.local_k as usize);
 
     // Backends: PJRT if available (the three-layer path), else native.
     let use_pjrt = want_pjrt
@@ -99,6 +102,9 @@ fn main() -> anyhow::Result<()> {
                 max_batch: 8, // the artifact's compiled batch
                 max_delay: Duration::from_millis(2),
             },
+            // The PJRT artifact's (B, K') is baked at compile time; only
+            // the native path runs the freshly planned parameters.
+            plan: if use_pjrt { None } else { Some(plan) },
         },
         factories,
         offsets,
@@ -118,7 +124,7 @@ fn main() -> anyhow::Result<()> {
     }
     let mut responses = Vec::with_capacity(num_queries);
     for (q, rx) in pending {
-        responses.push((q, rx.recv()?));
+        responses.push((q, rx.recv()??));
     }
     let wall = t0.elapsed();
 

@@ -49,6 +49,7 @@ fn run_config(
                 max_batch,
                 max_delay,
             },
+            plan: None,
         },
         factories,
         offsets,
@@ -65,7 +66,7 @@ fn run_config(
         }).unwrap());
     }
     for rx in pending {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
     let qps = queries as f64 / wall;

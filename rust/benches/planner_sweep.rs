@@ -1,0 +1,212 @@
+//! Recall-targeted serve-planner sweep (supports the serve-planning
+//! tentpole; the paper analogue is the Listing A.10.2 parameter sweep,
+//! lifted to the sharded serving layer).
+//!
+//! Grid: recall_target × shard count × (N/shard, K). For every point it
+//! runs [`fastk::plan::plan_serve`] with the Theorem-1 exact evaluator,
+//! reports the chosen per-shard `(B, K′)`, its predicted *merged* recall,
+//! and the candidate-budget reduction over (a) per-shard-target selection
+//! (what serving did before the planner: evaluate the target on each shard
+//! in isolation) and (b) the K′=1 baseline — and times the planning sweep
+//! itself. One point repeats with the adaptive Monte-Carlo evaluator to
+//! track its cost relative to the closed form.
+//!
+//! Emits the shared bench JSON schema when `FASTK_BENCH_JSON=<dir>` is
+//! set. Set `FASTK_BENCH_SMOKE=1` to run tiny shapes (seconds, for CI
+//! schema checks) instead of the full grid. Any run exits nonzero if a
+//! selected plan misses its target or buys more candidates than per-shard
+//! targeting would — the planner's two contracts.
+
+use fastk::bench_harness::{banner, bench, maybe_write_json, BenchResult, Table};
+use fastk::params::{select_parameters, ParamCache, RecallEval};
+use fastk::plan::{plan_serve, plan_serve_cached, PlanRequest};
+use fastk::recall::expected_recall;
+use fastk::util::stats::fmt_ns;
+
+struct Grid {
+    targets: Vec<f64>,
+    shards: Vec<u64>,
+    /// (shard_size, k) pairs.
+    shapes: Vec<(u64, u64)>,
+}
+
+fn main() {
+    let smoke = std::env::var("FASTK_BENCH_SMOKE")
+        .map(|v| v != "0")
+        .unwrap_or(false);
+    let grid = if smoke {
+        Grid {
+            targets: vec![0.9],
+            shards: vec![1, 4],
+            shapes: vec![(4_096, 64)],
+        }
+    } else {
+        Grid {
+            targets: vec![0.9, 0.95, 0.99],
+            shards: vec![1, 4, 16],
+            shapes: vec![(16_384, 128), (65_536, 1024), (262_144, 1024)],
+        }
+    };
+    let allowed: Vec<u64> = vec![1, 2, 3, 4];
+    let mut all_results: Vec<BenchResult> = Vec::new();
+    let mut failed = false;
+
+    banner(&format!(
+        "recall-targeted serve planning: target x shards x (N/shard, K){}",
+        if smoke { " (SMOKE shapes)" } else { "" }
+    ));
+
+    let mut table = Table::new(&[
+        "TARGET", "SHARDS", "N/SHARD", "K", "K'", "B", "ELEM/SHARD", "PRED_RECALL",
+        "vs PER-SHARD", "vs K'=1", "PLAN TIME",
+    ]);
+    for &target in &grid.targets {
+        for &shards in &grid.shards {
+            for &(shard_size, k) in &grid.shapes {
+                let req = PlanRequest {
+                    shards,
+                    shard_size,
+                    k,
+                    recall_target: target,
+                    allowed_local_k: allowed.clone(),
+                    eval: RecallEval::Exact,
+                };
+                let (plan, _) = plan_serve(&req);
+                let Some(plan) = plan else {
+                    table.row(vec![
+                        format!("{target}"),
+                        shards.to_string(),
+                        shard_size.to_string(),
+                        k.to_string(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "infeasible".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                    continue;
+                };
+                // Contract 1: the selection meets the merged target.
+                if expected_recall(&plan.merged_config()) < target {
+                    eprintln!("FAIL: {plan:?} misses target {target}");
+                    failed = true;
+                }
+                // Contract 2: never buy more than per-shard targeting
+                // (which is itself never worse than the K'=1 baseline).
+                let per_shard = select_parameters(shard_size, k, target, &allowed);
+                let k1 = select_parameters(shard_size, k, target, &[1]);
+                if let Some(ps) = &per_shard {
+                    if plan.num_elements() > ps.num_elements() {
+                        eprintln!(
+                            "FAIL: plan {plan:?} buys more than per-shard targeting {ps:?}"
+                        );
+                        failed = true;
+                    }
+                }
+                let r = bench(
+                    &format!("plan_exact_r{}_s{shards}_n{shard_size}_k{k}", milli(target)),
+                    || {
+                        std::hint::black_box(plan_serve(&req));
+                    },
+                );
+                table.row(vec![
+                    format!("{target}"),
+                    shards.to_string(),
+                    shard_size.to_string(),
+                    k.to_string(),
+                    plan.local_k.to_string(),
+                    plan.buckets.to_string(),
+                    plan.num_elements().to_string(),
+                    format!("{:.4}", plan.predicted_recall),
+                    ratio(per_shard.map(|c| c.num_elements()), plan.num_elements()),
+                    ratio(k1.map(|c| c.num_elements()), plan.num_elements()),
+                    fmt_ns(r.summary.min),
+                ]);
+                all_results.push(r);
+            }
+        }
+    }
+    table.print();
+
+    // The Monte-Carlo fallback on one representative point: same grid
+    // schema, so runs can track exact-vs-MC planning cost side by side.
+    let (mc_shard_size, mc_k) = grid.shapes[0];
+    let mc_target = grid.targets[0];
+    let mc_shards = *grid.shards.last().unwrap();
+    let mc_req = PlanRequest {
+        shards: mc_shards,
+        shard_size: mc_shard_size,
+        k: mc_k,
+        recall_target: mc_target,
+        allowed_local_k: allowed.clone(),
+        eval: RecallEval::MonteCarlo { tol: 0.005, seed: 7 },
+    };
+    let (mc_plan, mc_stats) = plan_serve(&mc_req);
+    match mc_plan {
+        Some(p) => {
+            banner("Monte-Carlo fallback (tol 0.005 at 3σ)");
+            println!(
+                "plan: {} [{} configs, {} samples]",
+                p.describe(),
+                mc_stats.configs_evaluated,
+                mc_stats.mc_samples_drawn
+            );
+            let r = bench(
+                &format!(
+                    "plan_mc_r{}_s{mc_shards}_n{mc_shard_size}_k{mc_k}",
+                    milli(mc_target)
+                ),
+                || {
+                    std::hint::black_box(plan_serve(&mc_req));
+                },
+            );
+            println!("MC planning time: {}", fmt_ns(r.summary.min));
+            all_results.push(r);
+        }
+        None => {
+            eprintln!("FAIL: MC planner found no plan where one exists");
+            failed = true;
+        }
+    }
+
+    // Memoization: the second plan of an identical deployment must be a
+    // cache hit (identical shards plan once).
+    let mut cache = ParamCache::new();
+    let cached_req = PlanRequest {
+        shards: 4,
+        shard_size: grid.shapes[0].0,
+        k: grid.shapes[0].1,
+        recall_target: grid.targets[0],
+        allowed_local_k: allowed,
+        eval: RecallEval::Exact,
+    };
+    plan_serve_cached(&mut cache, &cached_req);
+    plan_serve_cached(&mut cache, &cached_req);
+    if cache.hits != 1 || cache.misses != 1 {
+        eprintln!(
+            "FAIL: plan memoization broken (hits={}, misses={})",
+            cache.hits, cache.misses
+        );
+        failed = true;
+    }
+
+    maybe_write_json("planner_sweep", &all_results);
+    if failed {
+        std::process::exit(1);
+    }
+}
+
+fn milli(target: f64) -> u64 {
+    (target * 1000.0).round() as u64
+}
+
+/// `baseline / plan` element-budget ratio, e.g. "8.0x"; "-" if the
+/// baseline itself is infeasible.
+fn ratio(baseline_elements: Option<u64>, plan_elements: u64) -> String {
+    match baseline_elements {
+        Some(b) => format!("{:.1}x", b as f64 / plan_elements as f64),
+        None => "-".into(),
+    }
+}

@@ -21,6 +21,8 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::BatcherConfig;
+use crate::params::{ParamCache, RecallEval};
+use crate::plan::{plan_fixed, plan_serve_cached, PlanRequest, PlanSource, ServePlan};
 use crate::util::json::Json;
 
 /// Which execution backend shards use.
@@ -37,6 +39,17 @@ pub enum BackendKind {
     Pjrt,
 }
 
+/// Which evaluator the serve planner scores candidate `(B, K′)` pairs with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanEvalKind {
+    /// Theorem-1 closed form (fast, exact — the default).
+    Exact,
+    /// The paper's adaptive Monte-Carlo estimator (tolerance 0.005 at 3σ,
+    /// seeded by the config `seed`) — the fallback for configurations the
+    /// closed form is not trusted to cover.
+    MonteCarlo,
+}
+
 /// Full launcher configuration.
 #[derive(Debug, Clone)]
 pub struct LauncherConfig {
@@ -44,7 +57,20 @@ pub struct LauncherConfig {
     pub k: usize,
     pub shards: usize,
     pub shard_size: usize,
+    /// Target *merged* expected recall of the whole deployment; the serve
+    /// planner ([`crate::plan`]) turns it into per-shard `(B, K′)` unless
+    /// `buckets`/`local_k` pin them explicitly.
     pub recall_target: f64,
+    /// Candidate K′ values for the planner sweep (the paper's
+    /// `allowed_local_K`).
+    pub allowed_local_k: Vec<u64>,
+    /// Planner recall evaluator (`"plan_eval": "exact" | "mc"`).
+    pub plan_eval: PlanEvalKind,
+    /// Explicit per-shard Stage-1 bucket count (0 = let the planner pick).
+    pub buckets: usize,
+    /// Explicit per-shard K′ (0 = let the planner pick). Must be set
+    /// together with `buckets`.
+    pub local_k: usize,
     pub batcher: BatcherConfig,
     pub backend: BackendKind,
     /// Stage-1 worker threads per shard for the `native-parallel` backend
@@ -70,6 +96,10 @@ impl Default for LauncherConfig {
             shards: 4,
             shard_size: 16_384,
             recall_target: 0.95,
+            allowed_local_k: vec![1, 2, 3, 4],
+            plan_eval: PlanEvalKind::Exact,
+            buckets: 0,
+            local_k: 0,
             batcher: BatcherConfig::default(),
             backend: BackendKind::Native,
             threads: 0,
@@ -107,6 +137,24 @@ impl LauncherConfig {
         if let Some(v) = j.get("recall_target") {
             c.recall_target = v.as_f64().context("recall_target must be a number")?;
         }
+        if let Some(v) = j.get("allowed_local_k") {
+            c.allowed_local_k = v
+                .as_arr()
+                .context("allowed_local_k must be an array")?
+                .iter()
+                .map(|x| x.as_usize().map(|u| u as u64))
+                .collect::<Option<_>>()
+                .context("allowed_local_k entries must be non-negative integers")?;
+        }
+        if let Some(v) = j.get("plan_eval") {
+            c.plan_eval = match v.as_str() {
+                Some("exact") => PlanEvalKind::Exact,
+                Some("mc") => PlanEvalKind::MonteCarlo,
+                other => anyhow::bail!("unknown plan_eval {other:?} (want \"exact\" or \"mc\")"),
+            };
+        }
+        c.buckets = usize_field("buckets", c.buckets)?;
+        c.local_k = usize_field("local_k", c.local_k)?;
         c.batcher.max_batch = usize_field("batch_max", c.batcher.max_batch)?;
         let delay_us = usize_field(
             "batch_delay_us",
@@ -155,6 +203,28 @@ impl LauncherConfig {
             (0.0..1.0).contains(&self.recall_target),
             "recall_target must be in [0,1)"
         );
+        anyhow::ensure!(
+            !self.allowed_local_k.is_empty() && self.allowed_local_k.iter().all(|&kp| kp >= 1),
+            "allowed_local_k must be a non-empty list of positive integers"
+        );
+        anyhow::ensure!(
+            (self.buckets == 0) == (self.local_k == 0),
+            "buckets and local_k must be set together (or both omitted for the planner)"
+        );
+        if self.buckets != 0 {
+            anyhow::ensure!(
+                self.shard_size % self.buckets == 0,
+                "buckets={} must divide shard_size={}",
+                self.buckets,
+                self.shard_size
+            );
+            anyhow::ensure!(
+                self.buckets * self.local_k >= self.k,
+                "buckets*local_k = {} < k = {}: a shard cannot return k candidates",
+                self.buckets * self.local_k,
+                self.k
+            );
+        }
         anyhow::ensure!(self.batcher.max_batch >= 1, "batch_max must be >= 1");
         if self.backend == BackendKind::Pjrt {
             anyhow::ensure!(
@@ -165,6 +235,51 @@ impl LauncherConfig {
         Ok(())
     }
 
+    /// Resolve this config's per-shard serve plan: the operator override
+    /// when `buckets`/`local_k` are pinned, otherwise the recall-targeted
+    /// planner sweep ([`crate::plan::plan_serve`]) with the configured
+    /// evaluator, memoized in `cache` so identical shards plan once. The
+    /// PJRT backend ignores the planned `(B, K′)` (its parameters are baked
+    /// into the artifact) — `fastk serve` builds its plan from the artifact
+    /// manifest instead.
+    pub fn resolve_plan(&self, cache: &mut ParamCache) -> Result<ServePlan> {
+        if self.buckets != 0 {
+            return plan_fixed(
+                self.shards as u64,
+                self.shard_size as u64,
+                self.k as u64,
+                self.buckets as u64,
+                self.local_k as u64,
+                PlanSource::Manual,
+            );
+        }
+        let req = PlanRequest {
+            shards: self.shards as u64,
+            shard_size: self.shard_size as u64,
+            k: self.k as u64,
+            recall_target: self.recall_target,
+            allowed_local_k: self.allowed_local_k.clone(),
+            eval: match self.plan_eval {
+                PlanEvalKind::Exact => RecallEval::Exact,
+                PlanEvalKind::MonteCarlo => RecallEval::MonteCarlo {
+                    tol: 0.005,
+                    seed: self.seed,
+                },
+            },
+        };
+        plan_serve_cached(cache, &req).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no feasible (B, K') for shard_size={} k={} recall_target={} \
+                 allowed_local_k={:?}: no 128-aligned bucket count dividing the \
+                 shard meets the target",
+                self.shard_size,
+                self.k,
+                self.recall_target,
+                self.allowed_local_k
+            )
+        })
+    }
+
     /// Serialize back to JSON (for `init-config`).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -173,6 +288,24 @@ impl LauncherConfig {
             ("shards", Json::num(self.shards as f64)),
             ("shard_size", Json::num(self.shard_size as f64)),
             ("recall_target", Json::num(self.recall_target)),
+            (
+                "allowed_local_k",
+                Json::Arr(
+                    self.allowed_local_k
+                        .iter()
+                        .map(|&kp| Json::num(kp as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "plan_eval",
+                Json::str(match self.plan_eval {
+                    PlanEvalKind::Exact => "exact",
+                    PlanEvalKind::MonteCarlo => "mc",
+                }),
+            ),
+            ("buckets", Json::num(self.buckets as f64)),
+            ("local_k", Json::num(self.local_k as f64)),
             ("batch_max", Json::num(self.batcher.max_batch as f64)),
             (
                 "batch_delay_us",
@@ -252,6 +385,68 @@ mod tests {
         assert_eq!(c.tile_rows, 8);
         assert!(LauncherConfig::from_json(r#"{"fused": "yes"}"#).is_err());
         assert!(LauncherConfig::from_json(r#"{"tile_rows": -1}"#).is_err());
+    }
+
+    #[test]
+    fn parses_planner_knobs() {
+        let c = LauncherConfig::from_json(
+            r#"{"recall_target": 0.97, "allowed_local_k": [1, 2, 4],
+                "plan_eval": "mc"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.allowed_local_k, vec![1, 2, 4]);
+        assert_eq!(c.plan_eval, PlanEvalKind::MonteCarlo);
+        assert_eq!(c.buckets, 0);
+        assert!(LauncherConfig::from_json(r#"{"plan_eval": "magic"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"allowed_local_k": []}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"allowed_local_k": [0]}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"allowed_local_k": "all"}"#).is_err());
+    }
+
+    #[test]
+    fn parses_manual_override_and_validates_it() {
+        let c = LauncherConfig::from_json(
+            r#"{"k": 128, "shard_size": 16384, "buckets": 512, "local_k": 2}"#,
+        )
+        .unwrap();
+        assert_eq!((c.buckets, c.local_k), (512, 2));
+        // Must be set together.
+        assert!(LauncherConfig::from_json(r#"{"buckets": 512}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"local_k": 2}"#).is_err());
+        // Kernel constraints checked up front.
+        assert!(LauncherConfig::from_json(
+            r#"{"shard_size": 1000, "buckets": 300, "local_k": 1}"#
+        )
+        .is_err());
+        assert!(LauncherConfig::from_json(
+            r#"{"k": 128, "shard_size": 16384, "buckets": 64, "local_k": 1}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn resolve_plan_planner_vs_manual() {
+        let mut cache = crate::params::ParamCache::new();
+        let auto = LauncherConfig::from_json(
+            r#"{"d": 16, "k": 128, "shards": 4, "shard_size": 16384,
+                "recall_target": 0.95}"#,
+        )
+        .unwrap();
+        let plan = auto.resolve_plan(&mut cache).unwrap();
+        assert!(plan.predicted_recall >= 0.95);
+        assert_eq!(plan.shards, 4);
+        // Second resolve of an identical config is a cache hit.
+        auto.resolve_plan(&mut cache).unwrap();
+        assert_eq!(cache.hits, 1);
+
+        let manual = LauncherConfig::from_json(
+            r#"{"d": 16, "k": 128, "shards": 4, "shard_size": 16384,
+                "buckets": 1024, "local_k": 1}"#,
+        )
+        .unwrap();
+        let plan = manual.resolve_plan(&mut cache).unwrap();
+        assert_eq!((plan.buckets, plan.local_k), (1024, 1));
+        assert_eq!(plan.source, crate::plan::PlanSource::Manual);
     }
 
     #[test]

@@ -45,6 +45,12 @@ pub trait ShardBackend {
     fn shard_size(&self) -> usize;
     /// k returned per query.
     fn k(&self) -> usize;
+    /// The `(B, K′)` this shard's Stage 1 actually runs — what the serve
+    /// planner chose (native backends) or what the artifact was compiled
+    /// with (PJRT). `None` for exact (non-two-stage) backends.
+    fn stage1_params(&self) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 /// Constructs a backend inside the worker thread that will own it.
@@ -125,6 +131,12 @@ impl ShardBackend for NativeBackend {
 
     fn k(&self) -> usize {
         self.k
+    }
+
+    fn stage1_params(&self) -> Option<(usize, usize)> {
+        self.operator
+            .as_ref()
+            .map(|op| (op.params.buckets, op.params.local_k))
     }
 }
 
@@ -267,6 +279,14 @@ impl ShardBackend for ParallelNativeBackend {
     fn k(&self) -> usize {
         self.k
     }
+
+    fn stage1_params(&self) -> Option<(usize, usize)> {
+        let p = match &self.engine {
+            ParallelEngine::Unfused { operator, .. } => &operator.params,
+            ParallelEngine::Fused(engine) => &engine.params,
+        };
+        Some((p.buckets, p.local_k))
+    }
 }
 
 /// PJRT backend: drives the fused `mips_fused_*` artifact. The database is
@@ -374,6 +394,42 @@ impl ShardBackend for PjrtBackend {
     fn k(&self) -> usize {
         self.k
     }
+
+    fn stage1_params(&self) -> Option<(usize, usize)> {
+        let e = &self.artifact.entry;
+        match (e.param_usize("buckets"), e.param_usize("local_k")) {
+            (Some(b), Some(kp)) => Some((b, kp)),
+            _ => None,
+        }
+    }
+}
+
+/// Test-only backend whose scoring always errors — the shared
+/// shard-failure injector for coordinator tests (service and net).
+#[cfg(test)]
+pub(crate) struct FailingBackend {
+    pub d: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+#[cfg(test)]
+impl ShardBackend for FailingBackend {
+    fn score_topk(&mut self, _queries: &[f32], _nq: usize) -> Result<Vec<Vec<Candidate>>> {
+        anyhow::bail!("injected shard failure")
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn shard_size(&self) -> usize {
+        self.n
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +457,8 @@ mod tests {
         let mut be = NativeBackend::exact(db, d, 4);
         let res = be.score_topk(&q, 1).unwrap();
         assert_eq!(res[0][0].index, 17);
+        // Exact backends run no Stage 1: nothing to report to the planner.
+        assert_eq!(be.stage1_params(), None);
     }
 
     #[test]
@@ -446,6 +504,9 @@ mod tests {
             assert_eq!(parallel.dim(), d);
             assert_eq!(parallel.shard_size(), n);
             assert_eq!(parallel.k(), k);
+            // The planned (B, K') is observable on the running engine.
+            assert_eq!(parallel.stage1_params(), Some((128, 2)));
+            assert_eq!(sequential.stage1_params(), Some((128, 2)));
             let got = parallel.score_topk(&queries, nq).unwrap();
             assert_eq!(got, want, "threads={threads}");
         }
@@ -474,6 +535,7 @@ mod tests {
                 0,
             );
             assert!(!parallel.is_fused());
+            assert_eq!(parallel.stage1_params(), Some((128, 2)));
             let got = parallel.score_topk(&queries, nq).unwrap();
             assert_eq!(got, want, "threads={threads}");
         }

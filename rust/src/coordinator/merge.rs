@@ -2,7 +2,7 @@
 //! stage". Each shard returns its local top-k with shard-local indices; the
 //! merge translates to global indices and selects the global top-k.
 
-use crate::topk::{exact, Candidate};
+use crate::topk::Candidate;
 
 /// A shard's result for one query (shard-local candidate indices).
 #[derive(Debug, Clone)]
@@ -13,10 +13,14 @@ pub struct ShardTopK {
 
 /// Merge shard-local top-k lists into the global top-k.
 ///
-/// `shard_offsets[s]` is the global index of shard s's first vector. Since
-/// each shard list is already sorted, the cheap path is a k-way merge; for
-/// the small list counts here, collect + quickselect is equally fast and
-/// reuses the canonical tie-break.
+/// `shard_offsets[s]` is the global index of shard s's first vector. The
+/// candidate pool is at most `S·k` entries, so one sort of the pool is as
+/// cheap as a k-way merge here — and sorting with `f32::total_cmp` (a
+/// total order even with NaN, unlike `partial_cmp().unwrap_or(Equal)` or a
+/// `beats`-based quickselect, which treat NaN as equal-to-everything and
+/// make both the selected set and its order depend on shard reply order)
+/// keeps the merge fully deterministic: descending value, ties by
+/// ascending global index — the crate's canonical candidate order.
 pub fn merge_shard_results(
     per_shard: &[ShardTopK],
     shard_offsets: &[usize],
@@ -29,21 +33,9 @@ pub fn merge_shard_results(
             all.push((off + c.index as usize, c.value));
         }
     }
-    // Select top-k by value (ties: ascending global index).
-    let vals: Vec<f32> = all.iter().map(|&(_, v)| v).collect();
-    let top = exact::topk_quickselect(&vals, k);
-    let mut out: Vec<(usize, f32)> = top
-        .into_iter()
-        .map(|c| all[c.index as usize])
-        .collect();
-    // Canonicalize order on global indices for deterministic output.
-    out.sort_by(|a, b| {
-        b.1.partial_cmp(&a.1)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.0.cmp(&b.0))
-    });
-    out.truncate(k);
-    out
+    all.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
 }
 
 #[cfg(test)]
@@ -88,6 +80,35 @@ mod tests {
         }];
         let merged = merge_shard_results(&per_shard, &[0], 5);
         assert_eq!(merged.len(), 1);
+    }
+
+    #[test]
+    fn nan_scores_merge_deterministically() {
+        // Regression: with `partial_cmp(..).unwrap_or(Equal)` a NaN makes
+        // the comparator non-transitive, so the final order depended on the
+        // order shards happened to reply in. `total_cmp` gives one answer
+        // regardless of input permutation (NaN sorts above +inf, ties by
+        // global index).
+        let a = ShardTopK {
+            shard: 0,
+            candidates: vec![cand(0, f32::NAN), cand(1, 5.0)],
+        };
+        let b = ShardTopK {
+            shard: 1,
+            candidates: vec![cand(0, 7.0), cand(1, 3.0)],
+        };
+        let offsets = [0, 100];
+        // k below the pool size: the *selected set*, not just its order,
+        // must be permutation-independent too.
+        let k = 3;
+        let fwd = merge_shard_results(&[a.clone(), b.clone()], &offsets, k);
+        let rev = merge_shard_results(&[b, a], &offsets, k);
+        let idx = |m: &[(usize, f32)]| m.iter().map(|&(i, _)| i).collect::<Vec<_>>();
+        assert_eq!(idx(&fwd), idx(&rev), "merge depends on shard reply order");
+        assert_eq!(idx(&fwd), vec![0, 100, 1]);
+        assert!(fwd[0].1.is_nan());
+        assert_eq!(fwd[1].1, 7.0);
+        assert_eq!(fwd[2].1, 5.0);
     }
 
     #[test]

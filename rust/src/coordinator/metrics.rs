@@ -1,8 +1,10 @@
-//! Service metrics: request latency, batch sizes, throughput.
+//! Service metrics: request latency, batch sizes, throughput, shard
+//! failures, and the serve plan the deployment is running under.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::plan::ServePlan;
 use crate::util::stats::{fmt_ns, LatencyHistogram, Welford};
 
 /// Thread-safe service metrics.
@@ -19,6 +21,15 @@ struct Inner {
     batch_sizes: Welford,
     requests: u64,
     batches: u64,
+    /// Shard scatter/score failures (one count per shard per batch it
+    /// failed to answer).
+    shard_failures: u64,
+    /// Requests answered from a strict subset of the shards.
+    degraded_requests: u64,
+    /// Requests that got an error reply because every shard failed.
+    failed_requests: u64,
+    /// The `(B, K′)` plan this service was started with, if any.
+    plan: Option<ServePlan>,
 }
 
 impl Default for ServiceMetrics {
@@ -36,16 +47,34 @@ impl ServiceMetrics {
                 batch_sizes: Welford::new(),
                 requests: 0,
                 batches: 0,
+                shard_failures: 0,
+                degraded_requests: 0,
+                failed_requests: 0,
+                plan: None,
             }),
             started: Instant::now(),
         }
     }
 
-    pub fn record_request(&self, total: Duration, queued: Duration) {
+    pub fn record_request(&self, total: Duration, queued: Duration, degraded: bool) {
         let mut m = self.inner.lock().unwrap();
         m.latency.record(total);
         m.queue_latency.record(queued);
         m.requests += 1;
+        if degraded {
+            m.degraded_requests += 1;
+        }
+    }
+
+    /// One shard failed to answer one batch (submit refused or scoring
+    /// errored).
+    pub fn record_shard_failure(&self) {
+        self.inner.lock().unwrap().shard_failures += 1;
+    }
+
+    /// A request was answered with an error because no shard answered.
+    pub fn record_failed_request(&self) {
+        self.inner.lock().unwrap().failed_requests += 1;
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -54,12 +83,34 @@ impl ServiceMetrics {
         m.batches += 1;
     }
 
+    /// Record the serve plan this deployment runs under (shown in
+    /// `summary()` and the net-protocol `stats` reply).
+    pub fn set_plan(&self, plan: ServePlan) {
+        self.inner.lock().unwrap().plan = Some(plan);
+    }
+
+    pub fn plan(&self) -> Option<ServePlan> {
+        self.inner.lock().unwrap().plan
+    }
+
     pub fn requests(&self) -> u64 {
         self.inner.lock().unwrap().requests
     }
 
     pub fn batches(&self) -> u64 {
         self.inner.lock().unwrap().batches
+    }
+
+    pub fn shard_failures(&self) -> u64 {
+        self.inner.lock().unwrap().shard_failures
+    }
+
+    pub fn degraded_requests(&self) -> u64 {
+        self.inner.lock().unwrap().degraded_requests
+    }
+
+    pub fn failed_requests(&self) -> u64 {
+        self.inner.lock().unwrap().failed_requests
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -82,8 +133,9 @@ impl ServiceMetrics {
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         let m = self.inner.lock().unwrap();
-        format!(
-            "requests={} batches={} mean_batch={:.2} lat(mean={} p50={} p99={}) queue(p50={})",
+        let mut s = format!(
+            "requests={} batches={} mean_batch={:.2} lat(mean={} p50={} p99={}) \
+             queue(p50={}) shard_failures={} degraded={} failed={}",
             m.requests,
             m.batches,
             m.batch_sizes.mean(),
@@ -91,13 +143,27 @@ impl ServiceMetrics {
             fmt_ns(m.latency.percentile_ns(0.5)),
             fmt_ns(m.latency.percentile_ns(0.99)),
             fmt_ns(m.queue_latency.percentile_ns(0.5)),
-        )
+            m.shard_failures,
+            m.degraded_requests,
+            m.failed_requests,
+        );
+        if let Some(p) = &m.plan {
+            s.push_str(&format!(
+                " plan(K'={} B={} predicted_recall={:.4} source={})",
+                p.local_k,
+                p.buckets,
+                p.predicted_recall,
+                p.source.as_str()
+            ));
+        }
+        s
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::plan::{plan_fixed, PlanSource};
 
     #[test]
     fn records_and_summarizes() {
@@ -108,6 +174,7 @@ mod tests {
             m.record_request(
                 Duration::from_micros(i * 100),
                 Duration::from_micros(i * 10),
+                false,
             );
         }
         assert_eq!(m.requests(), 10);
@@ -116,6 +183,27 @@ mod tests {
         assert!(m.mean_latency_ns() > 0.0);
         let s = m.summary();
         assert!(s.contains("requests=10"));
+        assert!(s.contains("shard_failures=0"));
         assert!(m.throughput_per_s() > 0.0);
+    }
+
+    #[test]
+    fn failure_counters_and_plan_surface_in_summary() {
+        let m = ServiceMetrics::new();
+        m.record_shard_failure();
+        m.record_shard_failure();
+        m.record_failed_request();
+        m.record_request(Duration::from_micros(5), Duration::from_micros(1), true);
+        assert_eq!(m.shard_failures(), 2);
+        assert_eq!(m.degraded_requests(), 1);
+        assert_eq!(m.failed_requests(), 1);
+        assert!(m.plan().is_none());
+        let plan = plan_fixed(2, 1024, 16, 128, 2, PlanSource::Manual).unwrap();
+        m.set_plan(plan);
+        assert_eq!(m.plan().unwrap(), plan);
+        let s = m.summary();
+        assert!(s.contains("shard_failures=2"), "{s}");
+        assert!(s.contains("degraded=1"), "{s}");
+        assert!(s.contains("K'=2 B=128"), "{s}");
     }
 }

@@ -21,6 +21,14 @@
 //! (through PJRT artifacts or the native Rust kernel); the router merges
 //! per-shard top-k lists into the global top-k. Batching pads to the
 //! artifact's compiled batch size (HLO shapes are static).
+//!
+//! Per-shard `(B, K′)` comes from the recall-targeted serve planner
+//! ([`crate::plan`]): the launcher resolves a [`crate::plan::ServePlan`]
+//! from the config's `recall_target` and records it in [`ServiceMetrics`],
+//! where the net-protocol `stats` reply exposes it. Shard failures are
+//! never silent: replies carry a `degraded` flag when a shard missed a
+//! batch, the metrics count per-shard failures, and a batch no shard
+//! answered yields error replies rather than empty candidate sets.
 
 pub mod backend;
 pub mod batcher;

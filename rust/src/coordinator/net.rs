@@ -6,11 +6,20 @@
 //!
 //! ```text
 //! -> {"id": 1, "vector": [0.1, -0.2, ...]}
-//! <- {"id": 1, "results": [[17, 0.93], [4, 0.88], ...], "latency_us": 812}
+//! <- {"id": 1, "results": [[17, 0.93], [4, 0.88], ...],
+//!     "degraded": false, "latency_us": 812}
 //! -> {"cmd": "stats"}
-//! <- {"stats": "requests=... p50=..."}
+//! <- {"stats": "requests=... p50=...", "shard_failures": 0,
+//!     "degraded_requests": 0, "failed_requests": 0,
+//!     "plan": {"buckets": 512, "local_k": 4, ...}}   (plan if one was made)
 //! -> {"cmd": "shutdown"}       (stops the listener)
 //! ```
+//!
+//! `degraded: true` marks a reply whose candidates cover only a subset of
+//! the shards (a shard failed mid-batch); a request no shard could answer
+//! is an `{"id": ..., "error": ...}` reply (the id is echoed so pipelining
+//! clients can correlate; only unparseable requests get a bare
+//! `{"error"}`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -41,8 +50,19 @@ impl NetServer {
         let join = std::thread::Builder::new()
             .name("fastk-net-accept".into())
             .spawn(move || {
-                let mut clients = Vec::new();
+                let mut clients: Vec<std::thread::JoinHandle<()>> = Vec::new();
                 while !stop2.load(Ordering::Relaxed) {
+                    // Reap clients that already finished: a long-lived
+                    // server must not keep one JoinHandle (and its thread
+                    // bookkeeping) per connection ever accepted.
+                    let mut i = 0;
+                    while i < clients.len() {
+                        if clients[i].is_finished() {
+                            let _ = clients.swap_remove(i).join();
+                        } else {
+                            i += 1;
+                        }
+                    }
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let svc = service.clone();
@@ -144,10 +164,35 @@ fn handle_line(
     let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
     if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
-            "stats" => Ok(Some(Json::obj(vec![(
-                "stats",
-                Json::str(&service.metrics.summary()),
-            )]))),
+            "stats" => {
+                let m = &service.metrics;
+                let mut fields = vec![
+                    ("stats", Json::str(&m.summary())),
+                    ("shard_failures", Json::num(m.shard_failures() as f64)),
+                    ("degraded_requests", Json::num(m.degraded_requests() as f64)),
+                    ("failed_requests", Json::num(m.failed_requests() as f64)),
+                ];
+                if let Some(p) = m.plan() {
+                    fields.push((
+                        "plan",
+                        Json::obj(vec![
+                            ("shards", Json::num(p.shards as f64)),
+                            ("shard_size", Json::num(p.shard_size as f64)),
+                            ("k", Json::num(p.k as f64)),
+                            ("buckets", Json::num(p.buckets as f64)),
+                            ("local_k", Json::num(p.local_k as f64)),
+                            (
+                                "elements_per_shard",
+                                Json::num(p.num_elements() as f64),
+                            ),
+                            ("predicted_recall", Json::num(p.predicted_recall)),
+                            ("per_shard_recall", Json::num(p.per_shard_recall)),
+                            ("source", Json::str(p.source.as_str())),
+                        ]),
+                    ));
+                }
+                Ok(Some(Json::obj(fields)))
+            }
             "shutdown" => {
                 stop.store(true, Ordering::Relaxed);
                 Ok(None)
@@ -169,7 +214,19 @@ fn handle_line(
         .ok_or_else(|| anyhow::anyhow!("vector must be numeric"))?;
 
     let t0 = std::time::Instant::now();
-    let resp = service.query(id, vector)?;
+    let resp = match service.query(id, vector) {
+        Ok(r) => r,
+        // A well-formed query that failed (e.g. every shard errored):
+        // reply with the id so pipelining clients can correlate the error
+        // with the request. Bare {"error"} replies are reserved for
+        // requests whose id could not be parsed at all.
+        Err(e) => {
+            return Ok(Some(Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("error", Json::str(&format!("{e:#}"))),
+            ])))
+        }
+    };
     let results = Json::Arr(
         resp.results
             .iter()
@@ -179,6 +236,7 @@ fn handle_line(
     Ok(Some(Json::obj(vec![
         ("id", Json::num(resp.id as f64)),
         ("results", results),
+        ("degraded", Json::Bool(resp.degraded)),
         (
             "latency_us",
             Json::num(t0.elapsed().as_micros() as f64),
@@ -212,6 +270,7 @@ mod tests {
                         max_batch: 4,
                         max_delay: std::time::Duration::from_micros(200),
                     },
+                    plan: None,
                 },
                 factories,
                 vec![0],
@@ -234,6 +293,7 @@ mod tests {
             .unwrap();
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("id").unwrap().as_i64(), Some(7));
+        assert_eq!(j.get("degraded").unwrap().as_bool(), Some(false));
         let results = j.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 4);
         // Descending scores.
@@ -256,7 +316,12 @@ mod tests {
 
         w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
         r.read_line(&mut line).unwrap();
-        assert!(Json::parse(&line).unwrap().get("stats").is_some());
+        let stats = Json::parse(&line).unwrap();
+        assert!(stats.get("stats").is_some());
+        assert_eq!(stats.get("shard_failures").unwrap().as_i64(), Some(0));
+        assert_eq!(stats.get("failed_requests").unwrap().as_i64(), Some(0));
+        // tiny_service starts without a plan: the field is absent, not null.
+        assert!(stats.get("plan").is_none());
 
         line.clear();
         w.write_all(b"not json\n").unwrap();
@@ -267,6 +332,63 @@ mod tests {
         w.write_all(b"{\"id\": 1, \"vector\": [1, 2]}\n").unwrap(); // wrong dim
         r.read_line(&mut line).unwrap();
         assert!(Json::parse(&line).unwrap().get("error").is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_expose_plan_and_shard_failures() {
+        // A planned service whose only shard always fails: queries become
+        // protocol-level errors and the stats reply carries both the plan
+        // and the failure counters.
+        use crate::coordinator::backend::FailingBackend;
+        let plan = crate::plan::plan_fixed(1, 1024, 4, 128, 1, crate::plan::PlanSource::Manual)
+            .unwrap();
+        let factories: Vec<BackendFactory> = vec![Box::new(|| {
+            Ok(Box::new(FailingBackend { d: 8, n: 1024, k: 4 }) as Box<dyn ShardBackend>)
+        })];
+        let svc = Arc::new(
+            MipsService::start(
+                ServiceConfig {
+                    d: 8,
+                    k: 4,
+                    batcher: BatcherConfig {
+                        max_batch: 4,
+                        max_delay: std::time::Duration::from_micros(200),
+                    },
+                    plan: Some(plan),
+                },
+                factories,
+                vec![0],
+            )
+            .unwrap(),
+        );
+        let server = NetServer::start("127.0.0.1:0", svc).unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+
+        w.write_all(b"{\"id\": 1, \"vector\": [1,1,1,1,1,1,1,1]}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let reply = Json::parse(&line).unwrap();
+        assert!(
+            reply.get("error").is_some(),
+            "all-shards-failed must be an error reply, got: {line}"
+        );
+        // The id is echoed so pipelining clients can correlate the error.
+        assert_eq!(reply.get("id").unwrap().as_i64(), Some(1));
+
+        line.clear();
+        w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let stats = Json::parse(&line).unwrap();
+        assert_eq!(stats.get("failed_requests").unwrap().as_i64(), Some(1));
+        assert!(stats.get("shard_failures").unwrap().as_i64().unwrap() >= 1);
+        let p = stats.get("plan").unwrap();
+        assert_eq!(p.get("buckets").unwrap().as_i64(), Some(128));
+        assert_eq!(p.get("local_k").unwrap().as_i64(), Some(1));
+        assert_eq!(p.get("source").unwrap().as_str(), Some("manual"));
+        assert!(p.get("predicted_recall").unwrap().as_f64().unwrap() > 0.0);
         server.shutdown();
     }
 

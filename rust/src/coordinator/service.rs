@@ -10,7 +10,7 @@ use super::backend::BackendFactory;
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::merge::{merge_shard_results, ShardTopK};
 use super::metrics::ServiceMetrics;
-use super::shard::{ShardHandle, ShardResult};
+use super::shard::ShardHandle;
 
 /// One retrieval request.
 #[derive(Debug, Clone)]
@@ -20,11 +20,20 @@ pub struct Query {
     pub vector: Vec<f32>,
 }
 
-/// The reply: global top-k (index, score) plus timing.
+/// The reply: global top-k (index, score) plus timing and shard coverage.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub results: Vec<(usize, f32)>,
+    /// True when one or more shards failed to answer the batch this query
+    /// rode in: `results` covers only the answering shards, so recall
+    /// against the full database is not guaranteed. (If *every* shard
+    /// fails, the request gets an error reply, not an empty `Response`.)
+    pub degraded: bool,
+    /// Shards whose candidates made it into `results`.
+    pub shards_answered: usize,
+    /// Shards the batch was scattered to.
+    pub shards_total: usize,
     pub total_latency: Duration,
     pub queue_latency: Duration,
 }
@@ -35,12 +44,16 @@ pub struct ServiceConfig {
     pub d: usize,
     pub k: usize,
     pub batcher: BatcherConfig,
+    /// The `(B, K′)` plan the shards were built from, if the launcher
+    /// planned one — recorded in [`ServiceMetrics`] so operators can see
+    /// what the planner did (CLI summary and net-protocol `stats`).
+    pub plan: Option<crate::plan::ServePlan>,
 }
 
 struct Pending {
     query: Query,
     enqueued: Instant,
-    reply: Sender<Response>,
+    reply: Sender<anyhow::Result<Response>>,
 }
 
 /// A running MIPS service (router thread + shard worker threads).
@@ -63,6 +76,9 @@ impl MipsService {
         anyhow::ensure!(!backends.is_empty(), "need at least one shard");
         anyhow::ensure!(backends.len() == shard_offsets.len());
         let metrics = Arc::new(ServiceMetrics::new());
+        if let Some(plan) = config.plan {
+            metrics.set_plan(plan);
+        }
         let shards: Vec<ShardHandle> = backends
             .into_iter()
             .enumerate()
@@ -76,9 +92,13 @@ impl MipsService {
             .name("fastk-router".into())
             .spawn(move || {
                 let batcher = DynamicBatcher::new(rx, cfg.batcher);
+                // Per-shard down state, so a persistently failing shard
+                // logs one line on failure and one on recovery instead of
+                // one per batch.
+                let mut shard_down = vec![false; shards.len()];
                 while let Some(batch) = batcher.next_batch() {
                     m.record_batch(batch.len());
-                    Self::process_batch(&cfg, &shards, &shard_offsets, batch, &m);
+                    Self::process_batch(&cfg, &shards, &shard_offsets, batch, &m, &mut shard_down);
                 }
                 // Dropping `shards` joins the workers.
             })
@@ -98,6 +118,7 @@ impl MipsService {
         shard_offsets: &[usize],
         batch: Vec<Pending>,
         metrics: &ServiceMetrics,
+        shard_down: &mut [bool],
     ) {
         let nq = batch.len();
         let dispatch_start = Instant::now();
@@ -109,32 +130,89 @@ impl MipsService {
         }
         let block = Arc::new(block);
 
-        // Scatter.
+        // Scatter. A shard whose worker is gone counts as failed up front.
+        let shards_total = shards.len();
         let (reply_tx, reply_rx) = channel();
+        let mut submitted = vec![false; shards_total];
         let mut live = 0usize;
         for h in shards {
             if h.submit(block.clone(), nq, reply_tx.clone()).is_ok() {
+                submitted[h.shard] = true;
                 live += 1;
+            } else {
+                metrics.record_shard_failure();
+                if !shard_down[h.shard] {
+                    shard_down[h.shard] = true;
+                    eprintln!("fastk: shard {} worker is gone; dropping it from batches", h.shard);
+                }
             }
         }
         drop(reply_tx);
 
-        // Gather.
-        let mut per_shard_ok: Vec<ShardResult> = Vec::with_capacity(live);
+        // Gather (shard index, per-query candidates). Failed shards are
+        // counted and *excluded* — never silently merged as an empty
+        // candidate list.
+        let mut replied = vec![false; shards_total];
+        let mut per_shard_ok = Vec::with_capacity(live);
         for res in reply_rx {
-            per_shard_ok.push(res);
+            replied[res.shard] = true;
+            match res.per_query {
+                Ok(pq) => {
+                    if shard_down[res.shard] {
+                        shard_down[res.shard] = false;
+                        eprintln!("fastk: shard {} recovered", res.shard);
+                    }
+                    per_shard_ok.push((res.shard, pq));
+                }
+                Err(e) => {
+                    metrics.record_shard_failure();
+                    if !shard_down[res.shard] {
+                        shard_down[res.shard] = true;
+                        eprintln!(
+                            "fastk: shard {} failed a batch of {nq}: {e:#} \
+                             (suppressing repeats until it recovers)",
+                            res.shard
+                        );
+                    }
+                }
+            }
+        }
+        // A shard that took the batch but never replied panicked mid-batch
+        // (its reply sender was dropped during unwind): that is a failure
+        // too, not just a shorter gather.
+        for s in 0..shards_total {
+            if submitted[s] && !replied[s] {
+                metrics.record_shard_failure();
+                if !shard_down[s] {
+                    shard_down[s] = true;
+                    eprintln!(
+                        "fastk: shard {s} gave no reply for a batch of {nq} (worker panicked?)"
+                    );
+                }
+            }
+        }
+        let shards_answered = per_shard_ok.len();
+        let degraded = shards_answered < shards_total;
+
+        // No shard answered: every query in the batch gets an error reply,
+        // not an empty-but-successful candidate set.
+        if shards_answered == 0 {
+            for p in batch {
+                metrics.record_failed_request();
+                let _ = p.reply.send(Err(anyhow::anyhow!(
+                    "all {shards_total} shards failed the batch; no candidates"
+                )));
+            }
+            return;
         }
 
         // Merge + reply per query.
         for (qi, p) in batch.into_iter().enumerate() {
             let lists: Vec<ShardTopK> = per_shard_ok
                 .iter()
-                .filter_map(|r| match &r.per_query {
-                    Ok(pq) => Some(ShardTopK {
-                        shard: r.shard,
-                        candidates: pq[qi].clone(),
-                    }),
-                    Err(_) => None,
+                .map(|(shard, pq)| ShardTopK {
+                    shard: *shard,
+                    candidates: pq[qi].clone(),
                 })
                 .collect();
             let results = merge_shard_results(&lists, shard_offsets, cfg.k);
@@ -142,16 +220,21 @@ impl MipsService {
             let resp = Response {
                 id: p.query.id,
                 results,
+                degraded,
+                shards_answered,
+                shards_total,
                 total_latency: now - p.enqueued,
                 queue_latency: dispatch_start - p.enqueued,
             };
-            metrics.record_request(resp.total_latency, resp.queue_latency);
-            let _ = p.reply.send(resp);
+            metrics.record_request(resp.total_latency, resp.queue_latency, degraded);
+            let _ = p.reply.send(Ok(resp));
         }
     }
 
-    /// Submit a query; the response arrives on the returned receiver.
-    pub fn submit(&self, query: Query) -> anyhow::Result<Receiver<Response>> {
+    /// Submit a query; the reply arrives on the returned receiver. A reply
+    /// of `Err` means no shard could answer (the request failed outright,
+    /// as opposed to a `degraded` partial answer).
+    pub fn submit(&self, query: Query) -> anyhow::Result<Receiver<anyhow::Result<Response>>> {
         anyhow::ensure!(
             query.vector.len() == self.config.d,
             "query dim {} != service dim {}",
@@ -172,7 +255,8 @@ impl MipsService {
     /// Blocking convenience: submit and wait.
     pub fn query(&self, id: u64, vector: Vec<f32>) -> anyhow::Result<Response> {
         let rx = self.submit(Query { id, vector })?;
-        rx.recv().map_err(|_| anyhow::anyhow!("service dropped the request"))
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("service dropped the request"))?
     }
 
     /// Graceful shutdown: stop accepting, drain, join.
@@ -236,6 +320,7 @@ mod tests {
                     max_batch: 8,
                     max_delay: Duration::from_millis(1),
                 },
+                plan: None,
             },
             backends,
             offsets,
@@ -243,6 +328,8 @@ mod tests {
         .unwrap();
         (svc, db)
     }
+
+    use crate::coordinator::backend::FailingBackend;
 
     fn exact_oracle(db: &[f32], d: usize, q: &[f32], k: usize) -> Vec<usize> {
         let n = db.len() / d;
@@ -267,8 +354,251 @@ mod tests {
             let resp = svc.query(id, q.clone()).unwrap();
             let got: Vec<usize> = resp.results.iter().map(|&(i, _)| i).collect();
             assert_eq!(got, exact_oracle(&db, 8, &q, 5), "query {id}");
+            assert!(!resp.degraded);
+            assert_eq!(resp.shards_answered, 4);
+            assert_eq!(resp.shards_total, 4);
         }
         assert_eq!(svc.metrics.requests(), 6);
+        assert_eq!(svc.metrics.shard_failures(), 0);
+        assert_eq!(svc.metrics.degraded_requests(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn one_failing_shard_degrades_but_answers() {
+        // Shard 1 of 2 always errors: replies must carry the surviving
+        // shard's exact candidates, be flagged degraded, and the failure
+        // must show up in the metrics — never a silent truncation.
+        let d = 8;
+        let k = 3;
+        let per = 64;
+        let mut rng = Rng::new(17);
+        let db: Vec<f32> = (0..per * d).map(|_| rng.next_gaussian() as f32).collect();
+        let db_for_shard = db.clone();
+        let backends: Vec<BackendFactory> = vec![
+            Box::new(move || {
+                Ok(Box::new(NativeBackend::exact(db_for_shard, d, k))
+                    as Box<dyn crate::coordinator::ShardBackend>)
+            }),
+            Box::new(move || {
+                Ok(Box::new(FailingBackend { d, n: per, k })
+                    as Box<dyn crate::coordinator::ShardBackend>)
+            }),
+        ];
+        let svc = MipsService::start(
+            ServiceConfig {
+                d,
+                k,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                },
+                plan: None,
+            },
+            backends,
+            vec![0, per],
+        )
+        .unwrap();
+        let queries = 3u64;
+        for id in 0..queries {
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let resp = svc.query(id, q.clone()).unwrap();
+            assert!(resp.degraded, "shard failure must be flagged");
+            assert_eq!(resp.shards_answered, 1);
+            assert_eq!(resp.shards_total, 2);
+            // The answering shard's candidates are still exact.
+            let got: Vec<usize> = resp.results.iter().map(|&(i, _)| i).collect();
+            assert_eq!(got, exact_oracle(&db, d, &q, k), "query {id}");
+        }
+        assert!(svc.metrics.shard_failures() >= queries);
+        assert_eq!(svc.metrics.degraded_requests(), queries);
+        assert_eq!(svc.metrics.failed_requests(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn all_shards_failing_is_an_error_not_empty_success() {
+        let d = 8;
+        let k = 3;
+        let backends: Vec<BackendFactory> = (0..2)
+            .map(|_| {
+                Box::new(move || {
+                    Ok(Box::new(FailingBackend { d, n: 32, k })
+                        as Box<dyn crate::coordinator::ShardBackend>)
+                }) as BackendFactory
+            })
+            .collect();
+        let svc = MipsService::start(
+            ServiceConfig {
+                d,
+                k,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                },
+                plan: None,
+            },
+            backends,
+            vec![0, 32],
+        )
+        .unwrap();
+        let err = svc.query(1, vec![1.0; d]).unwrap_err();
+        assert!(format!("{err:#}").contains("shards failed"), "{err:#}");
+        assert_eq!(svc.metrics.failed_requests(), 1);
+        assert!(svc.metrics.shard_failures() >= 2);
+        // Failed requests are not counted as served requests.
+        assert_eq!(svc.metrics.requests(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn panicking_shard_counts_as_failure() {
+        // A worker that *panics* (instead of returning Err) drops its
+        // reply sender during unwind — the gather just sees one reply
+        // fewer. That must still be counted and flagged, not only the
+        // explicit-Err path.
+        struct PanickingBackend {
+            d: usize,
+            n: usize,
+            k: usize,
+        }
+        impl crate::coordinator::ShardBackend for PanickingBackend {
+            fn score_topk(
+                &mut self,
+                _queries: &[f32],
+                _nq: usize,
+            ) -> anyhow::Result<Vec<Vec<crate::topk::Candidate>>> {
+                panic!("injected worker panic")
+            }
+            fn dim(&self) -> usize {
+                self.d
+            }
+            fn shard_size(&self) -> usize {
+                self.n
+            }
+            fn k(&self) -> usize {
+                self.k
+            }
+        }
+        let d = 8;
+        let k = 3;
+        let per = 64;
+        let mut rng = Rng::new(41);
+        let db: Vec<f32> = (0..per * d).map(|_| rng.next_gaussian() as f32).collect();
+        let backends: Vec<BackendFactory> = vec![
+            Box::new(move || {
+                Ok(Box::new(NativeBackend::exact(db, d, k))
+                    as Box<dyn crate::coordinator::ShardBackend>)
+            }),
+            Box::new(move || {
+                Ok(Box::new(PanickingBackend { d, n: per, k })
+                    as Box<dyn crate::coordinator::ShardBackend>)
+            }),
+        ];
+        let svc = MipsService::start(
+            ServiceConfig {
+                d,
+                k,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                },
+                plan: None,
+            },
+            backends,
+            vec![0, per],
+        )
+        .unwrap();
+        // First batch: the worker panics mid-batch (no reply). Second
+        // batch: its channel is gone (submit fails). Both must count.
+        for id in 0..2u64 {
+            let resp = svc.query(id, vec![1.0; d]).unwrap();
+            assert!(resp.degraded, "query {id} must be degraded");
+            assert_eq!(resp.shards_answered, 1, "query {id}");
+        }
+        assert!(svc.metrics.shard_failures() >= 2);
+        assert_eq!(svc.metrics.degraded_requests(), 2);
+        svc.shutdown();
+    }
+
+    /// End-to-end planner check: serve with only a recall target, let the
+    /// planner pick per-shard (B, K′), and verify the *measured* merged
+    /// recall against the plan's prediction.
+    #[test]
+    fn planned_service_meets_recall_target() {
+        use crate::plan::{plan_serve, PlanRequest};
+        use crate::params::RecallEval;
+
+        let (shards, per, d, k) = (4usize, 1024usize, 16usize, 128usize);
+        let target = 0.97;
+        let (plan, _) = plan_serve(&PlanRequest {
+            shards: shards as u64,
+            shard_size: per as u64,
+            k: k as u64,
+            recall_target: target,
+            allowed_local_k: vec![1, 2, 3, 4],
+            eval: RecallEval::Exact,
+        });
+        let plan = plan.unwrap();
+        assert!(plan.predicted_recall >= target);
+        // At this shape the merged target is met with strictly fewer
+        // candidates than per-shard targeting would buy (K' > 1 pays off).
+        assert!(plan.local_k > 1, "expected a K'>1 plan, got {plan:?}");
+
+        let mut rng = Rng::new(23);
+        let n_total = shards * per;
+        let db: Vec<f32> = (0..n_total * d).map(|_| rng.next_gaussian() as f32).collect();
+        let params = TwoStageParams::new(per, k, plan.buckets as usize, plan.local_k as usize);
+        let mut backends: Vec<BackendFactory> = Vec::new();
+        let mut offsets = Vec::new();
+        for s in 0..shards {
+            let chunk = db[s * per * d..(s + 1) * per * d].to_vec();
+            backends.push(Box::new(move || {
+                Ok(Box::new(NativeBackend::new(chunk, d, k, Some(params)))
+                    as Box<dyn crate::coordinator::ShardBackend>)
+            }));
+            offsets.push(s * per);
+        }
+        let svc = MipsService::start(
+            ServiceConfig {
+                d,
+                k,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(1),
+                },
+                plan: Some(plan),
+            },
+            backends,
+            offsets,
+        )
+        .unwrap();
+        assert_eq!(svc.metrics.plan().unwrap(), plan);
+
+        let trials = 24usize;
+        let mut hits = 0usize;
+        for id in 0..trials {
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let resp = svc.query(id as u64, q.clone()).unwrap();
+            assert!(!resp.degraded);
+            let got: std::collections::HashSet<usize> =
+                resp.results.iter().map(|&(i, _)| i).collect();
+            let want = exact_oracle(&db, d, &q, k);
+            hits += want.iter().filter(|i| got.contains(i)).count();
+        }
+        let measured = hits as f64 / (trials * k) as f64;
+        // 24·128 ≈ 3k Bernoulli samples: σ ≈ 0.002 at the predicted
+        // recall, so a 0.03 band is > 10σ — this fails only if the
+        // prediction (or the serving path) is actually wrong.
+        assert!(
+            measured >= target - 0.03,
+            "measured {measured:.4} misses target {target}"
+        );
+        assert!(
+            (measured - plan.predicted_recall).abs() <= 0.03,
+            "measured {measured:.4} vs predicted {:.4}",
+            plan.predicted_recall
+        );
         svc.shutdown();
     }
 
@@ -316,8 +646,71 @@ mod tests {
             j.join().unwrap();
         }
         assert_eq!(svc.metrics.requests(), 80);
-        // Batching actually happened under concurrency.
-        assert!(svc.metrics.batches() <= 80);
+        // Batch accounting must balance: every request rode in exactly one
+        // recorded batch (mean_batch · batches == requests). Unlike the old
+        // `batches() <= 80`, this fails if record_batch over- or
+        // under-counts.
+        let (batches, mean) = (svc.metrics.batches(), svc.metrics.mean_batch_size());
+        assert!(batches >= 1);
+        assert!(
+            (mean * batches as f64 - 80.0).abs() < 1e-6,
+            "batch accounting off: {batches} batches, mean {mean}"
+        );
+    }
+
+    #[test]
+    fn forced_queueing_batches_requests_together() {
+        // Submit a burst without waiting for replies: the batcher's
+        // formation window must coalesce it into fewer batches than
+        // requests. A 50ms window over a burst of non-blocking sub-µs
+        // sends makes `batches < requests` fail only if batching is
+        // actually broken (each stray scheduler pause costs at most one
+        // extra batch; full failure would need ~9 pauses of 50ms inside a
+        // microsecond loop).
+        let d = 8;
+        let n_rows = 128;
+        let k = 3;
+        let mut rng = Rng::new(31);
+        let db: Vec<f32> = (0..n_rows * d).map(|_| rng.next_gaussian() as f32).collect();
+        let backends: Vec<BackendFactory> = vec![Box::new(move || {
+            Ok(Box::new(NativeBackend::exact(db, d, k))
+                as Box<dyn crate::coordinator::ShardBackend>)
+        })];
+        let svc = MipsService::start(
+            ServiceConfig {
+                d,
+                k,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(50),
+                },
+                plan: None,
+            },
+            backends,
+            vec![0],
+        )
+        .unwrap();
+        let n = 10usize;
+        let mut pending = Vec::new();
+        for id in 0..n {
+            pending.push(
+                svc.submit(Query {
+                    id: id as u64,
+                    vector: vec![1.0; d],
+                })
+                .unwrap(),
+            );
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(svc.metrics.requests(), n as u64);
+        assert!(
+            svc.metrics.batches() < n as u64,
+            "no batching happened: {} batches for {n} requests",
+            svc.metrics.batches()
+        );
+        svc.shutdown();
     }
 
     #[test]

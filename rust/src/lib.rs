@@ -15,13 +15,16 @@
 //!   fused score+select pipeline in [`topk::fused`] that moves the scoring
 //!   matmul into the same pool (the CPU analogue of the paper's fused MIPS
 //!   kernel), both built on the shared [`topk::kernel`] dot-product
-//!   micro-kernel.
+//!   micro-kernel — and the recall-targeted serve planner in [`plan`] that
+//!   turns a global recall target into per-shard `(B, K′)` by composing
+//!   Theorem-1 recall exactly across shards.
 
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod hw;
 pub mod params;
+pub mod plan;
 pub mod runtime;
 pub mod perfmodel;
 pub mod recall;

@@ -23,9 +23,11 @@ use fastk::coordinator::{
     ServiceConfig, ShardBackend,
 };
 use fastk::hw::{Accelerator, AcceleratorId};
+use fastk::params::ParamCache;
 use fastk::perfmodel::{self, predict_table2_row, vpu_probe};
+use fastk::plan::{plan_fixed, PlanSource, ServePlan};
 use fastk::recall::{self, RecallConfig};
-use fastk::runtime::{Executor, HostTensor};
+use fastk::runtime::{Executor, HostTensor, Manifest};
 use fastk::topk::{self, TwoStageParams};
 use fastk::util::cli::Args;
 use fastk::util::stats::fmt_ns;
@@ -329,6 +331,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     run_serve(&cfg, queries)
 }
 
+/// The PJRT path's serve plan: `(B, K′)` read back from the artifact
+/// manifest (the parameters are compile-time constants there), scored with
+/// the same merged-recall predictor the planner uses. `None` when the
+/// artifact runs no two-stage Stage 1 (e.g. an exact-top-k kernel).
+fn artifact_plan(cfg: &LauncherConfig) -> anyhow::Result<Option<ServePlan>> {
+    let manifest = Manifest::load(Path::new(&cfg.artifact_dir))?;
+    let name = cfg.artifact.as_ref().expect("validated: pjrt requires artifact");
+    let entry = manifest
+        .find(name)
+        .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest"))?;
+    match (entry.param_usize("buckets"), entry.param_usize("local_k")) {
+        (Some(b), Some(kp)) => Ok(Some(plan_fixed(
+            cfg.shards as u64,
+            cfg.shard_size as u64,
+            cfg.k as u64,
+            b as u64,
+            kp as u64,
+            PlanSource::Artifact,
+        )?)),
+        _ => Ok(None),
+    }
+}
+
 /// Build and drive the service per config.
 fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     let mut rng = Rng::new(cfg.seed);
@@ -363,20 +388,39 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         .map(|_| rng.next_gaussian() as f32)
         .collect();
 
-    let params = TwoStageParams::auto(cfg.shard_size, cfg.k, cfg.recall_target)
-        .ok_or_else(|| anyhow::anyhow!("no feasible two-stage params for shard"))?;
-    println!(
-        "per-shard operator: K'={} B={} ({} candidates, expected recall {:.4})",
-        params.local_k,
-        params.buckets,
-        params.num_candidates(),
-        recall::expected_recall(&RecallConfig::new(
-            params.n as u64,
-            params.k as u64,
-            params.buckets as u64,
-            params.local_k as u64
-        ))
-    );
+    // Resolve the per-shard (B, K') serve plan. Native backends plan from
+    // the recall target (or the config's explicit override); the PJRT
+    // path's parameters are baked into the artifact, so its plan is read
+    // back from the manifest and checked against the target instead.
+    let plan: Option<ServePlan> = match cfg.backend {
+        BackendKind::Pjrt => artifact_plan(cfg)?,
+        _ => {
+            let mut cache = ParamCache::new();
+            Some(cfg.resolve_plan(&mut cache)?)
+        }
+    };
+    let params = match &plan {
+        Some(p) => {
+            println!("serve plan: {}", p.describe());
+            if p.predicted_recall < cfg.recall_target {
+                eprintln!(
+                    "warning: plan's predicted merged recall {:.4} is below the \
+                     configured target {}",
+                    p.predicted_recall, cfg.recall_target
+                );
+            }
+            Some(TwoStageParams::new(
+                cfg.shard_size,
+                cfg.k,
+                p.buckets as usize,
+                p.local_k as usize,
+            ))
+        }
+        None => {
+            println!("serve plan: none (artifact without two-stage parameters)");
+            None
+        }
+    };
 
     let mut factories: Vec<BackendFactory> = Vec::new();
     let mut offsets = Vec::new();
@@ -387,11 +431,15 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         let k = cfg.k;
         offsets.push(s * cfg.shard_size);
         match cfg.backend {
-            BackendKind::Native => factories.push(Box::new(move || {
-                Ok(Box::new(NativeBackend::new(chunk, d, k, Some(params)))
-                    as Box<dyn ShardBackend>)
-            })),
+            BackendKind::Native => {
+                let params = params.expect("native backends always have a plan");
+                factories.push(Box::new(move || {
+                    Ok(Box::new(NativeBackend::new(chunk, d, k, Some(params)))
+                        as Box<dyn ShardBackend>)
+                }))
+            }
             BackendKind::NativeParallel => {
+                let params = params.expect("native backends always have a plan");
                 let (fused, tile_rows) = (cfg.fused, cfg.tile_rows);
                 factories.push(Box::new(move || {
                     Ok(Box::new(ParallelNativeBackend::with_pipeline(
@@ -417,6 +465,7 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
             d: cfg.d,
             k: cfg.k,
             batcher: cfg.batcher,
+            plan,
         },
         factories,
         offsets,
@@ -438,7 +487,7 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     }
     let mut responses = Vec::with_capacity(num_queries);
     for (q, rx) in pending {
-        responses.push((q, rx.recv()?));
+        responses.push((q, rx.recv()??));
     }
     let wall = t0.elapsed();
 
@@ -463,14 +512,26 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
             .filter(|(i, _)| exact.contains(i))
             .count();
     }
+    let measured = hit as f64 / (sample * cfg.k) as f64;
     println!(
         "done in {:.2}s: throughput {:.1} qps, measured recall@{} = {:.4} ({} queries sampled)",
         wall.as_secs_f64(),
         num_queries as f64 / wall.as_secs_f64(),
         cfg.k,
-        hit as f64 / (sample * cfg.k) as f64,
+        measured,
         sample
     );
+    if let Some(p) = svc.metrics.plan() {
+        println!(
+            "plan check: measured {:.4} vs predicted merged recall {:.4} \
+             (target {})",
+            measured, p.predicted_recall, cfg.recall_target
+        );
+    }
+    let degraded = responses.iter().filter(|(_, r)| r.degraded).count();
+    if degraded > 0 {
+        eprintln!("warning: {degraded} responses were degraded (shard failures)");
+    }
     println!("metrics: {}", svc.metrics.summary());
     svc.shutdown();
     Ok(())

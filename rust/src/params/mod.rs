@@ -18,5 +18,5 @@ mod select;
 
 pub use select::{
     legal_bucket_counts, select_parameters, select_parameters_mc, select_with,
-    ParamCache, RecallEval, Selection, SweepStats,
+    sweep_with, ParamCache, PlanKey, RecallEval, Selection, SweepStats,
 };

@@ -48,16 +48,22 @@ pub fn legal_bucket_counts(n: u64) -> Vec<u64> {
     out
 }
 
-/// The paper's `select_parameters(input_size, K, recall_target,
-/// allowed_local_K)` with a pluggable recall evaluator. Returns the config
-/// minimizing `B·K′` (ties go to the smaller K′, as in Listing A.10.2) and
-/// sweep statistics.
-pub fn select_with(
+/// The Listing-A.10.2 sweep, parameterized over the configuration that
+/// recall is *scored* on: `score_cfg(b, local_k)` maps a candidate
+/// per-machine `(B, K′)` to the [`RecallConfig`] the evaluator runs
+/// against. [`select_with`] scores the local configuration itself; the
+/// serve planner ([`crate::plan`]) scores the pooled cross-shard
+/// configuration while sweeping the same per-shard candidate set. The
+/// returned [`Selection`] always carries the *local* `(n, k, b, K′)`
+/// config plus the scored recall. The scored config's recall must be
+/// non-decreasing in `b` — both break conditions rely on it.
+pub fn sweep_with(
     n: u64,
     k: u64,
     recall_target: f64,
     allowed_local_k: &[u64],
     eval: RecallEval,
+    score_cfg: impl Fn(u64, u64) -> RecallConfig,
 ) -> (Option<Selection>, SweepStats) {
     assert!(k >= 1 && k <= n);
     assert!(
@@ -67,6 +73,7 @@ pub fn select_with(
     let buckets = legal_bucket_counts(n);
     let mut allowed: Vec<u64> = allowed_local_k.to_vec();
     allowed.sort_unstable();
+    allowed.dedup();
 
     let mut stats = SweepStats::default();
     let mut best: Option<Selection> = None;
@@ -83,12 +90,12 @@ pub fn select_with(
             if b * local_k < k {
                 break; // even smaller B can only be worse
             }
-            let cfg = RecallConfig::new(n, k, b, local_k);
+            let scored = score_cfg(b, local_k);
             stats.configs_evaluated += 1;
             let recall = match eval {
-                RecallEval::Exact => expected_recall(&cfg),
+                RecallEval::Exact => expected_recall(&scored),
                 RecallEval::MonteCarlo { tol, .. } => {
-                    let est = estimate_adaptive(&cfg, tol, 4096, 1 << 24, &mut rng);
+                    let est = estimate_adaptive(&scored, tol, 4096, 1 << 24, &mut rng);
                     stats.mc_samples_drawn += est.num_trials;
                     est.recall
                 }
@@ -96,18 +103,34 @@ pub fn select_with(
             if recall < recall_target {
                 break;
             }
-            let elements = cfg.num_elements();
+            let elements = b * local_k;
             // Strict `<` keeps the smaller K′ on ties (allowed is ascending).
             if elements < best_elements {
                 best_elements = elements;
                 best = Some(Selection {
-                    cfg,
+                    cfg: RecallConfig::new(n, k, b, local_k),
                     expected_recall: recall,
                 });
             }
         }
     }
     (best, stats)
+}
+
+/// The paper's `select_parameters(input_size, K, recall_target,
+/// allowed_local_K)` with a pluggable recall evaluator. Returns the config
+/// minimizing `B·K′` (ties go to the smaller K′, as in Listing A.10.2) and
+/// sweep statistics.
+pub fn select_with(
+    n: u64,
+    k: u64,
+    recall_target: f64,
+    allowed_local_k: &[u64],
+    eval: RecallEval,
+) -> (Option<Selection>, SweepStats) {
+    sweep_with(n, k, recall_target, allowed_local_k, eval, |b, local_k| {
+        RecallConfig::new(n, k, b, local_k)
+    })
 }
 
 /// Exact-evaluator convenience wrapper returning just the config.
@@ -140,11 +163,19 @@ pub fn select_parameters_mc(
     )
 }
 
-/// Memoized selection, keyed by `(N, K, recall_target_milli, allowed_set)`.
-/// The paper notes selections are cached and reused across identical layers.
+/// Memoization key for a full planning request: `(shards, N, K,
+/// recall_target_micro, eval_kind, seed, tol_bits, allowed_local_k)`.
+/// Single-machine selections use `shards = 1` and zeros for the evaluator
+/// fields; the serve planner ([`crate::plan`]) keys its sharded sweeps —
+/// including Monte-Carlo seed and tolerance — through the same cache.
+pub type PlanKey = (u64, u64, u64, u64, u64, u64, u64, Vec<u64>);
+
+/// Memoized selection. The paper notes selections are cached and reused
+/// across identical layers; the serve planner reuses the same cache so
+/// identical shards plan once.
 #[derive(Debug, Default)]
 pub struct ParamCache {
-    map: HashMap<(u64, u64, u64, Vec<u64>), Option<RecallConfig>>,
+    map: HashMap<PlanKey, Option<Selection>>,
     pub hits: u64,
     pub misses: u64,
 }
@@ -154,6 +185,7 @@ impl ParamCache {
         Self::default()
     }
 
+    /// Memoized single-machine selection (the paper's layer-reuse path).
     pub fn get(
         &mut self,
         n: u64,
@@ -161,18 +193,42 @@ impl ParamCache {
         recall_target: f64,
         allowed_local_k: &[u64],
     ) -> Option<RecallConfig> {
+        // Normalize the K′ set before keying (the sweep sorts + dedups
+        // anyway), so permuted-but-identical requests hit the same entry —
+        // matching plan_serve_cached's keying.
+        let mut allowed: Vec<u64> = allowed_local_k.to_vec();
+        allowed.sort_unstable();
+        allowed.dedup();
         let key = (
+            1,
             n,
             k,
             (recall_target * 1e6).round() as u64,
-            allowed_local_k.to_vec(),
+            0,
+            0,
+            0,
+            allowed,
         );
+        self.get_or_compute(key, || {
+            select_with(n, k, recall_target, allowed_local_k, RecallEval::Exact).0
+        })
+        .map(|s| s.cfg)
+    }
+
+    /// Generic memoization: return the cached [`Selection`] for `key`, or
+    /// run `compute` once and remember its result (including `None` —
+    /// infeasible requests are not re-swept either).
+    pub fn get_or_compute(
+        &mut self,
+        key: PlanKey,
+        compute: impl FnOnce() -> Option<Selection>,
+    ) -> Option<Selection> {
         if let Some(v) = self.map.get(&key) {
             self.hits += 1;
             return *v;
         }
         self.misses += 1;
-        let v = select_parameters(n, k, recall_target, allowed_local_k);
+        let v = compute();
         self.map.insert(key, v);
         v
     }
@@ -250,6 +306,11 @@ mod tests {
         let b = c.get(262_144, 1024, 0.95, &[1, 2, 3, 4]);
         assert_eq!(a, b);
         assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        // Permuted / duplicated K' sets are the same request: still a hit.
+        let p = c.get(262_144, 1024, 0.95, &[4, 3, 2, 2, 1]);
+        assert_eq!(p, a);
+        assert_eq!(c.hits, 2);
         assert_eq!(c.misses, 1);
     }
 

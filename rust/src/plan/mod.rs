@@ -1,0 +1,444 @@
+//! Recall-targeted serve planning: choose per-shard `(B, K′)` from a
+//! *global* recall target (paper Listing A.10.2, lifted to the sharded
+//! serving layer).
+//!
+//! # Why shard-level targeting is the wrong knob
+//!
+//! `fastk serve` shards the database S ways; every shard runs the
+//! generalized two-stage operator on its own `N/S` rows and returns its
+//! local top-K, and the coordinator's merge selects the exact global top-K
+//! of the union ([`merge_shard_results`](crate::coordinator::merge_shard_results)).
+//! Targeting the configured recall *per shard* — what
+//! [`TwoStageParams::auto`](crate::topk::TwoStageParams::auto) on the shard
+//! size does — evaluates `(N/S, K, B, K′)`, i.e. it pretends all K global
+//! winners land in a single shard. They don't: the specials spread across
+//! shards, so per-shard targeting systematically overshoots and buys more
+//! second-stage candidates than the target needs.
+//!
+//! # Exact composition across shards
+//!
+//! With an exact merge, a true global top-K element can only be lost in
+//! Stage 1 of its own shard: any shard element scoring above it is itself a
+//! global top-K element (a higher inner product anywhere implies a higher
+//! global rank), so once it survives Stage 1 it is within the top-K of its
+//! shard's candidates and the merge recovers it. Stage-1 loss is therefore
+//! governed by how the K specials distribute over the `S·B` strided buckets
+//! of size `N/(S·B)`. Sampling a shard (`Hypergeom(N, K, N/S)`) and then a
+//! bucket within it (`Hypergeom(N/S, m, N/(S·B))`) composes to the single
+//! marginal `X ~ Hypergeom(N, K, N/(S·B))`, and expected loss is additive
+//! over buckets, so the merged expected recall of S identical shards is
+//! **exactly** Theorem 1 evaluated on the pooled configuration:
+//!
+//! ```text
+//! E[recall_merged] = expected_recall(N_total, K, S·B, K′)
+//! ```
+//!
+//! The planner sweeps per-shard bucket counts (the kernel constraints —
+//! `128 | B`, `B | N/S` — live at shard level) while scoring each candidate
+//! with the pooled configuration, via the Theorem-1 closed form by default
+//! or the paper's adaptive Monte-Carlo estimator as a fallback, and picks
+//! the `(B, K′)` minimizing the per-shard second-stage input `B·K′`.
+//! [`plan_serve_cached`] memoizes whole plans in the existing
+//! [`ParamCache`] so identical shards (and identical restarts) plan once.
+
+use crate::params::{sweep_with, ParamCache, RecallEval, Selection, SweepStats};
+use crate::recall::{expected_recall, RecallConfig};
+
+/// What produced a [`ServePlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Planner sweep scored by the Theorem-1 closed form.
+    Exact,
+    /// Planner sweep scored by the adaptive Monte-Carlo estimator.
+    MonteCarlo,
+    /// Operator-supplied `(B, K′)` from the serve config (no sweep).
+    Manual,
+    /// `(B, K′)` baked into an AOT artifact (PJRT path; no sweep).
+    Artifact,
+}
+
+impl PlanSource {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlanSource::Exact => "exact",
+            PlanSource::MonteCarlo => "mc",
+            PlanSource::Manual => "manual",
+            PlanSource::Artifact => "artifact",
+        }
+    }
+}
+
+/// A planning request: the serving topology plus the global recall target.
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    /// Number of database shards S (each runs the operator independently).
+    pub shards: u64,
+    /// Rows per shard, N/S.
+    pub shard_size: u64,
+    /// Global top-K (each shard also returns K candidates).
+    pub k: u64,
+    /// Target *merged* expected recall, in `[0, 1)`.
+    pub recall_target: f64,
+    /// Candidate K′ values (the paper's `allowed_local_K`).
+    pub allowed_local_k: Vec<u64>,
+    /// Recall evaluator for the sweep.
+    pub eval: RecallEval,
+}
+
+/// The planner's decision for one serve deployment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServePlan {
+    /// Shard count the plan was made for.
+    pub shards: u64,
+    /// Rows per shard.
+    pub shard_size: u64,
+    /// Global (and per-shard) K.
+    pub k: u64,
+    /// Per-shard Stage-1 bucket count B.
+    pub buckets: u64,
+    /// Per-shard selection count K′.
+    pub local_k: u64,
+    /// Predicted *merged* expected recall (the quantity the sweep targets).
+    pub predicted_recall: f64,
+    /// Theorem-1 recall of a single shard evaluated in isolation
+    /// (`(N/S, K, B, K′)`) — the quantity the pre-planner heuristic
+    /// targeted; always ≤ `predicted_recall` for S > 1.
+    pub per_shard_recall: f64,
+    pub source: PlanSource,
+}
+
+impl ServePlan {
+    /// Per-shard second-stage input size `B·K′` — what the sweep minimizes.
+    pub fn num_elements(&self) -> u64 {
+        self.buckets * self.local_k
+    }
+
+    /// The pooled configuration whose Theorem-1 recall equals the merged
+    /// expected recall (see module docs).
+    pub fn merged_config(&self) -> RecallConfig {
+        merged_config(self.shards, self.shard_size, self.k, self.buckets, self.local_k)
+    }
+
+    /// The single-shard configuration (what each shard's operator runs).
+    pub fn shard_config(&self) -> RecallConfig {
+        RecallConfig::new(self.shard_size, self.k, self.buckets, self.local_k)
+    }
+
+    /// One-line operator-facing description.
+    pub fn describe(&self) -> String {
+        format!(
+            "K'={} B={} per shard ({} candidates/shard, predicted merged \
+             recall {:.4}, per-shard {:.4}, {} plan)",
+            self.local_k,
+            self.buckets,
+            self.num_elements(),
+            self.predicted_recall,
+            self.per_shard_recall,
+            self.source.as_str()
+        )
+    }
+}
+
+/// The pooled configuration of S identical shards: `(S·N_s, K, S·B, K′)`.
+/// Its Theorem-1 recall is exactly the merged expected recall.
+pub fn merged_config(
+    shards: u64,
+    shard_size: u64,
+    k: u64,
+    buckets: u64,
+    local_k: u64,
+) -> RecallConfig {
+    assert!(shards >= 1);
+    RecallConfig::new(shards * shard_size, k, shards * buckets, local_k)
+}
+
+/// Merged expected recall of S identical shards under an exact coordinator
+/// merge (Theorem-1 closed form on the pooled configuration).
+pub fn predicted_merged_recall(
+    shards: u64,
+    shard_size: u64,
+    k: u64,
+    buckets: u64,
+    local_k: u64,
+) -> f64 {
+    expected_recall(&merged_config(shards, shard_size, k, buckets, local_k))
+}
+
+/// Build a [`ServePlan`] from fixed per-shard `(B, K′)` — the operator
+/// override and the PJRT-artifact path, where the parameters are not free.
+/// Returns `Err` when the pair violates the per-shard kernel constraints.
+pub fn plan_fixed(
+    shards: u64,
+    shard_size: u64,
+    k: u64,
+    buckets: u64,
+    local_k: u64,
+    source: PlanSource,
+) -> anyhow::Result<ServePlan> {
+    anyhow::ensure!(buckets >= 1 && local_k >= 1, "B and K' must be positive");
+    anyhow::ensure!(
+        k >= 1 && k <= shard_size,
+        "K={k} must be in [1, shard_size={shard_size}]"
+    );
+    anyhow::ensure!(
+        shard_size % buckets == 0,
+        "buckets={buckets} must divide shard_size={shard_size}"
+    );
+    anyhow::ensure!(
+        buckets * local_k >= k,
+        "B*K' = {} < K = {k}: a shard cannot return K candidates",
+        buckets * local_k
+    );
+    Ok(ServePlan {
+        shards,
+        shard_size,
+        k,
+        buckets,
+        local_k,
+        predicted_recall: predicted_merged_recall(shards, shard_size, k, buckets, local_k),
+        per_shard_recall: expected_recall(&RecallConfig::new(shard_size, k, buckets, local_k)),
+        source,
+    })
+}
+
+/// The serve-planning sweep: minimize the per-shard `B·K′` subject to
+/// *merged* expected recall ≥ target and the per-shard kernel constraints
+/// (`128 | B`, `B | N/S`, `B·K′ ≥ K`). This is the paper's Listing-A.10.2
+/// sweep ([`sweep_with`]) with one twist: candidates are enumerated at
+/// shard level, but each is scored on the pooled cross-shard
+/// configuration (whose recall is still monotone in `B`, so the sweep's
+/// early exits remain valid). Returns the plan (None if infeasible) and
+/// sweep statistics.
+pub fn plan_serve(req: &PlanRequest) -> (Option<ServePlan>, SweepStats) {
+    assert!(req.shards >= 1);
+    let (sel, stats) = sweep_with(
+        req.shard_size,
+        req.k,
+        req.recall_target,
+        &req.allowed_local_k,
+        req.eval,
+        |b, local_k| merged_config(req.shards, req.shard_size, req.k, b, local_k),
+    );
+    let plan = sel.map(|s| ServePlan {
+        shards: req.shards,
+        shard_size: req.shard_size,
+        k: req.k,
+        buckets: s.cfg.buckets,
+        local_k: s.cfg.local_k,
+        predicted_recall: s.expected_recall,
+        per_shard_recall: expected_recall(&s.cfg),
+        source: match req.eval {
+            RecallEval::Exact => PlanSource::Exact,
+            RecallEval::MonteCarlo { .. } => PlanSource::MonteCarlo,
+        },
+    });
+    (plan, stats)
+}
+
+/// Memoized [`plan_serve`], keyed by the full request in the shared
+/// [`ParamCache`]: identical shards — and identical serve restarts — plan
+/// once. MC plans key on `(seed, tol)` too, so a reseeded sweep is not
+/// served a stale entry.
+pub fn plan_serve_cached(cache: &mut ParamCache, req: &PlanRequest) -> Option<ServePlan> {
+    let mut allowed: Vec<u64> = req.allowed_local_k.clone();
+    allowed.sort_unstable();
+    allowed.dedup();
+    let (eval_kind, seed, tol_bits) = match req.eval {
+        RecallEval::Exact => (0u64, 0u64, 0u64),
+        RecallEval::MonteCarlo { tol, seed } => (1, seed, tol.to_bits()),
+    };
+    let key = (
+        req.shards,
+        req.shard_size,
+        req.k,
+        (req.recall_target * 1e6).round() as u64,
+        eval_kind,
+        seed,
+        tol_bits,
+        allowed,
+    );
+    let sel = cache.get_or_compute(key, || {
+        plan_serve(req).0.map(|p| Selection {
+            cfg: RecallConfig::new(p.shard_size, p.k, p.buckets, p.local_k),
+            expected_recall: p.predicted_recall,
+        })
+    })?;
+    // Rebuild the plan from the cached per-shard selection; both recall
+    // figures are cheap closed-form lookups.
+    Some(ServePlan {
+        shards: req.shards,
+        shard_size: req.shard_size,
+        k: req.k,
+        buckets: sel.cfg.buckets,
+        local_k: sel.cfg.local_k,
+        predicted_recall: sel.expected_recall,
+        per_shard_recall: expected_recall(&sel.cfg),
+        source: match req.eval {
+            RecallEval::Exact => PlanSource::Exact,
+            RecallEval::MonteCarlo { .. } => PlanSource::MonteCarlo,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::select_parameters;
+    use crate::recall::estimate_adaptive;
+    use crate::util::check::property;
+
+    fn exact_req(shards: u64, shard_size: u64, k: u64, r: f64) -> PlanRequest {
+        PlanRequest {
+            shards,
+            shard_size,
+            k,
+            recall_target: r,
+            allowed_local_k: vec![1, 2, 3, 4],
+            eval: RecallEval::Exact,
+        }
+    }
+
+    #[test]
+    fn single_shard_plan_matches_paper_sweep() {
+        // S=1 pools to the identity, so the planner must reproduce the
+        // paper's select_parameters exactly (§7.1: K'=4, B=512).
+        let (plan, stats) = plan_serve(&exact_req(1, 262_144, 1024, 0.95));
+        let plan = plan.unwrap();
+        let sel = select_parameters(262_144, 1024, 0.95, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(plan.buckets, sel.buckets);
+        assert_eq!(plan.local_k, sel.local_k);
+        assert_eq!(plan.shards, 1);
+        assert!((plan.predicted_recall - plan.per_shard_recall).abs() < 1e-12);
+        assert!(stats.configs_evaluated > 0);
+    }
+
+    #[test]
+    fn merged_recall_dominates_per_shard_recall() {
+        // Pooling spreads the K specials over S shards, so the merged
+        // recall of (B, K') is at least the single-shard figure that
+        // pretends all K land together.
+        for shards in [2u64, 4, 8] {
+            let merged = predicted_merged_recall(shards, 16_384, 1024, 1024, 2);
+            let single = expected_recall(&RecallConfig::new(16_384, 1024, 1024, 2));
+            assert!(
+                merged >= single - 1e-12,
+                "S={shards}: merged {merged} < per-shard {single}"
+            );
+        }
+    }
+
+    #[test]
+    fn planner_never_buys_more_than_per_shard_targeting() {
+        // The headline: targeting the merged recall needs <= the candidates
+        // of the conservative per-shard-target sweep, often strictly fewer.
+        let shards = 4u64;
+        let shard_size = 16_384u64;
+        let k = 512u64;
+        let r = 0.95;
+        let plan = plan_serve(&exact_req(shards, shard_size, k, r)).0.unwrap();
+        let per_shard = select_parameters(shard_size, k, r, &[1, 2, 3, 4]).unwrap();
+        assert!(
+            plan.num_elements() <= per_shard.num_elements(),
+            "plan {plan:?} vs per-shard {per_shard:?}"
+        );
+        assert!(plan.predicted_recall >= r);
+    }
+
+    #[test]
+    fn fixed_plan_validates_and_predicts() {
+        let p = plan_fixed(4, 1024, 128, 128, 2, PlanSource::Manual).unwrap();
+        assert_eq!(p.num_elements(), 256);
+        let want = expected_recall(&RecallConfig::new(4096, 128, 512, 2));
+        assert!((p.predicted_recall - want).abs() < 1e-12);
+        assert_eq!(p.source, PlanSource::Manual);
+        // Constraint violations are errors, not panics.
+        assert!(plan_fixed(4, 1024, 100, 100, 1, PlanSource::Manual).is_err()); // 100 ∤ 1024
+        assert!(plan_fixed(4, 1024, 128, 64, 1, PlanSource::Manual).is_err()); // B·K′ < K
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        // shard_size with no 128-multiple divisors.
+        let (plan, _) = plan_serve(&exact_req(4, 999, 10, 0.9));
+        assert!(plan.is_none());
+    }
+
+    #[test]
+    fn cached_planning_plans_once() {
+        let mut cache = ParamCache::new();
+        let req = exact_req(4, 4096, 64, 0.95);
+        let a = plan_serve_cached(&mut cache, &req).unwrap();
+        let b = plan_serve_cached(&mut cache, &req).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        // A different topology is a different plan, not a stale hit.
+        let c = plan_serve_cached(&mut cache, &exact_req(8, 4096, 64, 0.95));
+        assert!(c.is_some());
+        assert_eq!(cache.misses, 2);
+        // The uncached sweep agrees with what the cache rebuilt.
+        let direct = plan_serve(&req).0.unwrap();
+        assert_eq!(a, direct);
+    }
+
+    #[test]
+    fn prop_plan_meets_target_and_agrees_with_mc() {
+        // The satellite property: the selected config satisfies
+        // `expected_recall >= target` under Theorem 1 on the pooled
+        // configuration, and the Monte-Carlo estimator agrees with the
+        // closed form within its stopping tolerance.
+        property("serve plan meets target, exact ~ MC", 10, |g| {
+            let shards = *g.choose(&[1u64, 2, 4]);
+            let shard_size = *g.choose(&[4_096u64, 16_384, 65_536]);
+            let k = (*g.choose(&[64u64, 256, 1024])).min(shard_size);
+            let r = *g.choose(&[0.8, 0.9, 0.95]);
+            let req = exact_req(shards, shard_size, k, r);
+            let Some(plan) = plan_serve(&req).0 else {
+                return;
+            };
+            // Theorem-1 guarantee on the pooled configuration.
+            assert!(
+                expected_recall(&plan.merged_config()) >= r,
+                "{plan:?} misses target {r}"
+            );
+            assert!(plan.per_shard_recall <= plan.predicted_recall + 1e-12);
+            // Per-shard kernel constraints.
+            assert_eq!(plan.buckets % 128, 0);
+            assert_eq!(shard_size % plan.buckets, 0);
+            assert!(plan.num_elements() >= k);
+            // MC agreement on the selected pooled configuration: the
+            // adaptive estimator stops at 3σ <= tol, so allow tol + 3σ.
+            let tol = 0.005;
+            let est = estimate_adaptive(
+                &plan.merged_config(),
+                tol,
+                4096,
+                1 << 22,
+                g.rng(),
+            );
+            assert!(
+                (est.recall - plan.predicted_recall).abs()
+                    <= tol + 3.0 * est.std_error + 1e-4,
+                "mc {} vs exact {} (se {})",
+                est.recall,
+                plan.predicted_recall,
+                est.std_error
+            );
+        });
+    }
+
+    #[test]
+    fn mc_planner_agrees_with_exact_planner() {
+        let mut req = exact_req(4, 65_536, 1024, 0.95);
+        let exact = plan_serve(&req).0.unwrap();
+        req.eval = RecallEval::MonteCarlo { tol: 0.005, seed: 11 };
+        let (mc, stats) = plan_serve(&req);
+        let mc = mc.unwrap();
+        assert!(stats.mc_samples_drawn > 0);
+        // MC noise may flip a borderline bucket step; accept a factor-2
+        // band on the element budget, as the params sweep tests do.
+        let ratio = mc.num_elements() as f64 / exact.num_elements() as f64;
+        assert!((0.5..=2.0).contains(&ratio), "mc={mc:?} exact={exact:?}");
+        assert_eq!(mc.source, PlanSource::MonteCarlo);
+    }
+}

@@ -180,6 +180,7 @@ fn coordinator_serves_through_pjrt_backend() {
             d,
             k,
             batcher: BatcherConfig::default(),
+            plan: None,
         },
         factories,
         offsets,
