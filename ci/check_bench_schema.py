@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Validate a fastk bench JSON file against the shared schema.
+
+Replaces the inline Python that used to be copy-pasted per bench-smoke step
+in `.github/workflows/ci.yml`. Every bench emits the same schema (see
+`fastk::bench_harness::results_to_json`):
+
+    {"bench": "<name>", "results": [{"name": ..., "iterations": ...,
+      "min_ns": ..., "mean_ns": ..., "p50_ns": ..., "p90_ns": ...,
+      "p99_ns": ..., "max_ns": ..., "std_ns": ...}, ...]}
+
+Usage:
+    check_bench_schema.py <path> --bench <name> [--prefix P]... [--min-results N]
+
+Each `--prefix` asserts at least one result name starts with it — how CI
+pins that a bench still emits the entry families its gates and snapshots
+rely on (e.g. the kernel-axis names).
+"""
+
+import argparse
+import json
+import sys
+
+REQUIRED_KEYS = (
+    "iterations",
+    "min_ns",
+    "mean_ns",
+    "p50_ns",
+    "p90_ns",
+    "p99_ns",
+    "max_ns",
+    "std_ns",
+)
+
+
+def fail(msg: str) -> None:
+    sys.exit(f"check_bench_schema: FAIL: {msg}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="bench JSON file to validate")
+    ap.add_argument("--bench", required=True, help="expected top-level bench name")
+    ap.add_argument(
+        "--prefix",
+        action="append",
+        default=[],
+        help="at least one result name must start with this (repeatable)",
+    )
+    ap.add_argument(
+        "--min-results",
+        type=int,
+        default=1,
+        help="minimum number of result entries (default 1)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot read {args.path}: {e}")
+
+    if data.get("bench") != args.bench:
+        fail(f"bench name {data.get('bench')!r} != expected {args.bench!r}")
+    results = data.get("results")
+    if not isinstance(results, list):
+        fail("`results` missing or not a list")
+    if len(results) < args.min_results:
+        fail(f"only {len(results)} results (expected >= {args.min_results})")
+    for r in results:
+        name = r.get("name")
+        if not isinstance(name, str) or not name:
+            fail(f"result with missing/empty name: {r}")
+        for key in REQUIRED_KEYS:
+            if not isinstance(r.get(key), (int, float)):
+                fail(f"result {name!r}: key {key!r} missing or non-numeric")
+
+    names = {r["name"] for r in results}
+    for prefix in args.prefix:
+        if not any(n.startswith(prefix) for n in names):
+            fail(f"no result name starts with {prefix!r}; got {sorted(names)}")
+
+    print(f"check_bench_schema: ok: {args.path}: {len(results)} results")
+
+
+if __name__ == "__main__":
+    main()

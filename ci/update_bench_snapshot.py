@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Refresh the tracked `BENCH_fused.json` perf-trajectory snapshot.
+
+Run by the CI `snapshot` job on every push to `main`: takes the
+`fused_pipeline` bench-smoke JSON emitted by the test job (downloaded as a
+workflow artifact) and copies its measured entries into the snapshot file,
+stamping the source commit. Exits nonzero if the measured run produced no
+results — the snapshot must never silently stay (or go) empty.
+
+Usage:
+    update_bench_snapshot.py <measured.json> <snapshot.json> --commit <sha>
+"""
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("measured", help="bench JSON emitted by the smoke run")
+    ap.add_argument("snapshot", help="tracked snapshot file to refresh")
+    ap.add_argument("--commit", default="unknown", help="source commit sha")
+    args = ap.parse_args()
+
+    with open(args.measured) as f:
+        measured = json.load(f)
+    results = measured.get("results") or []
+    if not results:
+        sys.exit(
+            f"update_bench_snapshot: FAIL: {args.measured} has no measured "
+            "results; refusing to leave the snapshot empty"
+        )
+
+    with open(args.snapshot) as f:
+        snapshot = json.load(f)
+    if snapshot.get("bench") != measured.get("bench"):
+        sys.exit(
+            f"update_bench_snapshot: FAIL: bench mismatch: snapshot is for "
+            f"{snapshot.get('bench')!r}, measured run is {measured.get('bench')!r}"
+        )
+
+    snapshot["results"] = results
+    snapshot["source_commit"] = args.commit
+    snapshot["note"] = (
+        "Measured CI smoke-run entries (tiny shapes; schema-identical to full "
+        "runs), refreshed automatically on every push to main by the snapshot "
+        "job in .github/workflows/ci.yml. For full-shape numbers run "
+        "FASTK_BENCH_JSON=<dir> cargo bench --bench fused_pipeline on a real "
+        "host; full runs also enforce the fused>=unfused and SIMD>=scalar "
+        "perf gates."
+    )
+    with open(args.snapshot, "w") as f:
+        json.dump(snapshot, f, indent=2)
+        f.write("\n")
+    print(
+        f"update_bench_snapshot: refreshed {args.snapshot}: "
+        f"{len(results)} results @ {args.commit}"
+    )
+
+
+if __name__ == "__main__":
+    main()

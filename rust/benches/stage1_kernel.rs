@@ -1,57 +1,109 @@
 //! Stage-1 ablation bench (not a paper table; supports DESIGN.md §Perf):
 //!
 //! - scaling of the online top-K' update with K' (ops/element = 5K'-2;
-//!   on CPU the analogue is the branch-vs-bandwidth balance),
-//! - generic vs const-specialized update loop,
-//! - K'=1 strided max (the Chern baseline) as the floor.
+//!   on CPU the analogue is the branch-vs-bandwidth balance), now swept
+//!   **per dispatch kernel** (scalar plus AVX2/NEON where the host
+//!   supports them) so the SIMD tail-compare's effect is tracked,
+//! - K'=1 strided max (the Chern baseline) as the floor,
+//! - bucket-count sweep at K'=4 (state footprint vs cache).
 //!
 //! Reports effective GB/s of input consumption — the CPU counterpart of
 //! the paper's "stage 1 stays memory-bound until K'~6" claim.
+//!
+//! Before timing, every kernel's Stage-1 state is checked bit-identical to
+//! the scalar reference on the swept shape. Emits the shared bench JSON
+//! schema when `FASTK_BENCH_JSON=<dir>` is set (entries
+//! `stage1_<kernel>_kp<K'>` and `buckets_b<B>`); `FASTK_BENCH_SMOKE=1`
+//! runs tiny shapes for CI schema checks. Full (non-smoke) runs exit
+//! nonzero if a SIMD kernel is slower than scalar on the same shape
+//! (beyond a small measurement-noise allowance) — the perf-trajectory gate
+//! for the dispatch layer.
 
-use fastk::bench_harness::{banner, bench, maybe_write_json, BenchResult, Table};
+use fastk::bench_harness::{banner, bench, gate_not_slower, maybe_write_json, BenchResult, Table};
+use fastk::topk::simd::SimdKernel;
 use fastk::topk::{TwoStageParams, TwoStageTopK};
 use fastk::util::stats::fmt_ns;
 use fastk::util::Rng;
 
+/// Full-run gate: a SIMD kernel may not be slower than scalar by more than
+/// this factor on the same shape. Stage 1 is memory-bound, so SIMD and the
+/// autovectorized scalar sweep are expected to be close — the slack only
+/// absorbs run-to-run noise in the min, not a real regression.
+const GATE_SLACK: f64 = 1.05;
+
 fn main() {
-    banner("stage-1 kernel: throughput vs K' (N=262144, B=512)");
-    let n = 262_144usize;
-    let b = 512usize;
+    let smoke = std::env::var("FASTK_BENCH_SMOKE")
+        .map(|v| v != "0")
+        .unwrap_or(false);
+    let (n, b) = if smoke { (8_192usize, 128usize) } else { (262_144, 512) };
+    let kps: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 3, 4, 6, 8] };
+    let gate_kp = 4usize; // representative gated shape, present in both modes
+    let kernels = SimdKernel::available();
     let mut rng = Rng::new(8);
     let mut input = vec![0f32; n];
     rng.fill_f32(&mut input);
     let mut all_results: Vec<BenchResult> = Vec::new();
 
-    let mut t = Table::new(&["K'", "time", "GB/s in", "ns/elt", "vs K'=1"]);
-    let mut base = 0.0f64;
-    for kp in [1usize, 2, 3, 4, 6, 8] {
+    banner(&format!(
+        "stage-1 kernel: throughput vs K' x dispatch kernel (N={n}, B={b}{}; kernels: {})",
+        if smoke { ", SMOKE shapes" } else { "" },
+        kernels
+            .iter()
+            .map(|k| k.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    ));
+
+    let mut t = Table::new(&["K'", "KERNEL", "time", "GB/s in", "vs scalar"]);
+    for &kp in kps {
         let params = TwoStageParams::new(n, 64, b, kp);
-        let mut op = TwoStageTopK::new(params);
-        let r = bench(&format!("k'={kp}"), || {
+        // Correctness guard before timing: every dispatch kernel's state
+        // must be bit-identical to the scalar reference on this shape.
+        let mut reference = TwoStageTopK::new(params);
+        reference.stage1(&input);
+        let mut scalar_s = 0.0f64;
+        for kernel in &kernels {
+            let mut op = TwoStageTopK::with_kernel(params, *kernel);
             op.stage1(&input);
-            std::hint::black_box(op.state());
-        });
-        let secs = r.min_s();
-        if kp == 1 {
-            base = secs;
+            assert_eq!(
+                op.state().values,
+                reference.state().values,
+                "kernel {} diverges from scalar at K'={kp}",
+                kernel.name()
+            );
+            assert_eq!(op.state().indices, reference.state().indices);
+            let r = bench(&format!("stage1_{}_kp{kp}", kernel.name()), || {
+                op.stage1(&input);
+                std::hint::black_box(op.state());
+            });
+            let secs = r.min_s();
+            if !kernel.is_simd() {
+                scalar_s = secs;
+            }
+            t.row(vec![
+                kp.to_string(),
+                kernel.name().to_string(),
+                fmt_ns(r.summary.min),
+                format!("{:.2}", n as f64 * 4.0 / secs / 1e9),
+                format!("{:.2}x", scalar_s / secs),
+            ]);
+            all_results.push(r);
         }
-        t.row(vec![
-            kp.to_string(),
-            fmt_ns(r.summary.min),
-            format!("{:.2}", n as f64 * 4.0 / secs / 1e9),
-            format!("{:.2}", secs * 1e9 / n as f64),
-            format!("{:.2}x", secs / base),
-        ]);
-        all_results.push(r);
     }
     t.print();
 
-    banner("bucket-count sweep at K'=4 (state footprint vs cache)");
+    banner("bucket-count sweep at K'=4 (state footprint vs cache, auto kernel)");
+    let auto = SimdKernel::auto();
+    let bucket_sweep: &[usize] = if smoke {
+        &[64, 256]
+    } else {
+        &[128, 512, 2048, 8192, 32_768]
+    };
     let mut t2 = Table::new(&["BUCKETS", "state KiB", "time", "GB/s in"]);
-    for b in [128usize, 512, 2048, 8192, 32_768] {
+    for &b in bucket_sweep {
         let params = TwoStageParams::new(n, 64, b, 4);
-        let mut op = TwoStageTopK::new(params);
-        let r = bench(&format!("b={b}"), || {
+        let mut op = TwoStageTopK::with_kernel(params, auto);
+        let r = bench(&format!("buckets_b{b}"), || {
             op.stage1(&input);
             std::hint::black_box(op.state());
         });
@@ -65,5 +117,26 @@ fn main() {
     }
     t2.print();
     println!("(expect a knee once the [K'][B] state spills the innermost cache)");
+
+    // Perf gate (shared `gate_not_slower` helper): each SIMD kernel must
+    // not lose to scalar at the gated shape. Missing lookup names fail
+    // even in smoke, so renames can't silently retire the gate; the speed
+    // comparison is enforced on full runs only (smoke shapes exist for
+    // the JSON schema check, not as a meaningful perf sample).
+    let mut failed = false;
+    for kernel in kernels.iter().filter(|k| k.is_simd()) {
+        failed |= gate_not_slower(
+            &all_results,
+            &format!("stage1_scalar_kp{gate_kp}"),
+            &format!("stage1_{}_kp{gate_kp}", kernel.name()),
+            GATE_SLACK,
+            !smoke,
+            &format!("{} vs scalar stage 1 at K'={gate_kp}", kernel.name()),
+        );
+    }
+
     maybe_write_json("stage1_kernel", &all_results);
+    if failed {
+        std::process::exit(1);
+    }
 }

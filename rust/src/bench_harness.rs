@@ -152,6 +152,49 @@ pub fn results_to_json(bench: &str, results: &[BenchResult]) -> Json {
     ])
 }
 
+/// Shared acceptance gate for bench binaries: `candidate` must not be
+/// slower than `baseline` by more than `slack` (a factor ≥ 1.0; use 1.0
+/// for a strict gate, a little more to absorb min-of-samples noise).
+/// Compares the `min_ns` of the two named results.
+///
+/// Returns `true` when the gate **failed**, so callers can accumulate
+/// `failed |= gate_not_slower(...)`. A missing result name fails
+/// unconditionally — even when `enforce` is false (smoke runs) — so bench
+/// renames can never silently retire a gate; the speed comparison itself
+/// is only enforced when `enforce` is true (full runs).
+pub fn gate_not_slower(
+    results: &[BenchResult],
+    baseline_name: &str,
+    candidate_name: &str,
+    slack: f64,
+    enforce: bool,
+    label: &str,
+) -> bool {
+    let min_s = |name: &str| results.iter().find(|r| r.name == name).map(|r| r.min_s());
+    let (Some(base), Some(cand)) = (min_s(baseline_name), min_s(candidate_name)) else {
+        eprintln!(
+            "FAIL: gate results missing ({baseline_name} and/or {candidate_name}) — \
+             bench result names drifted?"
+        );
+        return true;
+    };
+    println!(
+        "\nacceptance: {label}: {:.2}x (must be >= {:.2}x)",
+        base / cand,
+        1.0 / slack
+    );
+    if enforce && cand > base * slack {
+        eprintln!(
+            "FAIL: {label}: {candidate_name} ({:.1} us) is slower than \
+             {baseline_name} ({:.1} us)",
+            cand * 1e6,
+            base * 1e6
+        );
+        return true;
+    }
+    false
+}
+
 /// When `FASTK_BENCH_JSON=<dir>` is set, write `<dir>/<bench>.json` in the
 /// shared schema; otherwise do nothing. Bench binaries call this once at
 /// the end of `main`.
@@ -202,6 +245,26 @@ mod tests {
         for key in ["iterations", "min_ns", "mean_ns", "p50_ns", "p99_ns"] {
             assert!(first.get(key).unwrap().as_f64().is_some(), "missing {key}");
         }
+    }
+
+    #[test]
+    fn gate_not_slower_verdicts() {
+        let mk = |name: &str, min_ns: f64| BenchResult {
+            name: name.to_string(),
+            iterations: 1,
+            summary: Summary::from_samples(&[min_ns]),
+        };
+        let results = vec![mk("base", 100.0), mk("fast", 90.0), mk("slow", 120.0)];
+        // Not slower: passes.
+        assert!(!gate_not_slower(&results, "base", "fast", 1.0, true, "fast vs base"));
+        // Slower beyond slack: fails when enforced, passes when not.
+        assert!(gate_not_slower(&results, "base", "slow", 1.05, true, "slow vs base"));
+        assert!(!gate_not_slower(&results, "base", "slow", 1.05, false, "slow vs base"));
+        // Within slack: passes.
+        assert!(!gate_not_slower(&results, "base", "slow", 1.25, true, "slow vs base"));
+        // Missing names fail even unenforced (the drift guard).
+        assert!(gate_not_slower(&results, "base", "gone", 1.0, false, "gone"));
+        assert!(gate_not_slower(&results, "gone", "fast", 1.0, false, "gone"));
     }
 
     #[test]

@@ -23,6 +23,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::BatcherConfig;
 use crate::params::{ParamCache, RecallEval};
 use crate::plan::{plan_fixed, plan_serve_cached, PlanRequest, PlanSource, ServePlan};
+use crate::topk::KernelKind;
 use crate::util::json::Json;
 
 /// Which execution backend shards use.
@@ -83,6 +84,12 @@ pub struct LauncherConfig {
     /// Fused-pipeline tile size in stream rows (0 = auto, ~256 KiB of
     /// database rows per tile). Ignored when `fused` is false.
     pub tile_rows: usize,
+    /// SIMD dispatch for the native scoring + Stage-1 hot loops
+    /// (`"kernel": "auto" | "scalar" | "avx2" | "neon"`). Resolved once at
+    /// startup; requesting a kernel the host cannot run is a launch error.
+    /// Every kernel returns bit-identical results
+    /// ([`topk::simd`](crate::topk::simd)). Ignored by the `pjrt` backend.
+    pub kernel: KernelKind,
     pub artifact: Option<String>,
     pub artifact_dir: String,
     pub seed: u64,
@@ -105,6 +112,7 @@ impl Default for LauncherConfig {
             threads: 0,
             fused: true,
             tile_rows: 0,
+            kernel: KernelKind::Auto,
             artifact: None,
             artifact_dir: "artifacts".to_string(),
             seed: 42,
@@ -166,6 +174,14 @@ impl LauncherConfig {
             c.fused = v.as_bool().context("fused must be a boolean")?;
         }
         c.tile_rows = usize_field("tile_rows", c.tile_rows)?;
+        if let Some(v) = j.get("kernel") {
+            let s = v.as_str().context("kernel must be a string")?;
+            c.kernel = KernelKind::parse(s).with_context(|| {
+                format!(
+                    "unknown kernel {s:?} (want \"auto\", \"scalar\", \"avx2\" or \"neon\")"
+                )
+            })?;
+        }
         if let Some(v) = j.get("backend") {
             c.backend = match v.as_str() {
                 Some("native") => BackendKind::Native,
@@ -322,6 +338,7 @@ impl LauncherConfig {
             ("threads", Json::num(self.threads as f64)),
             ("fused", Json::Bool(self.fused)),
             ("tile_rows", Json::num(self.tile_rows as f64)),
+            ("kernel", Json::str(self.kernel.as_str())),
             (
                 "artifact",
                 self.artifact
@@ -385,6 +402,30 @@ mod tests {
         assert_eq!(c.tile_rows, 8);
         assert!(LauncherConfig::from_json(r#"{"fused": "yes"}"#).is_err());
         assert!(LauncherConfig::from_json(r#"{"tile_rows": -1}"#).is_err());
+    }
+
+    #[test]
+    fn parses_kernel_knob() {
+        assert_eq!(
+            LauncherConfig::from_json("{}").unwrap().kernel,
+            KernelKind::Auto
+        );
+        for (s, want) in [
+            ("auto", KernelKind::Auto),
+            ("scalar", KernelKind::Scalar),
+            ("avx2", KernelKind::Avx2),
+            ("neon", KernelKind::Neon),
+        ] {
+            let c =
+                LauncherConfig::from_json(&format!(r#"{{"kernel": "{s}"}}"#)).unwrap();
+            assert_eq!(c.kernel, want, "kernel {s}");
+        }
+        // Parsing accepts any known kernel; whether the *host* can run it
+        // is checked at resolution time (`SimdKernel::resolve`), so a
+        // config written on one machine fails loudly on another rather
+        // than silently falling back.
+        assert!(LauncherConfig::from_json(r#"{"kernel": "sse2"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"kernel": 2}"#).is_err());
     }
 
     #[test]
@@ -473,5 +514,6 @@ mod tests {
         assert_eq!(c2.d, c.d);
         assert_eq!(c2.backend, c.backend);
         assert_eq!(c2.batcher.max_delay, c.batcher.max_delay);
+        assert_eq!(c2.kernel, c.kernel);
     }
 }

@@ -12,9 +12,11 @@
 //!   database rows of its own lane range. Unfused, it scores on the shard
 //!   thread into a `[nq, N]` scratch and feeds the batched
 //!   [`ParallelTwoStageTopK`] engine. Both are bit-identical to
-//!   [`NativeBackend`] with the same params (every native dot product goes
-//!   through [`topk::kernel::score_tile`](crate::topk::kernel::score_tile)),
-//!   or
+//!   [`NativeBackend`] with the same params — every native dot product
+//!   preserves [`topk::kernel::score_tile`](crate::topk::kernel::score_tile)'s
+//!   fixed reduction order, whichever [`SimdKernel`] dispatch (AVX2, NEON
+//!   or scalar; see [`topk::simd`](crate::topk::simd)) the backend was
+//!   built with — or
 //! - [`PjrtBackend`]: the AOT `mips_fused` artifact through PJRT — the
 //!   production configuration where the scoring matmul and stage 1 are one
 //!   fused kernel on the accelerator.
@@ -24,9 +26,9 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::runtime::{CompiledArtifact, HostTensor};
-use crate::topk::kernel::score_tile;
 use crate::topk::{
-    exact, Candidate, FusedParallelMips, ParallelTwoStageTopK, TwoStageParams, TwoStageTopK,
+    exact, Candidate, FusedParallelMips, ParallelTwoStageTopK, SimdKernel, TwoStageParams,
+    TwoStageTopK,
 };
 
 /// Batched shard scoring: `queries` is row-major `[nq, d]`.
@@ -65,16 +67,34 @@ pub struct NativeBackend {
     n: usize,
     k: usize,
     operator: Option<TwoStageTopK>,
+    /// Dispatched scoring kernel. [`new`](Self::new) pins the scalar
+    /// reference (this backend doubles as the correctness oracle);
+    /// [`with_kernel`](Self::with_kernel) is the serving constructor.
+    kernel: SimdKernel,
     scores_scratch: Vec<f32>,
 }
 
 impl NativeBackend {
-    /// `database` is `[n, d]` row-major (vector-major).
+    /// `database` is `[n, d]` row-major (vector-major). Runs the scalar
+    /// reference kernel — this constructor is the oracle the SIMD paths
+    /// are tested against.
     pub fn new(
         database: Vec<f32>,
         d: usize,
         k: usize,
         params: Option<TwoStageParams>,
+    ) -> Self {
+        Self::with_kernel(database, d, k, params, SimdKernel::scalar())
+    }
+
+    /// [`new`](Self::new) with an explicitly resolved dispatch kernel
+    /// (bit-identical results — see [`topk::simd`](crate::topk::simd)).
+    pub fn with_kernel(
+        database: Vec<f32>,
+        d: usize,
+        k: usize,
+        params: Option<TwoStageParams>,
+        kernel: SimdKernel,
     ) -> Self {
         assert!(d > 0 && !database.is_empty());
         assert_eq!(database.len() % d, 0);
@@ -88,7 +108,8 @@ impl NativeBackend {
             d,
             n,
             k,
-            operator: params.map(TwoStageTopK::new),
+            operator: params.map(|p| TwoStageTopK::with_kernel(p, kernel)),
+            kernel,
             scores_scratch: vec![0.0; n],
         }
     }
@@ -99,9 +120,10 @@ impl NativeBackend {
     }
 
     fn score_into_scratch(&mut self, q: &[f32]) {
-        // The whole database is one tile of the shared micro-kernel, so
-        // scores here are bit-identical to every other native path.
-        score_tile(&self.database, self.d, q, &mut self.scores_scratch);
+        // The whole database is one tile of the shared micro-kernel (every
+        // dispatch kernel preserves its reduction order), so scores here
+        // are bit-identical to every other native path.
+        self.kernel.score_tile(&self.database, self.d, q, &mut self.scores_scratch);
     }
 }
 
@@ -140,6 +162,33 @@ impl ShardBackend for NativeBackend {
     }
 }
 
+/// Construction knobs for [`ParallelNativeBackend`]: the worker pool size,
+/// the pipeline (fused / unfused), the fused engine's tile size, and the
+/// dispatch kernel — exactly the serve config's `threads` / `fused` /
+/// `tile_rows` / `kernel` knobs, resolved.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Worker pool size (clamped to `[1, B]`).
+    pub threads: usize,
+    /// Fused score+select pipeline (the default) vs shard-thread scoring.
+    pub fused: bool,
+    /// Fused tile size in stream rows (0 = auto, ~256 KiB per tile).
+    pub tile_rows: usize,
+    /// Resolved SIMD dispatch kernel (selected once, at pool spawn).
+    pub kernel: SimdKernel,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            threads: 1,
+            fused: true,
+            tile_rows: 0,
+            kernel: SimdKernel::auto(),
+        }
+    }
+}
+
 /// The multi-core execution pipeline behind [`ParallelNativeBackend`].
 enum ParallelEngine {
     /// Score on the shard thread into a `[nq, N]` scratch, then Stage 1
@@ -175,14 +224,16 @@ pub struct ParallelNativeBackend {
     d: usize,
     n: usize,
     k: usize,
+    /// Resolved dispatch kernel (shared by both pipelines).
+    kernel: SimdKernel,
     engine: ParallelEngine,
 }
 
 impl ParallelNativeBackend {
-    /// Fused pipeline with auto tile sizing — the production default.
-    /// `database` is `[n, d]` row-major. `threads` sizes the worker pool
-    /// (clamped to `[1, B]`; pass `std::thread::available_parallelism()`
-    /// for one worker per core).
+    /// Fused pipeline with auto tile sizing and auto kernel dispatch — the
+    /// production default. `database` is `[n, d]` row-major. `threads`
+    /// sizes the worker pool (clamped to `[1, B]`; pass
+    /// `std::thread::available_parallelism()` for one worker per core).
     pub fn new(
         database: Vec<f32>,
         d: usize,
@@ -190,20 +241,25 @@ impl ParallelNativeBackend {
         params: TwoStageParams,
         threads: usize,
     ) -> Self {
-        Self::with_pipeline(database, d, k, params, threads, true, 0)
+        Self::with_options(
+            database,
+            d,
+            k,
+            params,
+            EngineOptions {
+                threads,
+                ..EngineOptions::default()
+            },
+        )
     }
 
-    /// Full-control constructor: `fused` selects the pipeline (see the
-    /// type docs), `tile_rows` is the fused engine's stream-rows-per-tile
-    /// knob (0 = auto, ignored when unfused).
-    pub fn with_pipeline(
+    /// Full-control constructor (see [`EngineOptions`]).
+    pub fn with_options(
         database: Vec<f32>,
         d: usize,
         k: usize,
         params: TwoStageParams,
-        threads: usize,
-        fused: bool,
-        tile_rows: usize,
+        opts: EngineOptions,
     ) -> Self {
         assert!(d > 0 && !database.is_empty());
         assert_eq!(database.len() % d, 0);
@@ -211,17 +267,18 @@ impl ParallelNativeBackend {
         assert_eq!(params.n, n, "two-stage N must equal shard size");
         assert_eq!(params.k, k);
         let database = Arc::new(database);
-        let engine = if fused {
-            ParallelEngine::Fused(FusedParallelMips::new(
+        let engine = if opts.fused {
+            ParallelEngine::Fused(FusedParallelMips::with_kernel(
                 database.clone(),
                 d,
                 params,
-                threads,
-                tile_rows,
+                opts.threads,
+                opts.tile_rows,
+                opts.kernel,
             ))
         } else {
             ParallelEngine::Unfused {
-                operator: ParallelTwoStageTopK::new(params, threads),
+                operator: ParallelTwoStageTopK::with_kernel(params, opts.threads, opts.kernel),
                 scores: Vec::new(),
             }
         };
@@ -230,6 +287,7 @@ impl ParallelNativeBackend {
             d,
             n,
             k,
+            kernel: opts.kernel,
             engine,
         }
     }
@@ -246,6 +304,11 @@ impl ParallelNativeBackend {
     pub fn is_fused(&self) -> bool {
         matches!(self.engine, ParallelEngine::Fused(_))
     }
+
+    /// The resolved dispatch kernel this backend's hot loops run.
+    pub fn kernel(&self) -> SimdKernel {
+        self.kernel
+    }
 }
 
 impl ShardBackend for ParallelNativeBackend {
@@ -253,6 +316,7 @@ impl ShardBackend for ParallelNativeBackend {
         anyhow::ensure!(queries.len() == nq * self.d, "bad query buffer");
         let d = self.d;
         let n = self.n;
+        let kernel = self.kernel;
         match &mut self.engine {
             ParallelEngine::Fused(engine) => Ok(engine.run_batch(queries, nq)),
             ParallelEngine::Unfused { operator, scores } => {
@@ -260,7 +324,7 @@ impl ShardBackend for ParallelNativeBackend {
                 for qi in 0..nq {
                     let q = &queries[qi * d..(qi + 1) * d];
                     let row = &mut scores[qi * n..(qi + 1) * n];
-                    score_tile(&self.database, d, q, row);
+                    kernel.score_tile(&self.database, d, q, row);
                 }
                 let rows: Vec<&[f32]> = scores.chunks(n).take(nq).collect();
                 Ok(operator.run_batch(&rows))
@@ -525,19 +589,70 @@ mod tests {
         let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
         let want = sequential.score_topk(&queries, nq).unwrap();
         for threads in [1usize, 3] {
-            let mut parallel = ParallelNativeBackend::with_pipeline(
+            let mut parallel = ParallelNativeBackend::with_options(
                 db.clone(),
                 d,
                 k,
                 params,
-                threads,
-                false,
-                0,
+                EngineOptions {
+                    threads,
+                    fused: false,
+                    ..EngineOptions::default()
+                },
             );
             assert!(!parallel.is_fused());
             assert_eq!(parallel.stage1_params(), Some((128, 2)));
             let got = parallel.score_topk(&queries, nq).unwrap();
             assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn explicit_kernels_match_the_scalar_oracle_end_to_end() {
+        // The serving-layer view of the bit-identity contract: a backend
+        // built with any available dispatch kernel returns exactly what the
+        // scalar sequential oracle returns, fused and unfused alike.
+        use crate::topk::SimdKernel;
+        let d = 13; // off the 8-wide accumulator width
+        let n = 1000;
+        let k = 24;
+        let mut rng = Rng::new(73);
+        let db = make_db(&mut rng, n, d);
+        let params = TwoStageParams::new(n, k, 50, 2);
+        let mut oracle = NativeBackend::new(db.clone(), d, k, Some(params));
+        let nq = 3;
+        let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+        let want = oracle.score_topk(&queries, nq).unwrap();
+        for kernel in SimdKernel::available() {
+            // Sequential backend with the kernel.
+            let mut native = NativeBackend::with_kernel(db.clone(), d, k, Some(params), kernel);
+            assert_eq!(
+                native.score_topk(&queries, nq).unwrap(),
+                want,
+                "sequential kernel {}",
+                kernel.name()
+            );
+            for fused in [true, false] {
+                let mut be = ParallelNativeBackend::with_options(
+                    db.clone(),
+                    d,
+                    k,
+                    params,
+                    EngineOptions {
+                        threads: 3,
+                        fused,
+                        tile_rows: 0,
+                        kernel,
+                    },
+                );
+                assert_eq!(be.kernel(), kernel);
+                assert_eq!(
+                    be.score_topk(&queries, nq).unwrap(),
+                    want,
+                    "fused={fused} kernel {}",
+                    kernel.name()
+                );
+            }
         }
     }
 
@@ -568,6 +683,7 @@ mod tests {
         // d off the accumulator width, explicit tile sizes that leave
         // ragged tails, and ragged nq — all bit-identical to the
         // sequential NativeBackend.
+        let kernels = crate::topk::SimdKernel::available();
         property("parallel backends == sequential backend", 12, |g| {
             let b = *g.choose(&[32usize, 50, 64]);
             let rows = g.usize_in(4..=10);
@@ -578,39 +694,48 @@ mod tests {
             let threads = *g.choose(&[1usize, 2, 4]);
             let tile_rows = g.usize_in(0..=rows + 1);
             let nq = g.usize_in(1..=5);
+            let kernel = *g.choose(&kernels);
             let params = TwoStageParams::new(n, k, b, kp);
             let db: Vec<f32> = (0..n * d).map(|_| g.rng().next_gaussian() as f32).collect();
             let queries: Vec<f32> =
                 (0..nq * d).map(|_| g.rng().next_gaussian() as f32).collect();
             let mut oracle = NativeBackend::new(db.clone(), d, k, Some(params));
             let want = oracle.score_topk(&queries, nq).unwrap();
-            let mut fused = ParallelNativeBackend::with_pipeline(
+            let mut fused = ParallelNativeBackend::with_options(
                 db.clone(),
                 d,
                 k,
                 params,
-                threads,
-                true,
-                tile_rows,
+                EngineOptions {
+                    threads,
+                    fused: true,
+                    tile_rows,
+                    kernel,
+                },
             );
             assert_eq!(
                 fused.score_topk(&queries, nq).unwrap(),
                 want,
-                "fused (n={n},k={k},b={b},kp={kp},d={d},t={threads},tile={tile_rows},nq={nq})"
+                "fused (n={n},k={k},b={b},kp={kp},d={d},t={threads},tile={tile_rows},nq={nq},kernel={})",
+                kernel.name()
             );
-            let mut unfused = ParallelNativeBackend::with_pipeline(
+            let mut unfused = ParallelNativeBackend::with_options(
                 db.clone(),
                 d,
                 k,
                 params,
-                threads,
-                false,
-                0,
+                EngineOptions {
+                    threads,
+                    fused: false,
+                    tile_rows: 0,
+                    kernel,
+                },
             );
             assert_eq!(
                 unfused.score_topk(&queries, nq).unwrap(),
                 want,
-                "unfused (n={n},k={k},b={b},kp={kp},d={d},t={threads},nq={nq})"
+                "unfused (n={n},k={k},b={b},kp={kp},d={d},t={threads},nq={nq},kernel={})",
+                kernel.name()
             );
         });
     }

@@ -1,5 +1,6 @@
 //! Service metrics: request latency, batch sizes, throughput, shard
-//! failures, and the serve plan the deployment is running under.
+//! failures, the serve plan the deployment is running under, and the SIMD
+//! dispatch kernel its native shards resolved at startup.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -30,6 +31,10 @@ struct Inner {
     failed_requests: u64,
     /// The `(B, K′)` plan this service was started with, if any.
     plan: Option<ServePlan>,
+    /// The SIMD dispatch kernel the native shards resolved at startup
+    /// (`"scalar"` / `"avx2"` / `"neon"`); `None` for backends that run no
+    /// native hot loop (PJRT).
+    kernel: Option<&'static str>,
 }
 
 impl Default for ServiceMetrics {
@@ -51,6 +56,7 @@ impl ServiceMetrics {
                 degraded_requests: 0,
                 failed_requests: 0,
                 plan: None,
+                kernel: None,
             }),
             started: Instant::now(),
         }
@@ -91,6 +97,16 @@ impl ServiceMetrics {
 
     pub fn plan(&self) -> Option<ServePlan> {
         self.inner.lock().unwrap().plan
+    }
+
+    /// Record the resolved SIMD dispatch kernel the native shards run
+    /// (shown in `summary()` and the net-protocol `stats` reply).
+    pub fn set_kernel(&self, name: &'static str) {
+        self.inner.lock().unwrap().kernel = Some(name);
+    }
+
+    pub fn kernel(&self) -> Option<&'static str> {
+        self.inner.lock().unwrap().kernel
     }
 
     pub fn requests(&self) -> u64 {
@@ -147,6 +163,9 @@ impl ServiceMetrics {
             m.degraded_requests,
             m.failed_requests,
         );
+        if let Some(k) = m.kernel {
+            s.push_str(&format!(" kernel={k}"));
+        }
         if let Some(p) = &m.plan {
             s.push_str(&format!(
                 " plan(K'={} B={} predicted_recall={:.4} source={})",
@@ -205,5 +224,15 @@ mod tests {
         assert!(s.contains("shard_failures=2"), "{s}");
         assert!(s.contains("degraded=1"), "{s}");
         assert!(s.contains("K'=2 B=128"), "{s}");
+    }
+
+    #[test]
+    fn kernel_surfaces_in_summary_once_set() {
+        let m = ServiceMetrics::new();
+        assert!(m.kernel().is_none());
+        assert!(!m.summary().contains("kernel="));
+        m.set_kernel("avx2");
+        assert_eq!(m.kernel(), Some("avx2"));
+        assert!(m.summary().contains("kernel=avx2"), "{}", m.summary());
     }
 }

@@ -39,7 +39,8 @@ pub mod service;
 pub mod shard;
 
 pub use backend::{
-    BackendFactory, NativeBackend, ParallelNativeBackend, PjrtBackend, ShardBackend,
+    BackendFactory, EngineOptions, NativeBackend, ParallelNativeBackend, PjrtBackend,
+    ShardBackend,
 };
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use merge::merge_shard_results;

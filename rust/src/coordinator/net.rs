@@ -11,6 +11,7 @@
 //! -> {"cmd": "stats"}
 //! <- {"stats": "requests=... p50=...", "shard_failures": 0,
 //!     "degraded_requests": 0, "failed_requests": 0,
+//!     "kernel": "avx2",                     (resolved SIMD dispatch, if native)
 //!     "plan": {"buckets": 512, "local_k": 4, ...}}   (plan if one was made)
 //! -> {"cmd": "shutdown"}       (stops the listener)
 //! ```
@@ -172,6 +173,9 @@ fn handle_line(
                     ("degraded_requests", Json::num(m.degraded_requests() as f64)),
                     ("failed_requests", Json::num(m.failed_requests() as f64)),
                 ];
+                if let Some(k) = m.kernel() {
+                    fields.push(("kernel", Json::str(k)));
+                }
                 if let Some(p) = m.plan() {
                     fields.push((
                         "plan",
@@ -322,6 +326,9 @@ mod tests {
         assert_eq!(stats.get("failed_requests").unwrap().as_i64(), Some(0));
         // tiny_service starts without a plan: the field is absent, not null.
         assert!(stats.get("plan").is_none());
+        // No kernel recorded either (the launcher records one for native
+        // backends): absent, not null.
+        assert!(stats.get("kernel").is_none());
 
         line.clear();
         w.write_all(b"not json\n").unwrap();
@@ -362,6 +369,9 @@ mod tests {
             )
             .unwrap(),
         );
+        // The launcher records the resolved dispatch kernel for native
+        // deployments; emulate that so the stats reply carries it.
+        svc.metrics.set_kernel(crate::topk::SimdKernel::auto().name());
         let server = NetServer::start("127.0.0.1:0", svc).unwrap();
         let conn = TcpStream::connect(server.addr).unwrap();
         let mut w = conn.try_clone().unwrap();
@@ -384,6 +394,10 @@ mod tests {
         let stats = Json::parse(&line).unwrap();
         assert_eq!(stats.get("failed_requests").unwrap().as_i64(), Some(1));
         assert!(stats.get("shard_failures").unwrap().as_i64().unwrap() >= 1);
+        assert_eq!(
+            stats.get("kernel").unwrap().as_str(),
+            Some(crate::topk::SimdKernel::auto().name())
+        );
         let p = stats.get("plan").unwrap();
         assert_eq!(p.get("buckets").unwrap().as_i64(), Some(128));
         assert_eq!(p.get("local_k").unwrap().as_i64(), Some(1));

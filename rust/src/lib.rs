@@ -15,7 +15,10 @@
 //!   fused score+select pipeline in [`topk::fused`] that moves the scoring
 //!   matmul into the same pool (the CPU analogue of the paper's fused MIPS
 //!   kernel), both built on the shared [`topk::kernel`] dot-product
-//!   micro-kernel — and the recall-targeted serve planner in [`plan`] that
+//!   micro-kernel with its hot loops runtime-dispatched through
+//!   [`topk::simd`] (AVX2 / NEON / scalar, selected once at pool spawn,
+//!   bit-identical across implementations) — and the recall-targeted serve
+//!   planner in [`plan`] that
 //!   turns a global recall target into per-shard `(B, K′)` by composing
 //!   Theorem-1 recall exactly across shards.
 

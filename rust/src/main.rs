@@ -19,8 +19,8 @@ use std::path::Path;
 
 use fastk::config::{BackendKind, LauncherConfig};
 use fastk::coordinator::{
-    BackendFactory, MipsService, NativeBackend, ParallelNativeBackend, PjrtBackend,
-    ServiceConfig, ShardBackend,
+    BackendFactory, EngineOptions, MipsService, NativeBackend, ParallelNativeBackend,
+    PjrtBackend, ServiceConfig, ShardBackend,
 };
 use fastk::hw::{Accelerator, AcceleratorId};
 use fastk::params::ParamCache;
@@ -28,7 +28,7 @@ use fastk::perfmodel::{self, predict_table2_row, vpu_probe};
 use fastk::plan::{plan_fixed, PlanSource, ServePlan};
 use fastk::recall::{self, RecallConfig};
 use fastk::runtime::{Executor, HostTensor, Manifest};
-use fastk::topk::{self, TwoStageParams};
+use fastk::topk::{self, SimdKernel, TwoStageParams};
 use fastk::util::cli::Args;
 use fastk::util::stats::fmt_ns;
 use fastk::util::Rng;
@@ -365,20 +365,34 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     } else {
         cfg.threads
     };
+    // Resolve the SIMD dispatch once, up front: an explicitly requested
+    // kernel the host cannot run is a launch error, never a silent
+    // fallback. The PJRT backend runs no native hot loop, so it skips
+    // resolution entirely.
+    let kernel = match cfg.backend {
+        BackendKind::Pjrt => None,
+        _ => Some(
+            SimdKernel::resolve(cfg.kernel).map_err(|e| anyhow::anyhow!("config `kernel`: {e}"))?,
+        ),
+    };
     println!(
         "building database: {} shards x {} vectors x {}-d ({} backend)",
         cfg.shards,
         cfg.shard_size,
         cfg.d,
         match cfg.backend {
-            BackendKind::Native => "native".to_string(),
+            BackendKind::Native => format!(
+                "native, {} kernel",
+                kernel.expect("native backends resolve a kernel").name()
+            ),
             BackendKind::NativeParallel => format!(
-                "native-parallel, {threads} threads/shard, {}",
+                "native-parallel, {threads} threads/shard, {}, {} kernel",
                 if cfg.fused {
                     "fused score+select"
                 } else {
                     "unfused"
-                }
+                },
+                kernel.expect("native backends resolve a kernel").name()
             ),
             BackendKind::Pjrt => "pjrt".to_string(),
         }
@@ -433,17 +447,23 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         match cfg.backend {
             BackendKind::Native => {
                 let params = params.expect("native backends always have a plan");
+                let kernel = kernel.expect("native backends resolve a kernel");
                 factories.push(Box::new(move || {
-                    Ok(Box::new(NativeBackend::new(chunk, d, k, Some(params)))
+                    Ok(Box::new(NativeBackend::with_kernel(chunk, d, k, Some(params), kernel))
                         as Box<dyn ShardBackend>)
                 }))
             }
             BackendKind::NativeParallel => {
                 let params = params.expect("native backends always have a plan");
-                let (fused, tile_rows) = (cfg.fused, cfg.tile_rows);
+                let opts = EngineOptions {
+                    threads,
+                    fused: cfg.fused,
+                    tile_rows: cfg.tile_rows,
+                    kernel: kernel.expect("native backends resolve a kernel"),
+                };
                 factories.push(Box::new(move || {
-                    Ok(Box::new(ParallelNativeBackend::with_pipeline(
-                        chunk, d, k, params, threads, fused, tile_rows,
+                    Ok(Box::new(ParallelNativeBackend::with_options(
+                        chunk, d, k, params, opts,
                     )) as Box<dyn ShardBackend>)
                 }))
             }
@@ -470,6 +490,11 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         factories,
         offsets,
     )?;
+    // Report the resolved dispatch so `stats` / the shutdown summary show
+    // what the hot loops actually ran.
+    if let Some(k) = kernel {
+        svc.metrics.set_kernel(k.name());
+    }
 
     // Open-loop load: submit all queries, then collect.
     println!("serving {num_queries} queries ...");
@@ -486,10 +511,32 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         ));
     }
     let mut responses = Vec::with_capacity(num_queries);
+    let mut failed_queries = 0usize;
     for (q, rx) in pending {
-        responses.push((q, rx.recv()??));
+        // An Err *reply* means no shard could answer that query's batch:
+        // count it and keep collecting — the load test exists to observe
+        // degradation, not to abort (and lose the summary, plan check and
+        // metrics lines) on the first failed batch. An error on `recv`
+        // itself still aborts: the service is gone.
+        match rx.recv()? {
+            Ok(resp) => responses.push((q, resp)),
+            Err(e) => {
+                if failed_queries == 0 {
+                    eprintln!("query failed (continuing): {e:#}");
+                }
+                failed_queries += 1;
+            }
+        }
     }
     let wall = t0.elapsed();
+    if failed_queries > 0 {
+        eprintln!("warning: {failed_queries}/{num_queries} queries got error replies");
+    }
+    anyhow::ensure!(
+        !responses.is_empty(),
+        "every query failed ({failed_queries}/{num_queries}); metrics: {}",
+        svc.metrics.summary()
+    );
 
     // Recall vs the exact oracle on a sample of queries.
     let sample = responses.len().min(32);
@@ -516,7 +563,7 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     println!(
         "done in {:.2}s: throughput {:.1} qps, measured recall@{} = {:.4} ({} queries sampled)",
         wall.as_secs_f64(),
-        num_queries as f64 / wall.as_secs_f64(),
+        responses.len() as f64 / wall.as_secs_f64(),
         cfg.k,
         measured,
         sample

@@ -27,7 +27,11 @@
 //! same insert + single-bubble-pass — so the fused engine returns
 //! candidates bit-identical to scoring with `score_tile` and running the
 //! sequential [`TwoStageTopK`](super::TwoStageTopK), at any thread count,
-//! lane split, or tile size.
+//! lane split, or tile size. Both hot loops dispatch through a
+//! [`SimdKernel`](super::simd::SimdKernel) resolved once at pool spawn
+//! (AVX2 / NEON / scalar); every implementation preserves the scalar
+//! reduction order, so the kernel choice cannot change results either
+//! (see [`simd`](super::simd)).
 //!
 //! Tiling: queries in the batch re-read each database tile while it is
 //! cache-resident (tile-major outer loop, queries inner), so a batch of
@@ -37,8 +41,8 @@
 
 use std::sync::Arc;
 
-use super::kernel::score_tile;
 use super::parallel::{merge_stage2, state_candidates, LanePool, SliceHandle};
+use super::simd::SimdKernel;
 use super::twostage::{Stage1State, TwoStageParams};
 use super::Candidate;
 
@@ -71,6 +75,8 @@ struct FusedLaneState {
     tile_rows: usize,
     local_k: usize,
     filter_padding: bool,
+    /// Dispatched scoring + tail-compare kernel (resolved at pool spawn).
+    kernel: SimdKernel,
     /// One `[K′][lanes]` state per query in the batch, grown on demand and
     /// reused across batches.
     states: Vec<Stage1State>,
@@ -101,8 +107,8 @@ impl FusedLaneState {
                 for row in tile_start..tile_end {
                     let base = row * b + lane_lo;
                     let db_rows = &self.database[base * d..(base + lanes) * d];
-                    score_tile(db_rows, d, q, &mut self.scores);
-                    state.ingest_tile(base as u32, 0, &self.scores);
+                    self.kernel.score_tile(db_rows, d, q, &mut self.scores);
+                    state.ingest_tile_k(self.kernel, base as u32, 0, &self.scores);
                 }
             }
             tile_start = tile_end;
@@ -126,6 +132,7 @@ impl FusedLaneState {
 pub struct FusedParallelMips {
     pub params: TwoStageParams,
     d: usize,
+    kernel: SimdKernel,
     pool: LanePool<FusedJob>,
     cand_scratch: Vec<Candidate>,
 }
@@ -135,13 +142,29 @@ impl FusedParallelMips {
     /// `n = params.n` vectors. `threads` sizes the pool (clamped to
     /// `[1, B]`; non-divisible lane splits balance to within one lane).
     /// `tile_rows = 0` auto-sizes tiles (~256 KiB of database rows per
-    /// tile); any other value is the stream-row count per tile.
+    /// tile); any other value is the stream-row count per tile. Uses the
+    /// best SIMD kernel the host supports (results are bit-identical
+    /// whichever is picked).
     pub fn new(
         database: Arc<Vec<f32>>,
         d: usize,
         params: TwoStageParams,
         threads: usize,
         tile_rows: usize,
+    ) -> FusedParallelMips {
+        Self::with_kernel(database, d, params, threads, tile_rows, SimdKernel::auto())
+    }
+
+    /// [`new`](Self::new) with an explicitly resolved dispatch kernel
+    /// (the `"kernel"` serve knob; benches and property tests use this to
+    /// pin each implementation).
+    pub fn with_kernel(
+        database: Arc<Vec<f32>>,
+        d: usize,
+        params: TwoStageParams,
+        threads: usize,
+        tile_rows: usize,
+        kernel: SimdKernel,
     ) -> FusedParallelMips {
         assert!(d > 0, "d must be positive");
         assert_eq!(
@@ -173,6 +196,7 @@ impl FusedParallelMips {
                     tile_rows: tr,
                     local_k: params.local_k,
                     filter_padding,
+                    kernel,
                     states: Vec::new(),
                     scores: vec![0.0; lanes],
                 }
@@ -191,6 +215,7 @@ impl FusedParallelMips {
         FusedParallelMips {
             params,
             d,
+            kernel,
             pool,
             cand_scratch: Vec::with_capacity(params.num_candidates()),
         }
@@ -199,6 +224,11 @@ impl FusedParallelMips {
     /// Number of pool workers (may be lower than requested when B is small).
     pub fn threads(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// The dispatch kernel this engine's workers run (resolved at spawn).
+    pub fn kernel(&self) -> SimdKernel {
+        self.kernel
     }
 
     /// Vector dimensionality the engine scores against.
@@ -361,7 +391,49 @@ mod tests {
     }
 
     #[test]
+    fn every_kernel_matches_the_scalar_oracle_at_every_thread_count() {
+        // The tentpole acceptance property at the engine level: each
+        // available dispatch kernel (scalar always; AVX2/NEON where the
+        // host supports them) produces candidates bit-identical to the
+        // scalar oracle — same candidates, same scores — across
+        // d % 8 != 0 tails, ragged tiles, and threads {1, 2, 4}.
+        use crate::topk::simd::SimdKernel;
+        let mut rng = Rng::new(71);
+        let (n, k, b, kp) = (600usize, 16usize, 50usize, 2usize);
+        for &d in &[13usize, 24] {
+            let params = TwoStageParams::new(n, k, b, kp);
+            let db = make_db(&mut rng, n, d);
+            let nq = 3;
+            let queries = make_db(&mut rng, nq, d);
+            let want = oracle_batch(&db, d, params, &queries, nq);
+            let shared = Arc::new(db);
+            for kernel in SimdKernel::available() {
+                for threads in [1usize, 2, 4] {
+                    for tile_rows in [0usize, 5] {
+                        let mut fused = FusedParallelMips::with_kernel(
+                            shared.clone(),
+                            d,
+                            params,
+                            threads,
+                            tile_rows,
+                            kernel,
+                        );
+                        assert_eq!(fused.kernel(), kernel);
+                        assert_eq!(
+                            fused.run_batch(&queries, nq),
+                            want,
+                            "kernel {} d={d} threads={threads} tile_rows={tile_rows}",
+                            kernel.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn prop_fused_equals_unfused_oracle() {
+        let kernels = crate::topk::simd::SimdKernel::available();
         property("fused == score_tile + sequential two-stage", 25, |g| {
             let b = *g.choose(&[16usize, 50, 96]);
             let rows = g.usize_in(2..=12);
@@ -372,17 +444,25 @@ mod tests {
             let threads = g.usize_in(1..=5);
             let tile_rows = g.usize_in(0..=rows + 2);
             let nq = g.usize_in(1..=4);
+            let kernel = *g.choose(&kernels);
             let params = TwoStageParams::new(n, k, b, kp);
             let db: Vec<f32> = (0..n * d).map(|_| g.rng().next_gaussian() as f32).collect();
             let queries: Vec<f32> =
                 (0..nq * d).map(|_| g.rng().next_gaussian() as f32).collect();
             let want = oracle_batch(&db, d, params, &queries, nq);
-            let mut fused =
-                FusedParallelMips::new(Arc::new(db), d, params, threads, tile_rows);
+            let mut fused = FusedParallelMips::with_kernel(
+                Arc::new(db),
+                d,
+                params,
+                threads,
+                tile_rows,
+                kernel,
+            );
             assert_eq!(
                 fused.run_batch(&queries, nq),
                 want,
-                "(n={n},k={k},b={b},kp={kp},d={d},threads={threads},tile={tile_rows},nq={nq})"
+                "(n={n},k={k},b={b},kp={kp},d={d},threads={threads},tile={tile_rows},nq={nq},kernel={})",
+                kernel.name()
             );
         });
     }

@@ -13,6 +13,12 @@
 //! every dot product through this one routine, so a database row's score is
 //! bit-identical no matter which worker computed it or how the rows were
 //! tiled — and therefore the candidate lists are too.
+//!
+//! This function is also the **scalar reference** of the runtime-dispatched
+//! SIMD layer: [`simd::SimdKernel`](super::simd::SimdKernel) provides AVX2
+//! and NEON implementations that reproduce this exact reduction order (and
+//! therefore these exact bits), verified by property tests in
+//! [`simd`](super::simd).
 
 /// Split-accumulator count (and depth unroll) of [`score_tile`]. Public so
 /// tests can deliberately exercise the `d % ACC_LANES != 0` tail.

@@ -17,11 +17,13 @@ pub mod exact;
 pub mod fused;
 pub mod kernel;
 pub mod parallel;
+pub mod simd;
 pub mod streaming;
 pub mod twostage;
 
 pub use fused::FusedParallelMips;
 pub use parallel::ParallelTwoStageTopK;
+pub use simd::{KernelKind, SimdKernel};
 pub use streaming::StreamingTopK;
 pub use twostage::{TwoStageParams, TwoStageTopK};
 

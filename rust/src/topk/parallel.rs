@@ -51,6 +51,7 @@ use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
 
 use super::exact;
+use super::simd::SimdKernel;
 use super::twostage::{Stage1State, TwoStageParams};
 use super::Candidate;
 
@@ -262,10 +263,17 @@ struct LaneState {
     /// Input length N.
     n: usize,
     local_k: usize,
+    /// Dispatched tail-compare kernel (resolved at pool spawn).
+    kernel: SimdKernel,
 }
 
 impl LaneState {
-    fn new(params: &TwoStageParams, lane_lo: usize, lane_hi: usize) -> LaneState {
+    fn new(
+        params: &TwoStageParams,
+        lane_lo: usize,
+        lane_hi: usize,
+        kernel: SimdKernel,
+    ) -> LaneState {
         assert!(lane_lo < lane_hi && lane_hi <= params.buckets);
         LaneState {
             state: Stage1State::with_dims(lane_hi - lane_lo, params.local_k),
@@ -274,6 +282,7 @@ impl LaneState {
             buckets: params.buckets,
             n: params.n,
             local_k: params.local_k,
+            kernel,
         }
     }
 
@@ -292,8 +301,12 @@ impl LaneState {
         if self.local_k == 1 {
             for row in 0..rows {
                 let row_base = row * self.buckets + self.lane_lo;
-                self.state
-                    .ingest_tile(row_base as u32, 0, &values[row_base..row_base + self.lanes]);
+                self.state.ingest_tile_k(
+                    self.kernel,
+                    row_base as u32,
+                    0,
+                    &values[row_base..row_base + self.lanes],
+                );
             }
             return;
         }
@@ -305,7 +318,8 @@ impl LaneState {
             let end = (start + lane_block).min(self.lanes);
             for row in 0..rows {
                 let row_base = row * self.buckets + self.lane_lo;
-                self.state.ingest_tile(
+                self.state.ingest_tile_k(
+                    self.kernel,
                     (row_base + start) as u32,
                     start,
                     &values[row_base + start..row_base + end],
@@ -331,8 +345,19 @@ pub struct ParallelTwoStageTopK {
 impl ParallelTwoStageTopK {
     /// Spawn a pool of `threads` Stage-1 workers (clamped to `[1, B]`),
     /// each owning a contiguous lane range. Non-divisible `B / threads`
-    /// splits are balanced to within one lane.
+    /// splits are balanced to within one lane. Uses the best SIMD kernel
+    /// the host supports for the tail-compare (bit-identical to scalar —
+    /// see [`simd`](super::simd)).
     pub fn new(params: TwoStageParams, threads: usize) -> ParallelTwoStageTopK {
+        Self::with_kernel(params, threads, SimdKernel::auto())
+    }
+
+    /// [`new`](Self::new) with an explicitly resolved dispatch kernel.
+    pub fn with_kernel(
+        params: TwoStageParams,
+        threads: usize,
+        kernel: SimdKernel,
+    ) -> ParallelTwoStageTopK {
         let t = threads.clamp(1, params.buckets);
         let filter_padding = params.local_k > params.bucket_size();
         let states: Vec<LaneState> = (0..t)
@@ -341,6 +366,7 @@ impl ParallelTwoStageTopK {
                     &params,
                     w * params.buckets / t,
                     (w + 1) * params.buckets / t,
+                    kernel,
                 )
             })
             .collect();
@@ -503,6 +529,10 @@ mod tests {
 
     #[test]
     fn prop_parallel_equals_sequential() {
+        // Kernel axis included: whichever dispatch kernel a worker pool
+        // runs (scalar always; AVX2/NEON where available), the engine must
+        // match the scalar sequential oracle bit-for-bit.
+        let kernels = crate::topk::simd::SimdKernel::available();
         property("parallel == sequential", 30, |g| {
             let b = *g.choose(&[16usize, 50, 128, 192]);
             let rows = g.usize_in(2..=16);
@@ -510,14 +540,16 @@ mod tests {
             let kp = g.usize_in(1..=4.min(rows + 2));
             let k = g.usize_in(1..=(b * kp).min(n));
             let threads = g.usize_in(1..=5);
+            let kernel = *g.choose(&kernels);
             let params = TwoStageParams::new(n, k, b, kp);
             let values: Vec<f32> = (0..n).map(|_| g.rng().next_f32()).collect();
             let mut sequential = TwoStageTopK::new(params);
-            let mut parallel = ParallelTwoStageTopK::new(params, threads);
+            let mut parallel = ParallelTwoStageTopK::with_kernel(params, threads, kernel);
             assert_eq!(
                 parallel.run(&values),
                 sequential.run(&values),
-                "({n},{k},{b},{kp}) threads={threads}"
+                "({n},{k},{b},{kp}) threads={threads} kernel={}",
+                kernel.name()
             );
         });
     }

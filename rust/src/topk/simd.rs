@@ -1,0 +1,614 @@
+//! Runtime-dispatched SIMD backends for the two Stage-1 hot loops.
+//!
+//! The paper's order-of-magnitude wins come from keeping both stages on the
+//! accelerator's dense-compute fast path; on CPU the analogous lever is
+//! explicit vectorization of (a) the dot-product micro-kernel
+//! ([`kernel::score_tile`]) and (b) the branchless Stage-1 tail-compare that
+//! [`Stage1State::ingest_tile`](super::twostage::Stage1State::ingest_tile)
+//! and `TwoStageTopK`'s fixed-K′ specializations run over the `[K′][B]`
+//! lane layout. This module provides both loops in three implementations —
+//! AVX2 (x86_64), NEON (aarch64), and the portable scalar reference — behind
+//! one [`SimdKernel`] handle that is resolved **once at pool spawn** (the
+//! `"kernel"` serve-config knob: `"auto"`, `"scalar"`, `"avx2"`, `"neon"`)
+//! and then dispatched branch-free-ly on the hot path (a `match` on a
+//! two-variant enum the branch predictor eats for free).
+//!
+//! ## Bit-identity contract
+//!
+//! Every implementation produces **bit-identical** results to the scalar
+//! reference — same scores, same candidates — so `auto` dispatch can never
+//! change what a deployment returns, and the fused / unfused / parallel
+//! engines stay mutually bit-identical at any thread count, lane split, or
+//! tile size no matter which kernel each worker runs. Two rules make this
+//! hold:
+//!
+//! 1. **The reduction order is the scalar kernel's, exactly.** The scalar
+//!    [`score_tile`](kernel::score_tile) keeps [`ACC_LANES`] = 8 split
+//!    accumulators (accumulator `l` sums depths `i ≡ l (mod 8)`), combines
+//!    them `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`, and adds the
+//!    `d % 8` tail in ascending depth. The AVX2 path holds the 8
+//!    accumulators in one 8-lane register, the NEON path in two 4-lane
+//!    registers; per lane, both perform *exactly* the scalar sequence of
+//!    f32 multiplies and adds.
+//! 2. **No FMA contraction.** A fused multiply-add rounds once where the
+//!    scalar reference's `mul` + `add` round twice, so the vector paths use
+//!    separate multiply and add instructions even where FMA is available.
+//!    The SIMD win here is 8-wide execution of a portable binary (the
+//!    baseline x86-64 target autovectorizes the scalar kernel at best
+//!    4-wide SSE), not fused rounding.
+//!
+//! The tail-compare (`x >= t`) is per-lane independent, so any vector
+//! width is trivially order-identical; NaN handling matches the scalar
+//! operator (`>=` on a NaN operand is false — ordered, quiet compares on
+//! both AVX2 and NEON), which the non-finite-score tests in
+//! [`twostage`](super::twostage) pin down.
+//!
+//! Detection: `auto` resolves via `is_x86_feature_detected!("avx2")` /
+//! `is_aarch64_feature_detected!("neon")`; explicitly requesting a kernel
+//! the host cannot run is a configuration error surfaced at startup, not a
+//! crash on the hot path. The scalar kernel is always available and remains
+//! the reference implementation every test compares against.
+
+use super::kernel::{self, ACC_LANES};
+
+// The AVX2 path packs the split accumulators into one 8-lane register and
+// the NEON path into two 4-lane registers; both layouts assume the scalar
+// kernel's accumulator count.
+const _: () = assert!(ACC_LANES == 8, "SIMD paths assume 8 split accumulators");
+
+/// Config-level kernel selection (the serve config's `"kernel"` knob).
+/// [`Auto`](KernelKind::Auto) picks the best available implementation at
+/// resolution time; the rest request one explicitly (and fail resolution if
+/// the host cannot run it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Detect at startup: AVX2 on x86_64, NEON on aarch64, else scalar.
+    Auto,
+    /// The portable reference implementation.
+    Scalar,
+    /// 8-wide x86_64 path (requires AVX2).
+    Avx2,
+    /// 2×4-wide aarch64 path (requires NEON; baseline on aarch64).
+    Neon,
+}
+
+impl KernelKind {
+    /// Parse a config string (`"auto" | "scalar" | "avx2" | "neon"`).
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "auto" => Some(KernelKind::Auto),
+            "scalar" => Some(KernelKind::Scalar),
+            "avx2" => Some(KernelKind::Avx2),
+            "neon" => Some(KernelKind::Neon),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+}
+
+/// The resolved implementation. Variants exist only on architectures that
+/// can construct them, so dispatch matches are exhaustive without dead arms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Resolved {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// A resolved, dispatchable kernel handle (`Copy`, two words): resolve once
+/// at engine/pool construction, then call [`score_tile`](Self::score_tile)
+/// and [`ge_mask`](Self::ge_mask) on the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimdKernel {
+    kind: Resolved,
+}
+
+impl SimdKernel {
+    /// The scalar reference kernel (always available).
+    pub fn scalar() -> SimdKernel {
+        SimdKernel {
+            kind: Resolved::Scalar,
+        }
+    }
+
+    /// The best kernel the host supports (what `"kernel": "auto"` resolves
+    /// to): AVX2 on x86_64 with AVX2, NEON on aarch64 with NEON, scalar
+    /// otherwise.
+    pub fn auto() -> SimdKernel {
+        SimdKernel { kind: detect() }
+    }
+
+    /// Resolve a config-level request, failing with a descriptive message
+    /// when the host cannot run the requested kernel (wrong architecture or
+    /// missing CPU feature).
+    pub fn resolve(kind: KernelKind) -> Result<SimdKernel, String> {
+        match kind {
+            KernelKind::Auto => Ok(SimdKernel::auto()),
+            KernelKind::Scalar => Ok(SimdKernel::scalar()),
+            KernelKind::Avx2 => resolve_avx2(),
+            KernelKind::Neon => resolve_neon(),
+        }
+    }
+
+    /// Every kernel this host can run: the scalar reference first, then the
+    /// native SIMD kernel when one is available. Benches and property tests
+    /// iterate this to cover each implementation.
+    pub fn available() -> Vec<SimdKernel> {
+        let mut out = vec![SimdKernel::scalar()];
+        let auto = SimdKernel::auto();
+        if auto != out[0] {
+            out.push(auto);
+        }
+        out
+    }
+
+    /// The resolved implementation's name (`"scalar"`, `"avx2"`, `"neon"`)
+    /// — reported in `ServiceMetrics`, the net `stats` reply, and bench
+    /// entry names.
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            Resolved::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Resolved::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Resolved::Neon => "neon",
+        }
+    }
+
+    /// Whether this handle dispatches to an explicit SIMD implementation
+    /// (false for the scalar reference).
+    pub fn is_simd(&self) -> bool {
+        self.kind != Resolved::Scalar
+    }
+
+    /// Dispatched [`kernel::score_tile`]: score one query against a tile of
+    /// `out.len()` consecutive database vectors, bit-identical to the scalar
+    /// reference (see the module docs for why).
+    #[inline]
+    pub fn score_tile(&self, rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        match self.kind {
+            Resolved::Scalar => kernel::score_tile(rows, d, q, out),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: the Avx2 variant is only constructed after
+            // `is_x86_feature_detected!("avx2")` succeeded.
+            Resolved::Avx2 => unsafe { avx2::score_tile(rows, d, q, out) },
+            #[cfg(target_arch = "aarch64")]
+            // Safety: the Neon variant is only constructed after
+            // `is_aarch64_feature_detected!("neon")` succeeded.
+            Resolved::Neon => unsafe { neon::score_tile(rows, d, q, out) },
+        }
+    }
+
+    /// Dispatched Stage-1 tail-compare: bit `j` of the result is
+    /// `xs[j] >= ts[j]` (false when either operand is NaN, matching the
+    /// scalar operator). `xs` and `ts` must have equal length ≤ 64 — one
+    /// insert-sweep chunk of the `[K′][B]` lane layout.
+    #[inline]
+    pub fn ge_mask(&self, xs: &[f32], ts: &[f32]) -> u64 {
+        debug_assert_eq!(xs.len(), ts.len());
+        debug_assert!(xs.len() <= 64);
+        match self.kind {
+            Resolved::Scalar => ge_mask_scalar(xs, ts),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: as in `score_tile`.
+            Resolved::Avx2 => unsafe { avx2::ge_mask(xs, ts) },
+            #[cfg(target_arch = "aarch64")]
+            // Safety: as in `score_tile`.
+            Resolved::Neon => unsafe { neon::ge_mask(xs, ts) },
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn resolve_avx2() -> Result<SimdKernel, String> {
+    if is_x86_feature_detected!("avx2") {
+        Ok(SimdKernel {
+            kind: Resolved::Avx2,
+        })
+    } else {
+        Err("kernel \"avx2\" requested but the CPU lacks AVX2".to_string())
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn resolve_avx2() -> Result<SimdKernel, String> {
+    Err(format!(
+        "kernel \"avx2\" requested on a non-x86_64 host ({})",
+        std::env::consts::ARCH
+    ))
+}
+
+#[cfg(target_arch = "aarch64")]
+fn resolve_neon() -> Result<SimdKernel, String> {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        Ok(SimdKernel {
+            kind: Resolved::Neon,
+        })
+    } else {
+        Err("kernel \"neon\" requested but the CPU lacks NEON".to_string())
+    }
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn resolve_neon() -> Result<SimdKernel, String> {
+    Err(format!(
+        "kernel \"neon\" requested on a non-aarch64 host ({})",
+        std::env::consts::ARCH
+    ))
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Resolved {
+    if is_x86_feature_detected!("avx2") {
+        Resolved::Avx2
+    } else {
+        Resolved::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> Resolved {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        Resolved::Neon
+    } else {
+        Resolved::Scalar
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> Resolved {
+    Resolved::Scalar
+}
+
+/// Scalar tail-compare: the byte-flag sweep + 8-byte collapse lifted
+/// verbatim from the pre-dispatch `ingest_tile` / `stage1_fixed_block`
+/// loops (a plain compare+store loop LLVM autovectorizes; the direct
+/// `(cond as u64) << j` pack form does not).
+fn ge_mask_scalar(xs: &[f32], ts: &[f32]) -> u64 {
+    let mut flags = [0u8; 64];
+    for ((f, &x), &t) in flags.iter_mut().zip(xs.iter()).zip(ts.iter()) {
+        *f = (x >= t) as u8;
+    }
+    let mut mask: u64 = 0;
+    for (j8, chunk8) in flags.chunks_exact(8).enumerate() {
+        let w = u64::from_le_bytes(chunk8.try_into().unwrap());
+        if w == 0 {
+            continue;
+        }
+        for (j, &byte) in chunk8.iter().enumerate() {
+            mask |= (byte as u64) << (j8 * 8 + j);
+        }
+    }
+    mask
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::ACC_LANES;
+    use std::arch::x86_64::*;
+
+    /// AVX2 [`score_tile`](super::kernel::score_tile): the 8 split
+    /// accumulators live in one 8-lane register; each lane performs exactly
+    /// the scalar reference's multiply-then-add sequence (separate `mulps`
+    /// + `addps`, never FMA — see the module docs), the horizontal combine
+    /// and ascending tail run in the scalar order.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (callers dispatch through
+    /// [`SimdKernel`](super::SimdKernel), which verifies this once).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn score_tile(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(rows.len(), out.len() * d);
+        let aligned = d - d % ACC_LANES;
+        for (j, s) in out.iter_mut().enumerate() {
+            let v = &rows[j * d..(j + 1) * d];
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0;
+            while i < aligned {
+                let qa = _mm256_loadu_ps(q.as_ptr().add(i));
+                let va = _mm256_loadu_ps(v.as_ptr().add(i));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(qa, va));
+                i += ACC_LANES;
+            }
+            let mut a = [0f32; ACC_LANES];
+            _mm256_storeu_ps(a.as_mut_ptr(), acc);
+            let mut sum = ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]));
+            for l in aligned..d {
+                sum += q[l] * v[l];
+            }
+            *s = sum;
+        }
+    }
+
+    /// AVX2 tail-compare: 8-wide ordered-quiet `>=` + `movemask` (NaN in
+    /// either operand compares false, like scalar `>=`).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; `xs.len() == ts.len() <= 64`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ge_mask(xs: &[f32], ts: &[f32]) -> u64 {
+        let n = xs.len();
+        let mut mask: u64 = 0;
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let t = _mm256_loadu_ps(ts.as_ptr().add(i));
+            let m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(x, t));
+            mask |= (m as u32 as u64) << i;
+            i += 8;
+        }
+        while i < n {
+            mask |= ((xs[i] >= ts[i]) as u64) << i;
+            i += 1;
+        }
+        mask
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::ACC_LANES;
+    use std::arch::aarch64::*;
+
+    /// NEON [`score_tile`](super::kernel::score_tile): the 8 split
+    /// accumulators live in two 4-lane registers (lanes 0–3 and 4–7); each
+    /// lane performs exactly the scalar reference's multiply-then-add
+    /// sequence (`fmul` + `fadd`, never the fused `fmla` — see the module
+    /// docs), the horizontal combine and ascending tail run in the scalar
+    /// order.
+    ///
+    /// # Safety
+    /// The CPU must support NEON (callers dispatch through
+    /// [`SimdKernel`](super::SimdKernel), which verifies this once).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn score_tile(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(rows.len(), out.len() * d);
+        let aligned = d - d % ACC_LANES;
+        for (j, s) in out.iter_mut().enumerate() {
+            let v = &rows[j * d..(j + 1) * d];
+            let mut acc_lo = vdupq_n_f32(0.0);
+            let mut acc_hi = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i < aligned {
+                let q_lo = vld1q_f32(q.as_ptr().add(i));
+                let q_hi = vld1q_f32(q.as_ptr().add(i + 4));
+                let v_lo = vld1q_f32(v.as_ptr().add(i));
+                let v_hi = vld1q_f32(v.as_ptr().add(i + 4));
+                acc_lo = vaddq_f32(acc_lo, vmulq_f32(q_lo, v_lo));
+                acc_hi = vaddq_f32(acc_hi, vmulq_f32(q_hi, v_hi));
+                i += ACC_LANES;
+            }
+            let mut a = [0f32; ACC_LANES];
+            vst1q_f32(a.as_mut_ptr(), acc_lo);
+            vst1q_f32(a.as_mut_ptr().add(4), acc_hi);
+            let mut sum = ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]));
+            for l in aligned..d {
+                sum += q[l] * v[l];
+            }
+            *s = sum;
+        }
+    }
+
+    /// NEON tail-compare: 4-wide `vcgeq_f32` (NaN compares false) with the
+    /// per-lane all-ones masks collapsed to bits via a `{1,2,4,8}` AND +
+    /// horizontal add.
+    ///
+    /// # Safety
+    /// The CPU must support NEON; `xs.len() == ts.len() <= 64`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn ge_mask(xs: &[f32], ts: &[f32]) -> u64 {
+        let n = xs.len();
+        let bits: [u32; 4] = [1, 2, 4, 8];
+        let bit = vld1q_u32(bits.as_ptr());
+        let mut mask: u64 = 0;
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vld1q_f32(xs.as_ptr().add(i));
+            let t = vld1q_f32(ts.as_ptr().add(i));
+            let m = vaddvq_u32(vandq_u32(vcgeq_f32(x, t), bit));
+            mask |= (m as u64) << i;
+            i += 4;
+        }
+        while i < n {
+            mask |= ((xs[i] >= ts[i]) as u64) << i;
+            i += 1;
+        }
+        mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Bitwise comparison so NaN outputs (possible with non-finite inputs)
+    /// compare by representation, not by `==`.
+    fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: length");
+        for (j, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: slot {j}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn kind_parse_round_trips() {
+        for kind in [
+            KernelKind::Auto,
+            KernelKind::Scalar,
+            KernelKind::Avx2,
+            KernelKind::Neon,
+        ] {
+            assert_eq!(KernelKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse("sse2"), None);
+    }
+
+    #[test]
+    fn available_starts_with_scalar_and_has_unique_names() {
+        let kernels = SimdKernel::available();
+        assert_eq!(kernels[0], SimdKernel::scalar());
+        assert!(!kernels[0].is_simd());
+        let names: std::collections::HashSet<&str> = kernels.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), kernels.len(), "duplicate kernel names");
+        // `auto` always resolves to something in the available set.
+        assert!(kernels.contains(&SimdKernel::auto()));
+    }
+
+    #[test]
+    fn resolve_honours_requests_and_rejects_foreign_kernels() {
+        assert_eq!(
+            SimdKernel::resolve(KernelKind::Scalar).unwrap(),
+            SimdKernel::scalar()
+        );
+        assert_eq!(
+            SimdKernel::resolve(KernelKind::Auto).unwrap(),
+            SimdKernel::auto()
+        );
+        #[cfg(target_arch = "x86_64")]
+        {
+            let err = SimdKernel::resolve(KernelKind::Neon).unwrap_err();
+            assert!(err.contains("neon"), "{err}");
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            let err = SimdKernel::resolve(KernelKind::Avx2).unwrap_err();
+            assert!(err.contains("avx2"), "{err}");
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            assert!(SimdKernel::resolve(KernelKind::Avx2).is_err());
+            assert!(SimdKernel::resolve(KernelKind::Neon).is_err());
+        }
+    }
+
+    #[test]
+    fn score_tile_bit_identical_to_scalar_across_ragged_depths() {
+        // The headline tentpole property at the kernel level: every
+        // available implementation reproduces the scalar reference
+        // bit-for-bit, including every d % 8 tail length.
+        let mut rng = Rng::new(101);
+        for &d in &[1usize, 2, 3, 5, 7, 8, 9, 13, 16, 31, 64, 100, 257] {
+            let n = 11;
+            let rows: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let mut want = vec![0f32; n];
+            kernel::score_tile(&rows, d, &q, &mut want);
+            for k in SimdKernel::available() {
+                let mut got = vec![1f32; n];
+                k.score_tile(&rows, d, &q, &mut got);
+                assert_bits_eq(&got, &want, &format!("kernel {} d={d}", k.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn score_tile_edge_shapes_shared_by_all_kernels() {
+        // d < 8 (pure-tail kernels), empty tile, and a single row — the
+        // shapes where a vector path is most likely to mis-handle bounds.
+        let mut rng = Rng::new(103);
+        for k in SimdKernel::available() {
+            // Empty tile: no rows, nothing written.
+            let mut out: Vec<f32> = Vec::new();
+            k.score_tile(&[], 3, &[1.0, 2.0, 3.0], &mut out);
+            assert!(out.is_empty(), "kernel {}", k.name());
+            for &d in &[1usize, 2, 4, 6, 7] {
+                // Single row at sub-register depth.
+                let row: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+                let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+                let mut want = vec![0f32; 1];
+                kernel::score_tile(&row, d, &q, &mut want);
+                let mut got = vec![0f32; 1];
+                k.score_tile(&row, d, &q, &mut got);
+                assert_bits_eq(&got, &want, &format!("kernel {} single row d={d}", k.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn score_tile_propagates_non_finite_inputs_identically() {
+        // NaN / ±inf in the data must flow through every kernel exactly as
+        // the scalar reference computes them (bitwise, since NaN != NaN).
+        let d = 13; // exercises both the 8-aligned prefix and the tail
+        let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0];
+        let mut rng = Rng::new(107);
+        let mut rows: Vec<f32> = (0..4 * d).map(|_| rng.next_gaussian() as f32).collect();
+        for (slot, &s) in specials.iter().enumerate() {
+            rows[slot * d + slot] = s; // one special per row, varied depth
+        }
+        let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let mut want = vec![0f32; 4];
+        kernel::score_tile(&rows, d, &q, &mut want);
+        for k in SimdKernel::available() {
+            let mut got = vec![0f32; 4];
+            k.score_tile(&rows, d, &q, &mut got);
+            assert_bits_eq(&got, &want, &format!("kernel {} non-finite", k.name()));
+        }
+    }
+
+    #[test]
+    fn ge_mask_matches_the_definition_at_every_length() {
+        let mut rng = Rng::new(109);
+        for len in 0..=64usize {
+            let xs: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let ts: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let mut want: u64 = 0;
+            for j in 0..len {
+                want |= ((xs[j] >= ts[j]) as u64) << j;
+            }
+            assert_eq!(ge_mask_scalar(&xs, &ts), want, "scalar len={len}");
+            for k in SimdKernel::available() {
+                assert_eq!(k.ge_mask(&xs, &ts), want, "kernel {} len={len}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn ge_mask_treats_non_finite_like_scalar_ge() {
+        // NaN on either side is a miss; -inf >= -inf is a hit; +inf wins.
+        let xs = [
+            f32::NAN,
+            1.0,
+            f32::NEG_INFINITY,
+            f32::INFINITY,
+            0.0,
+            f32::NAN,
+            -0.0,
+            2.0,
+            f32::INFINITY,
+        ];
+        let ts = [
+            1.0,
+            f32::NAN,
+            f32::NEG_INFINITY,
+            f32::INFINITY,
+            -0.0,
+            f32::NAN,
+            0.0,
+            f32::NEG_INFINITY,
+            1.0,
+        ];
+        let mut want: u64 = 0;
+        for j in 0..xs.len() {
+            want |= ((xs[j] >= ts[j]) as u64) << j;
+        }
+        // Pin the semantics, not just self-consistency: NaN rows miss,
+        // -inf >= -inf and ±0 ties hit.
+        assert_eq!(want, 0b1_1101_1100);
+        for k in SimdKernel::available() {
+            assert_eq!(k.ge_mask(&xs, &ts), want, "kernel {}", k.name());
+        }
+    }
+}

@@ -12,6 +12,7 @@
 //! by default; [`bitonic`](super::bitonic) for structural parity with TPU).
 
 use super::exact;
+use super::simd::SimdKernel;
 use super::Candidate;
 
 /// Algorithm parameters (validated).
@@ -166,10 +167,32 @@ impl Stage1State {
     /// two-phase scheme as the fixed-K′ specializations: a branchless
     /// tail-compare sweep packing hit flags into a bitmask, then scalar
     /// insert + bubble on the (rare) hits.
+    ///
+    /// Runs the scalar reference tail-compare; the engines pass their
+    /// dispatched kernel through [`ingest_tile_k`](Self::ingest_tile_k)
+    /// (bit-identical either way — see [`simd`](super::simd)).
     pub fn ingest_tile(&mut self, base_index: u32, lane0: usize, scores: &[f32]) {
+        self.ingest_tile_k(SimdKernel::scalar(), base_index, lane0, scores)
+    }
+
+    /// [`ingest_tile`](Self::ingest_tile) with the tail-compare sweep
+    /// (phase 1) dispatched through `kernel` — AVX2/NEON when the engine
+    /// resolved one at pool spawn, the scalar byte-flag sweep otherwise.
+    /// The insert + bubble phase is scalar on every path, so the state
+    /// update is bit-identical across kernels.
+    pub fn ingest_tile_k(
+        &mut self,
+        kernel: SimdKernel,
+        base_index: u32,
+        lane0: usize,
+        scores: &[f32],
+    ) {
         debug_assert!(lane0 + scores.len() <= self.buckets);
         if self.local_k == 1 {
-            // Branchless strided max, as in the K′=1 specialization.
+            // Branchless strided max, as in the K′=1 specialization. No
+            // explicit dispatch: the select loop has no data-dependent
+            // branch and LLVM already autovectorizes it, identically for
+            // every configured kernel.
             let vals = &mut self.values[lane0..lane0 + scores.len()];
             let idxs = &mut self.indices[lane0..lane0 + scores.len()];
             for (j, ((&x, v), i)) in scores
@@ -191,29 +214,12 @@ impl Stage1State {
         let mut lane = lane0;
         while lane < end {
             let chunk_end = (lane + 64).min(end);
-            // Phase 1: branchless tail-compare producing byte flags (the
-            // vectorizable form; see `stage1_fixed_block`).
-            let mut flags = [0u8; 64];
-            {
-                let tail = &self.values[tail_off + lane..tail_off + chunk_end];
-                for ((f, &x), &t) in flags
-                    .iter_mut()
-                    .zip(scores[lane - lane0..chunk_end - lane0].iter())
-                    .zip(tail.iter())
-                {
-                    *f = (x >= t) as u8;
-                }
-            }
-            let mut mask: u64 = 0;
-            for (j8, chunk8) in flags.chunks_exact(8).enumerate() {
-                let w = u64::from_le_bytes(chunk8.try_into().unwrap());
-                if w == 0 {
-                    continue;
-                }
-                for (j, &byte) in chunk8.iter().enumerate() {
-                    mask |= (byte as u64) << (j8 * 8 + j);
-                }
-            }
+            // Phase 1: dispatched branchless tail-compare (vector compare +
+            // movemask on SIMD kernels, the byte-flag sweep on scalar).
+            let mut mask = kernel.ge_mask(
+                &scores[lane - lane0..chunk_end - lane0],
+                &self.values[tail_off + lane..tail_off + chunk_end],
+            );
             // Phase 2: scalar insert + bubble on the hits.
             while mask != 0 {
                 let j = mask.trailing_zeros() as usize;
@@ -247,6 +253,10 @@ impl Stage1State {
 pub struct TwoStageTopK {
     pub params: TwoStageParams,
     state: Stage1State,
+    /// Dispatched tail-compare kernel for the fixed-K′ mask scan; the
+    /// scalar reference by default ([`new`](Self::new)), so the plain
+    /// constructor stays the oracle every SIMD path is tested against.
+    kernel: SimdKernel,
     /// Candidate scratch reused across stage-2 calls (avoids two
     /// allocations + copies per run; see EXPERIMENTS.md §Perf).
     cand_scratch: Vec<Candidate>,
@@ -254,10 +264,17 @@ pub struct TwoStageTopK {
 
 impl TwoStageTopK {
     pub fn new(params: TwoStageParams) -> Self {
+        Self::with_kernel(params, SimdKernel::scalar())
+    }
+
+    /// Construct with an explicitly dispatched Stage-1 compare kernel
+    /// (bit-identical to [`new`](Self::new) — see [`simd`](super::simd)).
+    pub fn with_kernel(params: TwoStageParams, kernel: SimdKernel) -> Self {
         let state = Stage1State::new(&params);
         TwoStageTopK {
             params,
             state,
+            kernel,
             cand_scratch: Vec::with_capacity(params.num_candidates()),
         }
     }
@@ -408,6 +425,7 @@ impl TwoStageTopK {
         block_end: usize,
     ) {
         let b = self.params.buckets;
+        let kernel = self.kernel;
         let vals = &mut self.state.values;
         let idxs = &mut self.state.indices;
         let tail_off = (KP - 1) * b;
@@ -417,31 +435,15 @@ impl TwoStageTopK {
             let mut lane = block_start;
             while lane < block_end {
                 let end = (lane + 64).min(block_end);
-                // Phase 1: branchless tail-compare producing byte flags —
-                // a plain compare+store loop that LLVM vectorizes (the
+                // Phase 1: dispatched branchless tail-compare — an AVX2 /
+                // NEON compare + movemask when the operator was built with
+                // a SIMD kernel, otherwise the scalar byte-flag sweep (a
+                // plain compare+store loop that LLVM vectorizes; the
                 // `(cond as u64) << j` mask-pack form does not).
-                let mut flags = [0u8; 64];
-                {
-                    let tail = &vals[tail_off + lane..tail_off + end];
-                    for ((f, &x), &t) in flags
-                        .iter_mut()
-                        .zip(input_row[lane..end].iter())
-                        .zip(tail.iter())
-                    {
-                        *f = (x >= t) as u8;
-                    }
-                }
-                // Collapse flags to a bitmask 8 bytes at a time.
-                let mut mask: u64 = 0;
-                for (j8, chunk8) in flags.chunks_exact(8).enumerate() {
-                    let w = u64::from_le_bytes(chunk8.try_into().unwrap());
-                    if w == 0 {
-                        continue;
-                    }
-                    for (j, &byte) in chunk8.iter().enumerate() {
-                        mask |= (byte as u64) << (j8 * 8 + j);
-                    }
-                }
+                let mut mask = kernel.ge_mask(
+                    &input_row[lane..end],
+                    &vals[tail_off + lane..tail_off + end],
+                );
                 // Phase 2: scalar insert+bubble on the (rare) hits.
                 while mask != 0 {
                     let j = mask.trailing_zeros() as usize;
@@ -647,6 +649,127 @@ mod tests {
             }
             assert_eq!(st2.values, ts.state().values, "({n},{b},{kp}) ragged tiles");
             assert_eq!(st2.indices, ts.state().indices, "({n},{b},{kp}) ragged tiles");
+        }
+    }
+
+    #[test]
+    fn stage1_kernels_bit_identical_to_scalar() {
+        // Every available dispatch kernel must reproduce the scalar
+        // operator's Stage-1 state bit-for-bit: same values, same indices,
+        // across the K′=1, fixed-K′ and generic paths and a bucket count
+        // that leaves ragged 64-lane chunks.
+        use crate::topk::simd::SimdKernel;
+        let mut rng = Rng::new(2101);
+        for &(n, b, kp) in &[
+            (512usize, 64usize, 1usize),
+            (768, 96, 2),
+            (500, 50, 4),
+            (700, 70, 7), // generic (non-specialized) K′ path
+        ] {
+            let v = random_values(&mut rng, n);
+            let p = TwoStageParams::new(n, 8, b, kp);
+            let mut scalar = TwoStageTopK::new(p);
+            scalar.stage1(&v);
+            for k in SimdKernel::available() {
+                let mut ts = TwoStageTopK::with_kernel(p, k);
+                ts.stage1(&v);
+                assert_eq!(
+                    ts.state().values,
+                    scalar.state().values,
+                    "({n},{b},{kp}) kernel {}",
+                    k.name()
+                );
+                assert_eq!(
+                    ts.state().indices,
+                    scalar.state().indices,
+                    "({n},{b},{kp}) kernel {}",
+                    k.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ingest_tile_kernels_match_scalar_on_ragged_tiles() {
+        // The streamed entry point the fused pipeline uses: every kernel,
+        // tile widths that split neither B nor the 64-lane chunk evenly.
+        use crate::topk::simd::SimdKernel;
+        let mut rng = Rng::new(2203);
+        for &(n, b, kp) in &[(512usize, 64usize, 2usize), (500, 50, 3)] {
+            let v = random_values(&mut rng, n);
+            let rows = n / b;
+            let mut want = Stage1State::with_dims(b, kp);
+            for row in 0..rows {
+                want.ingest_tile((row * b) as u32, 0, &v[row * b..(row + 1) * b]);
+            }
+            for k in SimdKernel::available() {
+                let mut st = Stage1State::with_dims(b, kp);
+                for row in 0..rows {
+                    let mut lane = 0;
+                    while lane < b {
+                        let end = (lane + 17).min(b);
+                        st.ingest_tile_k(
+                            k,
+                            (row * b + lane) as u32,
+                            lane,
+                            &v[row * b + lane..row * b + end],
+                        );
+                        lane = end;
+                    }
+                }
+                assert_eq!(st.values, want.values, "({n},{b},{kp}) kernel {}", k.name());
+                assert_eq!(st.indices, want.indices, "({n},{b},{kp}) kernel {}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_scores_ingest_identically_on_every_kernel() {
+        // Pin the non-finite semantics shared by all kernels: a NaN score
+        // never enters a bucket (x >= t is false for NaN), -inf ties the
+        // -inf init and so *does* insert (>= is non-strict), +inf wins
+        // outright — and the resulting state is bit-identical (compared by
+        // representation, since NaN != NaN) across scalar and SIMD paths.
+        use crate::topk::simd::SimdKernel;
+        let b = 20usize;
+        let rows = 3usize;
+        for kp in [1usize, 2, 3] {
+            let mut v: Vec<f32> = (0..b * rows).map(|i| (i % 7) as f32 - 3.0).collect();
+            v[0] = f32::NAN;
+            v[3] = f32::NEG_INFINITY;
+            v[5] = f32::INFINITY;
+            v[b + 3] = f32::NEG_INFINITY; // -inf vs -inf tie in bucket 3
+            v[2 * b] = f32::NAN; // NaN in the last row of bucket 0
+            v[2 * b + 5] = f32::INFINITY; // +inf tie in bucket 5
+            let run = |k: SimdKernel| {
+                let mut st = Stage1State::with_dims(b, kp);
+                for row in 0..rows {
+                    st.ingest_tile_k(k, (row * b) as u32, 0, &v[row * b..(row + 1) * b]);
+                }
+                st
+            };
+            let want = run(SimdKernel::scalar());
+            // NaN never displaces anything: x >= t is false for NaN.
+            assert!(
+                want.values.iter().all(|val| !val.is_nan()),
+                "kp={kp}: NaN leaked into Stage-1 state"
+            );
+            // +inf is rank 0 of bucket 5. At K′=1 the non-strict `>=` max
+            // keeps the *later* +inf duplicate; at K′≥2 the later copy is
+            // inserted at the tail and the strict `>` bubble cannot pass
+            // the earlier one, so rank 0 keeps the first stream index.
+            let (top5, idx5) = want.slot(0, 5);
+            assert_eq!(top5, f32::INFINITY, "kp={kp}");
+            let expect_idx = if kp == 1 { 2 * b + 5 } else { 5 };
+            assert_eq!(idx5 as usize, expect_idx, "kp={kp}: tie-handling drifted");
+            for k in SimdKernel::available() {
+                let got = run(k);
+                let bits = |s: &Stage1State| -> Vec<u32> {
+                    s.values.iter().map(|x| x.to_bits()).collect()
+                };
+                assert_eq!(bits(&got), bits(&want), "kp={kp} kernel {} values", k.name());
+                assert_eq!(got.indices, want.indices, "kp={kp} kernel {} indices", k.name());
+            }
         }
     }
 

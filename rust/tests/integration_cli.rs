@@ -88,6 +88,45 @@ fn init_config_then_serve_small() {
     assert!(out.status.success(), "stdout: {s}\nstderr: {e}");
     assert!(s.contains("throughput"), "got: {s}");
     assert!(s.contains("recall@16"), "got: {s}");
+    // The resolved SIMD dispatch is announced at startup and lands in the
+    // shutdown metrics summary (`kernel=<scalar|avx2|neon>`).
+    assert!(s.contains("kernel="), "got: {s}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_rejects_a_kernel_the_host_cannot_run() {
+    // One of avx2/neon is always foreign to the build host, so requesting
+    // both in turn must produce exactly one launch failure mentioning the
+    // kernel knob — never a silent fallback.
+    let dir = std::env::temp_dir().join(format!("fastk-cli-k-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut failures = 0;
+    for kernel in ["avx2", "neon"] {
+        let cfg_path = dir.join(format!("serve-{kernel}.json"));
+        std::fs::write(
+            &cfg_path,
+            format!(
+                r#"{{"d": 8, "k": 8, "shards": 1, "shard_size": 512,
+                    "recall_target": 0.9, "backend": "native",
+                    "kernel": "{kernel}", "seed": 5}}"#
+            ),
+        )
+        .unwrap();
+        let out = fastk()
+            .args(["serve", "--config", cfg_path.to_str().unwrap(), "--queries", "4"])
+            .output()
+            .unwrap();
+        if !out.status.success() {
+            let e = String::from_utf8_lossy(&out.stderr);
+            assert!(e.contains("kernel"), "unrelated failure: {e}");
+            failures += 1;
+        }
+    }
+    assert!(
+        failures >= 1,
+        "at least one of avx2/neon must be unrunnable on any single host"
+    );
     std::fs::remove_dir_all(&dir).ok();
 }
 
