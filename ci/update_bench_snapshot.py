@@ -7,8 +7,15 @@ workflow artifact) and copies its measured entries into the snapshot file,
 stamping the source commit. Exits nonzero if the measured run produced no
 results — the snapshot must never silently stay (or go) empty.
 
+`--merge <file>` (repeatable) folds additional benches' measured entries
+into the same snapshot (e.g. `store_load`): their results are appended
+after the primary bench's, and the snapshot records which benches
+contributed under `"merged_benches"`. A merge file with no results fails
+the refresh, same as the primary.
+
 Usage:
     update_bench_snapshot.py <measured.json> <snapshot.json> --commit <sha>
+        [--merge <extra.json>]...
 """
 
 import argparse
@@ -21,6 +28,12 @@ def main() -> None:
     ap.add_argument("measured", help="bench JSON emitted by the smoke run")
     ap.add_argument("snapshot", help="tracked snapshot file to refresh")
     ap.add_argument("--commit", default="unknown", help="source commit sha")
+    ap.add_argument(
+        "--merge",
+        action="append",
+        default=[],
+        help="additional bench JSON whose results are folded into the snapshot",
+    )
     args = ap.parse_args()
 
     with open(args.measured) as f:
@@ -40,7 +53,27 @@ def main() -> None:
             f"{snapshot.get('bench')!r}, measured run is {measured.get('bench')!r}"
         )
 
+    merged_benches = {}
+    for path in args.merge:
+        with open(path) as f:
+            extra = json.load(f)
+        extra_results = extra.get("results") or []
+        if not extra_results:
+            sys.exit(
+                f"update_bench_snapshot: FAIL: merge file {path} has no measured "
+                "results"
+            )
+        name = extra.get("bench") or path
+        merged_benches[name] = len(extra_results)
+        results = results + extra_results
+
     snapshot["results"] = results
+    # Drop any stale record from a previous merged refresh before
+    # (re)setting it: a run without --merge must not leave the snapshot
+    # claiming entries that are no longer in `results`.
+    snapshot.pop("merged_benches", None)
+    if merged_benches:
+        snapshot["merged_benches"] = merged_benches
     snapshot["source_commit"] = args.commit
     snapshot["note"] = (
         "Measured CI smoke-run entries (tiny shapes; schema-identical to full "

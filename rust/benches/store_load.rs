@@ -1,0 +1,133 @@
+//! Shard-store cost model: what the on-disk store (`rust/src/store/`)
+//! costs to build, to cold-open, and to serve from, versus the in-memory
+//! baseline.
+//!
+//! Three measurements:
+//!
+//! 1. `build_*` — `build_store` end to end (generate + checksum + write +
+//!    rename + manifest): the `fastk build-index` cost.
+//! 2. `cold_open_first_batch_*` — `ShardStore::open` (header parse,
+//!    manifest cross-check, full checksum verification) + fused-backend
+//!    construction + one answered batch: the launch-to-first-answer path.
+//!    "Cold" is per process lifetime — the OS page cache stays warm across
+//!    iterations, so this measures fastk's own open cost, not disk I/O.
+//! 3. `steady_mmap_*` vs `steady_inmem_*` — the same fused backend scoring
+//!    the same rows out of the mapping vs out of an owned heap vector,
+//!    guarded bit-identical before timing. Steady-state mmap serving
+//!    should cost the same as in-memory (same bytes, same kernels); full
+//!    runs fail if it is slower beyond noise.
+//!
+//! Emits the shared bench JSON schema when `FASTK_BENCH_JSON=<dir>` is
+//! set. `FASTK_BENCH_SMOKE=1` runs tiny shapes for the CI schema check.
+
+use fastk::bench_harness::{banner, bench, gate_not_slower, maybe_write_json, report, BenchResult};
+use fastk::coordinator::{EngineOptions, ParallelNativeBackend, ShardBackend};
+use fastk::store::{self, ShardStore, StoreSpec};
+use fastk::topk::{SimdKernel, TwoStageParams};
+use fastk::util::Rng;
+
+/// Full-run gate slack for steady-state mmap vs in-memory: the two run
+/// identical code over identical bytes, so this only absorbs
+/// min-of-samples noise (plus first-touch page faults already amortized
+/// by warmup).
+const STEADY_GATE_SLACK: f64 = 1.25;
+
+fn main() {
+    let smoke = std::env::var("FASTK_BENCH_SMOKE")
+        .map(|v| v != "0")
+        .unwrap_or(false);
+    // (shards, shard_size, d, k, buckets, local_k, batch, threads)
+    let (shards, shard_size, d, k, b, kp, batch, threads) = if smoke {
+        (2usize, 512usize, 16usize, 16usize, 64usize, 2usize, 3usize, 2usize)
+    } else {
+        (4, 16_384, 64, 128, 512, 2, 8, 4)
+    };
+    let spec = StoreSpec {
+        d,
+        shards,
+        shard_size,
+        seed: 42,
+    };
+    let dir = std::env::temp_dir().join(format!("fastk-bench-store-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.fastk");
+    let data_mib = (shards * shard_size * d * 4) as f64 / (1024.0 * 1024.0);
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    banner(&format!(
+        "shard store: {shards} shards x {shard_size} x {d}-d ({data_mib:.1} MiB data{})",
+        if smoke { ", SMOKE shapes" } else { "" }
+    ));
+
+    // 1. Build cost (fastk build-index).
+    let label_build = format!("build_s{shards}_n{shard_size}_d{d}");
+    let r = bench(&label_build, || {
+        store::build_store(&path, &spec).unwrap();
+    });
+    println!(
+        "build throughput: {:.1} MiB/s",
+        data_mib / r.min_s().max(1e-12)
+    );
+    report(&r);
+    results.push(r);
+
+    // 2. Cold open -> first answered batch.
+    let params = TwoStageParams::new(shard_size, k, b, kp);
+    let opts = EngineOptions {
+        threads,
+        fused: true,
+        tile_rows: 0,
+        kernel: SimdKernel::auto(),
+    };
+    let mut rng = Rng::new(3);
+    let queries: Vec<f32> = (0..batch * d).map(|_| rng.next_gaussian() as f32).collect();
+    let label_cold = format!("cold_open_first_batch_s{shards}_n{shard_size}_d{d}");
+    let r = bench(&label_cold, || {
+        let st = ShardStore::open(&path).unwrap();
+        let mut be = ParallelNativeBackend::from_source(st.shard_rows(0), d, k, params, opts);
+        std::hint::black_box(be.score_topk(&queries, batch).unwrap());
+    });
+    report(&r);
+    results.push(r);
+
+    // 3. Steady state: mmap vs in-memory, bit-identity guarded.
+    let st = ShardStore::open(&path).unwrap();
+    let owned = store::generate_shard_rows(spec.seed, 0, shard_size, d);
+    let mut be_map = ParallelNativeBackend::from_source(st.shard_rows(0), d, k, params, opts);
+    let mut be_mem = ParallelNativeBackend::with_options(owned, d, k, params, opts);
+    assert_eq!(
+        be_map.score_topk(&queries, batch).unwrap(),
+        be_mem.score_topk(&queries, batch).unwrap(),
+        "mmap-backed results diverged from in-memory"
+    );
+    let label_map = format!("steady_mmap_d{d}_t{threads}_b{batch}");
+    let label_mem = format!("steady_inmem_d{d}_t{threads}_b{batch}");
+    let r = bench(&label_map, || {
+        std::hint::black_box(be_map.score_topk(&queries, batch).unwrap());
+    });
+    report(&r);
+    results.push(r);
+    let r = bench(&label_mem, || {
+        std::hint::black_box(be_mem.score_topk(&queries, batch).unwrap());
+    });
+    report(&r);
+    results.push(r);
+
+    // Acceptance: zero-copy serving must not cost throughput at steady
+    // state (enforced on full runs; the name lookups are checked even in
+    // smoke so renames can't retire the gate).
+    let failed = gate_not_slower(
+        &results,
+        &label_mem,
+        &label_map,
+        STEADY_GATE_SLACK,
+        !smoke,
+        "mmap steady-state vs in-memory fused pipeline",
+    );
+
+    maybe_write_json("store_load", &results);
+    std::fs::remove_dir_all(&dir).ok();
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -40,6 +40,23 @@ pub enum BackendKind {
     Pjrt,
 }
 
+/// On-disk shard store configuration — the serve config's `"store"` block.
+/// When present, `fastk serve` opens (or, with `build_if_missing`, builds)
+/// the store at `path` and every shard scores straight out of the mapping
+/// instead of synthesizing rows in memory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreConfig {
+    /// Store data file; its manifest lives at `<path>.manifest.json`.
+    pub path: String,
+    /// Build the store from the synthetic generator at launch when `path`
+    /// does not exist (default `false`: a missing store is a launch
+    /// error). Corruption of an *existing* store is always a launch
+    /// error — this knob never papers over a bad file.
+    pub build_if_missing: bool,
+    /// Verify every region checksum at open (default `true`).
+    pub verify_checksums: bool,
+}
+
 /// Which evaluator the serve planner scores candidate `(B, K′)` pairs with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlanEvalKind {
@@ -90,6 +107,10 @@ pub struct LauncherConfig {
     /// Every kernel returns bit-identical results
     /// ([`topk::simd`](crate::topk::simd)). Ignored by the `pjrt` backend.
     pub kernel: KernelKind,
+    /// On-disk shard store (`"store": {"path", "build_if_missing",
+    /// "verify_checksums"}`). `None` (or JSON `null`): serve the synthetic
+    /// in-memory database, generated per shard from `seed ⊕ shard`.
+    pub store: Option<StoreConfig>,
     pub artifact: Option<String>,
     pub artifact_dir: String,
     pub seed: u64,
@@ -113,6 +134,7 @@ impl Default for LauncherConfig {
             fused: true,
             tile_rows: 0,
             kernel: KernelKind::Auto,
+            store: None,
             artifact: None,
             artifact_dir: "artifacts".to_string(),
             seed: 42,
@@ -182,6 +204,33 @@ impl LauncherConfig {
                 )
             })?;
         }
+        if let Some(v) = j.get("store") {
+            if *v != Json::Null {
+                anyhow::ensure!(
+                    v.as_obj().is_some(),
+                    "store must be an object (or null for no store)"
+                );
+                let path = v
+                    .get("path")
+                    .and_then(|p| p.as_str())
+                    .context("store.path must be a string")?
+                    .to_string();
+                let mut sc = StoreConfig {
+                    path,
+                    build_if_missing: false,
+                    verify_checksums: true,
+                };
+                if let Some(b) = v.get("build_if_missing") {
+                    sc.build_if_missing =
+                        b.as_bool().context("store.build_if_missing must be a boolean")?;
+                }
+                if let Some(b) = v.get("verify_checksums") {
+                    sc.verify_checksums =
+                        b.as_bool().context("store.verify_checksums must be a boolean")?;
+                }
+                c.store = Some(sc);
+            }
+        }
         if let Some(v) = j.get("backend") {
             c.backend = match v.as_str() {
                 Some("native") => BackendKind::Native,
@@ -242,6 +291,9 @@ impl LauncherConfig {
             );
         }
         anyhow::ensure!(self.batcher.max_batch >= 1, "batch_max must be >= 1");
+        if let Some(sc) = &self.store {
+            anyhow::ensure!(!sc.path.is_empty(), "store.path must not be empty");
+        }
         if self.backend == BackendKind::Pjrt {
             anyhow::ensure!(
                 self.artifact.is_some(),
@@ -339,6 +391,17 @@ impl LauncherConfig {
             ("fused", Json::Bool(self.fused)),
             ("tile_rows", Json::num(self.tile_rows as f64)),
             ("kernel", Json::str(self.kernel.as_str())),
+            (
+                "store",
+                match &self.store {
+                    Some(sc) => Json::obj(vec![
+                        ("path", Json::str(&sc.path)),
+                        ("build_if_missing", Json::Bool(sc.build_if_missing)),
+                        ("verify_checksums", Json::Bool(sc.verify_checksums)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
             (
                 "artifact",
                 self.artifact
@@ -488,6 +551,53 @@ mod tests {
         let plan = manual.resolve_plan(&mut cache).unwrap();
         assert_eq!((plan.buckets, plan.local_k), (1024, 1));
         assert_eq!(plan.source, crate::plan::PlanSource::Manual);
+    }
+
+    #[test]
+    fn parses_store_block() {
+        // Defaults: no store (and an explicit null is the same).
+        assert!(LauncherConfig::from_json("{}").unwrap().store.is_none());
+        assert!(LauncherConfig::from_json(r#"{"store": null}"#).unwrap().store.is_none());
+        // Path alone: build_if_missing defaults off, verification on.
+        let c = LauncherConfig::from_json(r#"{"store": {"path": "db.fastk"}}"#).unwrap();
+        let sc = c.store.unwrap();
+        assert_eq!(sc.path, "db.fastk");
+        assert!(!sc.build_if_missing);
+        assert!(sc.verify_checksums);
+        // Full block.
+        let c = LauncherConfig::from_json(
+            r#"{"store": {"path": "/data/db.fastk", "build_if_missing": true,
+                "verify_checksums": false}}"#,
+        )
+        .unwrap();
+        let sc = c.store.unwrap();
+        assert!(sc.build_if_missing);
+        assert!(!sc.verify_checksums);
+        // Malformed blocks are loud errors.
+        assert!(LauncherConfig::from_json(r#"{"store": "db.fastk"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"store": {}}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"store": {"path": 3}}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"store": {"path": ""}}"#).is_err());
+        assert!(LauncherConfig::from_json(
+            r#"{"store": {"path": "x", "build_if_missing": "yes"}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn store_block_round_trips_through_json() {
+        let mut c = LauncherConfig::default();
+        c.store = Some(StoreConfig {
+            path: "db.fastk".to_string(),
+            build_if_missing: true,
+            verify_checksums: true,
+        });
+        let c2 = LauncherConfig::from_json(&c.to_json().to_string()).unwrap();
+        assert_eq!(c2.store, c.store);
+        // And the default's null round-trips to None.
+        let d = LauncherConfig::default();
+        let d2 = LauncherConfig::from_json(&d.to_json().to_string()).unwrap();
+        assert!(d2.store.is_none());
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::runtime::{CompiledArtifact, HostTensor};
+use crate::store::RowSource;
 use crate::topk::{
     exact, Candidate, FusedParallelMips, ParallelTwoStageTopK, SimdKernel, TwoStageParams,
     TwoStageTopK,
@@ -61,8 +62,9 @@ pub type BackendFactory = Box<dyn FnOnce() -> anyhow::Result<Box<dyn ShardBacken
 /// Pure-Rust backend: explicit matmul then the two-stage operator (or exact
 /// top-k when `params` is None — the oracle configuration).
 pub struct NativeBackend {
-    /// Row-major database: `db[j * d .. (j+1) * d]` is vector j.
-    database: Vec<f32>,
+    /// Row-major database: `db[j * d .. (j+1) * d]` is vector j — owned
+    /// heap rows or a mapped store region, scored identically either way.
+    database: RowSource,
     d: usize,
     n: usize,
     k: usize,
@@ -91,6 +93,20 @@ impl NativeBackend {
     /// (bit-identical results — see [`topk::simd`](crate::topk::simd)).
     pub fn with_kernel(
         database: Vec<f32>,
+        d: usize,
+        k: usize,
+        params: Option<TwoStageParams>,
+        kernel: SimdKernel,
+    ) -> Self {
+        Self::from_source(RowSource::from_vec(database), d, k, params, kernel)
+    }
+
+    /// [`with_kernel`](Self::with_kernel) over any [`RowSource`] — the
+    /// constructor the store-backed serving path uses: a mapped source is
+    /// scored in place (zero-copy) and, holding the same bytes, returns
+    /// results bit-identical to the owned path.
+    pub fn from_source(
+        database: RowSource,
         d: usize,
         k: usize,
         params: Option<TwoStageParams>,
@@ -220,7 +236,9 @@ enum ParallelEngine {
 /// with the same params.
 pub struct ParallelNativeBackend {
     /// Shared row-major database: `db[j * d .. (j+1) * d]` is vector j.
-    database: Arc<Vec<f32>>,
+    /// A [`RowSource`] clone is shared with the fused engine's workers, so
+    /// owned and mapped databases run the same code.
+    database: RowSource,
     d: usize,
     n: usize,
     k: usize,
@@ -261,12 +279,25 @@ impl ParallelNativeBackend {
         params: TwoStageParams,
         opts: EngineOptions,
     ) -> Self {
+        Self::from_source(RowSource::from_vec(database), d, k, params, opts)
+    }
+
+    /// [`with_options`](Self::with_options) over any [`RowSource`] — the
+    /// store-backed serving constructor: every pool worker scores its lane
+    /// range straight out of the mapping with the same SIMD kernels, so a
+    /// mapped database is bit-identical to an owned one by construction.
+    pub fn from_source(
+        database: RowSource,
+        d: usize,
+        k: usize,
+        params: TwoStageParams,
+        opts: EngineOptions,
+    ) -> Self {
         assert!(d > 0 && !database.is_empty());
         assert_eq!(database.len() % d, 0);
         let n = database.len() / d;
         assert_eq!(params.n, n, "two-stage N must equal shard size");
         assert_eq!(params.k, k);
-        let database = Arc::new(database);
         let engine = if opts.fused {
             ParallelEngine::Fused(FusedParallelMips::with_kernel(
                 database.clone(),

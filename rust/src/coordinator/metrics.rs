@@ -1,11 +1,14 @@
 //! Service metrics: request latency, batch sizes, throughput, shard
-//! failures, the serve plan the deployment is running under, and the SIMD
-//! dispatch kernel its native shards resolved at startup.
+//! failures, the serve plan the deployment is running under, the SIMD
+//! dispatch kernel its native shards resolved at startup, and — for
+//! store-backed deployments — the identity and open cost of the shard
+//! store the rows are served from.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::plan::ServePlan;
+use crate::store::StoreInfo;
 use crate::util::stats::{fmt_ns, LatencyHistogram, Welford};
 
 /// Thread-safe service metrics.
@@ -35,6 +38,9 @@ struct Inner {
     /// (`"scalar"` / `"avx2"` / `"neon"`); `None` for backends that run no
     /// native hot loop (PJRT).
     kernel: Option<&'static str>,
+    /// Identity + open cost of the shard store rows are served from, if
+    /// the deployment is store-backed.
+    store: Option<StoreInfo>,
 }
 
 impl Default for ServiceMetrics {
@@ -57,6 +63,7 @@ impl ServiceMetrics {
                 failed_requests: 0,
                 plan: None,
                 kernel: None,
+                store: None,
             }),
             started: Instant::now(),
         }
@@ -107,6 +114,16 @@ impl ServiceMetrics {
 
     pub fn kernel(&self) -> Option<&'static str> {
         self.inner.lock().unwrap().kernel
+    }
+
+    /// Record the shard store this deployment serves rows from (shown in
+    /// `summary()` and the net-protocol `stats` reply).
+    pub fn set_store(&self, info: StoreInfo) {
+        self.inner.lock().unwrap().store = Some(info);
+    }
+
+    pub fn store(&self) -> Option<StoreInfo> {
+        self.inner.lock().unwrap().store.clone()
     }
 
     pub fn requests(&self) -> u64 {
@@ -166,6 +183,13 @@ impl ServiceMetrics {
         if let Some(k) = m.kernel {
             s.push_str(&format!(" kernel={k}"));
         }
+        if let Some(st) = &m.store {
+            s.push_str(&format!(
+                " store={} open={}",
+                st.describe(),
+                fmt_ns(st.open_us as f64 * 1e3)
+            ));
+        }
         if let Some(p) = &m.plan {
             s.push_str(&format!(
                 " plan(K'={} B={} predicted_recall={:.4} source={})",
@@ -224,6 +248,29 @@ mod tests {
         assert!(s.contains("shard_failures=2"), "{s}");
         assert!(s.contains("degraded=1"), "{s}");
         assert!(s.contains("K'=2 B=128"), "{s}");
+    }
+
+    #[test]
+    fn store_surfaces_in_summary_once_set() {
+        let m = ServiceMetrics::new();
+        assert!(m.store().is_none());
+        assert!(!m.summary().contains("store="));
+        m.set_store(StoreInfo {
+            path: "db.fastk".to_string(),
+            version: 1,
+            shards: 4,
+            shard_size: 1024,
+            d: 16,
+            mapped: true,
+            open_us: 1234,
+            built: false,
+        });
+        let info = m.store().unwrap();
+        assert_eq!(info.path, "db.fastk");
+        assert!(info.mapped);
+        let s = m.summary();
+        assert!(s.contains("store=db.fastk@v1 4x1024x16 (mmap)"), "{s}");
+        assert!(s.contains("open="), "{s}");
     }
 
     #[test]

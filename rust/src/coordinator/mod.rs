@@ -43,7 +43,7 @@ pub use backend::{
     ShardBackend,
 };
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use merge::merge_shard_results;
+pub use merge::{merge_shard_results, ShardTopK};
 pub use metrics::ServiceMetrics;
 pub use service::{MipsService, Query, Response, ServiceConfig};
-pub use shard::{ShardHandle, ShardResult};
+pub use shard::{PendingShard, ShardHandle, ShardResult};

@@ -12,6 +12,7 @@
 //! <- {"stats": "requests=... p50=...", "shard_failures": 0,
 //!     "degraded_requests": 0, "failed_requests": 0,
 //!     "kernel": "avx2",                     (resolved SIMD dispatch, if native)
+//!     "store": {"path": ..., "mapped": true, "open_us": ...},  (if store-backed)
 //!     "plan": {"buckets": 512, "local_k": 4, ...}}   (plan if one was made)
 //! -> {"cmd": "shutdown"}       (stops the listener)
 //! ```
@@ -176,6 +177,21 @@ fn handle_line(
                 if let Some(k) = m.kernel() {
                     fields.push(("kernel", Json::str(k)));
                 }
+                if let Some(st) = m.store() {
+                    fields.push((
+                        "store",
+                        Json::obj(vec![
+                            ("path", Json::str(&st.path)),
+                            ("version", Json::num(st.version as f64)),
+                            ("shards", Json::num(st.shards as f64)),
+                            ("shard_size", Json::num(st.shard_size as f64)),
+                            ("d", Json::num(st.d as f64)),
+                            ("mapped", Json::Bool(st.mapped)),
+                            ("open_us", Json::num(st.open_us as f64)),
+                            ("built", Json::Bool(st.built)),
+                        ]),
+                    ));
+                }
                 if let Some(p) = m.plan() {
                     fields.push((
                         "plan",
@@ -327,8 +343,9 @@ mod tests {
         // tiny_service starts without a plan: the field is absent, not null.
         assert!(stats.get("plan").is_none());
         // No kernel recorded either (the launcher records one for native
-        // backends): absent, not null.
+        // backends): absent, not null. Same for the store.
         assert!(stats.get("kernel").is_none());
+        assert!(stats.get("store").is_none());
 
         line.clear();
         w.write_all(b"not json\n").unwrap();
@@ -369,9 +386,20 @@ mod tests {
             )
             .unwrap(),
         );
-        // The launcher records the resolved dispatch kernel for native
-        // deployments; emulate that so the stats reply carries it.
+        // The launcher records the resolved dispatch kernel and (for
+        // store-backed deployments) the opened store; emulate both so the
+        // stats reply carries them.
         svc.metrics.set_kernel(crate::topk::SimdKernel::auto().name());
+        svc.metrics.set_store(crate::store::StoreInfo {
+            path: "db.fastk".to_string(),
+            version: 1,
+            shards: 1,
+            shard_size: 1024,
+            d: 8,
+            mapped: true,
+            open_us: 99,
+            built: true,
+        });
         let server = NetServer::start("127.0.0.1:0", svc).unwrap();
         let conn = TcpStream::connect(server.addr).unwrap();
         let mut w = conn.try_clone().unwrap();
@@ -398,6 +426,12 @@ mod tests {
             stats.get("kernel").unwrap().as_str(),
             Some(crate::topk::SimdKernel::auto().name())
         );
+        let st = stats.get("store").unwrap();
+        assert_eq!(st.get("path").unwrap().as_str(), Some("db.fastk"));
+        assert_eq!(st.get("version").unwrap().as_i64(), Some(1));
+        assert_eq!(st.get("mapped").unwrap().as_bool(), Some(true));
+        assert_eq!(st.get("built").unwrap().as_bool(), Some(true));
+        assert_eq!(st.get("open_us").unwrap().as_i64(), Some(99));
         let p = stats.get("plan").unwrap();
         assert_eq!(p.get("buckets").unwrap().as_i64(), Some(128));
         assert_eq!(p.get("local_k").unwrap().as_i64(), Some(1));

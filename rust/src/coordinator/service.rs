@@ -79,11 +79,29 @@ impl MipsService {
         if let Some(plan) = config.plan {
             metrics.set_plan(plan);
         }
-        let shards: Vec<ShardHandle> = backends
+        // Spawn every shard deferred, then wait: backend construction
+        // (per-shard database generation, store opens, PJRT compiles) runs
+        // concurrently across the shard threads instead of serializing
+        // here. On failure, *every* pending shard is still waited for
+        // before start returns — an expensive sibling factory must not
+        // keep running detached after the caller was told startup failed
+        // (dropping the healthy handles joins their workers too).
+        let pending: Vec<_> = backends
             .into_iter()
             .enumerate()
-            .map(|(s, f)| ShardHandle::spawn(s, f))
-            .collect::<anyhow::Result<_>>()?;
+            .map(|(s, f)| ShardHandle::spawn_deferred(s, f))
+            .collect();
+        let mut shards: Vec<ShardHandle> = Vec::with_capacity(pending.len());
+        let mut first_err = None;
+        for p in pending {
+            match p.wait() {
+                Ok(h) => shards.push(h),
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
 
         let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
         let m = metrics.clone();

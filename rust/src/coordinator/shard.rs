@@ -33,11 +33,62 @@ pub struct ShardHandle {
     join: Option<JoinHandle<()>>,
 }
 
+/// A shard worker whose backend is still constructing inside its thread.
+/// Produced by [`ShardHandle::spawn_deferred`]; call [`wait`](Self::wait)
+/// to turn it into a ready [`ShardHandle`] (or the factory's error).
+pub struct PendingShard {
+    shard: usize,
+    tx: Sender<ShardRequest>,
+    join: JoinHandle<()>,
+    init_rx: Receiver<anyhow::Result<usize>>,
+}
+
+impl PendingShard {
+    /// Block until the worker finishes constructing its backend.
+    pub fn wait(self) -> anyhow::Result<ShardHandle> {
+        let PendingShard {
+            shard,
+            tx,
+            join,
+            init_rx,
+        } = self;
+        let init = init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("shard {shard} worker died during init"));
+        match init {
+            Ok(Ok(size)) => Ok(ShardHandle {
+                shard,
+                size,
+                tx,
+                join: Some(join),
+            }),
+            Ok(Err(e)) | Err(e) => {
+                // The worker returned after reporting (or dying); reap it.
+                drop(tx);
+                let _ = join.join();
+                Err(e)
+            }
+        }
+    }
+}
+
 impl ShardHandle {
     /// Spawn a worker thread; the backend is constructed *inside* the
     /// thread (PJRT handles are thread-bound). Returns an error if the
     /// factory fails.
     pub fn spawn(shard: usize, factory: BackendFactory) -> anyhow::Result<ShardHandle> {
+        Self::spawn_deferred(shard, factory).wait()
+    }
+
+    /// Spawn a worker thread *without* waiting for its backend factory to
+    /// finish. Spawning all shards deferred and then waiting lets the
+    /// expensive part of construction — generating or opening each shard's
+    /// database — run concurrently across the shard threads instead of
+    /// serializing on the caller ([`MipsService::start`] does exactly
+    /// this).
+    ///
+    /// [`MipsService::start`]: super::service::MipsService::start
+    pub fn spawn_deferred(shard: usize, factory: BackendFactory) -> PendingShard {
         let (tx, rx): (Sender<ShardRequest>, Receiver<ShardRequest>) = channel();
         let (init_tx, init_rx) = channel::<anyhow::Result<usize>>();
         let join = std::thread::Builder::new()
@@ -61,15 +112,12 @@ impl ShardHandle {
                 }
             })
             .expect("spawn shard thread");
-        let size = init_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("shard {shard} worker died during init"))??;
-        Ok(ShardHandle {
+        PendingShard {
             shard,
-            size,
             tx,
-            join: Some(join),
-        })
+            join,
+            init_rx,
+        }
     }
 
     /// Convenience for already-constructed (Send-able) backends: wraps them

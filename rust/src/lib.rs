@@ -20,7 +20,11 @@
 //!   bit-identical across implementations) — and the recall-targeted serve
 //!   planner in [`plan`] that
 //!   turns a global recall target into per-shard `(B, K′)` by composing
-//!   Theorem-1 recall exactly across shards.
+//!   Theorem-1 recall exactly across shards — and the persistent shard
+//!   store in [`store`]: a versioned, checksummed, tile-aligned on-disk
+//!   format (`fastk build-index` / `inspect`) that the serving path
+//!   memory-maps and scores in place through the [`store::RowSource`]
+//!   abstraction, zero-copy and bit-identical to in-memory serving.
 
 pub mod bench_harness;
 pub mod config;
@@ -32,5 +36,6 @@ pub mod runtime;
 pub mod perfmodel;
 pub mod recall;
 pub mod sim;
+pub mod store;
 pub mod topk;
 pub mod util;

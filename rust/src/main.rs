@@ -9,6 +9,8 @@
 //! - `table3`    regenerate paper Table 3 (MIPS breakdown, model)
 //! - `probe`     Fig-4-style host vector-throughput probe
 //! - `serve`     start the MIPS service from a JSON config and run a load test
+//! - `build-index` build an on-disk shard store (`rust/src/store/`)
+//! - `inspect`   dump a store's header + manifest and verify its checksums
 //! - `init-config` write a default serve config
 //! - `selftest`  load AOT artifacts through PJRT and cross-check vs native
 //!
@@ -16,11 +18,12 @@
 //! with full workloads; these subcommands are the interactive entry points.
 
 use std::path::Path;
+use std::sync::Arc;
 
-use fastk::config::{BackendKind, LauncherConfig};
+use fastk::config::{BackendKind, LauncherConfig, StoreConfig};
 use fastk::coordinator::{
-    BackendFactory, EngineOptions, MipsService, NativeBackend, ParallelNativeBackend,
-    PjrtBackend, ServiceConfig, ShardBackend,
+    merge_shard_results, BackendFactory, EngineOptions, MipsService, NativeBackend,
+    ParallelNativeBackend, PjrtBackend, ServiceConfig, ShardBackend, ShardTopK,
 };
 use fastk::hw::{Accelerator, AcceleratorId};
 use fastk::params::ParamCache;
@@ -28,6 +31,7 @@ use fastk::perfmodel::{self, predict_table2_row, vpu_probe};
 use fastk::plan::{plan_fixed, PlanSource, ServePlan};
 use fastk::recall::{self, RecallConfig};
 use fastk::runtime::{Executor, HostTensor, Manifest};
+use fastk::store::{self, OpenOptions, RowSource, ShardStore, StoreSpec};
 use fastk::topk::{self, SimdKernel, TwoStageParams};
 use fastk::util::cli::Args;
 use fastk::util::stats::fmt_ns;
@@ -49,6 +53,8 @@ fn main() {
         "table3" => cmd_table3(&args),
         "probe" => cmd_probe(&args),
         "serve" => cmd_serve(&args),
+        "build-index" => cmd_build_index(&args),
+        "inspect" => cmd_inspect(&args),
         "init-config" => cmd_init_config(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" | "-h" => {
@@ -81,7 +87,10 @@ fn usage() {
          \x20 table3\n\
          \x20 probe       [--elements 1048576] [--max-steps 128]\n\
          \x20 serve       [--config serve.json] [--queries 256]\n\
-         \x20 init-config [--out serve.json]\n\
+         \x20 build-index --out store.fastk [--config serve.json] [--d 64] [--shards 4]\n\
+         \x20             [--shard-size 16384] [--seed 42]\n\
+         \x20 inspect     --store store.fastk [--no-verify]\n\
+         \x20 init-config [--out serve.json] [--store store.fastk]\n\
          \x20 selftest    [--artifacts artifacts]\n"
     );
 }
@@ -314,10 +323,120 @@ fn cmd_probe(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_init_config(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["out"]);
+    args.reject_unknown(&["out", "store"]);
     let out = args.str_or("out", "serve.json");
-    std::fs::write(&out, LauncherConfig::default().to_json().to_string())?;
+    let mut cfg = LauncherConfig::default();
+    if let Some(path) = args.get("store") {
+        // `--store` writes a store-backed template: serve will build the
+        // store on first launch and mmap it on every launch after.
+        cfg.store = Some(StoreConfig {
+            path: path.to_string(),
+            build_if_missing: true,
+            verify_checksums: true,
+        });
+    }
+    std::fs::write(&out, cfg.to_json().to_string())?;
     println!("wrote {out}");
+    Ok(())
+}
+
+/// Build an on-disk shard store from the synthetic generator. Geometry
+/// comes from `--config` (falling back to the launcher defaults) with
+/// per-flag overrides; the output path from `--out` or the config's
+/// `store.path`.
+fn cmd_build_index(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["config", "out", "d", "shards", "shard-size", "seed"]);
+    let base = match args.get("config") {
+        Some(p) => LauncherConfig::from_file(Path::new(p))?,
+        None => LauncherConfig::default(),
+    };
+    let spec = StoreSpec {
+        d: args.usize_or("d", base.d),
+        shards: args.usize_or("shards", base.shards),
+        shard_size: args.usize_or("shard-size", base.shard_size),
+        seed: args.u64_or("seed", base.seed),
+    };
+    let out = args
+        .get("out")
+        .map(str::to_string)
+        .or_else(|| base.store.as_ref().map(|s| s.path.clone()))
+        .ok_or_else(|| {
+            anyhow::anyhow!("--out (or a config with a \"store\" block) is required")
+        })?;
+    let t0 = std::time::Instant::now();
+    let header = store::build_store(Path::new(&out), &spec)?;
+    let data_bytes = header.shard_data_bytes() * header.shards;
+    println!(
+        "wrote {out}: v{} {} shards x {} rows x {}-d f32 ({:.1} MiB data, seed {}) \
+         in {:.2}s (+ manifest)",
+        header.version,
+        header.shards,
+        header.shard_size,
+        header.d,
+        data_bytes as f64 / (1024.0 * 1024.0),
+        header.seed,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// Dump a store's header and manifest and verify its checksums — the
+/// operator-facing integrity check.
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["store", "no-verify"]);
+    let path = args
+        .get("store")
+        .ok_or_else(|| anyhow::anyhow!("--store is required"))?;
+    let verify = !args.bool_or("no-verify", false);
+    let t0 = std::time::Instant::now();
+    let st = ShardStore::open_with(
+        Path::new(path),
+        OpenOptions {
+            verify_checksums: verify,
+            copy: false,
+        },
+    )?;
+    let open_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let h = st.header();
+    println!("store:     {path}");
+    println!("format:    magic OK, version {}", h.version);
+    println!("dtype:     f32le");
+    println!(
+        "geometry:  {} shards x {} rows x {}-d ({} vectors, {} data bytes/shard)",
+        h.shards,
+        h.shard_size,
+        h.d,
+        h.n_total(),
+        h.shard_data_bytes()
+    );
+    println!("alignment: {}-byte regions", h.region_align);
+    println!("seed:      {}", h.seed);
+    println!("mapped:    {}", st.is_mapped());
+    for (s, r) in h.regions.iter().enumerate() {
+        println!(
+            "  shard {s}: offset {:>12}  len {:>12}  checksum {:#018x}",
+            r.offset, r.len, r.checksum
+        );
+    }
+    // The manifest was already read and validated by open; this re-read
+    // is display only, so a race (deleted since open) degrades the dump,
+    // not the inspection.
+    let manifest = store::format::manifest_path(Path::new(path));
+    println!(
+        "manifest:  {} ({})",
+        manifest.display(),
+        std::fs::read_to_string(&manifest)
+            .map(|s| s.trim().to_string())
+            .unwrap_or_else(|_| "<unreadable since open>".to_string())
+    );
+    if verify {
+        println!(
+            "checksums OK ({} regions; open + validate + verify took {open_ms:.1} ms)",
+            h.shards
+        );
+    } else {
+        println!("checksums skipped (--no-verify; open + validate took {open_ms:.1} ms)");
+    }
     Ok(())
 }
 
@@ -354,9 +473,126 @@ fn artifact_plan(cfg: &LauncherConfig) -> anyhow::Result<Option<ServePlan>> {
     }
 }
 
+/// How a shard's rows are produced inside its worker thread: a pre-sliced
+/// zero-copy region of an open store, or rows generated there from the
+/// per-shard seed (`seed ⊕ shard`) — so generation parallelizes across
+/// the shard spawn threads and no full-database copy ever exists.
+type RowsFn = Box<dyn FnOnce() -> anyhow::Result<RowSource> + Send>;
+
+fn shard_rows_fn(store: &Option<Arc<ShardStore>>, cfg: &LauncherConfig, s: usize) -> RowsFn {
+    match store {
+        Some(st) => {
+            let rows = st.shard_rows(s);
+            Box::new(move || Ok(rows))
+        }
+        None => {
+            let (seed, n, d) = (cfg.seed, cfg.shard_size, cfg.d);
+            Box::new(move || {
+                Ok(RowSource::from_vec(store::generate_shard_rows(seed, s, n, d)))
+            })
+        }
+    }
+}
+
+/// Build the shard-backend factory for the configured backend kind. Every
+/// backend consumes the same [`RowsFn`], so a new backend is one new match
+/// arm — not another copy of the per-backend slice/clone dance.
+fn backend_factory(
+    cfg: &LauncherConfig,
+    rows: RowsFn,
+    params: Option<TwoStageParams>,
+    kernel: Option<SimdKernel>,
+    threads: usize,
+) -> BackendFactory {
+    let (d, k) = (cfg.d, cfg.k);
+    match cfg.backend {
+        BackendKind::Native => {
+            let params = params.expect("native backends always have a plan");
+            let kernel = kernel.expect("native backends resolve a kernel");
+            Box::new(move || {
+                Ok(Box::new(NativeBackend::from_source(rows()?, d, k, Some(params), kernel))
+                    as Box<dyn ShardBackend>)
+            })
+        }
+        BackendKind::NativeParallel => {
+            let params = params.expect("native backends always have a plan");
+            let opts = EngineOptions {
+                threads,
+                fused: cfg.fused,
+                tile_rows: cfg.tile_rows,
+                kernel: kernel.expect("native backends resolve a kernel"),
+            };
+            Box::new(move || {
+                Ok(Box::new(ParallelNativeBackend::from_source(rows()?, d, k, params, opts))
+                    as Box<dyn ShardBackend>)
+            })
+        }
+        BackendKind::Pjrt => {
+            let dir = cfg.artifact_dir.clone();
+            let artifact = cfg.artifact.clone().expect("validated: pjrt requires artifact");
+            Box::new(move || {
+                let exec = Executor::new(Path::new(&dir))?;
+                let compiled = exec.compile(&artifact)?;
+                let rows = rows()?;
+                Ok(Box::new(PjrtBackend::new(compiled, &rows, d)?) as Box<dyn ShardBackend>)
+            })
+        }
+    }
+}
+
+/// Open the configured store — building it first when `build_if_missing`
+/// is set and the file is absent. Any validation failure (truncation, bad
+/// magic, version skew, checksum mismatch, manifest skew, or a geometry
+/// that doesn't match the serve config) is a launch error; there is no
+/// silent fallback to the synthetic generator.
+fn open_or_build_store(
+    sc: &StoreConfig,
+    cfg: &LauncherConfig,
+) -> anyhow::Result<(ShardStore, bool)> {
+    let path = Path::new(&sc.path);
+    let mut built = false;
+    if !path.exists() {
+        anyhow::ensure!(
+            sc.build_if_missing,
+            "store {path:?} does not exist (run `fastk build-index --out {}` or set \
+             \"build_if_missing\": true)",
+            sc.path
+        );
+        println!("store {} is missing; building it from the synthetic generator ...", sc.path);
+        store::build_store(
+            path,
+            &StoreSpec {
+                d: cfg.d,
+                shards: cfg.shards,
+                shard_size: cfg.shard_size,
+                seed: cfg.seed,
+            },
+        )?;
+        built = true;
+    }
+    let st = ShardStore::open_with(
+        path,
+        OpenOptions {
+            verify_checksums: sc.verify_checksums,
+            copy: false,
+        },
+    )?;
+    anyhow::ensure!(
+        st.shards() == cfg.shards && st.shard_size() == cfg.shard_size && st.d() == cfg.d,
+        "store geometry ({} shards x {} rows x {}-d) does not match the serve config \
+         ({} x {} x {}); rebuild the store or fix the config",
+        st.shards(),
+        st.shard_size(),
+        st.d(),
+        cfg.shards,
+        cfg.shard_size,
+        cfg.d
+    );
+    Ok((st, built))
+}
+
 /// Build and drive the service per config.
 fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
-    let mut rng = Rng::new(cfg.seed);
     // 0 = auto: split the available cores across the shards (all shard
     // workers run a batch concurrently, so per-shard pools must share).
     let threads = if cfg.threads == 0 {
@@ -376,7 +612,7 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         ),
     };
     println!(
-        "building database: {} shards x {} vectors x {}-d ({} backend)",
+        "database: {} shards x {} vectors x {}-d ({} backend)",
         cfg.shards,
         cfg.shard_size,
         cfg.d,
@@ -397,10 +633,31 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
             BackendKind::Pjrt => "pjrt".to_string(),
         }
     );
-    let n_total = cfg.shards * cfg.shard_size;
-    let db: Vec<f32> = (0..n_total * cfg.d)
-        .map(|_| rng.next_gaussian() as f32)
-        .collect();
+    // Row source: an on-disk store (opened once, scored in place — no
+    // full-database copy at any point) or the per-shard synthetic
+    // generator running inside each shard's spawn thread.
+    let t_open = std::time::Instant::now();
+    let (db_store, store_built): (Option<Arc<ShardStore>>, bool) = match &cfg.store {
+        Some(sc) => {
+            let (st, built) = open_or_build_store(sc, cfg)?;
+            (Some(Arc::new(st)), built)
+        }
+        None => (None, false),
+    };
+    let store_open_us = t_open.elapsed().as_micros() as u64;
+    let store_info = db_store.as_ref().map(|st| {
+        let mut info = st.info();
+        // Account the whole launch cost (build + open + verify) to the
+        // store, not just the open syscall path.
+        info.open_us = store_open_us;
+        info.built = store_built;
+        info
+    });
+    if let Some(info) = &store_info {
+        println!("store: {} open={:.1}ms", info.describe(), info.open_us as f64 / 1e3);
+    } else {
+        println!("rows: synthetic, generated per shard from seed {} ⊕ shard", cfg.seed);
+    }
 
     // Resolve the per-shard (B, K') serve plan. Native backends plan from
     // the recall target (or the config's explicit override); the PJRT
@@ -439,45 +696,9 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     let mut factories: Vec<BackendFactory> = Vec::new();
     let mut offsets = Vec::new();
     for s in 0..cfg.shards {
-        let chunk =
-            db[s * cfg.shard_size * cfg.d..(s + 1) * cfg.shard_size * cfg.d].to_vec();
-        let d = cfg.d;
-        let k = cfg.k;
         offsets.push(s * cfg.shard_size);
-        match cfg.backend {
-            BackendKind::Native => {
-                let params = params.expect("native backends always have a plan");
-                let kernel = kernel.expect("native backends resolve a kernel");
-                factories.push(Box::new(move || {
-                    Ok(Box::new(NativeBackend::with_kernel(chunk, d, k, Some(params), kernel))
-                        as Box<dyn ShardBackend>)
-                }))
-            }
-            BackendKind::NativeParallel => {
-                let params = params.expect("native backends always have a plan");
-                let opts = EngineOptions {
-                    threads,
-                    fused: cfg.fused,
-                    tile_rows: cfg.tile_rows,
-                    kernel: kernel.expect("native backends resolve a kernel"),
-                };
-                factories.push(Box::new(move || {
-                    Ok(Box::new(ParallelNativeBackend::with_options(
-                        chunk, d, k, params, opts,
-                    )) as Box<dyn ShardBackend>)
-                }))
-            }
-            BackendKind::Pjrt => {
-                let dir = cfg.artifact_dir.clone();
-                let artifact = cfg.artifact.clone().unwrap();
-                factories.push(Box::new(move || {
-                    let exec = Executor::new(Path::new(&dir))?;
-                    let compiled = exec.compile(&artifact)?;
-                    Ok(Box::new(PjrtBackend::new(compiled, &chunk, d)?)
-                        as Box<dyn ShardBackend>)
-                }));
-            }
-        }
+        let rows = shard_rows_fn(&db_store, cfg, s);
+        factories.push(backend_factory(cfg, rows, params, kernel, threads));
     }
 
     let svc = MipsService::start(
@@ -488,15 +709,21 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
             plan,
         },
         factories,
-        offsets,
+        offsets.clone(),
     )?;
-    // Report the resolved dispatch so `stats` / the shutdown summary show
-    // what the hot loops actually ran.
+    // Report the resolved dispatch and the store identity so `stats` /
+    // the shutdown summary show what the hot loops actually ran over.
     if let Some(k) = kernel {
         svc.metrics.set_kernel(k.name());
     }
+    if let Some(info) = store_info {
+        svc.metrics.set_store(info);
+    }
 
-    // Open-loop load: submit all queries, then collect.
+    // Open-loop load: submit all queries, then collect. Queries draw from
+    // a stream split off the root seed — distinct from every per-shard
+    // row stream (`seed ⊕ shard`), so query 0 is not shard 0's row 0.
+    let mut rng = Rng::new(cfg.seed).split();
     println!("serving {num_queries} queries ...");
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(num_queries);
@@ -538,20 +765,41 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         svc.metrics.summary()
     );
 
-    // Recall vs the exact oracle on a sample of queries.
+    // Recall vs the exact oracle on a sample of queries — shard by shard,
+    // since the global exact top-k is the merge of per-shard exact top-k:
+    // each shard's rows are mapped (store) or regenerated (synthetic) one
+    // shard at a time, so the oracle never materializes the full database
+    // either.
     let sample = responses.len().min(32);
+    let mut per_query: Vec<Vec<ShardTopK>> = vec![Vec::new(); sample];
+    let mut scores = vec![0f32; cfg.shard_size];
+    for s in 0..cfg.shards {
+        let rows: RowSource = match &db_store {
+            Some(st) => st.shard_rows(s),
+            None => RowSource::from_vec(store::generate_shard_rows(
+                cfg.seed,
+                s,
+                cfg.shard_size,
+                cfg.d,
+            )),
+        };
+        for (qi, (q, _)) in responses.iter().take(sample).enumerate() {
+            for (j, slot) in scores.iter_mut().enumerate() {
+                let v = &rows[j * cfg.d..(j + 1) * cfg.d];
+                *slot = q.iter().zip(v).map(|(a, b)| a * b).sum();
+            }
+            per_query[qi].push(ShardTopK {
+                shard: s,
+                candidates: topk::exact::topk_quickselect(&scores, cfg.k),
+            });
+        }
+    }
     let mut hit = 0usize;
-    for (q, resp) in responses.iter().take(sample) {
-        let scores: Vec<f32> = (0..n_total)
-            .map(|j| {
-                let v = &db[j * cfg.d..(j + 1) * cfg.d];
-                q.iter().zip(v).map(|(a, b)| a * b).sum()
-            })
-            .collect();
+    for (qi, (_, resp)) in responses.iter().take(sample).enumerate() {
         let exact: std::collections::HashSet<usize> =
-            topk::exact::topk_quickselect(&scores, cfg.k)
+            merge_shard_results(&per_query[qi], &offsets, cfg.k)
                 .into_iter()
-                .map(|c| c.index as usize)
+                .map(|(i, _)| i)
                 .collect();
         hit += resp
             .results

@@ -1,0 +1,528 @@
+//! The shard-store binary format (version 1) and its JSON manifest.
+//!
+//! Layout of a store file (all integers little-endian):
+//!
+//! ```text
+//! offset 0                              64-byte fixed header
+//!   [0..8)    magic  b"FASTKSTO"
+//!   [8..12)   format version   u32  (= 1)
+//!   [12..16)  dtype            u32  (1 = f32 little-endian)
+//!   [16..24)  d                u64  row dimensionality
+//!   [24..32)  shards           u64
+//!   [32..40)  shard_size       u64  rows per shard
+//!   [40..48)  region_align     u64  bytes (= 64)
+//!   [48..56)  seed             u64  synthetic-generator provenance
+//!   [56..64)  reserved (zero)
+//! offset 64                             shard region table
+//!   shards x { offset u64, len u64, checksum u64 }   (24 bytes each)
+//! offset round_up(64 + shards*24, region_align)      shard regions
+//!   shard 0: shard_size * d f32le values, zero-padded to region_align
+//!   shard 1: ...
+//! ```
+//!
+//! Every region starts on a `region_align` (64-byte — one cache line, the
+//! widest SIMD vector) boundary, so a page-aligned `mmap` base plus any
+//! region offset is always a validly aligned `&[f32]`, and a tile of rows
+//! never begins mid-cache-line. The per-region checksum (FNV-1a 64 over
+//! the *padded* region bytes, padding included) makes any bit corruption —
+//! data or padding — a loud open-time error. The file length is exact by
+//! construction; trailing or missing bytes are detected as corruption.
+//!
+//! A store is two files: `<path>` (the binary above) and
+//! `<path>.manifest.json`, a small human-readable manifest carrying the
+//! same geometry. The loader requires both and fails loudly when they
+//! disagree — the manifest is the operator-facing description, the header
+//! is the ground truth, and skew between them means *something* rewrote
+//! one without the other.
+//!
+//! **Version policy:** the header leads with magic + version; readers
+//! accept exactly the versions they know (currently: 1) and reject
+//! everything else at open — never a best-effort parse. Any layout change
+//! (field, alignment, dtype, checksum algorithm) bumps
+//! [`FORMAT_VERSION`]; old binaries then refuse new stores and vice
+//! versa, loudly, which is the intended failure mode for a serving
+//! system.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::round_up;
+
+/// File magic: the first 8 bytes of every fastk shard store.
+pub const MAGIC: [u8; 8] = *b"FASTKSTO";
+/// Current (and only) format version this build reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+/// The only dtype defined so far: little-endian `f32` rows.
+pub const DTYPE_F32LE: u32 = 1;
+/// Region alignment in bytes: one cache line / widest SIMD vector, so a
+/// mapped region is always a validly aligned `&[f32]` whose tiles never
+/// start mid-line.
+pub const REGION_ALIGN: u64 = 64;
+/// Size of the fixed header preceding the region table.
+pub const FIXED_HEADER_BYTES: usize = 64;
+/// Size of one region-table entry.
+pub const REGION_ENTRY_BYTES: usize = 24;
+
+/// One shard's row region in the file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRegion {
+    /// Byte offset of the region from the start of the file (a multiple
+    /// of [`REGION_ALIGN`]).
+    pub offset: u64,
+    /// Padded region length in bytes (a multiple of [`REGION_ALIGN`]).
+    pub len: u64,
+    /// FNV-1a 64 over the padded region bytes.
+    pub checksum: u64,
+}
+
+/// Parsed store header: geometry plus the shard region table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreHeader {
+    /// Format version (see the version policy in the module docs).
+    pub version: u32,
+    /// Row dtype ([`DTYPE_F32LE`]).
+    pub dtype: u32,
+    /// Row dimensionality.
+    pub d: u64,
+    /// Number of shards.
+    pub shards: u64,
+    /// Rows per shard.
+    pub shard_size: u64,
+    /// Region alignment recorded in the file.
+    pub region_align: u64,
+    /// Seed the synthetic generator used to build the store.
+    pub seed: u64,
+    /// Per-shard regions, in shard order.
+    pub regions: Vec<ShardRegion>,
+}
+
+impl StoreHeader {
+    /// Total rows across all shards.
+    pub fn n_total(&self) -> u64 {
+        self.shards * self.shard_size
+    }
+
+    /// Unpadded bytes of one shard's rows.
+    pub fn shard_data_bytes(&self) -> u64 {
+        self.shard_size * self.d * 4
+    }
+}
+
+/// Incremental FNV-1a 64 — the store's region checksum, in streaming form
+/// so the writer can fold bytes in as they go to disk. Chosen for being
+/// trivially reimplementable (the format must outlive this code). Note
+/// that *verifying* at open necessarily reads every region byte — cheap
+/// for RAM-scale stores, but a full sequential pass (and a page-cache
+/// flush) for a larger-than-RAM corpus; that is why verification is a
+/// knob (`"verify_checksums": false`) and not unconditional. This is the
+/// *single* definition of the algorithm; [`fnv1a64`] is the one-shot
+/// convenience over it.
+#[derive(Debug, Clone)]
+pub struct Checksum {
+    h: u64,
+}
+
+impl Default for Checksum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Checksum {
+    /// Start from the FNV-1a offset basis.
+    pub fn new() -> Checksum {
+        Checksum {
+            h: 0xcbf2_9ce4_8422_2325,
+        }
+    }
+
+    /// Fold `bytes` into the running checksum.
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// The checksum of everything folded in so far.
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+/// One-shot FNV-1a 64 over `bytes` (see [`Checksum`]).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut c = Checksum::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// The computed layout every writer and reader agrees on: region offsets,
+/// padded lengths, and the exact file size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layout {
+    /// Byte offset of shard 0's region.
+    pub first_region: u64,
+    /// Padded byte length of every region (all shards are the same shape).
+    pub region_len: u64,
+    /// Exact total file size.
+    pub file_len: u64,
+}
+
+/// Compute the v1 layout for a `(shards, shard_size, d)` geometry.
+pub fn layout(shards: u64, shard_size: u64, d: u64) -> Result<Layout> {
+    ensure!(shards > 0 && shard_size > 0 && d > 0, "empty store geometry");
+    let table_end = FIXED_HEADER_BYTES as u64
+        + shards
+            .checked_mul(REGION_ENTRY_BYTES as u64)
+            .context("region table size overflow")?;
+    let first_region = round_up(table_end as usize, REGION_ALIGN as usize) as u64;
+    let data = shard_size
+        .checked_mul(d)
+        .and_then(|v| v.checked_mul(4))
+        .context("shard byte size overflow")?;
+    let region_len = round_up(data as usize, REGION_ALIGN as usize) as u64;
+    let file_len = first_region
+        .checked_add(shards.checked_mul(region_len).context("store size overflow")?)
+        .context("store size overflow")?;
+    Ok(Layout {
+        first_region,
+        region_len,
+        file_len,
+    })
+}
+
+/// Encode the fixed header + region table (the file's first
+/// `round_up(64 + shards*24, REGION_ALIGN)` bytes, padding included).
+pub fn encode_header(h: &StoreHeader) -> Vec<u8> {
+    let lay = layout(h.shards, h.shard_size, h.d).expect("valid geometry");
+    let mut out = Vec::with_capacity(lay.first_region as usize);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&h.version.to_le_bytes());
+    out.extend_from_slice(&h.dtype.to_le_bytes());
+    out.extend_from_slice(&h.d.to_le_bytes());
+    out.extend_from_slice(&h.shards.to_le_bytes());
+    out.extend_from_slice(&h.shard_size.to_le_bytes());
+    out.extend_from_slice(&h.region_align.to_le_bytes());
+    out.extend_from_slice(&h.seed.to_le_bytes());
+    out.resize(FIXED_HEADER_BYTES, 0); // reserved
+    for r in &h.regions {
+        out.extend_from_slice(&r.offset.to_le_bytes());
+        out.extend_from_slice(&r.len.to_le_bytes());
+        out.extend_from_slice(&r.checksum.to_le_bytes());
+    }
+    out.resize(lay.first_region as usize, 0); // pad to the first region
+    out
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap())
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap())
+}
+
+/// Parse and fully validate a store header from the file's bytes. Every
+/// corruption mode is a *distinct, loud error* — truncation, bad magic,
+/// version skew, geometry nonsense, or a region table that disagrees with
+/// the computed layout. Checksum verification is separate (the loader
+/// does it over the mapped regions).
+pub fn parse_header(bytes: &[u8]) -> Result<StoreHeader> {
+    ensure!(
+        bytes.len() >= FIXED_HEADER_BYTES,
+        "store file truncated: {} bytes, the fixed header alone is {} bytes",
+        bytes.len(),
+        FIXED_HEADER_BYTES
+    );
+    ensure!(
+        bytes[..8] == MAGIC,
+        "bad magic {:?}: not a fastk shard store",
+        &bytes[..8]
+    );
+    let version = read_u32(bytes, 8);
+    ensure!(
+        version == FORMAT_VERSION,
+        "unsupported store format version {version} (this build reads only v{FORMAT_VERSION}; \
+         rebuild the store with this binary's `fastk build-index`)"
+    );
+    let dtype = read_u32(bytes, 12);
+    ensure!(
+        dtype == DTYPE_F32LE,
+        "unsupported store dtype {dtype} (this build reads only f32le = {DTYPE_F32LE})"
+    );
+    let d = read_u64(bytes, 16);
+    let shards = read_u64(bytes, 24);
+    let shard_size = read_u64(bytes, 32);
+    let region_align = read_u64(bytes, 40);
+    let seed = read_u64(bytes, 48);
+    ensure!(
+        d > 0 && shards > 0 && shard_size > 0,
+        "store header has empty geometry (d={d}, shards={shards}, shard_size={shard_size})"
+    );
+    ensure!(
+        region_align == REGION_ALIGN,
+        "store region alignment {region_align} != the v{FORMAT_VERSION} alignment {REGION_ALIGN}"
+    );
+    let lay = layout(shards, shard_size, d)?;
+    ensure!(
+        bytes.len() as u64 == lay.file_len,
+        "store file length {} != the {} bytes its header implies \
+         (truncated or trailing garbage)",
+        bytes.len(),
+        lay.file_len
+    );
+    let mut regions = Vec::with_capacity(shards as usize);
+    for s in 0..shards {
+        let at = FIXED_HEADER_BYTES + (s as usize) * REGION_ENTRY_BYTES;
+        let r = ShardRegion {
+            offset: read_u64(bytes, at),
+            len: read_u64(bytes, at + 8),
+            checksum: read_u64(bytes, at + 16),
+        };
+        let want_offset = lay.first_region + s * lay.region_len;
+        ensure!(
+            r.offset == want_offset && r.len == lay.region_len,
+            "shard {s} region table entry (offset {}, len {}) disagrees with the \
+             computed layout (offset {want_offset}, len {})",
+            r.offset,
+            r.len,
+            lay.region_len
+        );
+        regions.push(r);
+    }
+    Ok(StoreHeader {
+        version,
+        dtype,
+        d,
+        shards,
+        shard_size,
+        region_align,
+        seed,
+        regions,
+    })
+}
+
+/// Path of the JSON manifest that accompanies a store file:
+/// `<store>.manifest.json`.
+pub fn manifest_path(store: &Path) -> PathBuf {
+    let mut s = store.as_os_str().to_os_string();
+    s.push(".manifest.json");
+    PathBuf::from(s)
+}
+
+/// Build the manifest JSON for a header.
+pub fn manifest_json(h: &StoreHeader) -> Json {
+    Json::obj(vec![
+        ("format_version", Json::num(h.version as f64)),
+        ("dtype", Json::str("f32le")),
+        ("d", Json::num(h.d as f64)),
+        ("shards", Json::num(h.shards as f64)),
+        ("shard_size", Json::num(h.shard_size as f64)),
+        ("n_total", Json::num(h.n_total() as f64)),
+        ("region_align", Json::num(h.region_align as f64)),
+        // A string, not a JSON number: the full u64 range must survive the
+        // manifest round trip (f64 would corrupt seeds above 2^53).
+        ("seed", Json::str(&h.seed.to_string())),
+        ("checksum", Json::str("fnv1a64")),
+        ("created_by", Json::str("fastk build-index")),
+    ])
+}
+
+/// Cross-check a parsed manifest against the binary header. Any
+/// disagreement is an error: the two files describe one store and skew
+/// means one of them was rewritten or swapped.
+pub fn check_manifest(manifest: &Json, h: &StoreHeader) -> Result<()> {
+    let field = |key: &str| -> Result<u64> {
+        manifest
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .map(|v| v as u64)
+            .with_context(|| format!("store manifest is missing numeric field `{key}`"))
+    };
+    for (key, header_value) in [
+        ("format_version", h.version as u64),
+        ("d", h.d),
+        ("shards", h.shards),
+        ("shard_size", h.shard_size),
+        ("n_total", h.n_total()),
+    ] {
+        let m = field(key)?;
+        ensure!(
+            m == header_value,
+            "store manifest disagrees with the binary header: {key} is {m} in the \
+             manifest but {header_value} in the header"
+        );
+    }
+    let seed: u64 = manifest
+        .get("seed")
+        .and_then(|v| v.as_str())
+        .and_then(|s| s.parse().ok())
+        .context("store manifest is missing (or has a non-string) `seed`")?;
+    ensure!(
+        seed == h.seed,
+        "store manifest disagrees with the binary header: seed is {seed} in the \
+         manifest but {} in the header",
+        h.seed
+    );
+    match manifest.get("dtype").and_then(|v| v.as_str()) {
+        Some("f32le") => Ok(()),
+        Some(other) => bail!("store manifest declares unsupported dtype {other:?}"),
+        None => bail!("store manifest is missing field `dtype`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header(shards: u64, shard_size: u64, d: u64) -> StoreHeader {
+        let lay = layout(shards, shard_size, d).unwrap();
+        StoreHeader {
+            version: FORMAT_VERSION,
+            dtype: DTYPE_F32LE,
+            d,
+            shards,
+            shard_size,
+            region_align: REGION_ALIGN,
+            seed: 42,
+            regions: (0..shards)
+                .map(|s| ShardRegion {
+                    offset: lay.first_region + s * lay.region_len,
+                    len: lay.region_len,
+                    checksum: 0xdead_beef ^ s,
+                })
+                .collect(),
+        }
+    }
+
+    /// Pad an encoded header out to the full file length so parse_header's
+    /// exact-length check passes.
+    fn as_file(h: &StoreHeader) -> Vec<u8> {
+        let lay = layout(h.shards, h.shard_size, h.d).unwrap();
+        let mut bytes = encode_header(h);
+        bytes.resize(lay.file_len as usize, 0);
+        bytes
+    }
+
+    #[test]
+    fn layout_is_aligned_and_exact() {
+        let lay = layout(3, 100, 7).unwrap();
+        assert_eq!(lay.first_region % REGION_ALIGN, 0);
+        assert_eq!(lay.region_len % REGION_ALIGN, 0);
+        assert!(lay.region_len >= 100 * 7 * 4);
+        assert!(lay.region_len - 100 * 7 * 4 < REGION_ALIGN);
+        assert_eq!(lay.file_len, lay.first_region + 3 * lay.region_len);
+        // The table for 3 shards ends at 64 + 72 = 136 -> first region 192.
+        assert_eq!(lay.first_region, 192);
+    }
+
+    #[test]
+    fn header_round_trips() {
+        for (s, n, d) in [(1u64, 64u64, 8u64), (4, 1000, 13), (7, 16, 1)] {
+            let h = header(s, n, d);
+            let parsed = parse_header(&as_file(&h)).unwrap();
+            assert_eq!(parsed, h, "({s}, {n}, {d})");
+        }
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn corruption_errors_are_distinct() {
+        let h = header(2, 64, 8);
+        let good = as_file(&h);
+        assert!(parse_header(&good).is_ok());
+
+        // Truncated below the fixed header.
+        let err = parse_header(&good[..32]).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        // Truncated mid-data (length mismatch).
+        let err = parse_header(&good[..good.len() - 10]).unwrap_err().to_string();
+        assert!(err.contains("length"), "{err}");
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        // Version skew.
+        let mut bad = good.clone();
+        bad[8] = 9;
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("version 9"), "{err}");
+
+        // Unknown dtype.
+        let mut bad = good.clone();
+        bad[12] = 3;
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("dtype"), "{err}");
+
+        // Region table entry drifted from the computed layout.
+        let mut bad = good.clone();
+        bad[FIXED_HEADER_BYTES] ^= 0x40;
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("region table"), "{err}");
+    }
+
+    #[test]
+    fn manifest_round_trips_and_detects_skew() {
+        let h = header(2, 64, 8);
+        let m = manifest_json(&h);
+        let parsed = Json::parse(&m.to_string()).unwrap();
+        check_manifest(&parsed, &h).unwrap();
+
+        // d disagreement between manifest and header.
+        let mut skewed = h.clone();
+        skewed.d = 16;
+        let lay = layout(2, 64, 16).unwrap();
+        for (s, r) in skewed.regions.iter_mut().enumerate() {
+            r.offset = lay.first_region + s as u64 * lay.region_len;
+            r.len = lay.region_len;
+        }
+        let err = check_manifest(&parsed, &skewed).unwrap_err().to_string();
+        assert!(err.contains("disagrees"), "{err}");
+        assert!(err.contains('d'), "{err}");
+
+        // Missing field.
+        let err = check_manifest(&Json::parse("{}").unwrap(), &h)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn manifest_seed_survives_the_full_u64_range() {
+        // Seeds above 2^53 would corrupt through a JSON number (f64); the
+        // manifest stores the seed as a string for exactly this reason.
+        let mut h = header(1, 64, 8);
+        h.seed = u64::MAX - 1;
+        let parsed = Json::parse(&manifest_json(&h).to_string()).unwrap();
+        check_manifest(&parsed, &h).unwrap();
+        // And a seed mismatch is loud skew, like every other field.
+        let mut other = h.clone();
+        other.seed = 7;
+        let err = check_manifest(&parsed, &other).unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+    }
+
+    #[test]
+    fn streaming_checksum_matches_one_shot() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let mut c = Checksum::new();
+        for piece in data.chunks(37) {
+            c.update(piece);
+        }
+        assert_eq!(c.finish(), fnv1a64(&data));
+    }
+}

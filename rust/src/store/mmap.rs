@@ -1,0 +1,312 @@
+//! Minimal memory-mapping wrapper: a read-only file mapping with a
+//! portable heap-backed fallback behind the same API.
+//!
+//! This vendored workspace has no `libc` crate, so the two syscalls the
+//! store needs — `mmap` and `munmap` — are declared as direct `extern "C"`
+//! items, gated to 64-bit unix targets (where `off_t` is 64-bit and the
+//! raw declaration below matches the platform ABI). Everything else —
+//! non-unix targets, 32-bit targets, and callers that explicitly want a
+//! private copy ([`Mmap::read`]) — goes through `std::fs::read` into an
+//! 8-byte-aligned heap buffer, so [`Mmap::bytes`] and [`Mmap::f32_slice`]
+//! behave identically either way; only [`Mmap::is_mapped`] tells the two
+//! apart. Choosing the fallback is *only* about how bytes get into memory:
+//! store validation (magic, version, checksums) is the same on both paths
+//! and never falls back on error.
+
+use std::fs::File;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        /// `mmap(2)`. Declared directly (no libc crate in this vendored
+        /// workspace); the `i64` offset matches `off_t` on every 64-bit
+        /// unix this builds for, which is why the module is gated to
+        /// `target_pointer_width = "64"`.
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        /// `munmap(2)`.
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+enum Backing {
+    /// A live `mmap(2)` mapping (unix, 64-bit targets only).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped {
+        ptr: std::ptr::NonNull<u8>,
+        len: usize,
+    },
+    /// The portable fallback: the whole file copied into an 8-byte-aligned
+    /// heap buffer (`Vec<u64>`, so `f32` views are always well aligned).
+    Owned { buf: Vec<u64>, len: usize },
+}
+
+/// A read-only view of a file's bytes: zero-copy (`mmap`) where the
+/// platform allows, a private heap copy everywhere else.
+pub struct Mmap {
+    backing: Backing,
+}
+
+// Safety: the mapping is PROT_READ and never mutated through this type;
+// the owned fallback is an ordinary heap buffer. Sharing &Mmap across
+// threads is therefore sound. (Mutating the *file* while it is mapped is
+// outside the contract — see the store docs.)
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+impl Mmap {
+    /// Map `path` read-only, zero-copy where the platform supports it
+    /// (64-bit unix); otherwise fall back to [`Mmap::read`]. An empty file
+    /// always uses the owned (empty) backing — `mmap` rejects length 0.
+    pub fn map(path: &Path) -> Result<Mmap> {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            use std::os::unix::io::AsRawFd;
+
+            let file = File::open(path).with_context(|| format!("opening {path:?}"))?;
+            let len = file
+                .metadata()
+                .with_context(|| format!("stat {path:?}"))?
+                .len();
+            let len = usize::try_from(len).context("file too large to map")?;
+            if len == 0 {
+                return Ok(Mmap {
+                    backing: Backing::Owned { buf: Vec::new(), len: 0 },
+                });
+            }
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error())
+                    .with_context(|| format!("mmap of {path:?} ({len} bytes) failed"));
+            }
+            // The fd can be closed once the mapping exists; the mapping
+            // keeps the pages alive.
+            let ptr = std::ptr::NonNull::new(ptr as *mut u8)
+                .expect("mmap returned neither MAP_FAILED nor a valid address");
+            Ok(Mmap {
+                backing: Backing::Mapped { ptr, len },
+            })
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            Self::read(path)
+        }
+    }
+
+    /// Read `path` into an aligned private heap buffer — the portable
+    /// fallback path, also useful when the caller wants the file contents
+    /// decoupled from later file mutation (tests, benches).
+    pub fn read(path: &Path) -> Result<Mmap> {
+        let mut file = File::open(path).with_context(|| format!("opening {path:?}"))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {path:?}"))?
+            .len();
+        let len = usize::try_from(len).context("file too large to read")?;
+        // Read into a u64 buffer so the byte view is 8-byte aligned and
+        // `f32` reinterpretation is always sound.
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len)
+        };
+        std::io::Read::read_exact(&mut file, bytes)
+            .with_context(|| format!("reading {path:?}"))?;
+        Ok(Mmap {
+            backing: Backing::Owned { buf, len },
+        })
+    }
+
+    /// Number of bytes in the view.
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { len, .. } => *len,
+            Backing::Owned { len, .. } => *len,
+        }
+    }
+
+    /// True when the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the bytes come from a live `mmap` mapping (zero-copy)
+    /// rather than the heap-copy fallback.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { .. } => true,
+            Backing::Owned { .. } => false,
+        }
+    }
+
+    /// The whole view as bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(ptr.as_ptr(), *len)
+            },
+            Backing::Owned { buf, len } => unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len)
+            },
+        }
+    }
+
+    /// Reinterpret `floats` little-endian `f32` values starting at
+    /// `byte_offset` as a slice, in place. Panics on misalignment or
+    /// out-of-bounds — the store loader validates every region offset once
+    /// at open, so a panic here is a caller bug, not a data error.
+    pub fn f32_slice(&self, byte_offset: usize, floats: usize) -> &[f32] {
+        let bytes = self.bytes();
+        let end = byte_offset
+            .checked_add(floats.checked_mul(4).expect("f32 region size overflow"))
+            .expect("f32 region end overflow");
+        assert!(
+            end <= bytes.len(),
+            "f32 region [{byte_offset}, {end}) exceeds view of {} bytes",
+            bytes.len()
+        );
+        let ptr = unsafe { bytes.as_ptr().add(byte_offset) };
+        assert_eq!(
+            ptr.align_offset(std::mem::align_of::<f32>()),
+            0,
+            "f32 region at byte offset {byte_offset} is misaligned"
+        );
+        // Safety: in-bounds, aligned, and the backing is immutable for the
+        // lifetime of &self. The store format is little-endian f32; the
+        // loader rejects big-endian hosts at open, so the bit patterns are
+        // the host's native f32 here.
+        unsafe { std::slice::from_raw_parts(ptr as *const f32, floats) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Backing::Mapped { ptr, len } = &self.backing {
+            // A failed munmap leaks the mapping but cannot corrupt memory;
+            // there is nothing useful to do with the error in drop.
+            unsafe {
+                sys::munmap(ptr.as_ptr() as *mut std::os::raw::c_void, *len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_file(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "fastk-mmap-{}-{name}",
+            std::process::id()
+        ));
+        std::fs::write(&path, contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn map_and_read_agree() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let path = tmp_file("agree", &data);
+        let mapped = Mmap::map(&path).unwrap();
+        let copied = Mmap::read(&path).unwrap();
+        assert_eq!(mapped.bytes(), &data[..]);
+        assert_eq!(copied.bytes(), &data[..]);
+        assert_eq!(mapped.len(), data.len());
+        assert!(!copied.is_mapped());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_is_empty_view() {
+        let path = tmp_file("empty", &[]);
+        for m in [Mmap::map(&path).unwrap(), Mmap::read(&path).unwrap()] {
+            assert!(m.is_empty());
+            assert_eq!(m.bytes(), &[] as &[u8]);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let path = std::env::temp_dir().join("fastk-mmap-does-not-exist");
+        assert!(Mmap::map(&path).is_err());
+        assert!(Mmap::read(&path).is_err());
+    }
+
+    #[test]
+    fn f32_slice_round_trips_values() {
+        let values: Vec<f32> = (0..64).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut bytes = Vec::new();
+        for v in &values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = tmp_file("floats", &bytes);
+        for m in [Mmap::map(&path).unwrap(), Mmap::read(&path).unwrap()] {
+            assert_eq!(m.f32_slice(0, values.len()), &values[..]);
+            // An interior, 4-byte-aligned region.
+            assert_eq!(m.f32_slice(8, 4), &values[2..6]);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds view")]
+    fn f32_slice_out_of_bounds_panics() {
+        let path = tmp_file("oob", &[0u8; 16]);
+        let m = Mmap::read(&path).unwrap();
+        let _ = m.f32_slice(8, 4);
+    }
+
+    #[test]
+    fn mmap_is_shareable_across_threads() {
+        let data = vec![7u8; 4096];
+        let path = tmp_file("threads", &data);
+        let m = std::sync::Arc::new(Mmap::map(&path).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || m.bytes().iter().map(|&b| b as u64).sum::<u64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,149 @@
+//! Persistent shard store: a zero-copy, memory-mapped on-disk database.
+//!
+//! The serving paths upstream of this module score row-major `f32`
+//! databases. Before the store existed the only source of rows was a
+//! synthetic generator materializing the whole database in RAM (and then
+//! copying each shard's slice into its backend — ~2× peak RSS). This
+//! module adds the missing persistence layer, in the mmap-and-validate-once
+//! style of log/storage engines (squirrel-json is the exemplar: validate
+//! structure a single time at open, then read in place forever):
+//!
+//! - [`format`] — the versioned v1 binary layout (magic + header, 64-byte
+//!   aligned per-shard row regions, per-region FNV-1a checksums) and its
+//!   JSON manifest;
+//! - [`writer`] — [`build_store`](writer::build_store), the streaming
+//!   builder behind `fastk build-index`, plus
+//!   [`generate_shard_rows`](writer::generate_shard_rows), the one
+//!   per-shard-seed definition of the synthetic database;
+//! - [`mmap`] — the minimal `mmap`/`munmap` FFI wrapper with a portable
+//!   `std::fs::read` fallback behind the same API;
+//! - [`reader`] — [`ShardStore`](reader::ShardStore): open, validate
+//!   *once* (header, manifest cross-check, optional checksums), then hand
+//!   out per-shard [`RowSource`]s that point straight into the mapping;
+//! - [`RowSource`] — the abstraction the backends score through: an owned
+//!   `Vec<f32>` or a mapped region, behind one `&[f32]` view, so the SIMD
+//!   kernels run unchanged (and bit-identically) over either.
+//!
+//! Corruption is never a fallback: a truncated file, bad magic, version
+//! skew, checksum mismatch, or manifest/header disagreement each fail the
+//! open with a distinct error.
+
+pub mod format;
+pub mod mmap;
+pub mod reader;
+pub mod writer;
+
+use std::sync::Arc;
+
+pub use mmap::Mmap;
+pub use reader::{OpenOptions, ShardStore, StoreInfo};
+pub use writer::{build_store, generate_shard_rows, shard_seed, StoreSpec};
+
+/// Where a backend's database rows live: an owned heap vector (synthetic
+/// or test data) or a region of a memory-mapped store file. Cloning is
+/// cheap (both variants are `Arc`-backed) and every clone views the same
+/// bytes, so a backend and its worker pool can share one source.
+///
+/// Both variants dereference to the same row-major `[n, d]` `&[f32]`, so
+/// the scoring kernels cannot tell them apart — which is precisely the
+/// bit-identity argument for mmap-backed serving: same bytes, same kernel,
+/// same reduction order, same results.
+#[derive(Clone, Debug)]
+pub enum RowSource {
+    /// Rows owned on the heap.
+    Owned(Arc<Vec<f32>>),
+    /// A validated region of a store mapping (`floats` f32 values starting
+    /// `byte_offset` bytes into `map`).
+    Mapped {
+        /// The open store mapping (shared by all of the store's regions).
+        map: Arc<Mmap>,
+        /// Byte offset of this region's first row.
+        byte_offset: usize,
+        /// Number of `f32` values in the region.
+        floats: usize,
+    },
+}
+
+impl RowSource {
+    /// Wrap an owned vector.
+    pub fn from_vec(rows: Vec<f32>) -> RowSource {
+        RowSource::Owned(Arc::new(rows))
+    }
+
+    /// The rows as one contiguous `&[f32]`.
+    pub fn rows(&self) -> &[f32] {
+        match self {
+            RowSource::Owned(v) => v,
+            RowSource::Mapped {
+                map,
+                byte_offset,
+                floats,
+            } => map.f32_slice(*byte_offset, *floats),
+        }
+    }
+
+    /// Number of `f32` values.
+    pub fn len(&self) -> usize {
+        match self {
+            RowSource::Owned(v) => v.len(),
+            RowSource::Mapped { floats, .. } => *floats,
+        }
+    }
+
+    /// True when the source holds no values.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the rows are served out of a live file mapping
+    /// (zero-copy) rather than the heap.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            RowSource::Owned(_) => false,
+            RowSource::Mapped { map, .. } => map.is_mapped(),
+        }
+    }
+}
+
+impl std::ops::Deref for RowSource {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.rows()
+    }
+}
+
+impl From<Vec<f32>> for RowSource {
+    fn from(rows: Vec<f32>) -> RowSource {
+        RowSource::from_vec(rows)
+    }
+}
+
+impl From<Arc<Vec<f32>>> for RowSource {
+    fn from(rows: Arc<Vec<f32>>) -> RowSource {
+        RowSource::Owned(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_source_derefs_to_rows() {
+        let src = RowSource::from_vec(vec![1.0, 2.0, 3.0]);
+        assert_eq!(&src[..], &[1.0, 2.0, 3.0]);
+        assert_eq!(src.len(), 3);
+        assert!(!src.is_empty());
+        assert!(!src.is_mapped());
+        let clone = src.clone();
+        assert_eq!(&clone[..], &src[..]);
+    }
+
+    #[test]
+    fn arc_conversion_shares_the_allocation() {
+        let rows = Arc::new(vec![5.0f32; 8]);
+        let src: RowSource = rows.clone().into();
+        assert_eq!(src.rows().as_ptr(), rows.as_ptr());
+    }
+}

@@ -1,0 +1,478 @@
+//! Store loader: open, validate once, serve rows in place.
+//!
+//! [`ShardStore::open`] does all validation a single time — header parse,
+//! manifest cross-check, and (by default) a checksum pass over every
+//! region — and then never looks at the bytes again except to score them:
+//! [`ShardStore::shard_rows`] hands out [`RowSource`]s that point straight
+//! into the mapping, so the backends read database rows out of the page
+//! cache with zero copies and zero per-row checks. Any validation failure
+//! is a distinct open-time error; there is no degraded or silent-fallback
+//! open.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+use super::format::{self, StoreHeader};
+use super::mmap::Mmap;
+use super::RowSource;
+
+/// Open-time knobs (the serve config's `"store"` block, resolved).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpenOptions {
+    /// Verify every region's FNV-1a checksum at open (the default). Off
+    /// skips only the checksum pass; structural validation always runs.
+    pub verify_checksums: bool,
+    /// Force the portable heap-copy path instead of `mmap` (tests and
+    /// A/B benches; implied on targets without the mmap FFI).
+    pub copy: bool,
+}
+
+impl Default for OpenOptions {
+    fn default() -> Self {
+        OpenOptions {
+            verify_checksums: true,
+            copy: false,
+        }
+    }
+}
+
+/// Identity + startup-cost summary of an opened store, recorded in
+/// `ServiceMetrics` and surfaced in the net `stats` reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreInfo {
+    /// Path the store was opened from.
+    pub path: String,
+    /// Format version of the file.
+    pub version: u32,
+    /// Shard count.
+    pub shards: usize,
+    /// Rows per shard.
+    pub shard_size: usize,
+    /// Row dimensionality.
+    pub d: usize,
+    /// True when rows are served from a live mapping (zero-copy), false on
+    /// the portable heap-copy fallback.
+    pub mapped: bool,
+    /// Time spent opening + validating (and building, when
+    /// `build_if_missing` built the store this launch), microseconds.
+    pub open_us: u64,
+    /// True when `build_if_missing` built the store during this launch.
+    pub built: bool,
+}
+
+impl StoreInfo {
+    /// One-token-ish identity string for log lines and `summary()`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}@v{} {}x{}x{} ({}{})",
+            self.path,
+            self.version,
+            self.shards,
+            self.shard_size,
+            self.d,
+            if self.mapped { "mmap" } else { "read" },
+            if self.built { ", built" } else { "" }
+        )
+    }
+}
+
+/// An opened, fully validated shard store.
+pub struct ShardStore {
+    path: PathBuf,
+    map: Arc<Mmap>,
+    header: StoreHeader,
+    open_time: Duration,
+}
+
+impl ShardStore {
+    /// Open with default options (mmap where possible, verify checksums).
+    pub fn open(path: &Path) -> Result<ShardStore> {
+        Self::open_with(path, OpenOptions::default())
+    }
+
+    /// Open `path`, validating everything exactly once. Every corruption
+    /// mode is a distinct error: missing file, missing/garbled manifest,
+    /// truncation, bad magic, version skew, layout drift, checksum
+    /// mismatch, manifest/header disagreement.
+    pub fn open_with(path: &Path, opts: OpenOptions) -> Result<ShardStore> {
+        let t0 = Instant::now();
+        ensure!(
+            cfg!(target_endian = "little"),
+            "the shard store format is little-endian; this host is big-endian"
+        );
+        let manifest_path = format::manifest_path(path);
+        let manifest_text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "store manifest missing or unreadable at {manifest_path:?} \
+                 (was the store built with `fastk build-index`?)"
+            )
+        })?;
+        let manifest = Json::parse(&manifest_text).map_err(|e| {
+            anyhow::anyhow!("store manifest {manifest_path:?} is not valid JSON: {e}")
+        })?;
+
+        let map = if opts.copy {
+            Mmap::read(path)
+        } else {
+            Mmap::map(path)
+        }
+        .with_context(|| format!("opening store data file {path:?}"))?;
+        let header = format::parse_header(map.bytes())
+            .with_context(|| format!("validating store {path:?}"))?;
+        format::check_manifest(&manifest, &header)
+            .with_context(|| format!("validating store {path:?}"))?;
+
+        if opts.verify_checksums {
+            for (s, r) in header.regions.iter().enumerate() {
+                let region = &map.bytes()[r.offset as usize..(r.offset + r.len) as usize];
+                let got = format::fnv1a64(region);
+                ensure!(
+                    got == r.checksum,
+                    "store {path:?} shard {s} region checksum mismatch \
+                     (header {:#018x}, file {got:#018x}): the store is corrupt",
+                    r.checksum
+                );
+            }
+        }
+
+        Ok(ShardStore {
+            path: path.to_path_buf(),
+            map: Arc::new(map),
+            header,
+            open_time: t0.elapsed(),
+        })
+    }
+
+    /// The validated header.
+    pub fn header(&self) -> &StoreHeader {
+        &self.header
+    }
+
+    /// Row dimensionality.
+    pub fn d(&self) -> usize {
+        self.header.d as usize
+    }
+
+    /// Shard count.
+    pub fn shards(&self) -> usize {
+        self.header.shards as usize
+    }
+
+    /// Rows per shard.
+    pub fn shard_size(&self) -> usize {
+        self.header.shard_size as usize
+    }
+
+    /// Total rows across shards.
+    pub fn n_total(&self) -> usize {
+        self.header.n_total() as usize
+    }
+
+    /// The seed the store was generated from.
+    pub fn seed(&self) -> u64 {
+        self.header.seed
+    }
+
+    /// True when rows are served from a live mapping (zero-copy).
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_mapped()
+    }
+
+    /// Shard `shard`'s rows as a zero-copy [`RowSource`] into the mapping
+    /// (`[shard_size, d]` row-major, the exact layout every backend
+    /// scores). Panics if `shard` is out of range — shard counts are
+    /// validated against the config before backends are built.
+    pub fn shard_rows(&self, shard: usize) -> RowSource {
+        assert!(
+            shard < self.shards(),
+            "shard {shard} out of range (store has {})",
+            self.shards()
+        );
+        let region = &self.header.regions[shard];
+        RowSource::Mapped {
+            map: self.map.clone(),
+            byte_offset: region.offset as usize,
+            floats: self.shard_size() * self.d(),
+        }
+    }
+
+    /// Identity + open-cost record for metrics ([`StoreInfo`]).
+    pub fn info(&self) -> StoreInfo {
+        StoreInfo {
+            path: self.path.display().to_string(),
+            version: self.header.version,
+            shards: self.shards(),
+            shard_size: self.shard_size(),
+            d: self.d(),
+            mapped: self.is_mapped(),
+            open_us: self.open_time.as_micros() as u64,
+            built: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::writer::{build_store, generate_shard_rows, StoreSpec};
+
+    fn tmp_store(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "fastk-reader-{}-{name}.fastk",
+            std::process::id()
+        ))
+    }
+
+    fn cleanup(path: &Path) {
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(format::manifest_path(path)).ok();
+    }
+
+    fn build_small(name: &str, spec: &StoreSpec) -> PathBuf {
+        let path = tmp_store(name);
+        cleanup(&path);
+        build_store(&path, spec).unwrap();
+        path
+    }
+
+    const SPEC: StoreSpec = StoreSpec {
+        d: 13,
+        shards: 2,
+        shard_size: 600,
+        seed: 11,
+    };
+
+    #[test]
+    fn open_round_trips_rows_mapped_and_copied() {
+        let path = build_small("roundtrip", &SPEC);
+        for copy in [false, true] {
+            let store = ShardStore::open_with(
+                &path,
+                OpenOptions {
+                    verify_checksums: true,
+                    copy,
+                },
+            )
+            .unwrap();
+            assert_eq!(store.d(), SPEC.d);
+            assert_eq!(store.shards(), SPEC.shards);
+            assert_eq!(store.shard_size(), SPEC.shard_size);
+            assert_eq!(store.n_total(), SPEC.shards * SPEC.shard_size);
+            assert_eq!(store.seed(), SPEC.seed);
+            for s in 0..SPEC.shards {
+                let rows = store.shard_rows(s);
+                let want = generate_shard_rows(SPEC.seed, s, SPEC.shard_size, SPEC.d);
+                assert_eq!(&rows[..], &want[..], "shard {s} copy={copy}");
+                assert_eq!(rows.is_mapped(), store.is_mapped());
+            }
+            if copy {
+                assert!(!store.is_mapped());
+            }
+            let info = store.info();
+            assert_eq!(info.version, format::FORMAT_VERSION);
+            assert!(info.describe().contains("2x600x13"), "{}", info.describe());
+        }
+        cleanup(&path);
+    }
+
+    /// Every corruption mode is a distinct launch *error* — never a silent
+    /// fallback to some other data source.
+    #[test]
+    fn corruption_suite_fails_loudly() {
+        let path = build_small("corrupt", &SPEC);
+        let good = std::fs::read(&path).unwrap();
+        let manifest_path = format::manifest_path(&path);
+        let good_manifest = std::fs::read_to_string(&manifest_path).unwrap();
+        let open_err = || match ShardStore::open(&path) {
+            Ok(_) => panic!("corrupt store must not open"),
+            Err(err) => format!("{err:#}"),
+        };
+
+        // Truncated file.
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(open_err().contains("length"), "{}", open_err());
+
+        // Truncated below even the fixed header.
+        std::fs::write(&path, &good[..10]).unwrap();
+        assert!(open_err().contains("truncated"), "{}", open_err());
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(open_err().contains("magic"), "{}", open_err());
+
+        // Version skew.
+        let mut bad = good.clone();
+        bad[8] = format::FORMAT_VERSION as u8 + 1;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(open_err().contains("version"), "{}", open_err());
+
+        // Flipped data byte: checksum mismatch.
+        let mut bad = good.clone();
+        let last = bad.len() - 5;
+        bad[last] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(open_err().contains("checksum mismatch"), "{}", open_err());
+        // verify_checksums: false skips only the checksum pass (structure
+        // is still validated) — the knob for operators who trust their
+        // disk and want the faster open.
+        ShardStore::open_with(
+            &path,
+            OpenOptions {
+                verify_checksums: false,
+                copy: false,
+            },
+        )
+        .unwrap();
+
+        // Manifest/header disagreement on d.
+        std::fs::write(&path, &good).unwrap();
+        let skewed = good_manifest.replace("\"d\":13", "\"d\":26");
+        assert_ne!(skewed, good_manifest, "manifest replace must hit");
+        std::fs::write(&manifest_path, &skewed).unwrap();
+        let e = open_err();
+        assert!(e.contains("disagrees"), "{e}");
+
+        // Manifest missing entirely.
+        std::fs::remove_file(&manifest_path).unwrap();
+        assert!(open_err().contains("manifest"), "{}", open_err());
+
+        // Restore both: the store opens again (the errors above were about
+        // the data, not lingering state).
+        std::fs::write(&manifest_path, &good_manifest).unwrap();
+        ShardStore::open(&path).unwrap();
+        cleanup(&path);
+    }
+
+    /// The acceptance property: a store-backed backend answers
+    /// bit-identically to the in-memory backend, across kernels, thread
+    /// counts, and both pipelines — same rows, same kernels, so equality
+    /// is by construction, and this pins it.
+    #[test]
+    fn store_backed_backends_match_in_memory_bit_identically() {
+        use crate::coordinator::{EngineOptions, NativeBackend, ParallelNativeBackend, ShardBackend};
+        use crate::topk::{SimdKernel, TwoStageParams};
+        use crate::util::Rng;
+
+        let path = build_small("bitident", &SPEC);
+        let store = ShardStore::open(&path).unwrap();
+        let (n, d, k) = (SPEC.shard_size, SPEC.d, 24);
+        let params = TwoStageParams::new(n, k, 50, 2);
+        let nq = 3;
+        let mut rng = Rng::new(123);
+        let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+
+        for shard in 0..SPEC.shards {
+            let owned = generate_shard_rows(SPEC.seed, shard, n, d);
+            let mapped = store.shard_rows(shard);
+            let want = NativeBackend::new(owned.clone(), d, k, Some(params))
+                .score_topk(&queries, nq)
+                .unwrap();
+            for kernel in SimdKernel::available() {
+                let got = NativeBackend::from_source(mapped.clone(), d, k, Some(params), kernel)
+                    .score_topk(&queries, nq)
+                    .unwrap();
+                assert_eq!(got, want, "native shard={shard} kernel={}", kernel.name());
+                for threads in [1usize, 2, 4] {
+                    for fused in [true, false] {
+                        let opts = EngineOptions {
+                            threads,
+                            fused,
+                            tile_rows: 0,
+                            kernel,
+                        };
+                        let got = ParallelNativeBackend::from_source(
+                            mapped.clone(),
+                            d,
+                            k,
+                            params,
+                            opts,
+                        )
+                        .score_topk(&queries, nq)
+                        .unwrap();
+                        assert_eq!(
+                            got,
+                            want,
+                            "shard={shard} kernel={} threads={threads} fused={fused}",
+                            kernel.name()
+                        );
+                    }
+                }
+            }
+        }
+        cleanup(&path);
+    }
+
+    /// End-to-end: a MipsService built over store-backed shards answers
+    /// every query bit-identically to one built over in-memory shards.
+    #[test]
+    fn store_backed_service_matches_in_memory_service() {
+        use crate::coordinator::{
+            BackendFactory, BatcherConfig, EngineOptions, MipsService, ParallelNativeBackend,
+            ServiceConfig, ShardBackend,
+        };
+        use crate::topk::{SimdKernel, TwoStageParams};
+        use crate::util::Rng;
+
+        let path = build_small("service", &SPEC);
+        let store = Arc::new(ShardStore::open(&path).unwrap());
+        let (n, d, k) = (SPEC.shard_size, SPEC.d, 16);
+        let params = TwoStageParams::new(n, k, 50, 2);
+        let opts = EngineOptions {
+            threads: 2,
+            fused: true,
+            tile_rows: 0,
+            kernel: SimdKernel::auto(),
+        };
+        let cfg = ServiceConfig {
+            d,
+            k,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_micros(500),
+            },
+            plan: None,
+        };
+        let offsets: Vec<usize> = (0..SPEC.shards).map(|s| s * n).collect();
+
+        let store_factories: Vec<BackendFactory> = (0..SPEC.shards)
+            .map(|s| {
+                let rows = store.shard_rows(s);
+                Box::new(move || {
+                    Ok(Box::new(ParallelNativeBackend::from_source(rows, d, k, params, opts))
+                        as Box<dyn ShardBackend>)
+                }) as BackendFactory
+            })
+            .collect();
+        let mem_factories: Vec<BackendFactory> = (0..SPEC.shards)
+            .map(|s| {
+                Box::new(move || {
+                    let rows = generate_shard_rows(SPEC.seed, s, n, d);
+                    Ok(Box::new(ParallelNativeBackend::with_options(rows, d, k, params, opts))
+                        as Box<dyn ShardBackend>)
+                }) as BackendFactory
+            })
+            .collect();
+
+        let svc_store = MipsService::start(cfg.clone(), store_factories, offsets.clone()).unwrap();
+        let svc_mem = MipsService::start(cfg, mem_factories, offsets).unwrap();
+
+        let mut rng = Rng::new(7);
+        for id in 0..12u64 {
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let a = svc_store.query(id, q.clone()).unwrap();
+            let b = svc_mem.query(id, q).unwrap();
+            assert_eq!(a.results, b.results, "query {id}");
+            assert!(!a.degraded && !b.degraded);
+        }
+        svc_store.shutdown();
+        svc_mem.shutdown();
+        cleanup(&path);
+    }
+}

@@ -1,0 +1,302 @@
+//! Store builder: streams synthetic shard rows to disk in the v1 format.
+//!
+//! The writer never materializes a shard (let alone the whole database) in
+//! memory: rows are generated and written in fixed-size chunks, with the
+//! region checksum folded in as the bytes stream out. Both files are
+//! staged as `.tmp` and landed by rename — manifest first, data second —
+//! so nothing already on disk is touched until everything is written.
+//! Crash-window analysis: a crash before the first rename leaves any
+//! previous store fully intact (stray `.tmp`s are overwritten next
+//! build); on a *first* build, a crash between the renames leaves a
+//! manifest without a data file, which `build_if_missing` rebuilds
+//! (`path` is absent); on a *rebuild* over an existing store, that same
+//! instant leaves a new manifest beside the old data file — a loud
+//! manifest/header-skew error at open (never a silently wrong store),
+//! fixed by rerunning `fastk build-index`.
+//!
+//! Determinism: shard `s` of a store built with seed `S` holds exactly the
+//! rows [`generate_shard_rows`]`(S, s, ..)` produces — the same per-shard
+//! stream (`Rng::new(S ⊕ s)`) the no-store serve path generates in its
+//! shard factories — so a store-backed deployment is bit-identical to an
+//! in-memory one with the same config.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::Rng;
+
+use super::format::{
+    self, Checksum, Layout, ShardRegion, StoreHeader, DTYPE_F32LE, FORMAT_VERSION, REGION_ALIGN,
+};
+
+/// Geometry + provenance of a store to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreSpec {
+    /// Row dimensionality.
+    pub d: usize,
+    /// Number of shards.
+    pub shards: usize,
+    /// Rows per shard.
+    pub shard_size: usize,
+    /// Synthetic-generator seed.
+    pub seed: u64,
+}
+
+/// Rows generated per chunk while streaming a shard to disk (bounds the
+/// writer's working memory to `GEN_CHUNK_ROWS * d` floats).
+const GEN_CHUNK_ROWS: usize = 4096;
+
+/// The per-shard generator seed: `seed ⊕ shard`. XOR keeps the map
+/// trivially documentable and collision-free per store; [`Rng::new`]
+/// expands it through SplitMix64, so adjacent shard seeds still yield
+/// independent streams.
+pub fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed ^ shard as u64
+}
+
+/// Generate shard `shard`'s rows (`[shard_size, d]` row-major Gaussian
+/// values) from its per-shard seed. This is the *one* definition of the
+/// synthetic database: the store writer, the no-store serve path, and the
+/// serve-time exact-recall oracle all call it, which is what makes
+/// store-backed and in-memory serving bit-identical.
+pub fn generate_shard_rows(seed: u64, shard: usize, shard_size: usize, d: usize) -> Vec<f32> {
+    let mut rng = Rng::new(shard_seed(seed, shard));
+    (0..shard_size * d)
+        .map(|_| rng.next_gaussian() as f32)
+        .collect()
+}
+
+/// Build a store at `path` from `spec`, streaming shard by shard. Returns
+/// the final header (with computed checksums). Overwrites any existing
+/// store at `path`.
+pub fn build_store(path: &Path, spec: &StoreSpec) -> Result<StoreHeader> {
+    ensure!(
+        spec.d > 0 && spec.shards > 0 && spec.shard_size > 0,
+        "store spec must have positive d, shards and shard_size"
+    );
+    let lay = format::layout(spec.shards as u64, spec.shard_size as u64, spec.d as u64)?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating store directory {parent:?}"))?;
+        }
+    }
+    let tmp = {
+        let mut s = path.as_os_str().to_os_string();
+        s.push(".tmp");
+        std::path::PathBuf::from(s)
+    };
+
+    let mut header = StoreHeader {
+        version: FORMAT_VERSION,
+        dtype: DTYPE_F32LE,
+        d: spec.d as u64,
+        shards: spec.shards as u64,
+        shard_size: spec.shard_size as u64,
+        region_align: REGION_ALIGN,
+        seed: spec.seed,
+        regions: (0..spec.shards as u64)
+            .map(|s| ShardRegion {
+                offset: lay.first_region + s * lay.region_len,
+                len: lay.region_len,
+                checksum: 0, // streamed below, header rewritten at the end
+            })
+            .collect(),
+    };
+
+    let file = File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+    let mut w = BufWriter::new(file);
+    // Placeholder header (zero checksums); rewritten once the regions have
+    // streamed through and their checksums are known.
+    w.write_all(&format::encode_header(&header))?;
+    for s in 0..spec.shards {
+        header.regions[s].checksum = write_shard_region(&mut w, spec, s, &lay)?;
+    }
+    // Rewrite the header with the real checksums, then land the file.
+    let mut file = w.into_inner().context("flushing store file")?;
+    file.seek(SeekFrom::Start(0))?;
+    file.write_all(&format::encode_header(&header))?;
+    file.sync_all().with_context(|| format!("syncing {tmp:?}"))?;
+    drop(file);
+    // Land both files by rename, manifest first (see the module docs for
+    // the crash-window analysis): nothing already on disk is touched
+    // until everything is staged, a first build is self-healing at every
+    // crash point, and a rebuild can at worst leave a loud
+    // manifest/header skew in the instant between the two renames.
+    let manifest_path = format::manifest_path(path);
+    let manifest_tmp = {
+        let mut s = manifest_path.as_os_str().to_os_string();
+        s.push(".tmp");
+        std::path::PathBuf::from(s)
+    };
+    std::fs::write(
+        &manifest_tmp,
+        format!("{}\n", format::manifest_json(&header)),
+    )
+    .with_context(|| format!("writing manifest for {path:?}"))?;
+    std::fs::rename(&manifest_tmp, &manifest_path)
+        .with_context(|| format!("moving manifest into place at {manifest_path:?}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("moving finished store into place at {path:?}"))?;
+    Ok(header)
+}
+
+/// Stream one shard's rows (generated in [`GEN_CHUNK_ROWS`] chunks) plus
+/// alignment padding; returns the region's FNV-1a checksum.
+fn write_shard_region<W: Write>(
+    w: &mut W,
+    spec: &StoreSpec,
+    shard: usize,
+    lay: &Layout,
+) -> Result<u64> {
+    let mut rng = Rng::new(shard_seed(spec.seed, shard));
+    let mut checksum = Checksum::new();
+    let mut chunk: Vec<u8> = Vec::with_capacity(GEN_CHUNK_ROWS * spec.d * 4);
+    let mut rows_left = spec.shard_size;
+    while rows_left > 0 {
+        let rows = rows_left.min(GEN_CHUNK_ROWS);
+        chunk.clear();
+        for _ in 0..rows * spec.d {
+            chunk.extend_from_slice(&(rng.next_gaussian() as f32).to_le_bytes());
+        }
+        checksum.update(&chunk);
+        w.write_all(&chunk)?;
+        rows_left -= rows;
+    }
+    let pad = (lay.region_len - spec.shard_size as u64 * spec.d as u64 * 4) as usize;
+    if pad > 0 {
+        let zeros = vec![0u8; pad];
+        checksum.update(&zeros);
+        w.write_all(&zeros)?;
+    }
+    Ok(checksum.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::mmap::Mmap;
+
+    fn tmp_store(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "fastk-writer-{}-{name}.fastk",
+            std::process::id()
+        ))
+    }
+
+    fn cleanup(path: &Path) {
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(format::manifest_path(path)).ok();
+    }
+
+    #[test]
+    fn built_store_parses_and_checksums_verify() {
+        let path = tmp_store("basic");
+        let spec = StoreSpec {
+            d: 7,
+            shards: 3,
+            shard_size: 100, // 2800 data bytes per shard: ragged vs the 64-byte align
+            seed: 9,
+        };
+        let header = build_store(&path, &spec).unwrap();
+        assert_eq!(header.shards, 3);
+
+        let map = Mmap::read(&path).unwrap();
+        let parsed = format::parse_header(map.bytes()).unwrap();
+        assert_eq!(parsed, header);
+        for r in &parsed.regions {
+            let region = &map.bytes()[r.offset as usize..(r.offset + r.len) as usize];
+            assert_eq!(format::fnv1a64(region), r.checksum);
+        }
+        // The manifest round-trips against the header.
+        let manifest = crate::util::json::Json::parse(
+            &std::fs::read_to_string(format::manifest_path(&path)).unwrap(),
+        )
+        .unwrap();
+        format::check_manifest(&manifest, &parsed).unwrap();
+        // No stray .tmp left behind.
+        assert!(!path.with_extension("fastk.tmp").exists());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn stored_rows_equal_generate_shard_rows() {
+        // The streaming chunked writer must produce exactly the rows the
+        // one-shot generator produces — the determinism contract the serve
+        // paths rely on. shard_size > GEN_CHUNK_ROWS exercises chunking.
+        let path = tmp_store("rows");
+        let spec = StoreSpec {
+            d: 3,
+            shards: 2,
+            shard_size: GEN_CHUNK_ROWS + 13,
+            seed: 77,
+        };
+        let header = build_store(&path, &spec).unwrap();
+        let map = Mmap::read(&path).unwrap();
+        for s in 0..spec.shards {
+            let want = generate_shard_rows(spec.seed, s, spec.shard_size, spec.d);
+            let got = map.f32_slice(
+                header.regions[s].offset as usize,
+                spec.shard_size * spec.d,
+            );
+            assert_eq!(got, &want[..], "shard {s}");
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn rebuild_over_existing_store_replaces_both_files() {
+        let path = tmp_store("rebuild");
+        let spec1 = StoreSpec { d: 4, shards: 2, shard_size: 32, seed: 1 };
+        let spec2 = StoreSpec { d: 4, shards: 2, shard_size: 32, seed: 2 };
+        build_store(&path, &spec1).unwrap();
+        let header = build_store(&path, &spec2).unwrap();
+        assert_eq!(header.seed, 2);
+        // Data + manifest are consistent (open re-validates the pair) and
+        // carry the new seed's rows.
+        let store = crate::store::ShardStore::open(&path).unwrap();
+        assert_eq!(store.seed(), 2);
+        assert_eq!(
+            &store.shard_rows(0)[..],
+            &generate_shard_rows(2, 0, 32, 4)[..]
+        );
+        // No staged .tmp files left behind for *this* store (other tests
+        // build their own stores concurrently, so only check our names).
+        let staged = |p: &Path| {
+            let mut s = p.as_os_str().to_os_string();
+            s.push(".tmp");
+            std::path::PathBuf::from(s)
+        };
+        assert!(!staged(&path).exists(), "stray data staging file");
+        assert!(
+            !staged(&format::manifest_path(&path)).exists(),
+            "stray manifest staging file"
+        );
+        cleanup(&path);
+    }
+
+    #[test]
+    fn per_shard_seeds_differ() {
+        let a = generate_shard_rows(5, 0, 4, 2);
+        let b = generate_shard_rows(5, 1, 4, 2);
+        assert_ne!(a, b);
+        // And shard content is a function of (seed, shard) only.
+        assert_eq!(a, generate_shard_rows(5, 0, 4, 2));
+    }
+
+    #[test]
+    fn rejects_empty_geometry() {
+        let path = tmp_store("empty");
+        for spec in [
+            StoreSpec { d: 0, shards: 1, shard_size: 1, seed: 0 },
+            StoreSpec { d: 1, shards: 0, shard_size: 1, seed: 0 },
+            StoreSpec { d: 1, shards: 1, shard_size: 0, seed: 0 },
+        ] {
+            assert!(build_store(&path, &spec).is_err(), "{spec:?}");
+        }
+        cleanup(&path);
+    }
+}

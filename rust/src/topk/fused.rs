@@ -39,12 +39,11 @@
 //! `nq` times end-to-end. `tile_rows = 0` auto-sizes tiles to ~256 KiB of
 //! database rows.
 
-use std::sync::Arc;
-
 use super::parallel::{merge_stage2, state_candidates, LanePool, SliceHandle};
 use super::simd::SimdKernel;
 use super::twostage::{Stage1State, TwoStageParams};
 use super::Candidate;
+use crate::store::RowSource;
 
 /// Auto tile sizing target: keep one tile's database rows around this many
 /// bytes so the tile stays L2-resident while every query in the batch
@@ -60,8 +59,10 @@ struct FusedJob {
 /// Worker-private half of the fused pipeline: the shared database handle,
 /// this worker's lane range, and its per-query Stage-1 states.
 struct FusedLaneState {
-    /// Shared `[n, d]` row-major database (read-only on the hot path).
-    database: Arc<Vec<f32>>,
+    /// Shared `[n, d]` row-major database (read-only on the hot path):
+    /// an owned heap vector or a mapped store region — the workers score
+    /// either through the same `&[f32]` view ([`RowSource`]).
+    database: RowSource,
     d: usize,
     /// First owned global bucket (lane).
     lane_lo: usize,
@@ -99,6 +100,10 @@ impl FusedLaneState {
         let b = self.buckets;
         let lane_lo = self.lane_lo;
         let lanes = self.lanes;
+        // Resolve the source once per batch: the hot loop below slices a
+        // plain `&[f32]` whether the rows live on the heap or in a store
+        // mapping.
+        let db = self.database.rows();
         let mut tile_start = 0;
         while tile_start < self.rows {
             let tile_end = (tile_start + self.tile_rows).min(self.rows);
@@ -106,7 +111,7 @@ impl FusedLaneState {
                 let q = &queries[qi * d..(qi + 1) * d];
                 for row in tile_start..tile_end {
                     let base = row * b + lane_lo;
-                    let db_rows = &self.database[base * d..(base + lanes) * d];
+                    let db_rows = &db[base * d..(base + lanes) * d];
                     self.kernel.score_tile(db_rows, d, q, &mut self.scores);
                     state.ingest_tile_k(self.kernel, base as u32, 0, &self.scores);
                 }
@@ -139,14 +144,15 @@ pub struct FusedParallelMips {
 
 impl FusedParallelMips {
     /// Spawn the fused pool over a `[n, d]` row-major `database` with
-    /// `n = params.n` vectors. `threads` sizes the pool (clamped to
-    /// `[1, B]`; non-divisible lane splits balance to within one lane).
-    /// `tile_rows = 0` auto-sizes tiles (~256 KiB of database rows per
-    /// tile); any other value is the stream-row count per tile. Uses the
-    /// best SIMD kernel the host supports (results are bit-identical
-    /// whichever is picked).
+    /// `n = params.n` vectors — anything convertible to a [`RowSource`]
+    /// (`Vec<f32>`, `Arc<Vec<f32>>`, or a mapped store region). `threads`
+    /// sizes the pool (clamped to `[1, B]`; non-divisible lane splits
+    /// balance to within one lane). `tile_rows = 0` auto-sizes tiles
+    /// (~256 KiB of database rows per tile); any other value is the
+    /// stream-row count per tile. Uses the best SIMD kernel the host
+    /// supports (results are bit-identical whichever is picked).
     pub fn new(
-        database: Arc<Vec<f32>>,
+        database: impl Into<RowSource>,
         d: usize,
         params: TwoStageParams,
         threads: usize,
@@ -159,13 +165,14 @@ impl FusedParallelMips {
     /// (the `"kernel"` serve knob; benches and property tests use this to
     /// pin each implementation).
     pub fn with_kernel(
-        database: Arc<Vec<f32>>,
+        database: impl Into<RowSource>,
         d: usize,
         params: TwoStageParams,
         threads: usize,
         tile_rows: usize,
         kernel: SimdKernel,
     ) -> FusedParallelMips {
+        let database: RowSource = database.into();
         assert!(d > 0, "d must be positive");
         assert_eq!(
             database.len(),
@@ -254,6 +261,8 @@ impl FusedParallelMips {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::topk::kernel;
     use crate::topk::TwoStageTopK;

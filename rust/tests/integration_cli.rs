@@ -13,7 +13,16 @@ fn help_lists_commands() {
     let out = fastk().arg("help").output().unwrap();
     assert!(out.status.success());
     let s = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["params", "recall", "table1", "table2", "serve", "selftest"] {
+    for cmd in [
+        "params",
+        "recall",
+        "table1",
+        "table2",
+        "serve",
+        "build-index",
+        "inspect",
+        "selftest",
+    ] {
         assert!(s.contains(cmd), "help missing `{cmd}`");
     }
 }
@@ -127,6 +136,189 @@ fn serve_rejects_a_kernel_the_host_cannot_run() {
         failures >= 1,
         "at least one of avx2/neon must be unrunnable on any single host"
     );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn build_index_inspect_then_serve_from_store() {
+    let dir = std::env::temp_dir().join(format!("fastk-cli-store-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let store_path = dir.join("db.fastk");
+
+    // Build.
+    let out = fastk()
+        .args([
+            "build-index",
+            "--out",
+            store_path.to_str().unwrap(),
+            "--d",
+            "16",
+            "--shards",
+            "2",
+            "--shard-size",
+            "1024",
+            "--seed",
+            "5",
+        ])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "build-index failed: {s}\n{e}");
+    assert!(s.contains("wrote"), "got: {s}");
+    assert!(store_path.exists());
+
+    // Inspect: header dump + checksum verification.
+    let out = fastk()
+        .args(["inspect", "--store", store_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "inspect failed: {s}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(s.contains("version 1"), "got: {s}");
+    assert!(s.contains("2 shards x 1024 rows x 16-d"), "got: {s}");
+    assert!(s.contains("checksums OK"), "got: {s}");
+
+    // Serve from it (same geometry as the build, matching seed).
+    let cfg_path = dir.join("serve-store.json");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            r#"{{"d": 16, "k": 16, "shards": 2, "shard_size": 1024,
+                "recall_target": 0.9, "batch_max": 4, "batch_delay_us": 500,
+                "backend": "native", "seed": 5,
+                "store": {{"path": {:?}}}}}"#,
+            store_path.to_str().unwrap()
+        ),
+    )
+    .unwrap();
+    let out = fastk()
+        .args(["serve", "--config", cfg_path.to_str().unwrap(), "--queries", "32"])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {s}\nstderr: {e}");
+    assert!(s.contains("store: "), "got: {s}");
+    assert!(s.contains("recall@16"), "got: {s}");
+    // The store identity lands in the shutdown metrics summary.
+    assert!(s.contains("store="), "got: {s}");
+
+    // A corrupted store must fail the launch loudly — never fall back to
+    // the synthetic generator.
+    let mut bytes = std::fs::read(&store_path).unwrap();
+    let last = bytes.len() - 3;
+    bytes[last] ^= 0x01;
+    std::fs::write(&store_path, &bytes).unwrap();
+    let out = fastk()
+        .args(["serve", "--config", cfg_path.to_str().unwrap(), "--queries", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "corrupt store must fail serve");
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("checksum"), "got: {e}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_build_if_missing_builds_then_serves() {
+    let dir = std::env::temp_dir().join(format!("fastk-cli-bim-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let store_path = dir.join("auto.fastk");
+    let cfg_path = dir.join("serve.json");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            r#"{{"d": 8, "k": 8, "shards": 2, "shard_size": 512,
+                "recall_target": 0.9, "backend": "native-parallel", "threads": 2,
+                "seed": 7,
+                "store": {{"path": {:?}, "build_if_missing": true}}}}"#,
+            store_path.to_str().unwrap()
+        ),
+    )
+    .unwrap();
+    // Without build_if_missing a missing store is a launch error.
+    let strict = cfg_path.with_file_name("strict.json");
+    std::fs::write(
+        &strict,
+        format!(
+            r#"{{"d": 8, "k": 8, "shards": 2, "shard_size": 512,
+                "recall_target": 0.9, "backend": "native", "seed": 7,
+                "store": {{"path": {:?}}}}}"#,
+            store_path.to_str().unwrap()
+        ),
+    )
+    .unwrap();
+    let out = fastk()
+        .args(["serve", "--config", strict.to_str().unwrap(), "--queries", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "missing store must fail without build_if_missing");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("does not exist"),
+        "got: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // First launch builds; second launch reuses the file.
+    for launch in 0..2 {
+        let out = fastk()
+            .args(["serve", "--config", cfg_path.to_str().unwrap(), "--queries", "16"])
+            .output()
+            .unwrap();
+        let s = String::from_utf8_lossy(&out.stdout);
+        let e = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "launch {launch}: stdout: {s}\nstderr: {e}");
+        if launch == 0 {
+            assert!(s.contains("building it"), "launch 0 must build: {s}");
+        } else {
+            assert!(!s.contains("building it"), "launch 1 must reuse: {s}");
+        }
+        assert!(store_path.exists());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Cross-process store reuse: CI builds a store with one `fastk` process
+/// at an absolute path and then runs this test in a separate `cargo test`
+/// process (`FASTK_PREBUILT_STORE=<path>`), catching accidental cwd or
+/// same-process assumptions. Skips (loudly) when the env var is unset.
+#[test]
+fn prebuilt_store_serves_across_processes() {
+    let Ok(store_path) = std::env::var("FASTK_PREBUILT_STORE") else {
+        eprintln!("skipping prebuilt-store test: FASTK_PREBUILT_STORE not set");
+        return;
+    };
+    // Geometry must match what CI built (see .github/workflows/ci.yml).
+    let out = fastk()
+        .args(["inspect", "--store", &store_path])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "inspect failed: {s}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(s.contains("checksums OK"), "got: {s}");
+
+    let dir = std::env::temp_dir().join(format!("fastk-prebuilt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("serve.json");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            r#"{{"d": 16, "k": 16, "shards": 2, "shard_size": 1024,
+                "recall_target": 0.9, "backend": "native", "seed": 7,
+                "store": {{"path": {store_path:?}}}}}"#
+        ),
+    )
+    .unwrap();
+    let out = fastk()
+        .args(["serve", "--config", cfg_path.to_str().unwrap(), "--queries", "16"])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {s}\nstderr: {e}");
+    assert!(s.contains("store="), "got: {s}");
     std::fs::remove_dir_all(&dir).ok();
 }
 
