@@ -1,0 +1,263 @@
+//! Corpus-driven fuzz harness for the store trust boundary.
+//!
+//! The store loader (`ShardStore::open_with` + `format::parse_header` +
+//! `format::check_manifest` + the checksum pass) is the one place fastk
+//! consumes bytes it did not produce in-process: files on disk, possibly
+//! truncated, bit-rotted, swapped, or written by a different tool. This
+//! harness pins the trust-boundary contract:
+//!
+//! 1. **Known-bad replay.** Every file in the checked-in corpus
+//!    (`rust/fuzz/corpus/`, one per corruption mode in the store's
+//!    taxonomy) produces a *distinct, clean* `Err` whose message names
+//!    the corruption — never a panic, never a silent `Ok`.
+//! 2. **Must-Err under data mutation.** Every byte of a v1 store file is
+//!    load-bearing (header fields, reserved bytes, region table, table
+//!    pad, region checksums — plus the manifest cross-check for the
+//!    geometry/seed fields a flipped bit could coherently re-describe).
+//!    So *any* deterministic mutation of a valid data file — byte XORs,
+//!    truncation, extension — must fail the full open. ≥200 cases per
+//!    run (256 by default; scale with `FASTK_FUZZ_CASES`).
+//! 3. **No-panic under manifest mutation**, and `Ok` implies the parsed
+//!    geometry is identical to the pristine baseline (a mangled manifest
+//!    may still be accepted iff the mangling didn't touch anything the
+//!    cross-check reads — e.g. whitespace or `created_by`).
+//! 4. **Random noise never parses.**
+//!
+//! No cargo-fuzz / libFuzzer: the environment is offline and std-only,
+//! so this is a deterministic corpus replay + `fastk::util::Rng`-driven
+//! mutation loop, registered as an ordinary `[[test]]` target. Determinism
+//! means a CI failure is reproducible locally by seed. Regenerate the
+//! corpus with `python3 rust/fuzz/gen_corpus.py` (see fuzz/README.md).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use fastk::store::{format, OpenOptions, ShardStore};
+use fastk::util::Rng;
+
+fn corpus_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fuzz").join("corpus")
+}
+
+fn corpus_bytes(name: &str) -> Vec<u8> {
+    fs::read(corpus_dir().join(name)).unwrap_or_else(|e| {
+        panic!("corpus file {name} missing — run `python3 rust/fuzz/gen_corpus.py` ({e})")
+    })
+}
+
+/// Mutated-input cases per fuzz test. The ISSUE floor is 200; default a
+/// bit above it, scalable for longer local runs.
+fn fuzz_cases() -> usize {
+    let n = std::env::var("FASTK_FUZZ_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    assert!(n >= 200, "FASTK_FUZZ_CASES must be >= 200 (the smoke-run floor)");
+    n
+}
+
+fn work_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastk-fuzz-{}-{tag}", std::process::id()));
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Stage `data` (and optionally a manifest) under `dir` and run the full
+/// trust boundary: open with checksum verification on. The manifest is
+/// written raw so mutated (even non-UTF-8) manifests reach the parser
+/// exactly as fuzzed.
+fn open_bytes(dir: &Path, data: &[u8], manifest: Option<&[u8]>) -> anyhow::Result<ShardStore> {
+    let path = dir.join("store.fastk");
+    fs::write(&path, data).unwrap();
+    let mpath = format::manifest_path(&path);
+    match manifest {
+        Some(m) => fs::write(&mpath, m).unwrap(),
+        None => {
+            fs::remove_file(&mpath).ok();
+        }
+    }
+    ShardStore::open_with(
+        &path,
+        OpenOptions {
+            verify_checksums: true,
+            copy: false,
+        },
+    )
+}
+
+/// One deterministic mutation of `base`: XOR 1–4 distinct bytes with
+/// nonzero masks, truncate, or extend with random bytes. Always returns
+/// bytes that differ from `base`.
+fn mutate(rng: &mut Rng, base: &[u8]) -> Vec<u8> {
+    let mut out = base.to_vec();
+    match rng.next_below(3) {
+        0 => {
+            let k = 1 + rng.next_usize(4);
+            for at in rng.sample_distinct(out.len(), k.min(out.len())) {
+                out[at] ^= 1 + rng.next_below(255) as u8;
+            }
+        }
+        1 => out.truncate(rng.next_usize(out.len())),
+        _ => {
+            for _ in 0..1 + rng.next_usize(64) {
+                out.push(rng.next_u64() as u8);
+            }
+        }
+    }
+    out
+}
+
+/// Corpus file → substring its error must contain. One row per corruption
+/// mode in the store taxonomy (PR 5's reader tests, plus the reserved-byte
+/// and table-pad checks added alongside this harness).
+const KNOWN_BAD: &[(&str, &str)] = &[
+    ("truncated.fastk", "truncated"),
+    ("short.fastk", "length"),
+    ("bad-magic.fastk", "magic"),
+    ("bad-version.fastk", "version"),
+    ("bad-dtype.fastk", "dtype"),
+    ("empty-geometry.fastk", "empty geometry"),
+    ("bad-align.fastk", "alignment"),
+    ("region-drift.fastk", "region table entry"),
+    ("reserved-set.fastk", "reserved"),
+    ("pad-dirty.fastk", "padding"),
+    ("checksum-flip.fastk", "checksum mismatch"),
+    ("geometry-skew.fastk", "disagrees"),
+    ("seed-skew.fastk", "disagrees"),
+    ("manifest-skew.fastk", "disagrees"),
+    ("manifest-garbage.fastk", "not valid JSON"),
+    ("manifest-missing.fastk", "manifest missing"),
+];
+
+#[test]
+fn valid_seeds_open_through_the_full_boundary() {
+    let dir = work_dir("valid");
+    let st = open_bytes(
+        &dir,
+        &corpus_bytes("valid.fastk"),
+        Some(&corpus_bytes("valid.fastk.manifest.json")),
+    )
+    .expect("pristine corpus seed must open");
+    assert_eq!(
+        (st.d(), st.shards(), st.shard_size(), st.seed()),
+        (2, 1, 2, 42)
+    );
+    let st2 = open_bytes(
+        &dir,
+        &corpus_bytes("valid2.fastk"),
+        Some(&corpus_bytes("valid2.fastk.manifest.json")),
+    )
+    .expect("2-shard corpus seed must open");
+    assert_eq!((st2.shards(), st2.seed()), (2, 43));
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn known_bad_corpus_replays_with_distinct_errors() {
+    let dir = work_dir("replay");
+    let mut messages = Vec::new();
+    for (name, want) in KNOWN_BAD {
+        let data = corpus_bytes(name);
+        let mname = format!("{name}.manifest.json");
+        let manifest = corpus_dir().join(&mname).exists().then(|| corpus_bytes(&mname));
+        let err = open_bytes(&dir, &data, manifest.as_deref())
+            .expect_err(&format!("{name} must not open"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(want),
+            "{name}: expected {want:?} in the error, got: {msg}"
+        );
+        messages.push((name, msg));
+    }
+    // "Distinct" is part of the contract: each corruption mode names
+    // itself, so an operator can tell bit rot from a swapped manifest.
+    for (i, (a_name, a)) in messages.iter().enumerate() {
+        for (b_name, b) in &messages[..i] {
+            assert_ne!(a, b, "{a_name} and {b_name} render identical errors");
+        }
+    }
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mutated_data_files_always_fail_cleanly() {
+    let dir = work_dir("mutate-data");
+    let seeds = [
+        (
+            corpus_bytes("valid.fastk"),
+            corpus_bytes("valid.fastk.manifest.json"),
+        ),
+        (
+            corpus_bytes("valid2.fastk"),
+            corpus_bytes("valid2.fastk.manifest.json"),
+        ),
+    ];
+    for case in 0..fuzz_cases() {
+        let (base, manifest) = &seeds[case % seeds.len()];
+        let mut rng = Rng::new(0xF0CC_0000 ^ case as u64);
+        let mutated = mutate(&mut rng, base);
+        // Every byte is load-bearing, so the full boundary must reject
+        // every mutant — a clean Err, never a panic, never Ok.
+        let err = open_bytes(&dir, &mutated, Some(manifest))
+            .expect_err(&format!("case {case}: mutated store opened"));
+        assert!(!format!("{err:#}").is_empty());
+        // And the header parser alone must never panic on it (it may
+        // return Ok for mutations only the manifest cross-check or the
+        // checksum pass can catch — that is the point of those layers).
+        let _ = format::parse_header(&mutated);
+    }
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mutated_manifests_never_panic_and_ok_means_untouched_geometry() {
+    let dir = work_dir("mutate-manifest");
+    let data = corpus_bytes("valid.fastk");
+    let manifest = corpus_bytes("valid.fastk.manifest.json");
+    let baseline = open_bytes(&dir, &data, Some(&manifest)).unwrap();
+    let baseline = (
+        baseline.d(),
+        baseline.shards(),
+        baseline.shard_size(),
+        baseline.seed(),
+    );
+    for case in 0..fuzz_cases() {
+        let mut rng = Rng::new(0x3A2F_0000 ^ case as u64);
+        let mutated = mutate(&mut rng, &manifest);
+        match open_bytes(&dir, &data, Some(&mutated)) {
+            // A mutation that dodged every field the cross-check reads
+            // (whitespace, `created_by`, ...) may be accepted — but then
+            // the parsed identity must match the pristine baseline.
+            Ok(st) => assert_eq!(
+                (st.d(), st.shards(), st.shard_size(), st.seed()),
+                baseline,
+                "case {case}: a mutated manifest changed the store's identity"
+            ),
+            Err(err) => assert!(!format!("{err:#}").is_empty()),
+        }
+    }
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn random_noise_never_parses() {
+    let dir = work_dir("noise");
+    let manifest = corpus_bytes("valid.fastk.manifest.json");
+    for (i, len) in [0usize, 1, 7, 8, 63, 64, 65, 112, 192, 256, 1024]
+        .into_iter()
+        .enumerate()
+    {
+        let mut rng = Rng::new(0x0150_0000 + i as u64);
+        let noise: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        // Deterministic seeds: none of these happens to start with the
+        // 8-byte magic, so rejection is stable run to run.
+        assert!(
+            format::parse_header(&noise).is_err(),
+            "{len}-byte noise parsed as a header"
+        );
+        let err = open_bytes(&dir, &noise, Some(&manifest))
+            .expect_err(&format!("{len}-byte noise opened as a store"));
+        assert!(!format!("{err:#}").is_empty());
+    }
+    fs::remove_dir_all(&dir).ok();
+}

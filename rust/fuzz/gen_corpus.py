@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Regenerate the checked-in fuzz seed corpus (rust/fuzz/corpus/).
+
+The corpus is a set of tiny v1 shard stores: two valid ones and one file
+per known corruption mode from the store's corruption taxonomy (see
+rust/src/store/format.rs and the reader's corruption test suite). The
+fuzz target (rust/fuzz/fuzz_store.rs) replays every known-bad file and
+asserts a *distinct, clean* `Err`, then mutates the valid seeds.
+
+Everything here is deterministic — byte-for-byte identical output on
+every run — so the corpus can be regenerated and diffed:
+
+    python3 rust/fuzz/gen_corpus.py
+
+The v1 layout and the FNV-1a-64 checksum are reimplemented here on
+purpose: the format must outlive any single implementation, and a second
+implementation is itself a format check (if this script and the Rust
+writer disagree, `valid.fastk` stops opening and the fuzz suite fails).
+"""
+
+import json
+import os
+import struct
+
+MAGIC = b"FASTKSTO"
+VERSION = 1
+DTYPE_F32LE = 1
+REGION_ALIGN = 64
+FIXED_HEADER = 64
+REGION_ENTRY = 24
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "corpus")
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x00000100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def rows_bytes(seed: int, shard: int, shard_size: int, d: int) -> bytes:
+    # Arbitrary but deterministic little-endian f32 rows. Content is not
+    # validated beyond the checksum, so any pattern works; small integers
+    # keep the floats exact and the files diffable.
+    vals = [
+        float((seed * 31 + shard * 7 + i) % 17) - 8.0
+        for i in range(shard_size * d)
+    ]
+    return struct.pack(f"<{len(vals)}f", *vals)
+
+
+def build_store(d: int, shards: int, shard_size: int, seed: int) -> bytes:
+    table_end = FIXED_HEADER + shards * REGION_ENTRY
+    first_region = round_up(table_end, REGION_ALIGN)
+    region_len = round_up(shard_size * d * 4, REGION_ALIGN)
+
+    regions = []
+    blobs = []
+    for s in range(shards):
+        data = rows_bytes(seed, s, shard_size, d)
+        padded = data + b"\x00" * (region_len - len(data))
+        regions.append((first_region + s * region_len, region_len, fnv1a64(padded)))
+        blobs.append(padded)
+
+    head = bytearray()
+    head += MAGIC
+    head += struct.pack("<II", VERSION, DTYPE_F32LE)
+    head += struct.pack("<QQQQQ", d, shards, shard_size, REGION_ALIGN, seed)
+    head += b"\x00" * (FIXED_HEADER - len(head))  # reserved
+    for off, ln, ck in regions:
+        head += struct.pack("<QQQ", off, ln, ck)
+    head += b"\x00" * (first_region - len(head))  # pad to shard 0
+    return bytes(head) + b"".join(blobs)
+
+
+def manifest(d: int, shards: int, shard_size: int, seed: int) -> str:
+    return json.dumps(
+        {
+            "format_version": VERSION,
+            "dtype": "f32le",
+            "d": d,
+            "shards": shards,
+            "shard_size": shard_size,
+            "n_total": shards * shard_size,
+            "region_align": REGION_ALIGN,
+            # String, not number: u64 seeds above 2^53 must survive JSON.
+            "seed": str(seed),
+            "checksum": "fnv1a64",
+            "created_by": "rust/fuzz/gen_corpus.py",
+        },
+        indent=1,
+    )
+
+
+def write(name: str, data: bytes, manifest_text: str | None):
+    with open(os.path.join(OUT, name), "wb") as f:
+        f.write(data)
+    if manifest_text is not None:
+        with open(os.path.join(OUT, name + ".manifest.json"), "w") as f:
+            f.write(manifest_text)
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    for stale in os.listdir(OUT):
+        os.remove(os.path.join(OUT, stale))
+
+    # Valid seeds: the 1-shard minimum and a 2-shard store (multi-entry
+    # region table, and a region-table pad before shard 0).
+    d, n, seed = 2, 2, 42
+    good = build_store(d, 1, n, seed)
+    man = manifest(d, 1, n, seed)
+    write("valid.fastk", good, man)
+    write("valid2.fastk", build_store(d, 2, n, 43), manifest(d, 2, n, 43))
+
+    def flip(data: bytes, at: int, xor: int) -> bytes:
+        b = bytearray(data)
+        b[at] ^= xor
+        return bytes(b)
+
+    # Known-bad variants: one file per corruption mode, each paired with
+    # the manifest for the geometry it *claims*. Expected error substrings
+    # live in the replay table in fuzz_store.rs.
+    write("truncated.fastk", good[:32], man)
+    write("short.fastk", good[:-10], man)
+    write("bad-magic.fastk", flip(good, 0, 0xFF), man)
+    write("bad-version.fastk", flip(good, 8, 0x08), man)
+    write("bad-dtype.fastk", flip(good, 12, 0x02), man)
+    # d = 0: empty geometry (other fields untouched).
+    zero_d = bytearray(good)
+    zero_d[16:24] = b"\x00" * 8
+    write("empty-geometry.fastk", bytes(zero_d), man)
+    # region_align 64 -> 96.
+    write("bad-align.fastk", flip(good, 40, 0x20), man)
+    # Region-table offset entry drifts from the computed layout.
+    write("region-drift.fastk", flip(good, FIXED_HEADER, 0x40), man)
+    # Reserved header bytes must be zero.
+    write("reserved-set.fastk", flip(good, 59, 0x01), man)
+    # The zero pad between the region table and shard 0 (1 shard: bytes
+    # [88, 128)) must be zero.
+    write("pad-dirty.fastk", flip(good, FIXED_HEADER + REGION_ENTRY, 0xFF), man)
+    # A data bit flip: parses fine, fails the checksum pass.
+    write("checksum-flip.fastk", flip(good, len(good) - 5, 0x10), man)
+    # Header d 2 -> 3 keeps the padded layout (and the file length)
+    # identical, so only the manifest cross-check catches it.
+    write("geometry-skew.fastk", flip(good, 16, 0x01), man)
+    # Header seed flipped: same shape of skew, caught by the manifest.
+    write("seed-skew.fastk", flip(good, 48, 0x01), man)
+    # Valid bytes, lying manifest.
+    write("manifest-skew.fastk", good, manifest(999, 1, n, seed))
+    # Valid bytes, unparseable manifest.
+    write("manifest-garbage.fastk", good, "{not json")
+    # Valid bytes, no manifest at all.
+    write("manifest-missing.fastk", good, None)
+
+    names = sorted(os.listdir(OUT))
+    print(f"wrote {len(names)} files to {OUT}:")
+    for f in names:
+        print(f"  {f} ({os.path.getsize(os.path.join(OUT, f))} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -111,6 +111,13 @@ pub struct LauncherConfig {
     /// "verify_checksums"}`). `None` (or JSON `null`): serve the synthetic
     /// in-memory database, generated per shard from `seed ⊕ shard`.
     pub store: Option<StoreConfig>,
+    /// TCP listen address for the JSON-lines net protocol (e.g.
+    /// `"127.0.0.1:7070"`; port 0 picks a free port). When set, `fastk
+    /// serve` binds the net front end and keeps serving — accepting
+    /// queries, `stats`, and live `reload` commands — until a client sends
+    /// `{"cmd": "shutdown"}`. `None` (or JSON `null`): no listener; serve
+    /// runs its synthetic open-loop load and exits.
+    pub listen: Option<String>,
     pub artifact: Option<String>,
     pub artifact_dir: String,
     pub seed: u64,
@@ -135,6 +142,7 @@ impl Default for LauncherConfig {
             tile_rows: 0,
             kernel: KernelKind::Auto,
             store: None,
+            listen: None,
             artifact: None,
             artifact_dir: "artifacts".to_string(),
             seed: 42,
@@ -231,6 +239,15 @@ impl LauncherConfig {
                 c.store = Some(sc);
             }
         }
+        if let Some(v) = j.get("listen") {
+            if *v != Json::Null {
+                c.listen = Some(
+                    v.as_str()
+                        .context("listen must be a string address (or null)")?
+                        .to_string(),
+                );
+            }
+        }
         if let Some(v) = j.get("backend") {
             c.backend = match v.as_str() {
                 Some("native") => BackendKind::Native,
@@ -293,6 +310,9 @@ impl LauncherConfig {
         anyhow::ensure!(self.batcher.max_batch >= 1, "batch_max must be >= 1");
         if let Some(sc) = &self.store {
             anyhow::ensure!(!sc.path.is_empty(), "store.path must not be empty");
+        }
+        if let Some(addr) = &self.listen {
+            anyhow::ensure!(!addr.is_empty(), "listen must not be empty");
         }
         if self.backend == BackendKind::Pjrt {
             anyhow::ensure!(
@@ -401,6 +421,13 @@ impl LauncherConfig {
                     ]),
                     None => Json::Null,
                 },
+            ),
+            (
+                "listen",
+                self.listen
+                    .as_ref()
+                    .map(|a| Json::str(a))
+                    .unwrap_or(Json::Null),
             ),
             (
                 "artifact",
@@ -598,6 +625,19 @@ mod tests {
         let d = LauncherConfig::default();
         let d2 = LauncherConfig::from_json(&d.to_json().to_string()).unwrap();
         assert!(d2.store.is_none());
+    }
+
+    #[test]
+    fn parses_listen_address() {
+        assert!(LauncherConfig::from_json("{}").unwrap().listen.is_none());
+        assert!(LauncherConfig::from_json(r#"{"listen": null}"#).unwrap().listen.is_none());
+        let c = LauncherConfig::from_json(r#"{"listen": "127.0.0.1:0"}"#).unwrap();
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:0"));
+        assert!(LauncherConfig::from_json(r#"{"listen": 7070}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"listen": ""}"#).is_err());
+        // Round-trips through to_json (None as null, Some as string).
+        let c2 = LauncherConfig::from_json(&c.to_json().to_string()).unwrap();
+        assert_eq!(c2.listen, c.listen);
     }
 
     #[test]

@@ -41,6 +41,22 @@ struct Inner {
     /// Identity + open cost of the shard store rows are served from, if
     /// the deployment is store-backed.
     store: Option<StoreInfo>,
+    /// Global swap epoch: 0 at start, +1 per successful shard install.
+    epoch: u64,
+    /// Per-shard epoch (1 at start — the shard the service launched with —
+    /// +1 per successful reload of that slot).
+    shard_epochs: Vec<u64>,
+    /// Per-shard successful live reloads.
+    reloads: Vec<u64>,
+    /// Per-shard rolled-back reload attempts (replacement failed to open,
+    /// validate, or construct; the old epoch kept serving).
+    rollbacks: Vec<u64>,
+}
+
+fn grow(v: &mut Vec<u64>, shard: usize, fill: u64) {
+    if shard >= v.len() {
+        v.resize(shard + 1, fill);
+    }
 }
 
 impl Default for ServiceMetrics {
@@ -64,9 +80,62 @@ impl ServiceMetrics {
                 plan: None,
                 kernel: None,
                 store: None,
+                epoch: 0,
+                shard_epochs: Vec::new(),
+                reloads: Vec::new(),
+                rollbacks: Vec::new(),
             }),
             started: Instant::now(),
         }
+    }
+
+    /// Size the per-shard reload counters (every live shard starts at
+    /// epoch 1). Called once by `MipsService::start`.
+    pub fn set_shards(&self, n: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.shard_epochs = vec![1; n];
+        m.reloads = vec![0; n];
+        m.rollbacks = vec![0; n];
+    }
+
+    /// A replacement shard was installed: bump that shard's epoch and the
+    /// global swap epoch. Returns the new global epoch.
+    pub fn record_reload(&self, shard: usize) -> u64 {
+        let mut m = self.inner.lock().unwrap();
+        grow(&mut m.shard_epochs, shard, 1);
+        grow(&mut m.reloads, shard, 0);
+        m.shard_epochs[shard] += 1;
+        m.reloads[shard] += 1;
+        m.epoch += 1;
+        m.epoch
+    }
+
+    /// A replacement shard failed to open/validate/construct and was
+    /// rolled back (the old epoch kept serving).
+    pub fn record_rollback(&self, shard: usize) {
+        let mut m = self.inner.lock().unwrap();
+        grow(&mut m.rollbacks, shard, 0);
+        m.rollbacks[shard] += 1;
+    }
+
+    /// Global swap epoch (0 until the first successful reload).
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+
+    /// Per-shard epochs (each starts at 1; +1 per successful reload).
+    pub fn shard_epochs(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().shard_epochs.clone()
+    }
+
+    /// Total successful live reloads across all shards.
+    pub fn reloads(&self) -> u64 {
+        self.inner.lock().unwrap().reloads.iter().sum()
+    }
+
+    /// Total rolled-back reload attempts across all shards.
+    pub fn rollbacks(&self) -> u64 {
+        self.inner.lock().unwrap().rollbacks.iter().sum()
     }
 
     pub fn record_request(&self, total: Duration, queued: Duration, degraded: bool) {
@@ -199,6 +268,19 @@ impl ServiceMetrics {
                 p.source.as_str()
             ));
         }
+        let (reloads, rollbacks): (u64, u64) =
+            (m.reloads.iter().sum(), m.rollbacks.iter().sum());
+        if reloads > 0 || rollbacks > 0 {
+            let epochs: Vec<String> =
+                m.shard_epochs.iter().map(|e| e.to_string()).collect();
+            s.push_str(&format!(
+                " reload(epoch={} reloads={} rollbacks={} shard_epochs=[{}])",
+                m.epoch,
+                reloads,
+                rollbacks,
+                epochs.join(",")
+            ));
+        }
         s
     }
 }
@@ -271,6 +353,32 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("store=db.fastk@v1 4x1024x16 (mmap)"), "{s}");
         assert!(s.contains("open="), "{s}");
+    }
+
+    #[test]
+    fn reload_counters_and_epochs() {
+        let m = ServiceMetrics::new();
+        m.set_shards(3);
+        assert_eq!(m.epoch(), 0);
+        assert_eq!(m.shard_epochs(), vec![1, 1, 1]);
+        assert_eq!(m.reloads(), 0);
+        assert_eq!(m.rollbacks(), 0);
+        // Quiet services don't clutter the summary with reload state.
+        assert!(!m.summary().contains("reload("), "{}", m.summary());
+
+        assert_eq!(m.record_reload(1), 1);
+        assert_eq!(m.record_reload(1), 2);
+        assert_eq!(m.record_reload(0), 3);
+        m.record_rollback(2);
+        assert_eq!(m.epoch(), 3);
+        assert_eq!(m.shard_epochs(), vec![2, 3, 1]);
+        assert_eq!(m.reloads(), 3);
+        assert_eq!(m.rollbacks(), 1);
+        let s = m.summary();
+        assert!(
+            s.contains("reload(epoch=3 reloads=3 rollbacks=1 shard_epochs=[2,3,1])"),
+            "{s}"
+        );
     }
 
     #[test]

@@ -29,6 +29,12 @@
 //! never silent: replies carry a `degraded` flag when a shard missed a
 //! batch, the metrics count per-shard failures, and a batch no shard
 //! answered yields error replies rather than empty candidate sets.
+//!
+//! Shards can be replaced *live*: the epoch-based swap in
+//! [`service::MipsService::reload_shard`] builds a replacement backend in
+//! a fresh worker thread and installs it between batches (triggered over
+//! the net protocol's `reload` verb, or directly through the API), with
+//! rollback-not-crash semantics when the replacement fails to open.
 
 pub mod backend;
 pub mod batcher;
@@ -45,5 +51,8 @@ pub use backend::{
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use merge::{merge_shard_results, ShardTopK};
 pub use metrics::ServiceMetrics;
-pub use service::{MipsService, Query, Response, ServiceConfig};
+pub use service::{
+    MipsService, Query, ReloadFn, ReloadSource, ReloadSpec, Response, ServiceConfig,
+    ShardReload,
+};
 pub use shard::{PendingShard, ShardHandle, ShardResult};

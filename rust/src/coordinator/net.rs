@@ -11,9 +11,16 @@
 //! -> {"cmd": "stats"}
 //! <- {"stats": "requests=... p50=...", "shard_failures": 0,
 //!     "degraded_requests": 0, "failed_requests": 0,
+//!     "reload": {"epoch": 0, "reloads": 0, "rollbacks": 0,
+//!                "shard_epochs": [1, 1, ...]},     (live-swap state)
 //!     "kernel": "avx2",                     (resolved SIMD dispatch, if native)
 //!     "store": {"path": ..., "mapped": true, "open_us": ...},  (if store-backed)
 //!     "plan": {"buckets": 512, "local_k": 4, ...}}   (plan if one was made)
+//! -> {"cmd": "reload", "shard": 0, "store": "new.fastk"}
+//!      (or {"cmd": "reload", "shard": 0, "seed": 7, "shard_size": 2048})
+//! <- {"reloaded": true, "shard": 0, "epoch": 1}
+//!      (or {"reloaded": false, "shard": 0, "rolled_back": true,
+//!           "error": "..."} — the old epoch keeps serving)
 //! -> {"cmd": "shutdown"}       (stops the listener)
 //! ```
 //!
@@ -30,7 +37,7 @@ use std::sync::Arc;
 
 use crate::util::json::Json;
 
-use super::service::MipsService;
+use super::service::{MipsService, ReloadSource, ReloadSpec};
 
 /// A running TCP front end.
 pub struct NetServer {
@@ -92,6 +99,15 @@ impl NetServer {
 
     pub fn shutdown(mut self) {
         self.stop_inner();
+    }
+
+    /// Block until the server stops on its own — i.e. a client sent
+    /// `{"cmd": "shutdown"}`. This is how `fastk serve --listen` parks its
+    /// main thread while traffic (and live reloads) flow over TCP.
+    pub fn wait(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
     }
 
     fn stop_inner(&mut self) {
@@ -173,6 +189,23 @@ fn handle_line(
                     ("shard_failures", Json::num(m.shard_failures() as f64)),
                     ("degraded_requests", Json::num(m.degraded_requests() as f64)),
                     ("failed_requests", Json::num(m.failed_requests() as f64)),
+                    (
+                        "reload",
+                        Json::obj(vec![
+                            ("epoch", Json::num(m.epoch() as f64)),
+                            ("reloads", Json::num(m.reloads() as f64)),
+                            ("rollbacks", Json::num(m.rollbacks() as f64)),
+                            (
+                                "shard_epochs",
+                                Json::Arr(
+                                    m.shard_epochs()
+                                        .iter()
+                                        .map(|&e| Json::num(e as f64))
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    ),
                 ];
                 if let Some(k) = m.kernel() {
                     fields.push(("kernel", Json::str(k)));
@@ -212,6 +245,46 @@ fn handle_line(
                     ));
                 }
                 Ok(Some(Json::obj(fields)))
+            }
+            "reload" => {
+                let shard = j
+                    .get("shard")
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| anyhow::anyhow!("reload needs a `shard` index"))?
+                    as usize;
+                let source = if let Some(path) = j.get("store").and_then(|v| v.as_str()) {
+                    ReloadSource::Store {
+                        path: path.to_string(),
+                    }
+                } else if let Some(seed) = j.get("seed").and_then(|v| v.as_i64()) {
+                    ReloadSource::Synthetic {
+                        seed: seed as u64,
+                        shard_size: j
+                            .get("shard_size")
+                            .and_then(|v| v.as_i64())
+                            .map(|n| n as usize),
+                    }
+                } else {
+                    anyhow::bail!(
+                        "reload needs a `store` path or a `seed` (+ optional `shard_size`)"
+                    )
+                };
+                // A failed reload is a *rolled-back* outcome, not a
+                // protocol error: reply structured so operators see the
+                // old epoch is still serving.
+                match service.reload(ReloadSpec { shard, source }) {
+                    Ok(epoch) => Ok(Some(Json::obj(vec![
+                        ("reloaded", Json::Bool(true)),
+                        ("shard", Json::num(shard as f64)),
+                        ("epoch", Json::num(epoch as f64)),
+                    ]))),
+                    Err(e) => Ok(Some(Json::obj(vec![
+                        ("reloaded", Json::Bool(false)),
+                        ("shard", Json::num(shard as f64)),
+                        ("rolled_back", Json::Bool(true)),
+                        ("error", Json::str(&format!("{e:#}"))),
+                    ]))),
+                }
             }
             "shutdown" => {
                 stop.store(true, Ordering::Relaxed);
@@ -437,6 +510,116 @@ mod tests {
         assert_eq!(p.get("local_k").unwrap().as_i64(), Some(1));
         assert_eq!(p.get("source").unwrap().as_str(), Some("manual"));
         assert!(p.get("predicted_recall").unwrap().as_f64().unwrap() > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn reload_verb_swaps_and_stats_track_epochs() {
+        use crate::coordinator::service::{ReloadSource, ShardReload};
+        let d = 8;
+        let k = 4;
+        let n = 64;
+        let mk_db = |seed: u64| -> Vec<f32> {
+            let mut rng = Rng::new(seed);
+            (0..n * d).map(|_| rng.next_f32()).collect()
+        };
+        let db0 = mk_db(4);
+        let factories: Vec<BackendFactory> = vec![Box::new(move || {
+            Ok(Box::new(NativeBackend::exact(db0, d, k)) as Box<dyn ShardBackend>)
+        })];
+        let svc = Arc::new(
+            MipsService::start(
+                ServiceConfig {
+                    d,
+                    k,
+                    batcher: BatcherConfig {
+                        max_batch: 4,
+                        max_delay: std::time::Duration::from_micros(200),
+                    },
+                    plan: None,
+                },
+                factories,
+                vec![0],
+            )
+            .unwrap(),
+        );
+        // A reloader that regenerates the shard from the requested seed,
+        // rejecting store sources (this test exercises the verb plumbing,
+        // not the store path).
+        svc.set_reloader(Box::new(move |spec| match &spec.source {
+            ReloadSource::Synthetic { seed, .. } => {
+                let db = mk_db(*seed);
+                let shard = spec.shard;
+                Ok(ShardReload {
+                    shard,
+                    factory: Box::new(move || {
+                        Ok(Box::new(NativeBackend::exact(db, d, k)) as Box<dyn ShardBackend>)
+                    }),
+                    plan: None,
+                })
+            }
+            ReloadSource::Store { path } => {
+                anyhow::bail!("no store at {path} in this test")
+            }
+        }));
+        let server = NetServer::start("127.0.0.1:0", svc).unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+
+        // Fresh service: epoch 0, one shard at epoch 1.
+        w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let stats0 = Json::parse(&line).unwrap();
+        let reload = stats0.get("reload").unwrap();
+        assert_eq!(reload.get("epoch").unwrap().as_i64(), Some(0));
+        assert_eq!(reload.get("reloads").unwrap().as_i64(), Some(0));
+        assert_eq!(reload.get("rollbacks").unwrap().as_i64(), Some(0));
+
+        // Swap to a different synthetic database.
+        line.clear();
+        w.write_all(b"{\"cmd\": \"reload\", \"shard\": 0, \"seed\": 99}\n")
+            .unwrap();
+        r.read_line(&mut line).unwrap();
+        let rep = Json::parse(&line).unwrap();
+        assert_eq!(rep.get("reloaded").unwrap().as_bool(), Some(true), "{line}");
+        assert_eq!(rep.get("epoch").unwrap().as_i64(), Some(1));
+
+        // A failing reload is a structured rolled-back reply, and the
+        // service keeps answering afterwards.
+        line.clear();
+        w.write_all(b"{\"cmd\": \"reload\", \"shard\": 0, \"store\": \"missing.fastk\"}\n")
+            .unwrap();
+        r.read_line(&mut line).unwrap();
+        let rep = Json::parse(&line).unwrap();
+        assert_eq!(rep.get("reloaded").unwrap().as_bool(), Some(false), "{line}");
+        assert_eq!(rep.get("rolled_back").unwrap().as_bool(), Some(true));
+        assert!(rep.get("error").is_some());
+
+        line.clear();
+        w.write_all(b"{\"id\": 5, \"vector\": [1,1,1,1,1,1,1,1]}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(5));
+        assert!(j.get("results").is_some(), "{line}");
+
+        line.clear();
+        w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let stats1 = Json::parse(&line).unwrap();
+        let reload = stats1.get("reload").unwrap();
+        assert_eq!(reload.get("epoch").unwrap().as_i64(), Some(1));
+        assert_eq!(reload.get("reloads").unwrap().as_i64(), Some(1));
+        assert_eq!(reload.get("rollbacks").unwrap().as_i64(), Some(1));
+        let epochs = reload.get("shard_epochs").unwrap().as_arr().unwrap();
+        assert_eq!(epochs.len(), 1);
+        assert_eq!(epochs[0].as_i64(), Some(2));
+        // A malformed reload (no source) is a protocol error, not a crash.
+        line.clear();
+        w.write_all(b"{\"cmd\": \"reload\", \"shard\": 0}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("error").is_some(), "{line}");
         server.shutdown();
     }
 

@@ -1,8 +1,28 @@
 //! The MIPS serving front end: accepts queries, batches them, scatters to
 //! shard workers, gathers and merges, and replies per request.
+//!
+//! # Live shard swap (epochs)
+//!
+//! A running service can replace a shard's backend without stopping:
+//! [`MipsService::reload_shard`] constructs the replacement *inside a fresh
+//! worker thread* (the same deferred-spawn path used at startup, so store
+//! opens and database generation never block the serving path), then asks
+//! the router to install it. Router messages share one channel with
+//! queries, so the install lands **between batches**: the outgoing worker's
+//! last submitted batch has fully replied before the handle is replaced,
+//! and no in-flight query ever sees a torn view. Dropping the old handle
+//! joins its worker and releases its backend — for store-backed shards that
+//! drops the last `Arc<Mmap>` reference and unmaps the retired region.
+//!
+//! Every successful install bumps a global *epoch* counter (surfaced in
+//! [`ServiceMetrics`] and stamped on each [`Response`]), so clients and
+//! tests can attribute any reply to the exact database state that produced
+//! it. A replacement that fails to open or validate is a counted rollback:
+//! the old epoch keeps serving and the error goes back to the caller —
+//! never a crash, never a silent fallback.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -34,6 +54,11 @@ pub struct Response {
     pub shards_answered: usize,
     /// Shards the batch was scattered to.
     pub shards_total: usize,
+    /// Global swap epoch the batch was served under (0 until the first
+    /// live reload; +1 per successful shard install). Replies from
+    /// different epochs may legitimately differ — this field says which
+    /// database state produced this one.
+    pub epoch: u64,
     pub total_latency: Duration,
     pub queue_latency: Duration,
 }
@@ -56,11 +81,70 @@ struct Pending {
     reply: Sender<anyhow::Result<Response>>,
 }
 
+/// What flows to the router: queries to batch, or a ready replacement
+/// shard to install between batches. Sharing the query channel is what
+/// makes installs wake an idle router (the batcher blocks on this channel
+/// for the first element of every batch).
+enum RouterMsg {
+    Query(Pending),
+    Install(Install),
+}
+
+/// A constructed replacement shard, ready to swap in.
+struct Install {
+    shard: usize,
+    handle: ShardHandle,
+    plan: Option<crate::plan::ServePlan>,
+    reply: Sender<u64>,
+}
+
+/// A replacement shard described by its backend factory: what
+/// [`MipsService::reload_shard`] consumes. The factory runs inside the
+/// replacement's worker thread, exactly like at startup.
+pub struct ShardReload {
+    /// Which shard slot to replace.
+    pub shard: usize,
+    /// The replacement backend; its `shard_size()` becomes the shard's new
+    /// size (global offsets are recomputed on install).
+    pub factory: BackendFactory,
+    /// Updated `(B, K′)` plan when the swap changes geometry; recorded in
+    /// the metrics at install time so `stats` always reflects the plan the
+    /// live epoch actually runs.
+    pub plan: Option<crate::plan::ServePlan>,
+}
+
+/// How an admin `reload` request describes the replacement shard. The
+/// launcher installs a reloader (see [`MipsService::set_reloader`]) that
+/// turns a spec into a [`ShardReload`] — opening stores, validating
+/// geometry, and replanning live here, *before* anything touches the
+/// serving path.
+#[derive(Debug, Clone)]
+pub struct ReloadSpec {
+    pub shard: usize,
+    pub source: ReloadSource,
+}
+
+/// Where the replacement shard's rows come from.
+#[derive(Debug, Clone)]
+pub enum ReloadSource {
+    /// Open shard `shard`'s region from the store at `path` (validated
+    /// with checksums before the swap is attempted).
+    Store { path: String },
+    /// Regenerate synthetic rows from `seed ⊕ shard`; `shard_size`
+    /// defaults to the configured shard size when absent.
+    Synthetic { seed: u64, shard_size: Option<usize> },
+}
+
+/// Turns a [`ReloadSpec`] into a ready-to-install [`ShardReload`].
+pub type ReloadFn = Box<dyn Fn(&ReloadSpec) -> anyhow::Result<ShardReload> + Send + Sync>;
+
 /// A running MIPS service (router thread + shard worker threads).
 pub struct MipsService {
-    tx: Sender<Pending>,
+    tx: Sender<RouterMsg>,
     pub metrics: Arc<ServiceMetrics>,
     config: ServiceConfig,
+    shards_total: usize,
+    reloader: Mutex<Option<ReloadFn>>,
     router: Option<JoinHandle<()>>,
 }
 
@@ -75,7 +159,9 @@ impl MipsService {
     ) -> anyhow::Result<MipsService> {
         anyhow::ensure!(!backends.is_empty(), "need at least one shard");
         anyhow::ensure!(backends.len() == shard_offsets.len());
+        let shards_total = backends.len();
         let metrics = Arc::new(ServiceMetrics::new());
+        metrics.set_shards(shards_total);
         if let Some(plan) = config.plan {
             metrics.set_plan(plan);
         }
@@ -103,7 +189,7 @@ impl MipsService {
             return Err(e);
         }
 
-        let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
+        let (tx, rx): (Sender<RouterMsg>, Receiver<RouterMsg>) = channel();
         let m = metrics.clone();
         let cfg = config.clone();
         let router = std::thread::Builder::new()
@@ -113,10 +199,43 @@ impl MipsService {
                 // Per-shard down state, so a persistently failing shard
                 // logs one line on failure and one on recovery instead of
                 // one per batch.
+                let mut shards = shards;
+                let mut shard_offsets = shard_offsets;
                 let mut shard_down = vec![false; shards.len()];
+                let mut epoch = 0u64;
                 while let Some(batch) = batcher.next_batch() {
-                    m.record_batch(batch.len());
-                    Self::process_batch(&cfg, &shards, &shard_offsets, batch, &m, &mut shard_down);
+                    // Queries first, installs after: the whole batch is
+                    // served by one epoch, and a swap only ever applies at
+                    // a batch boundary.
+                    let mut queries = Vec::with_capacity(batch.len());
+                    let mut installs = Vec::new();
+                    for msg in batch {
+                        match msg {
+                            RouterMsg::Query(p) => queries.push(p),
+                            RouterMsg::Install(i) => installs.push(i),
+                        }
+                    }
+                    if !queries.is_empty() {
+                        m.record_batch(queries.len());
+                        Self::process_batch(
+                            &cfg,
+                            &shards,
+                            &shard_offsets,
+                            queries,
+                            &m,
+                            &mut shard_down,
+                            epoch,
+                        );
+                    }
+                    for inst in installs {
+                        epoch = Self::install_shard(
+                            inst,
+                            &mut shards,
+                            &mut shard_offsets,
+                            &mut shard_down,
+                            &m,
+                        );
+                    }
                 }
                 // Dropping `shards` joins the workers.
             })
@@ -126,8 +245,120 @@ impl MipsService {
             tx,
             metrics,
             config,
+            shards_total,
+            reloader: Mutex::new(None),
             router: Some(router),
         })
+    }
+
+    /// Swap a ready replacement into the shard table (router thread,
+    /// between batches). The outgoing handle's worker is joined and its
+    /// backend dropped before this returns — a mapped shard's region is
+    /// unmapped as soon as the swap completes, because no batch can still
+    /// reference it.
+    fn install_shard(
+        inst: Install,
+        shards: &mut [ShardHandle],
+        shard_offsets: &mut [usize],
+        shard_down: &mut [bool],
+        metrics: &ServiceMetrics,
+    ) -> u64 {
+        let Install {
+            shard,
+            handle,
+            plan,
+            reply,
+        } = inst;
+        debug_assert_eq!(handle.shard, shard);
+        let old = std::mem::replace(&mut shards[shard], handle);
+        drop(old); // join the retired worker; drops its backend (and mmap ref)
+        shard_down[shard] = false;
+        // Sizes may have changed: recompute the shard-local → global
+        // index offsets for the merge.
+        let mut off = 0usize;
+        for (s, h) in shards.iter().enumerate() {
+            shard_offsets[s] = off;
+            off += h.size;
+        }
+        if let Some(p) = plan {
+            metrics.set_plan(p);
+        }
+        let epoch = metrics.record_reload(shard);
+        let _ = reply.send(epoch);
+        epoch
+    }
+
+    /// Install the reloader that turns admin [`ReloadSpec`]s into
+    /// replacement shards (the launcher wires one up when live reload is
+    /// configured; without it, [`reload`](Self::reload) is rejected).
+    pub fn set_reloader(&self, f: ReloadFn) {
+        *self.reloader.lock().unwrap() = Some(f);
+    }
+
+    /// Handle an admin reload request: build the replacement described by
+    /// `spec` and swap it in. Any failure — no reloader, bad spec, a
+    /// replacement store that does not open or validate — is a counted
+    /// rollback: the old epoch keeps serving and the error is returned.
+    pub fn reload(&self, spec: ReloadSpec) -> anyhow::Result<u64> {
+        anyhow::ensure!(
+            spec.shard < self.shards_total,
+            "shard {} out of range (service has {} shards)",
+            spec.shard,
+            self.shards_total
+        );
+        let built = {
+            let guard = self.reloader.lock().unwrap();
+            match guard.as_ref() {
+                Some(f) => f(&spec),
+                None => Err(anyhow::anyhow!("live reload is not configured for this service")),
+            }
+        };
+        match built {
+            Ok(r) => self.reload_shard(r),
+            Err(e) => {
+                self.metrics.record_rollback(spec.shard);
+                Err(e.context(format!("reload of shard {} rolled back", spec.shard)))
+            }
+        }
+    }
+
+    /// Build a replacement shard in the background and atomically swap it
+    /// in between batches. Blocks until the swap completes (or the
+    /// replacement's factory fails — a counted rollback that leaves the
+    /// old epoch serving). Returns the new global epoch.
+    pub fn reload_shard(&self, r: ShardReload) -> anyhow::Result<u64> {
+        anyhow::ensure!(
+            r.shard < self.shards_total,
+            "shard {} out of range (service has {} shards)",
+            r.shard,
+            self.shards_total
+        );
+        let shard = r.shard;
+        // The factory runs inside the replacement's worker thread; the
+        // old epoch keeps answering batches while it constructs.
+        let pending = ShardHandle::spawn_deferred(shard, r.factory);
+        let handle = match pending.wait() {
+            Ok(h) => h,
+            Err(e) => {
+                self.metrics.record_rollback(shard);
+                return Err(e.context(format!(
+                    "replacement for shard {shard} failed to construct; rolled back \
+                     (old epoch keeps serving)"
+                )));
+            }
+        };
+        let (ack_tx, ack_rx) = channel();
+        self.tx
+            .send(RouterMsg::Install(Install {
+                shard,
+                handle,
+                plan: r.plan,
+                reply: ack_tx,
+            }))
+            .map_err(|_| anyhow::anyhow!("service is shut down"))?;
+        ack_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service shut down before the swap completed"))
     }
 
     fn process_batch(
@@ -137,6 +368,7 @@ impl MipsService {
         batch: Vec<Pending>,
         metrics: &ServiceMetrics,
         shard_down: &mut [bool],
+        epoch: u64,
     ) {
         let nq = batch.len();
         let dispatch_start = Instant::now();
@@ -241,6 +473,7 @@ impl MipsService {
                 degraded,
                 shards_answered,
                 shards_total,
+                epoch,
                 total_latency: now - p.enqueued,
                 queue_latency: dispatch_start - p.enqueued,
             };
@@ -261,13 +494,20 @@ impl MipsService {
         );
         let (reply_tx, reply_rx) = channel();
         self.tx
-            .send(Pending {
+            .send(RouterMsg::Query(Pending {
                 query,
                 enqueued: Instant::now(),
                 reply: reply_tx,
-            })
+            }))
             .map_err(|_| anyhow::anyhow!("service is shut down"))?;
         Ok(reply_rx)
+    }
+
+    /// Number of shard slots. Fixed for the service's lifetime — live
+    /// reloads replace a slot's backend (and possibly its size), never the
+    /// slot count.
+    pub fn shards(&self) -> usize {
+        self.shards_total
     }
 
     /// Blocking convenience: submit and wait.
@@ -735,5 +975,176 @@ mod tests {
     fn rejects_wrong_dim() {
         let (svc, _) = build_service(128, 2, 8, 3, false, 1);
         assert!(svc.query(0, vec![1.0; 4]).is_err());
+    }
+
+    fn exact_factory(chunk: Vec<f32>, d: usize, k: usize) -> BackendFactory {
+        Box::new(move || {
+            Ok(Box::new(NativeBackend::exact(chunk, d, k))
+                as Box<dyn crate::coordinator::ShardBackend>)
+        })
+    }
+
+    #[test]
+    fn live_reload_swaps_shard_and_stamps_epochs() {
+        let (d, k, per) = (8usize, 4usize, 64usize);
+        let mut rng = Rng::new(29);
+        let chunk = |seed: u64| -> Vec<f32> {
+            let mut r = Rng::new(seed);
+            (0..per * d).map(|_| r.next_gaussian() as f32).collect()
+        };
+        let (c0, c1, c1b) = (chunk(1), chunk(2), chunk(3));
+        let svc = MipsService::start(
+            ServiceConfig {
+                d,
+                k,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                },
+                plan: None,
+            },
+            vec![
+                exact_factory(c0.clone(), d, k),
+                exact_factory(c1.clone(), d, k),
+            ],
+            vec![0, per],
+        )
+        .unwrap();
+
+        let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let db0: Vec<f32> = c0.iter().chain(&c1).copied().collect();
+        let resp = svc.query(0, q.clone()).unwrap();
+        assert_eq!(resp.epoch, 0);
+        let got: Vec<usize> = resp.results.iter().map(|&(i, _)| i).collect();
+        assert_eq!(got, exact_oracle(&db0, d, &q, k));
+
+        // Same-geometry swap of shard 1: answers must flip to the new
+        // database and replies must carry the new epoch.
+        let epoch = svc
+            .reload_shard(ShardReload {
+                shard: 1,
+                factory: exact_factory(c1b.clone(), d, k),
+                plan: None,
+            })
+            .unwrap();
+        assert_eq!(epoch, 1);
+        let db1: Vec<f32> = c0.iter().chain(&c1b).copied().collect();
+        let resp = svc.query(1, q.clone()).unwrap();
+        assert_eq!(resp.epoch, 1);
+        let got: Vec<usize> = resp.results.iter().map(|&(i, _)| i).collect();
+        assert_eq!(got, exact_oracle(&db1, d, &q, k));
+        assert_eq!(svc.metrics.reloads(), 1);
+        assert_eq!(svc.metrics.rollbacks(), 0);
+        assert_eq!(svc.metrics.shard_epochs(), vec![1, 2]);
+
+        // Rollback: a replacement whose factory fails must leave the old
+        // epoch serving identical answers, and be counted.
+        let err = svc
+            .reload_shard(ShardReload {
+                shard: 0,
+                factory: Box::new(|| anyhow::bail!("corrupt replacement")),
+                plan: None,
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("rolled back"), "{err:#}");
+        assert_eq!(svc.metrics.rollbacks(), 1);
+        let resp = svc.query(2, q.clone()).unwrap();
+        assert_eq!(resp.epoch, 1, "failed reload must not advance the epoch");
+        let got: Vec<usize> = resp.results.iter().map(|&(i, _)| i).collect();
+        assert_eq!(got, exact_oracle(&db1, d, &q, k));
+
+        // Out-of-range shard is rejected outright (no rollback counted —
+        // nothing was attempted against a live slot).
+        assert!(svc
+            .reload_shard(ShardReload {
+                shard: 9,
+                factory: exact_factory(c0.clone(), d, k),
+                plan: None,
+            })
+            .is_err());
+        assert_eq!(svc.metrics.rollbacks(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn geometry_changing_reload_recomputes_offsets_and_plan() {
+        let (d, k, per) = (8usize, 3usize, 64usize);
+        let mut rng = Rng::new(43);
+        let c0: Vec<f32> = (0..per * d).map(|_| rng.next_gaussian() as f32).collect();
+        let c1: Vec<f32> = (0..per * d).map(|_| rng.next_gaussian() as f32).collect();
+        let svc = MipsService::start(
+            ServiceConfig {
+                d,
+                k,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(1),
+                },
+                plan: None,
+            },
+            vec![
+                exact_factory(c0.clone(), d, k),
+                exact_factory(c1.clone(), d, k),
+            ],
+            vec![0, per],
+        )
+        .unwrap();
+
+        // Replace shard 0 with a *smaller* shard: global indices of shard 1
+        // must shift down to the new offset, and the updated plan must be
+        // recorded at install time.
+        let per2 = 32usize;
+        let c0b: Vec<f32> = (0..per2 * d).map(|_| rng.next_gaussian() as f32).collect();
+        let plan = crate::plan::plan_fixed(2, per2 as u64, k as u64, 16, 1,
+            crate::plan::PlanSource::Manual)
+        .unwrap();
+        let epoch = svc
+            .reload_shard(ShardReload {
+                shard: 0,
+                factory: exact_factory(c0b.clone(), d, k),
+                plan: Some(plan),
+            })
+            .unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(svc.metrics.plan().unwrap(), plan);
+
+        let db: Vec<f32> = c0b.iter().chain(&c1).copied().collect();
+        for id in 0..4u64 {
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let resp = svc.query(id, q.clone()).unwrap();
+            assert_eq!(resp.epoch, 1);
+            assert!(!resp.degraded);
+            let got: Vec<usize> = resp.results.iter().map(|&(i, _)| i).collect();
+            assert_eq!(got, exact_oracle(&db, d, &q, k), "query {id}");
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reload_without_a_reloader_is_a_counted_rollback() {
+        let (svc, _) = build_service(128, 2, 8, 3, false, 77);
+        let err = svc
+            .reload(ReloadSpec {
+                shard: 0,
+                source: ReloadSource::Synthetic {
+                    seed: 1,
+                    shard_size: None,
+                },
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("not configured"), "{err:#}");
+        assert_eq!(svc.metrics.rollbacks(), 1);
+        // Out-of-range specs are rejected before any rollback accounting.
+        assert!(svc
+            .reload(ReloadSpec {
+                shard: 5,
+                source: ReloadSource::Synthetic {
+                    seed: 1,
+                    shard_size: None,
+                },
+            })
+            .is_err());
+        assert_eq!(svc.metrics.rollbacks(), 1);
+        svc.shutdown();
     }
 }

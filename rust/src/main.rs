@@ -21,9 +21,11 @@ use std::path::Path;
 use std::sync::Arc;
 
 use fastk::config::{BackendKind, LauncherConfig, StoreConfig};
+use fastk::coordinator::net::NetServer;
 use fastk::coordinator::{
     merge_shard_results, BackendFactory, EngineOptions, MipsService, NativeBackend,
-    ParallelNativeBackend, PjrtBackend, ServiceConfig, ShardBackend, ShardTopK,
+    ParallelNativeBackend, PjrtBackend, ReloadSource, ReloadSpec, ServiceConfig, ShardBackend,
+    ShardReload, ShardTopK,
 };
 use fastk::hw::{Accelerator, AcceleratorId};
 use fastk::params::ParamCache;
@@ -86,7 +88,7 @@ fn usage() {
          \x20 table2      [--batch 8]\n\
          \x20 table3\n\
          \x20 probe       [--elements 1048576] [--max-steps 128]\n\
-         \x20 serve       [--config serve.json] [--queries 256]\n\
+         \x20 serve       [--config serve.json] [--queries 256] [--listen 127.0.0.1:0]\n\
          \x20 build-index --out store.fastk [--config serve.json] [--d 64] [--shards 4]\n\
          \x20             [--shard-size 16384] [--seed 42]\n\
          \x20 inspect     --store store.fastk [--no-verify]\n\
@@ -441,11 +443,15 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["config", "queries"]);
-    let cfg = match args.get("config") {
+    args.reject_unknown(&["config", "queries", "listen"]);
+    let mut cfg = match args.get("config") {
         Some(p) => LauncherConfig::from_file(Path::new(p))?,
         None => LauncherConfig::default(),
     };
+    if let Some(addr) = args.get("listen") {
+        // CLI override beats the config's `listen` key.
+        cfg.listen = Some(addr.to_string());
+    }
     let queries = args.usize_or("queries", 256);
     run_serve(&cfg, queries)
 }
@@ -719,7 +725,108 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     if let Some(info) = store_info {
         svc.metrics.set_store(info);
     }
+    let svc = Arc::new(svc);
 
+    // Live reload: translate a `ReloadSpec` (from the net protocol's
+    // `reload` verb, or the API) into a replacement backend for one shard
+    // slot. The closure revalidates the replacement's geometry and replans
+    // (B, K′) against the recall target whenever the shard size changes;
+    // any error here is a counted rollback — the old epoch keeps serving.
+    // The PJRT path's parameters are baked into a compiled artifact, so it
+    // installs no reloader and every reload attempt rolls back.
+    if !matches!(cfg.backend, BackendKind::Pjrt) {
+        let rcfg = cfg.clone();
+        svc.set_reloader(Box::new(move |spec: &ReloadSpec| -> anyhow::Result<ShardReload> {
+            let (rows, new_size): (RowsFn, usize) = match &spec.source {
+                ReloadSource::Store { path } => {
+                    let st = ShardStore::open_with(
+                        Path::new(path),
+                        OpenOptions {
+                            verify_checksums: true,
+                            copy: false,
+                        },
+                    )?;
+                    anyhow::ensure!(
+                        st.d() == rcfg.d,
+                        "replacement store {} is {}-d but the service answers {}-d queries",
+                        path,
+                        st.d(),
+                        rcfg.d
+                    );
+                    anyhow::ensure!(
+                        spec.shard < st.shards(),
+                        "replacement store {} has {} shards; cannot source shard {}",
+                        path,
+                        st.shards(),
+                        spec.shard
+                    );
+                    // The RowSource holds the mapping alive; the store
+                    // handle itself can drop here.
+                    let rows = st.shard_rows(spec.shard);
+                    (Box::new(move || Ok(rows)) as RowsFn, st.shard_size())
+                }
+                ReloadSource::Synthetic { seed, shard_size } => {
+                    let n = shard_size.unwrap_or(rcfg.shard_size);
+                    let (seed, s, d) = (*seed, spec.shard, rcfg.d);
+                    let f: RowsFn = Box::new(move || {
+                        Ok(RowSource::from_vec(store::generate_shard_rows(seed, s, n, d)))
+                    });
+                    (f, n)
+                }
+            };
+            // Replan through the same planner the launcher used, with the
+            // replacement's shard size. Manual (B, K′) pins are revalidated
+            // against the new geometry — an infeasible pin rolls back.
+            let mut plan_cfg = rcfg.clone();
+            plan_cfg.shard_size = new_size;
+            let plan = plan_cfg.resolve_plan(&mut ParamCache::new())?;
+            let params = TwoStageParams::new(
+                new_size,
+                rcfg.k,
+                plan.buckets as usize,
+                plan.local_k as usize,
+            );
+            Ok(ShardReload {
+                shard: spec.shard,
+                factory: backend_factory(&rcfg, rows, Some(params), kernel, threads),
+                plan: Some(plan),
+            })
+        }));
+    }
+
+    // TCP front end (net protocol: query / stats / reload / shutdown).
+    // Announce the bound address before any load runs — wrappers and the
+    // e2e tests scrape it from the first line with this prefix.
+    let server = match &cfg.listen {
+        Some(addr) => {
+            let s = NetServer::start(addr, svc.clone())?;
+            println!("fastk: listening on {}", s.addr);
+            std::io::Write::flush(&mut std::io::stdout())?;
+            Some(s)
+        }
+        None => None,
+    };
+
+    if num_queries > 0 {
+        run_load(cfg, num_queries, &svc, &offsets, &db_store)?;
+    }
+    if let Some(server) = server {
+        println!("serving over TCP until a client sends {{\"cmd\": \"shutdown\"}} ...");
+        server.wait();
+    }
+    println!("metrics: {}", svc.metrics.summary());
+    drop(svc); // last handle: drains + joins the router
+    Ok(())
+}
+
+/// Open-loop load + recall check against the exact per-shard oracle.
+fn run_load(
+    cfg: &LauncherConfig,
+    num_queries: usize,
+    svc: &MipsService,
+    offsets: &[usize],
+    db_store: &Option<Arc<ShardStore>>,
+) -> anyhow::Result<()> {
     // Open-loop load: submit all queries, then collect. Queries draw from
     // a stream split off the root seed — distinct from every per-shard
     // row stream (`seed ⊕ shard`), so query 0 is not shard 0's row 0.
@@ -774,7 +881,7 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     let mut per_query: Vec<Vec<ShardTopK>> = vec![Vec::new(); sample];
     let mut scores = vec![0f32; cfg.shard_size];
     for s in 0..cfg.shards {
-        let rows: RowSource = match &db_store {
+        let rows: RowSource = match db_store {
             Some(st) => st.shard_rows(s),
             None => RowSource::from_vec(store::generate_shard_rows(
                 cfg.seed,
@@ -797,7 +904,7 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     let mut hit = 0usize;
     for (qi, (_, resp)) in responses.iter().take(sample).enumerate() {
         let exact: std::collections::HashSet<usize> =
-            merge_shard_results(&per_query[qi], &offsets, cfg.k)
+            merge_shard_results(&per_query[qi], offsets, cfg.k)
                 .into_iter()
                 .map(|(i, _)| i)
                 .collect();
@@ -827,8 +934,6 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     if degraded > 0 {
         eprintln!("warning: {degraded} responses were degraded (shard failures)");
     }
-    println!("metrics: {}", svc.metrics.summary());
-    svc.shutdown();
     Ok(())
 }
 

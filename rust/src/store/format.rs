@@ -259,6 +259,11 @@ pub fn parse_header(bytes: &[u8]) -> Result<StoreHeader> {
     let region_align = read_u64(bytes, 40);
     let seed = read_u64(bytes, 48);
     ensure!(
+        bytes[56..FIXED_HEADER_BYTES].iter().all(|&b| b == 0),
+        "store header reserved bytes are not zero (corrupt file, or a future format \
+         this build does not read)"
+    );
+    ensure!(
         d > 0 && shards > 0 && shard_size > 0,
         "store header has empty geometry (d={d}, shards={shards}, shard_size={shard_size})"
     );
@@ -293,6 +298,17 @@ pub fn parse_header(bytes: &[u8]) -> Result<StoreHeader> {
         );
         regions.push(r);
     }
+    // The pad between the region table and the first region is written as
+    // zeros and carries no checksum, so it is validated here — with this,
+    // every byte of the file is load-bearing: any flipped bit fails the
+    // open (header checks here, region bytes via their checksums, geometry
+    // skew via the manifest cross-check).
+    let table_end = FIXED_HEADER_BYTES + shards as usize * REGION_ENTRY_BYTES;
+    ensure!(
+        bytes[table_end..lay.first_region as usize].iter().all(|&b| b == 0),
+        "store header padding (between the region table and shard 0) is not zero: \
+         corrupt file"
+    );
     Ok(StoreHeader {
         version,
         dtype,
@@ -473,6 +489,23 @@ mod tests {
         bad[FIXED_HEADER_BYTES] ^= 0x40;
         let err = parse_header(&bad).unwrap_err().to_string();
         assert!(err.contains("region table"), "{err}");
+
+        // Reserved header bytes must be zero.
+        let mut bad = good.clone();
+        bad[59] = 1;
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("reserved"), "{err}");
+
+        // The zero pad between the region table and shard 0 is validated
+        // too (it carries no checksum, and every file byte must be
+        // load-bearing for corruption to always be loud).
+        let lay = layout(2, 64, 8).unwrap();
+        let table_end = FIXED_HEADER_BYTES + 2 * REGION_ENTRY_BYTES;
+        assert!((table_end as u64) < lay.first_region, "geometry has a pad to corrupt");
+        let mut bad = good.clone();
+        bad[table_end] = 0xff;
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("padding"), "{err}");
     }
 
     #[test]

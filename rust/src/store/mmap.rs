@@ -138,6 +138,7 @@ impl Mmap {
         // Read into a u64 buffer so the byte view is 8-byte aligned and
         // `f32` reinterpretation is always sound.
         let mut buf = vec![0u64; len.div_ceil(8)];
+        crate::util::checked::check_capacity(buf.len() * 8, len);
         let bytes = unsafe {
             std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len)
         };
@@ -179,9 +180,10 @@ impl Mmap {
             Backing::Mapped { ptr, len } => unsafe {
                 std::slice::from_raw_parts(ptr.as_ptr(), *len)
             },
-            Backing::Owned { buf, len } => unsafe {
-                std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len)
-            },
+            Backing::Owned { buf, len } => {
+                crate::util::checked::check_capacity(buf.len() * 8, *len);
+                unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len) }
+            }
         }
     }
 
@@ -199,7 +201,7 @@ impl Mmap {
             "f32 region [{byte_offset}, {end}) exceeds view of {} bytes",
             bytes.len()
         );
-        let ptr = unsafe { bytes.as_ptr().add(byte_offset) };
+        let ptr = unsafe { crate::lane_ptr!(bytes, byte_offset, floats * 4) };
         assert_eq!(
             ptr.align_offset(std::mem::align_of::<f32>()),
             0,

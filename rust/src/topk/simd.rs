@@ -316,8 +316,8 @@ mod avx2 {
             let mut acc = _mm256_setzero_ps();
             let mut i = 0;
             while i < aligned {
-                let qa = _mm256_loadu_ps(q.as_ptr().add(i));
-                let va = _mm256_loadu_ps(v.as_ptr().add(i));
+                let qa = _mm256_loadu_ps(crate::lane_ptr!(q, i, ACC_LANES));
+                let va = _mm256_loadu_ps(crate::lane_ptr!(v, i, ACC_LANES));
                 acc = _mm256_add_ps(acc, _mm256_mul_ps(qa, va));
                 i += ACC_LANES;
             }
@@ -342,8 +342,8 @@ mod avx2 {
         let mut mask: u64 = 0;
         let mut i = 0;
         while i + 8 <= n {
-            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
-            let t = _mm256_loadu_ps(ts.as_ptr().add(i));
+            let x = _mm256_loadu_ps(crate::lane_ptr!(xs, i, 8));
+            let t = _mm256_loadu_ps(crate::lane_ptr!(ts, i, 8));
             let m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(x, t));
             mask |= (m as u32 as u64) << i;
             i += 8;
@@ -382,10 +382,10 @@ mod neon {
             let mut acc_hi = vdupq_n_f32(0.0);
             let mut i = 0;
             while i < aligned {
-                let q_lo = vld1q_f32(q.as_ptr().add(i));
-                let q_hi = vld1q_f32(q.as_ptr().add(i + 4));
-                let v_lo = vld1q_f32(v.as_ptr().add(i));
-                let v_hi = vld1q_f32(v.as_ptr().add(i + 4));
+                let q_lo = vld1q_f32(crate::lane_ptr!(q, i, 4));
+                let q_hi = vld1q_f32(crate::lane_ptr!(q, i + 4, 4));
+                let v_lo = vld1q_f32(crate::lane_ptr!(v, i, 4));
+                let v_hi = vld1q_f32(crate::lane_ptr!(v, i + 4, 4));
                 acc_lo = vaddq_f32(acc_lo, vmulq_f32(q_lo, v_lo));
                 acc_hi = vaddq_f32(acc_hi, vmulq_f32(q_hi, v_hi));
                 i += ACC_LANES;
@@ -415,8 +415,8 @@ mod neon {
         let mut mask: u64 = 0;
         let mut i = 0;
         while i + 4 <= n {
-            let x = vld1q_f32(xs.as_ptr().add(i));
-            let t = vld1q_f32(ts.as_ptr().add(i));
+            let x = vld1q_f32(crate::lane_ptr!(xs, i, 4));
+            let t = vld1q_f32(crate::lane_ptr!(ts, i, 4));
             let m = vaddvq_u32(vandq_u32(vcgeq_f32(x, t), bit));
             mask |= (m as u64) << i;
             i += 4;

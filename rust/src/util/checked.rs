@@ -1,0 +1,104 @@
+//! Debug-checked raw-pointer helpers for the unchecked hot-loop sites.
+//!
+//! The SIMD kernels and the mmap view hand raw pointers to vector loads
+//! (`_mm256_loadu_ps`, `vld1q_f32`) and `from_raw_parts`; those sites are
+//! unchecked by construction — a bounds check per 8-lane load would undo
+//! the point of the kernel. The deal this module encodes: every such site
+//! goes through [`lane_ptr!`](crate::lane_ptr) or the check functions
+//! here, which **assert the bounds invariant in debug/test builds and
+//! compile to nothing in release**. The whole test suite (including the
+//! fuzz harness, which drives attacker-controlled geometry through the
+//! store) therefore exercises the real invariants, while release keeps
+//! the unchecked loads.
+//!
+//! This is the store trust boundary's second line: the first is open-time
+//! validation (`store::format::parse_header` + checksums + manifest
+//! cross-check), which makes every file byte load-bearing; this line
+//! catches any *internal* geometry arithmetic bug before it becomes an
+//! out-of-bounds read in a release binary that a test build would miss.
+
+/// Debug-assert that a `lanes`-wide load at element offset `at` stays
+/// inside a slice of `len` elements. Release builds compile this away.
+#[inline(always)]
+pub fn check_lanes(len: usize, at: usize, lanes: usize) {
+    #[cfg(debug_assertions)]
+    assert!(
+        at.checked_add(lanes).is_some_and(|end| end <= len),
+        "unchecked vector load of {lanes} lanes at offset {at} overruns slice of {len}"
+    );
+    #[cfg(not(debug_assertions))]
+    let _ = (len, at, lanes);
+}
+
+/// Debug-assert that a raw view of `len` elements fits a backing of
+/// `capacity` elements. Release builds compile this away.
+#[inline(always)]
+pub fn check_capacity(capacity: usize, len: usize) {
+    #[cfg(debug_assertions)]
+    assert!(
+        len <= capacity,
+        "unchecked raw view of {len} bytes overruns its {capacity}-byte backing"
+    );
+    #[cfg(not(debug_assertions))]
+    let _ = (capacity, len);
+}
+
+/// `$slice.as_ptr().add($at)` for a `$lanes`-wide unchecked vector load,
+/// bounds-asserted in debug/test builds and plain pointer arithmetic in
+/// release. Expands to an unsafe operation, so it must be used in an
+/// `unsafe` context (the kernels' `#[target_feature]` fns, or an explicit
+/// block) — the macro adds the *check*, the caller still owns the safety
+/// argument.
+#[macro_export]
+macro_rules! lane_ptr {
+    ($slice:expr, $at:expr, $lanes:expr) => {{
+        let (s, at): (&[_], usize) = (&$slice, $at);
+        $crate::util::checked::check_lanes(s.len(), at, $lanes);
+        s.as_ptr().add(at)
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_bounds_loads_pass_and_point_correctly() {
+        let v: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        // Exact fit at the end of the slice is legal.
+        check_lanes(v.len(), 8, 8);
+        check_capacity(64, 64);
+        let p = unsafe { crate::lane_ptr!(v, 4, 8) };
+        assert_eq!(unsafe { *p }, 4.0);
+        // Also through an array (unsized coercion in the macro).
+        let a = [1.5f32; 8];
+        let p = unsafe { crate::lane_ptr!(a, 0, 8) };
+        assert_eq!(unsafe { *p }, 1.5);
+    }
+
+    // The wrapper must *fire* in debug/test builds — this is the proof
+    // that the debug-checked sites are actually checked where the test
+    // suite runs. (Release builds compile the check away, so the panic
+    // contract is debug-only by design.)
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "overruns slice")]
+    fn overrunning_lane_load_panics_in_debug() {
+        let v = [0f32; 8];
+        let _ = unsafe { crate::lane_ptr!(v, 4, 8) };
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "overruns slice")]
+    fn lane_offset_overflow_panics_in_debug() {
+        check_lanes(8, usize::MAX, 8);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "overruns its")]
+    fn overlong_raw_view_panics_in_debug() {
+        check_capacity(64, 65);
+    }
+}

@@ -3,6 +3,7 @@
 //! no serde/clap/criterion/proptest, so these modules stand in for them.
 
 pub mod check;
+pub mod checked;
 pub mod cli;
 pub mod json;
 pub mod rng;

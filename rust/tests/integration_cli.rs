@@ -322,6 +322,238 @@ fn prebuilt_store_serves_across_processes() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The self-contained version of the cross-process test above: build the
+/// store with one `fastk` subprocess in a tempdir, then inspect and serve
+/// it from *different* working directories, so cwd or same-process
+/// assumptions fail here without any CI env plumbing.
+#[test]
+fn prebuilt_store_round_trip_in_tempdir() {
+    let dir = std::env::temp_dir().join(format!("fastk-prebuilt-rt-{}", std::process::id()));
+    let build_cwd = dir.join("build");
+    let serve_cwd = dir.join("serve");
+    std::fs::create_dir_all(&build_cwd).unwrap();
+    std::fs::create_dir_all(&serve_cwd).unwrap();
+    let store_path = dir.join("db.fastk");
+
+    // Same geometry the CI prebuilt step uses.
+    let out = fastk()
+        .current_dir(&build_cwd)
+        .args([
+            "build-index",
+            "--out",
+            store_path.to_str().unwrap(),
+            "--d",
+            "16",
+            "--shards",
+            "2",
+            "--shard-size",
+            "1024",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "build-index failed: {}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let out = fastk()
+        .current_dir(&serve_cwd)
+        .args(["inspect", "--store", store_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "inspect failed: {s}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(s.contains("checksums OK"), "got: {s}");
+
+    let cfg_path = serve_cwd.join("serve.json");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            r#"{{"d": 16, "k": 16, "shards": 2, "shard_size": 1024,
+                "recall_target": 0.9, "backend": "native", "seed": 7,
+                "store": {{"path": {:?}}}}}"#,
+            store_path.to_str().unwrap()
+        ),
+    )
+    .unwrap();
+    let out = fastk()
+        .current_dir(&serve_cwd)
+        .args(["serve", "--config", cfg_path.to_str().unwrap(), "--queries", "16"])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {s}\nstderr: {e}");
+    assert!(s.contains("store="), "got: {s}");
+    assert!(s.contains("recall@16"), "got: {s}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// End-to-end live reload: `fastk serve --listen` as a subprocess, driven
+/// over the TCP JSON-lines protocol — query, stats (epoch 0), a
+/// store-backed swap, a synthetic swap, a failing swap that must roll
+/// back, stats again (epochs advanced, rollback counted), shutdown.
+#[test]
+fn serve_listen_reload_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::process::Stdio;
+
+    let dir = std::env::temp_dir().join(format!("fastk-cli-net-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // A replacement store for the live swap: same d as the serving config,
+    // one shard, *different* shard_size so the swap replans geometry.
+    let swap_store = dir.join("swap.fastk");
+    let out = fastk()
+        .args([
+            "build-index",
+            "--out",
+            swap_store.to_str().unwrap(),
+            "--d",
+            "8",
+            "--shards",
+            "1",
+            "--shard-size",
+            "256",
+            "--seed",
+            "11",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "build-index failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let cfg_path = dir.join("serve.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{"d": 8, "k": 4, "shards": 2, "shard_size": 512,
+            "recall_target": 0.9, "batch_max": 4, "batch_delay_us": 500,
+            "backend": "native", "seed": 7}"#,
+    )
+    .unwrap();
+    let mut child = fastk()
+        .args([
+            "serve",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--queries",
+            "0",
+            "--listen",
+            "127.0.0.1:0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // Scrape the announced ephemeral address from the child's stdout.
+    let mut lines = BufReader::new(child.stdout.take().unwrap()).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("serve exited before announcing its listener")
+            .unwrap();
+        if let Some(a) = line.strip_prefix("fastk: listening on ") {
+            break a.trim().to_string();
+        }
+    };
+
+    let conn = TcpStream::connect(&addr).unwrap();
+    let mut w = conn.try_clone().unwrap();
+    let mut r = BufReader::new(conn);
+    fn rpc(w: &mut TcpStream, r: &mut BufReader<TcpStream>, msg: &str) -> fastk::util::json::Json {
+        use std::io::{BufRead, Write};
+        w.write_all(msg.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        fastk::util::json::Json::parse(&line).unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"))
+    }
+    fn shard_epochs(stats: &fastk::util::json::Json) -> Vec<i64> {
+        stats
+            .get("reload")
+            .unwrap()
+            .get("shard_epochs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.as_i64().unwrap())
+            .collect()
+    }
+
+    // Fresh service: global epoch 0, both shards at epoch 1, and queries work.
+    let stats = rpc(&mut w, &mut r, r#"{"cmd": "stats"}"#);
+    let reload = stats.get("reload").unwrap();
+    assert_eq!(reload.get("epoch").unwrap().as_i64(), Some(0));
+    assert_eq!(shard_epochs(&stats), vec![1, 1]);
+    let rep = rpc(&mut w, &mut r, r#"{"id": 1, "vector": [1,0,1,0,1,0,1,0]}"#);
+    assert!(rep.get("results").is_some(), "query failed: {rep}");
+
+    // Store-backed swap (shard 0, geometry 512 -> 256: forces a replan).
+    let rep = rpc(
+        &mut w,
+        &mut r,
+        &format!(
+            r#"{{"cmd": "reload", "shard": 0, "store": {:?}}}"#,
+            swap_store.to_str().unwrap()
+        ),
+    );
+    assert_eq!(rep.get("reloaded").and_then(|v| v.as_bool()), Some(true), "{rep}");
+    assert_eq!(rep.get("epoch").unwrap().as_i64(), Some(1));
+
+    // Synthetic swap (shard 1, regenerated from a new seed).
+    let rep = rpc(&mut w, &mut r, r#"{"cmd": "reload", "shard": 1, "seed": 99}"#);
+    assert_eq!(rep.get("reloaded").and_then(|v| v.as_bool()), Some(true), "{rep}");
+    assert_eq!(rep.get("epoch").unwrap().as_i64(), Some(2));
+
+    // Failing swap: the 1-shard replacement store cannot source shard 1.
+    // Structured rolled-back reply; the service keeps serving.
+    let rep = rpc(
+        &mut w,
+        &mut r,
+        &format!(
+            r#"{{"cmd": "reload", "shard": 1, "store": {:?}}}"#,
+            swap_store.to_str().unwrap()
+        ),
+    );
+    assert_eq!(rep.get("reloaded").and_then(|v| v.as_bool()), Some(false), "{rep}");
+    assert_eq!(rep.get("rolled_back").and_then(|v| v.as_bool()), Some(true), "{rep}");
+    assert!(
+        rep.get("error").and_then(|v| v.as_str()).unwrap().contains("cannot source"),
+        "{rep}"
+    );
+
+    let rep = rpc(&mut w, &mut r, r#"{"id": 2, "vector": [0,1,0,1,0,1,0,1]}"#);
+    assert!(rep.get("results").is_some(), "query after swaps failed: {rep}");
+    let stats = rpc(&mut w, &mut r, r#"{"cmd": "stats"}"#);
+    let reload = stats.get("reload").unwrap();
+    assert_eq!(reload.get("epoch").unwrap().as_i64(), Some(2));
+    assert_eq!(reload.get("reloads").unwrap().as_i64(), Some(2));
+    assert_eq!(reload.get("rollbacks").unwrap().as_i64(), Some(1));
+    assert_eq!(shard_epochs(&stats), vec![2, 2]);
+
+    // Shutdown over the wire; the process must exit cleanly and print its
+    // shutdown metrics summary.
+    w.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    let rest: Vec<String> = lines.map(|l| l.unwrap()).collect();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "serve exited nonzero; tail: {rest:?}");
+    assert!(
+        rest.iter().any(|l| l.starts_with("metrics: ")),
+        "no shutdown metrics summary in: {rest:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn selftest_passes_when_artifacts_exist() {
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

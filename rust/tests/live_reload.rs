@@ -1,0 +1,301 @@
+//! Swap-under-load stress: hammer a running [`MipsService`] with query
+//! batches from concurrent clients while the main thread repeatedly swaps
+//! shards live — same-geometry swaps, geometry-changing swaps (shrink and
+//! grow), a store-backed swap through the full trust boundary
+//! (`ShardStore::open` with checksums), and two failed swaps that must
+//! roll back.
+//!
+//! The invariants, checked at client counts 1, 2 and 4:
+//!
+//! - **Per-epoch bit-identity.** Every reply carries the epoch that
+//!   answered it; recomputing the answer through the *same* backend +
+//!   merge code against that epoch's database must reproduce the reply
+//!   exactly — indices and values. A torn view (one shard old, one new,
+//!   under the wrong offsets) cannot pass this.
+//! - **Zero lost replies.** Every submitted query gets exactly one `Ok`
+//!   reply; swaps never drop or error in-flight requests.
+//! - **Exact degraded accounting.** No reply is flagged degraded and no
+//!   shard failure is counted — a swap is not a failure.
+//! - **Rollback-not-crash.** A replacement whose factory fails, and a
+//!   corrupt on-disk replacement that fails its checksum at open, each
+//!   count one rollback, keep the epoch unchanged, and leave the old
+//!   database serving bit-identical answers.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastk::coordinator::{
+    merge_shard_results, BackendFactory, BatcherConfig, MipsService, NativeBackend, Query,
+    ReloadSource, ReloadSpec, ServiceConfig, ShardBackend, ShardReload, ShardTopK,
+};
+use fastk::store::{self, OpenOptions, ShardStore, StoreSpec};
+use fastk::util::Rng;
+
+const D: usize = 8;
+const K: usize = 4;
+
+fn chunk(seed: u64, rows: usize) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..rows * D).map(|_| r.next_gaussian() as f32).collect()
+}
+
+fn exact_factory(chunk: Vec<f32>) -> BackendFactory {
+    Box::new(move || Ok(Box::new(NativeBackend::exact(chunk, D, K)) as Box<dyn ShardBackend>))
+}
+
+fn query_vec(id: u64) -> Vec<f32> {
+    let mut r = Rng::new(0x9e37_79b9 ^ id);
+    (0..D).map(|_| r.next_gaussian() as f32).collect()
+}
+
+/// The answer the service must give for `q` against per-shard databases
+/// `dbs` — computed through the same backend and merge code the service
+/// runs, so the comparison below is bit-identity, not approximation.
+fn oracle(dbs: &[Vec<f32>], q: &[f32]) -> Vec<(usize, f32)> {
+    let mut parts = Vec::new();
+    let mut offsets = Vec::new();
+    let mut off = 0usize;
+    for (s, c) in dbs.iter().enumerate() {
+        offsets.push(off);
+        off += c.len() / D;
+        let mut be = NativeBackend::exact(c.clone(), D, K);
+        parts.push(ShardTopK {
+            shard: s,
+            candidates: be.score_topk(q, 1).unwrap().pop().unwrap(),
+        });
+    }
+    merge_shard_results(&parts, &offsets, K)
+}
+
+/// Build a tiny valid on-disk store (1 shard of 64 rows) and return its
+/// path; `corrupt` flips one data byte after the build so checksum
+/// verification at open must fail.
+fn build_replacement_store(dir: &Path, name: &str, seed: u64, corrupt: bool) -> PathBuf {
+    let path = dir.join(name);
+    store::build_store(
+        &path,
+        &StoreSpec {
+            d: D,
+            shards: 1,
+            shard_size: 64,
+            seed,
+        },
+    )
+    .unwrap();
+    if corrupt {
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = bytes.len() - 5; // inside the (padded) data region
+        bytes[at] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+    }
+    path
+}
+
+/// Run the full scenario with `clients` concurrent query threads.
+fn swap_under_load(clients: usize) {
+    let dir = std::env::temp_dir().join(format!(
+        "fastk-live-reload-{}-{clients}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let good_store = build_replacement_store(&dir, "good.fastk", 777, false);
+    let bad_store = build_replacement_store(&dir, "bad.fastk", 778, true);
+
+    // The database every epoch serves: epoch g is the state after g
+    // installs. The swap schedule below must keep this list in sync.
+    let store_rows = store::generate_shard_rows(777, 0, 64, D);
+    let epochs: Arc<Vec<Vec<Vec<f32>>>> = Arc::new(vec![
+        vec![chunk(100, 64), chunk(101, 64)],  // e0: launch state
+        vec![chunk(100, 64), chunk(201, 64)],  // e1: shard 1, same geometry
+        vec![chunk(202, 32), chunk(201, 64)],  // e2: shard 0 shrinks
+        vec![chunk(202, 32), chunk(203, 96)],  // e3: shard 1 grows
+        vec![chunk(204, 64), chunk(203, 96)],  // e4: shard 0 restored
+        vec![chunk(204, 64), store_rows],      // e5: shard 1 from the store
+    ]);
+
+    let svc = Arc::new(
+        MipsService::start(
+            ServiceConfig {
+                d: D,
+                k: K,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_delay: Duration::from_micros(200),
+                },
+                plan: None,
+            },
+            vec![
+                exact_factory(epochs[0][0].clone()),
+                exact_factory(epochs[0][1].clone()),
+            ],
+            vec![0, 64],
+        )
+        .unwrap(),
+    );
+
+    // A launcher-style reloader so the store-backed swap goes through the
+    // full trust boundary: open + validate + checksum-verify, then score
+    // the mapped rows. (The corrupt store must fail inside here.)
+    svc.set_reloader(Box::new(|spec: &ReloadSpec| -> anyhow::Result<ShardReload> {
+        let ReloadSource::Store { path } = &spec.source else {
+            anyhow::bail!("this test's reloader only handles stores");
+        };
+        let st = ShardStore::open_with(
+            Path::new(path),
+            OpenOptions {
+                verify_checksums: true,
+                copy: false,
+            },
+        )?;
+        let rows = st.shard_rows(0).to_vec();
+        Ok(ShardReload {
+            shard: spec.shard,
+            factory: exact_factory(rows),
+            plan: None,
+        })
+    }));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for t in 0..clients {
+        let svc = svc.clone();
+        let stop = stop.clone();
+        let epochs = epochs.clone();
+        joins.push(std::thread::spawn(move || -> u64 {
+            let mut submitted = 0u64;
+            let mut i = 0u64;
+            // Submit in bursts so several queries are in flight when an
+            // install lands between batches.
+            while !stop.load(Ordering::Relaxed) {
+                let mut pending = Vec::new();
+                for _ in 0..6 {
+                    let id = (t as u64) * 1_000_000 + i;
+                    i += 1;
+                    let q = query_vec(id);
+                    pending.push((q.clone(), svc.submit(Query { id, vector: q }).unwrap()));
+                    submitted += 1;
+                }
+                for (q, rx) in pending {
+                    // Zero lost replies: recv delivers, and the reply is Ok.
+                    let resp = rx.recv().expect("service dropped a reply").unwrap();
+                    assert!(!resp.degraded, "a swap must never degrade a reply");
+                    assert_eq!(resp.shards_answered, 2);
+                    let e = resp.epoch as usize;
+                    assert!(e < epochs.len(), "unknown epoch {e}");
+                    assert_eq!(
+                        resp.results,
+                        oracle(&epochs[e], &q),
+                        "client {t}: reply differs from epoch {e}'s oracle"
+                    );
+                }
+            }
+            submitted
+        }));
+    }
+
+    // The swap schedule (main thread; installs serialize through the
+    // router, so returned epochs are deterministic).
+    let swaps: Vec<(usize, BackendFactory)> = vec![
+        (1, exact_factory(epochs[1][1].clone())),
+        (0, exact_factory(epochs[2][0].clone())),
+        (1, exact_factory(epochs[3][1].clone())),
+        (0, exact_factory(epochs[4][0].clone())),
+    ];
+    let mut want_epoch = 0u64;
+    for (shard, factory) in swaps {
+        std::thread::sleep(Duration::from_millis(3));
+        let e = svc
+            .reload_shard(ShardReload {
+                shard,
+                factory,
+                plan: None,
+            })
+            .unwrap();
+        want_epoch += 1;
+        assert_eq!(e, want_epoch);
+    }
+    // Store-backed swap through the reloader (the trust-boundary path).
+    std::thread::sleep(Duration::from_millis(3));
+    let e = svc
+        .reload(ReloadSpec {
+            shard: 1,
+            source: ReloadSource::Store {
+                path: good_store.to_str().unwrap().to_string(),
+            },
+        })
+        .unwrap();
+    want_epoch += 1;
+    assert_eq!(e, want_epoch);
+
+    // Failed swap #1: a factory that errors. Counted rollback, epoch
+    // unchanged, old database keeps serving (clients verify throughout).
+    std::thread::sleep(Duration::from_millis(3));
+    let err = svc
+        .reload_shard(ShardReload {
+            shard: 0,
+            factory: Box::new(|| anyhow::bail!("injected corrupt replacement")),
+            plan: None,
+        })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("rolled back"), "{err:#}");
+
+    // Failed swap #2: a corrupt on-disk store fails checksum verification
+    // at open, inside the reloader. Same rollback contract.
+    std::thread::sleep(Duration::from_millis(3));
+    let err = svc
+        .reload(ReloadSpec {
+            shard: 1,
+            source: ReloadSource::Store {
+                path: bad_store.to_str().unwrap().to_string(),
+            },
+        })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checksum"), "{msg}");
+    assert!(msg.contains("rolled back"), "{msg}");
+
+    // Let the clients observe the final epoch for a few more bursts.
+    std::thread::sleep(Duration::from_millis(5));
+    stop.store(true, Ordering::Relaxed);
+    let mut total = 0u64;
+    for j in joins {
+        total += j.join().expect("client thread panicked (lost reply or mismatch)");
+    }
+
+    // Every submitted query was answered (client threads assert recv
+    // succeeds), and the request count balances exactly.
+    assert_eq!(svc.metrics.requests(), total, "lost replies");
+    assert_eq!(svc.metrics.failed_requests(), 0);
+    assert_eq!(svc.metrics.degraded_requests(), 0);
+    assert_eq!(svc.metrics.shard_failures(), 0);
+    // Swap accounting: 5 installs, 2 rollbacks, epoch parked at 5.
+    assert_eq!(svc.metrics.reloads(), 5);
+    assert_eq!(svc.metrics.rollbacks(), 2);
+    assert_eq!(svc.metrics.epoch(), 5);
+    assert_eq!(svc.metrics.shard_epochs(), vec![3, 4]);
+
+    // And the final state answers exactly like epoch 5's database.
+    let q = query_vec(0xdead);
+    let resp = svc.query(0xdead, q.clone()).unwrap();
+    assert_eq!(resp.epoch, 5);
+    assert_eq!(resp.results, oracle(&epochs[5], &q));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn swap_under_load_single_client() {
+    swap_under_load(1);
+}
+
+#[test]
+fn swap_under_load_two_clients() {
+    swap_under_load(2);
+}
+
+#[test]
+fn swap_under_load_four_clients() {
+    swap_under_load(4);
+}
