@@ -194,7 +194,10 @@ fn main() -> anyhow::Result<()> {
     // zero-copy, and serve from the mapping through a second coordinator.
     let store_path =
         std::env::temp_dir().join(format!("fastk-example-{}.fastk", std::process::id()));
-    build_store(&store_path, &StoreSpec { d, shards, shard_size, seed })?;
+    build_store(
+        &store_path,
+        &StoreSpec { d, shards, shard_size, seed, dtype: fastk::store::Dtype::F32 },
+    )?;
     let store = Arc::new(ShardStore::open(&store_path)?);
     println!(
         "\nstore round trip: built + opened {} (zero-copy mapped: {})",

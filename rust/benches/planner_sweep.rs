@@ -21,6 +21,7 @@ use fastk::bench_harness::{banner, bench, maybe_write_json, BenchResult, Table};
 use fastk::params::{select_parameters, ParamCache, RecallEval};
 use fastk::plan::{plan_serve, plan_serve_cached, PlanRequest};
 use fastk::recall::expected_recall;
+use fastk::store::Dtype;
 use fastk::util::stats::fmt_ns;
 
 struct Grid {
@@ -70,6 +71,8 @@ fn main() {
                     recall_target: target,
                     allowed_local_k: allowed.clone(),
                     eval: RecallEval::Exact,
+                    dtype: Dtype::F32,
+                    d: 64,
                 };
                 let (plan, _) = plan_serve(&req);
                 let Some(plan) = plan else {
@@ -142,6 +145,8 @@ fn main() {
         recall_target: mc_target,
         allowed_local_k: allowed.clone(),
         eval: RecallEval::MonteCarlo { tol: 0.005, seed: 7 },
+        dtype: Dtype::F32,
+        d: 64,
     };
     let (mc_plan, mc_stats) = plan_serve(&mc_req);
     match mc_plan {
@@ -171,6 +176,42 @@ fn main() {
         }
     }
 
+    // Quantization-aware planning on one representative point: int8 rows
+    // switch the sweep to the noise-perturbed Theorem-1 evaluator, and the
+    // plan prices its candidate budget against the noiseless f32 sweep.
+    let q_req = PlanRequest {
+        shards: mc_shards,
+        shard_size: mc_shard_size,
+        k: mc_k,
+        recall_target: mc_target,
+        allowed_local_k: allowed.clone(),
+        eval: RecallEval::Exact,
+        dtype: Dtype::I8,
+        d: 128,
+    };
+    let (q_plan, _) = plan_serve(&q_req);
+    match q_plan {
+        Some(p) => {
+            banner("quantized planning (int8 rows, d=128)");
+            println!("plan: {}", p.describe());
+            let r = bench(
+                &format!(
+                    "plan_int8_r{}_s{mc_shards}_n{mc_shard_size}_k{mc_k}",
+                    milli(mc_target)
+                ),
+                || {
+                    std::hint::black_box(plan_serve(&q_req));
+                },
+            );
+            println!("quantized planning time: {}", fmt_ns(r.summary.min));
+            all_results.push(r);
+        }
+        None => {
+            eprintln!("FAIL: int8 planner found no plan where the f32 one exists");
+            failed = true;
+        }
+    }
+
     // Memoization: the second plan of an identical deployment must be a
     // cache hit (identical shards plan once).
     let mut cache = ParamCache::new();
@@ -181,6 +222,8 @@ fn main() {
         recall_target: grid.targets[0],
         allowed_local_k: allowed,
         eval: RecallEval::Exact,
+        dtype: Dtype::F32,
+        d: 64,
     };
     plan_serve_cached(&mut cache, &cached_req);
     plan_serve_cached(&mut cache, &cached_req);

@@ -10,16 +10,25 @@
 //! Reports effective GB/s of input consumption — the CPU counterpart of
 //! the paper's "stage 1 stays memory-bound until K'~6" claim.
 //!
+//! A third sweep covers the quantized Stage-1 scoring tile: the same dot
+//! product over f32, f16 and int8 rows (dtype x kernel), reporting bytes/s
+//! and rows/s per dtype and checking each quantized dtype's top-K overlap
+//! against the exact f32 oracle before timing.
+//!
 //! Before timing, every kernel's Stage-1 state is checked bit-identical to
 //! the scalar reference on the swept shape. Emits the shared bench JSON
 //! schema when `FASTK_BENCH_JSON=<dir>` is set (entries
-//! `stage1_<kernel>_kp<K'>` and `buckets_b<B>`); `FASTK_BENCH_SMOKE=1`
-//! runs tiny shapes for CI schema checks. Full (non-smoke) runs exit
-//! nonzero if a SIMD kernel is slower than scalar on the same shape
-//! (beyond a small measurement-noise allowance) — the perf-trajectory gate
-//! for the dispatch layer.
+//! `stage1_<kernel>_kp<K'>`, `buckets_b<B>` and `score_<dtype>_<kernel>`);
+//! `FASTK_BENCH_SMOKE=1` runs tiny shapes for CI schema checks. Full
+//! (non-smoke) runs exit nonzero if a SIMD kernel is slower than scalar on
+//! the same shape (beyond a small measurement-noise allowance) — the
+//! perf-trajectory gate for the dispatch layer — or if int8 scoring fails
+//! to reach 2x f32 on the dispatched kernel (the quantization speedup
+//! gate: int8 streams a quarter of the bytes, so half the byte ratio is a
+//! conservative floor for a memory-bound sweep).
 
 use fastk::bench_harness::{banner, bench, gate_not_slower, maybe_write_json, BenchResult, Table};
+use fastk::store::quant::{quantize_query_i8, quantize_row_f16, quantize_row_i8};
 use fastk::topk::simd::SimdKernel;
 use fastk::topk::{TwoStageParams, TwoStageTopK};
 use fastk::util::stats::fmt_ns;
@@ -30,6 +39,13 @@ use fastk::util::Rng;
 /// autovectorized scalar sweep are expected to be close — the slack only
 /// absorbs run-to-run noise in the min, not a real regression.
 const GATE_SLACK: f64 = 1.05;
+
+/// Full-run gate for the quantized scoring sweep: int8 scoring must take
+/// at most half the f32 time on the dispatched kernel (`1/slack = 2x`).
+/// int8 streams 4x fewer bytes than f32, so on the memory-bound scoring
+/// tile 2x is a conservative floor that still leaves headroom for the
+/// integer-widening compute overhead.
+const INT8_GATE_SLACK: f64 = 0.5;
 
 fn main() {
     let smoke = std::env::var("FASTK_BENCH_SMOKE")
@@ -118,6 +134,93 @@ fn main() {
     t2.print();
     println!("(expect a knee once the [K'][B] state spills the innermost cache)");
 
+    // Quantized scoring sweep: the Stage-1 dot-product tile over stored
+    // dtypes. The slab is sized past the LLC on full runs so the sweep is
+    // memory-bound and the dtype byte ratio (f16 1/2, int8 1/4 + a per-row
+    // scale) is the speedup ceiling. Guards before timing: every kernel's
+    // scores must be bit-identical to the scalar reference for its dtype
+    // (f16 widening is exact; the int8 i32 accumulation is associative),
+    // and each quantized dtype's top-K overlap with the exact f32 oracle
+    // must clear the quantization-noise recall floor.
+    let (score_rows, score_d) = if smoke { (2_048usize, 128usize) } else { (131_072, 128) };
+    let score_k = 64usize;
+    banner(&format!(
+        "quantized scoring: dtype x kernel (rows={score_rows}, d={score_d}, recall@{score_k} vs f32 oracle)"
+    ));
+    let mut rows_f32 = vec![0f32; score_rows * score_d];
+    rng.fill_f32(&mut rows_f32);
+    let mut q = vec![0f32; score_d];
+    rng.fill_f32(&mut q);
+    let mut codes_f16 = vec![0u16; score_rows * score_d];
+    quantize_row_f16(&rows_f32, &mut codes_f16).expect("finite rows");
+    let mut codes_i8 = vec![0i8; score_rows * score_d];
+    let mut row_scales = vec![0f32; score_rows];
+    for r in 0..score_rows {
+        let span = r * score_d..(r + 1) * score_d;
+        row_scales[r] = quantize_row_i8(&rows_f32[span.clone()], &mut codes_i8[span])
+            .expect("finite rows");
+    }
+    let mut qcodes = vec![0i8; score_d];
+    let qscale = quantize_query_i8(&q, &mut qcodes);
+
+    let scalar = SimdKernel::scalar();
+    let mut oracle = vec![0f32; score_rows];
+    scalar.score_tile(&rows_f32, score_d, &q, &mut oracle);
+    let oracle_top = top_indices(&oracle, score_k);
+
+    // (dtype label, bytes streamed per row, recall floor vs the f32 oracle)
+    let dtypes: &[(&str, usize, f64)] = &[
+        ("f32", score_d * 4, 1.0),
+        ("f16", score_d * 2, 0.99),
+        ("int8", score_d + 4, 0.90),
+    ];
+    let mut t3 = Table::new(&["DTYPE", "KERNEL", "time", "GB/s in", "Mrow/s", "RECALL", "vs f32"]);
+    let mut reference = vec![0f32; score_rows];
+    let mut scores = vec![0f32; score_rows];
+    let mut f32_s = vec![0f64; kernels.len()];
+    for &(dtype, row_bytes, recall_floor) in dtypes {
+        let score_with = |kernel: &SimdKernel, out: &mut [f32]| match dtype {
+            "f32" => kernel.score_tile(&rows_f32, score_d, &q, out),
+            "f16" => kernel.score_tile_f16(&codes_f16, score_d, &q, out),
+            _ => kernel.score_tile_i8(&codes_i8, score_d, &qcodes, &row_scales, qscale, out),
+        };
+        score_with(&scalar, &mut reference);
+        let recall = overlap(&oracle_top, &top_indices(&reference, score_k));
+        assert!(
+            recall >= recall_floor,
+            "{dtype} scoring recall {recall:.4} fell below the {recall_floor} floor vs the f32 oracle"
+        );
+        for (ki, kernel) in kernels.iter().enumerate() {
+            score_with(kernel, &mut scores);
+            assert_eq!(
+                scores,
+                reference,
+                "kernel {} diverges from the scalar {dtype} scoring reference",
+                kernel.name()
+            );
+            let r = bench(&format!("score_{dtype}_{}", kernel.name()), || {
+                score_with(kernel, &mut scores);
+                std::hint::black_box(&scores);
+            });
+            let secs = r.min_s();
+            if dtype == "f32" {
+                f32_s[ki] = secs;
+            }
+            t3.row(vec![
+                dtype.to_string(),
+                kernel.name().to_string(),
+                fmt_ns(r.summary.min),
+                format!("{:.2}", (score_rows * row_bytes) as f64 / secs / 1e9),
+                format!("{:.1}", score_rows as f64 / secs / 1e6),
+                format!("{recall:.4}"),
+                format!("{:.2}x", f32_s[ki] / secs),
+            ]);
+            all_results.push(r);
+        }
+    }
+    t3.print();
+    println!("(GB/s counts bytes actually streamed per dtype: 4/2/1 B per element + int8's per-row scale)");
+
     // Perf gate (shared `gate_not_slower` helper): each SIMD kernel must
     // not lose to scalar at the gated shape. Missing lookup names fail
     // even in smoke, so renames can't silently retire the gate; the speed
@@ -135,8 +238,36 @@ fn main() {
         );
     }
 
+    // Quantization speedup gate: int8 scoring must be at least 2x f32 on
+    // the kernel serving actually dispatches to. Smoke shapes fit in cache
+    // and say nothing about the memory-bound ratio, so the comparison is
+    // enforced on full runs only (name lookups still fail in smoke).
+    failed |= gate_not_slower(
+        &all_results,
+        &format!("score_f32_{}", auto.name()),
+        &format!("score_int8_{}", auto.name()),
+        INT8_GATE_SLACK,
+        !smoke,
+        &format!("int8 vs f32 scoring on {}", auto.name()),
+    );
+
     maybe_write_json("stage1_kernel", &all_results);
     if failed {
         std::process::exit(1);
     }
+}
+
+/// Indices of the `k` highest scores — the exact oracle for the recall
+/// guard (ties broken by `total_cmp`, deterministically).
+fn top_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_unstable_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+    idx.truncate(k);
+    idx
+}
+
+/// Fraction of `oracle` recovered by `got` (recall@|oracle|).
+fn overlap(oracle: &[usize], got: &[usize]) -> f64 {
+    let set: std::collections::HashSet<usize> = oracle.iter().copied().collect();
+    got.iter().filter(|i| set.contains(i)).count() as f64 / oracle.len() as f64
 }

@@ -16,13 +16,18 @@
 //!    guarded bit-identical before timing. Steady-state mmap serving
 //!    should cost the same as in-memory (same bytes, same kernels); full
 //!    runs fail if it is slower beyond noise.
+//! 4. `build_<dtype>_*` / `steady_<dtype>_*` — the same build and
+//!    steady-state serve over quantized stores (f16, int8): the writer
+//!    quantizes while streaming, and the fused backend scores the mapped
+//!    codes dequantize-free, so the dtype axis shows the halved/quartered
+//!    byte stream (and disk footprint) directly in bytes/s and rows/s.
 //!
 //! Emits the shared bench JSON schema when `FASTK_BENCH_JSON=<dir>` is
 //! set. `FASTK_BENCH_SMOKE=1` runs tiny shapes for the CI schema check.
 
 use fastk::bench_harness::{banner, bench, gate_not_slower, maybe_write_json, report, BenchResult};
 use fastk::coordinator::{EngineOptions, ParallelNativeBackend, ShardBackend};
-use fastk::store::{self, ShardStore, StoreSpec};
+use fastk::store::{self, Dtype, ShardStore, StoreSpec};
 use fastk::topk::{SimdKernel, TwoStageParams};
 use fastk::util::Rng;
 
@@ -47,6 +52,7 @@ fn main() {
         shards,
         shard_size,
         seed: 42,
+        dtype: Dtype::F32,
     };
     let dir = std::env::temp_dir().join(format!("fastk-bench-store-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
@@ -112,6 +118,51 @@ fn main() {
     });
     report(&r);
     results.push(r);
+
+    // 4. Dtype axis: build + steady-state serve over quantized stores. The
+    // writer quantizes while streaming; the fused backend scores the
+    // mapped codes dequantize-free (int8 survivors rescored in f32), so
+    // bytes/s and rows/s show the halved (f16) / quartered (int8) stream
+    // against the f32 numbers above.
+    banner("dtype axis: quantized stores (writer quantizes, backend scores codes)");
+    for dtype in [Dtype::F16, Dtype::I8] {
+        let short = if dtype == Dtype::F16 { "f16" } else { "int8" };
+        let qspec = StoreSpec {
+            d,
+            shards,
+            shard_size,
+            seed: 42,
+            dtype,
+        };
+        let qpath = dir.join(format!("bench-{short}.fastk"));
+        let row_bytes = d * dtype.elem_bytes() as usize
+            + if dtype.has_scales() { 4 } else { 0 };
+        let qdata_mib = (shards * shard_size * row_bytes) as f64 / (1024.0 * 1024.0);
+        let r = bench(&format!("build_{short}_s{shards}_n{shard_size}_d{d}"), || {
+            store::build_store(&qpath, &qspec).unwrap();
+        });
+        println!(
+            "{short}: {qdata_mib:.1} MiB on disk ({:.0}% of f32), build {:.1} MiB/s (f32 rows in)",
+            qdata_mib / data_mib * 100.0,
+            data_mib / r.min_s().max(1e-12)
+        );
+        report(&r);
+        results.push(r);
+
+        let qst = ShardStore::open(&qpath).unwrap();
+        assert_eq!(qst.dtype(), dtype);
+        let mut qbe = ParallelNativeBackend::from_data(qst.shard_data(0), d, k, params, opts);
+        let r = bench(&format!("steady_{short}_d{d}_t{threads}_b{batch}"), || {
+            std::hint::black_box(qbe.score_topk(&queries, batch).unwrap());
+        });
+        println!(
+            "{short} steady: {:.1} Mrow/s, {:.2} GB/s streamed",
+            (batch * shard_size) as f64 / r.min_s() / 1e6,
+            (batch * shard_size * row_bytes) as f64 / r.min_s() / 1e9
+        );
+        report(&r);
+        results.push(r);
+    }
 
     // Acceptance: zero-copy serving must not cost throughput at steady
     // state (enforced on full runs; the name lookups are checked even in

@@ -10,13 +10,14 @@
 //!    (`rust/fuzz/corpus/`, one per corruption mode in the store's
 //!    taxonomy) produces a *distinct, clean* `Err` whose message names
 //!    the corruption — never a panic, never a silent `Ok`.
-//! 2. **Must-Err under data mutation.** Every byte of a v1 store file is
+//! 2. **Must-Err under data mutation.** Every byte of a store file (v1,
+//!    and v2 including its quantized dtypes and scale regions) is
 //!    load-bearing (header fields, reserved bytes, region table, table
 //!    pad, region checksums — plus the manifest cross-check for the
-//!    geometry/seed fields a flipped bit could coherently re-describe).
-//!    So *any* deterministic mutation of a valid data file — byte XORs,
-//!    truncation, extension — must fail the full open. ≥200 cases per
-//!    run (256 by default; scale with `FASTK_FUZZ_CASES`).
+//!    geometry/seed/dtype fields a flipped bit could coherently
+//!    re-describe). So *any* deterministic mutation of a valid data file
+//!    — byte XORs, truncation, extension — must fail the full open.
+//!    ≥200 cases per run (256 by default; scale with `FASTK_FUZZ_CASES`).
 //! 3. **No-panic under manifest mutation**, and `Ok` implies the parsed
 //!    geometry is identical to the pristine baseline (a mangled manifest
 //!    may still be accepted iff the mangling didn't touch anything the
@@ -32,7 +33,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use fastk::store::{format, OpenOptions, ShardStore};
+use fastk::store::{format, Dtype, OpenOptions, ShardStore};
 use fastk::util::Rng;
 
 fn corpus_dir() -> PathBuf {
@@ -127,6 +128,11 @@ const KNOWN_BAD: &[(&str, &str)] = &[
     ("manifest-skew.fastk", "disagrees"),
     ("manifest-garbage.fastk", "not valid JSON"),
     ("manifest-missing.fastk", "manifest missing"),
+    // v2 quantized-store corruption modes.
+    ("v2-dtype-relabel.fastk", "length"),
+    ("v2-header-v1-length.fastk", "length"),
+    ("v2-scale-flip.fastk", "scale region checksum mismatch"),
+    ("v2-manifest-dtype-skew.fastk", "dtype"),
 ];
 
 #[test]
@@ -149,6 +155,25 @@ fn valid_seeds_open_through_the_full_boundary() {
     )
     .expect("2-shard corpus seed must open");
     assert_eq!((st2.shards(), st2.seed()), (2, 43));
+    // v2 quantized seeds: the f16 store and the int8 store (the latter
+    // exercises the interleaved per-shard scale regions).
+    let f16 = open_bytes(
+        &dir,
+        &corpus_bytes("valid-v2-f16.fastk"),
+        Some(&corpus_bytes("valid-v2-f16.fastk.manifest.json")),
+    )
+    .expect("v2 f16 corpus seed must open");
+    assert_eq!((f16.dtype(), f16.shard_size(), f16.seed()), (Dtype::F16, 16, 44));
+    let int8 = open_bytes(
+        &dir,
+        &corpus_bytes("valid-v2-int8.fastk"),
+        Some(&corpus_bytes("valid-v2-int8.fastk.manifest.json")),
+    )
+    .expect("v2 int8 corpus seed must open");
+    assert_eq!(
+        (int8.dtype(), int8.shards(), int8.seed()),
+        (Dtype::I8, 2, 45)
+    );
     fs::remove_dir_all(&dir).ok();
 }
 
@@ -190,6 +215,16 @@ fn mutated_data_files_always_fail_cleanly() {
         (
             corpus_bytes("valid2.fastk"),
             corpus_bytes("valid2.fastk.manifest.json"),
+        ),
+        // v2 quantized seeds: the contract extends to the new dtype word,
+        // the doubled int8 region table, and the scale-region bytes.
+        (
+            corpus_bytes("valid-v2-f16.fastk"),
+            corpus_bytes("valid-v2-f16.fastk.manifest.json"),
+        ),
+        (
+            corpus_bytes("valid-v2-int8.fastk"),
+            corpus_bytes("valid-v2-int8.fastk.manifest.json"),
         ),
     ];
     for case in 0..fuzz_cases() {

@@ -1,18 +1,20 @@
 #!/usr/bin/env python3
 """Regenerate the checked-in fuzz seed corpus (rust/fuzz/corpus/).
 
-The corpus is a set of tiny v1 shard stores: two valid ones and one file
-per known corruption mode from the store's corruption taxonomy (see
-rust/src/store/format.rs and the reader's corruption test suite). The
-fuzz target (rust/fuzz/fuzz_store.rs) replays every known-bad file and
-asserts a *distinct, clean* `Err`, then mutates the valid seeds.
+The corpus is a set of tiny shard stores — valid v1 and v2 seeds
+(including the quantized v2 dtypes: f16le, and int8 with its per-shard
+scale regions) and one file per known corruption mode from the store's
+corruption taxonomy (see rust/src/store/format.rs and the reader's
+corruption test suite). The fuzz target (rust/fuzz/fuzz_store.rs)
+replays every known-bad file and asserts a *distinct, clean* `Err`,
+then mutates the valid seeds.
 
 Everything here is deterministic — byte-for-byte identical output on
 every run — so the corpus can be regenerated and diffed:
 
     python3 rust/fuzz/gen_corpus.py
 
-The v1 layout and the FNV-1a-64 checksum are reimplemented here on
+The v1/v2 layouts and the FNV-1a-64 checksum are reimplemented here on
 purpose: the format must outlive any single implementation, and a second
 implementation is itself a format check (if this script and the Rust
 writer disagree, `valid.fastk` stops opening and the fuzz suite fails).
@@ -24,7 +26,9 @@ import struct
 
 MAGIC = b"FASTKSTO"
 VERSION = 1
-DTYPE_F32LE = 1
+VERSION2 = 2
+# dtype name -> (header code, bytes per element, regions per shard)
+DTYPES = {"f32le": (1, 4, 1), "f16le": (2, 2, 1), "int8": (3, 1, 2)}
 REGION_ALIGN = 64
 FIXED_HEADER = 64
 REGION_ENTRY = 24
@@ -44,33 +48,61 @@ def round_up(n: int, m: int) -> int:
     return (n + m - 1) // m * m
 
 
-def rows_bytes(seed: int, shard: int, shard_size: int, d: int) -> bytes:
-    # Arbitrary but deterministic little-endian f32 rows. Content is not
-    # validated beyond the checksum, so any pattern works; small integers
-    # keep the floats exact and the files diffable.
+def rows_bytes(seed: int, shard: int, shard_size: int, d: int, dtype: str) -> bytes:
+    # Arbitrary but deterministic rows. Content is not validated beyond
+    # the checksum, so any pattern works; small integers keep the values
+    # exact in every encoding (f32, binary16, int8) and the files
+    # diffable.
     vals = [
         float((seed * 31 + shard * 7 + i) % 17) - 8.0
         for i in range(shard_size * d)
     ]
+    if dtype == "f32le":
+        return struct.pack(f"<{len(vals)}f", *vals)
+    if dtype == "f16le":
+        return struct.pack(f"<{len(vals)}e", *vals)
+    return struct.pack(f"<{len(vals)}b", *[int(v) for v in vals])
+
+
+def scales_bytes(shard: int, shard_size: int) -> bytes:
+    # Deterministic positive per-row int8 scales, exact in f32.
+    vals = [1.0 + 0.5 * ((shard + r) % 3) for r in range(shard_size)]
     return struct.pack(f"<{len(vals)}f", *vals)
 
 
-def build_store(d: int, shards: int, shard_size: int, seed: int) -> bytes:
-    table_end = FIXED_HEADER + shards * REGION_ENTRY
+def build_store(
+    d: int,
+    shards: int,
+    shard_size: int,
+    seed: int,
+    version: int = VERSION,
+    dtype: str = "f32le",
+) -> bytes:
+    code, elem_bytes, rps = DTYPES[dtype]
+    table_end = FIXED_HEADER + shards * rps * REGION_ENTRY
     first_region = round_up(table_end, REGION_ALIGN)
-    region_len = round_up(shard_size * d * 4, REGION_ALIGN)
+    data_len = round_up(shard_size * d * elem_bytes, REGION_ALIGN)
+    scale_len = round_up(shard_size * 4, REGION_ALIGN) if rps == 2 else 0
 
     regions = []
     blobs = []
+    off = first_region
     for s in range(shards):
-        data = rows_bytes(seed, s, shard_size, d)
-        padded = data + b"\x00" * (region_len - len(data))
-        regions.append((first_region + s * region_len, region_len, fnv1a64(padded)))
+        data = rows_bytes(seed, s, shard_size, d, dtype)
+        padded = data + b"\x00" * (data_len - len(data))
+        regions.append((off, data_len, fnv1a64(padded)))
         blobs.append(padded)
+        off += data_len
+        if rps == 2:
+            sc = scales_bytes(s, shard_size)
+            padded = sc + b"\x00" * (scale_len - len(sc))
+            regions.append((off, scale_len, fnv1a64(padded)))
+            blobs.append(padded)
+            off += scale_len
 
     head = bytearray()
     head += MAGIC
-    head += struct.pack("<II", VERSION, DTYPE_F32LE)
+    head += struct.pack("<II", version, code)
     head += struct.pack("<QQQQQ", d, shards, shard_size, REGION_ALIGN, seed)
     head += b"\x00" * (FIXED_HEADER - len(head))  # reserved
     for off, ln, ck in regions:
@@ -79,11 +111,18 @@ def build_store(d: int, shards: int, shard_size: int, seed: int) -> bytes:
     return bytes(head) + b"".join(blobs)
 
 
-def manifest(d: int, shards: int, shard_size: int, seed: int) -> str:
+def manifest(
+    d: int,
+    shards: int,
+    shard_size: int,
+    seed: int,
+    version: int = VERSION,
+    dtype: str = "f32le",
+) -> str:
     return json.dumps(
         {
-            "format_version": VERSION,
-            "dtype": "f32le",
+            "format_version": version,
+            "dtype": dtype,
             "d": d,
             "shards": shards,
             "shard_size": shard_size,
@@ -158,6 +197,49 @@ def main():
     write("manifest-garbage.fastk", good, "{not json")
     # Valid bytes, no manifest at all.
     write("manifest-missing.fastk", good, None)
+
+    # --- v2 quantized seeds and corruption modes ---------------------
+    # Valid v2 seeds: a binary16 store (shard_size 16 so the f16 and f32
+    # padded layouts differ — see the relabel mode below) and a 2-shard
+    # int8 store (interleaved data + scale regions).
+    f16 = build_store(d, 1, 16, 44, version=VERSION2, dtype="f16le")
+    write("valid-v2-f16.fastk", f16, manifest(d, 1, 16, 44, VERSION2, "f16le"))
+    i8 = build_store(d, 2, n, 45, version=VERSION2, dtype="int8")
+    i8_man = manifest(d, 2, n, 45, VERSION2, "int8")
+    write("valid-v2-int8.fastk", i8, i8_man)
+
+    # Dtype relabel: the f16 bytes with the header dtype word rewritten
+    # to f32le (manifest forged to match). The layout the header now
+    # implies needs twice the data bytes, so the exact-length check
+    # catches it.
+    relabel = bytearray(f16)
+    relabel[12:16] = struct.pack("<I", DTYPES["f32le"][0])
+    write(
+        "v2-dtype-relabel.fastk",
+        bytes(relabel),
+        manifest(d, 1, 16, 44, VERSION2, "f32le"),
+    )
+    # A v2 int8 header on a v1-length body: the 2-shard v1 file re-tagged
+    # v2+int8 claims a bigger region table and scale regions the file
+    # does not have (distinct length skew from the relabel above).
+    retag = bytearray(build_store(d, 2, n, 43))
+    retag[8:12] = struct.pack("<I", VERSION2)
+    retag[12:16] = struct.pack("<I", DTYPES["int8"][0])
+    write("v2-header-v1-length.fastk", bytes(retag), manifest(d, 2, n, 43))
+    # A bit flip inside shard 0's scale region: parses fine, fails that
+    # region's own checksum (named as a *scale* region mismatch).
+    scale_flip = bytearray(i8)
+    first = round_up(FIXED_HEADER + 2 * 2 * REGION_ENTRY, REGION_ALIGN)
+    data_len = round_up(n * d * 1, REGION_ALIGN)
+    scale_flip[first + data_len] ^= 0x10
+    write("v2-scale-flip.fastk", bytes(scale_flip), i8_man)
+    # Valid int8 bytes, manifest claiming f16le: dtype skew only the
+    # manifest cross-check can catch.
+    write(
+        "v2-manifest-dtype-skew.fastk",
+        i8,
+        manifest(d, 2, n, 45, VERSION2, "f16le"),
+    )
 
     names = sorted(os.listdir(OUT))
     print(f"wrote {len(names)} files to {OUT}:")

@@ -23,6 +23,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::BatcherConfig;
 use crate::params::{ParamCache, RecallEval};
 use crate::plan::{plan_fixed, plan_serve_cached, PlanRequest, PlanSource, ServePlan};
+use crate::store::Dtype;
 use crate::topk::KernelKind;
 use crate::util::json::Json;
 
@@ -107,6 +108,14 @@ pub struct LauncherConfig {
     /// Every kernel returns bit-identical results
     /// ([`topk::simd`](crate::topk::simd)). Ignored by the `pjrt` backend.
     pub kernel: KernelKind,
+    /// Stored row dtype (`"dtype": "f32le" | "f16le" | "int8"`). Quantized
+    /// dtypes score Stage 1 on the compressed rows (int8 survivors are
+    /// re-scored in exact f32) and switch the planner to the
+    /// quantization-noise evaluator. Synthetic serving quantizes the
+    /// generated rows; `store.build_if_missing` builds the store at this
+    /// dtype. Quantized rows need the sequential or fused pipeline — the
+    /// unfused `native-parallel` and `pjrt` backends are f32-only.
+    pub dtype: Dtype,
     /// On-disk shard store (`"store": {"path", "build_if_missing",
     /// "verify_checksums"}`). `None` (or JSON `null`): serve the synthetic
     /// in-memory database, generated per shard from `seed ⊕ shard`.
@@ -141,6 +150,7 @@ impl Default for LauncherConfig {
             fused: true,
             tile_rows: 0,
             kernel: KernelKind::Auto,
+            dtype: Dtype::F32,
             store: None,
             listen: None,
             artifact: None,
@@ -210,6 +220,12 @@ impl LauncherConfig {
                 format!(
                     "unknown kernel {s:?} (want \"auto\", \"scalar\", \"avx2\" or \"neon\")"
                 )
+            })?;
+        }
+        if let Some(v) = j.get("dtype") {
+            let s = v.as_str().context("dtype must be a string")?;
+            c.dtype = Dtype::parse(s).with_context(|| {
+                format!("unknown dtype {s:?} (want \"f32le\", \"f16le\" or \"int8\")")
             })?;
         }
         if let Some(v) = j.get("store") {
@@ -320,6 +336,19 @@ impl LauncherConfig {
                 "pjrt backend requires `artifact`"
             );
         }
+        if self.dtype != Dtype::F32 {
+            anyhow::ensure!(
+                self.backend != BackendKind::Pjrt,
+                "the pjrt backend serves f32 rows only; dtype {} needs a native backend",
+                self.dtype
+            );
+            anyhow::ensure!(
+                self.backend != BackendKind::NativeParallel || self.fused,
+                "the unfused native-parallel pipeline serves f32 rows only; \
+                 enable `fused` (or use the `native` backend) for {} rows",
+                self.dtype
+            );
+        }
         Ok(())
     }
 
@@ -338,6 +367,8 @@ impl LauncherConfig {
                 self.k as u64,
                 self.buckets as u64,
                 self.local_k as u64,
+                self.dtype,
+                self.d as u64,
                 PlanSource::Manual,
             );
         }
@@ -354,6 +385,8 @@ impl LauncherConfig {
                     seed: self.seed,
                 },
             },
+            dtype: self.dtype,
+            d: self.d as u64,
         };
         plan_serve_cached(cache, &req).ok_or_else(|| {
             anyhow::anyhow!(
@@ -411,6 +444,7 @@ impl LauncherConfig {
             ("fused", Json::Bool(self.fused)),
             ("tile_rows", Json::num(self.tile_rows as f64)),
             ("kernel", Json::str(self.kernel.as_str())),
+            ("dtype", Json::str(self.dtype.as_str())),
             (
                 "store",
                 match &self.store {
@@ -519,6 +553,40 @@ mod tests {
     }
 
     #[test]
+    fn parses_dtype_knob() {
+        assert_eq!(LauncherConfig::from_json("{}").unwrap().dtype, Dtype::F32);
+        for (s, want) in [
+            ("f32", Dtype::F32),
+            ("f32le", Dtype::F32),
+            ("f16", Dtype::F16),
+            ("f16le", Dtype::F16),
+            ("int8", Dtype::I8),
+            ("i8", Dtype::I8),
+        ] {
+            let c =
+                LauncherConfig::from_json(&format!(r#"{{"dtype": "{s}"}}"#)).unwrap();
+            assert_eq!(c.dtype, want, "dtype {s}");
+        }
+        assert!(LauncherConfig::from_json(r#"{"dtype": "f64"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"dtype": 8}"#).is_err());
+        // Quantized rows need a pipeline that can rescore: the pjrt backend
+        // and the unfused parallel pipeline are f32-only, and that is a
+        // config error, not a serve-time surprise.
+        assert!(LauncherConfig::from_json(
+            r#"{"dtype": "int8", "backend": "pjrt", "artifact": "mips_fused_x"}"#
+        )
+        .is_err());
+        assert!(LauncherConfig::from_json(
+            r#"{"dtype": "f16", "backend": "native-parallel", "fused": false}"#
+        )
+        .is_err());
+        // Fused parallel and sequential native are fine.
+        LauncherConfig::from_json(r#"{"dtype": "f16", "backend": "native-parallel"}"#)
+            .unwrap();
+        LauncherConfig::from_json(r#"{"dtype": "int8", "backend": "native"}"#).unwrap();
+    }
+
+    #[test]
     fn parses_planner_knobs() {
         let c = LauncherConfig::from_json(
             r#"{"recall_target": 0.97, "allowed_local_k": [1, 2, 4],
@@ -578,6 +646,44 @@ mod tests {
         let plan = manual.resolve_plan(&mut cache).unwrap();
         assert_eq!((plan.buckets, plan.local_k), (1024, 1));
         assert_eq!(plan.source, crate::plan::PlanSource::Manual);
+    }
+
+    #[test]
+    fn resolve_plan_quantized_switches_evaluator() {
+        let mut cache = crate::params::ParamCache::new();
+        let f32cfg = LauncherConfig::from_json(
+            r#"{"d": 128, "k": 128, "shards": 4, "shard_size": 16384,
+                "recall_target": 0.95}"#,
+        )
+        .unwrap();
+        let base = f32cfg.resolve_plan(&mut cache).unwrap();
+        assert_eq!(base.dtype, Dtype::F32);
+        assert_eq!(base.quant_sigma, 0.0);
+
+        let i8cfg = LauncherConfig::from_json(
+            r#"{"d": 128, "k": 128, "shards": 4, "shard_size": 16384,
+                "recall_target": 0.95, "dtype": "int8"}"#,
+        )
+        .unwrap();
+        let quant = i8cfg.resolve_plan(&mut cache).unwrap();
+        assert_eq!(quant.source, crate::plan::PlanSource::Quantized);
+        assert_eq!(quant.dtype, Dtype::I8);
+        assert!(quant.quant_sigma > 0.0);
+        assert!(quant.predicted_recall >= 0.95);
+        // The plan never gets *cheaper* than the noiseless one, and the
+        // inflation it reports is priced against that f32 baseline.
+        assert!(quant.num_elements() >= base.num_elements());
+        assert_eq!(quant.baseline_elements, base.num_elements());
+        // Manual overrides keep the configured dtype too.
+        let manual = LauncherConfig::from_json(
+            r#"{"d": 128, "k": 128, "shards": 4, "shard_size": 16384,
+                "buckets": 1024, "local_k": 2, "dtype": "f16"}"#,
+        )
+        .unwrap();
+        let plan = manual.resolve_plan(&mut cache).unwrap();
+        assert_eq!(plan.dtype, Dtype::F16);
+        assert_eq!(plan.source, crate::plan::PlanSource::Manual);
+        assert!(plan.quant_sigma > 0.0);
     }
 
     #[test]
@@ -665,5 +771,12 @@ mod tests {
         assert_eq!(c2.backend, c.backend);
         assert_eq!(c2.batcher.max_delay, c.batcher.max_delay);
         assert_eq!(c2.kernel, c.kernel);
+        assert_eq!(c2.dtype, c.dtype);
+        // Quantized dtypes survive the round trip (as_str emits the
+        // canonical wire names, which parse accepts).
+        let mut q = LauncherConfig::default();
+        q.dtype = Dtype::I8;
+        let q2 = LauncherConfig::from_json(&q.to_json().to_string()).unwrap();
+        assert_eq!(q2.dtype, Dtype::I8);
     }
 }

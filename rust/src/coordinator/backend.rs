@@ -20,13 +20,23 @@
 //! - [`PjrtBackend`]: the AOT `mips_fused` artifact through PJRT — the
 //!   production configuration where the scoring matmul and stage 1 are one
 //!   fused kernel on the accelerator.
+//!
+//! Quantized shards: the native backends also score `f16le` / `int8`
+//! [`ShardData`] payloads in their stored encoding (the [`from_data`]
+//! constructors), with int8 Stage-1 survivors re-scored in exact f32
+//! before Stage 2. The sequential and fused-parallel paths stay
+//! bit-identical to each other for every encoding. The unfused pipeline
+//! and the PJRT artifact path serve f32 only — quantized configurations
+//! must be rejected at launch, not silently dequantized.
+//!
+//! [`from_data`]: NativeBackend::from_data
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::runtime::{CompiledArtifact, HostTensor};
-use crate::store::RowSource;
+use crate::store::{quant, Dtype, RowSource, ShardData};
 use crate::topk::{
     exact, Candidate, FusedParallelMips, ParallelTwoStageTopK, SimdKernel, TwoStageParams,
     TwoStageTopK,
@@ -62,9 +72,10 @@ pub type BackendFactory = Box<dyn FnOnce() -> anyhow::Result<Box<dyn ShardBacken
 /// Pure-Rust backend: explicit matmul then the two-stage operator (or exact
 /// top-k when `params` is None — the oracle configuration).
 pub struct NativeBackend {
-    /// Row-major database: `db[j * d .. (j+1) * d]` is vector j — owned
-    /// heap rows or a mapped store region, scored identically either way.
-    database: RowSource,
+    /// Row-major database in its stored element encoding:
+    /// `rows[j * d .. (j+1) * d]` is vector j — owned heap rows or a
+    /// mapped store region, scored identically either way.
+    database: ShardData,
     d: usize,
     n: usize,
     k: usize,
@@ -74,6 +85,10 @@ pub struct NativeBackend {
     /// [`with_kernel`](Self::with_kernel) is the serving constructor.
     kernel: SimdKernel,
     scores_scratch: Vec<f32>,
+    /// `[d]` int8 query codes (int8 databases only), per-query.
+    qcodes: Vec<i8>,
+    /// `[d]` dequantized-row scratch for the int8 exact rescore.
+    rescore_row: Vec<f32>,
 }
 
 impl NativeBackend {
@@ -101,7 +116,7 @@ impl NativeBackend {
         Self::from_source(RowSource::from_vec(database), d, k, params, kernel)
     }
 
-    /// [`with_kernel`](Self::with_kernel) over any [`RowSource`] — the
+    /// [`with_kernel`](Self::with_kernel) over any f32 [`RowSource`] — the
     /// constructor the store-backed serving path uses: a mapped source is
     /// scored in place (zero-copy) and, holding the same bytes, returns
     /// results bit-identical to the owned path.
@@ -112,12 +127,38 @@ impl NativeBackend {
         params: Option<TwoStageParams>,
         kernel: SimdKernel,
     ) -> Self {
-        assert!(d > 0 && !database.is_empty());
-        assert_eq!(database.len() % d, 0);
-        let n = database.len() / d;
+        Self::from_data(ShardData::F32(database), d, k, params, kernel)
+    }
+
+    /// [`from_source`](Self::from_source) over any [`ShardData`] encoding —
+    /// the quantized-store serving constructor. Stage 1 scores the stored
+    /// codes in place (f16 widened on the fly, int8 in the integer
+    /// domain); int8 Stage-1 survivors are re-scored in exact f32 before
+    /// Stage 2. Quantized payloads require two-stage `params`: the exact
+    /// (brute-force) configuration has no candidate set to re-score, so an
+    /// exact oracle over a quantized store must dequantize first
+    /// ([`ShardData::dequantize_all`]).
+    pub fn from_data(
+        database: ShardData,
+        d: usize,
+        k: usize,
+        params: Option<TwoStageParams>,
+        kernel: SimdKernel,
+    ) -> Self {
+        assert!(d > 0 && database.elems() > 0);
+        assert_eq!(database.elems() % d, 0);
+        let n = database.elems() / d;
         if let Some(p) = &params {
             assert_eq!(p.n, n, "two-stage N must equal shard size");
             assert_eq!(p.k, k);
+        }
+        assert!(
+            params.is_some() || database.dtype() == Dtype::F32,
+            "exact backend requires f32 rows; dequantize the {} store first",
+            database.dtype()
+        );
+        if let ShardData::I8 { scales, .. } = &database {
+            assert_eq!(scales.len(), n, "int8 database must carry one scale per row");
         }
         NativeBackend {
             database,
@@ -127,6 +168,8 @@ impl NativeBackend {
             operator: params.map(|p| TwoStageTopK::with_kernel(p, kernel)),
             kernel,
             scores_scratch: vec![0.0; n],
+            qcodes: Vec::new(),
+            rescore_row: vec![0.0; d],
         }
     }
 
@@ -135,11 +178,38 @@ impl NativeBackend {
         Self::new(database, d, k, None)
     }
 
+    /// The database's stored element encoding.
+    pub fn dtype(&self) -> Dtype {
+        self.database.dtype()
+    }
+
+    /// Score the full shard for one query in the stored encoding. Every
+    /// dispatch kernel preserves its encoding's scalar reduction order, so
+    /// scores here are bit-identical to every other native path. Under
+    /// int8 the query is quantized symmetrically first and the scores are
+    /// approximate (the rescore in `score_topk` restores exactness for the
+    /// survivors).
     fn score_into_scratch(&mut self, q: &[f32]) {
-        // The whole database is one tile of the shared micro-kernel (every
-        // dispatch kernel preserves its reduction order), so scores here
-        // are bit-identical to every other native path.
-        self.kernel.score_tile(&self.database, self.d, q, &mut self.scores_scratch);
+        match &self.database {
+            ShardData::F32(rows) => {
+                self.kernel.score_tile(rows.rows(), self.d, q, &mut self.scores_scratch)
+            }
+            ShardData::F16(codes) => {
+                self.kernel.score_tile_f16(codes.codes(), self.d, q, &mut self.scores_scratch)
+            }
+            ShardData::I8 { codes, scales } => {
+                self.qcodes.resize(self.d, 0);
+                let qscale = quant::quantize_query_i8(q, &mut self.qcodes);
+                self.kernel.score_tile_i8(
+                    codes.codes(),
+                    self.d,
+                    &self.qcodes,
+                    scales.rows(),
+                    qscale,
+                    &mut self.scores_scratch,
+                );
+            }
+        }
     }
 }
 
@@ -147,10 +217,26 @@ impl ShardBackend for NativeBackend {
     fn score_topk(&mut self, queries: &[f32], nq: usize) -> Result<Vec<Vec<Candidate>>> {
         anyhow::ensure!(queries.len() == nq * self.d, "bad query buffer");
         let mut out = Vec::with_capacity(nq);
+        let d = self.d;
         for qi in 0..nq {
-            let q = &queries[qi * self.d..(qi + 1) * self.d];
+            let q = &queries[qi * d..(qi + 1) * d];
             self.score_into_scratch(q);
             let top = match &mut self.operator {
+                Some(op) if self.database.needs_rescore() => {
+                    // Exact f32 rescore of the Stage-1 survivors before
+                    // Stage-2 selection: the same dequantize + fixed-order
+                    // dot the fused workers run, so both paths stay
+                    // bit-identical.
+                    let database = &self.database;
+                    let kernel = self.kernel;
+                    let rescore_row = &mut self.rescore_row;
+                    op.run_rescored(&self.scores_scratch, |c| {
+                        database.dequantize_row(d, c.index as usize, rescore_row);
+                        let mut exact = 0.0f32;
+                        kernel.score_tile(rescore_row, d, q, std::slice::from_mut(&mut exact));
+                        c.value = exact;
+                    })
+                }
                 Some(op) => op.run(&self.scores_scratch),
                 None => exact::topk_quickselect(&self.scores_scratch, self.k),
             };
@@ -235,10 +321,11 @@ enum ParallelEngine {
 /// stages only. Both return results bit-identical to [`NativeBackend`]
 /// with the same params.
 pub struct ParallelNativeBackend {
-    /// Shared row-major database: `db[j * d .. (j+1) * d]` is vector j.
-    /// A [`RowSource`] clone is shared with the fused engine's workers, so
-    /// owned and mapped databases run the same code.
-    database: RowSource,
+    /// Shared row-major database in its stored encoding: vector j is
+    /// `rows[j * d .. (j+1) * d]`. A [`ShardData`] clone is shared with
+    /// the fused engine's workers, so owned and mapped databases run the
+    /// same code.
+    database: ShardData,
     d: usize,
     n: usize,
     k: usize,
@@ -282,10 +369,11 @@ impl ParallelNativeBackend {
         Self::from_source(RowSource::from_vec(database), d, k, params, opts)
     }
 
-    /// [`with_options`](Self::with_options) over any [`RowSource`] — the
-    /// store-backed serving constructor: every pool worker scores its lane
-    /// range straight out of the mapping with the same SIMD kernels, so a
-    /// mapped database is bit-identical to an owned one by construction.
+    /// [`with_options`](Self::with_options) over any f32 [`RowSource`] —
+    /// the store-backed serving constructor: every pool worker scores its
+    /// lane range straight out of the mapping with the same SIMD kernels,
+    /// so a mapped database is bit-identical to an owned one by
+    /// construction.
     pub fn from_source(
         database: RowSource,
         d: usize,
@@ -293,11 +381,33 @@ impl ParallelNativeBackend {
         params: TwoStageParams,
         opts: EngineOptions,
     ) -> Self {
-        assert!(d > 0 && !database.is_empty());
-        assert_eq!(database.len() % d, 0);
-        let n = database.len() / d;
+        Self::from_data(ShardData::F32(database), d, k, params, opts)
+    }
+
+    /// [`from_source`](Self::from_source) over any [`ShardData`] encoding.
+    /// Quantized payloads run only on the fused pipeline (each worker
+    /// scores its lane range's stored codes and, under int8, re-scores its
+    /// survivors in exact f32); the unfused pipeline scores on the shard
+    /// thread through the f32 kernel and must be given f32 rows — the
+    /// serving layer rejects `"fused": false` with a quantized store at
+    /// launch.
+    pub fn from_data(
+        database: ShardData,
+        d: usize,
+        k: usize,
+        params: TwoStageParams,
+        opts: EngineOptions,
+    ) -> Self {
+        assert!(d > 0 && database.elems() > 0);
+        assert_eq!(database.elems() % d, 0);
+        let n = database.elems() / d;
         assert_eq!(params.n, n, "two-stage N must equal shard size");
         assert_eq!(params.k, k);
+        assert!(
+            opts.fused || database.dtype() == Dtype::F32,
+            "the unfused pipeline serves f32 rows only; a {} store needs the fused engine",
+            database.dtype()
+        );
         let engine = if opts.fused {
             ParallelEngine::Fused(FusedParallelMips::with_kernel(
                 database.clone(),
@@ -340,6 +450,11 @@ impl ParallelNativeBackend {
     pub fn kernel(&self) -> SimdKernel {
         self.kernel
     }
+
+    /// The database's stored element encoding.
+    pub fn dtype(&self) -> Dtype {
+        self.database.dtype()
+    }
 }
 
 impl ShardBackend for ParallelNativeBackend {
@@ -351,11 +466,15 @@ impl ShardBackend for ParallelNativeBackend {
         match &mut self.engine {
             ParallelEngine::Fused(engine) => Ok(engine.run_batch(queries, nq)),
             ParallelEngine::Unfused { operator, scores } => {
+                // Construction guarantees f32 on the unfused path.
+                let ShardData::F32(db_rows) = &self.database else {
+                    unreachable!("unfused pipeline constructed over quantized rows");
+                };
                 scores.resize(nq * n, 0.0);
                 for qi in 0..nq {
                     let q = &queries[qi * d..(qi + 1) * d];
                     let row = &mut scores[qi * n..(qi + 1) * n];
-                    kernel.score_tile(&self.database, d, q, row);
+                    kernel.score_tile(db_rows.rows(), d, q, row);
                 }
                 let rows: Vec<&[f32]> = scores.chunks(n).take(nq).collect();
                 Ok(operator.run_batch(&rows))
@@ -769,6 +888,120 @@ mod tests {
                 kernel.name()
             );
         });
+    }
+
+    #[test]
+    fn quantized_backends_match_across_paths_bit_identically() {
+        // For every stored encoding, the sequential backend and the fused
+        // parallel backend over the same ShardData return identical
+        // results (same candidates, same bits) at every thread count —
+        // the backend-level view of the quantized tentpole property.
+        let d = 13;
+        let n = 1000;
+        let k = 24;
+        let mut rng = Rng::new(81);
+        let db = make_db(&mut rng, n, d);
+        let params = TwoStageParams::new(n, k, 50, 2);
+        let nq = 3;
+        let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+        for dtype in Dtype::ALL {
+            let data =
+                ShardData::quantize_f32(RowSource::from_vec(db.clone()), d, dtype).unwrap();
+            let mut sequential =
+                NativeBackend::from_data(data.clone(), d, k, Some(params), SimdKernel::scalar());
+            assert_eq!(sequential.dtype(), dtype);
+            let want = sequential.score_topk(&queries, nq).unwrap();
+            for threads in [1usize, 3] {
+                let mut fused = ParallelNativeBackend::from_data(
+                    data.clone(),
+                    d,
+                    k,
+                    params,
+                    EngineOptions {
+                        threads,
+                        ..EngineOptions::default()
+                    },
+                );
+                assert_eq!(fused.dtype(), dtype);
+                assert_eq!(
+                    fused.score_topk(&queries, nq).unwrap(),
+                    want,
+                    "dtype {dtype} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_backend_rescores_exactly_and_recall_holds() {
+        use crate::topk::kernel;
+        let d = 16;
+        let n = 4096;
+        let k = 32;
+        let mut rng = Rng::new(83);
+        let db = make_db(&mut rng, n, d);
+        let params = TwoStageParams::new(n, k, 256, 2);
+        let data = ShardData::quantize_f32(RowSource::from_vec(db), d, Dtype::I8).unwrap();
+        let exact_rows = data.dequantize_all(d);
+        let mut be = NativeBackend::from_data(data, d, k, Some(params), SimdKernel::scalar());
+        // The exact oracle over the store's own (dequantized) rows: the
+        // ground truth a quantized store is measured against.
+        let mut oracle = NativeBackend::exact(exact_rows.clone(), d, k);
+        let nq = 8;
+        let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+        let got = be.score_topk(&queries, nq).unwrap();
+        let want = oracle.score_topk(&queries, nq).unwrap();
+        let mut total = 0.0;
+        for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+            // Every returned value is the exact f32 dot of the dequantized
+            // stored row — Stage-1 quantization only routes candidates.
+            let q = &queries[qi * d..(qi + 1) * d];
+            for c in g {
+                let row = &exact_rows[c.index as usize * d..(c.index as usize + 1) * d];
+                let mut exact = 0.0f32;
+                kernel::score_tile(row, d, q, std::slice::from_mut(&mut exact));
+                assert_eq!(c.value.to_bits(), exact.to_bits(), "query {qi} row {}", c.index);
+            }
+            total += crate::topk::recall_of(w, g);
+        }
+        // (4096, 32, 256, 2) expects ~0.9995 before quantization noise;
+        // int8 routing noise costs at most a few points.
+        let recall = total / nq as f64;
+        assert!(recall > 0.9, "recall={recall}");
+    }
+
+    #[test]
+    fn unfused_pipeline_rejects_quantized_rows() {
+        let d = 4;
+        let mut rng = Rng::new(87);
+        let db = make_db(&mut rng, 64, d);
+        let data = ShardData::quantize_f32(RowSource::from_vec(db), d, Dtype::I8).unwrap();
+        let params = TwoStageParams::new(64, 4, 8, 1);
+        let r = std::panic::catch_unwind(|| {
+            ParallelNativeBackend::from_data(
+                data,
+                d,
+                4,
+                params,
+                EngineOptions {
+                    fused: false,
+                    ..EngineOptions::default()
+                },
+            )
+        });
+        assert!(r.is_err(), "unfused + quantized must be rejected at construction");
+    }
+
+    #[test]
+    fn exact_backend_rejects_quantized_rows() {
+        let d = 4;
+        let mut rng = Rng::new(89);
+        let db = make_db(&mut rng, 64, d);
+        let data = ShardData::quantize_f32(RowSource::from_vec(db), d, Dtype::F16).unwrap();
+        let r = std::panic::catch_unwind(|| {
+            NativeBackend::from_data(data, d, 4, None, SimdKernel::scalar())
+        });
+        assert!(r.is_err(), "exact + quantized must be rejected at construction");
     }
 
     #[test]

@@ -267,6 +267,14 @@ impl ServiceMetrics {
                 p.predicted_recall,
                 p.source.as_str()
             ));
+            if p.quant_sigma > 0.0 {
+                s.push_str(&format!(
+                    " quant(dtype={} sigma={:.4} inflation={:.2}x)",
+                    p.dtype,
+                    p.quant_sigma,
+                    p.inflation()
+                ));
+            }
         }
         let (reloads, rollbacks): (u64, u64) =
             (m.reloads.iter().sum(), m.rollbacks.iter().sum());
@@ -289,6 +297,7 @@ impl ServiceMetrics {
 mod tests {
     use super::*;
     use crate::plan::{plan_fixed, PlanSource};
+    use crate::store::Dtype;
 
     #[test]
     fn records_and_summarizes() {
@@ -323,13 +332,27 @@ mod tests {
         assert_eq!(m.degraded_requests(), 1);
         assert_eq!(m.failed_requests(), 1);
         assert!(m.plan().is_none());
-        let plan = plan_fixed(2, 1024, 16, 128, 2, PlanSource::Manual).unwrap();
+        let plan =
+            plan_fixed(2, 1024, 16, 128, 2, Dtype::F32, 16, PlanSource::Manual).unwrap();
         m.set_plan(plan);
         assert_eq!(m.plan().unwrap(), plan);
         let s = m.summary();
         assert!(s.contains("shard_failures=2"), "{s}");
         assert!(s.contains("degraded=1"), "{s}");
         assert!(s.contains("K'=2 B=128"), "{s}");
+        // f32 plans don't clutter the summary with quantization state.
+        assert!(!s.contains("quant("), "{s}");
+    }
+
+    #[test]
+    fn quantized_plan_surfaces_dtype_and_inflation() {
+        let m = ServiceMetrics::new();
+        let plan =
+            plan_fixed(2, 1024, 16, 128, 2, Dtype::I8, 16, PlanSource::Manual).unwrap();
+        m.set_plan(plan);
+        let s = m.summary();
+        assert!(s.contains("quant(dtype=int8 sigma="), "{s}");
+        assert!(s.contains("inflation=1.00x"), "{s}");
     }
 
     #[test]
@@ -340,6 +363,7 @@ mod tests {
         m.set_store(StoreInfo {
             path: "db.fastk".to_string(),
             version: 1,
+            dtype: Dtype::F32,
             shards: 4,
             shard_size: 1024,
             d: 16,
@@ -351,7 +375,7 @@ mod tests {
         assert_eq!(info.path, "db.fastk");
         assert!(info.mapped);
         let s = m.summary();
-        assert!(s.contains("store=db.fastk@v1 4x1024x16 (mmap)"), "{s}");
+        assert!(s.contains("store=db.fastk@v1 4x1024x16 f32le (mmap)"), "{s}");
         assert!(s.contains("open="), "{s}");
     }
 

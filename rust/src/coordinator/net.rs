@@ -14,8 +14,9 @@
 //!     "reload": {"epoch": 0, "reloads": 0, "rollbacks": 0,
 //!                "shard_epochs": [1, 1, ...]},     (live-swap state)
 //!     "kernel": "avx2",                     (resolved SIMD dispatch, if native)
-//!     "store": {"path": ..., "mapped": true, "open_us": ...},  (if store-backed)
-//!     "plan": {"buckets": 512, "local_k": 4, ...}}   (plan if one was made)
+//!     "store": {"path": ..., "dtype": "f16le", "mapped": true, ...},  (if store-backed)
+//!     "plan": {"buckets": 512, "local_k": 4, "dtype": "int8",
+//!              "quant_sigma": 0.0107, "inflation": 1.0, ...}}  (plan if one was made)
 //! -> {"cmd": "reload", "shard": 0, "store": "new.fastk"}
 //!      (or {"cmd": "reload", "shard": 0, "seed": 7, "shard_size": 2048})
 //! <- {"reloaded": true, "shard": 0, "epoch": 1}
@@ -216,6 +217,7 @@ fn handle_line(
                         Json::obj(vec![
                             ("path", Json::str(&st.path)),
                             ("version", Json::num(st.version as f64)),
+                            ("dtype", Json::str(st.dtype.as_str())),
                             ("shards", Json::num(st.shards as f64)),
                             ("shard_size", Json::num(st.shard_size as f64)),
                             ("d", Json::num(st.d as f64)),
@@ -241,6 +243,9 @@ fn handle_line(
                             ("predicted_recall", Json::num(p.predicted_recall)),
                             ("per_shard_recall", Json::num(p.per_shard_recall)),
                             ("source", Json::str(p.source.as_str())),
+                            ("dtype", Json::str(p.dtype.as_str())),
+                            ("quant_sigma", Json::num(p.quant_sigma)),
+                            ("inflation", Json::num(p.inflation())),
                         ]),
                     ));
                 }
@@ -438,8 +443,17 @@ mod tests {
         // protocol-level errors and the stats reply carries both the plan
         // and the failure counters.
         use crate::coordinator::backend::FailingBackend;
-        let plan = crate::plan::plan_fixed(1, 1024, 4, 128, 1, crate::plan::PlanSource::Manual)
-            .unwrap();
+        let plan = crate::plan::plan_fixed(
+            1,
+            1024,
+            4,
+            128,
+            1,
+            crate::store::Dtype::F16,
+            8,
+            crate::plan::PlanSource::Manual,
+        )
+        .unwrap();
         let factories: Vec<BackendFactory> = vec![Box::new(|| {
             Ok(Box::new(FailingBackend { d: 8, n: 1024, k: 4 }) as Box<dyn ShardBackend>)
         })];
@@ -465,7 +479,8 @@ mod tests {
         svc.metrics.set_kernel(crate::topk::SimdKernel::auto().name());
         svc.metrics.set_store(crate::store::StoreInfo {
             path: "db.fastk".to_string(),
-            version: 1,
+            version: 2,
+            dtype: crate::store::Dtype::F16,
             shards: 1,
             shard_size: 1024,
             d: 8,
@@ -501,7 +516,8 @@ mod tests {
         );
         let st = stats.get("store").unwrap();
         assert_eq!(st.get("path").unwrap().as_str(), Some("db.fastk"));
-        assert_eq!(st.get("version").unwrap().as_i64(), Some(1));
+        assert_eq!(st.get("version").unwrap().as_i64(), Some(2));
+        assert_eq!(st.get("dtype").unwrap().as_str(), Some("f16le"));
         assert_eq!(st.get("mapped").unwrap().as_bool(), Some(true));
         assert_eq!(st.get("built").unwrap().as_bool(), Some(true));
         assert_eq!(st.get("open_us").unwrap().as_i64(), Some(99));
@@ -510,6 +526,10 @@ mod tests {
         assert_eq!(p.get("local_k").unwrap().as_i64(), Some(1));
         assert_eq!(p.get("source").unwrap().as_str(), Some("manual"));
         assert!(p.get("predicted_recall").unwrap().as_f64().unwrap() > 0.0);
+        // Quantized plan state rides along for operators.
+        assert_eq!(p.get("dtype").unwrap().as_str(), Some("f16le"));
+        assert!(p.get("quant_sigma").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(p.get("inflation").unwrap().as_f64(), Some(1.0));
         server.shutdown();
     }
 

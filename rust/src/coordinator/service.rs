@@ -796,6 +796,8 @@ mod tests {
             recall_target: target,
             allowed_local_k: vec![1, 2, 3, 4],
             eval: RecallEval::Exact,
+            dtype: crate::store::Dtype::F32,
+            d: d as u64,
         });
         let plan = plan.unwrap();
         assert!(plan.predicted_recall >= target);
@@ -848,6 +850,101 @@ mod tests {
         // 24·128 ≈ 3k Bernoulli samples: σ ≈ 0.002 at the predicted
         // recall, so a 0.03 band is > 10σ — this fails only if the
         // prediction (or the serving path) is actually wrong.
+        assert!(
+            measured >= target - 0.03,
+            "measured {measured:.4} misses target {target}"
+        );
+        assert!(
+            (measured - plan.predicted_recall).abs() <= 0.03,
+            "measured {measured:.4} vs predicted {:.4}",
+            plan.predicted_recall
+        );
+        svc.shutdown();
+    }
+
+    /// End-to-end quantized planner check: serve int8-quantized shards
+    /// under a plan the noise-perturbed evaluator chose, and verify the
+    /// *measured* merged recall against the quantized store's own exact
+    /// candidates (brute force over the dequantized rows — the ground
+    /// truth a quantized store can be compared against). Same 10σ band as
+    /// the f32 planned-service test: the plan's (B, K′) — inflated or not
+    /// — must hold the target through real int8 Stage-1 scoring plus the
+    /// exact f32 rescore.
+    #[test]
+    fn quantized_planned_service_meets_recall_target() {
+        use crate::plan::{plan_serve, PlanRequest};
+        use crate::params::RecallEval;
+        use crate::store::{Dtype, ShardData};
+        use crate::topk::SimdKernel;
+
+        let (shards, per, d, k) = (4usize, 1024usize, 16usize, 128usize);
+        let target = 0.97;
+        let (plan, _) = plan_serve(&PlanRequest {
+            shards: shards as u64,
+            shard_size: per as u64,
+            k: k as u64,
+            recall_target: target,
+            allowed_local_k: vec![1, 2, 3, 4],
+            eval: RecallEval::Exact,
+            dtype: Dtype::I8,
+            d: d as u64,
+        });
+        let plan = plan.unwrap();
+        assert_eq!(plan.dtype, Dtype::I8);
+        assert!(plan.quant_sigma > 0.0);
+        assert!(plan.predicted_recall >= target);
+        assert!(plan.inflation() >= 1.0);
+
+        let mut rng = Rng::new(61);
+        let n_total = shards * per;
+        let db: Vec<f32> = (0..n_total * d).map(|_| rng.next_gaussian() as f32).collect();
+        let params = TwoStageParams::new(per, k, plan.buckets as usize, plan.local_k as usize);
+        let mut backends: Vec<BackendFactory> = Vec::new();
+        let mut offsets = Vec::new();
+        let mut dequantized = Vec::with_capacity(n_total * d);
+        for s in 0..shards {
+            let chunk = db[s * per * d..(s + 1) * per * d].to_vec();
+            let data = ShardData::quantize_f32(chunk.into(), d, Dtype::I8).unwrap();
+            dequantized.extend_from_slice(&data.dequantize_all(d));
+            backends.push(Box::new(move || {
+                Ok(Box::new(NativeBackend::from_data(
+                    data,
+                    d,
+                    k,
+                    Some(params),
+                    SimdKernel::auto(),
+                )) as Box<dyn crate::coordinator::ShardBackend>)
+            }));
+            offsets.push(s * per);
+        }
+        let svc = MipsService::start(
+            ServiceConfig {
+                d,
+                k,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(1),
+                },
+                plan: Some(plan),
+            },
+            backends,
+            offsets,
+        )
+        .unwrap();
+        assert_eq!(svc.metrics.plan().unwrap(), plan);
+
+        let trials = 24usize;
+        let mut hits = 0usize;
+        for id in 0..trials {
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let resp = svc.query(id as u64, q.clone()).unwrap();
+            assert!(!resp.degraded);
+            let got: std::collections::HashSet<usize> =
+                resp.results.iter().map(|&(i, _)| i).collect();
+            let want = exact_oracle(&dequantized, d, &q, k);
+            hits += want.iter().filter(|i| got.contains(i)).count();
+        }
+        let measured = hits as f64 / (trials * k) as f64;
         assert!(
             measured >= target - 0.03,
             "measured {measured:.4} misses target {target}"
@@ -1096,7 +1193,7 @@ mod tests {
         let per2 = 32usize;
         let c0b: Vec<f32> = (0..per2 * d).map(|_| rng.next_gaussian() as f32).collect();
         let plan = crate::plan::plan_fixed(2, per2 as u64, k as u64, 16, 1,
-            crate::plan::PlanSource::Manual)
+            crate::store::Dtype::F32, d as u64, crate::plan::PlanSource::Manual)
         .unwrap();
         let epoch = svc
             .reload_shard(ShardReload {

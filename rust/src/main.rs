@@ -33,7 +33,7 @@ use fastk::perfmodel::{self, predict_table2_row, vpu_probe};
 use fastk::plan::{plan_fixed, PlanSource, ServePlan};
 use fastk::recall::{self, RecallConfig};
 use fastk::runtime::{Executor, HostTensor, Manifest};
-use fastk::store::{self, OpenOptions, RowSource, ShardStore, StoreSpec};
+use fastk::store::{self, Dtype, OpenOptions, RowSource, ShardData, ShardStore, StoreSpec};
 use fastk::topk::{self, SimdKernel, TwoStageParams};
 use fastk::util::cli::Args;
 use fastk::util::stats::fmt_ns;
@@ -90,7 +90,7 @@ fn usage() {
          \x20 probe       [--elements 1048576] [--max-steps 128]\n\
          \x20 serve       [--config serve.json] [--queries 256] [--listen 127.0.0.1:0]\n\
          \x20 build-index --out store.fastk [--config serve.json] [--d 64] [--shards 4]\n\
-         \x20             [--shard-size 16384] [--seed 42]\n\
+         \x20             [--shard-size 16384] [--seed 42] [--dtype f32le|f16le|int8]\n\
          \x20 inspect     --store store.fastk [--no-verify]\n\
          \x20 init-config [--out serve.json] [--store store.fastk]\n\
          \x20 selftest    [--artifacts artifacts]\n"
@@ -347,16 +347,23 @@ fn cmd_init_config(args: &Args) -> anyhow::Result<()> {
 /// per-flag overrides; the output path from `--out` or the config's
 /// `store.path`.
 fn cmd_build_index(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["config", "out", "d", "shards", "shard-size", "seed"]);
+    args.reject_unknown(&["config", "out", "d", "shards", "shard-size", "seed", "dtype"]);
     let base = match args.get("config") {
         Some(p) => LauncherConfig::from_file(Path::new(p))?,
         None => LauncherConfig::default(),
+    };
+    let dtype = match args.get("dtype") {
+        Some(s) => Dtype::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("--dtype: unknown dtype {s:?} (want \"f32le\", \"f16le\" or \"int8\")")
+        })?,
+        None => base.dtype,
     };
     let spec = StoreSpec {
         d: args.usize_or("d", base.d),
         shards: args.usize_or("shards", base.shards),
         shard_size: args.usize_or("shard-size", base.shard_size),
         seed: args.u64_or("seed", base.seed),
+        dtype,
     };
     let out = args
         .get("out")
@@ -369,12 +376,13 @@ fn cmd_build_index(args: &Args) -> anyhow::Result<()> {
     let header = store::build_store(Path::new(&out), &spec)?;
     let data_bytes = header.shard_data_bytes() * header.shards;
     println!(
-        "wrote {out}: v{} {} shards x {} rows x {}-d f32 ({:.1} MiB data, seed {}) \
+        "wrote {out}: v{} {} shards x {} rows x {}-d {} ({:.1} MiB data, seed {}) \
          in {:.2}s (+ manifest)",
         header.version,
         header.shards,
         header.shard_size,
         header.d,
+        header.dtype,
         data_bytes as f64 / (1024.0 * 1024.0),
         header.seed,
         t0.elapsed().as_secs_f64()
@@ -402,21 +410,29 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     let h = st.header();
     println!("store:     {path}");
     println!("format:    magic OK, version {}", h.version);
-    println!("dtype:     f32le");
+    println!("dtype:     {}", h.dtype);
     println!(
-        "geometry:  {} shards x {} rows x {}-d ({} vectors, {} data bytes/shard)",
+        "geometry:  {} shards x {} rows x {}-d ({} vectors, {} data bytes/shard{})",
         h.shards,
         h.shard_size,
         h.d,
         h.n_total(),
-        h.shard_data_bytes()
+        h.shard_data_bytes(),
+        if h.dtype.has_scales() {
+            format!(" + {} scale bytes", h.shard_scale_bytes())
+        } else {
+            String::new()
+        }
     );
     println!("alignment: {}-byte regions", h.region_align);
     println!("seed:      {}", h.seed);
     println!("mapped:    {}", st.is_mapped());
-    for (s, r) in h.regions.iter().enumerate() {
+    let rps = h.dtype.regions_per_shard() as usize;
+    for (i, r) in h.regions.iter().enumerate() {
+        let kind = if rps == 2 && i % rps == 1 { " scales" } else { "" };
         println!(
-            "  shard {s}: offset {:>12}  len {:>12}  checksum {:#018x}",
+            "  shard {}{kind}: offset {:>12}  len {:>12}  checksum {:#018x}",
+            i / rps,
             r.offset, r.len, r.checksum
         );
     }
@@ -434,7 +450,7 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     if verify {
         println!(
             "checksums OK ({} regions; open + validate + verify took {open_ms:.1} ms)",
-            h.shards
+            h.regions.len()
         );
     } else {
         println!("checksums skipped (--no-verify; open + validate took {open_ms:.1} ms)");
@@ -467,34 +483,43 @@ fn artifact_plan(cfg: &LauncherConfig) -> anyhow::Result<Option<ServePlan>> {
         .find(name)
         .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest"))?;
     match (entry.param_usize("buckets"), entry.param_usize("local_k")) {
+        // PJRT artifacts score f32 rows only (validated at config load).
         (Some(b), Some(kp)) => Ok(Some(plan_fixed(
             cfg.shards as u64,
             cfg.shard_size as u64,
             cfg.k as u64,
             b as u64,
             kp as u64,
+            Dtype::F32,
+            cfg.d as u64,
             PlanSource::Artifact,
         )?)),
         _ => Ok(None),
     }
 }
 
-/// How a shard's rows are produced inside its worker thread: a pre-sliced
-/// zero-copy region of an open store, or rows generated there from the
-/// per-shard seed (`seed ⊕ shard`) — so generation parallelizes across
-/// the shard spawn threads and no full-database copy ever exists.
-type RowsFn = Box<dyn FnOnce() -> anyhow::Result<RowSource> + Send>;
+/// How a shard's scoring payload is produced inside its worker thread: a
+/// pre-sliced zero-copy region of an open store (in the store's element
+/// encoding), or rows generated there from the per-shard seed
+/// (`seed ⊕ shard`) and quantized to the configured dtype — so generation
+/// parallelizes across the shard spawn threads and no full-database copy
+/// ever exists.
+type DataFn = Box<dyn FnOnce() -> anyhow::Result<ShardData> + Send>;
 
-fn shard_rows_fn(store: &Option<Arc<ShardStore>>, cfg: &LauncherConfig, s: usize) -> RowsFn {
+fn shard_data_fn(store: &Option<Arc<ShardStore>>, cfg: &LauncherConfig, s: usize) -> DataFn {
     match store {
         Some(st) => {
-            let rows = st.shard_rows(s);
-            Box::new(move || Ok(rows))
+            let data = st.shard_data(s);
+            Box::new(move || Ok(data))
         }
         None => {
-            let (seed, n, d) = (cfg.seed, cfg.shard_size, cfg.d);
+            let (seed, n, d, dtype) = (cfg.seed, cfg.shard_size, cfg.d, cfg.dtype);
             Box::new(move || {
-                Ok(RowSource::from_vec(store::generate_shard_rows(seed, s, n, d)))
+                ShardData::quantize_f32(
+                    RowSource::from_vec(store::generate_shard_rows(seed, s, n, d)),
+                    d,
+                    dtype,
+                )
             })
         }
     }
@@ -505,7 +530,7 @@ fn shard_rows_fn(store: &Option<Arc<ShardStore>>, cfg: &LauncherConfig, s: usize
 /// arm — not another copy of the per-backend slice/clone dance.
 fn backend_factory(
     cfg: &LauncherConfig,
-    rows: RowsFn,
+    data: DataFn,
     params: Option<TwoStageParams>,
     kernel: Option<SimdKernel>,
     threads: usize,
@@ -516,7 +541,7 @@ fn backend_factory(
             let params = params.expect("native backends always have a plan");
             let kernel = kernel.expect("native backends resolve a kernel");
             Box::new(move || {
-                Ok(Box::new(NativeBackend::from_source(rows()?, d, k, Some(params), kernel))
+                Ok(Box::new(NativeBackend::from_data(data()?, d, k, Some(params), kernel))
                     as Box<dyn ShardBackend>)
             })
         }
@@ -529,7 +554,7 @@ fn backend_factory(
                 kernel: kernel.expect("native backends resolve a kernel"),
             };
             Box::new(move || {
-                Ok(Box::new(ParallelNativeBackend::from_source(rows()?, d, k, params, opts))
+                Ok(Box::new(ParallelNativeBackend::from_data(data()?, d, k, params, opts))
                     as Box<dyn ShardBackend>)
             })
         }
@@ -539,7 +564,15 @@ fn backend_factory(
             Box::new(move || {
                 let exec = Executor::new(Path::new(&dir))?;
                 let compiled = exec.compile(&artifact)?;
-                let rows = rows()?;
+                // Config validation rejects quantized dtypes on this
+                // backend, and a quantized *store* is caught at open.
+                let rows = match data()? {
+                    ShardData::F32(rows) => rows,
+                    other => anyhow::bail!(
+                        "pjrt backend serves f32 rows only (got {})",
+                        other.dtype()
+                    ),
+                };
                 Ok(Box::new(PjrtBackend::new(compiled, &rows, d)?) as Box<dyn ShardBackend>)
             })
         }
@@ -572,6 +605,7 @@ fn open_or_build_store(
                 shards: cfg.shards,
                 shard_size: cfg.shard_size,
                 seed: cfg.seed,
+                dtype: cfg.dtype,
             },
         )?;
         built = true;
@@ -593,6 +627,16 @@ fn open_or_build_store(
         cfg.shards,
         cfg.shard_size,
         cfg.d
+    );
+    // The plan was priced for the configured dtype; serving other rows
+    // under it would silently mispredict recall.
+    anyhow::ensure!(
+        st.dtype() == cfg.dtype,
+        "store {} holds {} rows but the serve config says dtype {}; rebuild the \
+         store or fix the config",
+        sc.path,
+        st.dtype(),
+        cfg.dtype
     );
     Ok((st, built))
 }
@@ -618,10 +662,11 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         ),
     };
     println!(
-        "database: {} shards x {} vectors x {}-d ({} backend)",
+        "database: {} shards x {} vectors x {}-d {} rows ({} backend)",
         cfg.shards,
         cfg.shard_size,
         cfg.d,
+        cfg.dtype,
         match cfg.backend {
             BackendKind::Native => format!(
                 "native, {} kernel",
@@ -703,8 +748,8 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     let mut offsets = Vec::new();
     for s in 0..cfg.shards {
         offsets.push(s * cfg.shard_size);
-        let rows = shard_rows_fn(&db_store, cfg, s);
-        factories.push(backend_factory(cfg, rows, params, kernel, threads));
+        let data = shard_data_fn(&db_store, cfg, s);
+        factories.push(backend_factory(cfg, data, params, kernel, threads));
     }
 
     let svc = MipsService::start(
@@ -737,7 +782,7 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     if !matches!(cfg.backend, BackendKind::Pjrt) {
         let rcfg = cfg.clone();
         svc.set_reloader(Box::new(move |spec: &ReloadSpec| -> anyhow::Result<ShardReload> {
-            let (rows, new_size): (RowsFn, usize) = match &spec.source {
+            let (data, new_size): (DataFn, usize) = match &spec.source {
                 ReloadSource::Store { path } => {
                     let st = ShardStore::open_with(
                         Path::new(path),
@@ -760,16 +805,28 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
                         st.shards(),
                         spec.shard
                     );
-                    // The RowSource holds the mapping alive; the store
+                    anyhow::ensure!(
+                        st.dtype() == rcfg.dtype,
+                        "replacement store {} holds {} rows but this service plans \
+                         for dtype {}",
+                        path,
+                        st.dtype(),
+                        rcfg.dtype
+                    );
+                    // The ShardData holds the mapping alive; the store
                     // handle itself can drop here.
-                    let rows = st.shard_rows(spec.shard);
-                    (Box::new(move || Ok(rows)) as RowsFn, st.shard_size())
+                    let data = st.shard_data(spec.shard);
+                    (Box::new(move || Ok(data)) as DataFn, st.shard_size())
                 }
                 ReloadSource::Synthetic { seed, shard_size } => {
                     let n = shard_size.unwrap_or(rcfg.shard_size);
-                    let (seed, s, d) = (*seed, spec.shard, rcfg.d);
-                    let f: RowsFn = Box::new(move || {
-                        Ok(RowSource::from_vec(store::generate_shard_rows(seed, s, n, d)))
+                    let (seed, s, d, dtype) = (*seed, spec.shard, rcfg.d, rcfg.dtype);
+                    let f: DataFn = Box::new(move || {
+                        ShardData::quantize_f32(
+                            RowSource::from_vec(store::generate_shard_rows(seed, s, n, d)),
+                            d,
+                            dtype,
+                        )
                     });
                     (f, n)
                 }
@@ -788,7 +845,7 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
             );
             Ok(ShardReload {
                 shard: spec.shard,
-                factory: backend_factory(&rcfg, rows, Some(params), kernel, threads),
+                factory: backend_factory(&rcfg, data, Some(params), kernel, threads),
                 plan: Some(plan),
             })
         }));
@@ -876,20 +933,27 @@ fn run_load(
     // since the global exact top-k is the merge of per-shard exact top-k:
     // each shard's rows are mapped (store) or regenerated (synthetic) one
     // shard at a time, so the oracle never materializes the full database
-    // either.
+    // either. The ground truth for a quantized deployment is the stored
+    // rows themselves, dequantized — the f32 input the quantizer consumed
+    // no longer exists on the serving path.
     let sample = responses.len().min(32);
     let mut per_query: Vec<Vec<ShardTopK>> = vec![Vec::new(); sample];
     let mut scores = vec![0f32; cfg.shard_size];
     for s in 0..cfg.shards {
-        let rows: RowSource = match db_store {
-            Some(st) => st.shard_rows(s),
-            None => RowSource::from_vec(store::generate_shard_rows(
-                cfg.seed,
-                s,
-                cfg.shard_size,
+        let data: ShardData = match db_store {
+            Some(st) => st.shard_data(s),
+            None => ShardData::quantize_f32(
+                RowSource::from_vec(store::generate_shard_rows(
+                    cfg.seed,
+                    s,
+                    cfg.shard_size,
+                    cfg.d,
+                )),
                 cfg.d,
-            )),
+                cfg.dtype,
+            )?,
         };
+        let rows = data.dequantize_all(cfg.d);
         for (qi, (q, _)) in responses.iter().take(sample).enumerate() {
             for (j, slot) in scores.iter_mut().enumerate() {
                 let v = &rows[j * cfg.d..(j + 1) * cfg.d];

@@ -3,7 +3,7 @@
 
 use std::collections::HashMap;
 
-use crate::recall::{estimate_adaptive, expected_recall, RecallConfig};
+use crate::recall::{estimate_adaptive, expected_recall, perturbed_recall, RecallConfig};
 use crate::util::{divisors, Rng};
 
 /// Lane-width alignment required of bucket counts by the TPU kernel
@@ -17,6 +17,11 @@ pub enum RecallEval {
     Exact,
     /// The paper's adaptive Monte-Carlo estimator (tolerance at 3σ).
     MonteCarlo { tol: f64, seed: u64 },
+    /// Theorem 1 perturbed by Gaussian Stage-1 score noise of the given
+    /// score-relative std — the quantized-store evaluator
+    /// ([`crate::recall::perturbed_recall`]). Monotone in `B` like the
+    /// closed form, so the sweep's early exits stay valid.
+    Perturbed { sigma: f64 },
 }
 
 /// A selected configuration.
@@ -94,6 +99,7 @@ pub fn sweep_with(
             stats.configs_evaluated += 1;
             let recall = match eval {
                 RecallEval::Exact => expected_recall(&scored),
+                RecallEval::Perturbed { sigma } => perturbed_recall(&scored, sigma),
                 RecallEval::MonteCarlo { tol, .. } => {
                     let est = estimate_adaptive(&scored, tol, 4096, 1 << 24, &mut rng);
                     stats.mc_samples_drawn += est.num_trials;
@@ -164,11 +170,13 @@ pub fn select_parameters_mc(
 }
 
 /// Memoization key for a full planning request: `(shards, N, K,
-/// recall_target_micro, eval_kind, seed, tol_bits, allowed_local_k)`.
-/// Single-machine selections use `shards = 1` and zeros for the evaluator
-/// fields; the serve planner ([`crate::plan`]) keys its sharded sweeps —
-/// including Monte-Carlo seed and tolerance — through the same cache.
-pub type PlanKey = (u64, u64, u64, u64, u64, u64, u64, Vec<u64>);
+/// recall_target_micro, eval_kind, seed, tol_or_sigma_bits, dtype_code, d,
+/// allowed_local_k)`. Single-machine selections use `shards = 1` and zeros
+/// for the evaluator and dtype fields; the serve planner ([`crate::plan`])
+/// keys its sharded sweeps — including Monte-Carlo seed/tolerance and the
+/// store dtype driving the quantization-noise evaluator — through the same
+/// cache.
+pub type PlanKey = (u64, u64, u64, u64, u64, u64, u64, u64, u64, Vec<u64>);
 
 /// Memoized selection. The paper notes selections are cached and reused
 /// across identical layers; the serve planner reuses the same cache so
@@ -204,6 +212,8 @@ impl ParamCache {
             n,
             k,
             (recall_target * 1e6).round() as u64,
+            0,
+            0,
             0,
             0,
             0,
@@ -297,6 +307,34 @@ mod tests {
     fn infeasible_returns_none() {
         // No legal bucket counts.
         assert_eq!(select_parameters(999, 10, 0.9, &[1, 2]), None);
+    }
+
+    #[test]
+    fn perturbed_evaluator_never_cheapens_the_plan() {
+        let allowed = [1u64, 2, 3, 4];
+        let (exact, _) = select_with(262_144, 1024, 0.95, &allowed, RecallEval::Exact);
+        let (noisy, _) = select_with(
+            262_144,
+            1024,
+            0.95,
+            &allowed,
+            RecallEval::Perturbed { sigma: 0.15 },
+        );
+        let (e, p) = (exact.unwrap(), noisy.unwrap());
+        // Noise can only push the sweep toward more candidates; at σ=0.15
+        // the paper's (B=512, K'=4) pick inflates to (B=1024, K'=3).
+        assert!(p.cfg.num_elements() >= e.cfg.num_elements());
+        assert_eq!((p.cfg.buckets, p.cfg.local_k), (1024, 3));
+        assert!(p.expected_recall >= 0.95);
+        // Zero noise is the Theorem-1 closed form, bit for bit.
+        let (z, _) = select_with(
+            262_144,
+            1024,
+            0.95,
+            &allowed,
+            RecallEval::Perturbed { sigma: 0.0 },
+        );
+        assert_eq!(z.unwrap(), e);
     }
 
     #[test]

@@ -42,7 +42,8 @@
 //! [`ParamCache`] so identical shards (and identical restarts) plan once.
 
 use crate::params::{sweep_with, ParamCache, RecallEval, Selection, SweepStats};
-use crate::recall::{expected_recall, RecallConfig};
+use crate::recall::{expected_recall, noise_sigma_ratio, perturbed_recall, RecallConfig};
+use crate::store::Dtype;
 
 /// What produced a [`ServePlan`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -51,6 +52,9 @@ pub enum PlanSource {
     Exact,
     /// Planner sweep scored by the adaptive Monte-Carlo estimator.
     MonteCarlo,
+    /// Planner sweep scored by the quantization-noise perturbed evaluator
+    /// ([`crate::recall::perturbed_recall`]).
+    Quantized,
     /// Operator-supplied `(B, K′)` from the serve config (no sweep).
     Manual,
     /// `(B, K′)` baked into an AOT artifact (PJRT path; no sweep).
@@ -62,6 +66,7 @@ impl PlanSource {
         match self {
             PlanSource::Exact => "exact",
             PlanSource::MonteCarlo => "mc",
+            PlanSource::Quantized => "quantized",
             PlanSource::Manual => "manual",
             PlanSource::Artifact => "artifact",
         }
@@ -81,8 +86,16 @@ pub struct PlanRequest {
     pub recall_target: f64,
     /// Candidate K′ values (the paper's `allowed_local_K`).
     pub allowed_local_k: Vec<u64>,
-    /// Recall evaluator for the sweep.
+    /// Recall evaluator for the sweep. Ignored (replaced by the
+    /// noise-perturbed evaluator) when `dtype` is quantized.
     pub eval: RecallEval,
+    /// Stored dtype of the shards being served. A quantized dtype switches
+    /// the sweep to [`perturbed_recall`] at
+    /// [`noise_sigma_ratio`]`(dtype, d)`, inflating `(B, K′)` until the
+    /// target holds under Stage-1 quantization noise.
+    pub dtype: Dtype,
+    /// Row dimensionality d — sets the int8 noise level (unused for f32).
+    pub d: u64,
 }
 
 /// The planner's decision for one serve deployment.
@@ -105,12 +118,29 @@ pub struct ServePlan {
     /// targeted; always ≤ `predicted_recall` for S > 1.
     pub per_shard_recall: f64,
     pub source: PlanSource,
+    /// Stored dtype the plan was made for.
+    pub dtype: Dtype,
+    /// Score-relative Stage-1 noise std the sweep priced in (0 for f32).
+    pub quant_sigma: f64,
+    /// Per-shard candidates the equivalent f32 request needs —
+    /// `num_elements() / baseline_elements` is the quantization inflation.
+    pub baseline_elements: u64,
 }
 
 impl ServePlan {
     /// Per-shard second-stage input size `B·K′` — what the sweep minimizes.
     pub fn num_elements(&self) -> u64 {
         self.buckets * self.local_k
+    }
+
+    /// Candidate-budget inflation the quantization noise cost this plan,
+    /// relative to the f32 baseline plan of the same request (1.0 = free).
+    pub fn inflation(&self) -> f64 {
+        if self.baseline_elements == 0 {
+            1.0
+        } else {
+            self.num_elements() as f64 / self.baseline_elements as f64
+        }
     }
 
     /// The pooled configuration whose Theorem-1 recall equals the merged
@@ -126,9 +156,19 @@ impl ServePlan {
 
     /// One-line operator-facing description.
     pub fn describe(&self) -> String {
+        let quant = if self.quant_sigma > 0.0 {
+            format!(
+                ", {} rows: sigma={:.4}, {:.2}x f32 candidates",
+                self.dtype,
+                self.quant_sigma,
+                self.inflation()
+            )
+        } else {
+            String::new()
+        };
         format!(
             "K'={} B={} per shard ({} candidates/shard, predicted merged \
-             recall {:.4}, per-shard {:.4}, {} plan)",
+             recall {:.4}, per-shard {:.4}, {} plan{quant})",
             self.local_k,
             self.buckets,
             self.num_elements(),
@@ -166,13 +206,19 @@ pub fn predicted_merged_recall(
 
 /// Build a [`ServePlan`] from fixed per-shard `(B, K′)` — the operator
 /// override and the PJRT-artifact path, where the parameters are not free.
-/// Returns `Err` when the pair violates the per-shard kernel constraints.
+/// Quantized dtypes change the *predicted* recall (via the perturbed
+/// evaluator at the dtype's noise level) but, with the parameters fixed,
+/// nothing can be inflated. Returns `Err` when the pair violates the
+/// per-shard kernel constraints.
+#[allow(clippy::too_many_arguments)]
 pub fn plan_fixed(
     shards: u64,
     shard_size: u64,
     k: u64,
     buckets: u64,
     local_k: u64,
+    dtype: Dtype,
+    d: u64,
     source: PlanSource,
 ) -> anyhow::Result<ServePlan> {
     anyhow::ensure!(buckets >= 1 && local_k >= 1, "B and K' must be positive");
@@ -189,16 +235,93 @@ pub fn plan_fixed(
         "B*K' = {} < K = {k}: a shard cannot return K candidates",
         buckets * local_k
     );
+    let quant_sigma = if dtype == Dtype::F32 {
+        0.0
+    } else {
+        anyhow::ensure!(
+            d >= 1,
+            "dimension d must be >= 1 to derive the {dtype} quantization noise"
+        );
+        noise_sigma_ratio(dtype, d as usize)
+    };
     Ok(ServePlan {
         shards,
         shard_size,
         k,
         buckets,
         local_k,
-        predicted_recall: predicted_merged_recall(shards, shard_size, k, buckets, local_k),
-        per_shard_recall: expected_recall(&RecallConfig::new(shard_size, k, buckets, local_k)),
+        predicted_recall: perturbed_recall(
+            &merged_config(shards, shard_size, k, buckets, local_k),
+            quant_sigma,
+        ),
+        per_shard_recall: perturbed_recall(
+            &RecallConfig::new(shard_size, k, buckets, local_k),
+            quant_sigma,
+        ),
         source,
+        dtype,
+        quant_sigma,
+        baseline_elements: buckets * local_k,
     })
+}
+
+/// The evaluator a request actually sweeps with, plus the noise level it
+/// prices in: a quantized dtype forces the perturbed evaluator at the
+/// dtype's sigma; an explicit [`RecallEval::Perturbed`] request is
+/// honoured as-is for f32.
+fn effective_eval(req: &PlanRequest) -> (RecallEval, f64) {
+    if req.dtype != Dtype::F32 {
+        let sigma = noise_sigma_ratio(req.dtype, req.d as usize);
+        (RecallEval::Perturbed { sigma }, sigma)
+    } else if let RecallEval::Perturbed { sigma } = req.eval {
+        (req.eval, sigma)
+    } else {
+        (req.eval, 0.0)
+    }
+}
+
+fn source_of(eval: RecallEval) -> PlanSource {
+    match eval {
+        RecallEval::Exact => PlanSource::Exact,
+        RecallEval::MonteCarlo { .. } => PlanSource::MonteCarlo,
+        RecallEval::Perturbed { .. } => PlanSource::Quantized,
+    }
+}
+
+/// One planning sweep at the given evaluator: per-shard candidates scored
+/// on the pooled cross-shard configuration.
+fn sweep_plan(req: &PlanRequest, eval: RecallEval) -> (Option<Selection>, SweepStats) {
+    sweep_with(
+        req.shard_size,
+        req.k,
+        req.recall_target,
+        &req.allowed_local_k,
+        eval,
+        |b, local_k| merged_config(req.shards, req.shard_size, req.k, b, local_k),
+    )
+}
+
+fn build_plan(
+    req: &PlanRequest,
+    sel: Selection,
+    sigma: f64,
+    eval: RecallEval,
+    baseline_elements: u64,
+) -> ServePlan {
+    ServePlan {
+        shards: req.shards,
+        shard_size: req.shard_size,
+        k: req.k,
+        buckets: sel.cfg.buckets,
+        local_k: sel.cfg.local_k,
+        predicted_recall: sel.expected_recall,
+        // perturbed_recall(·, 0) is the Theorem-1 closed form exactly.
+        per_shard_recall: perturbed_recall(&sel.cfg, sigma),
+        source: source_of(eval),
+        dtype: req.dtype,
+        quant_sigma: sigma,
+        baseline_elements,
+    }
 }
 
 /// The serve-planning sweep: minimize the per-shard `B·K′` subject to
@@ -211,26 +334,22 @@ pub fn plan_fixed(
 /// sweep statistics.
 pub fn plan_serve(req: &PlanRequest) -> (Option<ServePlan>, SweepStats) {
     assert!(req.shards >= 1);
-    let (sel, stats) = sweep_with(
-        req.shard_size,
-        req.k,
-        req.recall_target,
-        &req.allowed_local_k,
-        req.eval,
-        |b, local_k| merged_config(req.shards, req.shard_size, req.k, b, local_k),
-    );
-    let plan = sel.map(|s| ServePlan {
-        shards: req.shards,
-        shard_size: req.shard_size,
-        k: req.k,
-        buckets: s.cfg.buckets,
-        local_k: s.cfg.local_k,
-        predicted_recall: s.expected_recall,
-        per_shard_recall: expected_recall(&s.cfg),
-        source: match req.eval {
-            RecallEval::Exact => PlanSource::Exact,
-            RecallEval::MonteCarlo { .. } => PlanSource::MonteCarlo,
-        },
+    let (eval, sigma) = effective_eval(req);
+    let (sel, stats) = sweep_plan(req, eval);
+    let plan = sel.map(|s| {
+        // Price the quantization: what would the same request cost at f32?
+        // Any config meeting the perturbed target meets the exact target
+        // (noise only hurts), so the baseline sweep is feasible whenever
+        // this one is.
+        let baseline_elements = if sigma > 0.0 {
+            sweep_plan(req, RecallEval::Exact)
+                .0
+                .map(|b| b.cfg.num_elements())
+                .unwrap_or_else(|| s.cfg.num_elements())
+        } else {
+            s.cfg.num_elements()
+        };
+        build_plan(req, s, sigma, eval, baseline_elements)
     });
     (plan, stats)
 }
@@ -240,12 +359,37 @@ pub fn plan_serve(req: &PlanRequest) -> (Option<ServePlan>, SweepStats) {
 /// once. MC plans key on `(seed, tol)` too, so a reseeded sweep is not
 /// served a stale entry.
 pub fn plan_serve_cached(cache: &mut ParamCache, req: &PlanRequest) -> Option<ServePlan> {
+    let (eval, sigma) = effective_eval(req);
+    let sel = cached_sweep(cache, req, eval)?;
+    // The f32 baseline of a quantized plan is its own cache entry — shared
+    // with plain f32 requests for the same topology.
+    let baseline_elements = if sigma > 0.0 {
+        cached_sweep(cache, req, RecallEval::Exact)
+            .map(|b| b.cfg.num_elements())
+            .unwrap_or_else(|| sel.cfg.num_elements())
+    } else {
+        sel.cfg.num_elements()
+    };
+    Some(build_plan(req, sel, sigma, eval, baseline_elements))
+}
+
+/// Memoized [`sweep_plan`]. Non-perturbed evaluators zero the dtype/d key
+/// fields (the sweep does not depend on them), so a quantized plan's f32
+/// baseline shares its entry with plain f32 requests.
+fn cached_sweep(
+    cache: &mut ParamCache,
+    req: &PlanRequest,
+    eval: RecallEval,
+) -> Option<Selection> {
     let mut allowed: Vec<u64> = req.allowed_local_k.clone();
     allowed.sort_unstable();
     allowed.dedup();
-    let (eval_kind, seed, tol_bits) = match req.eval {
-        RecallEval::Exact => (0u64, 0u64, 0u64),
-        RecallEval::MonteCarlo { tol, seed } => (1, seed, tol.to_bits()),
+    let (eval_kind, seed, bits, dtype_code, d) = match eval {
+        RecallEval::Exact => (0u64, 0u64, 0u64, 0u64, 0u64),
+        RecallEval::MonteCarlo { tol, seed } => (1, seed, tol.to_bits(), 0, 0),
+        RecallEval::Perturbed { sigma } => {
+            (2, 0, sigma.to_bits(), req.dtype.code() as u64, req.d)
+        }
     };
     let key = (
         req.shards,
@@ -254,30 +398,12 @@ pub fn plan_serve_cached(cache: &mut ParamCache, req: &PlanRequest) -> Option<Se
         (req.recall_target * 1e6).round() as u64,
         eval_kind,
         seed,
-        tol_bits,
+        bits,
+        dtype_code,
+        d,
         allowed,
     );
-    let sel = cache.get_or_compute(key, || {
-        plan_serve(req).0.map(|p| Selection {
-            cfg: RecallConfig::new(p.shard_size, p.k, p.buckets, p.local_k),
-            expected_recall: p.predicted_recall,
-        })
-    })?;
-    // Rebuild the plan from the cached per-shard selection; both recall
-    // figures are cheap closed-form lookups.
-    Some(ServePlan {
-        shards: req.shards,
-        shard_size: req.shard_size,
-        k: req.k,
-        buckets: sel.cfg.buckets,
-        local_k: sel.cfg.local_k,
-        predicted_recall: sel.expected_recall,
-        per_shard_recall: expected_recall(&sel.cfg),
-        source: match req.eval {
-            RecallEval::Exact => PlanSource::Exact,
-            RecallEval::MonteCarlo { .. } => PlanSource::MonteCarlo,
-        },
-    })
+    cache.get_or_compute(key, || sweep_plan(req, eval).0)
 }
 
 #[cfg(test)]
@@ -295,6 +421,8 @@ mod tests {
             recall_target: r,
             allowed_local_k: vec![1, 2, 3, 4],
             eval: RecallEval::Exact,
+            dtype: Dtype::F32,
+            d: 64,
         }
     }
 
@@ -346,14 +474,24 @@ mod tests {
 
     #[test]
     fn fixed_plan_validates_and_predicts() {
-        let p = plan_fixed(4, 1024, 128, 128, 2, PlanSource::Manual).unwrap();
+        let p = plan_fixed(4, 1024, 128, 128, 2, Dtype::F32, 64, PlanSource::Manual).unwrap();
         assert_eq!(p.num_elements(), 256);
         let want = expected_recall(&RecallConfig::new(4096, 128, 512, 2));
         assert!((p.predicted_recall - want).abs() < 1e-12);
         assert_eq!(p.source, PlanSource::Manual);
+        assert_eq!(p.quant_sigma, 0.0);
+        assert_eq!(p.baseline_elements, p.num_elements());
         // Constraint violations are errors, not panics.
-        assert!(plan_fixed(4, 1024, 100, 100, 1, PlanSource::Manual).is_err()); // 100 ∤ 1024
-        assert!(plan_fixed(4, 1024, 128, 64, 1, PlanSource::Manual).is_err()); // B·K′ < K
+        assert!(plan_fixed(4, 1024, 100, 100, 1, Dtype::F32, 64, PlanSource::Manual).is_err()); // 100 ∤ 1024
+        assert!(plan_fixed(4, 1024, 128, 64, 1, Dtype::F32, 64, PlanSource::Manual).is_err()); // B·K′ < K
+        // Quantized fixed plans price the noise into the prediction.
+        let q = plan_fixed(4, 1024, 128, 128, 2, Dtype::I8, 64, PlanSource::Manual).unwrap();
+        assert_eq!(q.dtype, Dtype::I8);
+        assert!(q.quant_sigma > 0.0);
+        assert!(q.predicted_recall <= p.predicted_recall + 1e-12);
+        assert!((q.inflation() - 1.0).abs() < 1e-12, "fixed params cannot inflate");
+        // A quantized dtype without a dimension is an error, not a panic.
+        assert!(plan_fixed(4, 1024, 128, 128, 2, Dtype::I8, 0, PlanSource::Manual).is_err());
     }
 
     #[test]
@@ -425,6 +563,66 @@ mod tests {
                 est.std_error
             );
         });
+    }
+
+    #[test]
+    fn quantized_plan_reports_inflation_at_the_boundary() {
+        // Synthetic heavy noise (σ=0.15) forces the sweep off the paper's
+        // (B=512, K'=4) pick: it buys (B=1024, K'=3) — 1.5x the candidates.
+        let mut req = exact_req(1, 262_144, 1024, 0.95);
+        req.eval = RecallEval::Perturbed { sigma: 0.15 };
+        let plan = plan_serve(&req).0.unwrap();
+        assert_eq!((plan.buckets, plan.local_k), (1024, 3));
+        assert_eq!(plan.baseline_elements, 2048);
+        assert!((plan.inflation() - 1.5).abs() < 1e-12);
+        assert_eq!(plan.source, PlanSource::Quantized);
+        assert!(plan.predicted_recall >= 0.95);
+        assert!(plan.describe().contains("1.50x"), "{}", plan.describe());
+    }
+
+    #[test]
+    fn int8_noise_is_nearly_free_at_paper_scale() {
+        let f32_plan = plan_serve(&exact_req(1, 262_144, 1024, 0.95)).0.unwrap();
+        let mut req = exact_req(1, 262_144, 1024, 0.95);
+        req.dtype = Dtype::I8;
+        req.d = 128;
+        let plan = plan_serve(&req).0.unwrap();
+        // σ ≈ 0.011 does not move the sweep at this scale: same (B, K'),
+        // inflation 1.0 — but the plan records the noise it priced in.
+        assert_eq!((plan.buckets, plan.local_k), (f32_plan.buckets, f32_plan.local_k));
+        assert_eq!(plan.baseline_elements, f32_plan.num_elements());
+        assert!((plan.inflation() - 1.0).abs() < 1e-12);
+        assert_eq!(plan.dtype, Dtype::I8);
+        assert_eq!(plan.quant_sigma, crate::recall::noise_sigma_ratio(Dtype::I8, 128));
+        assert_eq!(plan.source, PlanSource::Quantized);
+        assert!(plan.predicted_recall >= 0.95);
+        assert!(plan.predicted_recall <= f32_plan.predicted_recall);
+        // f16 noise (2⁻¹¹) is quieter still; same geometry.
+        let mut req16 = exact_req(1, 262_144, 1024, 0.95);
+        req16.dtype = Dtype::F16;
+        req16.d = 128;
+        let p16 = plan_serve(&req16).0.unwrap();
+        assert_eq!((p16.buckets, p16.local_k), (f32_plan.buckets, f32_plan.local_k));
+    }
+
+    #[test]
+    fn cached_quantized_plan_matches_direct_and_shares_the_baseline() {
+        let mut cache = ParamCache::new();
+        let mut req = exact_req(2, 8_192, 256, 0.9);
+        req.dtype = Dtype::I8;
+        req.d = 32;
+        let a = plan_serve_cached(&mut cache, &req).unwrap();
+        let direct = plan_serve(&req).0.unwrap();
+        assert_eq!(a, direct);
+        // Two entries: the quantized sweep plus its f32 baseline.
+        assert_eq!(cache.misses, 2);
+        // A plain f32 request for the same topology hits the baseline entry.
+        let b = plan_serve_cached(&mut cache, &exact_req(2, 8_192, 256, 0.9)).unwrap();
+        assert_eq!(b.num_elements(), a.baseline_elements);
+        assert_eq!(cache.misses, 2, "baseline sweep must be shared");
+        let again = plan_serve_cached(&mut cache, &req).unwrap();
+        assert_eq!(a, again);
+        assert_eq!(cache.misses, 2);
     }
 
     #[test]

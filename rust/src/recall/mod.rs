@@ -7,15 +7,19 @@
 //! - [`mc`]: Monte-Carlo estimation with the paper's adaptive stopping rule.
 //! - [`bounds`]: Chern et al.'s bound, our 2×-tighter K′=1 bound, and the
 //!   Appendix-A.5 binomial-series approximations.
+//! - [`quant`]: expected recall under quantized (f16/int8) Stage-1 scoring
+//!   with exact rescore — Theorem 1 perturbed by Gaussian score noise.
 
 pub mod bounds;
 pub mod distribution;
 pub mod exact;
 pub mod hypergeom;
 pub mod mc;
+pub mod quant;
 pub mod variance;
 
 pub use exact::{expected_excess_collisions, expected_recall, RecallConfig};
 pub use hypergeom::Hypergeometric;
 pub use mc::{estimate, estimate_adaptive, McEstimate};
+pub use quant::{mc_quantized_recall, noise_sigma_ratio, perturbed_recall, quantized_recall};
 pub use variance::{recall_std, recall_variance};

@@ -1,0 +1,550 @@
+//! Quantization-aware recall: Theorem 1 under noisy Stage-1 scores.
+//!
+//! Serving a quantized store (f16 or int8 rows) perturbs every Stage-1
+//! score by an approximately Gaussian error. Stage 2 re-scores the
+//! survivors in exact f32 before the merge, so ranking among survivors is
+//! noise-free; recall is lost only when the noise costs a true top-K
+//! element its per-bucket top-K′ seat. This module prices that loss so the
+//! planner can inflate (B, K′) until the recall target holds again:
+//!
+//! - [`noise_sigma_ratio`]: score-relative noise std per dtype, derived
+//!   from the quantizer's error model (see each arm's comment).
+//! - [`perturbed_recall`]: analytic expected recall under iid N(0,1)
+//!   scores with iid N(0,σ²) Stage-1 noise. Reduces *exactly* to
+//!   Theorem 1 at σ = 0 (pinned by test).
+//! - [`mc_quantized_recall`]: direct Monte-Carlo simulation of the same
+//!   process (perturb → per-bucket select → exact rescore), used to
+//!   cross-check the analytic model.
+//!
+//! # The analytic model
+//!
+//! Condition on one true top-K element `i`. Its bucket holds `m − 1`
+//! other elements of which `X′ ~ Hypergeom(N−1, K−1, m−1)` are also true
+//! top-K. With noisy scores, `i` survives Stage 1 iff fewer than K′
+//! bucket-mates have a higher *perturbed* score. Approximating `i`'s rank
+//! as uniform over the K top ranks (score `t_r` = the rank-r normal
+//! quantile) and mates' overtake events as independent:
+//!
+//! - a top mate overtakes with probability `p_top(u)` — a rank-averaged
+//!   Gaussian tail at threshold `u = t_r + e`;
+//! - a non-top mate overtakes with probability `p_non(u)` — a truncated
+//!   normal (below the top-K threshold τ) convolved with the noise;
+//! - overtakes then count as `Binom(X′, p_top) + Binom(m−1−X′, p_non)`,
+//!   and the noise `e` on `i` itself is integrated out by Simpson.
+//!
+//! At σ = 0 this machinery collapses to the closed identity
+//! `P[drop | X′] = max(0, X′+1−K′)/(X′+1)` (within a bucket holding X
+//! top elements, exactly max(0, X−K′) of them lose by symmetry), whose
+//! size-biased average over X′ is exactly Theorem 1's
+//! `(B/K)·E[max(0, X−K′)]`; we dispatch to [`expected_recall`] there.
+
+use super::exact::{expected_recall, RecallConfig};
+use super::hypergeom::Hypergeometric;
+use super::mc::McEstimate;
+use crate::store::Dtype;
+use crate::util::{stats::Welford, Rng};
+
+/// Rank strata for integrating over the (unknown) rank of a true top-K
+/// element; exact midpoint ranks when K <= RANK_STRATA.
+const RANK_STRATA: usize = 64;
+/// Simpson intervals for the noise integral over e ~ N(0, σ²).
+const NOISE_STEPS: usize = 32;
+/// Simpson intervals for the truncated-normal overtake probability.
+const TAIL_STEPS: usize = 64;
+
+/// Stage-1 score noise std relative to the score std, per stored dtype.
+///
+/// Scores are dots of d unit-variance elements (std √d); the ratio below
+/// is `σ_noise / √d`:
+///
+/// - `f32`: the kernels are bit-exact, σ = 0.
+/// - `f16`: each stored element carries relative rounding error ≤ 2⁻¹¹
+///   (half-precision unit roundoff; our kernels widen to f32, adding
+///   nothing). Error std per dot ≈ √d · 2⁻¹¹, so the ratio is 2⁻¹¹.
+/// - `int8`: symmetric absmax gives scale α = max|x|/127 with
+///   E[max|x|] ≈ √(2·ln(2d)) for a unit-variance row; rounding error is
+///   uniform(±α/2) per element (variance α²/12), and the query is
+///   quantized the same way, doubling the variance. Per dot:
+///   σ² ≈ 2d·α²/12, so the ratio is α/√6 = √(ln(2d)/3)/127.
+pub fn noise_sigma_ratio(dtype: Dtype, d: usize) -> f64 {
+    assert!(d > 0, "dimension must be positive");
+    match dtype {
+        Dtype::F32 => 0.0,
+        Dtype::F16 => (2.0f64).powi(-11),
+        Dtype::I8 => ((2.0 * d as f64).ln() / 3.0).sqrt() / 127.0,
+    }
+}
+
+/// Φ(x), tail-safe (no cancellation for large |x|).
+fn normal_cdf(x: f64) -> f64 {
+    let a = x / std::f64::consts::SQRT_2;
+    if a >= 0.0 {
+        1.0 - 0.5 * erfc_pos(a)
+    } else {
+        0.5 * erfc_pos(-a)
+    }
+}
+
+/// erfc(a) for a >= 0 (Abramowitz & Stegun 7.1.26, |err| < 1.5e-7).
+fn erfc_pos(a: f64) -> f64 {
+    debug_assert!(a >= 0.0);
+    let t = 1.0 / (1.0 + 0.3275911 * a);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    poly * (-a * a).exp()
+}
+
+/// Standard normal density.
+fn normal_pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Φ⁻¹(p) via Acklam's rational approximation plus one Halley step.
+fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile domain: p in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let mut x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p > 1.0 - P_LOW {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -((((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0))
+    } else {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    };
+    // One Halley refinement against our Φ.
+    let e = normal_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (0.5 * x * x).exp();
+    x -= u / (1.0 + x * u / 2.0);
+    x
+}
+
+/// P[a non-top element's perturbed score exceeds u]: its score is a
+/// standard normal truncated below τ, its noise N(0, σ²).
+fn overtake_prob_nontop(u: f64, tau: f64, sigma: f64, mass_below_tau: f64) -> f64 {
+    // Only s within ~8σ of u can overtake; below that Φ((s−u)/σ) ≈ 0.
+    let lo = u - 8.0 * sigma;
+    if lo >= tau {
+        return 0.0;
+    }
+    let h = (tau - lo) / TAIL_STEPS as f64;
+    let mut acc = 0.0;
+    for j in 0..=TAIL_STEPS {
+        let s = lo + j as f64 * h;
+        let w = if j == 0 || j == TAIL_STEPS {
+            1.0
+        } else if j % 2 == 1 {
+            4.0
+        } else {
+            2.0
+        };
+        acc += w * normal_pdf(s) * normal_cdf((s - u) / sigma);
+    }
+    (acc * h / 3.0 / mass_below_tau).clamp(0.0, 1.0)
+}
+
+/// P[Binom(n, p) <= c] for small c (direct pmf recurrence).
+fn binom_cdf_small(n: u64, p: f64, c: u64) -> f64 {
+    if p <= 0.0 || c >= n {
+        return 1.0;
+    }
+    if p >= 1.0 {
+        return 0.0;
+    }
+    let mut pmf = (n as f64 * (1.0 - p).ln()).exp(); // P[X = 0]
+    let ratio = p / (1.0 - p);
+    let mut cdf = pmf;
+    for j in 0..c {
+        pmf *= (n - j) as f64 / (j + 1) as f64 * ratio;
+        cdf += pmf;
+    }
+    cdf.min(1.0)
+}
+
+/// P[Binom(n, p) = a] for small a.
+fn binom_pmf_small(n: u64, p: f64, a: u64) -> f64 {
+    if a > n {
+        return 0.0;
+    }
+    if p <= 0.0 {
+        return if a == 0 { 1.0 } else { 0.0 };
+    }
+    if p >= 1.0 {
+        return if a == n { 1.0 } else { 0.0 };
+    }
+    let ln = super::hypergeom::ln_choose(n, a as i64)
+        + a as f64 * p.ln()
+        + (n - a) as f64 * (1.0 - p).ln();
+    ln.exp()
+}
+
+/// Analytic expected recall of the two-stage algorithm when Stage-1 scores
+/// carry iid N(0, σ²) noise on top of iid N(0, 1) true scores, with exact
+/// re-scoring of survivors before the merge. `sigma_ratio` is the
+/// score-relative noise std from [`noise_sigma_ratio`]. Clamped to [0, 1];
+/// equals Theorem 1's [`expected_recall`] exactly when `sigma_ratio == 0`.
+pub fn perturbed_recall(cfg: &RecallConfig, sigma_ratio: f64) -> f64 {
+    assert!(
+        sigma_ratio.is_finite() && sigma_ratio >= 0.0,
+        "sigma_ratio must be finite and non-negative, got {sigma_ratio}"
+    );
+    // The noiseless limit has a closed form: Theorem 1.
+    if sigma_ratio < 1e-12 {
+        return expected_recall(cfg);
+    }
+    let m = cfg.bucket_size();
+    if cfg.local_k >= m {
+        return 1.0; // every bucket keeps all of its elements
+    }
+    let n = cfg.n as f64;
+    let k = cfg.k as f64;
+    let sigma = sigma_ratio;
+    let tau = normal_quantile(1.0 - k / n); // top-K score threshold
+    let mass_below_tau = normal_cdf(tau);
+
+    // Rank strata: t[j] is the score of the element at the stratum's
+    // midpoint rank among the K true top elements.
+    let strata = RANK_STRATA.min(cfg.k as usize);
+    let t: Vec<f64> = (0..strata)
+        .map(|j| {
+            let rank = (j as f64 + 0.5) * k / strata as f64;
+            normal_quantile(1.0 - rank / n)
+        })
+        .collect();
+
+    // X′ ~ Hypergeom(N−1, K−1, m−1): other true-top elements sharing the
+    // conditioned element's bucket.
+    let hyper = Hypergeometric::new(cfg.n - 1, cfg.k - 1, m - 1);
+    let (x_lo, x_hi) = hyper.support();
+    let x_cut = (hyper.mean() + 12.0 * hyper.variance().sqrt() + cfg.local_k as f64 + 8.0) as u64;
+    let x_hi = x_hi.min(x_cut.max(x_lo));
+    let x_pmf: Vec<f64> = (x_lo..=x_hi).map(|x| hyper.pmf(x)).collect();
+
+    let c = cfg.local_k - 1; // survive iff overtaken by <= c mates
+    let noise_h = 12.0 * sigma / NOISE_STEPS as f64;
+    let mut total = 0.0;
+    for &tr in &t {
+        // Integrate the conditioned element's own noise e over ±6σ.
+        let mut survive = 0.0;
+        let mut weight = 0.0;
+        for i in 0..=NOISE_STEPS {
+            let e = -6.0 * sigma + i as f64 * noise_h;
+            let w_simpson = if i == 0 || i == NOISE_STEPS {
+                1.0
+            } else if i % 2 == 1 {
+                4.0
+            } else {
+                2.0
+            };
+            let w = w_simpson * normal_pdf(e / sigma) / sigma;
+            let u = tr + e;
+            // Top mate overtakes: rank-averaged Gaussian tail above u.
+            let p_top = t
+                .iter()
+                .map(|&tj| normal_cdf((tj - u) / sigma))
+                .sum::<f64>()
+                / strata as f64;
+            let p_non = overtake_prob_nontop(u, tau, sigma, mass_below_tau);
+            // P[survive | X′] mixed over the hypergeometric.
+            let mut s_given_e = 0.0;
+            for (xi, &px) in x_pmf.iter().enumerate() {
+                let x = x_lo + xi as u64;
+                let n_non = m - 1 - x;
+                let mut s = 0.0;
+                for a in 0..=c.min(x) {
+                    s += binom_pmf_small(x, p_top, a) * binom_cdf_small(n_non, p_non, c - a);
+                }
+                s_given_e += px * s;
+            }
+            survive += w * s_given_e;
+            weight += w;
+        }
+        total += survive / weight;
+    }
+    (total / strata as f64).clamp(0.0, 1.0)
+}
+
+/// Convenience: [`perturbed_recall`] at the dtype's noise level.
+pub fn quantized_recall(cfg: &RecallConfig, dtype: Dtype, d: usize) -> f64 {
+    perturbed_recall(cfg, noise_sigma_ratio(dtype, d))
+}
+
+/// Monte-Carlo estimate of the same quantity by direct simulation: draw
+/// iid N(0,1) scores, perturb with iid N(0,σ²) noise, run per-bucket
+/// top-K′ on the perturbed scores, then count surviving true-top-K
+/// elements (exact rescore makes recall = survivors / K).
+pub fn mc_quantized_recall(
+    cfg: &RecallConfig,
+    sigma_ratio: f64,
+    num_trials: u64,
+    rng: &mut Rng,
+) -> McEstimate {
+    assert!(num_trials >= 2);
+    assert!(sigma_ratio.is_finite() && sigma_ratio >= 0.0);
+    let n = cfg.n as usize;
+    let m = cfg.bucket_size() as usize;
+    let k = cfg.k as usize;
+    let kp = cfg.local_k as usize;
+    let mut scores = vec![0.0f64; n];
+    let mut perturbed = vec![0.0f64; n];
+    let mut order: Vec<u32> = vec![0; n];
+    let mut local: Vec<u32> = vec![0; m];
+    let mut is_top = vec![false; n];
+    let mut w = Welford::new();
+    for _ in 0..num_trials {
+        for s in scores.iter_mut() {
+            *s = rng.next_gaussian();
+        }
+        if sigma_ratio > 0.0 {
+            for (p, &s) in perturbed.iter_mut().zip(scores.iter()) {
+                *p = s + sigma_ratio * rng.next_gaussian();
+            }
+        } else {
+            perturbed.copy_from_slice(&scores);
+        }
+        for (i, o) in order.iter_mut().enumerate() {
+            *o = i as u32;
+        }
+        for f in is_top.iter_mut() {
+            *f = false;
+        }
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+        });
+        for &i in &order[..k] {
+            is_top[i as usize] = true;
+        }
+        let mut hits = 0usize;
+        for b in 0..cfg.buckets as usize {
+            let lo = b * m;
+            if kp >= m {
+                hits += is_top[lo..lo + m].iter().filter(|&&t| t).count();
+                continue;
+            }
+            for (j, l) in local.iter_mut().enumerate() {
+                *l = (lo + j) as u32;
+            }
+            local.select_nth_unstable_by(kp - 1, |&a, &b| {
+                perturbed[b as usize]
+                    .partial_cmp(&perturbed[a as usize])
+                    .unwrap()
+            });
+            hits += local[..kp].iter().filter(|&&i| is_top[i as usize]).count();
+        }
+        w.push(hits as f64 / k as f64);
+    }
+    McEstimate {
+        recall: w.mean(),
+        std_error: w.sem(),
+        num_trials,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    #[test]
+    fn sigma_ratio_per_dtype() {
+        assert_eq!(noise_sigma_ratio(Dtype::F32, 128), 0.0);
+        assert_eq!(noise_sigma_ratio(Dtype::F16, 128), 2.0f64.powi(-11));
+        let want = ((2.0 * 128.0f64).ln() / 3.0).sqrt() / 127.0;
+        assert_eq!(noise_sigma_ratio(Dtype::I8, 128), want);
+        // int8 noise grows (slowly) with dimension; f16 does not.
+        assert!(noise_sigma_ratio(Dtype::I8, 1024) > noise_sigma_ratio(Dtype::I8, 64));
+        assert_eq!(
+            noise_sigma_ratio(Dtype::F16, 16),
+            noise_sigma_ratio(Dtype::F16, 4096)
+        );
+        // f16 is far quieter than int8 at practical dimensions.
+        assert!(noise_sigma_ratio(Dtype::F16, 256) < noise_sigma_ratio(Dtype::I8, 256) / 10.0);
+    }
+
+    #[test]
+    fn normal_helpers_are_accurate() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((normal_cdf(1.959963985) - 0.975).abs() < 1e-6);
+        assert!((normal_cdf(-1.959963985) - 0.025).abs() < 1e-6);
+        // Tail-safe: deep tails stay positive and tiny, no cancellation.
+        let deep = normal_cdf(-8.0);
+        assert!(deep > 0.0 && deep < 1e-14, "{deep}");
+        for &p in &[1e-6, 0.01, 0.3, 0.5, 0.9, 0.999, 1.0 - 1e-6] {
+            let x = normal_quantile(p);
+            assert!(
+                (normal_cdf(x) - p).abs() < 1e-6 * (1.0 + p),
+                "p={p}: x={x} cdf={}",
+                normal_cdf(x)
+            );
+        }
+    }
+
+    #[test]
+    fn sigma_zero_is_exactly_theorem_1() {
+        for &(n, k, b, kp) in &[
+            (262_144u64, 1024u64, 8_192u64, 1u64),
+            (262_144, 1024, 512, 4),
+            (4_096, 64, 256, 1),
+            (16_384, 256, 1_024, 2),
+        ] {
+            let cfg = RecallConfig::new(n, k, b, kp);
+            // Bit-for-bit: σ=0 dispatches to the Theorem-1 closed form.
+            assert_eq!(perturbed_recall(&cfg, 0.0), expected_recall(&cfg));
+            assert_eq!(quantized_recall(&cfg, Dtype::F32, 128), expected_recall(&cfg));
+        }
+    }
+
+    #[test]
+    fn tiny_sigma_is_continuous_with_theorem_1() {
+        // The general (quadrature) path must approach the closed form as
+        // σ→0. K <= RANK_STRATA keeps the rank integral exact.
+        for &(n, k, b, kp) in &[(16_384u64, 64u64, 512u64, 1u64), (8_192, 32, 256, 2)] {
+            let cfg = RecallConfig::new(n, k, b, kp);
+            let exact = expected_recall(&cfg);
+            let tiny = perturbed_recall(&cfg, 1e-9);
+            assert!(
+                (tiny - exact).abs() < 0.01,
+                "cfg={cfg:?}: tiny-σ {tiny:.5} vs exact {exact:.5}"
+            );
+        }
+    }
+
+    #[test]
+    fn noise_degrades_recall_monotonically() {
+        let cfg = RecallConfig::new(16_384, 128, 1_024, 1);
+        let mut prev = f64::INFINITY;
+        for &s in &[0.0, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2] {
+            let r = perturbed_recall(&cfg, s);
+            assert!((0.0..=1.0).contains(&r));
+            assert!(r <= prev + 1e-4, "sigma={s}: {r} > {prev}");
+            prev = r;
+        }
+        // And the degradation is material by σ=0.2 for a tight config.
+        assert!(perturbed_recall(&cfg, 0.2) < expected_recall(&cfg) - 0.01);
+    }
+
+    #[test]
+    fn full_buckets_survive_any_noise() {
+        // K′ = bucket size: Stage 1 keeps everything, noise is harmless.
+        let cfg = RecallConfig::new(4_096, 64, 512, 8);
+        assert_eq!(perturbed_recall(&cfg, 0.3), 1.0);
+        let mut rng = Rng::new(11);
+        let est = mc_quantized_recall(&cfg, 0.3, 50, &mut rng);
+        assert_eq!(est.recall, 1.0);
+    }
+
+    #[test]
+    fn analytic_model_matches_monte_carlo() {
+        // The headline cross-check: |model − MC| within 4·SE + 1.5%.
+        let mut rng = Rng::new(0xFA57_2026);
+        for &(n, k, b, kp, sigma, trials) in &[
+            (4_096u64, 64u64, 256u64, 1u64, 0.05f64, 500u64),
+            (4_096, 128, 128, 2, 0.1, 400),
+            (8_192, 64, 512, 1, 0.02, 400),
+            (4_096, 64, 128, 1, 0.15, 400),
+        ] {
+            let cfg = RecallConfig::new(n, k, b, kp);
+            let model = perturbed_recall(&cfg, sigma);
+            let mc = mc_quantized_recall(&cfg, sigma, trials, &mut rng);
+            let tol = 4.0 * mc.std_error.max(1e-6) + 0.015;
+            assert!(
+                (model - mc.recall).abs() < tol,
+                "cfg={cfg:?} σ={sigma}: model={model:.4} mc={:.4}±{:.4}",
+                mc.recall,
+                mc.std_error
+            );
+        }
+    }
+
+    #[test]
+    fn mc_at_sigma_zero_matches_theorem_1() {
+        let cfg = RecallConfig::new(4_096, 64, 256, 1);
+        let mut rng = Rng::new(7);
+        let est = mc_quantized_recall(&cfg, 0.0, 600, &mut rng);
+        let exact = expected_recall(&cfg);
+        assert!(
+            (est.recall - exact).abs() < 4.0 * est.std_error.max(1e-6) + 5e-3,
+            "mc={} exact={exact}",
+            est.recall
+        );
+    }
+
+    #[test]
+    fn mc_deterministic_given_seed() {
+        let cfg = RecallConfig::new(2_048, 32, 128, 1);
+        let a = mc_quantized_recall(&cfg, 0.05, 100, &mut Rng::new(5));
+        let b = mc_quantized_recall(&cfg, 0.05, 100, &mut Rng::new(5));
+        assert_eq!(a.recall, b.recall);
+        assert_eq!(a.std_error, b.std_error);
+    }
+
+    #[test]
+    fn dtype_noise_barely_dents_practical_configs() {
+        // f16 noise (2⁻¹¹) is negligible at paper scales; int8 costs a
+        // visible but small margin that planning must absorb.
+        let cfg = RecallConfig::new(65_536, 256, 2_048, 2);
+        let base = expected_recall(&cfg);
+        let r_f16 = quantized_recall(&cfg, Dtype::F16, 256);
+        let r_i8 = quantized_recall(&cfg, Dtype::I8, 256);
+        assert!((r_f16 - base).abs() < 1e-3, "f16 {r_f16} vs {base}");
+        assert!(r_i8 <= base + 1e-6, "int8 {r_i8} vs {base}");
+        assert!(r_i8 > base - 0.05, "int8 should not crater recall: {r_i8} vs {base}");
+    }
+
+    #[test]
+    fn prop_perturbed_recall_well_behaved() {
+        property("perturbed recall in [0,1], no better than exact", 25, |g| {
+            let n = *g.choose(&[4_096u64, 16_384, 65_536]);
+            let b = *g.choose(&[64u64, 256, 1_024]);
+            let k = *g.choose(&[32u64, 128, 512]);
+            let kp = g.usize_in(1..=4) as u64;
+            if n % b != 0 || k > n {
+                return;
+            }
+            let sigma = g.usize_in(0..=250) as f64 / 1000.0;
+            let cfg = RecallConfig::new(n, k, b, kp);
+            let r = perturbed_recall(&cfg, sigma);
+            assert!((0.0..=1.0).contains(&r), "r={r}");
+            assert!(
+                r <= expected_recall(&cfg) + 0.02,
+                "noise should not beat the noiseless model: {r} vs {}",
+                expected_recall(&cfg)
+            );
+        });
+    }
+}

@@ -1,12 +1,12 @@
-//! The shard-store binary format (version 1) and its JSON manifest.
+//! The shard-store binary format (versions 1 and 2) and its JSON manifest.
 //!
 //! Layout of a store file (all integers little-endian):
 //!
 //! ```text
 //! offset 0                              64-byte fixed header
 //!   [0..8)    magic  b"FASTKSTO"
-//!   [8..12)   format version   u32  (= 1)
-//!   [12..16)  dtype            u32  (1 = f32 little-endian)
+//!   [8..12)   format version   u32  (1 or 2)
+//!   [12..16)  dtype            u32  (1 = f32le; v2 adds 2 = f16le, 3 = int8)
 //!   [16..24)  d                u64  row dimensionality
 //!   [24..32)  shards           u64
 //!   [32..40)  shard_size       u64  rows per shard
@@ -14,19 +14,32 @@
 //!   [48..56)  seed             u64  synthetic-generator provenance
 //!   [56..64)  reserved (zero)
 //! offset 64                             shard region table
-//!   shards x { offset u64, len u64, checksum u64 }   (24 bytes each)
-//! offset round_up(64 + shards*24, region_align)      shard regions
-//!   shard 0: shard_size * d f32le values, zero-padded to region_align
-//!   shard 1: ...
+//!   shards x regions_per_shard x { offset u64, len u64, checksum u64 }
+//! offset round_up(64 + entries*24, region_align)      shard regions
+//!   shard 0 data:   shard_size * d elements, zero-padded to region_align
+//!   shard 0 scales: shard_size f32le row scales (int8 dtype only)
+//!   shard 1 data:   ...
 //! ```
+//!
+//! Version 1 (the original format) is exactly the above with dtype fixed
+//! to f32le and one region per shard. Version 2 adds two quantized row
+//! encodings: `f16le` (2 bytes/element, IEEE binary16) and `int8`
+//! (1 byte/element two's-complement codes under symmetric absmax scaling,
+//! plus a second region per shard holding one f32le scale per row). The
+//! region table interleaves per shard — `[data_0, scales_0, data_1, ...]`
+//! for int8 — so a shard's bytes stay contiguous for sequential streaming.
+//! Scale regions get the same alignment, zero padding, and checksum
+//! treatment as data regions; a v2 f32le file is byte-for-byte a v1 file
+//! except for the version word.
 //!
 //! Every region starts on a `region_align` (64-byte — one cache line, the
 //! widest SIMD vector) boundary, so a page-aligned `mmap` base plus any
-//! region offset is always a validly aligned `&[f32]`, and a tile of rows
-//! never begins mid-cache-line. The per-region checksum (FNV-1a 64 over
-//! the *padded* region bytes, padding included) makes any bit corruption —
-//! data or padding — a loud open-time error. The file length is exact by
-//! construction; trailing or missing bytes are detected as corruption.
+//! region offset is always a validly aligned element slice, and a tile of
+//! rows never begins mid-cache-line. The per-region checksum (FNV-1a 64
+//! over the *padded* region bytes, padding included) makes any bit
+//! corruption — data, scales, or padding — a loud open-time error. The
+//! file length is exact by construction; trailing or missing bytes are
+//! detected as corruption.
 //!
 //! A store is two files: `<path>` (the binary above) and
 //! `<path>.manifest.json`, a small human-readable manifest carrying the
@@ -36,9 +49,10 @@
 //! one without the other.
 //!
 //! **Version policy:** the header leads with magic + version; readers
-//! accept exactly the versions they know (currently: 1) and reject
-//! everything else at open — never a best-effort parse. Any layout change
-//! (field, alignment, dtype, checksum algorithm) bumps
+//! accept exactly the versions they know (currently: 1 and 2) and reject
+//! everything else at open — never a best-effort parse. v1 files keep
+//! opening byte-for-byte as before; the writer emits v2. Any further
+//! layout change (field, alignment, dtype, checksum algorithm) bumps
 //! [`FORMAT_VERSION`]; old binaries then refuse new stores and vice
 //! versa, loudly, which is the intended failure mode for a serving
 //! system.
@@ -52,20 +66,114 @@ use crate::util::round_up;
 
 /// File magic: the first 8 bytes of every fastk shard store.
 pub const MAGIC: [u8; 8] = *b"FASTKSTO";
-/// Current (and only) format version this build reads and writes.
-pub const FORMAT_VERSION: u32 = 1;
-/// The only dtype defined so far: little-endian `f32` rows.
+/// The version this build writes (readers also accept [`FORMAT_VERSION_V1`]).
+pub const FORMAT_VERSION: u32 = 2;
+/// The original format version: f32le rows, one region per shard.
+pub const FORMAT_VERSION_V1: u32 = 1;
+/// Little-endian `f32` rows (the only dtype v1 defines).
 pub const DTYPE_F32LE: u32 = 1;
+/// IEEE binary16 rows (v2).
+pub const DTYPE_F16LE: u32 = 2;
+/// Symmetric-absmax int8 rows with a per-row f32le scale region (v2).
+pub const DTYPE_INT8: u32 = 3;
 /// Region alignment in bytes: one cache line / widest SIMD vector, so a
-/// mapped region is always a validly aligned `&[f32]` whose tiles never
-/// start mid-line.
+/// mapped region is always a validly aligned element slice whose tiles
+/// never start mid-line.
 pub const REGION_ALIGN: u64 = 64;
 /// Size of the fixed header preceding the region table.
 pub const FIXED_HEADER_BYTES: usize = 64;
 /// Size of one region-table entry.
 pub const REGION_ENTRY_BYTES: usize = 24;
 
-/// One shard's row region in the file.
+/// Row element encoding of a store (the header's dtype field, typed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// 4 bytes/element, exact — the v1 encoding and the v2 default.
+    F32,
+    /// 2 bytes/element IEEE binary16, round-to-nearest-even; widening back
+    /// to f32 is exact, so no Stage-2 rescore is needed.
+    F16,
+    /// 1 byte/element symmetric-absmax codes + one f32 scale per row;
+    /// Stage-1 scores are approximate and candidates are re-scored in
+    /// exact f32 ([`crate::store::quant`]).
+    I8,
+}
+
+impl Dtype {
+    /// All encodings, in dtype-code order.
+    pub const ALL: [Dtype; 3] = [Dtype::F32, Dtype::F16, Dtype::I8];
+
+    /// The on-disk dtype code.
+    pub fn code(self) -> u32 {
+        match self {
+            Dtype::F32 => DTYPE_F32LE,
+            Dtype::F16 => DTYPE_F16LE,
+            Dtype::I8 => DTYPE_INT8,
+        }
+    }
+
+    /// Decode an on-disk dtype code.
+    pub fn from_code(code: u32) -> Option<Dtype> {
+        match code {
+            DTYPE_F32LE => Some(Dtype::F32),
+            DTYPE_F16LE => Some(Dtype::F16),
+            DTYPE_INT8 => Some(Dtype::I8),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored row element.
+    pub fn elem_bytes(self) -> u64 {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F16 => 2,
+            Dtype::I8 => 1,
+        }
+    }
+
+    /// Canonical spelling — used by the manifest, `inspect`, serve
+    /// configs, and metrics.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32le",
+            Dtype::F16 => "f16le",
+            Dtype::I8 => "int8",
+        }
+    }
+
+    /// Parse an operator-facing spelling (CLI / config). Accepts the
+    /// canonical names plus the obvious shorthands.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" | "f32le" => Some(Dtype::F32),
+            "f16" | "f16le" => Some(Dtype::F16),
+            "int8" | "i8" => Some(Dtype::I8),
+            _ => None,
+        }
+    }
+
+    /// True when the encoding carries a per-row scale region.
+    pub fn has_scales(self) -> bool {
+        matches!(self, Dtype::I8)
+    }
+
+    /// Regions per shard in the file: data, plus scales for int8.
+    pub fn regions_per_shard(self) -> u64 {
+        if self.has_scales() {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One region (a shard's rows, or its scales) in the file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardRegion {
     /// Byte offset of the region from the start of the file (a multiple
@@ -77,13 +185,14 @@ pub struct ShardRegion {
     pub checksum: u64,
 }
 
-/// Parsed store header: geometry plus the shard region table.
+/// Parsed store header: geometry plus the region table (interleaved
+/// `[data_0, scales_0, data_1, ...]` when the dtype has scales).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StoreHeader {
     /// Format version (see the version policy in the module docs).
     pub version: u32,
-    /// Row dtype ([`DTYPE_F32LE`]).
-    pub dtype: u32,
+    /// Row element encoding.
+    pub dtype: Dtype,
     /// Row dimensionality.
     pub d: u64,
     /// Number of shards.
@@ -94,7 +203,7 @@ pub struct StoreHeader {
     pub region_align: u64,
     /// Seed the synthetic generator used to build the store.
     pub seed: u64,
-    /// Per-shard regions, in shard order.
+    /// All regions in file order.
     pub regions: Vec<ShardRegion>,
 }
 
@@ -104,9 +213,30 @@ impl StoreHeader {
         self.shards * self.shard_size
     }
 
-    /// Unpadded bytes of one shard's rows.
+    /// Unpadded bytes of one shard's row data.
     pub fn shard_data_bytes(&self) -> u64 {
-        self.shard_size * self.d * 4
+        self.shard_size * self.d * self.dtype.elem_bytes()
+    }
+
+    /// Unpadded bytes of one shard's scale region (0 unless int8).
+    pub fn shard_scale_bytes(&self) -> u64 {
+        if self.dtype.has_scales() {
+            self.shard_size * 4
+        } else {
+            0
+        }
+    }
+
+    /// Shard `s`'s data region.
+    pub fn data_region(&self, s: usize) -> &ShardRegion {
+        &self.regions[s * self.dtype.regions_per_shard() as usize]
+    }
+
+    /// Shard `s`'s scale region (int8 only).
+    pub fn scale_region(&self, s: usize) -> Option<&ShardRegion> {
+        self.dtype
+            .has_scales()
+            .then(|| &self.regions[s * 2 + 1])
     }
 }
 
@@ -160,48 +290,93 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 }
 
 /// The computed layout every writer and reader agrees on: region offsets,
-/// padded lengths, and the exact file size.
+/// padded lengths, and the exact file size. Shards are laid out
+/// contiguously: shard `s` occupies `[data_offset(s), data_offset(s) +
+/// data_len + scale_len)`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layout {
-    /// Byte offset of shard 0's region.
+    /// Byte offset of shard 0's data region.
     pub first_region: u64,
-    /// Padded byte length of every region (all shards are the same shape).
-    pub region_len: u64,
+    /// Padded byte length of every shard's data region.
+    pub data_len: u64,
+    /// Padded byte length of every shard's scale region (0 unless int8).
+    pub scale_len: u64,
     /// Exact total file size.
     pub file_len: u64,
 }
 
-/// Compute the v1 layout for a `(shards, shard_size, d)` geometry.
-pub fn layout(shards: u64, shard_size: u64, d: u64) -> Result<Layout> {
+impl Layout {
+    /// Bytes from one shard's data region to the next shard's.
+    pub fn shard_stride(&self) -> u64 {
+        self.data_len + self.scale_len
+    }
+
+    /// Byte offset of shard `s`'s data region.
+    pub fn data_offset(&self, s: u64) -> u64 {
+        self.first_region + s * self.shard_stride()
+    }
+
+    /// Byte offset of shard `s`'s scale region (int8 layouts only).
+    pub fn scale_offset(&self, s: u64) -> u64 {
+        debug_assert!(self.scale_len > 0, "dtype has no scale regions");
+        self.data_offset(s) + self.data_len
+    }
+}
+
+/// Compute the layout for a `(shards, shard_size, d, dtype)` geometry.
+pub fn layout(shards: u64, shard_size: u64, d: u64, dtype: Dtype) -> Result<Layout> {
     ensure!(shards > 0 && shard_size > 0 && d > 0, "empty store geometry");
+    let entries = shards
+        .checked_mul(dtype.regions_per_shard())
+        .context("region table size overflow")?;
     let table_end = FIXED_HEADER_BYTES as u64
-        + shards
+        + entries
             .checked_mul(REGION_ENTRY_BYTES as u64)
             .context("region table size overflow")?;
     let first_region = round_up(table_end as usize, REGION_ALIGN as usize) as u64;
     let data = shard_size
         .checked_mul(d)
-        .and_then(|v| v.checked_mul(4))
+        .and_then(|v| v.checked_mul(dtype.elem_bytes()))
         .context("shard byte size overflow")?;
-    let region_len = round_up(data as usize, REGION_ALIGN as usize) as u64;
+    let data_len = round_up(data as usize, REGION_ALIGN as usize) as u64;
+    let scale_len = if dtype.has_scales() {
+        round_up((shard_size * 4) as usize, REGION_ALIGN as usize) as u64
+    } else {
+        0
+    };
+    let stride = data_len
+        .checked_add(scale_len)
+        .context("store size overflow")?;
     let file_len = first_region
-        .checked_add(shards.checked_mul(region_len).context("store size overflow")?)
+        .checked_add(shards.checked_mul(stride).context("store size overflow")?)
         .context("store size overflow")?;
     Ok(Layout {
         first_region,
-        region_len,
+        data_len,
+        scale_len,
         file_len,
     })
 }
 
+/// The layout a header implies.
+pub fn layout_for(h: &StoreHeader) -> Result<Layout> {
+    layout(h.shards, h.shard_size, h.d, h.dtype)
+}
+
 /// Encode the fixed header + region table (the file's first
-/// `round_up(64 + shards*24, REGION_ALIGN)` bytes, padding included).
+/// `round_up(64 + entries*24, REGION_ALIGN)` bytes, padding included).
 pub fn encode_header(h: &StoreHeader) -> Vec<u8> {
-    let lay = layout(h.shards, h.shard_size, h.d).expect("valid geometry");
+    assert!(
+        h.version == FORMAT_VERSION || (h.version == FORMAT_VERSION_V1 && h.dtype == Dtype::F32),
+        "v{} cannot encode dtype {}",
+        h.version,
+        h.dtype
+    );
+    let lay = layout_for(h).expect("valid geometry");
     let mut out = Vec::with_capacity(lay.first_region as usize);
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&h.version.to_le_bytes());
-    out.extend_from_slice(&h.dtype.to_le_bytes());
+    out.extend_from_slice(&h.dtype.code().to_le_bytes());
     out.extend_from_slice(&h.d.to_le_bytes());
     out.extend_from_slice(&h.shards.to_le_bytes());
     out.extend_from_slice(&h.shard_size.to_le_bytes());
@@ -227,9 +402,9 @@ fn read_u64(bytes: &[u8], at: usize) -> u64 {
 
 /// Parse and fully validate a store header from the file's bytes. Every
 /// corruption mode is a *distinct, loud error* — truncation, bad magic,
-/// version skew, geometry nonsense, or a region table that disagrees with
-/// the computed layout. Checksum verification is separate (the loader
-/// does it over the mapped regions).
+/// version skew, dtype skew, geometry nonsense, or a region table that
+/// disagrees with the computed layout. Checksum verification is separate
+/// (the loader does it over the mapped regions).
 pub fn parse_header(bytes: &[u8]) -> Result<StoreHeader> {
     ensure!(
         bytes.len() >= FIXED_HEADER_BYTES,
@@ -244,14 +419,23 @@ pub fn parse_header(bytes: &[u8]) -> Result<StoreHeader> {
     );
     let version = read_u32(bytes, 8);
     ensure!(
-        version == FORMAT_VERSION,
-        "unsupported store format version {version} (this build reads only v{FORMAT_VERSION}; \
-         rebuild the store with this binary's `fastk build-index`)"
+        version == FORMAT_VERSION || version == FORMAT_VERSION_V1,
+        "unsupported store format version {version} (this build reads only \
+         v{FORMAT_VERSION_V1} and v{FORMAT_VERSION}; rebuild the store with this \
+         binary's `fastk build-index`)"
     );
-    let dtype = read_u32(bytes, 12);
+    let dtype_code = read_u32(bytes, 12);
+    let dtype = match Dtype::from_code(dtype_code) {
+        Some(dt) => dt,
+        None => bail!(
+            "unsupported store dtype {dtype_code} (this build reads f32le = \
+             {DTYPE_F32LE}, f16le = {DTYPE_F16LE}, int8 = {DTYPE_INT8})"
+        ),
+    };
     ensure!(
-        dtype == DTYPE_F32LE,
-        "unsupported store dtype {dtype} (this build reads only f32le = {DTYPE_F32LE})"
+        version != FORMAT_VERSION_V1 || dtype == Dtype::F32,
+        "unsupported store dtype {dtype_code} for format v1 (v1 stores are \
+         f32le = {DTYPE_F32LE} only; quantized rows require v{FORMAT_VERSION})"
     );
     let d = read_u64(bytes, 16);
     let shards = read_u64(bytes, 24);
@@ -271,7 +455,7 @@ pub fn parse_header(bytes: &[u8]) -> Result<StoreHeader> {
         region_align == REGION_ALIGN,
         "store region alignment {region_align} != the v{FORMAT_VERSION} alignment {REGION_ALIGN}"
     );
-    let lay = layout(shards, shard_size, d)?;
+    let lay = layout(shards, shard_size, d, dtype)?;
     ensure!(
         bytes.len() as u64 == lay.file_len,
         "store file length {} != the {} bytes its header implies \
@@ -279,31 +463,38 @@ pub fn parse_header(bytes: &[u8]) -> Result<StoreHeader> {
         bytes.len(),
         lay.file_len
     );
-    let mut regions = Vec::with_capacity(shards as usize);
+    let per_shard = dtype.regions_per_shard() as usize;
+    let mut regions = Vec::with_capacity(shards as usize * per_shard);
     for s in 0..shards {
-        let at = FIXED_HEADER_BYTES + (s as usize) * REGION_ENTRY_BYTES;
-        let r = ShardRegion {
-            offset: read_u64(bytes, at),
-            len: read_u64(bytes, at + 8),
-            checksum: read_u64(bytes, at + 16),
-        };
-        let want_offset = lay.first_region + s * lay.region_len;
-        ensure!(
-            r.offset == want_offset && r.len == lay.region_len,
-            "shard {s} region table entry (offset {}, len {}) disagrees with the \
-             computed layout (offset {want_offset}, len {})",
-            r.offset,
-            r.len,
-            lay.region_len
-        );
-        regions.push(r);
+        for part in 0..per_shard {
+            let entry = s as usize * per_shard + part;
+            let at = FIXED_HEADER_BYTES + entry * REGION_ENTRY_BYTES;
+            let r = ShardRegion {
+                offset: read_u64(bytes, at),
+                len: read_u64(bytes, at + 8),
+                checksum: read_u64(bytes, at + 16),
+            };
+            let (kind, want_offset, want_len) = if part == 0 {
+                ("", lay.data_offset(s), lay.data_len)
+            } else {
+                ("scale ", lay.scale_offset(s), lay.scale_len)
+            };
+            ensure!(
+                r.offset == want_offset && r.len == want_len,
+                "shard {s} {kind}region table entry (offset {}, len {}) disagrees with \
+                 the computed layout (offset {want_offset}, len {want_len})",
+                r.offset,
+                r.len
+            );
+            regions.push(r);
+        }
     }
     // The pad between the region table and the first region is written as
     // zeros and carries no checksum, so it is validated here — with this,
     // every byte of the file is load-bearing: any flipped bit fails the
     // open (header checks here, region bytes via their checksums, geometry
     // skew via the manifest cross-check).
-    let table_end = FIXED_HEADER_BYTES + shards as usize * REGION_ENTRY_BYTES;
+    let table_end = FIXED_HEADER_BYTES + shards as usize * per_shard * REGION_ENTRY_BYTES;
     ensure!(
         bytes[table_end..lay.first_region as usize].iter().all(|&b| b == 0),
         "store header padding (between the region table and shard 0) is not zero: \
@@ -333,7 +524,7 @@ pub fn manifest_path(store: &Path) -> PathBuf {
 pub fn manifest_json(h: &StoreHeader) -> Json {
     Json::obj(vec![
         ("format_version", Json::num(h.version as f64)),
-        ("dtype", Json::str("f32le")),
+        ("dtype", Json::str(h.dtype.as_str())),
         ("d", Json::num(h.d as f64)),
         ("shards", Json::num(h.shards as f64)),
         ("shard_size", Json::num(h.shard_size as f64)),
@@ -384,7 +575,12 @@ pub fn check_manifest(manifest: &Json, h: &StoreHeader) -> Result<()> {
         h.seed
     );
     match manifest.get("dtype").and_then(|v| v.as_str()) {
-        Some("f32le") => Ok(()),
+        Some(s) if s == h.dtype.as_str() => Ok(()),
+        Some(s) if Dtype::parse(s).is_some() => bail!(
+            "store manifest disagrees with the binary header: dtype is {s:?} in the \
+             manifest but {} in the header",
+            h.dtype
+        ),
         Some(other) => bail!("store manifest declares unsupported dtype {other:?}"),
         None => bail!("store manifest is missing field `dtype`"),
     }
@@ -394,54 +590,136 @@ pub fn check_manifest(manifest: &Json, h: &StoreHeader) -> Result<()> {
 mod tests {
     use super::*;
 
-    fn header(shards: u64, shard_size: u64, d: u64) -> StoreHeader {
-        let lay = layout(shards, shard_size, d).unwrap();
+    fn header_with(shards: u64, shard_size: u64, d: u64, dtype: Dtype) -> StoreHeader {
+        let lay = layout(shards, shard_size, d, dtype).unwrap();
+        let mut regions = Vec::new();
+        for s in 0..shards {
+            regions.push(ShardRegion {
+                offset: lay.data_offset(s),
+                len: lay.data_len,
+                checksum: 0xdead_beef ^ s,
+            });
+            if dtype.has_scales() {
+                regions.push(ShardRegion {
+                    offset: lay.scale_offset(s),
+                    len: lay.scale_len,
+                    checksum: 0xfeed_face ^ s,
+                });
+            }
+        }
         StoreHeader {
             version: FORMAT_VERSION,
-            dtype: DTYPE_F32LE,
+            dtype,
             d,
             shards,
             shard_size,
             region_align: REGION_ALIGN,
             seed: 42,
-            regions: (0..shards)
-                .map(|s| ShardRegion {
-                    offset: lay.first_region + s * lay.region_len,
-                    len: lay.region_len,
-                    checksum: 0xdead_beef ^ s,
-                })
-                .collect(),
+            regions,
         }
+    }
+
+    fn header(shards: u64, shard_size: u64, d: u64) -> StoreHeader {
+        header_with(shards, shard_size, d, Dtype::F32)
     }
 
     /// Pad an encoded header out to the full file length so parse_header's
     /// exact-length check passes.
     fn as_file(h: &StoreHeader) -> Vec<u8> {
-        let lay = layout(h.shards, h.shard_size, h.d).unwrap();
+        let lay = layout_for(h).unwrap();
         let mut bytes = encode_header(h);
         bytes.resize(lay.file_len as usize, 0);
         bytes
     }
 
     #[test]
+    fn dtype_codes_and_spellings() {
+        for dt in Dtype::ALL {
+            assert_eq!(Dtype::from_code(dt.code()), Some(dt));
+            assert_eq!(Dtype::parse(dt.as_str()), Some(dt));
+        }
+        assert_eq!(Dtype::parse("f32"), Some(Dtype::F32));
+        assert_eq!(Dtype::parse("f16"), Some(Dtype::F16));
+        assert_eq!(Dtype::parse("i8"), Some(Dtype::I8));
+        assert_eq!(Dtype::parse("bf16"), None);
+        assert_eq!(Dtype::from_code(0), None);
+        assert_eq!(Dtype::from_code(4), None);
+        assert_eq!(
+            [4u64, 2, 1],
+            [
+                Dtype::F32.elem_bytes(),
+                Dtype::F16.elem_bytes(),
+                Dtype::I8.elem_bytes()
+            ]
+        );
+    }
+
+    #[test]
     fn layout_is_aligned_and_exact() {
-        let lay = layout(3, 100, 7).unwrap();
+        let lay = layout(3, 100, 7, Dtype::F32).unwrap();
         assert_eq!(lay.first_region % REGION_ALIGN, 0);
-        assert_eq!(lay.region_len % REGION_ALIGN, 0);
-        assert!(lay.region_len >= 100 * 7 * 4);
-        assert!(lay.region_len - 100 * 7 * 4 < REGION_ALIGN);
-        assert_eq!(lay.file_len, lay.first_region + 3 * lay.region_len);
+        assert_eq!(lay.data_len % REGION_ALIGN, 0);
+        assert!(lay.data_len >= 100 * 7 * 4);
+        assert!(lay.data_len - 100 * 7 * 4 < REGION_ALIGN);
+        assert_eq!(lay.scale_len, 0);
+        assert_eq!(lay.file_len, lay.first_region + 3 * lay.data_len);
         // The table for 3 shards ends at 64 + 72 = 136 -> first region 192.
         assert_eq!(lay.first_region, 192);
     }
 
     #[test]
-    fn header_round_trips() {
-        for (s, n, d) in [(1u64, 64u64, 8u64), (4, 1000, 13), (7, 16, 1)] {
-            let h = header(s, n, d);
-            let parsed = parse_header(&as_file(&h)).unwrap();
-            assert_eq!(parsed, h, "({s}, {n}, {d})");
+    fn quantized_layouts_shrink_and_interleave() {
+        let f32l = layout(3, 100, 7, Dtype::F32).unwrap();
+        let f16l = layout(3, 100, 7, Dtype::F16).unwrap();
+        let i8l = layout(3, 100, 7, Dtype::I8).unwrap();
+        // f16 halves and int8 quarters the unpadded data bytes.
+        assert!(f16l.data_len >= 100 * 7 * 2 && f16l.data_len - 100 * 7 * 2 < REGION_ALIGN);
+        assert!(i8l.data_len >= 100 * 7 && i8l.data_len - 100 * 7 < REGION_ALIGN);
+        // f16 has no scales and the same table size as f32.
+        assert_eq!(f16l.scale_len, 0);
+        assert_eq!(f16l.first_region, f32l.first_region);
+        // int8 has one scale region per shard, interleaved after the data,
+        // and a table twice the size (64 + 6*24 = 208 -> 256).
+        assert!(i8l.scale_len >= 100 * 4 && i8l.scale_len - 100 * 4 < REGION_ALIGN);
+        assert_eq!(i8l.first_region, 256);
+        assert_eq!(i8l.scale_offset(0), i8l.data_offset(0) + i8l.data_len);
+        assert_eq!(i8l.data_offset(1), i8l.scale_offset(0) + i8l.scale_len);
+        assert_eq!(
+            i8l.file_len,
+            i8l.first_region + 3 * (i8l.data_len + i8l.scale_len)
+        );
+        // Everything stays 64-byte aligned.
+        for s in 0..3 {
+            assert_eq!(i8l.data_offset(s) % REGION_ALIGN, 0);
+            assert_eq!(i8l.scale_offset(s) % REGION_ALIGN, 0);
         }
+    }
+
+    #[test]
+    fn header_round_trips() {
+        for dtype in Dtype::ALL {
+            for (s, n, d) in [(1u64, 64u64, 8u64), (4, 1000, 13), (7, 16, 1)] {
+                let h = header_with(s, n, d, dtype);
+                let parsed = parse_header(&as_file(&h)).unwrap();
+                assert_eq!(parsed, h, "({s}, {n}, {d}, {dtype})");
+            }
+        }
+    }
+
+    #[test]
+    fn v1_headers_still_parse() {
+        // A v1 file (old writer output) parses exactly as before: version
+        // 1, f32le, one region per shard.
+        let mut h = header(2, 64, 8);
+        h.version = FORMAT_VERSION_V1;
+        let parsed = parse_header(&as_file(&h)).unwrap();
+        assert_eq!(parsed, h);
+        // A v1 header with a quantized dtype is rejected — quantized rows
+        // are a v2 feature, and v1 bytes claiming otherwise are corrupt.
+        let mut bad = as_file(&h);
+        bad[12] = DTYPE_INT8 as u8;
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("dtype") && err.contains("v1"), "{err}");
     }
 
     #[test]
@@ -480,9 +758,17 @@ mod tests {
 
         // Unknown dtype.
         let mut bad = good.clone();
-        bad[12] = 3;
+        bad[12] = 7;
         let err = parse_header(&bad).unwrap_err().to_string();
         assert!(err.contains("dtype"), "{err}");
+
+        // Known dtype whose layout disagrees with the file length (dtype
+        // skew: an f32 file relabeled int8).
+        let mut bad = good.clone();
+        bad[12] = DTYPE_INT8 as u8;
+        bad[8] = FORMAT_VERSION as u8;
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("length"), "{err}");
 
         // Region table entry drifted from the computed layout.
         let mut bad = good.clone();
@@ -499,13 +785,26 @@ mod tests {
         // The zero pad between the region table and shard 0 is validated
         // too (it carries no checksum, and every file byte must be
         // load-bearing for corruption to always be loud).
-        let lay = layout(2, 64, 8).unwrap();
+        let lay = layout(2, 64, 8, Dtype::F32).unwrap();
         let table_end = FIXED_HEADER_BYTES + 2 * REGION_ENTRY_BYTES;
         assert!((table_end as u64) < lay.first_region, "geometry has a pad to corrupt");
         let mut bad = good.clone();
         bad[table_end] = 0xff;
         let err = parse_header(&bad).unwrap_err().to_string();
         assert!(err.contains("padding"), "{err}");
+    }
+
+    #[test]
+    fn scale_region_table_corruption_is_distinct() {
+        let h = header_with(2, 64, 8, Dtype::I8);
+        let good = as_file(&h);
+        assert!(parse_header(&good).is_ok());
+        // Entry 1 is shard 0's scale region: drift its offset.
+        let mut bad = good.clone();
+        bad[FIXED_HEADER_BYTES + REGION_ENTRY_BYTES] ^= 0x40;
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("scale region table"), "{err}");
+        assert!(err.contains("shard 0"), "{err}");
     }
 
     #[test]
@@ -518,10 +817,10 @@ mod tests {
         // d disagreement between manifest and header.
         let mut skewed = h.clone();
         skewed.d = 16;
-        let lay = layout(2, 64, 16).unwrap();
+        let lay = layout(2, 64, 16, Dtype::F32).unwrap();
         for (s, r) in skewed.regions.iter_mut().enumerate() {
-            r.offset = lay.first_region + s as u64 * lay.region_len;
-            r.len = lay.region_len;
+            r.offset = lay.data_offset(s as u64);
+            r.len = lay.data_len;
         }
         let err = check_manifest(&parsed, &skewed).unwrap_err().to_string();
         assert!(err.contains("disagrees"), "{err}");
@@ -532,6 +831,31 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn manifest_dtype_skew_is_loud() {
+        for dtype in Dtype::ALL {
+            let h = header_with(2, 64, 8, dtype);
+            let parsed = Json::parse(&manifest_json(&h).to_string()).unwrap();
+            check_manifest(&parsed, &h).unwrap();
+            // Same manifest against a header with a different dtype.
+            let other = Dtype::ALL[(dtype.code() as usize) % 3]; // next dtype cyclically
+            assert_ne!(other, dtype);
+            let mut skewed = header_with(2, 64, 8, other);
+            skewed.version = h.version;
+            let err = check_manifest(&parsed, &skewed).unwrap_err().to_string();
+            assert!(err.contains("dtype"), "{err}");
+            assert!(err.contains("disagrees"), "{err}");
+        }
+        // A dtype string this build has never heard of is its own error.
+        let h = header(1, 64, 8);
+        let mut m = manifest_json(&h).to_string();
+        m = m.replace("f32le", "bf16le");
+        let err = check_manifest(&Json::parse(&m).unwrap(), &h)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unsupported dtype"), "{err}");
     }
 
     #[test]

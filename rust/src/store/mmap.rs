@@ -213,6 +213,44 @@ impl Mmap {
         // the host's native f32 here.
         unsafe { std::slice::from_raw_parts(ptr as *const f32, floats) }
     }
+
+    /// Reinterpret `elems` little-endian `u16` values (f16 bit patterns)
+    /// starting at `byte_offset` as a slice, in place. Same contract as
+    /// [`Mmap::f32_slice`]: panics on misalignment or out-of-bounds.
+    pub fn u16_slice(&self, byte_offset: usize, elems: usize) -> &[u16] {
+        let bytes = self.bytes();
+        let end = byte_offset
+            .checked_add(elems.checked_mul(2).expect("u16 region size overflow"))
+            .expect("u16 region end overflow");
+        assert!(
+            end <= bytes.len(),
+            "u16 region [{byte_offset}, {end}) exceeds view of {} bytes",
+            bytes.len()
+        );
+        let ptr = unsafe { crate::lane_ptr!(bytes, byte_offset, elems * 2) };
+        assert_eq!(
+            ptr.align_offset(std::mem::align_of::<u16>()),
+            0,
+            "u16 region at byte offset {byte_offset} is misaligned"
+        );
+        // Safety: in-bounds, aligned, immutable backing (as f32_slice).
+        unsafe { std::slice::from_raw_parts(ptr as *const u16, elems) }
+    }
+
+    /// Reinterpret `elems` bytes starting at `byte_offset` as int8 codes,
+    /// in place. Always aligned (align 1); panics on out-of-bounds.
+    pub fn i8_slice(&self, byte_offset: usize, elems: usize) -> &[i8] {
+        let bytes = self.bytes();
+        let end = byte_offset.checked_add(elems).expect("i8 region end overflow");
+        assert!(
+            end <= bytes.len(),
+            "i8 region [{byte_offset}, {end}) exceeds view of {} bytes",
+            bytes.len()
+        );
+        let ptr = unsafe { crate::lane_ptr!(bytes, byte_offset, elems) };
+        // Safety: in-bounds, align 1, immutable backing (as f32_slice).
+        unsafe { std::slice::from_raw_parts(ptr as *const i8, elems) }
+    }
 }
 
 impl Drop for Mmap {
@@ -285,6 +323,33 @@ mod tests {
             assert_eq!(m.f32_slice(8, 4), &values[2..6]);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn typed_slices_round_trip_values() {
+        let mut bytes = Vec::new();
+        let u16s: Vec<u16> = (0..32u16).map(|i| i.wrapping_mul(2557)).collect();
+        for v in &u16s {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let i8s: Vec<i8> = (0..64).map(|i| (i * 5 - 128) as i8).collect();
+        bytes.extend(i8s.iter().map(|&c| c as u8));
+        let path = tmp_file("typed", &bytes);
+        for m in [Mmap::map(&path).unwrap(), Mmap::read(&path).unwrap()] {
+            assert_eq!(m.u16_slice(0, u16s.len()), &u16s[..]);
+            assert_eq!(m.u16_slice(4, 4), &u16s[2..6]);
+            assert_eq!(m.i8_slice(64, i8s.len()), &i8s[..]);
+            assert_eq!(m.i8_slice(67, 5), &i8s[3..8]);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds view")]
+    fn u16_slice_out_of_bounds_panics() {
+        let path = tmp_file("oob16", &[0u8; 16]);
+        let m = Mmap::read(&path).unwrap();
+        let _ = m.u16_slice(10, 4);
     }
 
     #[test]

@@ -8,21 +8,27 @@
 //! style of log/storage engines (squirrel-json is the exemplar: validate
 //! structure a single time at open, then read in place forever):
 //!
-//! - [`format`] — the versioned v1 binary layout (magic + header, 64-byte
-//!   aligned per-shard row regions, per-region FNV-1a checksums) and its
-//!   JSON manifest;
+//! - [`format`] — the versioned binary layout (magic + header, 64-byte
+//!   aligned per-shard regions, per-region FNV-1a checksums) and its JSON
+//!   manifest; v1 is f32 rows, v2 adds the [`Dtype`] field with quantized
+//!   `f16le` / `int8` row encodings (int8 carries a per-row scale region);
+//! - [`quant`] — the row quantizers/dequantizers (symmetric absmax int8,
+//!   round-to-nearest-even f16) shared by the writer and the in-memory
+//!   synthetic path;
 //! - [`writer`] — [`build_store`](writer::build_store), the streaming
-//!   builder behind `fastk build-index`, plus
-//!   [`generate_shard_rows`](writer::generate_shard_rows), the one
-//!   per-shard-seed definition of the synthetic database;
+//!   builder behind `fastk build-index` (quantizing on the fly for v2
+//!   dtypes), plus [`generate_shard_rows`](writer::generate_shard_rows),
+//!   the one per-shard-seed definition of the synthetic database;
 //! - [`mmap`] — the minimal `mmap`/`munmap` FFI wrapper with a portable
 //!   `std::fs::read` fallback behind the same API;
 //! - [`reader`] — [`ShardStore`](reader::ShardStore): open, validate
 //!   *once* (header, manifest cross-check, optional checksums), then hand
-//!   out per-shard [`RowSource`]s that point straight into the mapping;
-//! - [`RowSource`] — the abstraction the backends score through: an owned
-//!   `Vec<f32>` or a mapped region, behind one `&[f32]` view, so the SIMD
-//!   kernels run unchanged (and bit-identically) over either.
+//!   out per-shard [`ShardData`] payloads that point straight into the
+//!   mapping;
+//! - [`RowSource`] / [`F16Source`] / [`I8Source`] / [`ShardData`] — the
+//!   abstractions the backends score through: owned vectors or mapped
+//!   regions behind one typed view per encoding, so the SIMD kernels run
+//!   unchanged (and bit-identically) over either.
 //!
 //! Corruption is never a fallback: a truncated file, bad magic, version
 //! skew, checksum mismatch, or manifest/header disagreement each fail the
@@ -30,14 +36,16 @@
 
 pub mod format;
 pub mod mmap;
+pub mod quant;
 pub mod reader;
 pub mod writer;
 
 use std::sync::Arc;
 
+pub use format::Dtype;
 pub use mmap::Mmap;
 pub use reader::{OpenOptions, ShardStore, StoreInfo};
-pub use writer::{build_store, generate_shard_rows, shard_seed, StoreSpec};
+pub use writer::{build_store, build_store_v1, generate_shard_rows, shard_seed, StoreSpec};
 
 /// Where a backend's database rows live: an owned heap vector (synthetic
 /// or test data) or a region of a memory-mapped store file. Cloning is
@@ -125,6 +133,232 @@ impl From<Arc<Vec<f32>>> for RowSource {
     }
 }
 
+/// f16 row codes for one shard (row-major, `d` binary16 values per row),
+/// owned or mapped — the 2-byte analogue of [`RowSource`].
+#[derive(Clone, Debug)]
+pub enum F16Source {
+    /// Codes owned on the heap.
+    Owned(Arc<Vec<u16>>),
+    /// A validated region of a store mapping.
+    Mapped {
+        map: Arc<Mmap>,
+        byte_offset: usize,
+        elems: usize,
+    },
+}
+
+impl F16Source {
+    /// The codes as one contiguous slice.
+    pub fn codes(&self) -> &[u16] {
+        match self {
+            F16Source::Owned(v) => v,
+            F16Source::Mapped {
+                map,
+                byte_offset,
+                elems,
+            } => map.u16_slice(*byte_offset, *elems),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            F16Source::Owned(v) => v.len(),
+            F16Source::Mapped { elems, .. } => *elems,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// int8 row codes for one shard, owned or mapped — the 1-byte analogue of
+/// [`RowSource`]. The per-row scales travel separately (they are f32, so
+/// a plain [`RowSource`] holds them).
+#[derive(Clone, Debug)]
+pub enum I8Source {
+    /// Codes owned on the heap.
+    Owned(Arc<Vec<i8>>),
+    /// A validated region of a store mapping.
+    Mapped {
+        map: Arc<Mmap>,
+        byte_offset: usize,
+        elems: usize,
+    },
+}
+
+impl I8Source {
+    /// The codes as one contiguous slice.
+    pub fn codes(&self) -> &[i8] {
+        match self {
+            I8Source::Owned(v) => v,
+            I8Source::Mapped {
+                map,
+                byte_offset,
+                elems,
+            } => map.i8_slice(*byte_offset, *elems),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            I8Source::Owned(v) => v.len(),
+            I8Source::Mapped { elems, .. } => *elems,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One shard's scoring payload in its stored element encoding — what the
+/// backends and the fused engine actually stream in Stage 1. `F32` wraps
+/// the original [`RowSource`] unchanged; the quantized variants carry the
+/// code stream (and, for int8, the per-row scales). Cloning is cheap
+/// (every variant is `Arc`-backed).
+#[derive(Clone, Debug)]
+pub enum ShardData {
+    /// Exact f32 rows (the v1 encoding and the v2 default).
+    F32(RowSource),
+    /// binary16 rows; widening to f32 is exact, so Stage-1 scores equal
+    /// the exact f32 dot products of the stored rows.
+    F16(F16Source),
+    /// Symmetric-absmax int8 rows + one f32 scale per row. Stage-1 scores
+    /// are approximate; candidates must be re-scored in exact f32
+    /// ([`ShardData::needs_rescore`]).
+    I8 { codes: I8Source, scales: RowSource },
+}
+
+impl ShardData {
+    /// The element encoding.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            ShardData::F32(_) => Dtype::F32,
+            ShardData::F16(_) => Dtype::F16,
+            ShardData::I8 { .. } => Dtype::I8,
+        }
+    }
+
+    /// Total stored row elements (`rows · d`).
+    pub fn elems(&self) -> usize {
+        match self {
+            ShardData::F32(v) => v.len(),
+            ShardData::F16(v) => v.len(),
+            ShardData::I8 { codes, .. } => codes.len(),
+        }
+    }
+
+    /// True when Stage-1 scores under this encoding are approximate and
+    /// surviving candidates must be re-scored in exact f32 before the
+    /// Stage-2 merge. Only int8: f32 is exact outright, and f16 widening
+    /// is exact so Stage-1 scores already *are* the exact f32 dot
+    /// products of the stored rows.
+    pub fn needs_rescore(&self) -> bool {
+        matches!(self, ShardData::I8 { .. })
+    }
+
+    /// True when the payload is served out of a live file mapping.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            ShardData::F32(v) => v.is_mapped(),
+            ShardData::F16(F16Source::Mapped { map, .. }) => map.is_mapped(),
+            ShardData::I8 {
+                codes: I8Source::Mapped { map, .. },
+                ..
+            } => map.is_mapped(),
+            _ => false,
+        }
+    }
+
+    /// Quantize an f32 row source into `dtype` in memory — the synthetic
+    /// (storeless) serving path, and the one quantizer the on-disk writer
+    /// also goes through, so in-memory and store-backed serving agree bit
+    /// for bit. `F32` is a free wrap (no copy). Fails on non-finite rows,
+    /// like the writer.
+    pub fn quantize_f32(rows: RowSource, d: usize, dtype: Dtype) -> anyhow::Result<ShardData> {
+        assert!(d > 0 && rows.len() % d == 0, "rows not a multiple of d");
+        match dtype {
+            Dtype::F32 => Ok(ShardData::F32(rows)),
+            Dtype::F16 => {
+                let src = rows.rows();
+                let mut codes = vec![0u16; src.len()];
+                for (r, (row, out)) in src.chunks_exact(d).zip(codes.chunks_exact_mut(d)).enumerate()
+                {
+                    quant::quantize_row_f16(row, out)
+                        .map_err(|e| anyhow::anyhow!("row {r}: {e}"))?;
+                }
+                Ok(ShardData::F16(F16Source::Owned(Arc::new(codes))))
+            }
+            Dtype::I8 => {
+                let src = rows.rows();
+                let mut codes = vec![0i8; src.len()];
+                let mut scales = vec![0.0f32; src.len() / d];
+                for (r, (row, out)) in src.chunks_exact(d).zip(codes.chunks_exact_mut(d)).enumerate()
+                {
+                    scales[r] = quant::quantize_row_i8(row, out)
+                        .map_err(|e| anyhow::anyhow!("row {r}: {e}"))?;
+                }
+                Ok(ShardData::I8 {
+                    codes: I8Source::Owned(Arc::new(codes)),
+                    scales: RowSource::from_vec(scales),
+                })
+            }
+        }
+    }
+
+    /// Write the exact f32 values of stored row `row` into `out` (length
+    /// `d`). For f32 this is a copy; for f16 an (exact) widening; for int8
+    /// the dequantization `code · scale`. This is the row view the exact
+    /// rescore and the recall oracles score against.
+    pub fn dequantize_row(&self, d: usize, row: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), d);
+        let at = row * d;
+        match self {
+            ShardData::F32(v) => out.copy_from_slice(&v.rows()[at..at + d]),
+            ShardData::F16(v) => {
+                for (o, &h) in out.iter_mut().zip(&v.codes()[at..at + d]) {
+                    *o = crate::util::f16::f16_to_f32(h);
+                }
+            }
+            ShardData::I8 { codes, scales } => {
+                quant::dequantize_i8(&codes.codes()[at..at + d], scales.rows()[row], out);
+            }
+        }
+    }
+
+    /// Materialize every stored row as exact f32 — the oracle database for
+    /// recall measurement (the ground truth a quantized store can be
+    /// compared against is the store's *own* rows, dequantized, not the
+    /// pre-quantization input, which the file no longer carries).
+    pub fn dequantize_all(&self, d: usize) -> Vec<f32> {
+        let rows = self.elems() / d;
+        let mut out = vec![0.0f32; self.elems()];
+        for r in 0..rows {
+            self.dequantize_row(d, r, &mut out[r * d..(r + 1) * d]);
+        }
+        out
+    }
+}
+
+impl From<RowSource> for ShardData {
+    fn from(rows: RowSource) -> ShardData {
+        ShardData::F32(rows)
+    }
+}
+
+impl From<Vec<f32>> for ShardData {
+    fn from(rows: Vec<f32>) -> ShardData {
+        ShardData::F32(RowSource::from_vec(rows))
+    }
+}
+
+impl From<Arc<Vec<f32>>> for ShardData {
+    fn from(rows: Arc<Vec<f32>>) -> ShardData {
+        ShardData::F32(RowSource::Owned(rows))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +379,56 @@ mod tests {
         let rows = Arc::new(vec![5.0f32; 8]);
         let src: RowSource = rows.clone().into();
         assert_eq!(src.rows().as_ptr(), rows.as_ptr());
+    }
+
+    #[test]
+    fn shard_data_quantize_and_dequantize_round_trip() {
+        let d = 5;
+        let rows: Vec<f32> = (0..4 * d).map(|i| (i as f32 - 9.0) * 0.37).collect();
+        // f32 wraps without copying.
+        let f32d = ShardData::quantize_f32(RowSource::from_vec(rows.clone()), d, Dtype::F32)
+            .unwrap();
+        assert_eq!(f32d.dtype(), Dtype::F32);
+        assert!(!f32d.needs_rescore());
+        assert_eq!(f32d.dequantize_all(d), rows);
+        // f16 round-trips within half an f16 ulp; these magnitudes (< 8)
+        // have ulp <= 2^-8.
+        let f16d = ShardData::quantize_f32(RowSource::from_vec(rows.clone()), d, Dtype::F16)
+            .unwrap();
+        assert_eq!(f16d.dtype(), Dtype::F16);
+        assert!(!f16d.needs_rescore());
+        for (a, b) in rows.iter().zip(f16d.dequantize_all(d)) {
+            assert!((a - b).abs() <= 2.0f32.powi(-9), "{a} vs {b}");
+        }
+        // int8 round-trips within absmax/254 per element, per row.
+        let i8d = ShardData::quantize_f32(RowSource::from_vec(rows.clone()), d, Dtype::I8)
+            .unwrap();
+        assert_eq!(i8d.dtype(), Dtype::I8);
+        assert!(i8d.needs_rescore());
+        let deq = i8d.dequantize_all(d);
+        for (r, (row, drow)) in rows.chunks(d).zip(deq.chunks(d)).enumerate() {
+            let absmax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for (a, b) in row.iter().zip(drow) {
+                assert!((a - b).abs() <= absmax / 254.0 + 1e-7, "row {r}: {a} vs {b}");
+            }
+        }
+        // dequantize_row agrees with dequantize_all.
+        let mut one = vec![0.0f32; d];
+        i8d.dequantize_row(d, 2, &mut one);
+        assert_eq!(one, deq[2 * d..3 * d]);
+    }
+
+    #[test]
+    fn shard_data_rejects_non_finite_rows_with_row_context() {
+        let d = 3;
+        let rows = vec![1.0f32, 2.0, 3.0, 4.0, f32::NAN, 6.0];
+        for dtype in [Dtype::F16, Dtype::I8] {
+            let err = ShardData::quantize_f32(RowSource::from_vec(rows.clone()), d, dtype)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("row 1") && err.contains("non-finite"), "{err}");
+        }
+        // f32 stays permissive (v1 behaviour).
+        assert!(ShardData::quantize_f32(RowSource::from_vec(rows), d, Dtype::F32).is_ok());
     }
 }

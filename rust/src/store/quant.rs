@@ -1,0 +1,247 @@
+//! Row quantization for the v2 store encodings (`f16le`, `int8`).
+//!
+//! Both encodings trade Stage-1 score precision for bytes per row —
+//! Stage 1 is memory-bandwidth-bound at large `N·d`, so halving (f16) or
+//! quartering (int8) the stream is worth more than any further ALU tuning.
+//! The contracts the rest of the pipeline builds on:
+//!
+//! - **f16** stores each element as IEEE binary16, rounded to nearest-even
+//!   ([`crate::util::f16`]). Widening back to f32 is exact, so Stage-1
+//!   scores computed on widened rows *are* exact f32 dot products of the
+//!   stored rows — no Stage-2 rescore is needed.
+//! - **int8** stores symmetric absmax codes: one f32 `scale = absmax/127`
+//!   per row, `code[i] = round(x[i]/scale)` clamped to `[-127, 127]`.
+//!   Per-element round-trip error is at most `scale/2 = absmax/254`
+//!   (property-tested at the looser `absmax/127`). Stage-1 scores are
+//!   integer dot products rescaled by `row_scale · query_scale`; the
+//!   surviving candidates are re-scored in exact f32 by Stage 2.
+//! - Rows containing NaN or ±inf are **rejected at build time** — a
+//!   non-finite element would poison its row's absmax (int8) or encode to
+//!   a non-finite f16, silently corrupting every score the row touches.
+//!   The f32 encoding stays permissive, matching v1 behaviour.
+//!
+//! Edge cases pinned by tests: an all-zero row gets `scale = 0` and
+//! all-zero codes (dequantizing reproduces it exactly); a row whose
+//! `absmax/127` underflows to zero (absmax below ~1.8e-43) is flushed to
+//! zero as well, an error of at most that same denormal absmax.
+
+use crate::util::f16::{f16_to_f32, f32_to_f16};
+
+/// First element (if any) that is NaN or ±inf, as `(dim, value)`.
+fn first_non_finite(row: &[f32]) -> Option<(usize, f32)> {
+    row.iter()
+        .enumerate()
+        .find(|(_, x)| !x.is_finite())
+        .map(|(i, &x)| (i, x))
+}
+
+/// Symmetric absmax int8 quantization of one row. Writes `codes` (same
+/// length as `row`) and returns the row scale. Rejects non-finite input.
+pub fn quantize_row_i8(row: &[f32], codes: &mut [i8]) -> anyhow::Result<f32> {
+    assert_eq!(row.len(), codes.len());
+    if let Some((i, x)) = first_non_finite(row) {
+        anyhow::bail!("row has non-finite value {x} at dim {i}; cannot quantize to int8");
+    }
+    let absmax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = absmax / 127.0;
+    if scale == 0.0 {
+        codes.fill(0);
+        return Ok(0.0);
+    }
+    for (c, &x) in codes.iter_mut().zip(row) {
+        *c = (x / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+    Ok(scale)
+}
+
+/// Dequantize int8 codes back to f32: `out[i] = codes[i] · scale`.
+pub fn dequantize_i8(codes: &[i8], scale: f32, out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = c as f32 * scale;
+    }
+}
+
+/// Encode one row as binary16 bit patterns (round-to-nearest-even).
+/// Rejects non-finite input and values that overflow the f16 range — both
+/// would make the stored row score as NaN/±inf.
+pub fn quantize_row_f16(row: &[f32], out: &mut [u16]) -> anyhow::Result<()> {
+    assert_eq!(row.len(), out.len());
+    if let Some((i, x)) = first_non_finite(row) {
+        anyhow::bail!("row has non-finite value {x} at dim {i}; cannot quantize to f16");
+    }
+    for (o, &x) in out.iter_mut().zip(row) {
+        let h = f32_to_f16(x);
+        anyhow::ensure!(
+            f16_to_f32(h).is_finite(),
+            "row value {x} overflows the f16 range (max finite 65504)"
+        );
+        *o = h;
+    }
+    Ok(())
+}
+
+/// Quantize a query vector for int8 scoring (same symmetric absmax scheme
+/// as rows, applied once per query per batch). Queries are runtime traffic,
+/// not build-time input, so non-finite queries are not an error: the codes
+/// are zeroed and the returned scale is NaN, which makes every score of
+/// that query NaN — the coordinator's NaN-stable merge then handles it
+/// exactly as the f32 path would.
+pub fn quantize_query_i8(q: &[f32], codes: &mut [i8]) -> f32 {
+    assert_eq!(q.len(), codes.len());
+    if first_non_finite(q).is_some() {
+        codes.fill(0);
+        return f32::NAN;
+    }
+    let absmax = q.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = absmax / 127.0;
+    if scale == 0.0 {
+        codes.fill(0);
+        // Scale 0, not NaN: an all-zero query genuinely scores 0 everywhere.
+        return 0.0;
+    }
+    for (c, &x) in codes.iter_mut().zip(q) {
+        *c = (x / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use crate::util::Rng;
+
+    #[test]
+    fn prop_i8_round_trip_error_within_bound() {
+        property("int8 round-trip err <= absmax/127", 100, |g| {
+            let d = g.usize_in(1..=64);
+            let e = g.usize_in(0..=40) as i32 - 20; // magnitudes 2^-20 .. 2^20
+            let row: Vec<f32> = (0..d)
+                .map(|_| (g.rng().next_gaussian() as f32) * 2.0f32.powi(e))
+                .collect();
+            let mut codes = vec![0i8; d];
+            let scale = quantize_row_i8(&row, &mut codes).unwrap();
+            let mut back = vec![0.0f32; d];
+            dequantize_i8(&codes, scale, &mut back);
+            let absmax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for (i, (&x, &y)) in row.iter().zip(&back).enumerate() {
+                assert!(
+                    (x - y).abs() <= absmax / 127.0,
+                    "dim {i}: x={x} back={y} absmax={absmax}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn i8_extremes_hit_full_code_range() {
+        let row = [3.0f32, -3.0, 0.0, 1.5];
+        let mut codes = [0i8; 4];
+        let scale = quantize_row_i8(&row, &mut codes).unwrap();
+        assert_eq!(codes, [127, -127, 0, 64]); // 1.5/scale = 63.5 rounds away from zero
+        assert!((scale - 3.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn i8_zero_row_is_exact() {
+        let row = [0.0f32; 8];
+        let mut codes = [1i8; 8];
+        let scale = quantize_row_i8(&row, &mut codes).unwrap();
+        assert_eq!(scale, 0.0);
+        assert_eq!(codes, [0i8; 8]);
+        let mut back = [9.0f32; 8];
+        dequantize_i8(&codes, scale, &mut back);
+        assert_eq!(back, [0.0f32; 8]);
+    }
+
+    #[test]
+    fn prop_f16_round_trip_exact_for_representable() {
+        property("f16 exact for representable values", 100, |g| {
+            // Build a row out of values already on the f16 grid.
+            let d = g.usize_in(1..=32);
+            let row: Vec<f32> = (0..d)
+                .map(|_| {
+                    let h = (g.rng().next_u64() as u16) & 0x7fff;
+                    // Map would-be NaN/inf onto a finite code.
+                    let h = if h & 0x7c00 == 0x7c00 { h & 0x43ff } else { h };
+                    f16_to_f32(h) * if g.bool() { -1.0 } else { 1.0 }
+                })
+                .collect();
+            let mut enc = vec![0u16; d];
+            quantize_row_f16(&row, &mut enc).unwrap();
+            for (i, (&x, &h)) in row.iter().zip(&enc).enumerate() {
+                assert_eq!(f16_to_f32(h).to_bits(), x.to_bits(), "dim {i}: x={x}");
+            }
+        });
+    }
+
+    #[test]
+    fn non_finite_rows_rejected_distinctly() {
+        let mut codes = [0i8; 3];
+        let mut enc = [0u16; 3];
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let row = [1.0f32, bad, 2.0];
+            let e = quantize_row_i8(&row, &mut codes).unwrap_err().to_string();
+            assert!(e.contains("non-finite value") && e.contains("dim 1"), "{e}");
+            let e = quantize_row_f16(&row, &mut enc).unwrap_err().to_string();
+            assert!(e.contains("non-finite value") && e.contains("dim 1"), "{e}");
+        }
+        // Finite-but-too-large is a different failure with its own message.
+        let e = quantize_row_f16(&[1.0e9f32, 0.0, 0.0], &mut enc)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("overflows the f16 range"), "{e}");
+        // int8 has no overflow: absmax scaling absorbs any finite magnitude.
+        assert!(quantize_row_i8(&[1.0e9f32, 0.0, 0.0], &mut codes).is_ok());
+    }
+
+    #[test]
+    fn query_quantization_edge_cases() {
+        let mut codes = [0i8; 4];
+        let s = quantize_query_i8(&[0.5, -1.0, 0.25, 0.0], &mut codes);
+        assert!((s - 1.0 / 127.0).abs() < 1e-9);
+        assert_eq!(codes, [64, -127, 32, 0]);
+        // Non-finite query: NaN scale, zero codes (scores become NaN).
+        let s = quantize_query_i8(&[0.5, f32::NAN, 0.0, 0.0], &mut codes);
+        assert!(s.is_nan());
+        assert_eq!(codes, [0i8; 4]);
+        // All-zero query scores 0, not NaN.
+        let s = quantize_query_i8(&[0.0; 4], &mut codes);
+        assert_eq!(s, 0.0);
+        assert_eq!(codes, [0i8; 4]);
+    }
+
+    /// The quantized dot rescaled by both scales approximates the f32 dot
+    /// to within the analytic error budget — the property the Stage-1
+    /// int8 kernel's accuracy story rests on.
+    #[test]
+    fn prop_i8_dot_error_budget() {
+        property("int8 dot error within budget", 50, |g| {
+            let d = *g.choose(&[8usize, 32, 100, 256]);
+            let mut rng = Rng::new(g.u64());
+            let row: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let mut rc = vec![0i8; d];
+            let mut qc = vec![0i8; d];
+            let rs = quantize_row_i8(&row, &mut rc).unwrap();
+            let qs = quantize_query_i8(&q, &mut qc);
+            let qdot: i64 = rc.iter().zip(&qc).map(|(&a, &b)| a as i64 * b as i64).sum();
+            let approx = qdot as f32 * (rs * qs);
+            let exact: f64 = row.iter().zip(&q).map(|(&a, &b)| a as f64 * b as f64).sum();
+            // Each element contributes <= |q_i|·rs/2 + |r_i|·qs/2 + rs·qs/4.
+            let budget: f64 = row
+                .iter()
+                .zip(&q)
+                .map(|(&r, &qv)| {
+                    0.5 * (qv.abs() as f64 * rs as f64 + r.abs() as f64 * qs as f64)
+                        + 0.25 * (rs as f64 * qs as f64)
+                })
+                .sum();
+            assert!(
+                (approx as f64 - exact).abs() <= budget + 1e-5,
+                "d={d} approx={approx} exact={exact} budget={budget}"
+            );
+        });
+    }
+}

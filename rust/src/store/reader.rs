@@ -3,9 +3,10 @@
 //! [`ShardStore::open`] does all validation a single time — header parse,
 //! manifest cross-check, and (by default) a checksum pass over every
 //! region — and then never looks at the bytes again except to score them:
-//! [`ShardStore::shard_rows`] hands out [`RowSource`]s that point straight
-//! into the mapping, so the backends read database rows out of the page
-//! cache with zero copies and zero per-row checks. Any validation failure
+//! [`ShardStore::shard_data`] hands out [`ShardData`] payloads that point
+//! straight into the mapping, so the backends read database rows out of
+//! the page cache with zero copies and zero per-row checks, in whatever
+//! element encoding the store carries ([`Dtype`]). Any validation failure
 //! is a distinct open-time error; there is no degraded or silent-fallback
 //! open.
 
@@ -17,9 +18,9 @@ use anyhow::{ensure, Context, Result};
 
 use crate::util::json::Json;
 
-use super::format::{self, StoreHeader};
+use super::format::{self, Dtype, StoreHeader};
 use super::mmap::Mmap;
-use super::RowSource;
+use super::{F16Source, I8Source, RowSource, ShardData};
 
 /// Open-time knobs (the serve config's `"store"` block, resolved).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,6 +50,8 @@ pub struct StoreInfo {
     pub path: String,
     /// Format version of the file.
     pub version: u32,
+    /// Row element encoding.
+    pub dtype: Dtype,
     /// Shard count.
     pub shards: usize,
     /// Rows per shard.
@@ -69,12 +72,13 @@ impl StoreInfo {
     /// One-token-ish identity string for log lines and `summary()`.
     pub fn describe(&self) -> String {
         format!(
-            "{}@v{} {}x{}x{} ({}{})",
+            "{}@v{} {}x{}x{} {} ({}{})",
             self.path,
             self.version,
             self.shards,
             self.shard_size,
             self.d,
+            self.dtype,
             if self.mapped { "mmap" } else { "read" },
             if self.built { ", built" } else { "" }
         )
@@ -97,8 +101,8 @@ impl ShardStore {
 
     /// Open `path`, validating everything exactly once. Every corruption
     /// mode is a distinct error: missing file, missing/garbled manifest,
-    /// truncation, bad magic, version skew, layout drift, checksum
-    /// mismatch, manifest/header disagreement.
+    /// truncation, bad magic, version skew, dtype skew, layout drift,
+    /// checksum mismatch, manifest/header disagreement.
     pub fn open_with(path: &Path, opts: OpenOptions) -> Result<ShardStore> {
         let t0 = Instant::now();
         ensure!(
@@ -128,13 +132,16 @@ impl ShardStore {
             .with_context(|| format!("validating store {path:?}"))?;
 
         if opts.verify_checksums {
-            for (s, r) in header.regions.iter().enumerate() {
+            let per_shard = header.dtype.regions_per_shard() as usize;
+            for (i, r) in header.regions.iter().enumerate() {
                 let region = &map.bytes()[r.offset as usize..(r.offset + r.len) as usize];
                 let got = format::fnv1a64(region);
+                let kind = if i % per_shard == 1 { "scale " } else { "" };
                 ensure!(
                     got == r.checksum,
-                    "store {path:?} shard {s} region checksum mismatch \
+                    "store {path:?} shard {} {kind}region checksum mismatch \
                      (header {:#018x}, file {got:#018x}): the store is corrupt",
+                    i / per_shard,
                     r.checksum
                 );
             }
@@ -178,26 +185,74 @@ impl ShardStore {
         self.header.seed
     }
 
+    /// Row element encoding.
+    pub fn dtype(&self) -> Dtype {
+        self.header.dtype
+    }
+
     /// True when rows are served from a live mapping (zero-copy).
     pub fn is_mapped(&self) -> bool {
         self.map.is_mapped()
     }
 
-    /// Shard `shard`'s rows as a zero-copy [`RowSource`] into the mapping
-    /// (`[shard_size, d]` row-major, the exact layout every backend
-    /// scores). Panics if `shard` is out of range — shard counts are
-    /// validated against the config before backends are built.
+    /// Shard `shard`'s rows as a zero-copy f32 [`RowSource`] into the
+    /// mapping (`[shard_size, d]` row-major). Panics if `shard` is out of
+    /// range, or on a quantized store — callers that can serve any dtype
+    /// go through [`ShardStore::shard_data`]; this accessor remains for
+    /// the f32-only call sites (and every v1 store is f32).
     pub fn shard_rows(&self, shard: usize) -> RowSource {
+        assert!(
+            self.header.dtype == Dtype::F32,
+            "shard_rows serves f32 stores only; this store is {} — use shard_data",
+            self.header.dtype
+        );
+        match self.shard_data(shard) {
+            ShardData::F32(rows) => rows,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Shard `shard`'s scoring payload in the store's element encoding,
+    /// pointing straight into the mapping (zero-copy). Panics if `shard`
+    /// is out of range — shard counts are validated against the config
+    /// before backends are built.
+    pub fn shard_data(&self, shard: usize) -> ShardData {
         assert!(
             shard < self.shards(),
             "shard {shard} out of range (store has {})",
             self.shards()
         );
-        let region = &self.header.regions[shard];
-        RowSource::Mapped {
-            map: self.map.clone(),
-            byte_offset: region.offset as usize,
-            floats: self.shard_size() * self.d(),
+        let data = self.header.data_region(shard);
+        let elems = self.shard_size() * self.d();
+        match self.header.dtype {
+            Dtype::F32 => ShardData::F32(RowSource::Mapped {
+                map: self.map.clone(),
+                byte_offset: data.offset as usize,
+                floats: elems,
+            }),
+            Dtype::F16 => ShardData::F16(F16Source::Mapped {
+                map: self.map.clone(),
+                byte_offset: data.offset as usize,
+                elems,
+            }),
+            Dtype::I8 => {
+                let scales = self
+                    .header
+                    .scale_region(shard)
+                    .expect("int8 store has a scale region per shard");
+                ShardData::I8 {
+                    codes: I8Source::Mapped {
+                        map: self.map.clone(),
+                        byte_offset: data.offset as usize,
+                        elems,
+                    },
+                    scales: RowSource::Mapped {
+                        map: self.map.clone(),
+                        byte_offset: scales.offset as usize,
+                        floats: self.shard_size(),
+                    },
+                }
+            }
         }
     }
 
@@ -206,6 +261,7 @@ impl ShardStore {
         StoreInfo {
             path: self.path.display().to_string(),
             version: self.header.version,
+            dtype: self.header.dtype,
             shards: self.shards(),
             shard_size: self.shard_size(),
             d: self.d(),
@@ -219,7 +275,7 @@ impl ShardStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::store::writer::{build_store, generate_shard_rows, StoreSpec};
+    use crate::store::writer::{build_store, build_store_v1, generate_shard_rows, StoreSpec};
 
     fn tmp_store(name: &str) -> PathBuf {
         std::env::temp_dir().join(format!(
@@ -245,6 +301,7 @@ mod tests {
         shards: 2,
         shard_size: 600,
         seed: 11,
+        dtype: Dtype::F32,
     };
 
     #[test]
@@ -264,6 +321,7 @@ mod tests {
             assert_eq!(store.shard_size(), SPEC.shard_size);
             assert_eq!(store.n_total(), SPEC.shards * SPEC.shard_size);
             assert_eq!(store.seed(), SPEC.seed);
+            assert_eq!(store.dtype(), Dtype::F32);
             for s in 0..SPEC.shards {
                 let rows = store.shard_rows(s);
                 let want = generate_shard_rows(SPEC.seed, s, SPEC.shard_size, SPEC.d);
@@ -275,9 +333,97 @@ mod tests {
             }
             let info = store.info();
             assert_eq!(info.version, format::FORMAT_VERSION);
-            assert!(info.describe().contains("2x600x13"), "{}", info.describe());
+            assert_eq!(info.dtype, Dtype::F32);
+            assert!(
+                info.describe().contains("2x600x13 f32le"),
+                "{}",
+                info.describe()
+            );
         }
         cleanup(&path);
+    }
+
+    #[test]
+    fn quantized_stores_open_and_match_the_in_memory_quantizer() {
+        for dtype in [Dtype::F16, Dtype::I8] {
+            let spec = StoreSpec { dtype, ..SPEC };
+            let path = build_small(&format!("quant-{dtype}"), &spec);
+            let store = ShardStore::open(&path).unwrap();
+            assert_eq!(store.dtype(), dtype);
+            assert!(
+                store.info().describe().contains(dtype.as_str()),
+                "{}",
+                store.info().describe()
+            );
+            for s in 0..spec.shards {
+                let data = store.shard_data(s);
+                assert_eq!(data.dtype(), dtype);
+                assert_eq!(data.is_mapped(), store.is_mapped());
+                // Mapped payload == quantizing the generator output in
+                // memory: the two serve paths see identical bytes.
+                let rows = generate_shard_rows(spec.seed, s, spec.shard_size, spec.d);
+                let want =
+                    ShardData::quantize_f32(RowSource::from_vec(rows), spec.d, dtype).unwrap();
+                assert_eq!(
+                    data.dequantize_all(spec.d),
+                    want.dequantize_all(spec.d),
+                    "shard {s} {dtype}"
+                );
+            }
+            cleanup(&path);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shard_rows serves f32 stores only")]
+    fn shard_rows_refuses_quantized_stores() {
+        let spec = StoreSpec { dtype: Dtype::I8, ..SPEC };
+        let path = build_small("f32only", &spec);
+        let store = ShardStore::open(&path).unwrap();
+        cleanup(&path); // before the panic unwinds
+        let _ = store.shard_rows(0);
+    }
+
+    /// The v1 backward-compat contract: a v1 file opens unchanged and its
+    /// rows are bit-identical to a v2 f32 build of the same seed — so a
+    /// deployment can swap store files across the version bump with
+    /// answers provably unchanged. (The checked-in v1 fuzz-corpus seeds
+    /// pin the byte format itself against files this code did not write.)
+    #[test]
+    fn v1_store_opens_and_serves_identically_to_v2_f32() {
+        let p1 = tmp_store("compat-v1");
+        let p2 = tmp_store("compat-v2");
+        cleanup(&p1);
+        cleanup(&p2);
+        build_store_v1(&p1, &SPEC).unwrap();
+        build_store(&p2, &SPEC).unwrap();
+        let s1 = ShardStore::open(&p1).unwrap();
+        let s2 = ShardStore::open(&p2).unwrap();
+        assert_eq!(s1.info().version, format::FORMAT_VERSION_V1);
+        assert_eq!(s2.info().version, format::FORMAT_VERSION);
+        assert!(s1.info().describe().contains("@v1"), "{}", s1.info().describe());
+        assert_eq!(s1.dtype(), Dtype::F32);
+        for s in 0..SPEC.shards {
+            assert_eq!(&s1.shard_rows(s)[..], &s2.shard_rows(s)[..], "shard {s}");
+        }
+        // And a backend over the v1 store answers bit-identically to one
+        // over the v2 store.
+        use crate::coordinator::{NativeBackend, ShardBackend};
+        use crate::topk::TwoStageParams;
+        use crate::util::Rng;
+        let (n, d, k) = (SPEC.shard_size, SPEC.d, 16);
+        let params = TwoStageParams::new(n, k, 50, 2);
+        let mut rng = Rng::new(99);
+        let queries: Vec<f32> = (0..2 * d).map(|_| rng.next_gaussian() as f32).collect();
+        let a = NativeBackend::new(s1.shard_rows(0).rows().to_vec(), d, k, Some(params))
+            .score_topk(&queries, 2)
+            .unwrap();
+        let b = NativeBackend::new(s2.shard_rows(0).rows().to_vec(), d, k, Some(params))
+            .score_topk(&queries, 2)
+            .unwrap();
+        assert_eq!(a, b);
+        cleanup(&p1);
+        cleanup(&p2);
     }
 
     /// Every corruption mode is a distinct launch *error* — never a silent
@@ -313,6 +459,13 @@ mod tests {
         std::fs::write(&path, &bad).unwrap();
         assert!(open_err().contains("version"), "{}", open_err());
 
+        // Dtype skew: relabeling an f32 file as int8 changes the implied
+        // layout, so the exact-length check catches it.
+        let mut bad = good.clone();
+        bad[12] = format::DTYPE_INT8 as u8;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(open_err().contains("length"), "{}", open_err());
+
         // Flipped data byte: checksum mismatch.
         let mut bad = good.clone();
         let last = bad.len() - 5;
@@ -347,6 +500,24 @@ mod tests {
         // the data, not lingering state).
         std::fs::write(&manifest_path, &good_manifest).unwrap();
         ShardStore::open(&path).unwrap();
+        cleanup(&path);
+    }
+
+    /// A flipped byte in an int8 store's *scale* region is its own loud
+    /// checksum error, named as such.
+    #[test]
+    fn scale_region_corruption_fails_loudly() {
+        let spec = StoreSpec { dtype: Dtype::I8, ..SPEC };
+        let path = build_small("scalecorrupt", &spec);
+        let store = ShardStore::open(&path).unwrap();
+        let scale_off = store.header().scale_region(0).unwrap().offset as usize;
+        drop(store);
+        let mut bad = std::fs::read(&path).unwrap();
+        bad[scale_off + 2] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        let err = format!("{:#}", ShardStore::open(&path).unwrap_err());
+        assert!(err.contains("scale region checksum mismatch"), "{err}");
+        assert!(err.contains("shard 0"), "{err}");
         cleanup(&path);
     }
 

@@ -1,24 +1,32 @@
-//! Store builder: streams synthetic shard rows to disk in the v1 format.
+//! Store builder: streams synthetic shard rows to disk in the v2 format,
+//! quantizing on the fly for the f16/int8 encodings.
 //!
 //! The writer never materializes a shard (let alone the whole database) in
-//! memory: rows are generated and written in fixed-size chunks, with the
-//! region checksum folded in as the bytes stream out. Both files are
-//! staged as `.tmp` and landed by rename — manifest first, data second —
-//! so nothing already on disk is touched until everything is written.
-//! Crash-window analysis: a crash before the first rename leaves any
-//! previous store fully intact (stray `.tmp`s are overwritten next
-//! build); on a *first* build, a crash between the renames leaves a
-//! manifest without a data file, which `build_if_missing` rebuilds
-//! (`path` is absent); on a *rebuild* over an existing store, that same
-//! instant leaves a new manifest beside the old data file — a loud
-//! manifest/header-skew error at open (never a silently wrong store),
-//! fixed by rerunning `fastk build-index`.
+//! memory: rows are generated, encoded ([`super::quant`]) and written in
+//! fixed-size chunks, with the region checksum folded in as the bytes
+//! stream out. int8 shards buffer only their per-row scales (4 bytes/row)
+//! until the data region has streamed, then write them as the shard's
+//! scale region. Both files are staged as `.tmp` and landed by rename —
+//! manifest first, data second — so nothing already on disk is touched
+//! until everything is written. Crash-window analysis: a crash before the
+//! first rename leaves any previous store fully intact (stray `.tmp`s are
+//! overwritten next build); on a *first* build, a crash between the
+//! renames leaves a manifest without a data file, which `build_if_missing`
+//! rebuilds (`path` is absent); on a *rebuild* over an existing store,
+//! that same instant leaves a new manifest beside the old data file — a
+//! loud manifest/header-skew error at open (never a silently wrong
+//! store), fixed by rerunning `fastk build-index`.
 //!
 //! Determinism: shard `s` of a store built with seed `S` holds exactly the
-//! rows [`generate_shard_rows`]`(S, s, ..)` produces — the same per-shard
-//! stream (`Rng::new(S ⊕ s)`) the no-store serve path generates in its
-//! shard factories — so a store-backed deployment is bit-identical to an
-//! in-memory one with the same config.
+//! rows [`generate_shard_rows`]`(S, s, ..)` produces, passed through the
+//! spec's dtype encoder — the same per-shard stream (`Rng::new(S ⊕ s)`)
+//! and the same encoder ([`super::ShardData::quantize_f32`]) the no-store
+//! serve path uses — so a store-backed deployment is bit-identical to an
+//! in-memory one with the same config, at every dtype.
+//!
+//! [`build_store_v1`] writes the legacy v1 format (f32 only) for
+//! backward-compatibility testing; its output is byte-for-byte the v2
+//! f32 file except for the version word.
 
 use std::fs::File;
 use std::io::{BufWriter, Seek, SeekFrom, Write};
@@ -29,8 +37,10 @@ use anyhow::{ensure, Context, Result};
 use crate::util::Rng;
 
 use super::format::{
-    self, Checksum, Layout, ShardRegion, StoreHeader, DTYPE_F32LE, FORMAT_VERSION, REGION_ALIGN,
+    self, Checksum, Dtype, Layout, ShardRegion, StoreHeader, FORMAT_VERSION, FORMAT_VERSION_V1,
+    REGION_ALIGN,
 };
+use super::quant;
 
 /// Geometry + provenance of a store to build.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,6 +53,8 @@ pub struct StoreSpec {
     pub shard_size: usize,
     /// Synthetic-generator seed.
     pub seed: u64,
+    /// Row element encoding to store.
+    pub dtype: Dtype,
 }
 
 /// Rows generated per chunk while streaming a shard to disk (bounds the
@@ -73,11 +85,33 @@ pub fn generate_shard_rows(seed: u64, shard: usize, shard_size: usize, d: usize)
 /// the final header (with computed checksums). Overwrites any existing
 /// store at `path`.
 pub fn build_store(path: &Path, spec: &StoreSpec) -> Result<StoreHeader> {
+    build_store_version(path, spec, FORMAT_VERSION)
+}
+
+/// Build a *legacy v1* store — f32 only. This exists so the v1
+/// backward-compatibility contract ("old files keep opening, and serve
+/// bit-identically to a v2 f32 build of the same seed") stays executable
+/// against files this code writes today, not just checked-in artifacts.
+pub fn build_store_v1(path: &Path, spec: &StoreSpec) -> Result<StoreHeader> {
+    ensure!(
+        spec.dtype == Dtype::F32,
+        "v1 stores are f32le only (spec asked for {})",
+        spec.dtype
+    );
+    build_store_version(path, spec, FORMAT_VERSION_V1)
+}
+
+fn build_store_version(path: &Path, spec: &StoreSpec, version: u32) -> Result<StoreHeader> {
     ensure!(
         spec.d > 0 && spec.shards > 0 && spec.shard_size > 0,
         "store spec must have positive d, shards and shard_size"
     );
-    let lay = format::layout(spec.shards as u64, spec.shard_size as u64, spec.d as u64)?;
+    let lay = format::layout(
+        spec.shards as u64,
+        spec.shard_size as u64,
+        spec.d as u64,
+        spec.dtype,
+    )?;
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)
@@ -90,21 +124,30 @@ pub fn build_store(path: &Path, spec: &StoreSpec) -> Result<StoreHeader> {
         std::path::PathBuf::from(s)
     };
 
+    let mut regions = Vec::new();
+    for s in 0..spec.shards as u64 {
+        regions.push(ShardRegion {
+            offset: lay.data_offset(s),
+            len: lay.data_len,
+            checksum: 0, // streamed below, header rewritten at the end
+        });
+        if spec.dtype.has_scales() {
+            regions.push(ShardRegion {
+                offset: lay.scale_offset(s),
+                len: lay.scale_len,
+                checksum: 0,
+            });
+        }
+    }
     let mut header = StoreHeader {
-        version: FORMAT_VERSION,
-        dtype: DTYPE_F32LE,
+        version,
+        dtype: spec.dtype,
         d: spec.d as u64,
         shards: spec.shards as u64,
         shard_size: spec.shard_size as u64,
         region_align: REGION_ALIGN,
         seed: spec.seed,
-        regions: (0..spec.shards as u64)
-            .map(|s| ShardRegion {
-                offset: lay.first_region + s * lay.region_len,
-                len: lay.region_len,
-                checksum: 0, // streamed below, header rewritten at the end
-            })
-            .collect(),
+        regions,
     };
 
     let file = File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
@@ -112,8 +155,13 @@ pub fn build_store(path: &Path, spec: &StoreSpec) -> Result<StoreHeader> {
     // Placeholder header (zero checksums); rewritten once the regions have
     // streamed through and their checksums are known.
     w.write_all(&format::encode_header(&header))?;
+    let per_shard = spec.dtype.regions_per_shard() as usize;
     for s in 0..spec.shards {
-        header.regions[s].checksum = write_shard_region(&mut w, spec, s, &lay)?;
+        let (data_sum, scale_sum) = write_shard_regions(&mut w, spec, s, &lay)?;
+        header.regions[s * per_shard].checksum = data_sum;
+        if let Some(scale_sum) = scale_sum {
+            header.regions[s * per_shard + 1].checksum = scale_sum;
+        }
     }
     // Rewrite the header with the real checksums, then land the file.
     let mut file = w.into_inner().context("flushing store file")?;
@@ -144,41 +192,88 @@ pub fn build_store(path: &Path, spec: &StoreSpec) -> Result<StoreHeader> {
     Ok(header)
 }
 
-/// Stream one shard's rows (generated in [`GEN_CHUNK_ROWS`] chunks) plus
-/// alignment padding; returns the region's FNV-1a checksum.
-fn write_shard_region<W: Write>(
+/// Stream one shard's regions: rows (generated in [`GEN_CHUNK_ROWS`]
+/// chunks, encoded per the spec's dtype) plus alignment padding, then —
+/// for int8 — the buffered per-row scales as their own padded region.
+/// Returns `(data_checksum, scale_checksum)`.
+fn write_shard_regions<W: Write>(
     w: &mut W,
     spec: &StoreSpec,
     shard: usize,
     lay: &Layout,
-) -> Result<u64> {
+) -> Result<(u64, Option<u64>)> {
     let mut rng = Rng::new(shard_seed(spec.seed, shard));
     let mut checksum = Checksum::new();
-    let mut chunk: Vec<u8> = Vec::with_capacity(GEN_CHUNK_ROWS * spec.d * 4);
+    let elem = spec.dtype.elem_bytes() as usize;
+    let mut row: Vec<f32> = vec![0.0; spec.d];
+    let mut codes_i8: Vec<i8> = vec![0; spec.d];
+    let mut codes_f16: Vec<u16> = vec![0; spec.d];
+    let mut scales: Vec<f32> = Vec::new();
+    let mut chunk: Vec<u8> = Vec::with_capacity(GEN_CHUNK_ROWS * spec.d * elem);
     let mut rows_left = spec.shard_size;
+    let mut row_index = 0usize;
     while rows_left > 0 {
         let rows = rows_left.min(GEN_CHUNK_ROWS);
         chunk.clear();
-        for _ in 0..rows * spec.d {
-            chunk.extend_from_slice(&(rng.next_gaussian() as f32).to_le_bytes());
+        for _ in 0..rows {
+            for v in row.iter_mut() {
+                *v = rng.next_gaussian() as f32;
+            }
+            match spec.dtype {
+                Dtype::F32 => {
+                    for v in &row {
+                        chunk.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Dtype::F16 => {
+                    quant::quantize_row_f16(&row, &mut codes_f16)
+                        .with_context(|| format!("shard {shard} row {row_index}"))?;
+                    for h in &codes_f16 {
+                        chunk.extend_from_slice(&h.to_le_bytes());
+                    }
+                }
+                Dtype::I8 => {
+                    let scale = quant::quantize_row_i8(&row, &mut codes_i8)
+                        .with_context(|| format!("shard {shard} row {row_index}"))?;
+                    scales.push(scale);
+                    chunk.extend(codes_i8.iter().map(|&c| c as u8));
+                }
+            }
+            row_index += 1;
         }
         checksum.update(&chunk);
         w.write_all(&chunk)?;
         rows_left -= rows;
     }
-    let pad = (lay.region_len - spec.shard_size as u64 * spec.d as u64 * 4) as usize;
+    let data_bytes = spec.shard_size as u64 * spec.d as u64 * elem as u64;
+    let pad = (lay.data_len - data_bytes) as usize;
     if pad > 0 {
         let zeros = vec![0u8; pad];
         checksum.update(&zeros);
         w.write_all(&zeros)?;
     }
-    Ok(checksum.finish())
+    let data_sum = checksum.finish();
+    if !spec.dtype.has_scales() {
+        return Ok((data_sum, None));
+    }
+    // The scale region: shard_size f32le values, padded and checksummed
+    // exactly like a data region.
+    let mut scale_sum = Checksum::new();
+    let mut bytes: Vec<u8> = Vec::with_capacity(lay.scale_len as usize);
+    for s in &scales {
+        bytes.extend_from_slice(&s.to_le_bytes());
+    }
+    bytes.resize(lay.scale_len as usize, 0);
+    scale_sum.update(&bytes);
+    w.write_all(&bytes)?;
+    Ok((data_sum, Some(scale_sum.finish())))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::store::mmap::Mmap;
+    use crate::store::{RowSource, ShardData};
 
     fn tmp_store(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!(
@@ -194,32 +289,41 @@ mod tests {
 
     #[test]
     fn built_store_parses_and_checksums_verify() {
-        let path = tmp_store("basic");
-        let spec = StoreSpec {
-            d: 7,
-            shards: 3,
-            shard_size: 100, // 2800 data bytes per shard: ragged vs the 64-byte align
-            seed: 9,
-        };
-        let header = build_store(&path, &spec).unwrap();
-        assert_eq!(header.shards, 3);
+        for dtype in Dtype::ALL {
+            let path = tmp_store(&format!("basic-{dtype}"));
+            let spec = StoreSpec {
+                d: 7,
+                shards: 3,
+                shard_size: 100, // ragged data bytes vs the 64-byte align
+                seed: 9,
+                dtype,
+            };
+            let header = build_store(&path, &spec).unwrap();
+            assert_eq!(header.shards, 3);
+            assert_eq!(header.version, FORMAT_VERSION);
+            assert_eq!(header.dtype, dtype);
+            assert_eq!(
+                header.regions.len(),
+                3 * dtype.regions_per_shard() as usize
+            );
 
-        let map = Mmap::read(&path).unwrap();
-        let parsed = format::parse_header(map.bytes()).unwrap();
-        assert_eq!(parsed, header);
-        for r in &parsed.regions {
-            let region = &map.bytes()[r.offset as usize..(r.offset + r.len) as usize];
-            assert_eq!(format::fnv1a64(region), r.checksum);
+            let map = Mmap::read(&path).unwrap();
+            let parsed = format::parse_header(map.bytes()).unwrap();
+            assert_eq!(parsed, header);
+            for r in &parsed.regions {
+                let region = &map.bytes()[r.offset as usize..(r.offset + r.len) as usize];
+                assert_eq!(format::fnv1a64(region), r.checksum, "{dtype}");
+            }
+            // The manifest round-trips against the header.
+            let manifest = crate::util::json::Json::parse(
+                &std::fs::read_to_string(format::manifest_path(&path)).unwrap(),
+            )
+            .unwrap();
+            format::check_manifest(&manifest, &parsed).unwrap();
+            // No stray .tmp left behind.
+            assert!(!path.with_extension("fastk.tmp").exists());
+            cleanup(&path);
         }
-        // The manifest round-trips against the header.
-        let manifest = crate::util::json::Json::parse(
-            &std::fs::read_to_string(format::manifest_path(&path)).unwrap(),
-        )
-        .unwrap();
-        format::check_manifest(&manifest, &parsed).unwrap();
-        // No stray .tmp left behind.
-        assert!(!path.with_extension("fastk.tmp").exists());
-        cleanup(&path);
     }
 
     #[test]
@@ -233,13 +337,14 @@ mod tests {
             shards: 2,
             shard_size: GEN_CHUNK_ROWS + 13,
             seed: 77,
+            dtype: Dtype::F32,
         };
         let header = build_store(&path, &spec).unwrap();
         let map = Mmap::read(&path).unwrap();
         for s in 0..spec.shards {
             let want = generate_shard_rows(spec.seed, s, spec.shard_size, spec.d);
             let got = map.f32_slice(
-                header.regions[s].offset as usize,
+                header.data_region(s).offset as usize,
                 spec.shard_size * spec.d,
             );
             assert_eq!(got, &want[..], "shard {s}");
@@ -248,10 +353,88 @@ mod tests {
     }
 
     #[test]
+    fn quantized_stores_equal_in_memory_quantizer_bit_for_bit() {
+        // The streaming writer and ShardData::quantize_f32 (the in-memory
+        // synthetic path) must encode identically — this is the quantized
+        // extension of the store-backed == in-memory bit-identity claim.
+        let spec_base = StoreSpec {
+            d: 5,
+            shards: 2,
+            shard_size: GEN_CHUNK_ROWS + 7, // exercise chunking
+            seed: 21,
+            dtype: Dtype::F16,
+        };
+        // f16: compare stored u16 codes.
+        let path = tmp_store("quant-f16");
+        let header = build_store(&path, &spec_base).unwrap();
+        let map = Mmap::read(&path).unwrap();
+        for s in 0..spec_base.shards {
+            let rows = generate_shard_rows(spec_base.seed, s, spec_base.shard_size, spec_base.d);
+            let want = ShardData::quantize_f32(RowSource::from_vec(rows), spec_base.d, Dtype::F16)
+                .unwrap();
+            let ShardData::F16(src) = want else { unreachable!() };
+            let got = map.u16_slice(
+                header.data_region(s).offset as usize,
+                spec_base.shard_size * spec_base.d,
+            );
+            assert_eq!(got, src.codes(), "shard {s}");
+        }
+        cleanup(&path);
+        // int8: compare stored codes and the scale region.
+        let spec = StoreSpec { dtype: Dtype::I8, ..spec_base };
+        let path = tmp_store("quant-i8");
+        let header = build_store(&path, &spec).unwrap();
+        let map = Mmap::read(&path).unwrap();
+        for s in 0..spec.shards {
+            let rows = generate_shard_rows(spec.seed, s, spec.shard_size, spec.d);
+            let want = ShardData::quantize_f32(RowSource::from_vec(rows), spec.d, Dtype::I8)
+                .unwrap();
+            let ShardData::I8 { codes, scales } = want else { unreachable!() };
+            let got_codes = map.i8_slice(
+                header.data_region(s).offset as usize,
+                spec.shard_size * spec.d,
+            );
+            assert_eq!(got_codes, codes.codes(), "shard {s} codes");
+            let got_scales = map.f32_slice(
+                header.scale_region(s).unwrap().offset as usize,
+                spec.shard_size,
+            );
+            assert_eq!(got_scales, scales.rows(), "shard {s} scales");
+        }
+        cleanup(&path);
+    }
+
+    #[test]
+    fn v1_store_is_v2_f32_with_the_old_version_word() {
+        // build_store_v1 exists to keep the backward-compat contract
+        // executable: identical bytes except the version field (and the
+        // manifest's format_version).
+        let spec = StoreSpec { d: 4, shards: 2, shard_size: 48, seed: 5, dtype: Dtype::F32 };
+        let p1 = tmp_store("v1");
+        let p2 = tmp_store("v2");
+        let h1 = build_store_v1(&p1, &spec).unwrap();
+        let h2 = build_store(&p2, &spec).unwrap();
+        assert_eq!(h1.version, FORMAT_VERSION_V1);
+        assert_eq!(h2.version, FORMAT_VERSION);
+        let mut b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        assert_ne!(b1, b2);
+        b1[8] = FORMAT_VERSION as u8; // patch the version word
+        assert_eq!(b1, b2, "v1 and v2-f32 bytes differ beyond the version");
+        // And a quantized v1 is refused.
+        let err = build_store_v1(&p1, &StoreSpec { dtype: Dtype::I8, ..spec })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("f32le only"), "{err}");
+        cleanup(&p1);
+        cleanup(&p2);
+    }
+
+    #[test]
     fn rebuild_over_existing_store_replaces_both_files() {
         let path = tmp_store("rebuild");
-        let spec1 = StoreSpec { d: 4, shards: 2, shard_size: 32, seed: 1 };
-        let spec2 = StoreSpec { d: 4, shards: 2, shard_size: 32, seed: 2 };
+        let spec1 = StoreSpec { d: 4, shards: 2, shard_size: 32, seed: 1, dtype: Dtype::F32 };
+        let spec2 = StoreSpec { d: 4, shards: 2, shard_size: 32, seed: 2, dtype: Dtype::F32 };
         build_store(&path, &spec1).unwrap();
         let header = build_store(&path, &spec2).unwrap();
         assert_eq!(header.seed, 2);
@@ -291,9 +474,9 @@ mod tests {
     fn rejects_empty_geometry() {
         let path = tmp_store("empty");
         for spec in [
-            StoreSpec { d: 0, shards: 1, shard_size: 1, seed: 0 },
-            StoreSpec { d: 1, shards: 0, shard_size: 1, seed: 0 },
-            StoreSpec { d: 1, shards: 1, shard_size: 0, seed: 0 },
+            StoreSpec { d: 0, shards: 1, shard_size: 1, seed: 0, dtype: Dtype::F32 },
+            StoreSpec { d: 1, shards: 0, shard_size: 1, seed: 0, dtype: Dtype::I8 },
+            StoreSpec { d: 1, shards: 1, shard_size: 0, seed: 0, dtype: Dtype::F16 },
         ] {
             assert!(build_store(&path, &spec).is_err(), "{spec:?}");
         }

@@ -15,54 +15,85 @@
 //! which, for each stream row `r ∈ [0, N/B)`, form the *contiguous* row
 //! range `[r·B + lane_lo, r·B + lane_hi)`. Each worker walks its stream
 //! rows in ascending order in tiles of `tile_rows`, scores every tile row
-//! range against each query with the shared
-//! [`score_tile`](super::kernel::score_tile) micro-kernel, and streams the
+//! range against each query with the shared scoring micro-kernel for the
+//! database's element encoding ([`score_tile`](super::kernel::score_tile)
+//! for f32 rows, [`score_tile_f16`](super::kernel::score_tile_f16) /
+//! [`score_tile_i8`](super::kernel::score_tile_i8) for quantized stores —
+//! no dequantized copy of the database ever exists), and streams the
 //! resulting `(index, score)` tiles straight into its private per-query
 //! [`Stage1State`] via [`Stage1State::ingest_tile`] — the `O(nq·N)` score
 //! scratch never exists.
 //!
+//! Quantized rescore: under int8, Stage-1 scores are approximate (the
+//! query is quantized too, and products accumulate in the code domain).
+//! Before replying, each worker re-scores its own ≤ `lanes·K′` surviving
+//! candidates in exact f32 — dequantize the candidate's row (`code·scale`)
+//! and take the fixed-order `score_tile` dot against the *original* f32
+//! query — so the Stage-2 merge selects and orders by exact values, and
+//! the only approximation left is Stage-1 *routing* (which candidates
+//! survive bucketing). f16 needs no rescore: widening is exact, so fused
+//! Stage-1 scores already are the exact f32 dot products of the stored
+//! rows.
+//!
 //! Determinism: per-bucket stream order is ascending `i` (rows ascend,
 //! lanes within a row ascend), every dot product goes through the one
-//! shared reduction order of `score_tile`, and the Stage-1 update is the
-//! same insert + single-bubble-pass — so the fused engine returns
-//! candidates bit-identical to scoring with `score_tile` and running the
-//! sequential [`TwoStageTopK`](super::TwoStageTopK), at any thread count,
-//! lane split, or tile size. Both hot loops dispatch through a
-//! [`SimdKernel`](super::simd::SimdKernel) resolved once at pool spawn
-//! (AVX2 / NEON / scalar); every implementation preserves the scalar
-//! reduction order, so the kernel choice cannot change results either
-//! (see [`simd`](super::simd)).
+//! shared reduction order of its encoding's scoring kernel, and the
+//! Stage-1 update is the same insert + single-bubble-pass — so the fused
+//! engine returns candidates bit-identical to scoring with the same
+//! kernels and running the sequential
+//! [`TwoStageTopK`](super::TwoStageTopK) (with
+//! [`run_rescored`](super::TwoStageTopK::run_rescored) under int8), at
+//! any thread count, lane split, or tile size. Both hot loops dispatch
+//! through a [`SimdKernel`](super::simd::SimdKernel) resolved once at
+//! pool spawn (AVX2 / NEON / scalar); every implementation preserves the
+//! scalar reduction order, so the kernel choice cannot change results
+//! either (see [`simd`](super::simd)).
 //!
 //! Tiling: queries in the batch re-read each database tile while it is
 //! cache-resident (tile-major outer loop, queries inner), so a batch of
 //! `nq` queries reads the database from memory once per tile instead of
 //! `nq` times end-to-end. `tile_rows = 0` auto-sizes tiles to ~256 KiB of
-//! database rows.
+//! database rows (in the stored encoding — quantized tiles hold
+//! proportionally more rows, which is half the bandwidth win).
 
 use super::parallel::{merge_stage2, state_candidates, LanePool, SliceHandle};
 use super::simd::SimdKernel;
 use super::twostage::{Stage1State, TwoStageParams};
 use super::Candidate;
-use crate::store::RowSource;
+use crate::store::{quant, Dtype, ShardData};
 
 /// Auto tile sizing target: keep one tile's database rows around this many
 /// bytes so the tile stays L2-resident while every query in the batch
 /// re-reads it.
 const TILE_TARGET_BYTES: usize = 256 * 1024;
 
-/// One dispatched fused job: the packed `[nq, d]` query block.
+/// One dispatched fused job: the packed `[nq, d]` query block, plus the
+/// batch's int8 query codes/scales when the database is int8 (empty
+/// otherwise).
 struct FusedJob {
     queries: SliceHandle,
+    qcodes: SliceHandle<i8>,
+    qscales: SliceHandle,
     nq: usize,
 }
 
-/// Worker-private half of the fused pipeline: the shared database handle,
+/// The database slices a worker scores through, resolved once per batch
+/// from the [`ShardData`] (owned heap or mapped store region — the hot
+/// loop cannot tell).
+#[derive(Clone, Copy)]
+enum Resolved<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+    I8 { codes: &'a [i8], scales: &'a [f32] },
+}
+
+/// Worker-private half of the fused pipeline: the shared database payload,
 /// this worker's lane range, and its per-query Stage-1 states.
 struct FusedLaneState {
-    /// Shared `[n, d]` row-major database (read-only on the hot path):
-    /// an owned heap vector or a mapped store region — the workers score
-    /// either through the same `&[f32]` view ([`RowSource`]).
-    database: RowSource,
+    /// Shared `[n, d]` row-major database in its stored element encoding
+    /// (read-only on the hot path): owned heap data or a mapped store
+    /// region — the workers score either through the same typed views.
+    database: ShardData,
     d: usize,
     /// First owned global bucket (lane).
     lane_lo: usize,
@@ -83,12 +114,21 @@ struct FusedLaneState {
     states: Vec<Stage1State>,
     /// `[lanes]` score scratch for one stream row.
     scores: Vec<f32>,
+    /// `[d]` dequantized-row scratch for the int8 exact rescore.
+    rescore_row: Vec<f32>,
 }
 
 impl FusedLaneState {
     /// Score-and-select the worker's lane range for a packed `[nq, d]`
-    /// query block; returns this worker's candidates per query.
-    fn run(&mut self, queries: &[f32], nq: usize) -> Vec<Vec<Candidate>> {
+    /// query block; returns this worker's candidates per query, re-scored
+    /// in exact f32 when the encoding requires it.
+    fn run(
+        &mut self,
+        queries: &[f32],
+        nq: usize,
+        qcodes: &[i8],
+        qscales: &[f32],
+    ) -> Vec<Vec<Candidate>> {
         debug_assert_eq!(queries.len(), nq * self.d);
         while self.states.len() < nq {
             self.states.push(Stage1State::with_dims(self.lanes, self.local_k));
@@ -100,10 +140,17 @@ impl FusedLaneState {
         let b = self.buckets;
         let lane_lo = self.lane_lo;
         let lanes = self.lanes;
-        // Resolve the source once per batch: the hot loop below slices a
-        // plain `&[f32]` whether the rows live on the heap or in a store
-        // mapping.
-        let db = self.database.rows();
+        // Resolve the source once per batch: the hot loop below slices
+        // plain typed slices whether the rows live on the heap or in a
+        // store mapping.
+        let db = match &self.database {
+            ShardData::F32(rows) => Resolved::F32(rows.rows()),
+            ShardData::F16(codes) => Resolved::F16(codes.codes()),
+            ShardData::I8 { codes, scales } => Resolved::I8 {
+                codes: codes.codes(),
+                scales: scales.rows(),
+            },
+        };
         let mut tile_start = 0;
         while tile_start < self.rows {
             let tile_end = (tile_start + self.tile_rows).min(self.rows);
@@ -111,17 +158,57 @@ impl FusedLaneState {
                 let q = &queries[qi * d..(qi + 1) * d];
                 for row in tile_start..tile_end {
                     let base = row * b + lane_lo;
-                    let db_rows = &db[base * d..(base + lanes) * d];
-                    self.kernel.score_tile(db_rows, d, q, &mut self.scores);
+                    match db {
+                        Resolved::F32(rows) => {
+                            let tile = &rows[base * d..(base + lanes) * d];
+                            self.kernel.score_tile(tile, d, q, &mut self.scores);
+                        }
+                        Resolved::F16(codes) => {
+                            let tile = &codes[base * d..(base + lanes) * d];
+                            self.kernel.score_tile_f16(tile, d, q, &mut self.scores);
+                        }
+                        Resolved::I8 { codes, scales } => {
+                            let tile = &codes[base * d..(base + lanes) * d];
+                            self.kernel.score_tile_i8(
+                                tile,
+                                d,
+                                &qcodes[qi * d..(qi + 1) * d],
+                                &scales[base..base + lanes],
+                                qscales[qi],
+                                &mut self.scores,
+                            );
+                        }
+                    }
                     state.ingest_tile_k(self.kernel, base as u32, 0, &self.scores);
                 }
             }
             tile_start = tile_end;
         }
-        self.states[..nq]
-            .iter()
-            .map(|state| state_candidates(state, self.filter_padding))
-            .collect()
+        let rescore = self.database.needs_rescore();
+        let mut out = Vec::with_capacity(nq);
+        for (qi, state) in self.states[..nq].iter().enumerate() {
+            let mut cands = state_candidates(state, self.filter_padding);
+            if rescore {
+                // Exact f32 rescore of this worker's survivors: the same
+                // dequantize + fixed-order dot the sequential operator's
+                // rescore hook runs, so the merged result is identical at
+                // any thread count.
+                let q = &queries[qi * d..(qi + 1) * d];
+                for c in cands.iter_mut() {
+                    self.database.dequantize_row(d, c.index as usize, &mut self.rescore_row);
+                    let mut exact = 0.0f32;
+                    self.kernel.score_tile(
+                        &self.rescore_row,
+                        d,
+                        q,
+                        std::slice::from_mut(&mut exact),
+                    );
+                    c.value = exact;
+                }
+            }
+            out.push(cands);
+        }
+        out
     }
 }
 
@@ -131,28 +218,38 @@ impl FusedLaneState {
 ///
 /// Returns candidates bit-identical to the sequential
 /// [`NativeBackend`](crate::coordinator::NativeBackend) (scoring through
-/// the shared [`kernel`](super::kernel) then running
-/// [`TwoStageTopK`](super::TwoStageTopK)) with the same params, at any
+/// the shared [`kernel`](super::kernel) micro-kernels for the database's
+/// encoding, then running [`TwoStageTopK`](super::TwoStageTopK) — with
+/// the exact-f32 rescore hook under int8) with the same params, at any
 /// thread count or tile size.
 pub struct FusedParallelMips {
     pub params: TwoStageParams,
     d: usize,
+    dtype: Dtype,
     kernel: SimdKernel,
     pool: LanePool<FusedJob>,
     cand_scratch: Vec<Candidate>,
+    /// `[nq, d]` int8 query codes for the current batch (int8 databases
+    /// only), quantized once per batch on the dispatch thread.
+    qcodes: Vec<i8>,
+    /// `[nq]` query scales matching `qcodes`.
+    qscales: Vec<f32>,
 }
 
 impl FusedParallelMips {
     /// Spawn the fused pool over a `[n, d]` row-major `database` with
-    /// `n = params.n` vectors — anything convertible to a [`RowSource`]
-    /// (`Vec<f32>`, `Arc<Vec<f32>>`, or a mapped store region). `threads`
-    /// sizes the pool (clamped to `[1, B]`; non-divisible lane splits
-    /// balance to within one lane). `tile_rows = 0` auto-sizes tiles
-    /// (~256 KiB of database rows per tile); any other value is the
-    /// stream-row count per tile. Uses the best SIMD kernel the host
-    /// supports (results are bit-identical whichever is picked).
+    /// `n = params.n` vectors — anything convertible to a [`ShardData`]
+    /// (`Vec<f32>`, `Arc<Vec<f32>>`, a [`RowSource`](crate::store::RowSource),
+    /// or a quantized shard payload from
+    /// [`ShardStore::shard_data`](crate::store::ShardStore::shard_data) /
+    /// [`ShardData::quantize_f32`]). `threads` sizes the pool (clamped to
+    /// `[1, B]`; non-divisible lane splits balance to within one lane).
+    /// `tile_rows = 0` auto-sizes tiles (~256 KiB of stored rows per
+    /// tile); any other value is the stream-row count per tile. Uses the
+    /// best SIMD kernel the host supports (results are bit-identical
+    /// whichever is picked).
     pub fn new(
-        database: impl Into<RowSource>,
+        database: impl Into<ShardData>,
         d: usize,
         params: TwoStageParams,
         threads: usize,
@@ -165,31 +262,40 @@ impl FusedParallelMips {
     /// (the `"kernel"` serve knob; benches and property tests use this to
     /// pin each implementation).
     pub fn with_kernel(
-        database: impl Into<RowSource>,
+        database: impl Into<ShardData>,
         d: usize,
         params: TwoStageParams,
         threads: usize,
         tile_rows: usize,
         kernel: SimdKernel,
     ) -> FusedParallelMips {
-        let database: RowSource = database.into();
+        let database: ShardData = database.into();
         assert!(d > 0, "d must be positive");
         assert_eq!(
-            database.len(),
+            database.elems(),
             params.n * d,
             "database must hold params.n = {} vectors of length {d}",
             params.n
         );
+        if let ShardData::I8 { scales, .. } = &database {
+            assert_eq!(
+                scales.len(),
+                params.n,
+                "int8 database must carry one scale per row"
+            );
+        }
+        let dtype = database.dtype();
         let t = threads.clamp(1, params.buckets);
         let filter_padding = params.local_k > params.bucket_size();
         let rows = params.n / params.buckets;
+        let elem_bytes = dtype.elem_bytes() as usize;
         let states: Vec<FusedLaneState> = (0..t)
             .map(|w| {
                 let lane_lo = w * params.buckets / t;
                 let lane_hi = (w + 1) * params.buckets / t;
                 let lanes = lane_hi - lane_lo;
                 let tr = if tile_rows == 0 {
-                    (TILE_TARGET_BYTES / (lanes * d * 4)).clamp(1, rows)
+                    (TILE_TARGET_BYTES / (lanes * d * elem_bytes)).clamp(1, rows)
                 } else {
                     tile_rows
                 };
@@ -206,6 +312,7 @@ impl FusedParallelMips {
                     kernel,
                     states: Vec::new(),
                     scores: vec![0.0; lanes],
+                    rescore_row: vec![0.0; d],
                 }
             })
             .collect();
@@ -214,17 +321,22 @@ impl FusedParallelMips {
             states,
             |state: &mut FusedLaneState, job: &FusedJob| {
                 // Safety: the dispatcher blocks on the reply barrier before
-                // releasing the query-block borrow.
+                // releasing the query-block (and query-code) borrows.
                 let queries = unsafe { job.queries.get() };
-                state.run(queries, job.nq)
+                let qcodes = unsafe { job.qcodes.get() };
+                let qscales = unsafe { job.qscales.get() };
+                state.run(queries, job.nq, qcodes, qscales)
             },
         );
         FusedParallelMips {
             params,
             d,
+            dtype,
             kernel,
             pool,
             cand_scratch: Vec::with_capacity(params.num_candidates()),
+            qcodes: Vec::new(),
+            qscales: Vec::new(),
         }
     }
 
@@ -243,16 +355,38 @@ impl FusedParallelMips {
         self.d
     }
 
+    /// The database's stored element encoding.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
     /// Fused scoring + two-stage Top-K for a packed `[nq, d]` query block:
     /// per-query top-K candidates with database-row indices, canonical
-    /// (descending) order.
+    /// (descending) order. Under int8 the returned values are exact f32
+    /// dot products against the dequantized stored rows (the Stage-1
+    /// quantized scores only route candidates).
     pub fn run_batch(&mut self, queries: &[f32], nq: usize) -> Vec<Vec<Candidate>> {
         assert_eq!(queries.len(), nq * self.d, "query block size mismatch");
         if nq == 0 {
             return Vec::new();
         }
+        if self.dtype == Dtype::I8 {
+            // Quantize the batch's queries once here rather than per
+            // worker: every worker scores the same codes, and symmetric
+            // query quantization keeps the integer kernel exact.
+            self.qcodes.resize(nq * self.d, 0);
+            self.qscales.resize(nq, 0.0);
+            for qi in 0..nq {
+                self.qscales[qi] = quant::quantize_query_i8(
+                    &queries[qi * self.d..(qi + 1) * self.d],
+                    &mut self.qcodes[qi * self.d..(qi + 1) * self.d],
+                );
+            }
+        }
         let per_worker = self.pool.dispatch(|_| FusedJob {
             queries: SliceHandle::new(queries),
+            qcodes: SliceHandle::new(&self.qcodes),
+            qscales: SliceHandle::new(&self.qscales),
             nq,
         });
         merge_stage2(&per_worker, nq, self.params.k, &mut self.cand_scratch)
@@ -264,6 +398,7 @@ mod tests {
     use std::sync::Arc;
 
     use super::*;
+    use crate::store::RowSource;
     use crate::topk::kernel;
     use crate::topk::TwoStageTopK;
     use crate::util::check::property;
@@ -288,6 +423,55 @@ mod tests {
             .map(|qi| {
                 kernel::score_tile(db, d, &queries[qi * d..(qi + 1) * d], &mut scores);
                 op.run(&scores)
+            })
+            .collect()
+    }
+
+    /// The sequential oracle for any encoding: score the full array with
+    /// the scalar reference kernel for the dtype, then run the operator —
+    /// with the exact-f32 rescore hook under int8. This is exactly what
+    /// the sequential `NativeBackend` does for quantized shards.
+    fn oracle_batch_data(
+        data: &ShardData,
+        d: usize,
+        params: TwoStageParams,
+        queries: &[f32],
+        nq: usize,
+    ) -> Vec<Vec<Candidate>> {
+        let mut op = TwoStageTopK::new(params);
+        let mut scores = vec![0f32; params.n];
+        let mut row = vec![0f32; d];
+        (0..nq)
+            .map(|qi| {
+                let q = &queries[qi * d..(qi + 1) * d];
+                match data {
+                    ShardData::F32(rows) => kernel::score_tile(rows.rows(), d, q, &mut scores),
+                    ShardData::F16(codes) => {
+                        kernel::score_tile_f16(codes.codes(), d, q, &mut scores)
+                    }
+                    ShardData::I8 { codes, scales } => {
+                        let mut qc = vec![0i8; d];
+                        let qs = quant::quantize_query_i8(q, &mut qc);
+                        kernel::score_tile_i8(
+                            codes.codes(),
+                            d,
+                            &qc,
+                            scales.rows(),
+                            qs,
+                            &mut scores,
+                        );
+                    }
+                }
+                if data.needs_rescore() {
+                    op.run_rescored(&scores, |c| {
+                        data.dequantize_row(d, c.index as usize, &mut row);
+                        let mut exact = 0.0f32;
+                        kernel::score_tile(&row, d, q, std::slice::from_mut(&mut exact));
+                        c.value = exact;
+                    })
+                } else {
+                    op.run(&scores)
+                }
             })
             .collect()
     }
@@ -441,9 +625,102 @@ mod tests {
     }
 
     #[test]
+    fn quantized_engines_match_the_sequential_oracle_bit_identically() {
+        // The quantized tentpole property at the engine level: for every
+        // encoding, every available kernel, threads {1, 2, 4} and ragged
+        // tiles, the fused engine equals the sequential scalar oracle for
+        // that encoding (quantized Stage-1 scoring + exact-f32 rescore
+        // under int8) — same candidates, same bits.
+        use crate::topk::simd::SimdKernel;
+        let mut rng = Rng::new(73);
+        let (n, k, b, kp) = (600usize, 16usize, 50usize, 2usize);
+        for &d in &[13usize, 24] {
+            let params = TwoStageParams::new(n, k, b, kp);
+            let db = make_db(&mut rng, n, d);
+            let nq = 3;
+            let queries = make_db(&mut rng, nq, d);
+            for dtype in Dtype::ALL {
+                let data =
+                    ShardData::quantize_f32(RowSource::from_vec(db.clone()), d, dtype).unwrap();
+                let want = oracle_batch_data(&data, d, params, &queries, nq);
+                for kernel in SimdKernel::available() {
+                    for threads in [1usize, 2, 4] {
+                        for tile_rows in [0usize, 5] {
+                            let mut fused = FusedParallelMips::with_kernel(
+                                data.clone(),
+                                d,
+                                params,
+                                threads,
+                                tile_rows,
+                                kernel,
+                            );
+                            assert_eq!(fused.dtype(), dtype);
+                            assert_eq!(
+                                fused.run_batch(&queries, nq),
+                                want,
+                                "dtype {dtype} kernel {} d={d} threads={threads} tile_rows={tile_rows}",
+                                kernel.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_results_carry_exact_f32_values_of_the_stored_rows() {
+        // The rescore contract: every returned candidate value equals the
+        // exact fixed-order f32 dot of the query with the *dequantized
+        // stored row* — not the approximate integer-domain Stage-1 score.
+        let mut rng = Rng::new(79);
+        let (n, d, k, b, kp) = (512usize, 10usize, 16usize, 64usize, 2usize);
+        let params = TwoStageParams::new(n, k, b, kp);
+        let db = make_db(&mut rng, n, d);
+        let data = ShardData::quantize_f32(RowSource::from_vec(db), d, Dtype::I8).unwrap();
+        let exact_rows = data.dequantize_all(d);
+        let queries = make_db(&mut rng, 2, d);
+        let mut fused = FusedParallelMips::new(data, d, params, 3, 0);
+        let got = fused.run_batch(&queries, 2);
+        for (qi, cands) in got.iter().enumerate() {
+            assert_eq!(cands.len(), k);
+            let q = &queries[qi * d..(qi + 1) * d];
+            for c in cands {
+                let row = &exact_rows[c.index as usize * d..(c.index as usize + 1) * d];
+                let mut exact = 0.0f32;
+                kernel::score_tile(row, d, q, std::slice::from_mut(&mut exact));
+                assert_eq!(
+                    c.value.to_bits(),
+                    exact.to_bits(),
+                    "query {qi} row {}",
+                    c.index
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f16_scores_are_exact_dots_of_the_stored_rows() {
+        // f16 widening is exact, so the fused engine's scores must equal
+        // scoring the dequantized (widened) rows in f32 — no rescore pass
+        // exists or is needed on this path.
+        let mut rng = Rng::new(83);
+        let (n, d, k, b, kp) = (512usize, 12usize, 16usize, 64usize, 2usize);
+        let params = TwoStageParams::new(n, k, b, kp);
+        let db = make_db(&mut rng, n, d);
+        let data = ShardData::quantize_f32(RowSource::from_vec(db), d, Dtype::F16).unwrap();
+        let widened = data.dequantize_all(d);
+        let queries = make_db(&mut rng, 2, d);
+        let mut fused = FusedParallelMips::new(data, d, params, 2, 0);
+        let got = fused.run_batch(&queries, 2);
+        let want = oracle_batch(&widened, d, params, &queries, 2);
+        assert_eq!(got, want);
+    }
+
+    #[test]
     fn prop_fused_equals_unfused_oracle() {
         let kernels = crate::topk::simd::SimdKernel::available();
-        property("fused == score_tile + sequential two-stage", 25, |g| {
+        property("fused == per-dtype scoring + sequential two-stage", 25, |g| {
             let b = *g.choose(&[16usize, 50, 96]);
             let rows = g.usize_in(2..=12);
             let n = b * rows;
@@ -454,23 +731,19 @@ mod tests {
             let tile_rows = g.usize_in(0..=rows + 2);
             let nq = g.usize_in(1..=4);
             let kernel = *g.choose(&kernels);
+            let dtype = *g.choose(&Dtype::ALL);
             let params = TwoStageParams::new(n, k, b, kp);
             let db: Vec<f32> = (0..n * d).map(|_| g.rng().next_gaussian() as f32).collect();
             let queries: Vec<f32> =
                 (0..nq * d).map(|_| g.rng().next_gaussian() as f32).collect();
-            let want = oracle_batch(&db, d, params, &queries, nq);
-            let mut fused = FusedParallelMips::with_kernel(
-                Arc::new(db),
-                d,
-                params,
-                threads,
-                tile_rows,
-                kernel,
-            );
+            let data = ShardData::quantize_f32(RowSource::from_vec(db), d, dtype).unwrap();
+            let want = oracle_batch_data(&data, d, params, &queries, nq);
+            let mut fused =
+                FusedParallelMips::with_kernel(data, d, params, threads, tile_rows, kernel);
             assert_eq!(
                 fused.run_batch(&queries, nq),
                 want,
-                "(n={n},k={k},b={b},kp={kp},d={d},threads={threads},tile={tile_rows},nq={nq},kernel={})",
+                "(n={n},k={k},b={b},kp={kp},d={d},threads={threads},tile={tile_rows},nq={nq},kernel={},dtype={dtype})",
                 kernel.name()
             );
         });

@@ -57,6 +57,75 @@ pub fn score_tile(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
     }
 }
 
+/// f16 variant of [`score_tile`]: rows are stored as binary16 bit
+/// patterns and widened to f32 element by element (an *exact* conversion),
+/// then reduced in the identical fixed order. Because widening is exact,
+/// `out[j]` is bit-for-bit what [`score_tile`] would produce on the
+/// widened rows — the dequantize-free f16 path needs no Stage-2 rescore.
+///
+/// This is the scalar reference for the SIMD f16 paths (AVX2 widens 8
+/// lanes at a time with `vcvtph2ps`, which performs the same exact
+/// conversion), so their bit-identity argument reduces to the f32 one.
+pub fn score_tile_f16(codes: &[u16], d: usize, q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(codes.len(), out.len() * d);
+    let widen = crate::util::f16::f16_to_f32;
+    let aligned = d - d % ACC_LANES;
+    let (q_main, q_tail) = q.split_at(aligned);
+    for (j, s) in out.iter_mut().enumerate() {
+        let v = &codes[j * d..(j + 1) * d];
+        let (v_main, v_tail) = v.split_at(aligned);
+        let mut acc = [0f32; ACC_LANES];
+        for (qc, vc) in q_main
+            .chunks_exact(ACC_LANES)
+            .zip(v_main.chunks_exact(ACC_LANES))
+        {
+            for l in 0..ACC_LANES {
+                acc[l] += qc[l] * widen(vc[l]);
+            }
+        }
+        let mut sum = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+            + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+        for (a, &b) in q_tail.iter().zip(v_tail.iter()) {
+            sum += a * widen(b);
+        }
+        *s = sum;
+    }
+}
+
+/// int8 variant of [`score_tile`]: rows *and* the query are symmetric-
+/// absmax codes; the dot product is accumulated in i32 (exact — no
+/// rounding happens until the final rescale), then
+/// `out[j] = (Σ code·qcode) · row_scales[j] · qscale`.
+///
+/// Because integer addition is associative, the accumulation order is
+/// irrelevant to the result — any SIMD regrouping is bit-identical by
+/// construction, unlike the f32 paths where the reduction order had to be
+/// pinned. The widest products are `127² = 16129`, so the i32 accumulator
+/// is exact for `d ≤ 2^31 / 16129 ≈ 133 000` (debug-asserted; far above
+/// any serving dimensionality here).
+pub fn score_tile_i8(
+    codes: &[i8],
+    d: usize,
+    qcodes: &[i8],
+    row_scales: &[f32],
+    qscale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(qcodes.len(), d);
+    debug_assert_eq!(codes.len(), out.len() * d);
+    debug_assert_eq!(row_scales.len(), out.len());
+    debug_assert!(d <= 131_072, "i32 accumulator needs d <= ~133k, got {d}");
+    for (j, s) in out.iter_mut().enumerate() {
+        let v = &codes[j * d..(j + 1) * d];
+        let mut acc: i32 = 0;
+        for (&a, &b) in qcodes.iter().zip(v.iter()) {
+            acc += a as i32 * b as i32;
+        }
+        *s = acc as f32 * (row_scales[j] * qscale);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +190,75 @@ mod tests {
         let mut out: Vec<f32> = Vec::new();
         score_tile(&[], 2, &q, &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn f16_tile_equals_f32_tile_on_widened_rows() {
+        // Widening is exact, so the f16 kernel must be *bit-identical* to
+        // the f32 kernel run over the pre-widened rows — this equality is
+        // the whole reason the f16 path skips the Stage-2 rescore.
+        let mut rng = Rng::new(31);
+        for &d in &[1usize, 7, 8, 13, 64, 100] {
+            let n = 6;
+            let codes: Vec<u16> = (0..n * d)
+                .map(|_| {
+                    let h = (rng.next_u64() as u16) & 0x7fff;
+                    let h = if h & 0x7c00 == 0x7c00 { h & 0x43ff } else { h };
+                    h | ((rng.next_u64() as u16) & 0x8000)
+                })
+                .collect();
+            let widened: Vec<f32> = codes
+                .iter()
+                .map(|&h| crate::util::f16::f16_to_f32(h))
+                .collect();
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let mut want = vec![0f32; n];
+            score_tile(&widened, d, &q, &mut want);
+            let mut got = vec![1f32; n];
+            score_tile_f16(&codes, d, &q, &mut got);
+            for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "d={d} row {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_tile_matches_exact_integer_dot() {
+        // The i32 accumulation is exact, so the kernel must equal the
+        // naive i64 integer dot rescaled — at any d, including tails.
+        let mut rng = Rng::new(37);
+        for &d in &[1usize, 7, 8, 13, 16, 33, 100, 256] {
+            let n = 5;
+            let codes: Vec<i8> = (0..n * d)
+                .map(|_| (rng.next_u64() % 255) as i64 as i8)
+                .collect();
+            let qcodes: Vec<i8> = (0..d).map(|_| (rng.next_u64() % 255) as i64 as i8).collect();
+            let scales: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.01).collect();
+            let qscale = 0.0375f32;
+            let mut got = vec![0f32; n];
+            score_tile_i8(&codes, d, &qcodes, &scales, qscale, &mut got);
+            for j in 0..n {
+                let acc: i64 = qcodes
+                    .iter()
+                    .zip(&codes[j * d..(j + 1) * d])
+                    .map(|(&a, &b)| a as i64 * b as i64)
+                    .sum();
+                let want = acc as f32 * (scales[j] * qscale);
+                assert_eq!(got[j].to_bits(), want.to_bits(), "d={d} row {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_tile_saturated_codes_do_not_overflow() {
+        // All-extreme codes at a large-ish d: the i32 accumulator holds
+        // d * 127 * 127 without wrapping.
+        let d = 4096;
+        let codes: Vec<i8> = vec![127; d];
+        let qcodes: Vec<i8> = vec![-127; d];
+        let mut out = vec![0f32; 1];
+        score_tile_i8(&codes, d, &qcodes, &[1.0], 1.0, &mut out);
+        assert_eq!(out[0], -(d as f32) * 127.0 * 127.0);
     }
 
     #[test]

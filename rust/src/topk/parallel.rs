@@ -55,20 +55,21 @@ use super::simd::SimdKernel;
 use super::twostage::{Stage1State, TwoStageParams};
 use super::Candidate;
 
-/// A raw view of one slice of f32s, sendable to workers.
+/// A raw view of one slice (f32 scores/queries by default; the fused
+/// engine also ships int8 query codes), sendable to workers.
 ///
 /// Safety contract: the pool guarantees every worker has finished reading
 /// (replied or exited) before the dispatching call releases the borrow the
 /// handle was built from — see [`LanePool::dispatch`].
-pub(super) struct SliceHandle {
-    ptr: *const f32,
+pub(super) struct SliceHandle<T = f32> {
+    ptr: *const T,
     len: usize,
 }
 
-unsafe impl Send for SliceHandle {}
+unsafe impl<T: Sync> Send for SliceHandle<T> {}
 
-impl SliceHandle {
-    pub(super) fn new(slice: &[f32]) -> SliceHandle {
+impl<T> SliceHandle<T> {
+    pub(super) fn new(slice: &[T]) -> SliceHandle<T> {
         SliceHandle {
             ptr: slice.as_ptr(),
             len: slice.len(),
@@ -78,7 +79,7 @@ impl SliceHandle {
     /// # Safety
     /// The referenced slice must outlive every use of the returned
     /// reference; the pool's reply barrier enforces this.
-    pub(super) unsafe fn get<'a>(&self) -> &'a [f32] {
+    pub(super) unsafe fn get<'a>(&self) -> &'a [T] {
         std::slice::from_raw_parts(self.ptr, self.len)
     }
 }
@@ -212,14 +213,7 @@ impl<J: Send + 'static> Drop for LanePool<J> {
 /// sequential Stage 2: `-inf` slots (possible only when K′ exceeds the
 /// bucket size) are dropped.
 pub(super) fn state_candidates(state: &Stage1State, filter_padding: bool) -> Vec<Candidate> {
-    let mut out = Vec::with_capacity(state.values.len());
-    for (&value, &index) in state.values.iter().zip(state.indices.iter()) {
-        if filter_padding && !(value > f32::NEG_INFINITY) {
-            continue;
-        }
-        out.push(Candidate { index, value });
-    }
-    out
+    state.candidates(filter_padding)
 }
 
 /// Stage 2 per query over the merged per-worker candidates: in-place

@@ -189,6 +189,68 @@ impl SimdKernel {
         }
     }
 
+    /// Dispatched [`kernel::score_tile_f16`]: score one query against a
+    /// tile of binary16 rows, dequantize-free (each 8-lane load widens in
+    /// the register). Bit-identical to the scalar reference everywhere:
+    /// widening is exact on every path (`vcvtph2ps` performs the same
+    /// conversion as the scalar [`crate::util::f16`] table-free widen), so
+    /// the argument reduces to the f32 reduction-order one. On x86_64 the
+    /// vector path additionally needs F16C (checked per call through
+    /// std's cached feature detection — AVX2 does not formally imply it);
+    /// hosts without it fall back to the scalar reference, changing speed,
+    /// never bits. On aarch64 the f16 path *is* the scalar reference:
+    /// stable Rust exposes no NEON f16 widening intrinsics, so a vector
+    /// implementation would need inline asm for ~2× on a path whose win is
+    /// already mostly the halved memory stream.
+    #[inline]
+    pub fn score_tile_f16(&self, codes: &[u16], d: usize, q: &[f32], out: &mut [f32]) {
+        match self.kind {
+            Resolved::Scalar => kernel::score_tile_f16(codes, d, q, out),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: as in `score_tile`, plus the explicit F16C check.
+            Resolved::Avx2 => {
+                if is_x86_feature_detected!("f16c") {
+                    unsafe { avx2::score_tile_f16(codes, d, q, out) }
+                } else {
+                    kernel::score_tile_f16(codes, d, q, out)
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Resolved::Neon => kernel::score_tile_f16(codes, d, q, out),
+        }
+    }
+
+    /// Dispatched [`kernel::score_tile_i8`]: score a quantized query
+    /// against a tile of int8 rows in pure integer arithmetic, rescaling
+    /// once per row. Bit-identity here is free: the i32 accumulation is
+    /// exact and associative, so *any* regrouping — `madd`-pairs on AVX2,
+    /// widening-multiply + pairwise-accumulate on NEON — produces the
+    /// identical integer, and the single f32 rescale rounds identically.
+    #[inline]
+    pub fn score_tile_i8(
+        &self,
+        codes: &[i8],
+        d: usize,
+        qcodes: &[i8],
+        row_scales: &[f32],
+        qscale: f32,
+        out: &mut [f32],
+    ) {
+        match self.kind {
+            Resolved::Scalar => kernel::score_tile_i8(codes, d, qcodes, row_scales, qscale, out),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: as in `score_tile`.
+            Resolved::Avx2 => unsafe {
+                avx2::score_tile_i8(codes, d, qcodes, row_scales, qscale, out)
+            },
+            #[cfg(target_arch = "aarch64")]
+            // Safety: as in `score_tile`.
+            Resolved::Neon => unsafe {
+                neon::score_tile_i8(codes, d, qcodes, row_scales, qscale, out)
+            },
+        }
+    }
+
     /// Dispatched Stage-1 tail-compare: bit `j` of the result is
     /// `xs[j] >= ts[j]` (false when either operand is NaN, matching the
     /// scalar operator). `xs` and `ts` must have equal length ≤ 64 — one
@@ -331,6 +393,91 @@ mod avx2 {
         }
     }
 
+    /// AVX2 + F16C f16 [`score_tile_f16`](super::kernel::score_tile_f16):
+    /// identical structure to [`score_tile`], except each 8-lane row load
+    /// is 16 bytes of binary16 widened in-register by `vcvtph2ps` — an
+    /// exact conversion, so per lane this is the same f32 multiply/add
+    /// sequence as the scalar reference over pre-widened rows.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 *and* F16C (the dispatcher checks F16C
+    /// per call; AVX2 does not formally imply it).
+    #[target_feature(enable = "avx2", enable = "f16c")]
+    pub unsafe fn score_tile_f16(codes: &[u16], d: usize, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(codes.len(), out.len() * d);
+        let aligned = d - d % ACC_LANES;
+        for (j, s) in out.iter_mut().enumerate() {
+            let v = &codes[j * d..(j + 1) * d];
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0;
+            while i < aligned {
+                let qa = _mm256_loadu_ps(crate::lane_ptr!(q, i, ACC_LANES));
+                let vh = _mm_loadu_si128(crate::lane_ptr!(v, i, ACC_LANES) as *const __m128i);
+                let va = _mm256_cvtph_ps(vh);
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(qa, va));
+                i += ACC_LANES;
+            }
+            let mut a = [0f32; ACC_LANES];
+            _mm256_storeu_ps(a.as_mut_ptr(), acc);
+            let mut sum = ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]));
+            for l in aligned..d {
+                sum += q[l] * crate::util::f16::f16_to_f32(v[l]);
+            }
+            *s = sum;
+        }
+    }
+
+    /// AVX2 int8 [`score_tile_i8`](super::kernel::score_tile_i8): 16 codes
+    /// per step, sign-extended to i16 (`vpmovsxbw`) and multiply-pair-
+    /// accumulated by `vpmaddwd` — both exact, unlike the unsigned-times-
+    /// signed `vpmaddubsw`, which saturates. The i32 lane sums regroup the
+    /// scalar accumulation, which integer associativity makes bit-identical.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn score_tile_i8(
+        codes: &[i8],
+        d: usize,
+        qcodes: &[i8],
+        row_scales: &[f32],
+        qscale: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(qcodes.len(), d);
+        debug_assert_eq!(codes.len(), out.len() * d);
+        debug_assert_eq!(row_scales.len(), out.len());
+        debug_assert!(d <= 131_072, "i32 accumulator needs d <= ~133k, got {d}");
+        let aligned = d - d % 16;
+        for (j, s) in out.iter_mut().enumerate() {
+            let v = &codes[j * d..(j + 1) * d];
+            let mut acc = _mm256_setzero_si256();
+            let mut i = 0;
+            while i < aligned {
+                let qa = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                    crate::lane_ptr!(qcodes, i, 16) as *const __m128i,
+                ));
+                let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                    crate::lane_ptr!(v, i, 16) as *const __m128i,
+                ));
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(qa, va));
+                i += 16;
+            }
+            let quad = _mm_add_epi32(
+                _mm256_castsi256_si128(acc),
+                _mm256_extracti128_si256::<1>(acc),
+            );
+            let pair = _mm_add_epi32(quad, _mm_shuffle_epi32::<0b1110>(quad));
+            let one = _mm_add_epi32(pair, _mm_shuffle_epi32::<0b01>(pair));
+            let mut sum = _mm_cvtsi128_si32(one);
+            for l in aligned..d {
+                sum += qcodes[l] as i32 * v[l] as i32;
+            }
+            *s = sum as f32 * (row_scales[j] * qscale);
+        }
+    }
+
     /// AVX2 tail-compare: 8-wide ordered-quiet `>=` + `movemask` (NaN in
     /// either operand compares false, like scalar `>=`).
     ///
@@ -398,6 +545,48 @@ mod neon {
                 sum += q[l] * v[l];
             }
             *s = sum;
+        }
+    }
+
+    /// NEON int8 [`score_tile_i8`](super::kernel::score_tile_i8): 16 codes
+    /// per step via widening multiplies (`smull`/`smull2` → i16×8) and
+    /// pairwise add-accumulate into i32 lanes (`sadalp`) — all exact
+    /// integer ops, so associativity makes the regrouping bit-identical to
+    /// the scalar reference. (There is no NEON f16 `score_tile` — see the
+    /// dispatcher docs; the f16 path on aarch64 is the scalar reference.)
+    ///
+    /// # Safety
+    /// The CPU must support NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn score_tile_i8(
+        codes: &[i8],
+        d: usize,
+        qcodes: &[i8],
+        row_scales: &[f32],
+        qscale: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(qcodes.len(), d);
+        debug_assert_eq!(codes.len(), out.len() * d);
+        debug_assert_eq!(row_scales.len(), out.len());
+        debug_assert!(d <= 131_072, "i32 accumulator needs d <= ~133k, got {d}");
+        let aligned = d - d % 16;
+        for (j, s) in out.iter_mut().enumerate() {
+            let v = &codes[j * d..(j + 1) * d];
+            let mut acc = vdupq_n_s32(0);
+            let mut i = 0;
+            while i < aligned {
+                let qa = vld1q_s8(crate::lane_ptr!(qcodes, i, 16));
+                let va = vld1q_s8(crate::lane_ptr!(v, i, 16));
+                acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(qa), vget_low_s8(va)));
+                acc = vpadalq_s16(acc, vmull_s8(vget_high_s8(qa), vget_high_s8(va)));
+                i += 16;
+            }
+            let mut sum = vaddvq_s32(acc);
+            for l in aligned..d {
+                sum += qcodes[l] as i32 * v[l] as i32;
+            }
+            *s = sum as f32 * (row_scales[j] * qscale);
         }
     }
 
@@ -555,6 +744,73 @@ mod tests {
             let mut got = vec![0f32; 4];
             k.score_tile(&rows, d, &q, &mut got);
             assert_bits_eq(&got, &want, &format!("kernel {} non-finite", k.name()));
+        }
+    }
+
+    #[test]
+    fn score_tile_f16_bit_identical_to_scalar_across_ragged_depths() {
+        // The quantized analogue of the headline property: every
+        // implementation (including the F16C widen-in-register path)
+        // reproduces the scalar f16 reference bit-for-bit.
+        let mut rng = Rng::new(211);
+        for &d in &[1usize, 3, 7, 8, 9, 13, 16, 31, 64, 100, 257] {
+            let n = 9;
+            let codes: Vec<u16> = (0..n * d)
+                .map(|_| {
+                    let h = (rng.next_u64() as u16) & 0x7fff;
+                    let h = if h & 0x7c00 == 0x7c00 { h & 0x43ff } else { h };
+                    h | ((rng.next_u64() as u16) & 0x8000)
+                })
+                .collect();
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let mut want = vec![0f32; n];
+            kernel::score_tile_f16(&codes, d, &q, &mut want);
+            for k in SimdKernel::available() {
+                let mut got = vec![1f32; n];
+                k.score_tile_f16(&codes, d, &q, &mut got);
+                assert_bits_eq(&got, &want, &format!("kernel {} f16 d={d}", k.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn score_tile_i8_bit_identical_to_scalar_across_ragged_depths() {
+        // Integer accumulation is associative so this holds by
+        // construction; the test pins the lane bookkeeping (16-code steps,
+        // scalar tails, horizontal sums) across every implementation.
+        let mut rng = Rng::new(223);
+        for &d in &[1usize, 3, 8, 15, 16, 17, 31, 32, 100, 256, 1000] {
+            let n = 7;
+            let codes: Vec<i8> = (0..n * d).map(|_| (rng.next_u64() % 255) as i64 as i8).collect();
+            let qcodes: Vec<i8> = (0..d).map(|_| (rng.next_u64() % 255) as i64 as i8).collect();
+            let scales: Vec<f32> = (0..n).map(|_| rng.next_f32() + 1e-3).collect();
+            let qscale = rng.next_f32() + 1e-3;
+            let mut want = vec![0f32; n];
+            kernel::score_tile_i8(&codes, d, &qcodes, &scales, qscale, &mut want);
+            for k in SimdKernel::available() {
+                let mut got = vec![1f32; n];
+                k.score_tile_i8(&codes, d, &qcodes, &scales, qscale, &mut got);
+                assert_bits_eq(&got, &want, &format!("kernel {} i8 d={d}", k.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_tiles_handle_empty_and_nan_scales() {
+        for k in SimdKernel::available() {
+            // Empty tiles are no-ops on both quantized paths.
+            let mut out: Vec<f32> = Vec::new();
+            k.score_tile_f16(&[], 3, &[1.0, 2.0, 3.0], &mut out);
+            assert!(out.is_empty());
+            k.score_tile_i8(&[], 3, &[1, 2, 3], &[], 1.0, &mut out);
+            assert!(out.is_empty());
+            // A NaN query scale (non-finite query) NaN-poisons every int8
+            // score, matching what the f32 kernel does with a NaN query.
+            let codes: Vec<i8> = vec![1; 16];
+            let qcodes: Vec<i8> = vec![0; 16]; // what quantize_query_i8 emits
+            let mut got = vec![0f32; 1];
+            k.score_tile_i8(&codes, 16, &qcodes, &[0.5], f32::NAN, &mut got);
+            assert!(got[0].is_nan(), "kernel {}", k.name());
         }
     }
 

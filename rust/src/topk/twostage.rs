@@ -154,6 +154,22 @@ impl Stage1State {
         self.buckets
     }
 
+    /// Extract the state's candidates in storage order. `filter_padding`
+    /// mirrors Stage 2: `-inf` slots (possible only when K′ exceeds the
+    /// bucket size) are dropped. This is the extraction the parallel and
+    /// fused engines run per worker, and the hook point where the int8
+    /// serving path re-scores survivors in exact f32 before the merge.
+    pub fn candidates(&self, filter_padding: bool) -> Vec<Candidate> {
+        let mut out = Vec::with_capacity(self.values.len());
+        for (&value, &index) in self.values.iter().zip(self.indices.iter()) {
+            if filter_padding && !(value > f32::NEG_INFINITY) {
+                continue;
+            }
+            out.push(Candidate { index, value });
+        }
+        out
+    }
+
     /// Stream one tile of `(index, score)` pairs into the state:
     /// `scores[j]` is the value of element `base_index + j`, which belongs
     /// to bucket `lane0 + j` of *this* state.
@@ -296,6 +312,22 @@ impl TwoStageTopK {
     pub fn run(&mut self, values: &[f32]) -> Vec<Candidate> {
         self.stage1(values);
         self.stage2()
+    }
+
+    /// [`run`](Self::run) with an exact-rescore hook between the stages:
+    /// after Stage 1 extracts its `B·K′` survivors but *before* the Stage-2
+    /// top-K selection, `rescore` may replace each candidate's value. The
+    /// int8 serving path uses this to swap approximate quantized Stage-1
+    /// scores for exact f32 dot products, so selection and the canonical
+    /// order run on exact values. The identity hook reproduces
+    /// [`run`](Self::run) bit-for-bit.
+    pub fn run_rescored<F: FnMut(&mut Candidate)>(
+        &mut self,
+        values: &[f32],
+        rescore: F,
+    ) -> Vec<Candidate> {
+        self.stage1(values);
+        self.stage2_rescored(rescore)
     }
 
     /// Stage 1 only: populate the per-bucket top-K′ state.
@@ -475,6 +507,13 @@ impl TwoStageTopK {
     /// occur when K′ exceeds a bucket's size). Selects in place over a
     /// reused scratch buffer — no per-call allocation after warmup.
     pub fn stage2(&mut self) -> Vec<Candidate> {
+        self.stage2_rescored(|_| {})
+    }
+
+    /// [`stage2`](Self::stage2) with the rescore hook of
+    /// [`run_rescored`](Self::run_rescored): `rescore` runs over every
+    /// extracted candidate before the top-K selection.
+    pub fn stage2_rescored<F: FnMut(&mut Candidate)>(&mut self, mut rescore: F) -> Vec<Candidate> {
         self.cand_scratch.clear();
         if self.params.local_k > self.params.bucket_size() {
             // -inf padding slots possible: filter them out.
@@ -494,6 +533,9 @@ impl TwoStageTopK {
                     .zip(self.state.indices.iter())
                     .map(|(&value, &index)| Candidate { index, value }),
             );
+        }
+        for c in self.cand_scratch.iter_mut() {
+            rescore(c);
         }
         let k = self.params.k.min(self.cand_scratch.len());
         if k < self.cand_scratch.len() {
@@ -771,6 +813,37 @@ mod tests {
                 assert_eq!(got.indices, want.indices, "kp={kp} kernel {} indices", k.name());
             }
         }
+    }
+
+    #[test]
+    fn state_candidates_and_rescore_hook() {
+        // candidates() is the engines' per-worker extraction: storage
+        // order, optionally dropping the -inf padding slots that exist
+        // when K' exceeds the bucket size.
+        let p = TwoStageParams::new(64, 24, 16, 8); // bucket size 4 < K'=8
+        let mut rng = Rng::new(91);
+        let v = random_values(&mut rng, 64);
+        let mut ts = TwoStageTopK::new(p);
+        ts.stage1(&v);
+        let all = ts.state().candidates(false);
+        assert_eq!(all.len(), p.num_candidates());
+        for (slot, c) in all.iter().enumerate() {
+            let (val, idx) = ts.state().slot(slot / p.buckets, slot % p.buckets);
+            assert_eq!((c.value, c.index), (val, idx), "slot {slot}");
+        }
+        // K' >= bucket size keeps every element; only padding is dropped.
+        let kept = ts.state().candidates(true);
+        assert_eq!(kept.len(), 64);
+        assert!(kept.iter().all(|c| c.value > f32::NEG_INFINITY));
+
+        // The identity hook reproduces run() bit-for-bit; a value-changing
+        // hook re-ranks by the new values before selection.
+        let want = ts.run(&v);
+        assert_eq!(ts.run_rescored(&v, |_| {}), want);
+        let negated = ts.run_rescored(&v, |c| c.value = -c.value);
+        let min = v.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert_eq!(negated[0].value, -min);
+        assert!(negated.windows(2).all(|w| w[0].value >= w[1].value));
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! IEEE 754 binary16 ("half") conversions, implemented on bit patterns.
+//!
+//! The offline environment has no `half` crate, and stable Rust has no
+//! `f16` primitive we can rely on across the toolchains CI runs, so the
+//! store's f16 row encoding ([`crate::store::quant`]) and the f16 scoring
+//! kernels ([`crate::topk::simd`]) share these two functions. Properties
+//! the rest of the crate depends on:
+//!
+//! - `f16_to_f32` is **exact**: every binary16 value is exactly
+//!   representable in binary32, so widening loses nothing. This is why
+//!   f16-stored rows need no Stage-2 rescore — Stage-1 scores computed on
+//!   the widened values already *are* the exact f32 dot products of the
+//!   stored rows.
+//! - `f32_to_f16` rounds to nearest, ties to even — the same rounding
+//!   IEEE 754 prescribes and hardware `F16C`/`FCVT` units implement — so
+//!   the software encoder and any future hardware encoder agree bit for
+//!   bit.
+
+/// Widen a binary16 bit pattern to `f32`. Exact for every input; NaN
+/// payloads are preserved in the top 10 mantissa bits.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let mant = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        // Inf / NaN: top-align the payload under the f32 exponent.
+        return f32::from_bits(sign | 0x7f80_0000 | (mant << 13));
+    }
+    if exp == 0 {
+        // Zero or subnormal: value is mant * 2^-24, exact in f32.
+        let mag = (mant as f32) * (1.0 / 16_777_216.0);
+        return f32::from_bits(mag.to_bits() | sign);
+    }
+    f32::from_bits(sign | ((exp as u32 + 127 - 15) << 23) | (mant << 13))
+}
+
+/// Narrow an `f32` to a binary16 bit pattern, rounding to nearest with
+/// ties to even. Values at or above 65520 (the midpoint between the
+/// largest finite f16 and the next power of two) become infinity; values
+/// at or below 2^-25 become (signed) zero; NaNs stay NaN with the quiet
+/// bit forced on.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // Inf stays inf; NaN keeps its top payload bits, quieted.
+        let payload = if abs > 0x7f80_0000 {
+            0x0200 | ((abs >> 13) & 0x3ff) as u16
+        } else {
+            0
+        };
+        return sign | 0x7c00 | payload;
+    }
+    if abs >= 0x4780_0000 {
+        // |x| >= 65536: f16 exponent would be >= 31. Overflow to inf.
+        // (Values in [65520, 65536) overflow via the rounding carry below.)
+        return sign | 0x7c00;
+    }
+    if abs <= 0x3300_0000 {
+        // |x| <= 2^-25: below half the smallest subnormal (the tie at
+        // exactly 2^-25 goes to the even neighbour, zero).
+        return sign;
+    }
+    if abs < 0x3880_0000 {
+        // Subnormal result: exponent in [-25, -15]. Shift the 24-bit
+        // significand down so the result's unit is 2^-24, rounding the
+        // dropped bits to nearest-even.
+        let exp = (abs >> 23) as i32 - 127;
+        let mant = (abs & 0x7f_ffff) | 0x80_0000;
+        let shift = (13 + (-14 - exp)) as u32;
+        let halfway = 1u32 << (shift - 1);
+        let rem = mant & ((1u32 << shift) - 1);
+        let mut out = (mant >> shift) as u16;
+        if rem > halfway || (rem == halfway && out & 1 == 1) {
+            out += 1;
+        }
+        return sign | out;
+    }
+    // Normal result: drop 13 mantissa bits with nearest-even rounding. A
+    // carry out of the mantissa correctly bumps the exponent (possibly to
+    // inf at the very top of the range).
+    let exp = ((abs >> 23) as i32 - 127 + 15) as u16;
+    let mant = abs & 0x7f_ffff;
+    let mut out = (exp << 10) | (mant >> 13) as u16;
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && out & 1 == 1) {
+        out += 1;
+    }
+    sign | out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    #[test]
+    fn known_vectors() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff); // largest finite f16
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001); // smallest subnormal
+        assert_eq!(f32_to_f16(2.0f32.powi(-14)), 0x0400); // smallest normal
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0x7bff), 65504.0);
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_to_f32(0x8001), -(2.0f32.powi(-24)));
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert!(f32_to_f16(f32::NAN) & 0x7c00 == 0x7c00);
+        assert!(f32_to_f16(f32::NAN) & 0x03ff != 0); // still a NaN, not inf
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 0x3c00 (1.0) and 0x3c01:
+        // tie goes to the even code.
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        // Just above the tie rounds up; just below rounds down.
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20)), 0x3c01);
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11) - 2.0f32.powi(-20)), 0x3c00);
+        // f16 ulp at 2048 is 2: 2049 ties down to 2048, 2051 ties up to 2052.
+        assert_eq!(f32_to_f16(2049.0), 0x6800);
+        assert_eq!(f32_to_f16(2051.0), 0x6802);
+        // Overflow threshold: 65519.996 rounds to 65504, 65520 to inf.
+        assert_eq!(f32_to_f16(65519.0), 0x7bff);
+        assert_eq!(f32_to_f16(65520.0), 0x7c00);
+        // Underflow threshold: exactly 2^-25 ties to zero, just above
+        // rounds to the smallest subnormal.
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16(2.0f32.powi(-25) * 1.0001), 0x0001);
+    }
+
+    /// Every non-NaN f16 bit pattern survives widen-then-narrow exactly.
+    /// This pins both directions at once across all 63490 such values.
+    #[test]
+    fn exhaustive_round_trip() {
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            let mant = h & 0x3ff;
+            if exp == 0x1f && mant != 0 {
+                // NaN: round trip must stay NaN (payload may gain the
+                // quiet bit).
+                assert!(f16_to_f32(h).is_nan());
+                assert_eq!(f32_to_f16(f16_to_f32(h)) & 0x7c00, 0x7c00);
+                continue;
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "h={h:#06x}");
+        }
+    }
+
+    #[test]
+    fn prop_relative_error_within_half_ulp() {
+        property("f16 round-trip error <= 2^-11 relative", 200, |g| {
+            // Random normal-range magnitudes across many exponents.
+            let e = (g.rng().next_u64() % 24) as i32 - 12;
+            let m = 1.0 + (g.rng().next_u64() % 1024) as f32 / 1024.0;
+            let x = m * 2.0f32.powi(e) * if g.rng().next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+            let back = f16_to_f32(f32_to_f16(x));
+            let err = (back - x).abs();
+            assert!(
+                err <= x.abs() * 2.0f32.powi(-11),
+                "x={x} back={back} err={err}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_narrowing_is_monotone() {
+        property("f32_to_f16 monotone on finite inputs", 200, |g| {
+            let draw = |g: &mut crate::util::check::Gen| {
+                f32::from_bits((g.rng().next_u64() as u32) & 0x7fff_ffff)
+            };
+            let (a, b) = (draw(g), draw(g));
+            if !a.is_finite() || !b.is_finite() {
+                return;
+            }
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let (hl, hh) = (f32_to_f16(lo), f32_to_f16(hi));
+            assert!(
+                f16_to_f32(hl) <= f16_to_f32(hh),
+                "lo={lo} hi={hi} -> {hl:#06x} {hh:#06x}"
+            );
+        });
+    }
+}

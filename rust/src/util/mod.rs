@@ -5,6 +5,7 @@
 pub mod check;
 pub mod checked;
 pub mod cli;
+pub mod f16;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -175,7 +175,8 @@ fn build_index_inspect_then_serve_from_store() {
         .unwrap();
     let s = String::from_utf8_lossy(&out.stdout);
     assert!(out.status.success(), "inspect failed: {s}\n{}", String::from_utf8_lossy(&out.stderr));
-    assert!(s.contains("version 1"), "got: {s}");
+    assert!(s.contains("version 2"), "got: {s}");
+    assert!(s.contains("dtype:     f32le"), "got: {s}");
     assert!(s.contains("2 shards x 1024 rows x 16-d"), "got: {s}");
     assert!(s.contains("checksums OK"), "got: {s}");
 
@@ -217,6 +218,99 @@ fn build_index_inspect_then_serve_from_store() {
     assert!(!out.status.success(), "corrupt store must fail serve");
     let e = String::from_utf8_lossy(&out.stderr);
     assert!(e.contains("checksum"), "got: {e}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Quantized store end to end through the CLI: `build-index --dtype int8`
+/// writes a v2 store with per-shard scale regions, `inspect` names the
+/// dtype and the scale regions, a matching `"dtype": "int8"` config
+/// serves it, and a config that still claims f32 fails the launch loudly.
+#[test]
+fn build_index_quantized_int8_round_trip() {
+    let dir = std::env::temp_dir().join(format!("fastk-cli-quant-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let store_path = dir.join("q.fastk");
+
+    let out = fastk()
+        .args([
+            "build-index",
+            "--out",
+            store_path.to_str().unwrap(),
+            "--d",
+            "16",
+            "--shards",
+            "2",
+            "--shard-size",
+            "1024",
+            "--seed",
+            "5",
+            "--dtype",
+            "int8",
+        ])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "build-index failed: {s}\n{e}");
+    assert!(s.contains("int8"), "got: {s}");
+
+    let out = fastk()
+        .args(["inspect", "--store", store_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "inspect failed: {s}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(s.contains("version 2"), "got: {s}");
+    assert!(s.contains("dtype:     int8"), "got: {s}");
+    assert!(s.contains("scale bytes"), "got: {s}");
+    assert!(s.contains("scales:"), "got: {s}");
+    assert!(s.contains("checksums OK"), "got: {s}");
+
+    // Serve it quantized (sequential native pipeline rescores survivors in
+    // f32); the quantized plan shows up in the shutdown metrics.
+    let cfg_path = dir.join("serve.json");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            r#"{{"d": 16, "k": 16, "shards": 2, "shard_size": 1024,
+                "recall_target": 0.9, "batch_max": 4, "batch_delay_us": 500,
+                "backend": "native", "seed": 5, "dtype": "int8",
+                "store": {{"path": {:?}}}}}"#,
+            store_path.to_str().unwrap()
+        ),
+    )
+    .unwrap();
+    let out = fastk()
+        .args(["serve", "--config", cfg_path.to_str().unwrap(), "--queries", "32"])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {s}\nstderr: {e}");
+    assert!(s.contains("recall@16"), "got: {s}");
+    assert!(s.contains("quant(dtype=int8"), "got: {s}");
+
+    // A config that still claims f32 over the int8 store must fail the
+    // launch — never silently dequantize or mis-serve.
+    let bad = dir.join("bad.json");
+    std::fs::write(
+        &bad,
+        format!(
+            r#"{{"d": 16, "k": 16, "shards": 2, "shard_size": 1024,
+                "recall_target": 0.9, "backend": "native", "seed": 5,
+                "store": {{"path": {:?}}}}}"#,
+            store_path.to_str().unwrap()
+        ),
+    )
+    .unwrap();
+    let out = fastk()
+        .args(["serve", "--config", bad.to_str().unwrap(), "--queries", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "dtype-skewed serve must fail");
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("dtype"), "got: {e}");
 
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -81,6 +81,7 @@ fn build_replacement_store(dir: &Path, name: &str, seed: u64, corrupt: bool) -> 
             shards: 1,
             shard_size: 64,
             seed,
+            dtype: store::Dtype::F32,
         },
     )
     .unwrap();
