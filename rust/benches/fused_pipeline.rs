@@ -164,6 +164,7 @@ fn main() {
                 fused: true,
                 tile_rows: 0,
                 kernel: SimdKernel::scalar(),
+                ..EngineOptions::default()
             },
         )
         .score_topk(&queries, max_batch)
@@ -180,6 +181,7 @@ fn main() {
                     fused: true,
                     tile_rows: 0,
                     kernel: *kernel,
+                    ..EngineOptions::default()
                 },
             );
             assert_eq!(

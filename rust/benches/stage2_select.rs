@@ -1,22 +1,28 @@
 //! Stage-2 ablation bench: selecting the top-K from the merged candidates.
 //!
-//! Compares the TPU-faithful bitonic network against quickselect and the
-//! full comparison sort across candidate counts — the paper's entire win is
+//! Compares the selectable [`Stage2Kind`] strategies — quickselect, the
+//! full comparison sort, and the TPU-faithful bitonic network — plus the
+//! raw heap baseline, across candidate counts. The paper's entire win is
 //! making this input small, so the bench shows stage-2 cost vs B*K'
 //! (the paper's Table 2 stage-2 column shape) for each strategy.
+//!
+//! `FASTK_BENCH_SMOKE=1` shrinks the sweep for CI; `FASTK_BENCH_JSON=dir`
+//! dumps the per-entry timings (entry names `{strategy}_{candidates}`).
 
-use fastk::bench_harness::{banner, bench, Table};
-use fastk::topk::bitonic::bitonic_sort;
-use fastk::topk::{exact, Candidate};
+use fastk::bench_harness::{banner, bench, maybe_write_json, BenchResult, Table};
+use fastk::topk::{exact, Candidate, Stage2Kind};
 use fastk::util::stats::fmt_ns;
 use fastk::util::Rng;
 
 fn main() {
+    let smoke = std::env::var("FASTK_BENCH_SMOKE").is_ok();
     banner("stage-2 strategies: time vs candidate count (K=1024)");
     let k = 1024usize;
     let mut rng = Rng::new(21);
+    let shifts: &[usize] = if smoke { &[11, 13] } else { &[11, 12, 13, 14, 15, 16, 17] };
+    let mut results: Vec<BenchResult> = Vec::new();
     let mut t = Table::new(&["CANDIDATES", "quickselect", "heap", "full sort", "bitonic"]);
-    for shift in [11usize, 12, 13, 14, 15, 16, 17] {
+    for &shift in shifts {
         let m = 1usize << shift;
         let vals: Vec<f32> = (0..m).map(|_| rng.next_f32()).collect();
         let cands: Vec<Candidate> = vals
@@ -28,19 +34,25 @@ fn main() {
             })
             .collect();
 
-        let qs = bench("qs", || {
-            std::hint::black_box(exact::topk_quickselect(&vals, k));
-        });
-        let hp = bench("heap", || {
-            std::hint::black_box(exact::topk_heap(&vals, k));
-        });
-        let fs = bench("sort", || {
-            std::hint::black_box(exact::topk_sort(&vals, k));
-        });
-        let bt = bench("bitonic", || {
+        // Every Stage2Kind must agree with the exact oracle before it is
+        // worth timing.
+        let want = exact::topk_sort(&vals, k);
+        for kind in Stage2Kind::ALL {
             let mut c = cands.clone();
-            bitonic_sort(&mut c);
-            std::hint::black_box(&c);
+            assert_eq!(kind.select_top_k(&mut c, k), want, "{} at m={m}", kind.as_str());
+        }
+
+        let mut timed = |kind: Stage2Kind| -> BenchResult {
+            bench(&format!("{}_{m}", kind.as_str()), || {
+                let mut c = cands.clone();
+                std::hint::black_box(kind.select_top_k(&mut c, k));
+            })
+        };
+        let qs = timed(Stage2Kind::Quickselect);
+        let fs = timed(Stage2Kind::FullSort);
+        let bt = timed(Stage2Kind::Bitonic);
+        let hp = bench(&format!("heap_{m}"), || {
+            std::hint::black_box(exact::topk_heap(&vals, k));
         });
         t.row(vec![
             m.to_string(),
@@ -49,6 +61,7 @@ fn main() {
             fmt_ns(fs.summary.min),
             fmt_ns(bt.summary.min),
         ]);
+        results.extend([qs, fs, bt, hp]);
     }
     t.print();
     println!(
@@ -56,4 +69,5 @@ fn main() {
          ~n log^2 n (bitonic) in the candidate count — shrinking B*K' 8x at\n\
          equal recall is the paper's speedup mechanism."
     );
+    maybe_write_json("stage2_select", &results);
 }

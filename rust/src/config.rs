@@ -22,9 +22,11 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::BatcherConfig;
 use crate::params::{ParamCache, RecallEval};
-use crate::plan::{plan_fixed, plan_serve_cached, PlanRequest, PlanSource, ServePlan};
+use crate::plan::{
+    plan_fixed, plan_fixed_budget, plan_serve_cached, PlanRequest, PlanSource, ServePlan,
+};
 use crate::store::Dtype;
-use crate::topk::KernelKind;
+use crate::topk::{KernelKind, Stage1Algo};
 use crate::util::json::Json;
 
 /// Which execution backend shards use.
@@ -108,6 +110,15 @@ pub struct LauncherConfig {
     /// Every kernel returns bit-identical results
     /// ([`topk::simd`](crate::topk::simd)). Ignored by the `pjrt` backend.
     pub kernel: KernelKind,
+    /// Stage-1 selection algorithm for the native backends (`"stage1":
+    /// "bucketed" | "radix" | "halving"`). `bucketed` is the paper's
+    /// bucketed-argmax kernel and the only algorithm the recall planner
+    /// models; the rivals run on a fixed candidate budget, so they require
+    /// `buckets`/`local_k` to be pinned and their recall is *measured*
+    /// (benches, serving stats), never predicted. An unknown name is a
+    /// launch error listing the allowed set. The `pjrt` backend is
+    /// bucketed-only (the algorithm is baked into the artifact).
+    pub stage1: Stage1Algo,
     /// Stored row dtype (`"dtype": "f32le" | "f16le" | "int8"`). Quantized
     /// dtypes score Stage 1 on the compressed rows (int8 survivors are
     /// re-scored in exact f32) and switch the planner to the
@@ -150,6 +161,7 @@ impl Default for LauncherConfig {
             fused: true,
             tile_rows: 0,
             kernel: KernelKind::Auto,
+            stage1: Stage1Algo::Bucketed,
             dtype: Dtype::F32,
             store: None,
             listen: None,
@@ -220,6 +232,12 @@ impl LauncherConfig {
                 format!(
                     "unknown kernel {s:?} (want \"auto\", \"scalar\", \"avx2\" or \"neon\")"
                 )
+            })?;
+        }
+        if let Some(v) = j.get("stage1") {
+            let s = v.as_str().context("stage1 must be a string")?;
+            c.stage1 = Stage1Algo::parse(s).with_context(|| {
+                format!("unknown stage1 {s:?} (want {})", Stage1Algo::allowed())
             })?;
         }
         if let Some(v) = j.get("dtype") {
@@ -336,6 +354,21 @@ impl LauncherConfig {
                 "pjrt backend requires `artifact`"
             );
         }
+        if self.stage1 != Stage1Algo::Bucketed {
+            anyhow::ensure!(
+                self.backend != BackendKind::Pjrt,
+                "the pjrt backend runs the paper's bucketed first stage only \
+                 (baked into the artifact); stage1 \"{}\" needs a native backend",
+                self.stage1
+            );
+            anyhow::ensure!(
+                self.buckets != 0,
+                "stage1 \"{}\" runs on a fixed candidate budget: the recall \
+                 planner models only \"bucketed\", so pin `buckets`/`local_k` \
+                 explicitly (budget = buckets*local_k candidates per shard)",
+                self.stage1
+            );
+        }
         if self.dtype != Dtype::F32 {
             anyhow::ensure!(
                 self.backend != BackendKind::Pjrt,
@@ -360,6 +393,20 @@ impl LauncherConfig {
     /// into the artifact) — `fastk serve` builds its plan from the artifact
     /// manifest instead.
     pub fn resolve_plan(&self, cache: &mut ParamCache) -> Result<ServePlan> {
+        if self.stage1 != Stage1Algo::Bucketed {
+            // Rival Stage-1 algorithms take (B, K') as a candidate *budget*
+            // (B*K' candidates per shard); Theorem 1 does not apply, so the
+            // plan carries no recall prediction — recall is measured.
+            return plan_fixed_budget(
+                self.shards as u64,
+                self.shard_size as u64,
+                self.k as u64,
+                self.buckets as u64,
+                self.local_k as u64,
+                self.dtype,
+                self.d as u64,
+            );
+        }
         if self.buckets != 0 {
             return plan_fixed(
                 self.shards as u64,
@@ -444,6 +491,7 @@ impl LauncherConfig {
             ("fused", Json::Bool(self.fused)),
             ("tile_rows", Json::num(self.tile_rows as f64)),
             ("kernel", Json::str(self.kernel.as_str())),
+            ("stage1", Json::str(self.stage1.as_str())),
             ("dtype", Json::str(self.dtype.as_str())),
             (
                 "store",
@@ -550,6 +598,61 @@ mod tests {
         // than silently falling back.
         assert!(LauncherConfig::from_json(r#"{"kernel": "sse2"}"#).is_err());
         assert!(LauncherConfig::from_json(r#"{"kernel": 2}"#).is_err());
+    }
+
+    #[test]
+    fn parses_stage1_knob() {
+        assert_eq!(
+            LauncherConfig::from_json("{}").unwrap().stage1,
+            Stage1Algo::Bucketed
+        );
+        for (s, want) in [
+            ("bucketed", Stage1Algo::Bucketed),
+            ("radix", Stage1Algo::Radix),
+            ("halving", Stage1Algo::Halving),
+        ] {
+            let c = LauncherConfig::from_json(&format!(
+                r#"{{"stage1": "{s}", "k": 128, "shard_size": 16384,
+                    "buckets": 512, "local_k": 2}}"#
+            ))
+            .unwrap();
+            assert_eq!(c.stage1, want, "stage1 {s}");
+        }
+        // Foreign names and non-strings are loud config errors.
+        assert!(LauncherConfig::from_json(r#"{"stage1": "bitonic"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"stage1": 1}"#).is_err());
+        // The planner models only bucketed recall: rivals must pin (B, K').
+        assert!(LauncherConfig::from_json(r#"{"stage1": "radix"}"#).is_err());
+        // The pjrt backend is bucketed-only.
+        assert!(LauncherConfig::from_json(
+            r#"{"stage1": "halving", "backend": "pjrt", "artifact": "mips_fused_x",
+                "k": 128, "shard_size": 16384, "buckets": 512, "local_k": 2}"#
+        )
+        .is_err());
+        // Round-trips through to_json.
+        let c = LauncherConfig::from_json(
+            r#"{"stage1": "radix", "k": 128, "shard_size": 16384,
+                "buckets": 512, "local_k": 2}"#,
+        )
+        .unwrap();
+        let c2 = LauncherConfig::from_json(&c.to_json().to_string()).unwrap();
+        assert_eq!(c2.stage1, Stage1Algo::Radix);
+    }
+
+    #[test]
+    fn resolve_plan_rival_stage1_is_a_measured_budget() {
+        let mut cache = crate::params::ParamCache::new();
+        let c = LauncherConfig::from_json(
+            r#"{"d": 16, "k": 128, "shards": 4, "shard_size": 16384,
+                "stage1": "radix", "buckets": 512, "local_k": 2}"#,
+        )
+        .unwrap();
+        let plan = c.resolve_plan(&mut cache).unwrap();
+        assert_eq!((plan.buckets, plan.local_k), (512, 2));
+        assert_eq!(plan.source, crate::plan::PlanSource::Budget);
+        // Recall is measured at runtime, never predicted for rivals.
+        assert!(plan.predicted_recall.is_nan());
+        assert!(plan.per_shard_recall.is_nan());
     }
 
     #[test]

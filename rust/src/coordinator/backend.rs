@@ -38,8 +38,8 @@ use anyhow::Result;
 use crate::runtime::{CompiledArtifact, HostTensor};
 use crate::store::{quant, Dtype, RowSource, ShardData};
 use crate::topk::{
-    exact, Candidate, FusedParallelMips, ParallelTwoStageTopK, SimdKernel, TwoStageParams,
-    TwoStageTopK,
+    exact, Candidate, FusedParallelMips, ParallelTwoStageTopK, SelectEngine, SimdKernel,
+    Stage1Algo, Stage1Desc, TwoStageParams,
 };
 
 /// Batched shard scoring: `queries` is row-major `[nq, d]`.
@@ -58,11 +58,20 @@ pub trait ShardBackend {
     fn shard_size(&self) -> usize;
     /// k returned per query.
     fn k(&self) -> usize;
-    /// The `(B, K′)` this shard's Stage 1 actually runs — what the serve
-    /// planner chose (native backends) or what the artifact was compiled
-    /// with (PJRT). `None` for exact (non-two-stage) backends.
-    fn stage1_params(&self) -> Option<(usize, usize)> {
+    /// What this shard's Stage 1 actually runs — the algorithm plus the
+    /// `(B, K′)` budget shape the serve planner chose (native backends) or
+    /// the artifact was compiled with (PJRT, always bucketed). `None` for
+    /// exact (non-two-stage) backends. This is the one shared accessor:
+    /// [`stage1_params`](Self::stage1_params) derives from it, so
+    /// implementations provide only this.
+    fn stage1_desc(&self) -> Option<Stage1Desc> {
         None
+    }
+    /// The bare `(B, K′)` of [`stage1_desc`](Self::stage1_desc) — the
+    /// planner-facing view, kept for callers that predate the algorithm
+    /// axis.
+    fn stage1_params(&self) -> Option<(usize, usize)> {
+        self.stage1_desc().map(|s| (s.b, s.k_prime))
     }
 }
 
@@ -79,7 +88,7 @@ pub struct NativeBackend {
     d: usize,
     n: usize,
     k: usize,
-    operator: Option<TwoStageTopK>,
+    operator: Option<SelectEngine>,
     /// Dispatched scoring kernel. [`new`](Self::new) pins the scalar
     /// reference (this backend doubles as the correctness oracle);
     /// [`with_kernel`](Self::with_kernel) is the serving constructor.
@@ -145,6 +154,20 @@ impl NativeBackend {
         params: Option<TwoStageParams>,
         kernel: SimdKernel,
     ) -> Self {
+        Self::from_data_select(database, d, k, params, kernel, Stage1Algo::Bucketed)
+    }
+
+    /// [`from_data`](Self::from_data) with an explicitly resolved Stage-1
+    /// algorithm (the `"stage1"` serve knob; ignored when `params` is
+    /// `None` — the exact backend runs no Stage 1).
+    pub fn from_data_select(
+        database: ShardData,
+        d: usize,
+        k: usize,
+        params: Option<TwoStageParams>,
+        kernel: SimdKernel,
+        algo: Stage1Algo,
+    ) -> Self {
         assert!(d > 0 && database.elems() > 0);
         assert_eq!(database.elems() % d, 0);
         let n = database.elems() / d;
@@ -165,7 +188,7 @@ impl NativeBackend {
             d,
             n,
             k,
-            operator: params.map(|p| TwoStageTopK::with_kernel(p, kernel)),
+            operator: params.map(|p| SelectEngine::with_kernel(algo, p, kernel)),
             kernel,
             scores_scratch: vec![0.0; n],
             qcodes: Vec::new(),
@@ -257,17 +280,16 @@ impl ShardBackend for NativeBackend {
         self.k
     }
 
-    fn stage1_params(&self) -> Option<(usize, usize)> {
-        self.operator
-            .as_ref()
-            .map(|op| (op.params.buckets, op.params.local_k))
+    fn stage1_desc(&self) -> Option<Stage1Desc> {
+        self.operator.as_ref().map(|op| op.desc())
     }
 }
 
 /// Construction knobs for [`ParallelNativeBackend`]: the worker pool size,
-/// the pipeline (fused / unfused), the fused engine's tile size, and the
-/// dispatch kernel — exactly the serve config's `threads` / `fused` /
-/// `tile_rows` / `kernel` knobs, resolved.
+/// the pipeline (fused / unfused), the fused engine's tile size, the
+/// dispatch kernel and the Stage-1 algorithm — exactly the serve config's
+/// `threads` / `fused` / `tile_rows` / `kernel` / `stage1` knobs,
+/// resolved.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineOptions {
     /// Worker pool size (clamped to `[1, B]`).
@@ -278,6 +300,8 @@ pub struct EngineOptions {
     pub tile_rows: usize,
     /// Resolved SIMD dispatch kernel (selected once, at pool spawn).
     pub kernel: SimdKernel,
+    /// Resolved Stage-1 algorithm (selected once, at pool spawn).
+    pub stage1: Stage1Algo,
 }
 
 impl Default for EngineOptions {
@@ -287,6 +311,7 @@ impl Default for EngineOptions {
             fused: true,
             tile_rows: 0,
             kernel: SimdKernel::auto(),
+            stage1: Stage1Algo::Bucketed,
         }
     }
 }
@@ -331,6 +356,8 @@ pub struct ParallelNativeBackend {
     k: usize,
     /// Resolved dispatch kernel (shared by both pipelines).
     kernel: SimdKernel,
+    /// Resolved Stage-1 algorithm (shared by both pipelines).
+    stage1: Stage1Algo,
     engine: ParallelEngine,
 }
 
@@ -409,17 +436,23 @@ impl ParallelNativeBackend {
             database.dtype()
         );
         let engine = if opts.fused {
-            ParallelEngine::Fused(FusedParallelMips::with_kernel(
+            ParallelEngine::Fused(FusedParallelMips::with_select(
                 database.clone(),
                 d,
                 params,
                 opts.threads,
                 opts.tile_rows,
                 opts.kernel,
+                opts.stage1,
             ))
         } else {
             ParallelEngine::Unfused {
-                operator: ParallelTwoStageTopK::with_kernel(params, opts.threads, opts.kernel),
+                operator: ParallelTwoStageTopK::with_select(
+                    params,
+                    opts.threads,
+                    opts.kernel,
+                    opts.stage1,
+                ),
                 scores: Vec::new(),
             }
         };
@@ -429,6 +462,7 @@ impl ParallelNativeBackend {
             n,
             k,
             kernel: opts.kernel,
+            stage1: opts.stage1,
             engine,
         }
     }
@@ -449,6 +483,11 @@ impl ParallelNativeBackend {
     /// The resolved dispatch kernel this backend's hot loops run.
     pub fn kernel(&self) -> SimdKernel {
         self.kernel
+    }
+
+    /// The resolved Stage-1 algorithm this backend's workers run.
+    pub fn stage1(&self) -> Stage1Algo {
+        self.stage1
     }
 
     /// The database's stored element encoding.
@@ -494,12 +533,12 @@ impl ShardBackend for ParallelNativeBackend {
         self.k
     }
 
-    fn stage1_params(&self) -> Option<(usize, usize)> {
+    fn stage1_desc(&self) -> Option<Stage1Desc> {
         let p = match &self.engine {
             ParallelEngine::Unfused { operator, .. } => &operator.params,
             ParallelEngine::Fused(engine) => &engine.params,
         };
-        Some((p.buckets, p.local_k))
+        Some(Stage1Desc::of(self.stage1, p))
     }
 }
 
@@ -609,10 +648,15 @@ impl ShardBackend for PjrtBackend {
         self.k
     }
 
-    fn stage1_params(&self) -> Option<(usize, usize)> {
+    fn stage1_desc(&self) -> Option<Stage1Desc> {
+        // Compiled artifacts always run the paper's bucketed first stage.
         let e = &self.artifact.entry;
         match (e.param_usize("buckets"), e.param_usize("local_k")) {
-            (Some(b), Some(kp)) => Some((b, kp)),
+            (Some(b), Some(kp)) => Some(Stage1Desc {
+                algo: Stage1Algo::Bucketed,
+                b,
+                k_prime: kp,
+            }),
             _ => None,
         }
     }
@@ -793,6 +837,7 @@ mod tests {
                         fused,
                         tile_rows: 0,
                         kernel,
+                        ..EngineOptions::default()
                     },
                 );
                 assert_eq!(be.kernel(), kernel);
@@ -861,6 +906,7 @@ mod tests {
                     fused: true,
                     tile_rows,
                     kernel,
+                    ..EngineOptions::default()
                 },
             );
             assert_eq!(
@@ -879,6 +925,7 @@ mod tests {
                     fused: false,
                     tile_rows: 0,
                     kernel,
+                    ..EngineOptions::default()
                 },
             );
             assert_eq!(
@@ -968,6 +1015,58 @@ mod tests {
         // int8 routing noise costs at most a few points.
         let recall = total / nq as f64;
         assert!(recall > 0.9, "recall={recall}");
+    }
+
+    #[test]
+    fn rival_backends_report_their_desc_and_agree_across_paths() {
+        // The dedupe satellite end-to-end: every backend reports the same
+        // Stage1Desc through the one shared accessor, and for a rival
+        // algorithm the single-threaded parallel paths equal the
+        // sequential SelectEngine-backed NativeBackend.
+        let d = 12;
+        let n = 1024;
+        let k = 32;
+        let mut rng = Rng::new(91);
+        let db = make_db(&mut rng, n, d);
+        let params = TwoStageParams::new(n, k, 128, 2);
+        let nq = 3;
+        let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+        for algo in [Stage1Algo::Radix, Stage1Algo::Halving] {
+            let want_desc = Stage1Desc { algo, b: 128, k_prime: 2 };
+            let mut sequential = NativeBackend::from_data_select(
+                ShardData::F32(RowSource::from_vec(db.clone())),
+                d,
+                k,
+                Some(params),
+                SimdKernel::scalar(),
+                algo,
+            );
+            assert_eq!(sequential.stage1_desc(), Some(want_desc));
+            // The derived bare-tuple view still works.
+            assert_eq!(sequential.stage1_params(), Some((128, 2)));
+            let want = sequential.score_topk(&queries, nq).unwrap();
+            for fused in [true, false] {
+                let mut be = ParallelNativeBackend::with_options(
+                    db.clone(),
+                    d,
+                    k,
+                    params,
+                    EngineOptions {
+                        fused,
+                        kernel: SimdKernel::scalar(),
+                        stage1: algo,
+                        ..EngineOptions::default()
+                    },
+                );
+                assert_eq!(be.stage1(), algo);
+                assert_eq!(be.stage1_desc(), Some(want_desc), "fused={fused}");
+                assert_eq!(
+                    be.score_topk(&queries, nq).unwrap(),
+                    want,
+                    "{algo} fused={fused} single worker == sequential"
+                );
+            }
+        }
     }
 
     #[test]

@@ -38,6 +38,9 @@ struct Inner {
     /// (`"scalar"` / `"avx2"` / `"neon"`); `None` for backends that run no
     /// native hot loop (PJRT).
     kernel: Option<&'static str>,
+    /// The Stage-1 selection algorithm the shards resolved at startup
+    /// (`"bucketed"` / `"radix"` / `"halving"`).
+    stage1: Option<&'static str>,
     /// Identity + open cost of the shard store rows are served from, if
     /// the deployment is store-backed.
     store: Option<StoreInfo>,
@@ -79,6 +82,7 @@ impl ServiceMetrics {
                 failed_requests: 0,
                 plan: None,
                 kernel: None,
+                stage1: None,
                 store: None,
                 epoch: 0,
                 shard_epochs: Vec::new(),
@@ -185,6 +189,16 @@ impl ServiceMetrics {
         self.inner.lock().unwrap().kernel
     }
 
+    /// Record the resolved Stage-1 selection algorithm the shards run
+    /// (shown in `summary()` and the net-protocol `stats` reply).
+    pub fn set_stage1(&self, name: &'static str) {
+        self.inner.lock().unwrap().stage1 = Some(name);
+    }
+
+    pub fn stage1(&self) -> Option<&'static str> {
+        self.inner.lock().unwrap().stage1
+    }
+
     /// Record the shard store this deployment serves rows from (shown in
     /// `summary()` and the net-protocol `stats` reply).
     pub fn set_store(&self, info: StoreInfo) {
@@ -252,6 +266,9 @@ impl ServiceMetrics {
         if let Some(k) = m.kernel {
             s.push_str(&format!(" kernel={k}"));
         }
+        if let Some(a) = m.stage1 {
+            s.push_str(&format!(" stage1={a}"));
+        }
         if let Some(st) = &m.store {
             s.push_str(&format!(
                 " store={} open={}",
@@ -260,11 +277,16 @@ impl ServiceMetrics {
             ));
         }
         if let Some(p) = &m.plan {
+            // Budget plans (rival Stage-1 algorithms) predict no recall.
+            let recall = if p.predicted_recall.is_nan() {
+                "measured".to_string()
+            } else {
+                format!("{:.4}", p.predicted_recall)
+            };
             s.push_str(&format!(
-                " plan(K'={} B={} predicted_recall={:.4} source={})",
+                " plan(K'={} B={} predicted_recall={recall} source={})",
                 p.local_k,
                 p.buckets,
-                p.predicted_recall,
                 p.source.as_str()
             ));
             if p.quant_sigma > 0.0 {
@@ -413,5 +435,22 @@ mod tests {
         m.set_kernel("avx2");
         assert_eq!(m.kernel(), Some("avx2"));
         assert!(m.summary().contains("kernel=avx2"), "{}", m.summary());
+    }
+
+    #[test]
+    fn stage1_and_budget_plans_surface_in_summary() {
+        let m = ServiceMetrics::new();
+        assert!(m.stage1().is_none());
+        assert!(!m.summary().contains("stage1="));
+        m.set_stage1("radix");
+        assert_eq!(m.stage1(), Some("radix"));
+        assert!(m.summary().contains("stage1=radix"), "{}", m.summary());
+        // Budget plans print "measured" instead of a NaN prediction.
+        let plan = crate::plan::plan_fixed_budget(2, 1024, 16, 128, 2, Dtype::F32, 16)
+            .unwrap();
+        m.set_plan(plan);
+        let s = m.summary();
+        assert!(s.contains("predicted_recall=measured"), "{s}");
+        assert!(s.contains("source=budget"), "{s}");
     }
 }

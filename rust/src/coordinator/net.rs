@@ -14,9 +14,12 @@
 //!     "reload": {"epoch": 0, "reloads": 0, "rollbacks": 0,
 //!                "shard_epochs": [1, 1, ...]},     (live-swap state)
 //!     "kernel": "avx2",                     (resolved SIMD dispatch, if native)
+//!     "stage1": "bucketed",            (resolved Stage-1 algorithm, if native)
 //!     "store": {"path": ..., "dtype": "f16le", "mapped": true, ...},  (if store-backed)
 //!     "plan": {"buckets": 512, "local_k": 4, "dtype": "int8",
 //!              "quant_sigma": 0.0107, "inflation": 1.0, ...}}  (plan if one was made)
+//!              (budget plans — rival stage1 algorithms — report
+//!               "predicted_recall": null: recall is measured, not predicted)
 //! -> {"cmd": "reload", "shard": 0, "store": "new.fastk"}
 //!      (or {"cmd": "reload", "shard": 0, "seed": 7, "shard_size": 2048})
 //! <- {"reloaded": true, "shard": 0, "epoch": 1}
@@ -211,6 +214,9 @@ fn handle_line(
                 if let Some(k) = m.kernel() {
                     fields.push(("kernel", Json::str(k)));
                 }
+                if let Some(a) = m.stage1() {
+                    fields.push(("stage1", Json::str(a)));
+                }
                 if let Some(st) = m.store() {
                     fields.push((
                         "store",
@@ -240,8 +246,11 @@ fn handle_line(
                                 "elements_per_shard",
                                 Json::num(p.num_elements() as f64),
                             ),
-                            ("predicted_recall", Json::num(p.predicted_recall)),
-                            ("per_shard_recall", Json::num(p.per_shard_recall)),
+                            // NaN (budget plans: recall measured, never
+                            // predicted) is not representable in JSON —
+                            // emit null.
+                            ("predicted_recall", Json::num_or_null(p.predicted_recall)),
+                            ("per_shard_recall", Json::num_or_null(p.per_shard_recall)),
                             ("source", Json::str(p.source.as_str())),
                             ("dtype", Json::str(p.dtype.as_str())),
                             ("quant_sigma", Json::num(p.quant_sigma)),
@@ -530,6 +539,60 @@ mod tests {
         assert_eq!(p.get("dtype").unwrap().as_str(), Some("f16le"));
         assert!(p.get("quant_sigma").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(p.get("inflation").unwrap().as_f64(), Some(1.0));
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_expose_stage1_and_null_recall_for_budget_plans() {
+        let d = 8;
+        let k = 4;
+        let n = 64;
+        let mut rng = Rng::new(4);
+        let db: Vec<f32> = (0..n * d).map(|_| rng.next_f32()).collect();
+        let plan = crate::plan::plan_fixed_budget(
+            1,
+            n as u64,
+            k as u64,
+            16,
+            1,
+            crate::store::Dtype::F32,
+            d as u64,
+        )
+        .unwrap();
+        let factories: Vec<BackendFactory> = vec![Box::new(move || {
+            Ok(Box::new(NativeBackend::exact(db, d, k)) as Box<dyn ShardBackend>)
+        })];
+        let svc = Arc::new(
+            MipsService::start(
+                ServiceConfig {
+                    d,
+                    k,
+                    batcher: BatcherConfig {
+                        max_batch: 4,
+                        max_delay: std::time::Duration::from_micros(200),
+                    },
+                    plan: Some(plan),
+                },
+                factories,
+                vec![0],
+            )
+            .unwrap(),
+        );
+        svc.metrics.set_stage1("radix");
+        let server = NetServer::start("127.0.0.1:0", svc).unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+        w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let stats = Json::parse(&line).unwrap();
+        assert_eq!(stats.get("stage1").unwrap().as_str(), Some("radix"));
+        let p = stats.get("plan").unwrap();
+        assert_eq!(p.get("source").unwrap().as_str(), Some("budget"));
+        // Budget plans predict no recall: null on the wire, never NaN.
+        assert_eq!(p.get("predicted_recall"), Some(&Json::Null));
+        assert_eq!(p.get("per_shard_recall"), Some(&Json::Null));
         server.shutdown();
     }
 

@@ -540,9 +540,16 @@ fn backend_factory(
         BackendKind::Native => {
             let params = params.expect("native backends always have a plan");
             let kernel = kernel.expect("native backends resolve a kernel");
+            let algo = cfg.stage1;
             Box::new(move || {
-                Ok(Box::new(NativeBackend::from_data(data()?, d, k, Some(params), kernel))
-                    as Box<dyn ShardBackend>)
+                Ok(Box::new(NativeBackend::from_data_select(
+                    data()?,
+                    d,
+                    k,
+                    Some(params),
+                    kernel,
+                    algo,
+                )) as Box<dyn ShardBackend>)
             })
         }
         BackendKind::NativeParallel => {
@@ -552,6 +559,7 @@ fn backend_factory(
                 fused: cfg.fused,
                 tile_rows: cfg.tile_rows,
                 kernel: kernel.expect("native backends resolve a kernel"),
+                stage1: cfg.stage1,
             };
             Box::new(move || {
                 Ok(Box::new(ParallelNativeBackend::from_data(data()?, d, k, params, opts))
@@ -669,17 +677,19 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
         cfg.dtype,
         match cfg.backend {
             BackendKind::Native => format!(
-                "native, {} kernel",
-                kernel.expect("native backends resolve a kernel").name()
+                "native, {} kernel, {} stage1",
+                kernel.expect("native backends resolve a kernel").name(),
+                cfg.stage1
             ),
             BackendKind::NativeParallel => format!(
-                "native-parallel, {threads} threads/shard, {}, {} kernel",
+                "native-parallel, {threads} threads/shard, {}, {} kernel, {} stage1",
                 if cfg.fused {
                     "fused score+select"
                 } else {
                     "unfused"
                 },
-                kernel.expect("native backends resolve a kernel").name()
+                kernel.expect("native backends resolve a kernel").name(),
+                cfg.stage1
             ),
             BackendKind::Pjrt => "pjrt".to_string(),
         }
@@ -766,6 +776,9 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     // the shutdown summary show what the hot loops actually ran over.
     if let Some(k) = kernel {
         svc.metrics.set_kernel(k.name());
+        // Stage-1 algorithm rides along with the kernel: both are native
+        // hot-loop dispatch decisions the PJRT backend doesn't make.
+        svc.metrics.set_stage1(cfg.stage1.as_str());
     }
     if let Some(info) = store_info {
         svc.metrics.set_store(info);

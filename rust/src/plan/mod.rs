@@ -59,6 +59,11 @@ pub enum PlanSource {
     Manual,
     /// `(B, K′)` baked into an AOT artifact (PJRT path; no sweep).
     Artifact,
+    /// Operator-supplied candidate *budget* for a non-bucketed Stage-1
+    /// algorithm (`stage1` ≠ `"bucketed"`): `(B, K′)` sizes the per-shard
+    /// candidate set (`B·K′`), but Theorem 1 does not model the rival's
+    /// selection loss, so recall is measured at runtime, never predicted.
+    Budget,
 }
 
 impl PlanSource {
@@ -69,6 +74,7 @@ impl PlanSource {
             PlanSource::Quantized => "quantized",
             PlanSource::Manual => "manual",
             PlanSource::Artifact => "artifact",
+            PlanSource::Budget => "budget",
         }
     }
 }
@@ -166,14 +172,21 @@ impl ServePlan {
         } else {
             String::new()
         };
+        // Budget plans (rival Stage-1 algorithms) carry no recall
+        // prediction: Theorem 1 models only the bucketed first stage.
+        let recall = if self.predicted_recall.is_nan() {
+            "recall measured at runtime".to_string()
+        } else {
+            format!(
+                "predicted merged recall {:.4}, per-shard {:.4}",
+                self.predicted_recall, self.per_shard_recall
+            )
+        };
         format!(
-            "K'={} B={} per shard ({} candidates/shard, predicted merged \
-             recall {:.4}, per-shard {:.4}, {} plan{quant})",
+            "K'={} B={} per shard ({} candidates/shard, {recall}, {} plan{quant})",
             self.local_k,
             self.buckets,
             self.num_elements(),
-            self.predicted_recall,
-            self.per_shard_recall,
             self.source.as_str()
         )
     }
@@ -262,6 +275,31 @@ pub fn plan_fixed(
         dtype,
         quant_sigma,
         baseline_elements: buckets * local_k,
+    })
+}
+
+/// Build a [`ServePlan`] for a *rival* Stage-1 algorithm from a fixed
+/// per-shard candidate budget `B·K′`. The pair obeys the same structural
+/// constraints as [`plan_fixed`] (so the two-stage merge contract holds),
+/// but Theorem 1 does not model the rival's selection loss: both recall
+/// fields are `NaN` and the source is [`PlanSource::Budget`] — recall is
+/// measured (benches, serving stats), never predicted.
+pub fn plan_fixed_budget(
+    shards: u64,
+    shard_size: u64,
+    k: u64,
+    buckets: u64,
+    local_k: u64,
+    dtype: Dtype,
+    d: u64,
+) -> anyhow::Result<ServePlan> {
+    let p = plan_fixed(
+        shards, shard_size, k, buckets, local_k, dtype, d, PlanSource::Budget,
+    )?;
+    Ok(ServePlan {
+        predicted_recall: f64::NAN,
+        per_shard_recall: f64::NAN,
+        ..p
     })
 }
 
@@ -492,6 +530,21 @@ mod tests {
         assert!((q.inflation() - 1.0).abs() < 1e-12, "fixed params cannot inflate");
         // A quantized dtype without a dimension is an error, not a panic.
         assert!(plan_fixed(4, 1024, 128, 128, 2, Dtype::I8, 0, PlanSource::Manual).is_err());
+    }
+
+    #[test]
+    fn budget_plan_has_no_prediction_but_keeps_the_contract() {
+        let p = plan_fixed_budget(4, 1024, 128, 128, 2, Dtype::F32, 64).unwrap();
+        assert_eq!(p.num_elements(), 256);
+        assert_eq!(p.source, PlanSource::Budget);
+        assert!(p.predicted_recall.is_nan());
+        assert!(p.per_shard_recall.is_nan());
+        let d = p.describe();
+        assert!(d.contains("measured at runtime"), "{d}");
+        assert!(d.contains("budget plan"), "{d}");
+        // Same structural validation as plan_fixed.
+        assert!(plan_fixed_budget(4, 1024, 100, 100, 1, Dtype::F32, 64).is_err());
+        assert!(plan_fixed_budget(4, 1024, 128, 64, 1, Dtype::F32, 64).is_err());
     }
 
     #[test]

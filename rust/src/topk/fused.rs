@@ -56,9 +56,10 @@
 //! database rows (in the stored encoding — quantized tiles hold
 //! proportionally more rows, which is half the bandwidth win).
 
-use super::parallel::{merge_stage2, state_candidates, LanePool, SliceHandle};
+use super::parallel::{merge_stage2, LanePool, SliceHandle};
+use super::select::{self, Stage1Algo, Stage1Select};
 use super::simd::SimdKernel;
-use super::twostage::{Stage1State, TwoStageParams};
+use super::twostage::TwoStageParams;
 use super::Candidate;
 use crate::store::{quant, Dtype, ShardData};
 
@@ -88,7 +89,7 @@ enum Resolved<'a> {
 }
 
 /// Worker-private half of the fused pipeline: the shared database payload,
-/// this worker's lane range, and its per-query Stage-1 states.
+/// this worker's lane range, and its per-query Stage-1 selectors.
 struct FusedLaneState {
     /// Shared `[n, d]` row-major database in its stored element encoding
     /// (read-only on the hot path): owned heap data or a mapped store
@@ -105,13 +106,18 @@ struct FusedLaneState {
     rows: usize,
     /// Stream rows per tile (≥ 1).
     tile_rows: usize,
-    local_k: usize,
-    filter_padding: bool,
+    /// Engine params (the `(B, K′)` budget shape selectors are built from).
+    params: TwoStageParams,
+    /// Stage-1 algorithm, resolved at pool spawn like the kernel — the
+    /// score loop makes one virtual ingest call per stream row, never a
+    /// per-element dispatch.
+    algo: Stage1Algo,
     /// Dispatched scoring + tail-compare kernel (resolved at pool spawn).
     kernel: SimdKernel,
-    /// One `[K′][lanes]` state per query in the batch, grown on demand and
-    /// reused across batches.
-    states: Vec<Stage1State>,
+    /// One selector per query in the batch (bucketed: a `[K′][lanes]`
+    /// state; rivals: a `lanes·K′` budget), grown on demand and reused
+    /// across batches.
+    states: Vec<Box<dyn Stage1Select>>,
     /// `[lanes]` score scratch for one stream row.
     scores: Vec<f32>,
     /// `[d]` dequantized-row scratch for the int8 exact rescore.
@@ -131,7 +137,13 @@ impl FusedLaneState {
     ) -> Vec<Vec<Candidate>> {
         debug_assert_eq!(queries.len(), nq * self.d);
         while self.states.len() < nq {
-            self.states.push(Stage1State::with_dims(self.lanes, self.local_k));
+            self.states.push(select::build(
+                self.algo,
+                &self.params,
+                self.lane_lo,
+                self.lane_lo + self.lanes,
+                self.kernel,
+            ));
         }
         for state in &mut self.states[..nq] {
             state.reset();
@@ -179,15 +191,18 @@ impl FusedLaneState {
                             );
                         }
                     }
-                    state.ingest_tile_k(self.kernel, base as u32, 0, &self.scores);
+                    state.ingest(base as u32, &self.scores);
                 }
             }
             tile_start = tile_end;
         }
         let rescore = self.database.needs_rescore();
         let mut out = Vec::with_capacity(nq);
-        for (qi, state) in self.states[..nq].iter().enumerate() {
-            let mut cands = state_candidates(state, self.filter_padding);
+        for (qi, state) in self.states[..nq].iter_mut().enumerate() {
+            // The rescore below is candidate-index-based, so it is
+            // algorithm-agnostic: whichever selector routed a row through
+            // Stage 1, its exact f32 value is recomputed the same way.
+            let mut cands = state.candidates();
             if rescore {
                 // Exact f32 rescore of this worker's survivors: the same
                 // dequantize + fixed-order dot the sequential operator's
@@ -227,6 +242,7 @@ pub struct FusedParallelMips {
     d: usize,
     dtype: Dtype,
     kernel: SimdKernel,
+    algo: Stage1Algo,
     pool: LanePool<FusedJob>,
     cand_scratch: Vec<Candidate>,
     /// `[nq, d]` int8 query codes for the current batch (int8 databases
@@ -269,6 +285,24 @@ impl FusedParallelMips {
         tile_rows: usize,
         kernel: SimdKernel,
     ) -> FusedParallelMips {
+        Self::with_select(database, d, params, threads, tile_rows, kernel, Stage1Algo::Bucketed)
+    }
+
+    /// [`with_kernel`](Self::with_kernel) with an explicitly resolved
+    /// Stage-1 algorithm (the `"stage1"` serve knob). Each worker's
+    /// selector is built once at pool spawn over its lane range; rival
+    /// algorithms keep a `lanes·K′` share of the global `B·K′` candidate
+    /// budget, so Stage 2 merges the same candidate count whichever
+    /// algorithm routed them.
+    pub fn with_select(
+        database: impl Into<ShardData>,
+        d: usize,
+        params: TwoStageParams,
+        threads: usize,
+        tile_rows: usize,
+        kernel: SimdKernel,
+        algo: Stage1Algo,
+    ) -> FusedParallelMips {
         let database: ShardData = database.into();
         assert!(d > 0, "d must be positive");
         assert_eq!(
@@ -286,7 +320,6 @@ impl FusedParallelMips {
         }
         let dtype = database.dtype();
         let t = threads.clamp(1, params.buckets);
-        let filter_padding = params.local_k > params.bucket_size();
         let rows = params.n / params.buckets;
         let elem_bytes = dtype.elem_bytes() as usize;
         let states: Vec<FusedLaneState> = (0..t)
@@ -307,8 +340,8 @@ impl FusedParallelMips {
                     buckets: params.buckets,
                     rows,
                     tile_rows: tr,
-                    local_k: params.local_k,
-                    filter_padding,
+                    params,
+                    algo,
                     kernel,
                     states: Vec::new(),
                     scores: vec![0.0; lanes],
@@ -333,6 +366,7 @@ impl FusedParallelMips {
             d,
             dtype,
             kernel,
+            algo,
             pool,
             cand_scratch: Vec::with_capacity(params.num_candidates()),
             qcodes: Vec::new(),
@@ -348,6 +382,11 @@ impl FusedParallelMips {
     /// The dispatch kernel this engine's workers run (resolved at spawn).
     pub fn kernel(&self) -> SimdKernel {
         self.kernel
+    }
+
+    /// The Stage-1 algorithm this engine's workers run (resolved at spawn).
+    pub fn stage1(&self) -> Stage1Algo {
+        self.algo
     }
 
     /// Vector dimensionality the engine scores against.
@@ -715,6 +754,59 @@ mod tests {
         let got = fused.run_batch(&queries, 2);
         let want = oracle_batch(&widened, d, params, &queries, 2);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn rival_algorithms_run_fused() {
+        use crate::topk::select::{SelectEngine, Stage1Algo};
+        let mut rng = Rng::new(89);
+        let (n, d, k, b, kp) = (1024usize, 12usize, 32usize, 128usize, 2usize);
+        let params = TwoStageParams::new(n, k, b, kp);
+        let db = make_db(&mut rng, n, d);
+        let nq = 3;
+        let queries = make_db(&mut rng, nq, d);
+        for algo in [Stage1Algo::Radix, Stage1Algo::Halving] {
+            // Single worker: the fused stream (rows ascend, full lane
+            // range) is exactly the sequential engine's stream, so fused
+            // must equal scoring + SelectEngine for every algorithm.
+            let mut engine = SelectEngine::new(algo, params);
+            let mut scores = vec![0f32; n];
+            let want: Vec<Vec<Candidate>> = (0..nq)
+                .map(|qi| {
+                    kernel::score_tile(&db, d, &queries[qi * d..(qi + 1) * d], &mut scores);
+                    engine.run(&scores)
+                })
+                .collect();
+            let mut fused = FusedParallelMips::with_select(
+                Arc::new(db.clone()),
+                d,
+                params,
+                1,
+                0,
+                SimdKernel::scalar(),
+                algo,
+            );
+            assert_eq!(fused.stage1(), algo);
+            assert_eq!(fused.run_batch(&queries, nq), want, "{algo} t=1");
+            // Multi-threaded rival output is well-formed and stable.
+            let mut four = FusedParallelMips::with_select(
+                Arc::new(db.clone()),
+                d,
+                params,
+                4,
+                5,
+                SimdKernel::scalar(),
+                algo,
+            );
+            let got = four.run_batch(&queries, nq);
+            for (qi, cands) in got.iter().enumerate() {
+                assert!(!cands.is_empty() && cands.len() <= k, "{algo} t=4 q{qi}");
+                for w in cands.windows(2) {
+                    assert!(w[0].beats(&w[1]), "{algo} t=4 q{qi} order");
+                }
+            }
+            assert_eq!(four.run_batch(&queries, nq), got, "{algo} t=4 rerun");
+        }
     }
 
     #[test]

@@ -17,12 +17,14 @@ pub mod exact;
 pub mod fused;
 pub mod kernel;
 pub mod parallel;
+pub mod select;
 pub mod simd;
 pub mod streaming;
 pub mod twostage;
 
 pub use fused::FusedParallelMips;
 pub use parallel::ParallelTwoStageTopK;
+pub use select::{SelectEngine, Stage1Algo, Stage1Desc, Stage1Select, Stage2Kind};
 pub use simd::{KernelKind, SimdKernel};
 pub use streaming::StreamingTopK;
 pub use twostage::{TwoStageParams, TwoStageTopK};

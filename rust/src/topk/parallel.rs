@@ -51,8 +51,9 @@ use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
 
 use super::exact;
+use super::select::{self, Stage1Algo, Stage1Select};
 use super::simd::SimdKernel;
-use super::twostage::{Stage1State, TwoStageParams};
+use super::twostage::TwoStageParams;
 use super::Candidate;
 
 /// A raw view of one slice (f32 scores/queries by default; the fused
@@ -209,13 +210,6 @@ impl<J: Send + 'static> Drop for LanePool<J> {
     }
 }
 
-/// Emit a worker state's candidates. `filter_padding` mirrors the
-/// sequential Stage 2: `-inf` slots (possible only when K′ exceeds the
-/// bucket size) are dropped.
-pub(super) fn state_candidates(state: &Stage1State, filter_padding: bool) -> Vec<Candidate> {
-    state.candidates(filter_padding)
-}
-
 /// Stage 2 per query over the merged per-worker candidates: in-place
 /// quickselect on the reused scratch, then the canonical sort. The
 /// candidate *set* equals the sequential one, and the canonical total order
@@ -243,11 +237,19 @@ pub(super) fn merge_stage2(
     out
 }
 
-/// Worker-private Stage-1 state over a contiguous lane (bucket) range.
+/// Worker-private Stage-1 selector over a contiguous lane (bucket) range.
+///
+/// The selector is resolved once here, at pool spawn — the PR 4 kernel
+/// pattern applied to the algorithm axis: inside [`fold`](Self::fold) the
+/// worker streams its lane runs through one virtual call per row, with no
+/// per-element dispatch. The per-bucket state of the bucketed selector
+/// depends only on each bucket's elements in stream order, which fold
+/// preserves, so the merged candidate set stays bit-identical to the
+/// sequential operator.
 struct LaneState {
-    /// `[K′][lanes]` values/indices, lane-minor — the worker's slice of the
-    /// global `[K′][B]` state.
-    state: Stage1State,
+    /// The worker's Stage-1 algorithm (bucketed: its `[K′][lanes]` slice
+    /// of the global state; rivals: a `lanes·K′` candidate budget).
+    select: Box<dyn Stage1Select>,
     /// First owned global bucket.
     lane_lo: usize,
     /// Number of owned buckets.
@@ -256,13 +258,11 @@ struct LaneState {
     buckets: usize,
     /// Input length N.
     n: usize,
-    local_k: usize,
-    /// Dispatched tail-compare kernel (resolved at pool spawn).
-    kernel: SimdKernel,
 }
 
 impl LaneState {
     fn new(
+        algo: Stage1Algo,
         params: &TwoStageParams,
         lane_lo: usize,
         lane_hi: usize,
@@ -270,56 +270,27 @@ impl LaneState {
     ) -> LaneState {
         assert!(lane_lo < lane_hi && lane_hi <= params.buckets);
         LaneState {
-            state: Stage1State::with_dims(lane_hi - lane_lo, params.local_k),
+            select: select::build(algo, params, lane_lo, lane_hi, kernel),
             lane_lo,
             lanes: lane_hi - lane_lo,
             buckets: params.buckets,
             n: params.n,
-            local_k: params.local_k,
-            kernel,
         }
     }
 
     fn reset(&mut self) {
-        self.state.reset();
+        self.select.reset();
     }
 
-    /// Fold one full materialized input pass over the owned lane range by
-    /// streaming row slices through
-    /// [`Stage1State::ingest_tile`] — the same insert + single-bubble-pass
-    /// update as the sequential kernel, so per-bucket state is
-    /// bit-identical to a sequential run.
+    /// Fold one full materialized input pass over the owned lane range:
+    /// one contiguous run per stream row.
     fn fold(&mut self, values: &[f32]) {
         debug_assert_eq!(values.len(), self.n);
         let rows = self.n / self.buckets;
-        if self.local_k == 1 {
-            for row in 0..rows {
-                let row_base = row * self.buckets + self.lane_lo;
-                self.state.ingest_tile_k(
-                    self.kernel,
-                    row_base as u32,
-                    0,
-                    &values[row_base..row_base + self.lanes],
-                );
-            }
-            return;
-        }
-        // Lane blocking as in the sequential kernel: keep a block's
-        // [K'][lanes] state cache-resident across all rows.
-        let lane_block = (4096 / self.local_k).max(64);
-        let mut start = 0;
-        while start < self.lanes {
-            let end = (start + lane_block).min(self.lanes);
-            for row in 0..rows {
-                let row_base = row * self.buckets + self.lane_lo;
-                self.state.ingest_tile_k(
-                    self.kernel,
-                    (row_base + start) as u32,
-                    start,
-                    &values[row_base + start..row_base + end],
-                );
-            }
-            start = end;
+        for row in 0..rows {
+            let row_base = row * self.buckets + self.lane_lo;
+            self.select
+                .ingest(row_base as u32, &values[row_base..row_base + self.lanes]);
         }
     }
 }
@@ -352,11 +323,25 @@ impl ParallelTwoStageTopK {
         threads: usize,
         kernel: SimdKernel,
     ) -> ParallelTwoStageTopK {
+        Self::with_select(params, threads, kernel, Stage1Algo::Bucketed)
+    }
+
+    /// [`with_kernel`](Self::with_kernel) with an explicitly resolved
+    /// Stage-1 algorithm. Each worker's selector is built once at pool
+    /// spawn over its lane range; rivals keep a `lanes·K′` share of the
+    /// global `B·K′` candidate budget, so the merge sees the same
+    /// candidate count whichever algorithm runs.
+    pub fn with_select(
+        params: TwoStageParams,
+        threads: usize,
+        kernel: SimdKernel,
+        algo: Stage1Algo,
+    ) -> ParallelTwoStageTopK {
         let t = threads.clamp(1, params.buckets);
-        let filter_padding = params.local_k > params.bucket_size();
         let states: Vec<LaneState> = (0..t)
             .map(|w| {
                 LaneState::new(
+                    algo,
                     &params,
                     w * params.buckets / t,
                     (w + 1) * params.buckets / t,
@@ -376,7 +361,7 @@ impl ParallelTwoStageTopK {
                     let values = unsafe { q.get() };
                     state.reset();
                     state.fold(values);
-                    out.push(state_candidates(&state.state, filter_padding));
+                    out.push(state.select.candidates());
                 }
                 out
             },
@@ -518,6 +503,44 @@ mod tests {
         for round in 0..4 {
             let values = random_values(&mut rng, 1024);
             assert_eq!(parallel.run(&values), sequential.run(&values), "round {round}");
+        }
+    }
+
+    #[test]
+    fn rival_algorithms_run_through_the_pool() {
+        use crate::topk::select::{SelectEngine, Stage1Algo};
+        let params = TwoStageParams::new(2048, 64, 256, 2);
+        let mut rng = Rng::new(55);
+        let values = random_values(&mut rng, 2048);
+        for algo in [Stage1Algo::Radix, Stage1Algo::Halving] {
+            // One worker ingests exactly the sequential engine's stream
+            // (whole rows in order), so single-threaded pool output must
+            // equal the sequential SelectEngine for every algorithm.
+            let mut one = ParallelTwoStageTopK::with_select(
+                params,
+                1,
+                SimdKernel::scalar(),
+                algo,
+            );
+            let mut engine = SelectEngine::new(algo, params);
+            assert_eq!(one.run(&values), engine.run(&values), "{algo} t=1");
+            // Multi-threaded rival output is well-formed: canonical order,
+            // within K, subset of the input, stable across reruns.
+            let mut four = ParallelTwoStageTopK::with_select(
+                params,
+                4,
+                SimdKernel::scalar(),
+                algo,
+            );
+            let got = four.run(&values);
+            assert!(!got.is_empty() && got.len() <= params.k, "{algo} t=4");
+            for w in got.windows(2) {
+                assert!(w[0].beats(&w[1]), "{algo} t=4 order");
+            }
+            for c in &got {
+                assert_eq!(values[c.index as usize], c.value, "{algo} t=4 subset");
+            }
+            assert_eq!(four.run(&values), got, "{algo} t=4 rerun");
         }
     }
 

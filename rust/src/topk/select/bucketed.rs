@@ -1,0 +1,123 @@
+//! The paper's bucketed top-K′ behind [`Stage1Select`] — a thin,
+//! bit-identical wrapper around [`Stage1State`].
+//!
+//! All selection logic stays in [`Stage1State::ingest_tile_k`] (the
+//! SIMD-dispatched kernel the engines already pin against each other);
+//! this type only translates the trait's global `base_index` into the
+//! state's local lane offset. Every existing fused/parallel/backend
+//! oracle therefore pins bucketed-via-trait against the pre-refactor
+//! path by construction.
+
+use super::super::simd::SimdKernel;
+use super::super::twostage::Stage1State;
+use super::{Candidate, Stage1Algo, Stage1Select};
+
+pub struct BucketedSelect {
+    state: Stage1State,
+    /// Global bucket count B (the stride of the stream), which may be
+    /// wider than the `[lane_lo, lane_hi)` slice this worker owns.
+    buckets_global: usize,
+    lane_lo: usize,
+    /// `-inf` slots are padding only when K′ exceeds the per-bucket
+    /// element count (or the stream length is unknown) — the engines'
+    /// existing filter rule, captured at build time.
+    filter_padding: bool,
+    kernel: SimdKernel,
+}
+
+impl BucketedSelect {
+    pub fn new(
+        buckets_global: usize,
+        lane_lo: usize,
+        lane_hi: usize,
+        local_k: usize,
+        filter_padding: bool,
+        kernel: SimdKernel,
+    ) -> Self {
+        assert!(lane_lo < lane_hi && lane_hi <= buckets_global);
+        BucketedSelect {
+            state: Stage1State::with_dims(lane_hi - lane_lo, local_k),
+            buckets_global,
+            lane_lo,
+            filter_padding,
+            kernel,
+        }
+    }
+}
+
+impl Stage1Select for BucketedSelect {
+    fn algo(&self) -> Stage1Algo {
+        Stage1Algo::Bucketed
+    }
+
+    fn reset(&mut self) {
+        self.state.reset();
+    }
+
+    fn ingest(&mut self, base_index: u32, scores: &[f32]) {
+        // The run's first element lands in global bucket
+        // `base_index mod B`; the state is indexed relative to lane_lo.
+        let lane = (base_index as usize) % self.buckets_global;
+        debug_assert!(lane >= self.lane_lo, "run outside this worker's lane range");
+        self.state
+            .ingest_tile_k(self.kernel, base_index, lane - self.lane_lo, scores);
+    }
+
+    fn candidates(&mut self) -> Vec<Candidate> {
+        self.state.candidates(self.filter_padding)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{build, Stage1Algo};
+    use super::*;
+    use crate::topk::twostage::TwoStageParams;
+    use crate::util::Rng;
+
+    #[test]
+    fn wrapper_reproduces_stage1_state_exactly() {
+        // Whole rows through the trait == the same rows through the raw
+        // state: the wrapper adds no arithmetic, only lane translation.
+        let (n, b, kp) = (512usize, 64usize, 3usize);
+        let mut rng = Rng::new(901);
+        let v: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        for kernel in SimdKernel::available() {
+            let mut raw = Stage1State::with_dims(b, kp);
+            let mut sel = BucketedSelect::new(b, 0, b, kp, false, kernel);
+            for row in 0..n / b {
+                let chunk = &v[row * b..(row + 1) * b];
+                raw.ingest_tile_k(kernel, (row * b) as u32, 0, chunk);
+                sel.ingest((row * b) as u32, chunk);
+            }
+            assert_eq!(sel.candidates(), raw.candidates(false), "kernel {}", kernel.name());
+        }
+    }
+
+    #[test]
+    fn lane_slice_translates_base_index() {
+        // A worker owning lanes [16, 48) of B=64 sees runs based at
+        // row*64+16; its candidates must equal the matching slice of a
+        // full-width selector's state.
+        let (n, b, kp) = (640usize, 64usize, 2usize);
+        let (lo, hi) = (16usize, 48usize);
+        let mut rng = Rng::new(902);
+        let v: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let params = TwoStageParams::new(n, 8, b, kp);
+        let mut full = build(Stage1Algo::Bucketed, &params, 0, b, SimdKernel::scalar());
+        let mut part = build(Stage1Algo::Bucketed, &params, lo, hi, SimdKernel::scalar());
+        for row in 0..n / b {
+            full.ingest((row * b) as u32, &v[row * b..(row + 1) * b]);
+            part.ingest((row * b + lo) as u32, &v[row * b + lo..row * b + hi]);
+        }
+        let full_c = full.candidates();
+        let part_c = part.candidates();
+        // Full-width state is laid out bucket-minor per rank: rank r of
+        // lane l sits at slot r*B + l, so the partial worker's slots are
+        // the [lo, hi) columns of each rank row.
+        let want: Vec<_> = (0..kp)
+            .flat_map(|r| full_c[r * b + lo..r * b + hi].to_vec())
+            .collect();
+        assert_eq!(part_c, want);
+    }
+}

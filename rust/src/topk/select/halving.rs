@@ -1,0 +1,161 @@
+//! Successive-halving Stage 1: tournament selection by repeated pairwise
+//! elimination (the Successive Halving Top-k Operator's discrete shape).
+//!
+//! Candidates accumulate in a buffer of at most `2 * budget`; when full,
+//! one halving round pairs adjacent entries and keeps each pair's winner
+//! (odd tail gets a bye). Ingest is O(1) amortized per element with no
+//! histogramming and no threshold state — the cheapest selector in the
+//! zoo — but a strong candidate can eliminate another strong candidate
+//! early, so unlike [`radix`](super::radix) the kept set is *not* exactly
+//! the stream's top `budget`: recall is traded for the shortest possible
+//! critical path (log rounds of independent compares, the property that
+//! makes the operator attractive on parallel hardware).
+
+use super::{Candidate, Stage1Algo, Stage1Select};
+
+pub struct HalvingSelect {
+    budget: usize,
+    /// Round trigger: one halving runs when the buffer reaches this
+    /// (2 * budget), halving it back to `budget` survivors.
+    cap: usize,
+    buf: Vec<Candidate>,
+}
+
+impl HalvingSelect {
+    pub fn new(budget: usize) -> Self {
+        assert!(budget > 0);
+        HalvingSelect {
+            budget,
+            cap: 2 * budget,
+            buf: Vec::with_capacity(2 * budget),
+        }
+    }
+
+    /// One elimination round: buf[2i] vs buf[2i+1], winner survives in
+    /// place; an odd tail advances unopposed.
+    fn halve(&mut self) {
+        let n = self.buf.len();
+        let mut out = 0usize;
+        let mut i = 0usize;
+        while i + 1 < n {
+            let winner = if self.buf[i].beats(&self.buf[i + 1]) {
+                self.buf[i]
+            } else {
+                self.buf[i + 1]
+            };
+            self.buf[out] = winner;
+            out += 1;
+            i += 2;
+        }
+        if i < n {
+            self.buf[out] = self.buf[i];
+            out += 1;
+        }
+        self.buf.truncate(out);
+    }
+}
+
+impl Stage1Select for HalvingSelect {
+    fn algo(&self) -> Stage1Algo {
+        Stage1Algo::Halving
+    }
+
+    fn reset(&mut self) {
+        self.buf.clear();
+    }
+
+    fn ingest(&mut self, base_index: u32, scores: &[f32]) {
+        for (j, &x) in scores.iter().enumerate() {
+            // Rival semantics: non-finite scores are never admitted.
+            if !x.is_finite() {
+                continue;
+            }
+            self.buf.push(Candidate {
+                index: base_index + j as u32,
+                value: x,
+            });
+            if self.buf.len() == self.cap {
+                self.halve();
+            }
+        }
+    }
+
+    fn candidates(&mut self) -> Vec<Candidate> {
+        while self.buf.len() > self.budget {
+            self.halve();
+        }
+        self.buf.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::sort_candidates;
+    use crate::util::check::property;
+    use crate::util::Rng;
+
+    #[test]
+    fn the_stream_maximum_always_survives() {
+        // The max wins every pairing it enters, so it can never be
+        // eliminated — the operator's one hard guarantee.
+        let mut rng = Rng::new(921);
+        for _ in 0..20 {
+            let n = 1 + rng.next_usize(3000);
+            let v: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let max_i = (0..n).max_by(|&a, &b| v[a].total_cmp(&v[b])).unwrap();
+            let mut sel = HalvingSelect::new(1 + rng.next_usize(16));
+            sel.ingest(0, &v);
+            let got = sel.candidates();
+            assert!(
+                got.iter().any(|c| c.index == max_i as u32),
+                "max (index {max_i}) eliminated, n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_halving_respects_budget_and_subset() {
+        property("halving stays within budget", 25, |g| {
+            let n = g.usize_in(1..=2000);
+            let budget = g.usize_in(1..=64);
+            let v: Vec<f32> = (0..n).map(|_| g.rng().next_f32()).collect();
+            let mut sel = HalvingSelect::new(budget);
+            let mut off = 0usize;
+            while off < n {
+                let len = (1 + g.rng().next_usize(83)).min(n - off);
+                sel.ingest(off as u32, &v[off..off + len]);
+                off += len;
+            }
+            let got = sel.candidates();
+            assert!(got.len() <= budget);
+            if n <= budget {
+                // No round ever ran: everything survives.
+                assert_eq!(got.len(), n);
+            } else {
+                // The final drain round can undershoot, but never below
+                // half the budget (one halving of a > budget buffer).
+                assert!(got.len() >= (budget + 1) / 2, "{} < {}", got.len(), (budget + 1) / 2);
+            }
+            let mut seen = std::collections::HashSet::new();
+            for c in &got {
+                assert!(seen.insert(c.index), "duplicate {}", c.index);
+                assert_eq!(v[c.index as usize], c.value);
+            }
+        });
+    }
+
+    #[test]
+    fn short_streams_pass_through_unharmed() {
+        // Fewer elements than budget: no round ever runs, everything
+        // survives — recall 1.0 on tiny N by construction.
+        let mut sel = HalvingSelect::new(8);
+        sel.ingest(100, &[3.0, 1.0, 2.0]);
+        let mut got = sel.candidates();
+        sort_candidates(&mut got);
+        assert_eq!(
+            got.iter().map(|c| (c.index, c.value)).collect::<Vec<_>>(),
+            vec![(100, 3.0), (102, 2.0), (101, 1.0)]
+        );
+    }
+}

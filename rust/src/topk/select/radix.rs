@@ -1,0 +1,254 @@
+//! Radix-select Stage 1 (RadiK's CPU shape): exact top-`budget` of each
+//! worker's stream via MSB-first radix narrowing over the monotone u32
+//! transform of f32 scores.
+//!
+//! The selector buffers survivors and, whenever the buffer reaches twice
+//! its budget, radix-selects the budget-th largest key in O(buffer) and
+//! drops everything below it — so ingest stays amortized O(1) per element
+//! and, unlike bucketing, the kept set is *exactly* the stream's top
+//! `budget` (recall loss can only come from the Stage-2 merge taking
+//! K < budget, or from multiple workers splitting the stream). The
+//! learned threshold also acts as RadiK's early filter: once the buffer
+//! has been compacted, elements below the current budget-th key are
+//! rejected with one compare before any allocation.
+
+use super::{Candidate, Stage1Algo, Stage1Select};
+
+/// Monotone u32 transform of an f32: `rank_key(a) > rank_key(b)` iff
+/// `a > b` for all finite (and infinite) floats. Negative floats flip all
+/// bits; non-negative set the sign bit — the standard radix-sortable
+/// total order.
+#[inline]
+pub fn rank_key(x: f32) -> u32 {
+    let bits = x.to_bits();
+    if bits & 0x8000_0000 != 0 {
+        !bits
+    } else {
+        bits | 0x8000_0000
+    }
+}
+
+/// The `k`-th largest key in `keys` (rank 1 = max), by four MSB-first
+/// 8-bit histogram passes. `k` must satisfy `1 <= k <= keys.len()`.
+fn kth_largest_key(keys: &[u32], k: usize) -> u32 {
+    debug_assert!(k >= 1 && k <= keys.len());
+    let mut prefix: u32 = 0;
+    let mut mask: u32 = 0;
+    let mut want = k;
+    for pass in 0..4 {
+        let shift = 24 - 8 * pass;
+        let mut hist = [0usize; 256];
+        for &key in keys {
+            if key & mask == prefix {
+                hist[((key >> shift) & 0xff) as usize] += 1;
+            }
+        }
+        // Walk digits from the top until the cumulative count covers the
+        // wanted rank, then fix that digit and descend.
+        let mut digit = 255usize;
+        loop {
+            let c = hist[digit];
+            if want <= c {
+                break;
+            }
+            want -= c;
+            debug_assert!(digit > 0, "rank exceeds population");
+            digit -= 1;
+        }
+        prefix |= (digit as u32) << shift;
+        mask |= 0xffu32 << shift;
+    }
+    prefix
+}
+
+pub struct RadixSelect {
+    budget: usize,
+    /// Admission threshold: the rank_key of the weakest kept candidate
+    /// after the last compaction (0 before any compaction admits all).
+    threshold: u32,
+    buf: Vec<Candidate>,
+    /// Key scratch for the histogram passes, reused across compactions.
+    keys: Vec<u32>,
+}
+
+impl RadixSelect {
+    pub fn new(budget: usize) -> Self {
+        assert!(budget > 0);
+        RadixSelect {
+            budget,
+            threshold: 0,
+            buf: Vec::with_capacity(2 * budget),
+            keys: Vec::with_capacity(2 * budget),
+        }
+    }
+
+    /// Shrink the buffer to exactly the top `budget` candidates and raise
+    /// the admission threshold to the weakest survivor.
+    fn compact(&mut self) {
+        if self.buf.len() <= self.budget {
+            return;
+        }
+        self.keys.clear();
+        self.keys.extend(self.buf.iter().map(|c| rank_key(c.value)));
+        let thr = kth_largest_key(&self.keys, self.budget);
+        // Keep everything strictly above the threshold, then fill the
+        // remaining slots with threshold ties in stream order — exactly
+        // `budget` survivors.
+        let mut kept = 0usize;
+        let mut ties_left = self.budget
+            - self
+                .keys
+                .iter()
+                .filter(|&&key| key > thr)
+                .count();
+        for i in 0..self.buf.len() {
+            let key = self.keys[i];
+            let keep = key > thr || (key == thr && ties_left > 0 && { ties_left -= 1; true });
+            if keep {
+                self.buf.swap(kept, i);
+                self.keys.swap(kept, i);
+                kept += 1;
+            }
+        }
+        self.buf.truncate(kept);
+        debug_assert_eq!(kept, self.budget);
+        self.threshold = thr;
+    }
+}
+
+impl Stage1Select for RadixSelect {
+    fn algo(&self) -> Stage1Algo {
+        Stage1Algo::Radix
+    }
+
+    fn reset(&mut self) {
+        self.buf.clear();
+        self.threshold = 0;
+    }
+
+    fn ingest(&mut self, base_index: u32, scores: &[f32]) {
+        for (j, &x) in scores.iter().enumerate() {
+            // Rival semantics: non-finite scores are never admitted.
+            if !x.is_finite() {
+                continue;
+            }
+            if rank_key(x) < self.threshold {
+                continue;
+            }
+            self.buf.push(Candidate {
+                index: base_index + j as u32,
+                value: x,
+            });
+            if self.buf.len() == 2 * self.budget {
+                self.compact();
+            }
+        }
+    }
+
+    fn candidates(&mut self) -> Vec<Candidate> {
+        self.compact();
+        self.buf.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::exact::topk_sort;
+    use crate::topk::sort_candidates;
+    use crate::util::check::property;
+    use crate::util::Rng;
+
+    #[test]
+    fn rank_key_is_a_monotone_total_order() {
+        let ordered = [
+            f32::NEG_INFINITY,
+            -1.0e30,
+            -2.5,
+            -1.0,
+            -f32::MIN_POSITIVE,
+            -0.0,
+            0.0,
+            f32::MIN_POSITIVE,
+            0.5,
+            1.0,
+            1.0e30,
+            f32::INFINITY,
+        ];
+        for w in ordered.windows(2) {
+            assert!(
+                rank_key(w[0]) <= rank_key(w[1]),
+                "{} !<= {}",
+                w[0],
+                w[1]
+            );
+        }
+        // -0.0 and 0.0 compare equal as floats but need not share a key;
+        // strict inequality must still be monotone.
+        assert!(rank_key(-1.0) < rank_key(1.0));
+        assert!(rank_key(0.25) < rank_key(0.5));
+    }
+
+    #[test]
+    fn kth_largest_matches_sort() {
+        let mut rng = Rng::new(911);
+        for _ in 0..50 {
+            let n = 1 + rng.next_usize(300);
+            let keys: Vec<u32> = (0..n).map(|_| rank_key(rng.next_f32() - 0.5)).collect();
+            let mut sorted = keys.clone();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            let k = 1 + rng.next_usize(n);
+            assert_eq!(kth_largest_key(&keys, k), sorted[k - 1], "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn prop_radix_keeps_the_exact_top_budget() {
+        // Streamed through ragged chunks, the kept set is exactly the
+        // stream's top `budget` by value (ties broken in stream order,
+        // which for unique values is irrelevant).
+        property("radix keeps exact top-budget", 25, |g| {
+            let n = g.usize_in(1..=2000);
+            let budget = g.usize_in(1..=64);
+            let v: Vec<f32> = (0..n).map(|_| g.rng().next_f32()).collect();
+            let mut sel = RadixSelect::new(budget);
+            let mut off = 0usize;
+            while off < n {
+                let len = (1 + g.rng().next_usize(97)).min(n - off);
+                sel.ingest(off as u32, &v[off..off + len]);
+                off += len;
+            }
+            let mut got = sel.candidates();
+            sort_candidates(&mut got);
+            let want = topk_sort(&v, budget);
+            assert_eq!(got, want, "n={n} budget={budget}");
+        });
+    }
+
+    #[test]
+    fn threshold_ties_never_overfill_the_budget() {
+        // A constant stream is all ties at the threshold: the compaction
+        // must keep exactly `budget` of them, earliest first.
+        let mut sel = RadixSelect::new(4);
+        let v = [1.5f32; 64];
+        sel.ingest(0, &v);
+        let got = sel.candidates();
+        assert_eq!(got.len(), 4);
+        let idx: Vec<u32> = got.iter().map(|c| c.index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn reset_reopens_the_admission_filter() {
+        let mut sel = RadixSelect::new(2);
+        sel.ingest(0, &[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(sel.candidates().len(), 2);
+        sel.reset();
+        // After reset, small values must be admitted again.
+        sel.ingest(0, &[0.25, 0.125]);
+        let mut got = sel.candidates();
+        sort_candidates(&mut got);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].value, 0.25);
+    }
+}

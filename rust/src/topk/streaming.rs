@@ -3,30 +3,52 @@
 //!
 //! This is the decode-time shape of the paper's KV-cache / attention
 //! use cases (Tang et al., Yang et al. in the intro): scores arrive one
-//! chunk per step, the first stage folds each chunk into its bucket state
+//! chunk per step, the first stage folds each chunk into its selector
 //! online (no stored history), and the second stage can be queried at any
-//! point. The bucket of element `i` is `i mod B` over the *global* stream
-//! offset, so a streamed run is bit-identical to a batch run over the
-//! concatenated input — property-tested below.
+//! point. The first stage is any [`Stage1Select`] whose algorithm supports
+//! chunked ingest ([`Stage1Algo::supports_chunked_ingest`]): the default
+//! bucketed selector assigns element `i` to bucket `i mod B` over the
+//! *global* stream offset, so a streamed run is bit-identical to a batch
+//! run over the concatenated input — property-tested below. The rival
+//! selectors (radix, halving) are offset-oblivious, so their results are
+//! chunking-invariant too.
 
-use super::twostage::Stage1State;
+use super::select::{self, Stage1Algo, Stage1Select};
+use super::simd::SimdKernel;
 use super::{exact, Candidate};
 
 /// Streaming state: a first stage that accepts arbitrary-length chunks.
-#[derive(Debug, Clone)]
 pub struct StreamingTopK {
     /// Bucket count and per-bucket K′ (N in `params` is not used for
-    /// streaming: the stream length is unbounded).
+    /// streaming: the stream length is unbounded). For rival algorithms
+    /// `B·K′` is the candidate budget rather than a bucket geometry.
     pub buckets: usize,
     pub local_k: usize,
     pub k: usize,
-    state: Stage1State,
+    select: Box<dyn Stage1Select>,
     /// Global offset of the next element.
     offset: u64,
 }
 
 impl StreamingTopK {
+    /// The paper's bucketed first stage (bit-identical to the batch
+    /// operator on the concatenated stream).
     pub fn new(buckets: usize, local_k: usize, k: usize) -> Self {
+        Self::with_select(Stage1Algo::Bucketed, buckets, local_k, k, SimdKernel::auto())
+    }
+
+    /// A specific Stage-1 algorithm (budget `buckets·local_k` for rivals).
+    pub fn with_algo(algo: Stage1Algo, buckets: usize, local_k: usize, k: usize) -> Self {
+        Self::with_select(algo, buckets, local_k, k, SimdKernel::auto())
+    }
+
+    pub fn with_select(
+        algo: Stage1Algo,
+        buckets: usize,
+        local_k: usize,
+        k: usize,
+        kernel: SimdKernel,
+    ) -> Self {
         assert!(buckets > 0 && local_k > 0 && k > 0);
         assert!(
             buckets * local_k >= k,
@@ -36,9 +58,14 @@ impl StreamingTopK {
             buckets,
             local_k,
             k,
-            state: Stage1State::with_dims(buckets, local_k),
+            select: select::build_streaming(algo, buckets, local_k, kernel),
             offset: 0,
         }
+    }
+
+    /// Which Stage-1 algorithm this stream runs.
+    pub fn algo(&self) -> Stage1Algo {
+        self.select.algo()
     }
 
     /// Number of stream elements consumed so far.
@@ -50,46 +77,24 @@ impl StreamingTopK {
         self.offset == 0
     }
 
-    /// Fold a chunk of values into the bucket state.
+    /// Fold a chunk of values into the selector. Chunks are split at
+    /// stream-row boundaries (`B` elements) so each ingested run satisfies
+    /// the [`Stage1Select`] contract: a contiguous ascending run contained
+    /// in one stream row.
     pub fn push(&mut self, chunk: &[f32]) {
-        let b = self.buckets;
-        let kp = self.local_k;
-        let vals = &mut self.state.values;
-        let idxs = &mut self.state.indices;
-        for (j, &x) in chunk.iter().enumerate() {
-            let global = self.offset + j as u64;
-            let lane = (global % b as u64) as usize;
-            let last = (kp - 1) * b + lane;
-            if x >= vals[last] {
-                vals[last] = x;
-                idxs[last] = global as u32;
-                let mut r = kp - 1;
-                while r > 0 {
-                    let hi = (r - 1) * b + lane;
-                    let lo = r * b + lane;
-                    if x > vals[hi] {
-                        vals.swap(hi, lo);
-                        idxs.swap(hi, lo);
-                        r -= 1;
-                    } else {
-                        break;
-                    }
-                }
-            }
+        let mut rest = chunk;
+        while !rest.is_empty() {
+            let lane = (self.offset % self.buckets as u64) as usize;
+            let take = rest.len().min(self.buckets - lane);
+            self.select.ingest(self.offset as u32, &rest[..take]);
+            self.offset += take as u64;
+            rest = &rest[take..];
         }
-        self.offset += chunk.len() as u64;
     }
 
     /// Current approximate top-K of everything pushed so far.
-    pub fn topk(&self) -> Vec<Candidate> {
-        let mut cands: Vec<Candidate> = self
-            .state
-            .values
-            .iter()
-            .zip(self.state.indices.iter())
-            .filter(|(v, _)| **v > f32::NEG_INFINITY)
-            .map(|(&value, &index)| Candidate { index, value })
-            .collect();
+    pub fn topk(&mut self) -> Vec<Candidate> {
+        let mut cands = self.select.candidates();
         let k = self.k.min(cands.len());
         if k < cands.len() {
             exact::select_top(&mut cands, k);
@@ -101,7 +106,7 @@ impl StreamingTopK {
 
     /// Reset to an empty stream.
     pub fn reset(&mut self) {
-        self.state.reset();
+        self.select.reset();
         self.offset = 0;
     }
 }
@@ -126,6 +131,7 @@ mod tests {
         let want = batch.run(&values);
 
         let mut stream = StreamingTopK::new(b, kp, k);
+        assert_eq!(stream.algo(), Stage1Algo::Bucketed);
         for chunk in values.chunks(100) {
             stream.push(chunk);
         }
@@ -179,8 +185,44 @@ mod tests {
     }
 
     #[test]
+    fn radix_stream_is_exact_up_to_its_budget() {
+        // RadixSelect keeps the exact top-(B·K') of everything ingested,
+        // so the streamed top-k (k <= budget) is the exact stream top-k.
+        let mut rng = Rng::new(17);
+        let mut s = StreamingTopK::with_algo(Stage1Algo::Radix, 64, 2, 32);
+        assert_eq!(s.algo(), Stage1Algo::Radix);
+        let mut all = Vec::new();
+        for _step in 0..40 {
+            let chunk: Vec<f32> = (0..96).map(|_| rng.next_gaussian() as f32).collect();
+            all.extend_from_slice(&chunk);
+            s.push(&chunk);
+        }
+        assert_eq!(s.topk(), topk_sort(&all, 32));
+    }
+
+    #[test]
+    fn halving_stream_returns_well_formed_survivors() {
+        let mut rng = Rng::new(23);
+        let all: Vec<f32> = (0..4096).map(|_| rng.next_f32()).collect();
+        let mut s = StreamingTopK::with_algo(Stage1Algo::Halving, 64, 2, 32);
+        for chunk in all.chunks(100) {
+            s.push(chunk);
+        }
+        let got = s.topk();
+        assert!(got.len() <= 32);
+        // Ordered, duplicate-free, every value from the stream.
+        for w in got.windows(2) {
+            assert!(w[0].beats(&w[1]));
+        }
+        for c in &got {
+            assert_eq!(all[c.index as usize], c.value);
+        }
+    }
+
+    #[test]
     fn prop_stream_chunking_invariant() {
         property("chunking does not change the result", 25, |g| {
+            let algo = *g.choose(&Stage1Algo::ALL);
             let b = *g.choose(&[16usize, 64]);
             let rows = g.usize_in(2..=20);
             let n = b * rows;
@@ -188,17 +230,17 @@ mod tests {
             let k = g.usize_in(1..=(b * kp).min(n));
             let values: Vec<f32> = (0..n).map(|_| g.rng().next_f32()).collect();
 
-            let mut one = StreamingTopK::new(b, kp, k);
+            let mut one = StreamingTopK::with_algo(algo, b, kp, k);
             one.push(&values);
 
-            let mut many = StreamingTopK::new(b, kp, k);
+            let mut many = StreamingTopK::with_algo(algo, b, kp, k);
             let mut rest: &[f32] = &values;
             while !rest.is_empty() {
                 let take = g.usize_in(1..=rest.len());
                 many.push(&rest[..take]);
                 rest = &rest[take..];
             }
-            assert_eq!(one.topk(), many.topk());
+            assert_eq!(one.topk(), many.topk(), "{algo}");
         });
     }
 }

@@ -100,6 +100,15 @@ impl Json {
         Json::Num(n)
     }
 
+    /// A number, or `null` for non-finite values (JSON has no NaN/inf).
+    pub fn num_or_null(n: f64) -> Json {
+        if n.is_finite() {
+            Json::Num(n)
+        } else {
+            Json::Null
+        }
+    }
+
     pub fn arr_usize(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }

@@ -97,9 +97,11 @@ fn init_config_then_serve_small() {
     assert!(out.status.success(), "stdout: {s}\nstderr: {e}");
     assert!(s.contains("throughput"), "got: {s}");
     assert!(s.contains("recall@16"), "got: {s}");
-    // The resolved SIMD dispatch is announced at startup and lands in the
-    // shutdown metrics summary (`kernel=<scalar|avx2|neon>`).
+    // The resolved SIMD dispatch and Stage-1 algorithm are announced at
+    // startup and land in the shutdown metrics summary
+    // (`kernel=<scalar|avx2|neon> stage1=<bucketed|radix|halving>`).
     assert!(s.contains("kernel="), "got: {s}");
+    assert!(s.contains("stage1=bucketed"), "got: {s}");
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -136,6 +138,64 @@ fn serve_rejects_a_kernel_the_host_cannot_run() {
         failures >= 1,
         "at least one of avx2/neon must be unrunnable on any single host"
     );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_rejects_an_unknown_stage1_algorithm() {
+    // Mirrors the foreign-kernel test above: a Stage-1 algorithm name the
+    // zoo doesn't know must be a launch error that lists the allowed set —
+    // never a silent fallback to the bucketed default.
+    let dir = std::env::temp_dir().join(format!("fastk-cli-s1-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("serve.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{"d": 8, "k": 8, "shards": 1, "shard_size": 512,
+            "recall_target": 0.9, "backend": "native",
+            "stage1": "bitonic", "seed": 5}"#,
+    )
+    .unwrap();
+    let out = fastk()
+        .args(["serve", "--config", cfg_path.to_str().unwrap(), "--queries", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "unknown stage1 must fail the launch");
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("stage1"), "got: {e}");
+    for allowed in ["bucketed", "radix", "halving"] {
+        assert!(e.contains(allowed), "error must list {allowed:?}: {e}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_with_a_rival_stage1_algorithm() {
+    // A rival algorithm serves end to end when the candidate budget is
+    // pinned: the launch announces it, the plan is a measured budget plan
+    // (no Theorem-1 prediction), and the shutdown metrics carry the name.
+    let dir = std::env::temp_dir().join(format!("fastk-cli-s1r-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("serve.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{"d": 8, "k": 8, "shards": 2, "shard_size": 512,
+            "recall_target": 0.9, "batch_max": 4, "batch_delay_us": 500,
+            "backend": "native", "stage1": "radix",
+            "buckets": 64, "local_k": 1, "seed": 5}"#,
+    )
+    .unwrap();
+    let out = fastk()
+        .args(["serve", "--config", cfg_path.to_str().unwrap(), "--queries", "16"])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {s}\nstderr: {e}");
+    assert!(s.contains("radix stage1"), "got: {s}");
+    assert!(s.contains("measured at runtime"), "got: {s}");
+    assert!(s.contains("recall@8"), "got: {s}");
+    assert!(s.contains("stage1=radix"), "got: {s}");
     std::fs::remove_dir_all(&dir).ok();
 }
 
