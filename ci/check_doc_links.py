@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Validate relative markdown links (and their #anchors) in repo docs.
+
+Scans README.md and docs/*.md for inline links `[text](target)`:
+
+- external targets (a URL scheme or mailto:) are skipped,
+- a relative path target must exist on disk, resolved against the
+  directory of the file that links it,
+- a `#fragment` pointing into a markdown file (including bare `#anchor`
+  self-links) must match a heading in that file, using GitHub's
+  heading-to-anchor slug rules (lowercase, punctuation stripped, spaces
+  to hyphens).
+
+This is how CI keeps the operator/protocol doc cross-links — and the
+README's pointers into docs/ — from rotting as files move.
+
+Usage:
+    check_doc_links.py [root]        # default: repo root = script's parent
+"""
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^()\s]+)\)")
+SCHEME_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->hyphens."""
+    text = heading.strip().lower().replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    anchors = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            anchors.add(slugify(m.group(2)))
+    return anchors
+
+
+def links_of(path: pathlib.Path):
+    """Yield link targets, skipping fenced code blocks and inline code."""
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        line = re.sub(r"`[^`]*`", "", line)
+        yield from LINK_RE.findall(line)
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list:
+    errors = []
+    for target in links_of(md):
+        if SCHEME_RE.match(target):
+            continue  # external URL
+        path_part, _, fragment = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md.relative_to(root)}: broken link target: {target}")
+            continue
+        if fragment and dest.suffix == ".md":
+            if fragment not in anchors_of(dest):
+                errors.append(
+                    f"{md.relative_to(root)}: no heading for anchor "
+                    f"#{fragment} in {dest.relative_to(root)}"
+                )
+    return errors
+
+
+def main() -> None:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else pathlib.Path(__file__).parent / "..")
+    root = root.resolve()
+    files = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    files = [f for f in files if f.exists()]
+    if not files:
+        sys.exit("check_doc_links: FAIL: no markdown files found")
+    errors = []
+    checked = 0
+    for md in files:
+        errors.extend(check_file(md, root))
+        checked += 1
+    if errors:
+        for e in errors:
+            print(f"check_doc_links: FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"check_doc_links: ok: {checked} files, all relative links resolve")
+
+
+if __name__ == "__main__":
+    main()

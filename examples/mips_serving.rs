@@ -23,7 +23,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fastk::coordinator::{
-    BackendFactory, BatcherConfig, MipsService, NativeBackend, PjrtBackend, Query,
+    BackendFactory, BatchPolicy, BatcherConfig, MipsService, NativeBackend, PjrtBackend, Query,
     ServiceConfig, ShardBackend,
 };
 use fastk::store::{build_store, generate_shard_rows, ShardStore, StoreSpec};
@@ -117,6 +117,7 @@ fn main() -> anyhow::Result<()> {
             batcher: BatcherConfig {
                 max_batch: 8, // the artifact's compiled batch
                 max_delay: Duration::from_millis(2),
+                policy: BatchPolicy::Windowed,
             },
             // The PJRT artifact's (B, K') is baked at compile time; only
             // the native path runs the freshly planned parameters.
@@ -225,6 +226,7 @@ fn main() -> anyhow::Result<()> {
             batcher: BatcherConfig {
                 max_batch: 8,
                 max_delay: Duration::from_millis(2),
+                policy: BatchPolicy::Windowed,
             },
             plan: Some(plan),
         },

@@ -10,8 +10,8 @@ use std::time::{Duration, Instant};
 
 use fastk::bench_harness::{banner, Table};
 use fastk::coordinator::{
-    BackendFactory, BatcherConfig, MipsService, NativeBackend, Query, ServiceConfig,
-    ShardBackend,
+    BackendFactory, BatchPolicy, BatcherConfig, MipsService, NativeBackend, Query,
+    ServiceConfig, ShardBackend,
 };
 use fastk::topk::TwoStageParams;
 use fastk::util::stats::fmt_ns;
@@ -48,6 +48,7 @@ fn run_config(
             batcher: BatcherConfig {
                 max_batch,
                 max_delay,
+                policy: BatchPolicy::Windowed,
             },
             plan: None,
         },

@@ -1,0 +1,440 @@
+//! Open-loop serve load bench: throughput-vs-tail-latency curves for the
+//! TCP front end, event-driven loop vs the thread-per-connection baseline.
+//!
+//! For each front end the harness starts a real service (native exact
+//! backend behind the adaptive batcher) plus a [`NetServer`], then drives
+//! it from many concurrent connections with deterministic Poisson arrivals
+//! (seeded [`Rng`], interarrival `-ln(1-U)/lambda`). The load is **open
+//! loop**: per-request latency is measured from the *scheduled* arrival
+//! time, not the send time, so a stalled front end cannot hide queueing
+//! delay by slowing the clients down (no coordinated omission).
+//!
+//! Emitted results (shared `FASTK_BENCH_JSON` schema):
+//!
+//! - `lat_{frontend}_q{load}`  — per-request latency distribution at the
+//!   offered load (samples = completed requests)
+//! - `nsq_{frontend}_q{load}`  — wall nanoseconds per completed request
+//!   (single sample; the throughput gate compares these)
+//! - `ping_{frontend}`         — closed-loop single-connection round trips
+//!   (batch-1 latency: must not pay the full batching window)
+//!
+//! Acceptance (enforced on full runs, reported on `FASTK_BENCH_SMOKE=1`):
+//! the event front end's throughput must be no worse than the threaded
+//! baseline at the top offered load ([`gate_not_slower`]), its p99 at that
+//! load must not blow out, batch-1 p50 may regress by at most the batching
+//! deadline, and overload must produce counted `overloaded` rejects with
+//! every request answered — zero hangs, zero lost replies.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use fastk::bench_harness::{banner, gate_not_slower, maybe_write_json, BenchResult, Table};
+use fastk::coordinator::{
+    BackendFactory, BatchPolicy, BatcherConfig, Frontend, MipsService, NativeBackend, NetConfig,
+    NetServer, ServiceConfig, ShardBackend,
+};
+use fastk::topk::Candidate;
+use fastk::util::json::Json;
+use fastk::util::stats::{fmt_ns, Summary};
+use fastk::util::Rng;
+
+const D: usize = 32;
+const K: usize = 8;
+
+/// The adaptive batcher's formation deadline for every service in this
+/// bench. The batch-1 gate allows the event front end exactly this much
+/// p50 regression over the threaded baseline (plus measurement slack).
+const BATCH_DEADLINE: Duration = Duration::from_millis(1);
+
+fn start_service(n: usize, seed: u64) -> MipsService {
+    let mut rng = Rng::new(seed);
+    let db: Vec<f32> = (0..n * D).map(|_| rng.next_gaussian() as f32).collect();
+    let factory: BackendFactory =
+        Box::new(move || Ok(Box::new(NativeBackend::exact(db, D, K)) as Box<dyn ShardBackend>));
+    MipsService::start(
+        ServiceConfig {
+            d: D,
+            k: K,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_delay: BATCH_DEADLINE,
+                policy: BatchPolicy::Adaptive,
+            },
+            plan: None,
+        },
+        vec![factory],
+        vec![0],
+    )
+    .expect("service starts")
+}
+
+fn net_config(frontend: Frontend, queue_max: usize) -> NetConfig {
+    NetConfig {
+        frontend,
+        io_threads: 2,
+        idle_timeout: Duration::from_millis(60_000),
+        queue_max,
+    }
+}
+
+fn query_line(id: u64, rng: &mut Rng) -> String {
+    let mut s = format!("{{\"id\": {id}, \"vector\": [");
+    for i in 0..D {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{:.4}", rng.next_gaussian()));
+    }
+    s.push_str("]}\n");
+    s
+}
+
+struct LoadRun {
+    latencies_ns: Vec<f64>,
+    ok: usize,
+    errors: usize,
+    wall: Duration,
+}
+
+/// Drive `conns * per_conn` queries at `qps` offered load (split evenly
+/// across connections), measuring each reply against its scheduled
+/// arrival time.
+fn open_loop(addr: &str, conns: usize, per_conn: usize, qps: f64, seed: u64) -> LoadRun {
+    let lambda = qps / conns as f64;
+    // Common start line slightly in the future so every connection's
+    // schedule begins together.
+    let t0 = Instant::now() + Duration::from_millis(50);
+    let mut handles = Vec::new();
+    for c in 0..conns {
+        let addr = addr.to_string();
+        handles.push(thread::spawn(move || {
+            let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            // Deterministic Poisson arrivals for this connection.
+            let mut offsets = Vec::with_capacity(per_conn);
+            let mut t = 0.0f64;
+            let mut lines = Vec::with_capacity(per_conn);
+            for i in 0..per_conn {
+                t += -(1.0 - rng.next_f64()).ln() / lambda;
+                offsets.push(Duration::from_secs_f64(t));
+                lines.push(query_line((c * per_conn + i) as u64, &mut rng));
+            }
+            let stream = TcpStream::connect(&addr).expect("connect");
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let mut w = stream.try_clone().unwrap();
+            let offsets_r = offsets.clone();
+            let reader = thread::spawn(move || {
+                let mut r = BufReader::new(stream);
+                let mut lat = Vec::with_capacity(per_conn);
+                let mut ok = 0usize;
+                let mut errors = 0usize;
+                let mut line = String::new();
+                for _ in 0..per_conn {
+                    line.clear();
+                    let n = r.read_line(&mut line).expect("reply before timeout");
+                    assert!(n > 0, "server closed mid-run: lost replies");
+                    let j = Json::parse(line.trim()).expect("reply parses");
+                    let id = j.get("id").and_then(|v| v.as_usize()).expect("reply echoes id");
+                    let scheduled = t0 + offsets_r[id % per_conn];
+                    lat.push(Instant::now().duration_since(scheduled).as_nanos() as f64);
+                    if j.get("results").is_some() {
+                        ok += 1;
+                    } else {
+                        errors += 1;
+                    }
+                }
+                (lat, ok, errors)
+            });
+            for (off, line) in offsets.iter().zip(&lines) {
+                let target = t0 + *off;
+                let now = Instant::now();
+                if target > now {
+                    thread::sleep(target - now);
+                }
+                w.write_all(line.as_bytes()).expect("send");
+            }
+            reader.join().expect("reader thread")
+        }));
+    }
+    let mut latencies_ns = Vec::new();
+    let (mut ok, mut errors) = (0usize, 0usize);
+    for h in handles {
+        let (lat, o, e) = h.join().expect("connection thread");
+        latencies_ns.extend(lat);
+        ok += o;
+        errors += e;
+    }
+    LoadRun {
+        latencies_ns,
+        ok,
+        errors,
+        wall: t0.elapsed(),
+    }
+}
+
+/// Closed-loop single-connection round trips: batch-1 latency (each query
+/// waits for its reply, so the adaptive batcher sees a lone request).
+fn ping(addr: &str, count: usize, seed: u64) -> Vec<f64> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut rng = Rng::new(seed);
+    let mut lat = Vec::with_capacity(count);
+    let mut line = String::new();
+    for id in 0..count {
+        let q = query_line(id as u64, &mut rng);
+        let t = Instant::now();
+        w.write_all(q.as_bytes()).unwrap();
+        line.clear();
+        assert!(r.read_line(&mut line).unwrap() > 0, "reply");
+        lat.push(t.elapsed().as_nanos() as f64);
+    }
+    lat
+}
+
+/// A deliberately slow backend for the overload scenario: every batch
+/// sleeps, so a pipelined burst must trip admission control.
+struct SlowBackend {
+    n: usize,
+    delay: Duration,
+}
+
+impl ShardBackend for SlowBackend {
+    fn score_topk(&mut self, _queries: &[f32], nq: usize) -> anyhow::Result<Vec<Vec<Candidate>>> {
+        thread::sleep(self.delay);
+        Ok((0..nq)
+            .map(|_| {
+                (0..K)
+                    .map(|i| Candidate {
+                        index: i as u32,
+                        value: (K - i) as f32,
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    fn dim(&self) -> usize {
+        D
+    }
+
+    fn shard_size(&self) -> usize {
+        self.n
+    }
+
+    fn k(&self) -> usize {
+        K
+    }
+}
+
+/// Overload must reject explicitly, never hang: burst `burst` pipelined
+/// queries at a queue_max=1 server over a slow backend, and require every
+/// request answered (ok + overloaded == sent) with at least one of each.
+/// Returns true on failure.
+fn overload_check(burst: usize, delay: Duration) -> bool {
+    let factory: BackendFactory =
+        Box::new(move || Ok(Box::new(SlowBackend { n: 64, delay }) as Box<dyn ShardBackend>));
+    let svc = std::sync::Arc::new(
+        MipsService::start(
+            ServiceConfig {
+                d: D,
+                k: K,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_delay: Duration::from_micros(100),
+                    policy: BatchPolicy::Adaptive,
+                },
+                plan: None,
+            },
+            vec![factory],
+            vec![0],
+        )
+        .expect("service starts"),
+    );
+    let server = NetServer::start_with("127.0.0.1:0", svc.clone(), net_config(Frontend::Event, 1))
+        .expect("server starts");
+    let addr = server.addr.to_string();
+
+    let mut rng = Rng::new(99);
+    let mut payload = String::new();
+    for id in 0..burst {
+        payload.push_str(&query_line(id as u64, &mut rng));
+    }
+    let stream = TcpStream::connect(&addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(payload.as_bytes()).expect("burst send");
+    let mut r = BufReader::new(stream);
+    let (mut ok, mut rejected, mut other) = (0usize, 0usize, 0usize);
+    let mut line = String::new();
+    for _ in 0..burst {
+        line.clear();
+        let n = r.read_line(&mut line).expect("every burst query is answered");
+        assert!(n > 0, "server closed before answering the whole burst");
+        let j = Json::parse(line.trim()).expect("reply parses");
+        match j.get("error").and_then(|e| e.as_str()) {
+            None => ok += 1,
+            Some("overloaded") => rejected += 1,
+            Some(_) => other += 1,
+        }
+    }
+    let counted = svc.metrics.overloaded_rejects() as usize;
+    server.shutdown();
+    println!("overload burst={burst}: ok={ok} rejected={rejected} counted={counted}");
+    let bad = ok + rejected + other != burst
+        || ok == 0
+        || rejected == 0
+        || other != 0
+        || counted != rejected;
+    if bad {
+        eprintln!("FAIL: overload must answer every request with ok or a counted reject");
+    }
+    bad
+}
+
+fn main() {
+    let smoke = std::env::var("FASTK_BENCH_SMOKE").is_ok();
+    let enforce = !smoke;
+    let (n, conns, loads, per_conn, pings): (usize, usize, Vec<f64>, usize, usize) = if smoke {
+        (512, 4, vec![200.0], 15, 20)
+    } else {
+        (4096, 16, vec![1000.0, 4000.0], 250, 200)
+    };
+
+    banner(&format!(
+        "serve front-end load sweep (1 shard x {n} x {D}-d, K={K}, {conns} conns, \
+         adaptive batch deadline {}us{})",
+        BATCH_DEADLINE.as_micros(),
+        if smoke { ", SMOKE" } else { "" }
+    ));
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut table = Table::new(&[
+        "frontend", "load qps", "done", "err", "qps", "p50", "p99", "max",
+    ]);
+
+    for frontend in [Frontend::Threaded, Frontend::Event] {
+        let svc = std::sync::Arc::new(start_service(n, 7));
+        let server = NetServer::start_with("127.0.0.1:0", svc.clone(), net_config(frontend, 1024))
+            .expect("server starts");
+        let addr = server.addr.to_string();
+
+        for &qps in &loads {
+            let run = open_loop(&addr, conns, per_conn, qps, 11);
+            let total = run.ok + run.errors;
+            assert_eq!(total, conns * per_conn, "lost replies at {qps} qps ({frontend:?})");
+            let summary = Summary::from_samples(&run.latencies_ns);
+            let wall_qps = total as f64 / run.wall.as_secs_f64();
+            table.row(vec![
+                frontend.as_str().to_string(),
+                format!("{qps:.0}"),
+                total.to_string(),
+                run.errors.to_string(),
+                format!("{wall_qps:.0}"),
+                fmt_ns(summary.p50),
+                fmt_ns(summary.p99),
+                fmt_ns(summary.max),
+            ]);
+            results.push(BenchResult {
+                name: format!("lat_{}_q{qps:.0}", frontend.as_str()),
+                iterations: total,
+                summary,
+            });
+            results.push(BenchResult {
+                name: format!("nsq_{}_q{qps:.0}", frontend.as_str()),
+                iterations: total,
+                summary: Summary::from_samples(&[run.wall.as_nanos() as f64 / total as f64]),
+            });
+        }
+
+        let lat = ping(&addr, pings, 13);
+        results.push(BenchResult {
+            name: format!("ping_{}", frontend.as_str()),
+            iterations: lat.len(),
+            summary: Summary::from_samples(&lat),
+        });
+        server.shutdown();
+    }
+    table.print();
+
+    let mut failed = false;
+
+    // Throughput gate at the top offered load: wall ns per completed
+    // request, event vs the threaded baseline.
+    let top = *loads.last().unwrap();
+    failed |= gate_not_slower(
+        &results,
+        &format!("nsq_threaded_q{top:.0}"),
+        &format!("nsq_event_q{top:.0}"),
+        1.15,
+        enforce,
+        "event front end throughput vs threaded baseline",
+    );
+
+    // Equal-load tail gate: the event loop's p99 must not blow out against
+    // the baseline (generous slack — tails on shared machines are noisy).
+    let p99 = |name: &str| results.iter().find(|r| r.name == name).map(|r| r.summary.p99);
+    match (p99(&format!("lat_threaded_q{top:.0}")), p99(&format!("lat_event_q{top:.0}"))) {
+        (Some(base), Some(cand)) => {
+            let limit = base * 1.5 + 2e6;
+            println!(
+                "acceptance: p99 at {top:.0} qps: event {} vs threaded {} (limit {})",
+                fmt_ns(cand),
+                fmt_ns(base),
+                fmt_ns(limit)
+            );
+            if enforce && cand > limit {
+                eprintln!("FAIL: event front end p99 blew out at equal offered load");
+                failed = true;
+            }
+        }
+        _ => {
+            eprintln!("FAIL: tail-gate results missing — bench result names drifted?");
+            failed = true;
+        }
+    }
+
+    // Batch-1 gate: a lone closed-loop request must not pay the full
+    // batching window — allow the deadline itself plus 50% slack.
+    let p50 = |name: &str| results.iter().find(|r| r.name == name).map(|r| r.summary.p50);
+    match (p50("ping_threaded"), p50("ping_event")) {
+        (Some(base), Some(cand)) => {
+            let limit = base * 1.5 + BATCH_DEADLINE.as_nanos() as f64;
+            println!(
+                "acceptance: batch-1 p50: event {} vs threaded {} (limit {})",
+                fmt_ns(cand),
+                fmt_ns(base),
+                fmt_ns(limit)
+            );
+            if enforce && cand > limit {
+                eprintln!("FAIL: batch-1 latency pays more than the batching deadline");
+                failed = true;
+            }
+        }
+        _ => {
+            eprintln!("FAIL: ping results missing — bench result names drifted?");
+            failed = true;
+        }
+    }
+
+    banner("overload: explicit counted rejects, zero hangs");
+    failed |= overload_check(
+        if smoke { 16 } else { 32 },
+        if smoke {
+            Duration::from_millis(8)
+        } else {
+            Duration::from_millis(50)
+        },
+    );
+
+    maybe_write_json("serve_load", &results);
+    if failed {
+        std::process::exit(1);
+    }
+    println!("serve_load: all acceptance gates passed");
+}

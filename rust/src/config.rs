@@ -7,7 +7,9 @@
 //!   "d": 64, "k": 128,
 //!   "shards": 4, "shard_size": 16384,
 //!   "recall_target": 0.95,
-//!   "batch_max": 8, "batch_delay_us": 2000,
+//!   "batch_max": 8, "batch_deadline_us": 2000,
+//!   "frontend": "event", "io_threads": 2,
+//!   "idle_timeout_ms": 60000, "queue_max": 1024,
 //!   "backend": "native",
 //!   "artifact": "mips_fused_q8_d64_n16384_k128",
 //!   "artifact_dir": "artifacts",
@@ -20,7 +22,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::BatcherConfig;
+use crate::coordinator::{BatchPolicy, BatcherConfig, Frontend, NetConfig};
 use crate::params::{ParamCache, RecallEval};
 use crate::plan::{
     plan_fixed, plan_fixed_budget, plan_serve_cached, PlanRequest, PlanSource, ServePlan,
@@ -93,6 +95,11 @@ pub struct LauncherConfig {
     /// together with `buckets`.
     pub local_k: usize,
     pub batcher: BatcherConfig,
+    /// Net front-end tuning (`"frontend"`, `"io_threads"`,
+    /// `"idle_timeout_ms"`, `"queue_max"`). Only consulted when `listen`
+    /// is set; see [`crate::coordinator::NetConfig`] for the semantics of
+    /// each knob.
+    pub net: NetConfig,
     pub backend: BackendKind,
     /// Stage-1 worker threads per shard for the `native-parallel` backend
     /// (0 = one per available core).
@@ -156,6 +163,7 @@ impl Default for LauncherConfig {
             buckets: 0,
             local_k: 0,
             batcher: BatcherConfig::default(),
+            net: NetConfig::default(),
             backend: BackendKind::Native,
             threads: 0,
             fused: true,
@@ -216,11 +224,39 @@ impl LauncherConfig {
         c.buckets = usize_field("buckets", c.buckets)?;
         c.local_k = usize_field("local_k", c.local_k)?;
         c.batcher.max_batch = usize_field("batch_max", c.batcher.max_batch)?;
-        let delay_us = usize_field(
-            "batch_delay_us",
-            c.batcher.max_delay.as_micros() as usize,
-        )?;
-        c.batcher.max_delay = Duration::from_micros(delay_us as u64);
+        // `batch_deadline_us` selects the adaptive policy (dispatch the
+        // moment the queue drains; the deadline only caps formation time),
+        // the legacy `batch_delay_us` the fixed window. They set the same
+        // timer, so both at once is ambiguous and rejected.
+        anyhow::ensure!(
+            !(j.get("batch_delay_us").is_some() && j.get("batch_deadline_us").is_some()),
+            "set either `batch_deadline_us` (adaptive batching) or the legacy \
+             `batch_delay_us` (fixed window), not both"
+        );
+        if j.get("batch_delay_us").is_some() {
+            let delay_us = usize_field("batch_delay_us", 0)?;
+            c.batcher.max_delay = Duration::from_micros(delay_us as u64);
+            c.batcher.policy = BatchPolicy::Windowed;
+        }
+        if j.get("batch_deadline_us").is_some() {
+            let delay_us = usize_field("batch_deadline_us", 0)?;
+            c.batcher.max_delay = Duration::from_micros(delay_us as u64);
+            c.batcher.policy = BatchPolicy::Adaptive;
+        }
+        c.net.io_threads = usize_field("io_threads", c.net.io_threads)?;
+        if let Some(v) = j.get("idle_timeout_ms") {
+            let ms = v.as_usize().context(
+                "idle_timeout_ms must be a non-negative integer (0 = never reap)",
+            )?;
+            c.net.idle_timeout = Duration::from_millis(ms as u64);
+        }
+        c.net.queue_max = usize_field("queue_max", c.net.queue_max)?;
+        if let Some(v) = j.get("frontend") {
+            let s = v.as_str().context("frontend must be a string")?;
+            c.net.frontend = Frontend::parse(s).with_context(|| {
+                format!("unknown frontend {s:?} (want \"event\" or \"threaded\")")
+            })?;
+        }
         c.threads = usize_field("threads", c.threads)?;
         if let Some(v) = j.get("fused") {
             c.fused = v.as_bool().context("fused must be a boolean")?;
@@ -342,6 +378,7 @@ impl LauncherConfig {
             );
         }
         anyhow::ensure!(self.batcher.max_batch >= 1, "batch_max must be >= 1");
+        anyhow::ensure!(self.net.io_threads >= 1, "io_threads must be >= 1");
         if let Some(sc) = &self.store {
             anyhow::ensure!(!sc.path.is_empty(), "store.path must not be empty");
         }
@@ -476,9 +513,19 @@ impl LauncherConfig {
             ("local_k", Json::num(self.local_k as f64)),
             ("batch_max", Json::num(self.batcher.max_batch as f64)),
             (
-                "batch_delay_us",
+                match self.batcher.policy {
+                    BatchPolicy::Adaptive => "batch_deadline_us",
+                    BatchPolicy::Windowed => "batch_delay_us",
+                },
                 Json::num(self.batcher.max_delay.as_micros() as f64),
             ),
+            ("frontend", Json::str(self.net.frontend.as_str())),
+            ("io_threads", Json::num(self.net.io_threads as f64)),
+            (
+                "idle_timeout_ms",
+                Json::num(self.net.idle_timeout.as_millis() as f64),
+            ),
+            ("queue_max", Json::num(self.net.queue_max as f64)),
             (
                 "backend",
                 Json::str(match self.backend {
@@ -545,7 +592,58 @@ mod tests {
         assert_eq!(c.k, 16);
         assert_eq!(c.backend, BackendKind::Pjrt);
         assert_eq!(c.batcher.max_delay, Duration::from_micros(500));
+        // The legacy knob keeps its legacy (windowed) semantics.
+        assert_eq!(c.batcher.policy, BatchPolicy::Windowed);
         assert_eq!(c.artifact.as_deref(), Some("mips_fused_x"));
+    }
+
+    #[test]
+    fn batch_deadline_selects_adaptive_policy() {
+        let a = LauncherConfig::from_json(r#"{"batch_deadline_us": 700}"#).unwrap();
+        assert_eq!(a.batcher.policy, BatchPolicy::Adaptive);
+        assert_eq!(a.batcher.max_delay, Duration::from_micros(700));
+        let w = LauncherConfig::from_json(r#"{"batch_delay_us": 500}"#).unwrap();
+        assert_eq!(w.batcher.policy, BatchPolicy::Windowed);
+        assert_eq!(w.batcher.max_delay, Duration::from_micros(500));
+        // Default is adaptive: batch-1 traffic must not pay a timer window.
+        assert_eq!(
+            LauncherConfig::from_json("{}").unwrap().batcher.policy,
+            BatchPolicy::Adaptive
+        );
+        // The two knobs set the same timer: both at once is ambiguous.
+        assert!(LauncherConfig::from_json(
+            r#"{"batch_delay_us": 500, "batch_deadline_us": 500}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_net_front_end_knobs() {
+        let d = LauncherConfig::from_json("{}").unwrap();
+        assert_eq!(d.net.frontend, Frontend::Event);
+        assert_eq!(d.net.io_threads, 2);
+        assert_eq!(d.net.idle_timeout, Duration::from_millis(60_000));
+        assert_eq!(d.net.queue_max, 1024);
+        let c = LauncherConfig::from_json(
+            r#"{"frontend": "threaded", "io_threads": 4, "idle_timeout_ms": 0,
+                "queue_max": 64}"#,
+        )
+        .unwrap();
+        assert_eq!(c.net.frontend, Frontend::Threaded);
+        assert_eq!(c.net.io_threads, 4);
+        assert_eq!(c.net.idle_timeout, Duration::ZERO);
+        assert_eq!(c.net.queue_max, 64);
+        // Unknown front ends and degenerate pools are loud config errors.
+        assert!(LauncherConfig::from_json(r#"{"frontend": "epoll"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"frontend": 1}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"io_threads": 0}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"queue_max": -1}"#).is_err());
+        // Round-trips through to_json.
+        let c2 = LauncherConfig::from_json(&c.to_json().to_string()).unwrap();
+        assert_eq!(c2.net.frontend, Frontend::Threaded);
+        assert_eq!(c2.net.io_threads, 4);
+        assert_eq!(c2.net.idle_timeout, Duration::ZERO);
+        assert_eq!(c2.net.queue_max, 64);
     }
 
     #[test]
@@ -873,6 +971,18 @@ mod tests {
         assert_eq!(c2.d, c.d);
         assert_eq!(c2.backend, c.backend);
         assert_eq!(c2.batcher.max_delay, c.batcher.max_delay);
+        // The default (adaptive) policy is emitted as `batch_deadline_us`
+        // and survives the round trip; a windowed config round-trips
+        // through the legacy `batch_delay_us` key instead.
+        assert_eq!(c2.batcher.policy, BatchPolicy::Adaptive);
+        let mut w = LauncherConfig::default();
+        w.batcher.policy = BatchPolicy::Windowed;
+        let wt = w.to_json().to_string();
+        assert!(wt.contains("batch_delay_us") && !wt.contains("batch_deadline_us"));
+        assert_eq!(
+            LauncherConfig::from_json(&wt).unwrap().batcher.policy,
+            BatchPolicy::Windowed
+        );
         assert_eq!(c2.kernel, c.kernel);
         assert_eq!(c2.dtype, c.dtype);
         // Quantized dtypes survive the round trip (as_str emits the

@@ -1,9 +1,32 @@
 //! Dynamic batching: collect requests into batches bounded by size and a
 //! formation deadline (the standard serving trade-off: larger batches
 //! amortize kernel cost; the deadline bounds queueing latency).
+//!
+//! Two formation policies:
+//!
+//! - [`BatchPolicy::Windowed`] — the classic window: after the first
+//!   request arrives, wait up to `max_delay` for the batch to fill. Batch-1
+//!   traffic pays the full window.
+//! - [`BatchPolicy::Adaptive`] — continuous batching: dispatch as soon as
+//!   the queue is drained. The consumer of this batcher (the router) is
+//!   serial, so requests arriving *while* a batch executes accumulate in
+//!   the channel and form the next batch naturally — under load batches
+//!   grow toward `max_batch` without any request ever idling in a timer
+//!   window, and an isolated request (batch 1) is dispatched immediately.
+//!   `max_delay` remains a hard bound on formation time for the case where
+//!   arrivals trickle in exactly as fast as the drain loop consumes them.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
+
+/// When a forming batch is closed and handed to the consumer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Wait up to `max_delay` after the first request for the batch to fill.
+    Windowed,
+    /// Dispatch the moment the queue is empty (size and deadline still cap).
+    Adaptive,
+}
 
 /// Batch formation policy.
 #[derive(Debug, Clone, Copy)]
@@ -12,6 +35,8 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Maximum time to wait for the batch to fill after the first request.
     pub max_delay: Duration,
+    /// How the formation window closes (see [`BatchPolicy`]).
+    pub policy: BatchPolicy,
 }
 
 impl Default for BatcherConfig {
@@ -19,6 +44,7 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_batch: 8,
             max_delay: Duration::from_millis(2),
+            policy: BatchPolicy::Adaptive,
         }
     }
 }
@@ -36,22 +62,39 @@ impl<T> DynamicBatcher<T> {
     }
 
     /// Block for the next batch. Returns `None` when the channel is closed
-    /// and drained. A batch is emitted when it reaches `max_batch` or when
-    /// `max_delay` has elapsed since its first element arrived.
+    /// and drained. A batch is emitted when it reaches `max_batch`, when
+    /// `max_delay` has elapsed since its first element arrived, or — under
+    /// [`BatchPolicy::Adaptive`] — as soon as the channel is empty.
     pub fn next_batch(&self) -> Option<Vec<T>> {
         // Block indefinitely for the first element.
         let first = self.rx.recv().ok()?;
         let mut batch = vec![first];
-        let deadline = Instant::now() + self.config.max_delay;
-        while batch.len() < self.config.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+        match self.config.policy {
+            BatchPolicy::Adaptive => {
+                let deadline = Instant::now() + self.config.max_delay;
+                while batch.len() < self.config.max_batch {
+                    match self.rx.try_recv() {
+                        Ok(item) => batch.push(item),
+                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                    }
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                }
             }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(item) => batch.push(item),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            BatchPolicy::Windowed => {
+                let deadline = Instant::now() + self.config.max_delay;
+                while batch.len() < self.config.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match self.rx.recv_timeout(deadline - now) {
+                        Ok(item) => batch.push(item),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
             }
         }
         Some(batch)
@@ -75,6 +118,7 @@ mod tests {
             BatcherConfig {
                 max_batch: 4,
                 max_delay: Duration::from_secs(10),
+                policy: BatchPolicy::Windowed,
             },
         );
         assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
@@ -90,6 +134,7 @@ mod tests {
             BatcherConfig {
                 max_batch: 64,
                 max_delay: Duration::from_millis(5),
+                policy: BatchPolicy::Windowed,
             },
         );
         let t0 = Instant::now();
@@ -117,6 +162,7 @@ mod tests {
             BatcherConfig {
                 max_batch: 10,
                 max_delay: Duration::from_millis(1),
+                policy: BatchPolicy::Windowed,
             },
         );
         assert_eq!(b.next_batch().unwrap(), vec![7, 8]);
@@ -141,6 +187,7 @@ mod tests {
             BatcherConfig {
                 max_batch: 8,
                 max_delay: Duration::from_millis(1),
+                policy: BatchPolicy::Windowed,
             },
         );
         let mut seen = Vec::new();
@@ -155,5 +202,64 @@ mod tests {
         let mut want: Vec<i32> = (0..4).flat_map(|t| (0..25).map(move |i| t * 100 + i)).collect();
         want.sort_unstable();
         assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn adaptive_dispatches_batch_1_immediately() {
+        // The whole point of the adaptive policy: an isolated request must
+        // not pay the formation window. With a 10s deadline, finishing in
+        // well under a second proves we never slept on the timer.
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 64,
+                max_delay: Duration::from_secs(10),
+                policy: BatchPolicy::Adaptive,
+            },
+        );
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![42]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn adaptive_coalesces_a_backed_up_queue() {
+        // Requests that accumulated while the consumer was busy (here:
+        // pre-filled before the first next_batch call) still coalesce into
+        // full batches — adaptive trades the window away, not batching.
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 4,
+                max_delay: Duration::from_secs(10),
+                policy: BatchPolicy::Adaptive,
+            },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn adaptive_drains_after_sender_drop() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = DynamicBatcher::new(
+            rx,
+            BatcherConfig {
+                max_batch: 10,
+                max_delay: Duration::from_millis(1),
+                policy: BatchPolicy::Adaptive,
+            },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![7]);
+        assert!(b.next_batch().is_none());
     }
 }

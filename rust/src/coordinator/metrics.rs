@@ -22,6 +22,11 @@ pub struct ServiceMetrics {
 struct Inner {
     latency: LatencyHistogram,
     queue_latency: LatencyHistogram,
+    /// Time actually spent in scatter/score/merge — total minus queueing.
+    /// Separating the two is what makes an overload diagnosable from
+    /// `stats` alone: deep queue + flat service time means admission, not
+    /// the kernels, is the bottleneck.
+    service_latency: LatencyHistogram,
     batch_sizes: Welford,
     requests: u64,
     batches: u64,
@@ -32,6 +37,9 @@ struct Inner {
     degraded_requests: u64,
     /// Requests that got an error reply because every shard failed.
     failed_requests: u64,
+    /// Requests rejected at admission (`{"error": "overloaded"}`) because
+    /// the pending queue was full. Counted, never a silent hang.
+    overloaded: u64,
     /// The `(B, K′)` plan this service was started with, if any.
     plan: Option<ServePlan>,
     /// The SIMD dispatch kernel the native shards resolved at startup
@@ -74,12 +82,14 @@ impl ServiceMetrics {
             inner: Mutex::new(Inner {
                 latency: LatencyHistogram::new(),
                 queue_latency: LatencyHistogram::new(),
+                service_latency: LatencyHistogram::new(),
                 batch_sizes: Welford::new(),
                 requests: 0,
                 batches: 0,
                 shard_failures: 0,
                 degraded_requests: 0,
                 failed_requests: 0,
+                overloaded: 0,
                 plan: None,
                 kernel: None,
                 stage1: None,
@@ -146,10 +156,21 @@ impl ServiceMetrics {
         let mut m = self.inner.lock().unwrap();
         m.latency.record(total);
         m.queue_latency.record(queued);
+        m.service_latency.record(total.saturating_sub(queued));
         m.requests += 1;
         if degraded {
             m.degraded_requests += 1;
         }
+    }
+
+    /// A request was rejected at admission because the pending queue was
+    /// full (the client got an explicit `overloaded` error reply).
+    pub fn record_overloaded(&self) {
+        self.inner.lock().unwrap().overloaded += 1;
+    }
+
+    pub fn overloaded_rejects(&self) -> u64 {
+        self.inner.lock().unwrap().overloaded
     }
 
     /// One shard failed to answer one batch (submit refused or scoring
@@ -242,6 +263,16 @@ impl ServiceMetrics {
         self.inner.lock().unwrap().latency.percentile_ns(q)
     }
 
+    /// Queue-wait (enqueue → dispatch) percentile in nanoseconds.
+    pub fn queue_percentile_ns(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().queue_latency.percentile_ns(q)
+    }
+
+    /// Service-time (dispatch → reply) percentile in nanoseconds.
+    pub fn service_percentile_ns(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().service_latency.percentile_ns(q)
+    }
+
     pub fn mean_latency_ns(&self) -> f64 {
         self.inner.lock().unwrap().latency.mean_ns()
     }
@@ -250,18 +281,24 @@ impl ServiceMetrics {
     pub fn summary(&self) -> String {
         let m = self.inner.lock().unwrap();
         let mut s = format!(
-            "requests={} batches={} mean_batch={:.2} lat(mean={} p50={} p99={}) \
-             queue(p50={}) shard_failures={} degraded={} failed={}",
+            "requests={} batches={} mean_batch={:.2} lat(mean={} p50={} p99={} p999={}) \
+             queue(p50={} p99={}) service(p50={} p99={}) \
+             shard_failures={} degraded={} failed={} overloaded={}",
             m.requests,
             m.batches,
             m.batch_sizes.mean(),
             fmt_ns(m.latency.mean_ns()),
             fmt_ns(m.latency.percentile_ns(0.5)),
             fmt_ns(m.latency.percentile_ns(0.99)),
+            fmt_ns(m.latency.percentile_ns(0.999)),
             fmt_ns(m.queue_latency.percentile_ns(0.5)),
+            fmt_ns(m.queue_latency.percentile_ns(0.99)),
+            fmt_ns(m.service_latency.percentile_ns(0.5)),
+            fmt_ns(m.service_latency.percentile_ns(0.99)),
             m.shard_failures,
             m.degraded_requests,
             m.failed_requests,
+            m.overloaded,
         );
         if let Some(k) = m.kernel {
             s.push_str(&format!(" kernel={k}"));
@@ -340,7 +377,46 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests=10"));
         assert!(s.contains("shard_failures=0"));
+        assert!(s.contains("p999="), "{s}");
         assert!(m.throughput_per_s() > 0.0);
+    }
+
+    #[test]
+    fn queue_and_service_histograms_split_the_total() {
+        let m = ServiceMetrics::new();
+        // 1ms total of which 0.9ms was queueing: the service-time
+        // histogram must see ~0.1ms, not the total.
+        for _ in 0..20 {
+            m.record_request(
+                Duration::from_micros(1000),
+                Duration::from_micros(900),
+                false,
+            );
+        }
+        let q50 = m.queue_percentile_ns(0.5);
+        let s50 = m.service_percentile_ns(0.5);
+        let t50 = m.latency_percentile_ns(0.5);
+        assert!(q50 > s50, "queue p50 {q50} should dominate service p50 {s50}");
+        // Log-bucketed resolution is ~±19%: check magnitudes, not equality.
+        assert!((700_000.0..=1_200_000.0).contains(&q50), "{q50}");
+        assert!((60_000.0..=160_000.0).contains(&s50), "{s50}");
+        assert!((700_000.0..=1_300_000.0).contains(&t50), "{t50}");
+        // p999 of a uniform stream equals its p50 bucket-wise.
+        assert!(m.latency_percentile_ns(0.999) >= t50);
+    }
+
+    #[test]
+    fn overloaded_rejects_are_counted_and_surface_in_summary() {
+        let m = ServiceMetrics::new();
+        assert_eq!(m.overloaded_rejects(), 0);
+        assert!(m.summary().contains("overloaded=0"), "{}", m.summary());
+        m.record_overloaded();
+        m.record_overloaded();
+        assert_eq!(m.overloaded_rejects(), 2);
+        // Overload rejects never pollute the served-request accounting.
+        assert_eq!(m.requests(), 0);
+        assert_eq!(m.failed_requests(), 0);
+        assert!(m.summary().contains("overloaded=2"), "{}", m.summary());
     }
 
     #[test]

@@ -30,6 +30,14 @@
 //! batch, the metrics count per-shard failures, and a batch no shard
 //! answered yields error replies rather than empty candidate sets.
 //!
+//! In front of the router sits the TCP front end ([`net`]): by default an
+//! event-driven readiness loop (fixed I/O-thread pool over nonblocking
+//! sockets, `poll(2)` via minimal FFI) with adaptive batching
+//! ([`BatchPolicy::Adaptive`]) and admission control — overload produces
+//! counted `{"error": "overloaded"}` rejects instead of unbounded queues.
+//! The wire contract lives in `docs/PROTOCOL.md`, the operator manual in
+//! `docs/OPERATIONS.md`.
+//!
 //! Shards can be replaced *live*: the epoch-based swap in
 //! [`service::MipsService::reload_shard`] builds a replacement backend in
 //! a fresh worker thread and installs it between batches (triggered over
@@ -48,11 +56,12 @@ pub use backend::{
     BackendFactory, EngineOptions, NativeBackend, ParallelNativeBackend, PjrtBackend,
     ShardBackend,
 };
-pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use batcher::{BatchPolicy, BatcherConfig, DynamicBatcher};
 pub use merge::{merge_shard_results, ShardTopK};
 pub use metrics::ServiceMetrics;
+pub use net::{Frontend, NetConfig, NetServer};
 pub use service::{
-    MipsService, Query, ReloadFn, ReloadSource, ReloadSpec, Response, ServiceConfig,
-    ShardReload,
+    MipsService, Query, ReloadFn, ReloadSource, ReloadSpec, ReplyFn, Response,
+    ServiceConfig, ShardReload,
 };
 pub use shard::{PendingShard, ShardHandle, ShardResult};

@@ -2,15 +2,25 @@
 //! clients can query the coordinator (the deployment story for the
 //! launcher's `serve` mode).
 //!
-//! Protocol (one JSON object per line):
+//! The wire contract is pinned — as a versioned, add-only document whose
+//! examples are replayed verbatim by the conformance suite
+//! (`tests/protocol_conformance.rs`) — in `docs/PROTOCOL.md`. The short
+//! form (one JSON object per line):
 //!
 //! ```text
 //! -> {"id": 1, "vector": [0.1, -0.2, ...]}
 //! <- {"id": 1, "results": [[17, 0.93], [4, 0.88], ...],
 //!     "degraded": false, "latency_us": 812}
+//! <- {"id": 1, "error": "overloaded"}       (admission-control reject:
+//!         the pending queue is full; counted, never a silent hang)
 //! -> {"cmd": "stats"}
 //! <- {"stats": "requests=... p50=...", "shard_failures": 0,
 //!     "degraded_requests": 0, "failed_requests": 0,
+//!     "overloaded_rejects": 0,
+//!     "latency": {"total": {"p50_us": ..., "p99_us": ..., "p999_us": ...},
+//!                 "queue": {...}, "service": {...}},   (null until data)
+//!     "net": {"frontend": "event", "io_threads": 2, "queue_max": 1024,
+//!             "idle_timeout_ms": 60000, "connections": 1},
 //!     "reload": {"epoch": 0, "reloads": 0, "rollbacks": 0,
 //!                "shard_epochs": [1, 1, ...]},     (live-swap state)
 //!     "kernel": "avx2",                     (resolved SIMD dispatch, if native)
@@ -33,71 +43,220 @@
 //! is an `{"id": ..., "error": ...}` reply (the id is echoed so pipelining
 //! clients can correlate; only unparseable requests get a bare
 //! `{"error"}`).
+//!
+//! # Architecture
+//!
+//! Two interchangeable front ends behind the same wire contract
+//! ([`Frontend`], config knob `"frontend"`):
+//!
+//! - **Event-driven** (the default): a small fixed pool of I/O threads
+//!   ([`NetConfig::io_threads`]) drives nonblocking sockets through a
+//!   std-only readiness loop — raw `poll(2)` declared directly (no libc
+//!   crate; the same minimal-FFI pattern as [`crate::store::mmap`]) on
+//!   64-bit unix, a short-tick portable fallback elsewhere. Each
+//!   connection owns read/write buffers with JSON-line framing; the loop
+//!   owns the whole connection lifecycle — accept handoff, per-connection
+//!   idle timeout ([`NetConfig::idle_timeout`]), half-close draining, and
+//!   reaping — so a burst of connects followed by silence cannot leak
+//!   threads or buffers. Queries are submitted asynchronously
+//!   ([`MipsService::submit_with`]); replies come back over a completion
+//!   channel and a pipe-based waker, so one stalled client never blocks
+//!   the others on its thread.
+//! - **Thread-per-connection** (`"frontend": "threaded"`): the classic
+//!   blocking model, one thread per accepted client. Kept as the measured
+//!   baseline for `benches/serve_load.rs` and as a fallback.
+//!
+//! Both front ends share admission control: at most
+//! [`NetConfig::queue_max`] queries in flight; overflow is an explicit,
+//! counted `{"error": "overloaded"}` reject rather than an unbounded
+//! queue.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 
-use super::service::{MipsService, ReloadSource, ReloadSpec};
+use super::service::{MipsService, Query, ReloadSource, ReloadSpec, ReplyFn, Response};
+
+/// Longest accepted request line (bytes, newline included). A client that
+/// exceeds it gets an error reply and its connection is closed — a frame
+/// this size is a bug or an attack, not a query.
+const MAX_LINE: usize = 1 << 20;
+
+/// How long the event loop sleeps in `poll(2)` when nothing is ready:
+/// bounds shutdown-flag and idle-timeout latency.
+const POLL_TICK_MS: i32 = 25;
+
+/// Which connection-handling model the server runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Frontend {
+    /// Fixed I/O-thread pool over nonblocking sockets (the default).
+    Event,
+    /// One blocking thread per accepted connection (the baseline).
+    Threaded,
+}
+
+impl Frontend {
+    pub fn parse(s: &str) -> Option<Frontend> {
+        match s {
+            "event" => Some(Frontend::Event),
+            "threaded" => Some(Frontend::Threaded),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Frontend::Event => "event",
+            Frontend::Threaded => "threaded",
+        }
+    }
+}
+
+/// Net front-end tuning (the serve config's `"frontend"`, `"io_threads"`,
+/// `"idle_timeout_ms"`, `"queue_max"` knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Connection-handling model (`"frontend": "event" | "threaded"`).
+    pub frontend: Frontend,
+    /// Event-loop I/O threads (`"io_threads"`, >= 1). Connections are
+    /// assigned round-robin at accept. Ignored by the threaded front end.
+    pub io_threads: usize,
+    /// Close a connection this long after its last activity
+    /// (`"idle_timeout_ms"`; zero = never reap). Activity is bytes read
+    /// or a reply delivered; connections with replies still in flight are
+    /// never reaped.
+    pub idle_timeout: Duration,
+    /// Admission control: max queries in flight before new ones are
+    /// rejected with `{"error": "overloaded"}` (`"queue_max"`; zero =
+    /// unbounded). Rejects are counted in [`overloaded_rejects`]
+    /// (`ServiceMetrics::overloaded_rejects`).
+    ///
+    /// [`overloaded_rejects`]: super::metrics::ServiceMetrics::overloaded_rejects
+    pub queue_max: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            frontend: Frontend::Event,
+            io_threads: 2,
+            idle_timeout: Duration::from_millis(60_000),
+            queue_max: 1024,
+        }
+    }
+}
+
+/// State shared by the accept loop, every I/O thread, and (through reply
+/// callbacks) the service router.
+struct NetShared {
+    service: Arc<MipsService>,
+    stop: Arc<AtomicBool>,
+    /// Queries admitted but not yet replied (admission-control gauge).
+    inflight: AtomicUsize,
+    /// Open connections (stats gauge).
+    connections: AtomicUsize,
+    config: NetConfig,
+}
+
+/// Claim an in-flight slot; `false` means the queue is full and the query
+/// must be rejected.
+fn try_admit(shared: &NetShared) -> bool {
+    let max = shared.config.queue_max;
+    if max == 0 {
+        shared.inflight.fetch_add(1, Ordering::Relaxed);
+        return true;
+    }
+    loop {
+        let cur = shared.inflight.load(Ordering::Relaxed);
+        if cur >= max {
+            return false;
+        }
+        if shared
+            .inflight
+            .compare_exchange(cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            return true;
+        }
+    }
+}
 
 /// A running TCP front end.
 pub struct NetServer {
-    pub addr: std::net::SocketAddr,
+    pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    join: Option<std::thread::JoinHandle<()>>,
+    joins: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl NetServer {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the given service.
-    /// Connections are handled on per-client threads.
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the given service with
+    /// the default [`NetConfig`] (event-driven front end).
     pub fn start(addr: &str, service: Arc<MipsService>) -> anyhow::Result<NetServer> {
+        Self::start_with(addr, service, NetConfig::default())
+    }
+
+    /// Bind `addr` and serve with explicit front-end tuning.
+    pub fn start_with(
+        addr: &str,
+        service: Arc<MipsService>,
+        config: NetConfig,
+    ) -> anyhow::Result<NetServer> {
+        anyhow::ensure!(config.io_threads >= 1, "io_threads must be >= 1");
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        // Accept loop with a poll timeout so shutdown is prompt.
+        // Nonblocking accept with a sleep/poll tick so shutdown is prompt.
         listener.set_nonblocking(true)?;
-        let join = std::thread::Builder::new()
-            .name("fastk-net-accept".into())
-            .spawn(move || {
-                let mut clients: Vec<std::thread::JoinHandle<()>> = Vec::new();
-                while !stop2.load(Ordering::Relaxed) {
-                    // Reap clients that already finished: a long-lived
-                    // server must not keep one JoinHandle (and its thread
-                    // bookkeeping) per connection ever accepted.
-                    let mut i = 0;
-                    while i < clients.len() {
-                        if clients[i].is_finished() {
-                            let _ = clients.swap_remove(i).join();
-                        } else {
-                            i += 1;
-                        }
-                    }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let svc = service.clone();
-                            let flag = stop2.clone();
-                            clients.push(std::thread::spawn(move || {
-                                let _ = handle_client(stream, svc, flag);
-                            }));
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(NetShared {
+            service,
+            stop: stop.clone(),
+            inflight: AtomicUsize::new(0),
+            connections: AtomicUsize::new(0),
+            config,
+        });
+        let mut joins = Vec::new();
+        match config.frontend {
+            Frontend::Threaded => {
+                let sh = shared;
+                joins.push(
+                    std::thread::Builder::new()
+                        .name("fastk-net-accept".into())
+                        .spawn(move || accept_threaded(listener, sh))?,
+                );
+            }
+            Frontend::Event => {
+                let mut conn_txs = Vec::new();
+                let mut wakers = Vec::new();
+                for i in 0..config.io_threads {
+                    let (conn_tx, conn_rx) = channel::<TcpStream>();
+                    let (comp_tx, comp_rx) = channel::<Completion>();
+                    let waker = Arc::new(Waker::new()?);
+                    conn_txs.push(conn_tx);
+                    wakers.push(waker.clone());
+                    let sh = shared.clone();
+                    joins.push(
+                        std::thread::Builder::new()
+                            .name(format!("fastk-net-io{i}"))
+                            .spawn(move || io_loop(sh, conn_rx, comp_rx, comp_tx, waker))?,
+                    );
                 }
-                for c in clients {
-                    let _ = c.join();
-                }
-            })?;
+                let sh = shared;
+                joins.push(
+                    std::thread::Builder::new()
+                        .name("fastk-net-accept".into())
+                        .spawn(move || accept_event(listener, sh, conn_txs, wakers))?,
+                );
+            }
+        }
         Ok(NetServer {
             addr: local,
             stop,
-            join: Some(join),
+            joins,
         })
     }
 
@@ -109,14 +268,14 @@ impl NetServer {
     /// `{"cmd": "shutdown"}`. This is how `fastk serve --listen` parks its
     /// main thread while traffic (and live reloads) flow over TCP.
     pub fn wait(mut self) {
-        if let Some(j) = self.join.take() {
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
 
     fn stop_inner(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(j) = self.join.take() {
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
@@ -128,138 +287,23 @@ impl Drop for NetServer {
     }
 }
 
-fn handle_client(
-    stream: TcpStream,
-    service: Arc<MipsService>,
-    stop: Arc<AtomicBool>,
-) -> anyhow::Result<()> {
-    stream.set_nodelay(true).ok();
-    // Poll with a read timeout so server shutdown can't deadlock on a
-    // client that keeps its connection open without sending.
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
-        // read_line may return WouldBlock mid-line; partial bytes stay in
-        // `line` and the next call appends the remainder, so only clear
-        // after a complete line is processed.
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // EOF
-            Ok(_) => {
-                if !line.ends_with('\n') {
-                    continue; // partial line, keep accumulating
-                }
-                if !line.trim().is_empty() {
-                    let reply = match handle_line(&line, &service, &stop) {
-                        Ok(Some(j)) => j,
-                        Ok(None) => break, // shutdown command
-                        Err(e) => {
-                            Json::obj(vec![("error", Json::str(&format!("{e:#}")))])
-                        }
-                    };
-                    writer.write_all(reply.to_string().as_bytes())?;
-                    writer.write_all(b"\n")?;
-                }
-                line.clear();
-            }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue;
-            }
-            Err(_) => break,
-        }
-    }
-    Ok(())
+// ---------------------------------------------------------------------------
+// Wire protocol (shared by both front ends — see docs/PROTOCOL.md)
+// ---------------------------------------------------------------------------
+
+/// A parsed request line.
+enum Request {
+    Query { id: u64, vector: Vec<f32> },
+    Stats,
+    Reload(ReloadSpec),
+    Shutdown,
 }
 
-fn handle_line(
-    line: &str,
-    service: &MipsService,
-    stop: &AtomicBool,
-) -> anyhow::Result<Option<Json>> {
+fn parse_request(line: &str) -> anyhow::Result<Request> {
     let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
     if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
-            "stats" => {
-                let m = &service.metrics;
-                let mut fields = vec![
-                    ("stats", Json::str(&m.summary())),
-                    ("shard_failures", Json::num(m.shard_failures() as f64)),
-                    ("degraded_requests", Json::num(m.degraded_requests() as f64)),
-                    ("failed_requests", Json::num(m.failed_requests() as f64)),
-                    (
-                        "reload",
-                        Json::obj(vec![
-                            ("epoch", Json::num(m.epoch() as f64)),
-                            ("reloads", Json::num(m.reloads() as f64)),
-                            ("rollbacks", Json::num(m.rollbacks() as f64)),
-                            (
-                                "shard_epochs",
-                                Json::Arr(
-                                    m.shard_epochs()
-                                        .iter()
-                                        .map(|&e| Json::num(e as f64))
-                                        .collect(),
-                                ),
-                            ),
-                        ]),
-                    ),
-                ];
-                if let Some(k) = m.kernel() {
-                    fields.push(("kernel", Json::str(k)));
-                }
-                if let Some(a) = m.stage1() {
-                    fields.push(("stage1", Json::str(a)));
-                }
-                if let Some(st) = m.store() {
-                    fields.push((
-                        "store",
-                        Json::obj(vec![
-                            ("path", Json::str(&st.path)),
-                            ("version", Json::num(st.version as f64)),
-                            ("dtype", Json::str(st.dtype.as_str())),
-                            ("shards", Json::num(st.shards as f64)),
-                            ("shard_size", Json::num(st.shard_size as f64)),
-                            ("d", Json::num(st.d as f64)),
-                            ("mapped", Json::Bool(st.mapped)),
-                            ("open_us", Json::num(st.open_us as f64)),
-                            ("built", Json::Bool(st.built)),
-                        ]),
-                    ));
-                }
-                if let Some(p) = m.plan() {
-                    fields.push((
-                        "plan",
-                        Json::obj(vec![
-                            ("shards", Json::num(p.shards as f64)),
-                            ("shard_size", Json::num(p.shard_size as f64)),
-                            ("k", Json::num(p.k as f64)),
-                            ("buckets", Json::num(p.buckets as f64)),
-                            ("local_k", Json::num(p.local_k as f64)),
-                            (
-                                "elements_per_shard",
-                                Json::num(p.num_elements() as f64),
-                            ),
-                            // NaN (budget plans: recall measured, never
-                            // predicted) is not representable in JSON —
-                            // emit null.
-                            ("predicted_recall", Json::num_or_null(p.predicted_recall)),
-                            ("per_shard_recall", Json::num_or_null(p.per_shard_recall)),
-                            ("source", Json::str(p.source.as_str())),
-                            ("dtype", Json::str(p.dtype.as_str())),
-                            ("quant_sigma", Json::num(p.quant_sigma)),
-                            ("inflation", Json::num(p.inflation())),
-                        ]),
-                    ));
-                }
-                Ok(Some(Json::obj(fields)))
-            }
+            "stats" => Ok(Request::Stats),
             "reload" => {
                 let shard = j
                     .get("shard")
@@ -283,27 +327,9 @@ fn handle_line(
                         "reload needs a `store` path or a `seed` (+ optional `shard_size`)"
                     )
                 };
-                // A failed reload is a *rolled-back* outcome, not a
-                // protocol error: reply structured so operators see the
-                // old epoch is still serving.
-                match service.reload(ReloadSpec { shard, source }) {
-                    Ok(epoch) => Ok(Some(Json::obj(vec![
-                        ("reloaded", Json::Bool(true)),
-                        ("shard", Json::num(shard as f64)),
-                        ("epoch", Json::num(epoch as f64)),
-                    ]))),
-                    Err(e) => Ok(Some(Json::obj(vec![
-                        ("reloaded", Json::Bool(false)),
-                        ("shard", Json::num(shard as f64)),
-                        ("rolled_back", Json::Bool(true)),
-                        ("error", Json::str(&format!("{e:#}"))),
-                    ]))),
-                }
+                Ok(Request::Reload(ReloadSpec { shard, source }))
             }
-            "shutdown" => {
-                stop.store(true, Ordering::Relaxed);
-                Ok(None)
-            }
+            "shutdown" => Ok(Request::Shutdown),
             other => anyhow::bail!("unknown cmd `{other}`"),
         };
     }
@@ -319,43 +345,788 @@ fn handle_line(
         .map(|x| x.as_f64().map(|f| f as f32))
         .collect::<Option<_>>()
         .ok_or_else(|| anyhow::anyhow!("vector must be numeric"))?;
+    Ok(Request::Query { id, vector })
+}
 
-    let t0 = std::time::Instant::now();
-    let resp = match service.query(id, vector) {
-        Ok(r) => r,
-        // A well-formed query that failed (e.g. every shard errored):
-        // reply with the id so pipelining clients can correlate the error
-        // with the request. Bare {"error"} replies are reserved for
-        // requests whose id could not be parsed at all.
-        Err(e) => {
-            return Ok(Some(Json::obj(vec![
-                ("id", Json::num(id as f64)),
-                ("error", Json::str(&format!("{e:#}"))),
-            ])))
-        }
-    };
+/// Bare error reply — reserved for requests whose id could not be parsed.
+fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+/// Error reply for a well-formed query (the id is echoed so pipelining
+/// clients can correlate).
+fn query_error_json(id: u64, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+fn query_ok_json(resp: &Response, t0: Instant) -> Json {
     let results = Json::Arr(
         resp.results
             .iter()
             .map(|&(i, v)| Json::Arr(vec![Json::num(i as f64), Json::num(v as f64)]))
             .collect(),
     );
-    Ok(Some(Json::obj(vec![
+    Json::obj(vec![
         ("id", Json::num(resp.id as f64)),
         ("results", results),
         ("degraded", Json::Bool(resp.degraded)),
+        ("latency_us", Json::num(t0.elapsed().as_micros() as f64)),
+    ])
+}
+
+fn query_reply_json(id: u64, res: anyhow::Result<Response>, t0: Instant) -> Json {
+    match res {
+        Ok(resp) => query_ok_json(&resp, t0),
+        // A well-formed query that failed (e.g. every shard errored).
+        Err(e) => query_error_json(id, &format!("{e:#}")),
+    }
+}
+
+/// `{"p50_us", "p99_us", "p999_us"}` from a percentile accessor. Empty
+/// histograms report NaN, which is not representable in JSON: null.
+fn hist_json(pct: impl Fn(f64) -> f64) -> Json {
+    Json::obj(vec![
+        ("p50_us", Json::num_or_null(pct(0.50) / 1_000.0)),
+        ("p99_us", Json::num_or_null(pct(0.99) / 1_000.0)),
+        ("p999_us", Json::num_or_null(pct(0.999) / 1_000.0)),
+    ])
+}
+
+fn stats_json(shared: &NetShared) -> Json {
+    let m = &shared.service.metrics;
+    let cfg = &shared.config;
+    let mut fields = vec![
+        ("stats", Json::str(&m.summary())),
+        ("shard_failures", Json::num(m.shard_failures() as f64)),
+        ("degraded_requests", Json::num(m.degraded_requests() as f64)),
+        ("failed_requests", Json::num(m.failed_requests() as f64)),
         (
-            "latency_us",
-            Json::num(t0.elapsed().as_micros() as f64),
+            "overloaded_rejects",
+            Json::num(m.overloaded_rejects() as f64),
         ),
-    ])))
+        (
+            "latency",
+            Json::obj(vec![
+                ("total", hist_json(|q| m.latency_percentile_ns(q))),
+                ("queue", hist_json(|q| m.queue_percentile_ns(q))),
+                ("service", hist_json(|q| m.service_percentile_ns(q))),
+            ]),
+        ),
+        (
+            "net",
+            Json::obj(vec![
+                ("frontend", Json::str(cfg.frontend.as_str())),
+                ("io_threads", Json::num(cfg.io_threads as f64)),
+                (
+                    "idle_timeout_ms",
+                    Json::num(cfg.idle_timeout.as_millis() as f64),
+                ),
+                ("queue_max", Json::num(cfg.queue_max as f64)),
+                (
+                    "connections",
+                    Json::num(shared.connections.load(Ordering::Relaxed) as f64),
+                ),
+            ]),
+        ),
+        (
+            "reload",
+            Json::obj(vec![
+                ("epoch", Json::num(m.epoch() as f64)),
+                ("reloads", Json::num(m.reloads() as f64)),
+                ("rollbacks", Json::num(m.rollbacks() as f64)),
+                (
+                    "shard_epochs",
+                    Json::Arr(
+                        m.shard_epochs()
+                            .iter()
+                            .map(|&e| Json::num(e as f64))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+    ];
+    if let Some(k) = m.kernel() {
+        fields.push(("kernel", Json::str(k)));
+    }
+    if let Some(a) = m.stage1() {
+        fields.push(("stage1", Json::str(a)));
+    }
+    if let Some(st) = m.store() {
+        fields.push((
+            "store",
+            Json::obj(vec![
+                ("path", Json::str(&st.path)),
+                ("version", Json::num(st.version as f64)),
+                ("dtype", Json::str(st.dtype.as_str())),
+                ("shards", Json::num(st.shards as f64)),
+                ("shard_size", Json::num(st.shard_size as f64)),
+                ("d", Json::num(st.d as f64)),
+                ("mapped", Json::Bool(st.mapped)),
+                ("open_us", Json::num(st.open_us as f64)),
+                ("built", Json::Bool(st.built)),
+            ]),
+        ));
+    }
+    if let Some(p) = m.plan() {
+        fields.push((
+            "plan",
+            Json::obj(vec![
+                ("shards", Json::num(p.shards as f64)),
+                ("shard_size", Json::num(p.shard_size as f64)),
+                ("k", Json::num(p.k as f64)),
+                ("buckets", Json::num(p.buckets as f64)),
+                ("local_k", Json::num(p.local_k as f64)),
+                ("elements_per_shard", Json::num(p.num_elements() as f64)),
+                // NaN (budget plans: recall measured, never predicted) is
+                // not representable in JSON — emit null.
+                ("predicted_recall", Json::num_or_null(p.predicted_recall)),
+                ("per_shard_recall", Json::num_or_null(p.per_shard_recall)),
+                ("source", Json::str(p.source.as_str())),
+                ("dtype", Json::str(p.dtype.as_str())),
+                ("quant_sigma", Json::num(p.quant_sigma)),
+                ("inflation", Json::num(p.inflation())),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// A failed reload is a *rolled-back* outcome, not a protocol error:
+/// reply structured so operators see the old epoch is still serving.
+fn reload_json(service: &MipsService, spec: ReloadSpec) -> Json {
+    let shard = spec.shard;
+    match service.reload(spec) {
+        Ok(epoch) => Json::obj(vec![
+            ("reloaded", Json::Bool(true)),
+            ("shard", Json::num(shard as f64)),
+            ("epoch", Json::num(epoch as f64)),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("reloaded", Json::Bool(false)),
+            ("shard", Json::num(shard as f64)),
+            ("rolled_back", Json::Bool(true)),
+            ("error", Json::str(&format!("{e:#}"))),
+        ]),
+    }
+}
+
+fn oversize_msg() -> String {
+    format!("line exceeds {MAX_LINE} bytes")
+}
+
+// ---------------------------------------------------------------------------
+// Thread-per-connection front end (the baseline)
+// ---------------------------------------------------------------------------
+
+fn accept_threaded(listener: TcpListener, shared: Arc<NetShared>) {
+    let mut clients: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shared.stop.load(Ordering::Relaxed) {
+        // Reap clients that already finished: a long-lived server must not
+        // keep one JoinHandle (and its thread bookkeeping) per connection
+        // ever accepted.
+        let mut i = 0;
+        while i < clients.len() {
+            if clients[i].is_finished() {
+                let _ = clients.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let sh = shared.clone();
+                clients.push(std::thread::spawn(move || {
+                    sh.connections.fetch_add(1, Ordering::Relaxed);
+                    let _ = handle_client(stream, &sh);
+                    sh.connections.fetch_sub(1, Ordering::Relaxed);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    for c in clients {
+        let _ = c.join();
+    }
+}
+
+/// One blocking connection. Requests are answered synchronously; the
+/// 100ms read timeout doubles as the tick for the stop flag and the idle
+/// timeout (a silent client must not hold its thread forever).
+fn handle_client(stream: TcpStream, shared: &NetShared) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let idle = shared.config.idle_timeout;
+    let mut last_activity = Instant::now();
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // read_line may return WouldBlock mid-line; partial bytes stay in
+        // `line` and the next call appends the remainder, so only clear
+        // after a complete line is processed.
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                last_activity = Instant::now();
+                if line.len() > MAX_LINE {
+                    let reply = error_json(&oversize_msg());
+                    let _ = writer.write_all(reply.to_string().as_bytes());
+                    let _ = writer.write_all(b"\n");
+                    break;
+                }
+                if !line.ends_with('\n') {
+                    continue; // partial line, keep accumulating
+                }
+                if !line.trim().is_empty() {
+                    let reply = match handle_line_sync(&line, shared) {
+                        Some(j) => j,
+                        None => break, // shutdown command
+                    };
+                    writer.write_all(reply.to_string().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                }
+                line.clear();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if idle > Duration::ZERO && last_activity.elapsed() > idle {
+                    break; // idle reap: free the thread and its buffers
+                }
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+    Ok(())
+}
+
+/// Synchronous dispatch for the threaded front end. `None` = shutdown.
+fn handle_line_sync(line: &str, shared: &NetShared) -> Option<Json> {
+    match parse_request(line) {
+        Err(e) => Some(error_json(&format!("{e:#}"))),
+        Ok(Request::Stats) => Some(stats_json(shared)),
+        Ok(Request::Reload(spec)) => Some(reload_json(&shared.service, spec)),
+        Ok(Request::Shutdown) => {
+            shared.stop.store(true, Ordering::Relaxed);
+            None
+        }
+        Ok(Request::Query { id, vector }) => {
+            if !try_admit(shared) {
+                shared.service.metrics.record_overloaded();
+                return Some(query_error_json(id, "overloaded"));
+            }
+            let t0 = Instant::now();
+            let res = shared.service.query(id, vector);
+            shared.inflight.fetch_sub(1, Ordering::Relaxed);
+            Some(query_reply_json(id, res, t0))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event-driven front end
+// ---------------------------------------------------------------------------
+
+/// An async reply headed back to connection `slot` — but only if that slot
+/// still holds generation `gen` (the connection may have died and the slot
+/// been reused while the service worked; stale completions are dropped).
+struct Completion {
+    slot: usize,
+    gen: u64,
+    reply: Json,
+}
+
+/// Round-robin accepted connections across the I/O threads.
+fn accept_event(
+    listener: TcpListener,
+    shared: Arc<NetShared>,
+    conn_txs: Vec<Sender<TcpStream>>,
+    wakers: Vec<Arc<Waker>>,
+) {
+    let mut rr = 0;
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if conn_txs[rr].send(stream).is_ok() {
+                    wakers[rr].wake();
+                }
+                rr = (rr + 1) % conn_txs.len();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// One nonblocking connection owned by an I/O thread.
+struct Conn {
+    stream: TcpStream,
+    /// Matches completions to this connection incarnation of the slot.
+    gen: u64,
+    /// Bytes read but not yet framed into a line.
+    rbuf: Vec<u8>,
+    /// Serialized replies not yet written; `wpos` is the write cursor.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Async replies (queries, reloads) still in flight.
+    pending: usize,
+    /// False after EOF (client half-closed): drain replies, then close.
+    open_read: bool,
+    /// Fatal state (protocol violation, write error, shutdown): close as
+    /// soon as the write buffer drains.
+    closing: bool,
+    last_activity: Instant,
+}
+
+impl Conn {
+    fn flushed(&self) -> bool {
+        self.wpos == self.wbuf.len()
+    }
+
+    fn push_json(&mut self, j: &Json) {
+        self.wbuf.extend_from_slice(j.to_string().as_bytes());
+        self.wbuf.push(b'\n');
+    }
+}
+
+/// Write as much of the buffered output as the socket accepts.
+fn flush_wbuf(c: &mut Conn) {
+    while c.wpos < c.wbuf.len() {
+        match c.stream.write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                c.closing = true;
+                c.wbuf.clear();
+                c.wpos = 0;
+                return;
+            }
+            Ok(n) => c.wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                // Peer is gone: nothing left to deliver.
+                c.closing = true;
+                c.wbuf.clear();
+                c.wpos = 0;
+                return;
+            }
+        }
+    }
+    if c.wpos == c.wbuf.len() {
+        c.wbuf.clear();
+        c.wpos = 0;
+    }
+}
+
+/// Frame and dispatch every complete line in the read buffer.
+fn process_lines(
+    c: &mut Conn,
+    slot: usize,
+    shared: &Arc<NetShared>,
+    comp_tx: &Sender<Completion>,
+    waker: &Arc<Waker>,
+) {
+    loop {
+        if c.closing {
+            return;
+        }
+        match c.rbuf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                let raw: Vec<u8> = c.rbuf.drain(..=pos).collect();
+                let line = String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned();
+                if !line.trim().is_empty() {
+                    dispatch_event(&line, c, slot, shared, comp_tx, waker);
+                }
+            }
+            None => {
+                if c.rbuf.len() > MAX_LINE {
+                    c.push_json(&error_json(&oversize_msg()));
+                    c.rbuf.clear();
+                    c.open_read = false;
+                    c.closing = true;
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Dispatch one request on the event loop. Stats answer inline; queries
+/// and reloads complete asynchronously through the completion channel so
+/// the loop never blocks on the service.
+fn dispatch_event(
+    line: &str,
+    c: &mut Conn,
+    slot: usize,
+    shared: &Arc<NetShared>,
+    comp_tx: &Sender<Completion>,
+    waker: &Arc<Waker>,
+) {
+    match parse_request(line) {
+        Err(e) => c.push_json(&error_json(&format!("{e:#}"))),
+        Ok(Request::Stats) => c.push_json(&stats_json(shared)),
+        Ok(Request::Shutdown) => {
+            shared.stop.store(true, Ordering::Relaxed);
+            c.closing = true;
+        }
+        Ok(Request::Reload(spec)) => {
+            // Reload builds a whole replacement shard — far too slow for
+            // the I/O thread. A one-off worker keeps the loop responsive
+            // (reloads are rare, admin-driven events).
+            let svc = shared.service.clone();
+            let tx = comp_tx.clone();
+            let wk = waker.clone();
+            let gen = c.gen;
+            c.pending += 1;
+            std::thread::spawn(move || {
+                let reply = reload_json(&svc, spec);
+                if tx.send(Completion { slot, gen, reply }).is_ok() {
+                    wk.wake();
+                }
+            });
+        }
+        Ok(Request::Query { id, vector }) => {
+            if !try_admit(shared) {
+                shared.service.metrics.record_overloaded();
+                c.push_json(&query_error_json(id, "overloaded"));
+                return;
+            }
+            let t0 = Instant::now();
+            let tx = comp_tx.clone();
+            let wk = waker.clone();
+            let sh = shared.clone();
+            let gen = c.gen;
+            let reply: ReplyFn = Box::new(move |res| {
+                sh.inflight.fetch_sub(1, Ordering::Relaxed);
+                let reply = query_reply_json(id, res, t0);
+                if tx.send(Completion { slot, gen, reply }).is_ok() {
+                    wk.wake();
+                }
+            });
+            c.pending += 1;
+            if let Err(e) = shared.service.submit_with(Query { id, vector }, reply) {
+                // The callback was dropped unused: release its slot and
+                // answer inline (dim mismatch, or the service shut down).
+                c.pending -= 1;
+                shared.inflight.fetch_sub(1, Ordering::Relaxed);
+                c.push_json(&query_error_json(id, &format!("{e:#}")));
+            }
+        }
+    }
+}
+
+/// Nonblocking read + frame + dispatch + write for one connection.
+fn service_conn(
+    c: &mut Conn,
+    slot: usize,
+    shared: &Arc<NetShared>,
+    comp_tx: &Sender<Completion>,
+    waker: &Arc<Waker>,
+) {
+    flush_wbuf(c);
+    if c.open_read && !c.closing {
+        let mut buf = [0u8; 4096];
+        // Cap the reads per tick so one firehose client cannot starve the
+        // rest of this thread's connections.
+        for _ in 0..16 {
+            match c.stream.read(&mut buf) {
+                Ok(0) => {
+                    c.open_read = false; // half-close: drain replies, then close
+                    break;
+                }
+                Ok(n) => {
+                    c.last_activity = Instant::now();
+                    c.rbuf.extend_from_slice(&buf[..n]);
+                    process_lines(c, slot, shared, comp_tx, waker);
+                    if c.closing {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    c.closing = true;
+                    break;
+                }
+            }
+        }
+    }
+    flush_wbuf(c);
+}
+
+/// One I/O thread: adopt connections, deliver completions, do socket IO,
+/// reap, sleep in `poll(2)` until something is ready.
+fn io_loop(
+    shared: Arc<NetShared>,
+    conn_rx: Receiver<TcpStream>,
+    comp_rx: Receiver<Completion>,
+    comp_tx: Sender<Completion>,
+    waker: Arc<Waker>,
+) {
+    let mut slots: Vec<Option<Conn>> = Vec::new();
+    let mut next_gen: u64 = 1;
+    let idle = shared.config.idle_timeout;
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Adopt connections handed over by the accept loop.
+        while let Ok(stream) = conn_rx.try_recv() {
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            let conn = Conn {
+                stream,
+                gen: next_gen,
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+                pending: 0,
+                open_read: true,
+                closing: false,
+                last_activity: Instant::now(),
+            };
+            next_gen += 1;
+            match slots.iter_mut().find(|s| s.is_none()) {
+                Some(free) => *free = Some(conn),
+                None => slots.push(Some(conn)),
+            }
+            shared.connections.fetch_add(1, Ordering::Relaxed);
+        }
+        // Deliver async replies into their connections' write buffers.
+        while let Ok(comp) = comp_rx.try_recv() {
+            if let Some(Some(c)) = slots.get_mut(comp.slot) {
+                if c.gen == comp.gen {
+                    c.pending -= 1;
+                    c.push_json(&comp.reply);
+                    c.last_activity = Instant::now();
+                }
+            }
+        }
+        // Socket IO (level-triggered: try everything, nonblocking).
+        for (slot, entry) in slots.iter_mut().enumerate() {
+            if let Some(c) = entry {
+                service_conn(c, slot, &shared, &comp_tx, &waker);
+            }
+        }
+        // Reap: closed/half-closed connections once their replies have
+        // drained, and idle connections past the timeout. This loop owns
+        // teardown — no thread or buffer outlives its connection.
+        for entry in slots.iter_mut() {
+            let close = match entry {
+                Some(c) => {
+                    let drained = c.pending == 0 && c.flushed();
+                    ((c.closing || !c.open_read) && drained)
+                        || (idle > Duration::ZERO
+                            && drained
+                            && c.last_activity.elapsed() > idle)
+                }
+                None => false,
+            };
+            if close {
+                *entry = None;
+                shared.connections.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        wait_ready(&slots, &waker, POLL_TICK_MS);
+        waker.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Readiness waiting: poll(2) + a pipe waker on 64-bit unix (minimal FFI,
+// no libc crate — the same pattern as store/mmap.rs), a short-tick
+// fallback elsewhere.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_short, c_void};
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+
+    /// `nfds_t`: `unsigned long` on linux, `unsigned int` elsewhere
+    /// (macOS). Gated to 64-bit targets like the rest of this module.
+    #[cfg(target_os = "linux")]
+    pub type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type NfdsT = std::os::raw::c_uint;
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    extern "C" {
+        /// `poll(2)`. Declared directly (no libc crate in this vendored
+        /// workspace).
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+        /// `pipe(2)` — the event loop's wakeup channel.
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        /// `read(2)`/`write(2)`/`close(2)` for the wake pipe only; sockets
+        /// go through std.
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// Wakes an I/O thread out of `poll(2)`: a self-pipe whose read end sits
+/// in the poll set, with an atomic flag coalescing redundant wakes (at
+/// most one byte is ever in flight, so the 1-byte ops can never block).
+#[cfg(all(unix, target_pointer_width = "64"))]
+struct Waker {
+    /// `[read_end, write_end]` of the pipe.
+    fds: [std::os::raw::c_int; 2],
+    armed: AtomicBool,
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Waker {
+    fn new() -> anyhow::Result<Waker> {
+        let mut fds = [0 as std::os::raw::c_int; 2];
+        let rc = unsafe { sys::pipe(fds.as_mut_ptr()) };
+        anyhow::ensure!(
+            rc == 0,
+            "pipe(2) failed: {}",
+            std::io::Error::last_os_error()
+        );
+        Ok(Waker {
+            fds,
+            armed: AtomicBool::new(false),
+        })
+    }
+
+    /// Make the owning loop's next (or current) `poll` return promptly.
+    fn wake(&self) {
+        if !self.armed.swap(true, Ordering::SeqCst) {
+            let b = [1u8];
+            unsafe {
+                sys::write(self.fds[1], b.as_ptr() as *const std::os::raw::c_void, 1);
+            }
+        }
+    }
+
+    /// Drain the wake byte (called by the owning loop after poll). The
+    /// zero-timeout poll guards the read: even if the wake write was lost
+    /// (EINTR), clear can never block the loop.
+    fn clear(&self) {
+        if self.armed.swap(false, Ordering::SeqCst) {
+            let mut pfd = sys::PollFd {
+                fd: self.fds[0],
+                events: sys::POLLIN,
+                revents: 0,
+            };
+            let rc = unsafe { sys::poll(&mut pfd, 1, 0) };
+            if rc > 0 && (pfd.revents & sys::POLLIN) != 0 {
+                let mut b = [0u8; 1];
+                unsafe {
+                    sys::read(self.fds[0], b.as_mut_ptr() as *mut std::os::raw::c_void, 1);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fds[0]);
+            sys::close(self.fds[1]);
+        }
+    }
+}
+
+/// Sleep until a socket is ready, the waker fires, or the tick elapses.
+#[cfg(all(unix, target_pointer_width = "64"))]
+fn wait_ready(slots: &[Option<Conn>], waker: &Waker, timeout_ms: i32) {
+    use std::os::unix::io::AsRawFd;
+
+    let mut fds = Vec::with_capacity(slots.len() + 1);
+    fds.push(sys::PollFd {
+        fd: waker.fds[0],
+        events: sys::POLLIN,
+        revents: 0,
+    });
+    for c in slots.iter().flatten() {
+        let mut ev: std::os::raw::c_short = 0;
+        if c.open_read && !c.closing {
+            ev |= sys::POLLIN;
+        }
+        if !c.flushed() {
+            ev |= sys::POLLOUT;
+        }
+        fds.push(sys::PollFd {
+            fd: c.stream.as_raw_fd(),
+            events: ev,
+            revents: 0,
+        });
+    }
+    // The loop is level-triggered and retries every connection after
+    // waking, so revents (and EINTR) need no inspection here.
+    unsafe {
+        sys::poll(fds.as_mut_ptr(), fds.len() as sys::NfdsT, timeout_ms);
+    }
+}
+
+/// Portable fallback waker: just the coalescing flag; the loop ticks.
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+struct Waker {
+    armed: AtomicBool,
+}
+
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+impl Waker {
+    fn new() -> anyhow::Result<Waker> {
+        Ok(Waker {
+            armed: AtomicBool::new(false),
+        })
+    }
+
+    fn wake(&self) {
+        self.armed.store(true, Ordering::SeqCst);
+    }
+
+    fn clear(&self) {
+        self.armed.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Portable fallback: a short sleep (skipped when the waker is armed),
+/// then the loop treats every nonblocking socket as maybe-ready.
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+fn wait_ready(_slots: &[Option<Conn>], waker: &Waker, _timeout_ms: i32) {
+    if !waker.armed.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::backend::{BackendFactory, NativeBackend, ShardBackend};
-    use crate::coordinator::{BatcherConfig, ServiceConfig};
+    use crate::coordinator::{BatchPolicy, BatcherConfig, ServiceConfig};
     use crate::util::Rng;
     use std::io::{BufRead, BufReader, Write};
 
@@ -376,6 +1147,7 @@ mod tests {
                     batcher: BatcherConfig {
                         max_batch: 4,
                         max_delay: std::time::Duration::from_micros(200),
+                        policy: BatchPolicy::Adaptive,
                     },
                     plan: None,
                 },
@@ -413,6 +1185,38 @@ mod tests {
     }
 
     #[test]
+    fn threaded_frontend_round_trip() {
+        // The baseline front end answers the identical wire contract.
+        let svc = tiny_service();
+        let server = NetServer::start_with(
+            "127.0.0.1:0",
+            svc,
+            NetConfig {
+                frontend: Frontend::Threaded,
+                ..NetConfig::default()
+            },
+        )
+        .unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+        w.write_all(b"{\"id\": 3, \"vector\": [1,1,1,1,1,1,1,1]}\n")
+            .unwrap();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(3));
+        assert_eq!(j.get("results").unwrap().as_arr().unwrap().len(), 4);
+        line.clear();
+        w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let stats = Json::parse(&line).unwrap();
+        let net = stats.get("net").unwrap();
+        assert_eq!(net.get("frontend").unwrap().as_str(), Some("threaded"));
+        server.shutdown();
+    }
+
+    #[test]
     fn stats_and_errors() {
         let svc = tiny_service();
         let server = NetServer::start("127.0.0.1:0", svc).unwrap();
@@ -427,6 +1231,17 @@ mod tests {
         assert!(stats.get("stats").is_some());
         assert_eq!(stats.get("shard_failures").unwrap().as_i64(), Some(0));
         assert_eq!(stats.get("failed_requests").unwrap().as_i64(), Some(0));
+        assert_eq!(stats.get("overloaded_rejects").unwrap().as_i64(), Some(0));
+        // Histograms are empty before any query: null, never NaN.
+        let lat = stats.get("latency").unwrap();
+        assert_eq!(lat.get("total").unwrap().get("p50_us"), Some(&Json::Null));
+        assert_eq!(lat.get("queue").unwrap().get("p999_us"), Some(&Json::Null));
+        // The net block reports the running front end's knobs.
+        let net = stats.get("net").unwrap();
+        assert_eq!(net.get("frontend").unwrap().as_str(), Some("event"));
+        assert_eq!(net.get("io_threads").unwrap().as_i64(), Some(2));
+        assert_eq!(net.get("queue_max").unwrap().as_i64(), Some(1024));
+        assert_eq!(net.get("connections").unwrap().as_i64(), Some(1));
         // tiny_service starts without a plan: the field is absent, not null.
         assert!(stats.get("plan").is_none());
         // No kernel recorded either (the launcher records one for native
@@ -443,6 +1258,19 @@ mod tests {
         w.write_all(b"{\"id\": 1, \"vector\": [1, 2]}\n").unwrap(); // wrong dim
         r.read_line(&mut line).unwrap();
         assert!(Json::parse(&line).unwrap().get("error").is_some());
+
+        // After a successful query, the latency histograms carry numbers.
+        line.clear();
+        w.write_all(b"{\"id\": 2, \"vector\": [1,1,1,1,1,1,1,1]}\n")
+            .unwrap();
+        r.read_line(&mut line).unwrap();
+        line.clear();
+        w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let stats = Json::parse(&line).unwrap();
+        let total = stats.get("latency").unwrap().get("total").unwrap();
+        assert!(total.get("p50_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(total.get("p999_us").unwrap().as_f64().unwrap() > 0.0);
         server.shutdown();
     }
 
@@ -474,6 +1302,7 @@ mod tests {
                     batcher: BatcherConfig {
                         max_batch: 4,
                         max_delay: std::time::Duration::from_micros(200),
+                        policy: BatchPolicy::Adaptive,
                     },
                     plan: Some(plan),
                 },
@@ -570,6 +1399,7 @@ mod tests {
                     batcher: BatcherConfig {
                         max_batch: 4,
                         max_delay: std::time::Duration::from_micros(200),
+                        policy: BatchPolicy::Adaptive,
                     },
                     plan: Some(plan),
                 },
@@ -618,6 +1448,7 @@ mod tests {
                     batcher: BatcherConfig {
                         max_batch: 4,
                         max_delay: std::time::Duration::from_micros(200),
+                        policy: BatchPolicy::Adaptive,
                     },
                     plan: None,
                 },
@@ -733,6 +1564,235 @@ mod tests {
         for j in joins {
             j.join().unwrap();
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_connections_are_reaped() {
+        // The PR-9 bugfix: an open-but-silent connection must be torn down
+        // by the loop, not leak its buffers until the next accept.
+        let svc = tiny_service();
+        let server = NetServer::start_with(
+            "127.0.0.1:0",
+            svc,
+            NetConfig {
+                idle_timeout: Duration::from_millis(100),
+                ..NetConfig::default()
+            },
+        )
+        .unwrap();
+        let mut silent = TcpStream::connect(server.addr).unwrap();
+        silent
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        // Send nothing. The server must close us: read sees EOF (or a
+        // reset), never the 10s client-side timeout.
+        let mut buf = [0u8; 16];
+        match silent.read(&mut buf) {
+            Ok(n) => assert_eq!(n, 0, "server should close an idle connection"),
+            Err(e) => assert!(
+                e.kind() != std::io::ErrorKind::WouldBlock
+                    && e.kind() != std::io::ErrorKind::TimedOut,
+                "idle connection was never reaped: {e}"
+            ),
+        }
+        // The server is still healthy: a fresh connection round-trips.
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut r = BufReader::new(conn);
+        w.write_all(b"{\"id\": 1, \"vector\": [1,1,1,1,1,1,1,1]}\n")
+            .unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(
+            Json::parse(&line).unwrap().get("id").unwrap().as_i64(),
+            Some(1)
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn half_close_still_gets_replies() {
+        // A client that sends a query and immediately half-closes its write
+        // side must still receive the reply before the server closes.
+        let svc = tiny_service();
+        let server = NetServer::start("127.0.0.1:0", svc).unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        w.write_all(b"{\"id\": 9, \"vector\": [1,1,1,1,1,1,1,1]}\n")
+            .unwrap();
+        conn.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(9));
+        assert!(j.get("results").is_some(), "{line}");
+        // And then EOF: the connection is torn down, not leaked.
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_lines_close_the_connection() {
+        let svc = tiny_service();
+        let server = NetServer::start("127.0.0.1:0", svc).unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        // Bounded writes so the test cannot hang once the server stops
+        // reading: a short write timeout turns backpressure into an error.
+        w.set_write_timeout(Some(Duration::from_millis(200))).unwrap();
+        let chunk = vec![b'a'; 64 * 1024];
+        for _ in 0..((MAX_LINE / chunk.len()) + 4) {
+            if w.write_all(&chunk).is_err() {
+                break; // server already closed on us — that's the contract
+            }
+        }
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+        // The server must close the connection (EOF/reset), ideally after
+        // an explicit error reply. It must never keep buffering.
+        match r.read_line(&mut line) {
+            Ok(0) => {}
+            Ok(_) => {
+                assert!(
+                    line.contains("exceeds"),
+                    "reply to an oversized frame should be the line-limit error, got: {line}"
+                );
+                // ... followed by EOF.
+                line.clear();
+                let _ = r.read_line(&mut line);
+            }
+            Err(_) => {} // reset is an acceptable teardown
+        }
+        server.shutdown();
+    }
+
+    /// A backend that answers correctly but slowly — the overload fixture.
+    struct SlowBackend {
+        d: usize,
+        n: usize,
+        k: usize,
+        delay: Duration,
+    }
+
+    impl ShardBackend for SlowBackend {
+        fn score_topk(
+            &mut self,
+            _queries: &[f32],
+            nq: usize,
+        ) -> anyhow::Result<Vec<Vec<crate::topk::Candidate>>> {
+            std::thread::sleep(self.delay);
+            Ok((0..nq)
+                .map(|_| {
+                    (0..self.k)
+                        .map(|i| crate::topk::Candidate {
+                            index: i as u32,
+                            value: (self.k - i) as f32,
+                        })
+                        .collect()
+                })
+                .collect())
+        }
+
+        fn dim(&self) -> usize {
+            self.d
+        }
+
+        fn shard_size(&self) -> usize {
+            self.n
+        }
+
+        fn k(&self) -> usize {
+            self.k
+        }
+    }
+
+    #[test]
+    fn overload_rejects_are_explicit_and_counted() {
+        // queue_max 1 and a 200ms backend: the first query occupies the
+        // only slot, so the rest of a pipelined burst must be rejected
+        // loudly — every request gets a reply, nothing hangs, and the
+        // reject count matches the metrics.
+        let d = 4;
+        let k = 2;
+        let factories: Vec<BackendFactory> = vec![Box::new(move || {
+            Ok(Box::new(SlowBackend {
+                d,
+                n: 16,
+                k,
+                delay: Duration::from_millis(200),
+            }) as Box<dyn ShardBackend>)
+        })];
+        let svc = Arc::new(
+            MipsService::start(
+                ServiceConfig {
+                    d,
+                    k,
+                    batcher: BatcherConfig {
+                        max_batch: 1,
+                        max_delay: Duration::from_micros(100),
+                        policy: BatchPolicy::Adaptive,
+                    },
+                    plan: None,
+                },
+                factories,
+                vec![0],
+            )
+            .unwrap(),
+        );
+        let metrics = svc.metrics.clone();
+        let server = NetServer::start_with(
+            "127.0.0.1:0",
+            svc,
+            NetConfig {
+                queue_max: 1,
+                ..NetConfig::default()
+            },
+        )
+        .unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let total = 8u64;
+        let mut burst = String::new();
+        for id in 0..total {
+            burst.push_str(&format!("{{\"id\": {id}, \"vector\": [1,1,1,1]}}\n"));
+        }
+        w.write_all(burst.as_bytes()).unwrap();
+        let mut r = BufReader::new(conn);
+        let mut ok = 0u64;
+        let mut rejected = 0u64;
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..total {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            seen.insert(j.get("id").unwrap().as_i64().unwrap());
+            match j.get("error") {
+                None => ok += 1,
+                Some(e) => {
+                    assert_eq!(e.as_str(), Some("overloaded"), "{line}");
+                    rejected += 1;
+                }
+            }
+        }
+        // Zero lost replies: every id answered exactly once.
+        assert_eq!(seen.len() as u64, total);
+        assert_eq!(ok + rejected, total);
+        assert!(ok >= 1, "at least the first query must be admitted");
+        assert!(rejected >= 1, "a 200ms backend with queue_max=1 must shed load");
+        assert_eq!(metrics.overloaded_rejects(), rejected);
+        // The stats verb reports the same count.
+        let mut line = String::new();
+        w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let stats = Json::parse(&line).unwrap();
+        assert_eq!(
+            stats.get("overloaded_rejects").unwrap().as_i64(),
+            Some(rejected as i64)
+        );
         server.shutdown();
     }
 }

@@ -75,10 +75,17 @@ pub struct ServiceConfig {
     pub plan: Option<crate::plan::ServePlan>,
 }
 
+/// How a reply leaves the router: called exactly once with the outcome.
+/// [`MipsService::submit`] passes a channel sender behind this; the
+/// event-driven net front end passes a closure that pushes the reply onto
+/// its completion queue and wakes the owning I/O thread — no per-request
+/// channel, no parked thread.
+pub type ReplyFn = Box<dyn FnOnce(anyhow::Result<Response>) + Send>;
+
 struct Pending {
     query: Query,
     enqueued: Instant,
-    reply: Sender<anyhow::Result<Response>>,
+    reply: ReplyFn,
 }
 
 /// What flows to the router: queries to batch, or a ready replacement
@@ -449,7 +456,7 @@ impl MipsService {
         if shards_answered == 0 {
             for p in batch {
                 metrics.record_failed_request();
-                let _ = p.reply.send(Err(anyhow::anyhow!(
+                (p.reply)(Err(anyhow::anyhow!(
                     "all {shards_total} shards failed the batch; no candidates"
                 )));
             }
@@ -478,7 +485,7 @@ impl MipsService {
                 queue_latency: dispatch_start - p.enqueued,
             };
             metrics.record_request(resp.total_latency, resp.queue_latency, degraded);
-            let _ = p.reply.send(Ok(resp));
+            (p.reply)(Ok(resp));
         }
     }
 
@@ -486,21 +493,35 @@ impl MipsService {
     /// of `Err` means no shard could answer (the request failed outright,
     /// as opposed to a `degraded` partial answer).
     pub fn submit(&self, query: Query) -> anyhow::Result<Receiver<anyhow::Result<Response>>> {
+        let (reply_tx, reply_rx) = channel();
+        self.submit_with(
+            query,
+            Box::new(move |r| {
+                let _ = reply_tx.send(r);
+            }),
+        )?;
+        Ok(reply_rx)
+    }
+
+    /// Submit a query whose reply is delivered through `reply` (called
+    /// exactly once, on the router thread). The callback form lets callers
+    /// with their own wakeup machinery — the event-driven net front end —
+    /// receive replies without a per-request channel.
+    pub fn submit_with(&self, query: Query, reply: ReplyFn) -> anyhow::Result<()> {
         anyhow::ensure!(
             query.vector.len() == self.config.d,
             "query dim {} != service dim {}",
             query.vector.len(),
             self.config.d
         );
-        let (reply_tx, reply_rx) = channel();
         self.tx
             .send(RouterMsg::Query(Pending {
                 query,
                 enqueued: Instant::now(),
-                reply: reply_tx,
+                reply,
             }))
             .map_err(|_| anyhow::anyhow!("service is shut down"))?;
-        Ok(reply_rx)
+        Ok(())
     }
 
     /// Number of shard slots. Fixed for the service's lifetime — live
@@ -541,6 +562,7 @@ impl Drop for MipsService {
 mod tests {
     use super::*;
     use crate::coordinator::backend::{BackendFactory, NativeBackend};
+    use crate::coordinator::batcher::BatchPolicy;
     use crate::topk::TwoStageParams;
     use crate::util::Rng;
 
@@ -577,6 +599,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 8,
                     max_delay: Duration::from_millis(1),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: None,
             },
@@ -650,6 +673,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 4,
                     max_delay: Duration::from_millis(1),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: None,
             },
@@ -693,6 +717,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 4,
                     max_delay: Duration::from_millis(1),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: None,
             },
@@ -760,6 +785,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 4,
                     max_delay: Duration::from_millis(1),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: None,
             },
@@ -826,6 +852,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 8,
                     max_delay: Duration::from_millis(1),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: Some(plan),
             },
@@ -924,6 +951,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 8,
                     max_delay: Duration::from_millis(1),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: Some(plan),
             },
@@ -1038,6 +1066,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 8,
                     max_delay: Duration::from_millis(50),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: None,
             },
@@ -1097,6 +1126,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 4,
                     max_delay: Duration::from_millis(1),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: None,
             },
@@ -1176,6 +1206,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch: 4,
                     max_delay: Duration::from_millis(1),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: None,
             },

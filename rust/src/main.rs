@@ -869,7 +869,7 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     // e2e tests scrape it from the first line with this prefix.
     let server = match &cfg.listen {
         Some(addr) => {
-            let s = NetServer::start(addr, svc.clone())?;
+            let s = NetServer::start_with(addr, svc.clone(), cfg.net)?;
             println!("fastk: listening on {}", s.addr);
             std::io::Write::flush(&mut std::io::stdout())?;
             Some(s)

@@ -585,8 +585,8 @@ mod tests {
     #[test]
     fn store_backed_service_matches_in_memory_service() {
         use crate::coordinator::{
-            BackendFactory, BatcherConfig, EngineOptions, MipsService, ParallelNativeBackend,
-            ServiceConfig, ShardBackend,
+            BackendFactory, BatchPolicy, BatcherConfig, EngineOptions, MipsService,
+            ParallelNativeBackend, ServiceConfig, ShardBackend,
         };
         use crate::topk::{SimdKernel, TwoStageParams};
         use crate::util::Rng;
@@ -607,6 +607,7 @@ mod tests {
             batcher: BatcherConfig {
                 max_batch: 4,
                 max_delay: Duration::from_micros(500),
+                policy: BatchPolicy::Windowed,
             },
             plan: None,
         };

@@ -27,8 +27,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use fastk::coordinator::{
-    merge_shard_results, BackendFactory, BatcherConfig, MipsService, NativeBackend, Query,
-    ReloadSource, ReloadSpec, ServiceConfig, ShardBackend, ShardReload, ShardTopK,
+    merge_shard_results, BackendFactory, BatchPolicy, BatcherConfig, MipsService, NativeBackend,
+    Query, ReloadSource, ReloadSpec, ServiceConfig, ShardBackend, ShardReload, ShardTopK,
 };
 use fastk::store::{self, OpenOptions, ShardStore, StoreSpec};
 use fastk::util::Rng;
@@ -124,6 +124,7 @@ fn swap_under_load(clients: usize) {
                 batcher: BatcherConfig {
                     max_batch: 4,
                     max_delay: Duration::from_micros(200),
+                    policy: BatchPolicy::Windowed,
                 },
                 plan: None,
             },

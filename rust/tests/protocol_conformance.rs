@@ -1,0 +1,393 @@
+//! Protocol conformance: `docs/PROTOCOL.md` is executable.
+//!
+//! The doc's `protocol-session` fenced blocks are replayed verbatim, in
+//! order, over one TCP connection against a real `fastk serve --listen`
+//! subprocess launched from the doc's own `protocol-config` block — so
+//! the documented wire contract and the server cannot drift apart
+//! without failing CI. Matching is add-only (extra reply keys are fine,
+//! documented keys must be present and equal) with `"..."` as the
+//! wildcard, exactly as the doc's conventions section says.
+//!
+//! Alongside the doc replay, this suite covers the wire edges a contract
+//! document shows but cannot execute deterministically: malformed
+//! frames, an oversized line, a half-closed connection, and an
+//! admission-control overload burst.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use fastk::util::json::Json;
+
+fn doc_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/PROTOCOL.md")
+}
+
+/// Extract the contents of every fenced block with the given info string,
+/// in document order.
+fn fenced_blocks(doc: &str, info: &str) -> Vec<String> {
+    let mut blocks = Vec::new();
+    let mut current: Option<String> = None;
+    let open = format!("```{info}");
+    for line in doc.lines() {
+        match &mut current {
+            Some(buf) => {
+                if line.trim_end() == "```" {
+                    blocks.push(current.take().unwrap());
+                } else {
+                    buf.push_str(line);
+                    buf.push('\n');
+                }
+            }
+            None => {
+                if line.trim_end() == open {
+                    current = Some(String::new());
+                }
+            }
+        }
+    }
+    assert!(current.is_none(), "unterminated ```{info} block in PROTOCOL.md");
+    blocks
+}
+
+/// One documented exchange: a request line and, unless the doc shows no
+/// reply (shutdown), the expected reply JSON.
+struct Step {
+    request: String,
+    expected: Option<String>,
+}
+
+/// Parse `-> ` / `<- ` session lines, folding multi-line expected replies
+/// (continuation lines are anything that is not a new `-> `/`<- ` line,
+/// a `#` comment, or blank — the doc's documented convention).
+fn parse_sessions(doc: &str) -> Vec<Step> {
+    let mut steps: Vec<Step> = Vec::new();
+    for block in fenced_blocks(doc, "protocol-session") {
+        for line in block.lines() {
+            if let Some(req) = line.strip_prefix("-> ") {
+                steps.push(Step { request: req.to_string(), expected: None });
+            } else if let Some(rep) = line.strip_prefix("<- ") {
+                let last = steps.last_mut().expect("`<- ` before any `-> ` in PROTOCOL.md");
+                assert!(last.expected.is_none(), "two `<- ` replies for one request");
+                last.expected = Some(rep.to_string());
+            } else if line.trim().is_empty() || line.trim_start().starts_with('#') {
+                continue;
+            } else {
+                // Continuation of the expected reply.
+                let last = steps.last_mut().expect("continuation line outside a reply");
+                let exp = last.expected.as_mut().expect("continuation line outside a reply");
+                exp.push(' ');
+                exp.push_str(line.trim());
+            }
+        }
+    }
+    steps
+}
+
+/// Add-only match: every expected key/element must be present and equal
+/// in the actual reply; extra actual keys are allowed; the string `"..."`
+/// matches anything.
+fn matches(expected: &Json, actual: &Json, path: &str) -> Result<(), String> {
+    if let Json::Str(s) = expected {
+        if s == "..." {
+            return Ok(());
+        }
+    }
+    match expected {
+        Json::Obj(exp) => {
+            let act = actual
+                .as_obj()
+                .ok_or_else(|| format!("{path}: expected an object, got {actual}"))?;
+            for (k, v) in exp {
+                let a = act
+                    .get(k)
+                    .ok_or_else(|| format!("{path}.{k}: missing from reply {actual}"))?;
+                matches(v, a, &format!("{path}.{k}"))?;
+            }
+            Ok(())
+        }
+        Json::Arr(exp) => {
+            let act = actual
+                .as_arr()
+                .ok_or_else(|| format!("{path}: expected an array, got {actual}"))?;
+            if exp.len() != act.len() {
+                return Err(format!(
+                    "{path}: expected {} elements, got {} in {actual}",
+                    exp.len(),
+                    act.len()
+                ));
+            }
+            for (i, (e, a)) in exp.iter().zip(act).enumerate() {
+                matches(e, a, &format!("{path}[{i}]"))?;
+            }
+            Ok(())
+        }
+        _ => {
+            if expected == actual {
+                Ok(())
+            } else {
+                Err(format!("{path}: expected {expected}, got {actual}"))
+            }
+        }
+    }
+}
+
+fn fastk() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_fastk"))
+}
+
+/// A `fastk serve --listen` subprocess. Holds the stdout pipe open for
+/// the child's whole life: it prints progress lines and a shutdown
+/// summary, and must not die on a broken pipe mid-test.
+struct Serve {
+    child: Child,
+    addr: String,
+    _stdout: std::io::Lines<BufReader<std::process::ChildStdout>>,
+}
+
+impl Serve {
+    /// The tests send `{"cmd": "shutdown"}` themselves; this just
+    /// requires the clean exit that must follow.
+    fn assert_clean_exit(mut self) {
+        let status = self.child.wait().unwrap();
+        assert!(status.success(), "serve exited nonzero");
+    }
+}
+
+/// Launch `fastk serve --listen 127.0.0.1:0` with the given config JSON.
+fn launch(tag: &str, config: &str) -> Serve {
+    let dir = std::env::temp_dir().join(format!("fastk-conf-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("serve.json");
+    std::fs::write(&cfg_path, config).unwrap();
+    let mut child = fastk()
+        .args([
+            "serve",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--queries",
+            "0",
+            "--listen",
+            "127.0.0.1:0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut lines = BufReader::new(child.stdout.take().unwrap()).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("serve exited before announcing its listener")
+            .unwrap();
+        if let Some(a) = line.strip_prefix("fastk: listening on ") {
+            break a.trim().to_string();
+        }
+    };
+    Serve { child, addr, _stdout: lines }
+}
+
+fn connect(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).unwrap();
+    conn.set_nodelay(true).ok();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let r = BufReader::new(conn.try_clone().unwrap());
+    (conn, r)
+}
+
+/// The doc replay: every example in PROTOCOL.md, verbatim, in order.
+#[test]
+fn protocol_doc_examples_replay_verbatim() {
+    let doc = std::fs::read_to_string(doc_path()).expect("docs/PROTOCOL.md exists");
+    let configs = fenced_blocks(&doc, "protocol-config");
+    assert_eq!(configs.len(), 1, "PROTOCOL.md must pin exactly one conformance config");
+    let steps = parse_sessions(&doc);
+    assert!(steps.len() >= 10, "PROTOCOL.md lost its examples? only {} steps", steps.len());
+
+    let serve = launch("doc", &configs[0]);
+    let (mut w, mut r) = connect(&serve.addr);
+    for (i, step) in steps.iter().enumerate() {
+        w.write_all(step.request.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let Some(exp_text) = &step.expected else {
+            continue; // documented as reply-less (shutdown)
+        };
+        let expected = Json::parse(exp_text).unwrap_or_else(|e| {
+            panic!("PROTOCOL.md step {i}: expected reply is not JSON: {e}\n{exp_text}")
+        });
+        let mut line = String::new();
+        assert!(
+            r.read_line(&mut line).unwrap() > 0,
+            "connection closed before reply to step {i} ({})",
+            step.request
+        );
+        let actual = Json::parse(line.trim())
+            .unwrap_or_else(|e| panic!("step {i}: reply is not JSON: {e}\n{line}"));
+        if let Err(why) = matches(&expected, &actual, "reply") {
+            panic!(
+                "PROTOCOL.md drifted from the server at step {i}\n  request:  {}\n  expected: {exp_text}\n  actual:   {actual}\n  mismatch: {why}",
+                step.request
+            );
+        }
+    }
+    // The doc ends with shutdown: the process must exit cleanly.
+    serve.assert_clean_exit();
+}
+
+/// Relative links in PROTOCOL.md's prose must resolve (the doc points at
+/// the implementation and this very test).
+#[test]
+fn protocol_doc_paths_exist() {
+    let doc = std::fs::read_to_string(doc_path()).expect("docs/PROTOCOL.md exists");
+    for target in ["rust/src/coordinator/net.rs", "rust/tests/protocol_conformance.rs"] {
+        assert!(doc.contains(target), "PROTOCOL.md no longer references {target}");
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(target);
+        assert!(p.exists(), "PROTOCOL.md references {target}, which does not exist");
+    }
+}
+
+const EDGE_CONFIG: &str = r#"{"d": 8, "k": 4, "shards": 1, "shard_size": 256,
+ "recall_target": 0.9, "backend": "native", "seed": 7,
+ "batch_max": 4, "batch_deadline_us": 500}"#;
+
+/// A frame that is not JSON gets a `bad request` error and the stream
+/// re-synchronizes at the next newline: the connection stays usable.
+#[test]
+fn malformed_frames_error_and_resync() {
+    let serve = launch("malformed", EDGE_CONFIG);
+    let (mut w, mut r) = connect(&serve.addr);
+    let mut line = String::new();
+
+    w.write_all(b"this is not json\n").unwrap();
+    r.read_line(&mut line).unwrap();
+    let rep = Json::parse(line.trim()).unwrap();
+    let msg = rep.get("error").and_then(|e| e.as_str()).expect("bare error reply");
+    assert!(msg.starts_with("bad request:"), "got: {msg}");
+    assert!(rep.get("id").is_none(), "unparseable frames cannot echo an id");
+
+    // The very next line works.
+    w.write_all(b"{\"id\": 1, \"vector\": [1,0,1,0,1,0,1,0]}\n").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    let rep = Json::parse(line.trim()).unwrap();
+    assert!(rep.get("results").is_some(), "stream did not resync: {rep}");
+
+    w.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    serve.assert_clean_exit();
+}
+
+/// A line over the 1 MiB frame cap gets the documented error and the
+/// connection is closed; the server itself keeps running.
+#[test]
+fn oversized_lines_get_the_documented_error() {
+    let serve = launch("oversize", EDGE_CONFIG);
+    let (mut w, r) = connect(&serve.addr);
+    // Writes may error once the server stops reading — that's fine, the
+    // contract is about the reply/close, not about accepting the flood.
+    w.set_write_timeout(Some(Duration::from_millis(200))).unwrap();
+    let chunk = vec![b'x'; 64 * 1024];
+    let mut sent_ok = true;
+    for _ in 0..((1 << 20) / chunk.len() + 4) {
+        if w.write_all(&chunk).is_err() {
+            sent_ok = false;
+            break;
+        }
+    }
+    if sent_ok {
+        let _ = w.write_all(b"\n");
+    }
+    // Either the error reply arrives and the stream closes, or the server
+    // resets the connection before we read it (an Err) — both are a close.
+    let mut rest = String::new();
+    let mut rd = r;
+    if rd.read_to_string(&mut rest).is_ok() && !rest.is_empty() {
+        assert!(rest.contains("exceeds"), "unexpected reply: {rest}");
+    }
+
+    let (mut w2, mut r2) = connect(&serve.addr);
+    w2.write_all(b"{\"id\": 2, \"vector\": [1,0,1,0,1,0,1,0]}\n").unwrap();
+    let mut line = String::new();
+    r2.read_line(&mut line).unwrap();
+    assert!(line.contains("results"), "server died after oversized line: {line}");
+    w2.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    serve.assert_clean_exit();
+}
+
+/// Half-close: a client that shuts down its write side still gets every
+/// pending reply, then a clean EOF.
+#[test]
+fn half_close_drains_replies() {
+    let serve = launch("halfclose", EDGE_CONFIG);
+    let (mut w, mut r) = connect(&serve.addr);
+    w.write_all(b"{\"id\": 9, \"vector\": [1,0,1,0,1,0,1,0]}\n").unwrap();
+    w.shutdown(Shutdown::Write).unwrap();
+    let mut line = String::new();
+    assert!(r.read_line(&mut line).unwrap() > 0, "no reply after half-close");
+    let rep = Json::parse(line.trim()).unwrap();
+    assert_eq!(rep.get("id").and_then(|v| v.as_i64()), Some(9), "{rep}");
+    assert!(rep.get("results").is_some(), "{rep}");
+    line.clear();
+    assert_eq!(r.read_line(&mut line).unwrap(), 0, "expected EOF after drain");
+
+    let (mut w2, _r2) = connect(&serve.addr);
+    w2.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    serve.assert_clean_exit();
+}
+
+/// Overload across the real subprocess boundary: a pipelined burst at
+/// queue_max=1 must answer every query — some `results`, the rest the
+/// exact `overloaded` error — and `stats` must count the rejects.
+#[test]
+fn overload_rejects_are_counted_over_tcp() {
+    let config = r#"{"d": 8, "k": 4, "shards": 1, "shard_size": 256,
+ "recall_target": 0.9, "backend": "native", "seed": 7,
+ "batch_max": 1, "batch_deadline_us": 100, "queue_max": 1}"#;
+    let serve = launch("overload", config);
+    let (mut w, mut r) = connect(&serve.addr);
+
+    let burst = 16;
+    let mut payload = String::new();
+    for id in 0..burst {
+        payload.push_str(&format!("{{\"id\": {id}, \"vector\": [1,0,1,0,1,0,1,0]}}\n"));
+    }
+    w.write_all(payload.as_bytes()).unwrap();
+
+    let (mut ok, mut rejected) = (0usize, 0usize);
+    let mut seen = std::collections::HashSet::new();
+    let mut line = String::new();
+    for _ in 0..burst {
+        line.clear();
+        let n = r.read_line(&mut line).expect("every burst query answered");
+        assert!(n > 0, "connection closed mid-burst: lost replies");
+        let rep = Json::parse(line.trim()).unwrap();
+        assert!(seen.insert(rep.get("id").and_then(|v| v.as_i64()).unwrap()), "duplicate reply");
+        match rep.get("error").and_then(|e| e.as_str()) {
+            None => {
+                assert!(rep.get("results").is_some(), "{rep}");
+                ok += 1;
+            }
+            Some(e) => {
+                assert_eq!(e, "overloaded", "only the documented reject is allowed: {rep}");
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!(ok + rejected, burst, "zero lost replies");
+    assert!(ok >= 1, "at least one query must be admitted");
+    assert!(rejected >= 1, "queue_max=1 under a pipelined burst must reject");
+
+    w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    let stats = Json::parse(line.trim()).unwrap();
+    assert_eq!(
+        stats.get("overloaded_rejects").and_then(|v| v.as_usize()),
+        Some(rejected),
+        "stats must count exactly the rejects the client saw: {stats}"
+    );
+
+    w.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    serve.assert_clean_exit();
+}
