@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Lint the Prometheus metric registry against naming rules and the docs.
+
+Reads the metric families registered between the `METRICS-BEGIN` /
+`METRICS-END` markers in rust/src/obs/prom.rs (the single registry both
+the `metrics` verb and the /metrics HTTP endpoint render from) and
+checks, for every `name: "..."` in the block:
+
+- the name is snake_case (`[a-z][a-z0-9_]*`, no double underscores),
+- it carries a unit/kind suffix: `_us` (microsecond histograms),
+  `_total` (counters) or `_ratio` (unitless gauges),
+- it is documented: the exact name appears in docs/OPERATIONS.md, so an
+  operator grepping the exposition always finds a description,
+- it is unique in the registry.
+
+This is how CI keeps the exposition's vocabulary stable and documented:
+adding a metric without a suffix or without an OPERATIONS.md entry fails
+the build, not a dashboard review.
+
+Usage:
+    check_metrics_names.py [root]    # default: repo root = script's parent
+"""
+
+import pathlib
+import re
+import sys
+
+NAME_RE = re.compile(r'^\s*name:\s*"([^"]+)"')
+SNAKE_RE = re.compile(r"^[a-z][a-z0-9_]*$")
+SUFFIXES = ("_us", "_total", "_ratio")
+BEGIN = "METRICS-BEGIN"
+END = "METRICS-END"
+
+
+def registry_names(prom_rs: pathlib.Path) -> list:
+    names = []
+    in_block = False
+    for line in prom_rs.read_text(encoding="utf-8").splitlines():
+        if BEGIN in line:
+            in_block = True
+            continue
+        if END in line:
+            in_block = False
+            continue
+        if in_block:
+            m = NAME_RE.match(line)
+            if m:
+                names.append(m.group(1))
+    return names
+
+
+def main() -> None:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else pathlib.Path(__file__).parent / "..")
+    root = root.resolve()
+    prom_rs = root / "rust" / "src" / "obs" / "prom.rs"
+    ops_md = root / "docs" / "OPERATIONS.md"
+    for p in (prom_rs, ops_md):
+        if not p.exists():
+            sys.exit(f"check_metrics_names: FAIL: {p.relative_to(root)} missing")
+
+    names = registry_names(prom_rs)
+    if not names:
+        sys.exit(
+            "check_metrics_names: FAIL: no metric names found between "
+            f"{BEGIN}/{END} in {prom_rs.relative_to(root)}"
+        )
+
+    ops_text = ops_md.read_text(encoding="utf-8")
+    errors = []
+    seen = set()
+    for name in names:
+        if name in seen:
+            errors.append(f"duplicate metric name: {name}")
+        seen.add(name)
+        if not SNAKE_RE.match(name) or "__" in name:
+            errors.append(f"not snake_case: {name}")
+        if not name.endswith(SUFFIXES):
+            errors.append(
+                f"missing unit/kind suffix ({'/'.join(SUFFIXES)}): {name}"
+            )
+        if name not in ops_text:
+            errors.append(f"undocumented: {name} not mentioned in docs/OPERATIONS.md")
+
+    if errors:
+        for e in errors:
+            print(f"check_metrics_names: FAIL: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"check_metrics_names: ok: {len(names)} metric names, all well-formed and documented")
+
+
+if __name__ == "__main__":
+    main()

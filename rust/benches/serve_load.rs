@@ -17,13 +17,20 @@
 //!   (single sample; the throughput gate compares these)
 //! - `ping_{frontend}`         — closed-loop single-connection round trips
 //!   (batch-1 latency: must not pay the full batching window)
+//! - `trace_off` / `trace_on`  — wall ns per query through the service
+//!   (no TCP) with span recording disarmed vs armed
+//! - `audit_recall_measured` / `audit_recall_predicted` — the online
+//!   recall auditor's live estimate vs the plan's Theorem-1 prediction
 //!
 //! Acceptance (enforced on full runs, reported on `FASTK_BENCH_SMOKE=1`):
 //! the event front end's throughput must be no worse than the threaded
 //! baseline at the top offered load ([`gate_not_slower`]), its p99 at that
 //! load must not blow out, batch-1 p50 may regress by at most the batching
 //! deadline, and overload must produce counted `overloaded` rejects with
-//! every request answered — zero hangs, zero lost replies.
+//! every request answered — zero hangs, zero lost replies. Observability
+//! gates: armed span recording costs at most 3% wall time per query, and
+//! the auditor's measured recall agrees with the Theorem-1 prediction
+//! within its 95% confidence interval (+0.03 slack).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -297,6 +304,26 @@ fn overload_check(burst: usize, delay: Duration) -> bool {
     bad
 }
 
+/// Submit `nq` queries open loop straight at the service (no TCP — this
+/// isolates the span-recording cost from front-end noise) and return wall
+/// nanoseconds per completed query.
+fn service_wall_ns_per_query(svc: &MipsService, nq: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(nq);
+    for id in 0..nq {
+        let q: Vec<f32> = (0..D).map(|_| rng.next_gaussian() as f32).collect();
+        pending.push(
+            svc.submit(fastk::coordinator::Query { id: id as u64, vector: q })
+                .expect("submit"),
+        );
+    }
+    for rx in pending {
+        rx.recv().expect("service alive").expect("query answered");
+    }
+    t0.elapsed().as_nanos() as f64 / nq as f64
+}
+
 fn main() {
     let smoke = std::env::var("FASTK_BENCH_SMOKE").is_ok();
     let enforce = !smoke;
@@ -431,6 +458,145 @@ fn main() {
             Duration::from_millis(50)
         },
     );
+
+    banner("span-recording overhead: tracing armed vs disarmed");
+    {
+        let (reps, per_rep) = if smoke { (2usize, 200usize) } else { (5usize, 2000usize) };
+        let svc = std::sync::Arc::new(start_service(n, 21));
+        // Warm threads and caches before either arm times anything; the
+        // arms then interleave-free on the same warm service so the only
+        // difference is the armed span recorder.
+        let _ = service_wall_ns_per_query(&svc, per_rep, 31);
+        let off: Vec<f64> = (0..reps)
+            .map(|r| service_wall_ns_per_query(&svc, per_rep, 41 + r as u64))
+            .collect();
+        svc.obs.configure(fastk::obs::ObsConfig {
+            trace_sample_n: 64,
+            ..Default::default()
+        });
+        let _ = service_wall_ns_per_query(&svc, per_rep, 31);
+        let on: Vec<f64> = (0..reps)
+            .map(|r| service_wall_ns_per_query(&svc, per_rep, 61 + r as u64))
+            .collect();
+        results.push(BenchResult {
+            name: "trace_off".to_string(),
+            iterations: reps * per_rep,
+            summary: Summary::from_samples(&off),
+        });
+        results.push(BenchResult {
+            name: "trace_on".to_string(),
+            iterations: reps * per_rep,
+            summary: Summary::from_samples(&on),
+        });
+        failed |= gate_not_slower(
+            &results,
+            "trace_off",
+            "trace_on",
+            1.03,
+            enforce,
+            "span-recording overhead (tracing on vs off)",
+        );
+    }
+
+    banner("online recall auditor: measured vs Theorem-1 predicted recall");
+    {
+        let (an, anq) = if smoke { (1024usize, 40usize) } else { (4096usize, 400usize) };
+        let buckets = 128u64;
+        let local_k = 2u64;
+        let plan = fastk::plan::plan_fixed(
+            1,
+            an as u64,
+            K as u64,
+            buckets,
+            local_k,
+            fastk::store::Dtype::F32,
+            D as u64,
+            fastk::plan::PlanSource::Manual,
+        )
+        .expect("bucketed plan");
+        let predicted = plan.predicted_recall;
+        let mut rng = Rng::new(5);
+        let db: Vec<f32> = (0..an * D).map(|_| rng.next_gaussian() as f32).collect();
+        let oracle = vec![fastk::store::ShardData::F32(
+            fastk::store::RowSource::from_vec(db.clone()),
+        )];
+        let params =
+            fastk::topk::TwoStageParams::new(an, K, buckets as usize, local_k as usize);
+        let factory: BackendFactory = Box::new(move || {
+            Ok(Box::new(NativeBackend::new(db, D, K, Some(params))) as Box<dyn ShardBackend>)
+        });
+        let svc = std::sync::Arc::new(
+            MipsService::start(
+                ServiceConfig {
+                    d: D,
+                    k: K,
+                    batcher: BatcherConfig {
+                        max_batch: 8,
+                        max_delay: BATCH_DEADLINE,
+                        policy: BatchPolicy::Adaptive,
+                    },
+                    plan: Some(plan),
+                },
+                vec![factory],
+                vec![0],
+            )
+            .expect("service starts"),
+        );
+        let auditor = fastk::obs::RecallAuditor::spawn(
+            fastk::obs::AuditConfig {
+                d: D,
+                k: K,
+                target: f64::NAN,
+                stage1: "bucketed".to_string(),
+                dtype: "f32le".to_string(),
+                armed_epoch: 0,
+                min_n: 30,
+            },
+            oracle,
+            vec![0],
+        );
+        svc.obs.install_audit(auditor.tx.clone());
+        svc.metrics.set_audit(auditor.shared.clone());
+        svc.obs.configure(fastk::obs::ObsConfig {
+            audit_sample_n: 1,
+            audit_seed: 7,
+            ..Default::default()
+        });
+        let _ = service_wall_ns_per_query(&svc, anq, 77);
+        // Auditing is asynchronous: wait for the queue to drain.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while auditor.shared.samples() < anq as u64 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(10));
+        }
+        let samples = auditor.shared.samples();
+        let measured = auditor.shared.measured_recall();
+        let sem = auditor.shared.measured_sem();
+        let tol = 1.96 * if sem.is_finite() { sem } else { 0.0 } + 0.03;
+        println!(
+            "acceptance: audited {samples}/{anq} queries, measured recall {measured:.4} \
+             vs Theorem-1 predicted {predicted:.4} (tolerance {tol:.4})"
+        );
+        results.push(BenchResult {
+            name: "audit_recall_measured".to_string(),
+            iterations: samples as usize,
+            summary: Summary::from_samples(&[measured]),
+        });
+        results.push(BenchResult {
+            name: "audit_recall_predicted".to_string(),
+            iterations: 1,
+            summary: Summary::from_samples(&[predicted]),
+        });
+        if samples < anq as u64 {
+            eprintln!("FAIL: auditor drained only {samples}/{anq} samples");
+            failed |= enforce;
+        } else if (measured - predicted).abs() > tol {
+            eprintln!(
+                "FAIL: measured recall {measured:.4} disagrees with the Theorem-1 \
+                 prediction {predicted:.4} beyond its confidence interval"
+            );
+            failed |= enforce;
+        }
+    }
 
     maybe_write_json("serve_load", &results);
     if failed {

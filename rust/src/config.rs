@@ -145,6 +145,27 @@ pub struct LauncherConfig {
     /// `{"cmd": "shutdown"}`. `None` (or JSON `null`): no listener; serve
     /// runs its synthetic open-loop load and exits.
     pub listen: Option<String>,
+    /// Trace every Nth served query into the bounded trace ring (drained
+    /// by the net `trace` verb). 0 (default): no periodic sampling. Spans
+    /// are recorded only while sampling or the slow-query gate is armed,
+    /// so the default serve path pays nothing.
+    pub trace_sample_n: u64,
+    /// Additionally trace every query slower than this many microseconds
+    /// end-to-end (the slow-query log). 0 (default): no slow gate.
+    pub slow_query_us: u64,
+    /// Re-check every Nth served query against the exact oracle on a
+    /// background auditor thread (the online recall auditor; measured
+    /// recall shows up in `stats`/`metrics` next to the plan's
+    /// prediction). 0 (default): no auditing.
+    pub audit_sample_n: u64,
+    /// Seed for the auditor's deterministic query sampler (`splitmix64`
+    /// over the query index), so two runs audit the same query stream.
+    pub audit_seed: u64,
+    /// Optional plain-HTTP listener serving only the Prometheus
+    /// exposition (`"metrics_listen": "127.0.0.1:9469"`), for scrapers
+    /// that cannot speak the JSON-lines protocol. The same text is always
+    /// available via the net `metrics` verb.
+    pub metrics_listen: Option<String>,
     pub artifact: Option<String>,
     pub artifact_dir: String,
     pub seed: u64,
@@ -173,6 +194,11 @@ impl Default for LauncherConfig {
             dtype: Dtype::F32,
             store: None,
             listen: None,
+            trace_sample_n: 0,
+            slow_query_us: 0,
+            audit_sample_n: 0,
+            audit_seed: 0,
+            metrics_listen: None,
             artifact: None,
             artifact_dir: "artifacts".to_string(),
             seed: 42,
@@ -318,6 +344,21 @@ impl LauncherConfig {
                 );
             }
         }
+        c.trace_sample_n = usize_field("trace_sample_n", c.trace_sample_n as usize)? as u64;
+        c.slow_query_us = usize_field("slow_query_us", c.slow_query_us as usize)? as u64;
+        c.audit_sample_n = usize_field("audit_sample_n", c.audit_sample_n as usize)? as u64;
+        if let Some(v) = j.get("audit_seed") {
+            c.audit_seed = v.as_i64().context("audit_seed must be an integer")? as u64;
+        }
+        if let Some(v) = j.get("metrics_listen") {
+            if *v != Json::Null {
+                c.metrics_listen = Some(
+                    v.as_str()
+                        .context("metrics_listen must be a string address (or null)")?
+                        .to_string(),
+                );
+            }
+        }
         if let Some(v) = j.get("backend") {
             c.backend = match v.as_str() {
                 Some("native") => BackendKind::Native,
@@ -384,6 +425,9 @@ impl LauncherConfig {
         }
         if let Some(addr) = &self.listen {
             anyhow::ensure!(!addr.is_empty(), "listen must not be empty");
+        }
+        if let Some(addr) = &self.metrics_listen {
+            anyhow::ensure!(!addr.is_empty(), "metrics_listen must not be empty");
         }
         if self.backend == BackendKind::Pjrt {
             anyhow::ensure!(
@@ -554,6 +598,17 @@ impl LauncherConfig {
             (
                 "listen",
                 self.listen
+                    .as_ref()
+                    .map(|a| Json::str(a))
+                    .unwrap_or(Json::Null),
+            ),
+            ("trace_sample_n", Json::num(self.trace_sample_n as f64)),
+            ("slow_query_us", Json::num(self.slow_query_us as f64)),
+            ("audit_sample_n", Json::num(self.audit_sample_n as f64)),
+            ("audit_seed", Json::num(self.audit_seed as f64)),
+            (
+                "metrics_listen",
+                self.metrics_listen
                     .as_ref()
                     .map(|a| Json::str(a))
                     .unwrap_or(Json::Null),
@@ -945,6 +1000,43 @@ mod tests {
         // Round-trips through to_json (None as null, Some as string).
         let c2 = LauncherConfig::from_json(&c.to_json().to_string()).unwrap();
         assert_eq!(c2.listen, c.listen);
+    }
+
+    #[test]
+    fn parses_observability_knobs() {
+        // Everything off by default: the serve hot path pays nothing.
+        let d = LauncherConfig::from_json("{}").unwrap();
+        assert_eq!(d.trace_sample_n, 0);
+        assert_eq!(d.slow_query_us, 0);
+        assert_eq!(d.audit_sample_n, 0);
+        assert_eq!(d.audit_seed, 0);
+        assert!(d.metrics_listen.is_none());
+        let c = LauncherConfig::from_json(
+            r#"{"trace_sample_n": 64, "slow_query_us": 5000,
+                "audit_sample_n": 100, "audit_seed": 9,
+                "metrics_listen": "127.0.0.1:0"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.trace_sample_n, 64);
+        assert_eq!(c.slow_query_us, 5000);
+        assert_eq!(c.audit_sample_n, 100);
+        assert_eq!(c.audit_seed, 9);
+        assert_eq!(c.metrics_listen.as_deref(), Some("127.0.0.1:0"));
+        // Malformed knobs are loud config errors.
+        assert!(LauncherConfig::from_json(r#"{"trace_sample_n": -1}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"slow_query_us": "fast"}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"audit_sample_n": 0.5}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"metrics_listen": 9469}"#).is_err());
+        assert!(LauncherConfig::from_json(r#"{"metrics_listen": ""}"#).is_err());
+        // Round-trips through to_json (None as null, Some as string).
+        let c2 = LauncherConfig::from_json(&c.to_json().to_string()).unwrap();
+        assert_eq!(c2.trace_sample_n, 64);
+        assert_eq!(c2.slow_query_us, 5000);
+        assert_eq!(c2.audit_sample_n, 100);
+        assert_eq!(c2.audit_seed, 9);
+        assert_eq!(c2.metrics_listen, c.metrics_listen);
+        let d2 = LauncherConfig::from_json(&d.to_json().to_string()).unwrap();
+        assert!(d2.metrics_listen.is_none());
     }
 
     #[test]

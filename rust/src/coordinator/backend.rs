@@ -32,9 +32,11 @@
 //! [`from_data`]: NativeBackend::from_data
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::obs::{SpanSet, Stage};
 use crate::runtime::{CompiledArtifact, HostTensor};
 use crate::store::{quant, Dtype, RowSource, ShardData};
 use crate::topk::{
@@ -52,6 +54,21 @@ pub trait ShardBackend {
     /// Per-query top-k candidates with *shard-local* indices, canonical
     /// (descending) order.
     fn score_topk(&mut self, queries: &[f32], nq: usize) -> Result<Vec<Vec<Candidate>>>;
+    /// [`score_topk`](Self::score_topk) with per-stage wall-time spans
+    /// accumulated into `spans` (see [`crate::obs::Stage`]). Results must
+    /// be identical to `score_topk` — tracing may never change answers.
+    /// The default records nothing: backends that cannot split their
+    /// stages (e.g. the fused PJRT artifact) still serve traced batches,
+    /// they just contribute no span samples.
+    fn score_topk_spanned(
+        &mut self,
+        queries: &[f32],
+        nq: usize,
+        spans: &mut SpanSet,
+    ) -> Result<Vec<Vec<Candidate>>> {
+        let _ = spans;
+        self.score_topk(queries, nq)
+    }
     /// Vector dimensionality this backend expects.
     fn dim(&self) -> usize;
     /// Number of database vectors in the shard.
@@ -236,14 +253,31 @@ impl NativeBackend {
     }
 }
 
-impl ShardBackend for NativeBackend {
-    fn score_topk(&mut self, queries: &[f32], nq: usize) -> Result<Vec<Vec<Candidate>>> {
+impl NativeBackend {
+    /// The one scoring loop behind both trait entry points: when `spans`
+    /// is `Some`, per-stage nanoseconds are accumulated around the scoring
+    /// scratch fill (Stage-1 score), the operator run (Stage-1 select) and
+    /// the int8 rescore closure — with the rescore time subtracted back
+    /// out of the enclosing select span so the stages partition the work.
+    fn score_topk_impl(
+        &mut self,
+        queries: &[f32],
+        nq: usize,
+        spans: Option<&mut SpanSet>,
+    ) -> Result<Vec<Vec<Candidate>>> {
         anyhow::ensure!(queries.len() == nq * self.d, "bad query buffer");
+        let tracing = spans.is_some();
+        let (mut score_ns, mut select_ns, mut rescore_ns) = (0u64, 0u64, 0u64);
         let mut out = Vec::with_capacity(nq);
         let d = self.d;
         for qi in 0..nq {
             let q = &queries[qi * d..(qi + 1) * d];
+            let t0 = if tracing { Some(Instant::now()) } else { None };
             self.score_into_scratch(q);
+            if let Some(t0) = t0 {
+                score_ns += t0.elapsed().as_nanos() as u64;
+            }
+            let t1 = if tracing { Some(Instant::now()) } else { None };
             let top = match &mut self.operator {
                 Some(op) if self.database.needs_rescore() => {
                     // Exact f32 rescore of the Stage-1 survivors before
@@ -253,19 +287,61 @@ impl ShardBackend for NativeBackend {
                     let database = &self.database;
                     let kernel = self.kernel;
                     let rescore_row = &mut self.rescore_row;
-                    op.run_rescored(&self.scores_scratch, |c| {
+                    let mut rn = 0u64;
+                    let top = op.run_rescored(&self.scores_scratch, |c| {
+                        let t2 = if tracing { Some(Instant::now()) } else { None };
                         database.dequantize_row(d, c.index as usize, rescore_row);
                         let mut exact = 0.0f32;
                         kernel.score_tile(rescore_row, d, q, std::slice::from_mut(&mut exact));
                         c.value = exact;
-                    })
+                        if let Some(t2) = t2 {
+                            rn += t2.elapsed().as_nanos() as u64;
+                        }
+                    });
+                    rescore_ns += rn;
+                    if let Some(t1) = t1 {
+                        select_ns += (t1.elapsed().as_nanos() as u64).saturating_sub(rn);
+                    }
+                    top
                 }
-                Some(op) => op.run(&self.scores_scratch),
-                None => exact::topk_quickselect(&self.scores_scratch, self.k),
+                Some(op) => {
+                    let top = op.run(&self.scores_scratch);
+                    if let Some(t1) = t1 {
+                        select_ns += t1.elapsed().as_nanos() as u64;
+                    }
+                    top
+                }
+                None => {
+                    let top = exact::topk_quickselect(&self.scores_scratch, self.k);
+                    if let Some(t1) = t1 {
+                        select_ns += t1.elapsed().as_nanos() as u64;
+                    }
+                    top
+                }
             };
             out.push(top);
         }
+        if let Some(spans) = spans {
+            spans.add_ns(Stage::Stage1Score, score_ns);
+            spans.add_ns(Stage::Stage1Select, select_ns);
+            spans.add_ns(Stage::Rescore, rescore_ns);
+        }
         Ok(out)
+    }
+}
+
+impl ShardBackend for NativeBackend {
+    fn score_topk(&mut self, queries: &[f32], nq: usize) -> Result<Vec<Vec<Candidate>>> {
+        self.score_topk_impl(queries, nq, None)
+    }
+
+    fn score_topk_spanned(
+        &mut self,
+        queries: &[f32],
+        nq: usize,
+        spans: &mut SpanSet,
+    ) -> Result<Vec<Vec<Candidate>>> {
+        self.score_topk_impl(queries, nq, Some(spans))
     }
 
     fn dim(&self) -> usize {
@@ -517,6 +593,42 @@ impl ShardBackend for ParallelNativeBackend {
                 }
                 let rows: Vec<&[f32]> = scores.chunks(n).take(nq).collect();
                 Ok(operator.run_batch(&rows))
+            }
+        }
+    }
+
+    fn score_topk_spanned(
+        &mut self,
+        queries: &[f32],
+        nq: usize,
+        spans: &mut SpanSet,
+    ) -> Result<Vec<Vec<Candidate>>> {
+        anyhow::ensure!(queries.len() == nq * self.d, "bad query buffer");
+        let d = self.d;
+        let n = self.n;
+        let kernel = self.kernel;
+        match &mut self.engine {
+            // The fused engine splits its own stages: pool workers
+            // fetch-add score/select/rescore time into the shared sink and
+            // the Stage-2 merge is timed on this (shard) thread.
+            ParallelEngine::Fused(engine) => Ok(engine.run_batch_spanned(queries, nq, spans)),
+            ParallelEngine::Unfused { operator, scores } => {
+                let ShardData::F32(db_rows) = &self.database else {
+                    unreachable!("unfused pipeline constructed over quantized rows");
+                };
+                let t0 = Instant::now();
+                scores.resize(nq * n, 0.0);
+                for qi in 0..nq {
+                    let q = &queries[qi * d..(qi + 1) * d];
+                    let row = &mut scores[qi * n..(qi + 1) * n];
+                    kernel.score_tile(db_rows.rows(), d, q, row);
+                }
+                spans.add_ns(Stage::Stage1Score, t0.elapsed().as_nanos() as u64);
+                let t1 = Instant::now();
+                let rows: Vec<&[f32]> = scores.chunks(n).take(nq).collect();
+                let out = operator.run_batch(&rows);
+                spans.add_ns(Stage::Stage1Select, t1.elapsed().as_nanos() as u64);
+                Ok(out)
             }
         }
     }
@@ -1101,6 +1213,89 @@ mod tests {
             NativeBackend::from_data(data, d, 4, None, SimdKernel::scalar())
         });
         assert!(r.is_err(), "exact + quantized must be rejected at construction");
+    }
+
+    #[test]
+    fn spanned_scoring_is_bit_identical_and_partitions_stages() {
+        // Tracing may never change answers: for every native path and
+        // encoding, score_topk_spanned returns exactly what score_topk
+        // returns, and populates the stages that path actually runs.
+        let d = 16;
+        let n = 2048;
+        let k = 32;
+        let mut rng = Rng::new(95);
+        let db = make_db(&mut rng, n, d);
+        let params = TwoStageParams::new(n, k, 128, 2);
+        let nq = 4;
+        let queries: Vec<f32> = (0..nq * d).map(|_| rng.next_gaussian() as f32).collect();
+        // Sequential f32: score + select, no rescore.
+        let mut seq = NativeBackend::new(db.clone(), d, k, Some(params));
+        let want = seq.score_topk(&queries, nq).unwrap();
+        let mut spans = SpanSet::new();
+        assert_eq!(seq.score_topk_spanned(&queries, nq, &mut spans).unwrap(), want);
+        assert!(spans.get_ns(Stage::Stage1Score) > 0, "sequential records scoring");
+        assert!(spans.get_ns(Stage::Stage1Select) > 0, "sequential records selection");
+        assert_eq!(spans.get_ns(Stage::Rescore), 0, "f32 path never rescores");
+        // Sequential int8: the rescore stage shows up and partitions out
+        // of the select span.
+        let data = ShardData::quantize_f32(
+            RowSource::from_vec(db.clone()),
+            d,
+            Dtype::I8,
+        )
+        .unwrap();
+        let mut i8be =
+            NativeBackend::from_data(data.clone(), d, k, Some(params), SimdKernel::scalar());
+        let want_i8 = i8be.score_topk(&queries, nq).unwrap();
+        let mut spans = SpanSet::new();
+        assert_eq!(i8be.score_topk_spanned(&queries, nq, &mut spans).unwrap(), want_i8);
+        assert!(spans.get_ns(Stage::Rescore) > 0, "int8 path records the rescore");
+        // Fused and unfused parallel paths.
+        for fused in [true, false] {
+            let mut be = ParallelNativeBackend::with_options(
+                db.clone(),
+                d,
+                k,
+                params,
+                EngineOptions {
+                    threads: 2,
+                    fused,
+                    ..EngineOptions::default()
+                },
+            );
+            let mut spans = SpanSet::new();
+            assert_eq!(
+                be.score_topk_spanned(&queries, nq, &mut spans).unwrap(),
+                want,
+                "fused={fused}"
+            );
+            assert!(spans.get_ns(Stage::Stage1Score) > 0, "fused={fused} scoring span");
+            assert!(spans.get_ns(Stage::Stage1Select) > 0, "fused={fused} select span");
+            if fused {
+                // The fused engine also times the shard-local Stage-2 merge.
+                assert!(spans.get_ns(Stage::Stage2Merge) > 0, "fused merge span");
+            }
+            // A traced batch leaves no residue: the next untraced batch
+            // still matches, and a fresh spanned run matches again (the
+            // shared sink was drained).
+            assert_eq!(be.score_topk(&queries, nq).unwrap(), want, "fused={fused}");
+            let mut again = SpanSet::new();
+            assert_eq!(
+                be.score_topk_spanned(&queries, nq, &mut again).unwrap(),
+                want,
+                "fused={fused}"
+            );
+        }
+        // The exact (no Stage 1) backend times its quickselect as the
+        // select stage — the stats surface stays meaningful for oracles.
+        let mut oracle = NativeBackend::exact(db, d, k);
+        let want_exact = oracle.score_topk(&queries, nq).unwrap();
+        let mut spans = SpanSet::new();
+        assert_eq!(
+            oracle.score_topk_spanned(&queries, nq, &mut spans).unwrap(),
+            want_exact
+        );
+        assert!(spans.get_ns(Stage::Stage1Select) > 0, "exact path times quickselect");
     }
 
     #[test]

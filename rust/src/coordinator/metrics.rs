@@ -1,15 +1,30 @@
 //! Service metrics: request latency, batch sizes, throughput, shard
 //! failures, the serve plan the deployment is running under, the SIMD
-//! dispatch kernel its native shards resolved at startup, and — for
-//! store-backed deployments — the identity and open cost of the shard
-//! store the rows are served from.
+//! dispatch kernel its native shards resolved at startup, per-stage
+//! per-shard span histograms, and — for store-backed deployments — the
+//! identity and open cost of the shard store the rows are served from.
+//!
+//! Every reader goes through one registry walk: [`ServiceMetrics::snapshot`]
+//! clones the whole state into a [`MetricsSnapshot`], and the human
+//! `summary()` line, the net-protocol `stats` reply
+//! ([`MetricsSnapshot::to_stats_json`]) and the Prometheus text exposition
+//! ([`crate::obs::prom::render`]) are all views of that same snapshot — a
+//! field added to the snapshot either shows up everywhere or fails the
+//! drift test in `obs::prom`.
 
-use std::sync::Mutex;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::{AuditShared, AuditSnapshot, Observability, SpanSet, Stage, TraceCounters};
 use crate::plan::ServePlan;
 use crate::store::StoreInfo;
+use crate::util::json::Json;
 use crate::util::stats::{fmt_ns, LatencyHistogram, Welford};
+
+/// Pseudo-shard id for service-level stages (cross-shard merge, reply
+/// write) in the per-stage span histograms.
+pub const SERVICE_SHARD: u32 = u32::MAX;
 
 /// Thread-safe service metrics.
 #[derive(Debug)]
@@ -30,6 +45,8 @@ struct Inner {
     batch_sizes: Welford,
     requests: u64,
     batches: u64,
+    /// Queries carried by those batches (`Σ batch size`).
+    batched_queries: u64,
     /// Shard scatter/score failures (one count per shard per batch it
     /// failed to answer).
     shard_failures: u64,
@@ -62,6 +79,17 @@ struct Inner {
     /// Per-shard rolled-back reload attempts (replacement failed to open,
     /// validate, or construct; the old epoch kept serving).
     rollbacks: Vec<u64>,
+    /// Per-stage span histograms keyed `(stage slot, shard, epoch)` —
+    /// [`SERVICE_SHARD`] holds the service-level stages. BTreeMap so
+    /// snapshots (and the Prometheus series derived from them) come out
+    /// in a stable order, and so recording into an existing key never
+    /// allocates (the hot path after warmup).
+    stage: BTreeMap<(u8, u32, u64), LatencyHistogram>,
+    /// Trace/audit counter source, installed by the service at start.
+    obs: Option<Arc<Observability>>,
+    /// Live recall estimates, installed by the launcher when the online
+    /// auditor is armed.
+    audit: Option<Arc<AuditShared>>,
 }
 
 fn grow(v: &mut Vec<u64>, shard: usize, fill: u64) {
@@ -86,6 +114,7 @@ impl ServiceMetrics {
                 batch_sizes: Welford::new(),
                 requests: 0,
                 batches: 0,
+                batched_queries: 0,
                 shard_failures: 0,
                 degraded_requests: 0,
                 failed_requests: 0,
@@ -98,6 +127,9 @@ impl ServiceMetrics {
                 shard_epochs: Vec::new(),
                 reloads: Vec::new(),
                 rollbacks: Vec::new(),
+                stage: BTreeMap::new(),
+                obs: None,
+                audit: None,
             }),
             started: Instant::now(),
         }
@@ -188,6 +220,38 @@ impl ServiceMetrics {
         let mut m = self.inner.lock().unwrap();
         m.batch_sizes.push(size as f64);
         m.batches += 1;
+        m.batched_queries += size as u64;
+    }
+
+    /// Fold one batch's span breakdown for one shard (or [`SERVICE_SHARD`]
+    /// for the service-level merge/reply stages) into the per-stage
+    /// histograms keyed `(shard, epoch)`. Zero-valued stages are skipped so
+    /// a shard that never rescores never grows a rescore series. After the
+    /// first batch per key, this allocates nothing.
+    pub fn record_stage_spans(&self, shard: u32, epoch: u64, spans: &SpanSet) {
+        let mut m = self.inner.lock().unwrap();
+        for stage in Stage::ALL {
+            let ns = spans.get_ns(stage);
+            if ns == 0 {
+                continue;
+            }
+            m.stage
+                .entry((stage.index() as u8, shard, epoch))
+                .or_default()
+                .record_ns(ns);
+        }
+    }
+
+    /// Install the observability hub whose trace/audit counters ride along
+    /// in the snapshot. Called once by `MipsService::start`.
+    pub fn set_obs(&self, obs: Arc<Observability>) {
+        self.inner.lock().unwrap().obs = Some(obs);
+    }
+
+    /// Install the online recall auditor's shared estimates (the launcher
+    /// arms this when `audit_sample_n` > 0).
+    pub fn set_audit(&self, audit: Arc<AuditShared>) {
+        self.inner.lock().unwrap().audit = Some(audit);
     }
 
     /// Record the serve plan this deployment runs under (shown in
@@ -277,43 +341,154 @@ impl ServiceMetrics {
         self.inner.lock().unwrap().latency.mean_ns()
     }
 
-    /// One-line human-readable summary.
+    /// The single registry walk every reader shares: clone the whole state
+    /// (plus the trace counters and audit estimates, read outside the
+    /// metrics lock) into one point-in-time view.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let (mut snap, obs, audit) = {
+            let m = self.inner.lock().unwrap();
+            let stages = m
+                .stage
+                .iter()
+                .map(|(&(slot, shard, epoch), hist)| StageHist {
+                    stage: Stage::ALL[slot as usize],
+                    shard,
+                    epoch,
+                    hist: hist.clone(),
+                })
+                .collect();
+            (
+                MetricsSnapshot {
+                    requests: m.requests,
+                    batches: m.batches,
+                    batched_queries: m.batched_queries,
+                    mean_batch: m.batch_sizes.mean(),
+                    latency: m.latency.clone(),
+                    queue_latency: m.queue_latency.clone(),
+                    service_latency: m.service_latency.clone(),
+                    shard_failures: m.shard_failures,
+                    degraded_requests: m.degraded_requests,
+                    failed_requests: m.failed_requests,
+                    overloaded: m.overloaded,
+                    plan: m.plan,
+                    kernel: m.kernel,
+                    stage1: m.stage1,
+                    store: m.store.clone(),
+                    epoch: m.epoch,
+                    shard_epochs: m.shard_epochs.clone(),
+                    reloads: m.reloads.iter().sum(),
+                    rollbacks: m.rollbacks.iter().sum(),
+                    stages,
+                    trace: None,
+                    audit: None,
+                },
+                m.obs.clone(),
+                m.audit.clone(),
+            )
+        };
+        snap.trace = obs.map(|o| o.counters());
+        snap.audit = audit.map(|a| a.snapshot());
+        snap
+    }
+
+    /// One-line human-readable summary (a view of [`snapshot`]).
+    ///
+    /// [`snapshot`]: ServiceMetrics::snapshot
     pub fn summary(&self) -> String {
-        let m = self.inner.lock().unwrap();
+        self.snapshot().summary_line()
+    }
+}
+
+/// One per-stage latency series: `(stage, shard, epoch)` and its
+/// histogram. `shard == `[`SERVICE_SHARD`] is the service level.
+#[derive(Debug, Clone)]
+pub struct StageHist {
+    pub stage: Stage,
+    pub shard: u32,
+    pub epoch: u64,
+    pub hist: LatencyHistogram,
+}
+
+/// Point-in-time clone of every metric the service keeps. The summary
+/// line, the `stats` verb and the Prometheus exposition are all rendered
+/// from this one struct.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_queries: u64,
+    pub mean_batch: f64,
+    pub latency: LatencyHistogram,
+    pub queue_latency: LatencyHistogram,
+    pub service_latency: LatencyHistogram,
+    pub shard_failures: u64,
+    pub degraded_requests: u64,
+    pub failed_requests: u64,
+    pub overloaded: u64,
+    pub plan: Option<ServePlan>,
+    pub kernel: Option<&'static str>,
+    pub stage1: Option<&'static str>,
+    pub store: Option<StoreInfo>,
+    pub epoch: u64,
+    pub shard_epochs: Vec<u64>,
+    pub reloads: u64,
+    pub rollbacks: u64,
+    /// Per-stage histograms in stable `(stage, shard, epoch)` order.
+    pub stages: Vec<StageHist>,
+    /// Trace/audit-pipeline counters (present once the service installed
+    /// its observability hub).
+    pub trace: Option<TraceCounters>,
+    /// Online recall estimates (present once the auditor is armed).
+    pub audit: Option<AuditSnapshot>,
+}
+
+/// `{"p50_us", "p99_us", "p999_us"}` of a histogram. Empty histograms
+/// report NaN, which is not representable in JSON: null.
+pub(crate) fn hist_json(h: &LatencyHistogram) -> Json {
+    Json::obj(vec![
+        ("p50_us", Json::num_or_null(h.percentile_ns(0.50) / 1_000.0)),
+        ("p99_us", Json::num_or_null(h.percentile_ns(0.99) / 1_000.0)),
+        ("p999_us", Json::num_or_null(h.percentile_ns(0.999) / 1_000.0)),
+    ])
+}
+
+impl MetricsSnapshot {
+    /// The `summary()` line, rendered from the snapshot.
+    pub fn summary_line(&self) -> String {
         let mut s = format!(
             "requests={} batches={} mean_batch={:.2} lat(mean={} p50={} p99={} p999={}) \
              queue(p50={} p99={}) service(p50={} p99={}) \
              shard_failures={} degraded={} failed={} overloaded={}",
-            m.requests,
-            m.batches,
-            m.batch_sizes.mean(),
-            fmt_ns(m.latency.mean_ns()),
-            fmt_ns(m.latency.percentile_ns(0.5)),
-            fmt_ns(m.latency.percentile_ns(0.99)),
-            fmt_ns(m.latency.percentile_ns(0.999)),
-            fmt_ns(m.queue_latency.percentile_ns(0.5)),
-            fmt_ns(m.queue_latency.percentile_ns(0.99)),
-            fmt_ns(m.service_latency.percentile_ns(0.5)),
-            fmt_ns(m.service_latency.percentile_ns(0.99)),
-            m.shard_failures,
-            m.degraded_requests,
-            m.failed_requests,
-            m.overloaded,
+            self.requests,
+            self.batches,
+            self.mean_batch,
+            fmt_ns(self.latency.mean_ns()),
+            fmt_ns(self.latency.percentile_ns(0.5)),
+            fmt_ns(self.latency.percentile_ns(0.99)),
+            fmt_ns(self.latency.percentile_ns(0.999)),
+            fmt_ns(self.queue_latency.percentile_ns(0.5)),
+            fmt_ns(self.queue_latency.percentile_ns(0.99)),
+            fmt_ns(self.service_latency.percentile_ns(0.5)),
+            fmt_ns(self.service_latency.percentile_ns(0.99)),
+            self.shard_failures,
+            self.degraded_requests,
+            self.failed_requests,
+            self.overloaded,
         );
-        if let Some(k) = m.kernel {
+        if let Some(k) = self.kernel {
             s.push_str(&format!(" kernel={k}"));
         }
-        if let Some(a) = m.stage1 {
+        if let Some(a) = self.stage1 {
             s.push_str(&format!(" stage1={a}"));
         }
-        if let Some(st) = &m.store {
+        if let Some(st) = &self.store {
             s.push_str(&format!(
                 " store={} open={}",
                 st.describe(),
                 fmt_ns(st.open_us as f64 * 1e3)
             ));
         }
-        if let Some(p) = &m.plan {
+        if let Some(p) = &self.plan {
             // Budget plans (rival Stage-1 algorithms) predict no recall.
             let recall = if p.predicted_recall.is_nan() {
                 "measured".to_string()
@@ -335,20 +510,182 @@ impl ServiceMetrics {
                 ));
             }
         }
-        let (reloads, rollbacks): (u64, u64) =
-            (m.reloads.iter().sum(), m.rollbacks.iter().sum());
-        if reloads > 0 || rollbacks > 0 {
+        if self.reloads > 0 || self.rollbacks > 0 {
             let epochs: Vec<String> =
-                m.shard_epochs.iter().map(|e| e.to_string()).collect();
+                self.shard_epochs.iter().map(|e| e.to_string()).collect();
             s.push_str(&format!(
                 " reload(epoch={} reloads={} rollbacks={} shard_epochs=[{}])",
-                m.epoch,
-                reloads,
-                rollbacks,
+                self.epoch,
+                self.reloads,
+                self.rollbacks,
                 epochs.join(",")
             ));
         }
+        if let Some(a) = &self.audit {
+            if a.samples > 0 {
+                s.push_str(&format!(
+                    " audit(samples={} measured_recall={:.4} alerts={})",
+                    a.samples, a.measured_recall, a.alerts
+                ));
+            }
+        }
         s
+    }
+
+    /// The net `stats` reply, minus the front end's own `"net"` object
+    /// (which `net.rs` inserts — the snapshot can't know connection
+    /// counts). Every field is add-only against PROTOCOL.md v1.
+    pub fn to_stats_json(&self) -> Json {
+        let stage_spans: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|sh| {
+                let shard = if sh.shard == SERVICE_SHARD {
+                    Json::str("service")
+                } else {
+                    Json::num(sh.shard as f64)
+                };
+                Json::obj(vec![
+                    ("stage", Json::str(sh.stage.as_str())),
+                    ("shard", shard),
+                    ("epoch", Json::num(sh.epoch as f64)),
+                    ("count", Json::num(sh.hist.count() as f64)),
+                    ("mean_us", Json::num_or_null(sh.hist.mean_ns() / 1_000.0)),
+                    (
+                        "p50_us",
+                        Json::num_or_null(sh.hist.percentile_ns(0.5) / 1_000.0),
+                    ),
+                    (
+                        "p99_us",
+                        Json::num_or_null(sh.hist.percentile_ns(0.99) / 1_000.0),
+                    ),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("stats", Json::str(&self.summary_line())),
+            ("requests", Json::num(self.requests as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("batched_queries", Json::num(self.batched_queries as f64)),
+            ("shard_failures", Json::num(self.shard_failures as f64)),
+            (
+                "degraded_requests",
+                Json::num(self.degraded_requests as f64),
+            ),
+            ("failed_requests", Json::num(self.failed_requests as f64)),
+            ("overloaded_rejects", Json::num(self.overloaded as f64)),
+            (
+                "latency",
+                Json::obj(vec![
+                    ("total", hist_json(&self.latency)),
+                    ("queue", hist_json(&self.queue_latency)),
+                    ("service", hist_json(&self.service_latency)),
+                ]),
+            ),
+            ("stage_spans", Json::Arr(stage_spans)),
+            (
+                "reload",
+                Json::obj(vec![
+                    ("epoch", Json::num(self.epoch as f64)),
+                    ("reloads", Json::num(self.reloads as f64)),
+                    ("rollbacks", Json::num(self.rollbacks as f64)),
+                    (
+                        "shard_epochs",
+                        Json::Arr(
+                            self.shard_epochs
+                                .iter()
+                                .map(|&e| Json::num(e as f64))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+        ];
+        if let Some(t) = &self.trace {
+            fields.push((
+                "trace",
+                Json::obj(vec![
+                    ("sampled", Json::num(t.sampled as f64)),
+                    ("slow", Json::num(t.slow as f64)),
+                    ("ring_dropped", Json::num(t.ring_dropped as f64)),
+                    ("audit_sent", Json::num(t.audit_sent as f64)),
+                    ("audit_dropped", Json::num(t.audit_dropped as f64)),
+                ]),
+            ));
+        }
+        if let Some(a) = &self.audit {
+            let keys: Vec<Json> = a
+                .keys
+                .iter()
+                .map(|k| {
+                    Json::obj(vec![
+                        ("stage1", Json::str(&k.stage1)),
+                        ("dtype", Json::str(&k.dtype)),
+                        ("epoch", Json::num(k.epoch as f64)),
+                        ("n", Json::num(k.n as f64)),
+                        ("mean", Json::num_or_null(k.mean)),
+                        ("sem", Json::num_or_null(k.sem)),
+                    ])
+                })
+                .collect();
+            fields.push((
+                "audit",
+                Json::obj(vec![
+                    ("samples", Json::num(a.samples as f64)),
+                    ("stale", Json::num(a.stale as f64)),
+                    ("alerts", Json::num(a.alerts as f64)),
+                    // NaN (no audited samples yet) is not representable in
+                    // JSON — null, same as predicted_recall.
+                    ("measured_recall", Json::num_or_null(a.measured_recall)),
+                    ("measured_sem", Json::num_or_null(a.measured_sem)),
+                    ("keys", Json::Arr(keys)),
+                ]),
+            ));
+        }
+        if let Some(k) = self.kernel {
+            fields.push(("kernel", Json::str(k)));
+        }
+        if let Some(a) = self.stage1 {
+            fields.push(("stage1", Json::str(a)));
+        }
+        if let Some(st) = &self.store {
+            fields.push((
+                "store",
+                Json::obj(vec![
+                    ("path", Json::str(&st.path)),
+                    ("version", Json::num(st.version as f64)),
+                    ("dtype", Json::str(st.dtype.as_str())),
+                    ("shards", Json::num(st.shards as f64)),
+                    ("shard_size", Json::num(st.shard_size as f64)),
+                    ("d", Json::num(st.d as f64)),
+                    ("mapped", Json::Bool(st.mapped)),
+                    ("open_us", Json::num(st.open_us as f64)),
+                    ("built", Json::Bool(st.built)),
+                ]),
+            ));
+        }
+        if let Some(p) = &self.plan {
+            fields.push((
+                "plan",
+                Json::obj(vec![
+                    ("shards", Json::num(p.shards as f64)),
+                    ("shard_size", Json::num(p.shard_size as f64)),
+                    ("k", Json::num(p.k as f64)),
+                    ("buckets", Json::num(p.buckets as f64)),
+                    ("local_k", Json::num(p.local_k as f64)),
+                    ("elements_per_shard", Json::num(p.num_elements() as f64)),
+                    // NaN (budget plans: recall measured, never predicted)
+                    // is not representable in JSON — emit null.
+                    ("predicted_recall", Json::num_or_null(p.predicted_recall)),
+                    ("per_shard_recall", Json::num_or_null(p.per_shard_recall)),
+                    ("source", Json::str(p.source.as_str())),
+                    ("dtype", Json::str(p.dtype.as_str())),
+                    ("quant_sigma", Json::num(p.quant_sigma)),
+                    ("inflation", Json::num(p.inflation())),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -528,5 +865,74 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("predicted_recall=measured"), "{s}");
         assert!(s.contains("source=budget"), "{s}");
+    }
+
+    #[test]
+    fn stage_spans_roll_up_per_shard_and_epoch() {
+        let m = ServiceMetrics::new();
+        let mut spans = SpanSet::new();
+        spans.add_ns(Stage::Stage1Score, 10_000);
+        spans.add_ns(Stage::Stage1Select, 2_000);
+        m.record_stage_spans(0, 0, &spans);
+        m.record_stage_spans(0, 0, &spans);
+        m.record_stage_spans(1, 0, &spans);
+        let mut merge_only = SpanSet::new();
+        merge_only.add_ns(Stage::Stage2Merge, 500);
+        m.record_stage_spans(SERVICE_SHARD, 0, &merge_only);
+        let snap = m.snapshot();
+        // 2 stages × 2 shards + 1 service-level stage = 5 series; zero
+        // stages (queue, rescore, reply) grew no series.
+        assert_eq!(snap.stages.len(), 5);
+        let s0 = snap
+            .stages
+            .iter()
+            .find(|s| s.stage == Stage::Stage1Score && s.shard == 0)
+            .unwrap();
+        assert_eq!(s0.hist.count(), 2);
+        let svc = snap
+            .stages
+            .iter()
+            .find(|s| s.shard == SERVICE_SHARD)
+            .unwrap();
+        assert_eq!(svc.stage, Stage::Stage2Merge);
+        assert_eq!(svc.hist.count(), 1);
+        // And the stats JSON renders the service pseudo-shard by name.
+        let j = snap.to_stats_json();
+        let arr = j.get("stage_spans").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 5);
+        assert!(arr
+            .iter()
+            .any(|e| e.get("shard").unwrap().as_str() == Some("service")));
+    }
+
+    #[test]
+    fn snapshot_carries_counters_and_stats_json_is_superset_of_summary() {
+        let m = ServiceMetrics::new();
+        m.set_shards(1);
+        m.record_batch(3);
+        m.record_request(Duration::from_micros(50), Duration::from_micros(5), false);
+        m.set_obs(Arc::new(Observability::new()));
+        m.set_audit(Arc::new(AuditShared::new()));
+        let snap = m.snapshot();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.batched_queries, 3);
+        assert!(snap.trace.is_some());
+        assert!(snap.audit.is_some());
+        let j = snap.to_stats_json();
+        assert_eq!(j.get("requests").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("batches").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("batched_queries").unwrap().as_i64(), Some(3));
+        assert_eq!(j.get("trace").unwrap().get("sampled").unwrap().as_i64(), Some(0));
+        let audit = j.get("audit").unwrap();
+        assert_eq!(audit.get("samples").unwrap().as_i64(), Some(0));
+        // No audited samples yet: null, never NaN.
+        assert_eq!(audit.get("measured_recall"), Some(&Json::Null));
+        // The embedded summary string is the same walk.
+        assert_eq!(
+            j.get("stats").unwrap().as_str().unwrap(),
+            snap.summary_line()
+        );
+        // An un-audited service keeps its summary clean.
+        assert!(!snap.summary_line().contains("audit("), "{}", snap.summary_line());
     }
 }

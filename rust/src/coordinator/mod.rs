@@ -58,7 +58,7 @@ pub use backend::{
 };
 pub use batcher::{BatchPolicy, BatcherConfig, DynamicBatcher};
 pub use merge::{merge_shard_results, ShardTopK};
-pub use metrics::ServiceMetrics;
+pub use metrics::{MetricsSnapshot, ServiceMetrics, StageHist, SERVICE_SHARD};
 pub use net::{Frontend, NetConfig, NetServer};
 pub use service::{
     MipsService, Query, ReloadFn, ReloadSource, ReloadSpec, ReplyFn, Response,

@@ -30,6 +30,25 @@
 //!              "quant_sigma": 0.0107, "inflation": 1.0, ...}}  (plan if one was made)
 //!              (budget plans — rival stage1 algorithms — report
 //!               "predicted_recall": null: recall is measured, not predicted)
+//!     (the stats object also carries add-only "requests", "batches",
+//!      "batched_queries" and "stage_spans" fields, plus "trace" /
+//!      "audit" blocks once tracing or the recall auditor are armed —
+//!      all generated from the one metrics registry in
+//!      [`crate::obs::prom`], so `stats` and the Prometheus exposition
+//!      cannot drift)
+//! -> {"cmd": "trace"}
+//! <- {"trace": [{"id": 3, "epoch": 0, "slow": false, "degraded": false,
+//!      "total_us": ..., "queue_us": ..., "merge_us": ..., "reply_us": ...,
+//!      "shards": [{"shard": 0, "queue": 0.0, "stage1_score": ..., ...}]}],
+//!     "dropped": 0}
+//!      (drains the sampled/slow trace ring — each retained query is
+//!       reported exactly once; armed by the `trace_sample_n` /
+//!       `slow_query_us` serve knobs)
+//! -> {"cmd": "metrics"}
+//! <- {"metrics": "# HELP fastk_requests_total ...\n..."}
+//!      (Prometheus text exposition, format 0.0.4 — the same snapshot
+//!       `stats` reads; also servable over plain HTTP via the
+//!       `metrics_listen` serve knob)
 //! -> {"cmd": "reload", "shard": 0, "store": "new.fastk"}
 //!      (or {"cmd": "reload", "shard": 0, "seed": 7, "shard_size": 2048})
 //! <- {"reloaded": true, "shard": 0, "epoch": 1}
@@ -295,6 +314,8 @@ impl Drop for NetServer {
 enum Request {
     Query { id: u64, vector: Vec<f32> },
     Stats,
+    Trace,
+    Metrics,
     Reload(ReloadSpec),
     Shutdown,
 }
@@ -304,6 +325,8 @@ fn parse_request(line: &str) -> anyhow::Result<Request> {
     if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
             "stats" => Ok(Request::Stats),
+            "trace" => Ok(Request::Trace),
+            "metrics" => Ok(Request::Metrics),
             "reload" => {
                 let shard = j
                     .get("shard")
@@ -385,38 +408,18 @@ fn query_reply_json(id: u64, res: anyhow::Result<Response>, t0: Instant) -> Json
     }
 }
 
-/// `{"p50_us", "p99_us", "p999_us"}` from a percentile accessor. Empty
-/// histograms report NaN, which is not representable in JSON: null.
-fn hist_json(pct: impl Fn(f64) -> f64) -> Json {
-    Json::obj(vec![
-        ("p50_us", Json::num_or_null(pct(0.50) / 1_000.0)),
-        ("p99_us", Json::num_or_null(pct(0.99) / 1_000.0)),
-        ("p999_us", Json::num_or_null(pct(0.999) / 1_000.0)),
-    ])
-}
-
+/// The `stats` reply: one metrics snapshot rendered to JSON by the shared
+/// registry walk ([`MetricsSnapshot::to_stats_json`] — the same snapshot
+/// the CLI summary line and the Prometheus exposition read, so the three
+/// surfaces cannot drift), plus this front end's own `net` block.
+///
+/// [`MetricsSnapshot::to_stats_json`]: super::metrics::MetricsSnapshot::to_stats_json
 fn stats_json(shared: &NetShared) -> Json {
-    let m = &shared.service.metrics;
     let cfg = &shared.config;
-    let mut fields = vec![
-        ("stats", Json::str(&m.summary())),
-        ("shard_failures", Json::num(m.shard_failures() as f64)),
-        ("degraded_requests", Json::num(m.degraded_requests() as f64)),
-        ("failed_requests", Json::num(m.failed_requests() as f64)),
-        (
-            "overloaded_rejects",
-            Json::num(m.overloaded_rejects() as f64),
-        ),
-        (
-            "latency",
-            Json::obj(vec![
-                ("total", hist_json(|q| m.latency_percentile_ns(q))),
-                ("queue", hist_json(|q| m.queue_percentile_ns(q))),
-                ("service", hist_json(|q| m.service_percentile_ns(q))),
-            ]),
-        ),
-        (
-            "net",
+    let mut j = shared.service.metrics.snapshot().to_stats_json();
+    if let Json::Obj(map) = &mut j {
+        map.insert(
+            "net".to_string(),
             Json::obj(vec![
                 ("frontend", Json::str(cfg.frontend.as_str())),
                 ("io_threads", Json::num(cfg.io_threads as f64)),
@@ -430,69 +433,32 @@ fn stats_json(shared: &NetShared) -> Json {
                     Json::num(shared.connections.load(Ordering::Relaxed) as f64),
                 ),
             ]),
-        ),
+        );
+    }
+    j
+}
+
+/// The `trace` reply: drain the sampled/slow trace ring. Draining is
+/// destructive by design — each retained query is reported exactly once,
+/// so a polling operator never double-counts a slow query.
+fn trace_json(service: &MipsService) -> Json {
+    let (entries, dropped) = service.obs.drain_traces();
+    Json::obj(vec![
         (
-            "reload",
-            Json::obj(vec![
-                ("epoch", Json::num(m.epoch() as f64)),
-                ("reloads", Json::num(m.reloads() as f64)),
-                ("rollbacks", Json::num(m.rollbacks() as f64)),
-                (
-                    "shard_epochs",
-                    Json::Arr(
-                        m.shard_epochs()
-                            .iter()
-                            .map(|&e| Json::num(e as f64))
-                            .collect(),
-                    ),
-                ),
-            ]),
+            "trace",
+            Json::Arr(entries.iter().map(|e| e.to_json()).collect()),
         ),
-    ];
-    if let Some(k) = m.kernel() {
-        fields.push(("kernel", Json::str(k)));
-    }
-    if let Some(a) = m.stage1() {
-        fields.push(("stage1", Json::str(a)));
-    }
-    if let Some(st) = m.store() {
-        fields.push((
-            "store",
-            Json::obj(vec![
-                ("path", Json::str(&st.path)),
-                ("version", Json::num(st.version as f64)),
-                ("dtype", Json::str(st.dtype.as_str())),
-                ("shards", Json::num(st.shards as f64)),
-                ("shard_size", Json::num(st.shard_size as f64)),
-                ("d", Json::num(st.d as f64)),
-                ("mapped", Json::Bool(st.mapped)),
-                ("open_us", Json::num(st.open_us as f64)),
-                ("built", Json::Bool(st.built)),
-            ]),
-        ));
-    }
-    if let Some(p) = m.plan() {
-        fields.push((
-            "plan",
-            Json::obj(vec![
-                ("shards", Json::num(p.shards as f64)),
-                ("shard_size", Json::num(p.shard_size as f64)),
-                ("k", Json::num(p.k as f64)),
-                ("buckets", Json::num(p.buckets as f64)),
-                ("local_k", Json::num(p.local_k as f64)),
-                ("elements_per_shard", Json::num(p.num_elements() as f64)),
-                // NaN (budget plans: recall measured, never predicted) is
-                // not representable in JSON — emit null.
-                ("predicted_recall", Json::num_or_null(p.predicted_recall)),
-                ("per_shard_recall", Json::num_or_null(p.per_shard_recall)),
-                ("source", Json::str(p.source.as_str())),
-                ("dtype", Json::str(p.dtype.as_str())),
-                ("quant_sigma", Json::num(p.quant_sigma)),
-                ("inflation", Json::num(p.inflation())),
-            ]),
-        ));
-    }
-    Json::obj(fields)
+        ("dropped", Json::num(dropped as f64)),
+    ])
+}
+
+/// The `metrics` reply: the Prometheus text exposition (format 0.0.4) as
+/// one string — generated from the same snapshot as `stats`.
+fn metrics_json(service: &MipsService) -> Json {
+    Json::obj(vec![(
+        "metrics",
+        Json::str(&crate::obs::prom::render(&service.metrics.snapshot())),
+    )])
 }
 
 /// A failed reload is a *rolled-back* outcome, not a protocol error:
@@ -617,6 +583,8 @@ fn handle_line_sync(line: &str, shared: &NetShared) -> Option<Json> {
     match parse_request(line) {
         Err(e) => Some(error_json(&format!("{e:#}"))),
         Ok(Request::Stats) => Some(stats_json(shared)),
+        Ok(Request::Trace) => Some(trace_json(&shared.service)),
+        Ok(Request::Metrics) => Some(metrics_json(&shared.service)),
         Ok(Request::Reload(spec)) => Some(reload_json(&shared.service, spec)),
         Ok(Request::Shutdown) => {
             shared.stop.store(true, Ordering::Relaxed);
@@ -778,6 +746,8 @@ fn dispatch_event(
     match parse_request(line) {
         Err(e) => c.push_json(&error_json(&format!("{e:#}"))),
         Ok(Request::Stats) => c.push_json(&stats_json(shared)),
+        Ok(Request::Trace) => c.push_json(&trace_json(&shared.service)),
+        Ok(Request::Metrics) => c.push_json(&metrics_json(&shared.service)),
         Ok(Request::Shutdown) => {
             shared.stop.store(true, Ordering::Relaxed);
             c.closing = true;
@@ -1271,6 +1241,95 @@ mod tests {
         let total = stats.get("latency").unwrap().get("total").unwrap();
         assert!(total.get("p50_us").unwrap().as_f64().unwrap() > 0.0);
         assert!(total.get("p999_us").unwrap().as_f64().unwrap() > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn trace_and_metrics_verbs_round_trip() {
+        let svc = tiny_service();
+        // Sample every query into the trace ring.
+        svc.obs.configure(crate::obs::ObsConfig {
+            trace_sample_n: 1,
+            ..Default::default()
+        });
+        let server = NetServer::start("127.0.0.1:0", svc.clone()).unwrap();
+        let conn = TcpStream::connect(server.addr).unwrap();
+        let mut w = conn.try_clone().unwrap();
+        let mut r = BufReader::new(conn);
+        let mut line = String::new();
+
+        // An idle ring drains to an empty array, never an error.
+        w.write_all(b"{\"cmd\": \"trace\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("trace").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(j.get("dropped").unwrap().as_i64(), Some(0));
+
+        line.clear();
+        w.write_all(b"{\"id\": 9, \"vector\": [1,1,1,1,1,1,1,1]}\n")
+            .unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("results").is_some());
+
+        // Retention follows the reply write by a hair, so the first drain
+        // can race it: poll until the entry lands.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let j = loop {
+            line.clear();
+            w.write_all(b"{\"cmd\": \"trace\"}\n").unwrap();
+            r.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            if !j.get("trace").unwrap().as_arr().unwrap().is_empty()
+                || std::time::Instant::now() > deadline
+            {
+                break j;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        };
+        let entries = j.get("trace").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 1, "sample-every-1 retains the query");
+        let e = &entries[0];
+        assert_eq!(e.get("id").unwrap().as_i64(), Some(9));
+        assert_eq!(e.get("slow").unwrap().as_bool(), Some(false));
+        assert!(e.get("total_us").unwrap().as_f64().unwrap() > 0.0);
+        let shards = e.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].get("shard").unwrap().as_i64(), Some(0));
+        // The exact backend spends its shard time scoring + selecting.
+        assert!(shards[0].get("stage1_score").unwrap().as_f64().is_some());
+        assert!(shards[0].get("stage1_select").unwrap().as_f64().is_some());
+
+        // Draining is destructive: a second poll starts empty.
+        line.clear();
+        w.write_all(b"{\"cmd\": \"trace\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("trace").unwrap().as_arr().unwrap().len(), 0);
+
+        // The metrics verb answers the Prometheus exposition built from the
+        // same registry snapshot the stats verb reads.
+        line.clear();
+        w.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        let text = j.get("metrics").unwrap().as_str().unwrap().to_string();
+        assert!(text.contains("# TYPE fastk_requests_total counter"), "{text}");
+        assert!(text.contains("fastk_requests_total 1"), "{text}");
+        assert!(text.contains("fastk_trace_sampled_total 1"), "{text}");
+        assert!(
+            text.contains("fastk_stage_us_bucket{stage=\"stage1_score\",shard=\"0\""),
+            "{text}"
+        );
+
+        // The stats reply carries the add-only registry fields too.
+        line.clear();
+        w.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let stats = Json::parse(&line).unwrap();
+        assert_eq!(stats.get("requests").unwrap().as_i64(), Some(1));
+        assert!(!stats.get("stage_spans").unwrap().as_arr().unwrap().is_empty());
+        let trace = stats.get("trace").unwrap();
+        assert_eq!(trace.get("sampled").unwrap().as_i64(), Some(1));
         server.shutdown();
     }
 

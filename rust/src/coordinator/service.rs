@@ -26,10 +26,12 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::obs::{AuditSample, Observability, ShardSpan, SpanSet, Stage, TraceEntry};
+
 use super::backend::BackendFactory;
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::merge::{merge_shard_results, ShardTopK};
-use super::metrics::ServiceMetrics;
+use super::metrics::{ServiceMetrics, SERVICE_SHARD};
 use super::shard::ShardHandle;
 
 /// One retrieval request.
@@ -149,6 +151,10 @@ pub type ReloadFn = Box<dyn Fn(&ReloadSpec) -> anyhow::Result<ShardReload> + Sen
 pub struct MipsService {
     tx: Sender<RouterMsg>,
     pub metrics: Arc<ServiceMetrics>,
+    /// Observability hub: tracing/audit knobs (all off by default — see
+    /// [`Observability::configure`]), the sampled trace ring, and the
+    /// audit queue. Shared with the router, which consults it per batch.
+    pub obs: Arc<Observability>,
     config: ServiceConfig,
     shards_total: usize,
     reloader: Mutex<Option<ReloadFn>>,
@@ -168,6 +174,8 @@ impl MipsService {
         anyhow::ensure!(backends.len() == shard_offsets.len());
         let shards_total = backends.len();
         let metrics = Arc::new(ServiceMetrics::new());
+        let obs = Arc::new(Observability::new());
+        metrics.set_obs(obs.clone());
         metrics.set_shards(shards_total);
         if let Some(plan) = config.plan {
             metrics.set_plan(plan);
@@ -198,6 +206,7 @@ impl MipsService {
 
         let (tx, rx): (Sender<RouterMsg>, Receiver<RouterMsg>) = channel();
         let m = metrics.clone();
+        let o = obs.clone();
         let cfg = config.clone();
         let router = std::thread::Builder::new()
             .name("fastk-router".into())
@@ -230,6 +239,7 @@ impl MipsService {
                             &shard_offsets,
                             queries,
                             &m,
+                            &o,
                             &mut shard_down,
                             epoch,
                         );
@@ -251,6 +261,7 @@ impl MipsService {
         Ok(MipsService {
             tx,
             metrics,
+            obs,
             config,
             shards_total,
             reloader: Mutex::new(None),
@@ -374,10 +385,16 @@ impl MipsService {
         shard_offsets: &[usize],
         batch: Vec<Pending>,
         metrics: &ServiceMetrics,
+        obs: &Observability,
         shard_down: &mut [bool],
         epoch: u64,
     ) {
         let nq = batch.len();
+        // Tracing/audit gates, resolved once per batch: with both off
+        // (the default) the only observability cost on this path is a few
+        // relaxed atomic loads and one fetch-add per query.
+        let tracing = obs.tracing_enabled();
+        let auditing = obs.audit_enabled();
         let dispatch_start = Instant::now();
         // Pack the query block once; shards share it via Arc.
         let mut block = Vec::with_capacity(nq * cfg.d);
@@ -393,7 +410,7 @@ impl MipsService {
         let mut submitted = vec![false; shards_total];
         let mut live = 0usize;
         for h in shards {
-            if h.submit(block.clone(), nq, reply_tx.clone()).is_ok() {
+            if h.submit_traced(block.clone(), nq, tracing, reply_tx.clone()).is_ok() {
                 submitted[h.shard] = true;
                 live += 1;
             } else {
@@ -411,6 +428,10 @@ impl MipsService {
         // candidate list.
         let mut replied = vec![false; shards_total];
         let mut per_shard_ok = Vec::with_capacity(live);
+        // Per-shard stage spans of this batch (traced batches only):
+        // rolled into the metrics histograms and attached to any trace
+        // entries retained below.
+        let mut shard_spans: Vec<ShardSpan> = Vec::new();
         for res in reply_rx {
             replied[res.shard] = true;
             match res.per_query {
@@ -418,6 +439,13 @@ impl MipsService {
                     if shard_down[res.shard] {
                         shard_down[res.shard] = false;
                         eprintln!("fastk: shard {} recovered", res.shard);
+                    }
+                    if tracing && !res.spans.is_empty() {
+                        metrics.record_stage_spans(res.shard as u32, epoch, &res.spans);
+                        shard_spans.push(ShardSpan {
+                            shard: res.shard as u32,
+                            spans: res.spans,
+                        });
                     }
                     per_shard_ok.push((res.shard, pq));
                 }
@@ -463,8 +491,11 @@ impl MipsService {
             return;
         }
 
-        // Merge + reply per query.
-        for (qi, p) in batch.into_iter().enumerate() {
+        // Merge + reply per query. Service-level stage time (queue wait,
+        // cross-shard merge, reply write) accumulates across the batch and
+        // is recorded once under the reserved SERVICE_SHARD series.
+        let mut svc_spans = SpanSet::new();
+        for (qi, mut p) in batch.into_iter().enumerate() {
             let lists: Vec<ShardTopK> = per_shard_ok
                 .iter()
                 .map(|(shard, pq)| ShardTopK {
@@ -472,20 +503,73 @@ impl MipsService {
                     candidates: pq[qi].clone(),
                 })
                 .collect();
+            let t_merge = if tracing { Some(Instant::now()) } else { None };
             let results = merge_shard_results(&lists, shard_offsets, cfg.k);
+            let merge_ns = t_merge.map_or(0, |t| t.elapsed().as_nanos() as u64);
+            // One query index per served query: drives both the every-Nth
+            // trace sampler and the deterministic audit pick.
+            let idx = if tracing || auditing { obs.next_index() } else { 0 };
+            let audit_served = if auditing && obs.audit_pick(idx) {
+                Some(results.iter().map(|&(i, _)| i as u32).collect::<Vec<u32>>())
+            } else {
+                None
+            };
+            let id = p.query.id;
+            let query_vec = if audit_served.is_some() {
+                // The packed block copied the vector already; the audit
+                // thread gets the original instead of a fresh clone.
+                std::mem::take(&mut p.query.vector)
+            } else {
+                Vec::new()
+            };
             let now = Instant::now();
+            let total = now - p.enqueued;
+            let queue = dispatch_start - p.enqueued;
             let resp = Response {
-                id: p.query.id,
+                id,
                 results,
                 degraded,
                 shards_answered,
                 shards_total,
                 epoch,
-                total_latency: now - p.enqueued,
-                queue_latency: dispatch_start - p.enqueued,
+                total_latency: total,
+                queue_latency: queue,
             };
-            metrics.record_request(resp.total_latency, resp.queue_latency, degraded);
+            metrics.record_request(total, queue, degraded);
+            let t_reply = if tracing { Some(Instant::now()) } else { None };
             (p.reply)(Ok(resp));
+            let reply_ns = t_reply.map_or(0, |t| t.elapsed().as_nanos() as u64);
+            if tracing {
+                let total_ns = total.as_nanos() as u64;
+                let queue_ns = queue.as_nanos() as u64;
+                svc_spans.add_ns(Stage::Queue, queue_ns);
+                svc_spans.add_ns(Stage::Stage2Merge, merge_ns);
+                svc_spans.add_ns(Stage::ReplyWrite, reply_ns);
+                let slow = obs.is_slow(total_ns);
+                if slow || obs.should_sample(idx) {
+                    obs.retain(TraceEntry {
+                        id,
+                        epoch,
+                        slow,
+                        degraded,
+                        total_ns,
+                        queue_ns,
+                        merge_ns,
+                        reply_ns,
+                        shards: shard_spans.clone(),
+                    });
+                }
+            }
+            if let Some(served) = audit_served {
+                obs.send_audit(AuditSample {
+                    query: query_vec,
+                    served,
+                    epoch,
+                });
+            }
+        }
+        if tracing && !svc_spans.is_empty() {
+            metrics.record_stage_spans(SERVICE_SHARD, epoch, &svc_spans);
         }
     }
 
@@ -1094,6 +1178,92 @@ mod tests {
             "no batching happened: {} batches for {n} requests",
             svc.metrics.batches()
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn traced_batches_populate_stage_histograms_and_the_trace_ring() {
+        let (svc, _) = build_service(4096, 4, 16, 16, true, 7);
+        svc.obs.configure(crate::obs::ObsConfig {
+            trace_sample_n: 1,
+            slow_query_us: 0,
+            audit_sample_n: 0,
+            audit_seed: 0,
+        });
+        let mut rng = Rng::new(55);
+        for id in 0..5u64 {
+            let q: Vec<f32> = (0..16).map(|_| rng.next_gaussian() as f32).collect();
+            svc.query(id, q).unwrap();
+        }
+        // Retention follows each reply by a hair: poll the (destructive)
+        // drain until all five entries land.
+        let mut traces = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while traces.len() < 5 && Instant::now() < deadline {
+            let (mut t, dropped) = svc.obs.drain_traces();
+            assert_eq!(dropped, 0);
+            traces.append(&mut t);
+            if traces.len() < 5 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        assert_eq!(traces.len(), 5, "sample-every-1 retains every query");
+        for t in &traces {
+            assert!(!t.slow, "no slow gate configured");
+            assert_eq!(t.epoch, 0);
+            assert!(!t.degraded);
+            assert_eq!(t.shards.len(), 4, "each trace carries every answering shard");
+            for s in &t.shards {
+                assert!(!s.spans.is_empty(), "shard {} spans", s.shard);
+            }
+            assert!(t.total_ns > 0);
+        }
+        let snap = svc.metrics.snapshot();
+        assert!(
+            snap.stages
+                .iter()
+                .any(|s| s.shard == SERVICE_SHARD && s.stage == Stage::Stage2Merge),
+            "service-level merge series exists"
+        );
+        assert!(
+            snap.stages
+                .iter()
+                .any(|s| s.shard == 0 && s.stage == Stage::Stage1Score),
+            "per-shard scoring series exists"
+        );
+        assert_eq!(snap.trace.unwrap().sampled, 5);
+        // Tracing off again: the ring stays empty and no new series form.
+        svc.obs.configure(crate::obs::ObsConfig::default());
+        svc.query(99, vec![0.5; 16]).unwrap();
+        let (traces, _) = svc.obs.drain_traces();
+        assert!(traces.is_empty(), "untraced queries are not retained");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn audit_sampler_ships_served_queries_to_the_installed_queue() {
+        let (svc, _) = build_service(512, 4, 8, 5, false, 3);
+        let (tx, rx) = std::sync::mpsc::sync_channel(64);
+        svc.obs.install_audit(tx);
+        svc.obs.configure(crate::obs::ObsConfig {
+            trace_sample_n: 0,
+            slow_query_us: 0,
+            audit_sample_n: 1,
+            audit_seed: 7,
+        });
+        let mut rng = Rng::new(99);
+        for id in 0..4u64 {
+            let q: Vec<f32> = (0..8).map(|_| rng.next_gaussian() as f32).collect();
+            let resp = svc.query(id, q.clone()).unwrap();
+            let sample = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(sample.query, q, "the auditor sees the original query vector");
+            assert_eq!(sample.epoch, 0);
+            let served: Vec<u32> = resp.results.iter().map(|&(i, _)| i as u32).collect();
+            assert_eq!(sample.served, served, "the auditor sees what was served");
+        }
+        let c = svc.obs.counters();
+        assert_eq!(c.audit_sent, 4);
+        assert_eq!(c.audit_dropped, 0);
         svc.shutdown();
     }
 

@@ -5,6 +5,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
+use crate::obs::SpanSet;
 use crate::topk::Candidate;
 
 use super::backend::{BackendFactory, ShardBackend};
@@ -14,6 +15,10 @@ struct ShardRequest {
     /// Row-major `[nq, d]` query block (shared across shards via Arc).
     queries: std::sync::Arc<Vec<f32>>,
     nq: usize,
+    /// Record per-stage spans for this batch (sampled tracing): the worker
+    /// calls [`ShardBackend::score_topk_spanned`] instead of plain
+    /// `score_topk` and ships the spans back in the [`ShardResult`].
+    trace: bool,
     reply: Sender<ShardResult>,
 }
 
@@ -23,6 +28,9 @@ pub struct ShardResult {
     pub shard: usize,
     /// Per-query top-k with shard-local indices.
     pub per_query: anyhow::Result<Vec<Vec<Candidate>>>,
+    /// Per-stage wall time this shard spent on the batch. All zeros unless
+    /// the request asked for tracing (checked via [`SpanSet::is_empty`]).
+    pub spans: SpanSet,
 }
 
 /// Handle to a running shard worker thread.
@@ -105,10 +113,15 @@ impl ShardHandle {
                     }
                 };
                 while let Ok(req) = rx.recv() {
-                    let per_query = backend.score_topk(&req.queries, req.nq);
+                    let mut spans = SpanSet::new();
+                    let per_query = if req.trace {
+                        backend.score_topk_spanned(&req.queries, req.nq, &mut spans)
+                    } else {
+                        backend.score_topk(&req.queries, req.nq)
+                    };
                     // The router may have given up (shutdown); ignore send
                     // failures.
-                    let _ = req.reply.send(ShardResult { shard, per_query });
+                    let _ = req.reply.send(ShardResult { shard, per_query, spans });
                 }
             })
             .expect("spawn shard thread");
@@ -137,8 +150,22 @@ impl ShardHandle {
         nq: usize,
         reply: Sender<ShardResult>,
     ) -> anyhow::Result<()> {
+        self.submit_traced(queries, nq, false, reply)
+    }
+
+    /// [`submit`](Self::submit) with an explicit tracing flag: when `trace`
+    /// is set the worker scores through
+    /// [`ShardBackend::score_topk_spanned`] and the reply's
+    /// [`ShardResult::spans`] carries this shard's per-stage wall time.
+    pub fn submit_traced(
+        &self,
+        queries: std::sync::Arc<Vec<f32>>,
+        nq: usize,
+        trace: bool,
+        reply: Sender<ShardResult>,
+    ) -> anyhow::Result<()> {
         self.tx
-            .send(ShardRequest { queries, nq, reply })
+            .send(ShardRequest { queries, nq, trace, reply })
             .map_err(|_| anyhow::anyhow!("shard {} worker is gone", self.shard))
     }
 }
@@ -178,6 +205,31 @@ mod tests {
         let per_query = res.per_query.unwrap();
         assert_eq!(per_query.len(), 2);
         assert_eq!(per_query[0].len(), 3);
+    }
+
+    #[test]
+    fn traced_submit_ships_spans_and_untraced_stays_empty() {
+        use crate::topk::TwoStageParams;
+        let d = 8;
+        let n = 256;
+        let k = 8;
+        let mut rng = Rng::new(3);
+        let db: Vec<f32> = (0..n * d).map(|_| rng.next_f32()).collect();
+        let params = TwoStageParams::new(n, k, 32, 1);
+        let h = ShardHandle::spawn_native(0, NativeBackend::new(db, d, k, Some(params)));
+        let queries = Arc::new(vec![1.0f32; 2 * d]);
+        let (reply_tx, reply_rx) = channel();
+        h.submit(queries.clone(), 2, reply_tx.clone()).unwrap();
+        let plain = reply_rx.recv().unwrap();
+        assert!(plain.spans.is_empty(), "untraced batches record nothing");
+        h.submit_traced(queries, 2, true, reply_tx).unwrap();
+        let traced = reply_rx.recv().unwrap();
+        assert!(!traced.spans.is_empty(), "traced batches carry spans");
+        assert_eq!(
+            traced.per_query.unwrap(),
+            plain.per_query.unwrap(),
+            "tracing never changes answers"
+        );
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod hw;
+pub mod obs;
 pub mod params;
 pub mod plan;
 pub mod runtime;

@@ -785,6 +785,81 @@ fn run_serve(cfg: &LauncherConfig, num_queries: usize) -> anyhow::Result<()> {
     }
     let svc = Arc::new(svc);
 
+    // Observability: arm the span sampler / slow-query gate (atomics on
+    // the service's hub — zero hot-path cost while every knob is 0).
+    svc.obs.configure(fastk::obs::ObsConfig {
+        trace_sample_n: cfg.trace_sample_n,
+        slow_query_us: cfg.slow_query_us,
+        audit_sample_n: cfg.audit_sample_n,
+        audit_seed: cfg.audit_seed,
+    });
+    if cfg.trace_sample_n > 0 || cfg.slow_query_us > 0 {
+        println!(
+            "tracing: sample every {} queries, slow-query gate {} \
+             (drain with {{\"cmd\": \"trace\"}})",
+            cfg.trace_sample_n,
+            if cfg.slow_query_us > 0 {
+                format!(">= {} us", cfg.slow_query_us)
+            } else {
+                "off".to_string()
+            }
+        );
+    }
+    // Online recall auditor: a background thread re-runs every Nth served
+    // query through the exact oracle (the same rows the shards score,
+    // dequantized) and keeps a live Welford recall estimate next to the
+    // plan's Theorem-1 prediction. For budget (radix/halving) plans this
+    // is the only recall signal.
+    let _auditor = if cfg.audit_sample_n > 0 {
+        let mut oracle_shards = Vec::with_capacity(cfg.shards);
+        for s in 0..cfg.shards {
+            oracle_shards.push(match &db_store {
+                Some(st) => st.shard_data(s),
+                None => ShardData::quantize_f32(
+                    RowSource::from_vec(store::generate_shard_rows(
+                        cfg.seed,
+                        s,
+                        cfg.shard_size,
+                        cfg.d,
+                    )),
+                    cfg.d,
+                    cfg.dtype,
+                )?,
+            });
+        }
+        let auditor = fastk::obs::RecallAuditor::spawn(
+            fastk::obs::AuditConfig {
+                d: cfg.d,
+                k: cfg.k,
+                target: cfg.recall_target,
+                stage1: cfg.stage1.as_str().to_string(),
+                dtype: cfg.dtype.as_str().to_string(),
+                armed_epoch: 0,
+                min_n: 30,
+            },
+            oracle_shards,
+            offsets.clone(),
+        );
+        svc.obs.install_audit(auditor.tx.clone());
+        svc.metrics.set_audit(auditor.shared.clone());
+        println!(
+            "recall auditor: every {}th served query vs the exact oracle \
+             (seed {}, target {})",
+            cfg.audit_sample_n, cfg.audit_seed, cfg.recall_target
+        );
+        Some(auditor)
+    } else {
+        None
+    };
+    // Optional plain-HTTP scrape endpoint for the same Prometheus text the
+    // net `metrics` verb serves.
+    if let Some(addr) = &cfg.metrics_listen {
+        let listener = std::net::TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("metrics_listen {addr}: {e}"))?;
+        println!("fastk: metrics on http://{}/metrics", listener.local_addr()?);
+        fastk::obs::prom::spawn_metrics_http(listener, svc.metrics.clone());
+    }
+
     // Live reload: translate a `ReloadSpec` (from the net protocol's
     // `reload` verb, or the API) into a replacement backend for one shard
     // slot. The closure revalidates the replacement's geometry and replans

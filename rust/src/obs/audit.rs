@@ -1,0 +1,388 @@
+//! Online recall auditor: re-runs a deterministic sample of *served*
+//! queries through the exact oracle on a background thread and keeps a
+//! live Welford estimate of recall per `(stage1 algo, dtype, epoch)`.
+//!
+//! This closes the loop on the paper's central claim: the planner promises
+//! Theorem-1 expected recall (`predicted_recall`), the auditor measures
+//! it on real traffic (`measured_recall`). For the radix/halving "budget"
+//! plans — whose predicted recall is NaN by design — the auditor is the
+//! *only* recall signal.
+//!
+//! The oracle is the PR-5 per-shard machinery: dequantize each shard once
+//! at spawn ([`ShardData::dequantize_all`]), full-scan dot products,
+//! exact per-shard top-k ([`topk_quickselect`]), then the same
+//! cross-shard [`merge_shard_results`] the service runs. Recall of one
+//! sample is `|served ∩ oracle| / k`.
+//!
+//! Epoch gating: the oracle rows are a snapshot of launch epoch 0, so
+//! samples from any later epoch (after a live `reload`) are counted as
+//! `stale` and skipped rather than audited against the wrong database.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::{merge_shard_results, ShardTopK};
+use crate::store::ShardData;
+use crate::topk::exact::topk_quickselect;
+use crate::util::stats::Welford;
+
+/// One served query handed to the auditor: the query vector, the global
+/// indices the service returned, and the epoch it was served under.
+#[derive(Debug)]
+pub struct AuditSample {
+    pub query: Vec<f32>,
+    pub served: Vec<u32>,
+    pub epoch: u64,
+}
+
+/// Auditor configuration, resolved at service launch.
+#[derive(Debug, Clone)]
+pub struct AuditConfig {
+    pub d: usize,
+    pub k: usize,
+    /// Recall target the alert gate compares against (NaN = no target:
+    /// measure, never alert).
+    pub target: f64,
+    /// Stage-1 algorithm label for the measured-recall key.
+    pub stage1: String,
+    /// Stored dtype label for the measured-recall key.
+    pub dtype: String,
+    /// The epoch the oracle snapshot was taken at (samples from any other
+    /// epoch are stale).
+    pub armed_epoch: u64,
+    /// Minimum audited samples before the CI alert gate arms.
+    pub min_n: u64,
+}
+
+/// Live recall estimate for one `(stage1, dtype, epoch)` key.
+#[derive(Debug, Clone)]
+pub struct AuditKeyStats {
+    pub stage1: String,
+    pub dtype: String,
+    pub epoch: u64,
+    pub n: u64,
+    pub mean: f64,
+    /// Standard error of the mean (NaN for n < 2).
+    pub sem: f64,
+}
+
+/// Point-in-time view of the auditor, cheap to clone into metrics.
+#[derive(Debug, Clone)]
+pub struct AuditSnapshot {
+    /// Samples audited (excludes stale).
+    pub samples: u64,
+    /// Samples skipped because their epoch didn't match the oracle's.
+    pub stale: u64,
+    /// Times the measured CI upper-confidence test failed the target.
+    pub alerts: u64,
+    /// Pooled measured recall over every audited sample (NaN when empty).
+    pub measured_recall: f64,
+    /// SEM of the pooled estimate (NaN for < 2 samples).
+    pub measured_sem: f64,
+    pub keys: Vec<AuditKeyStats>,
+}
+
+impl Default for AuditSnapshot {
+    fn default() -> Self {
+        AuditSnapshot {
+            samples: 0,
+            stale: 0,
+            alerts: 0,
+            measured_recall: f64::NAN,
+            measured_sem: f64::NAN,
+            keys: Vec::new(),
+        }
+    }
+}
+
+/// `Welford::mean()` reports 0.0 before the first push; recall readers
+/// need "no data yet" to be distinguishable, so expose NaN instead.
+fn mean_or_nan(w: &Welford) -> f64 {
+    if w.count() == 0 {
+        f64::NAN
+    } else {
+        w.mean()
+    }
+}
+
+/// State shared between the audit thread and the metrics/stats readers.
+#[derive(Debug, Default)]
+pub struct AuditShared {
+    inner: Mutex<AuditState>,
+}
+
+#[derive(Debug, Default)]
+struct AuditState {
+    per_key: HashMap<(String, String, u64), Welford>,
+    pooled: Welford,
+    samples: u64,
+    stale: u64,
+    alerts: u64,
+}
+
+impl AuditShared {
+    pub fn new() -> AuditShared {
+        AuditShared::default()
+    }
+
+    fn record(&self, key: (String, String, u64), recall: f64, target: f64, min_n: u64) {
+        let mut st = self.inner.lock().unwrap();
+        st.samples += 1;
+        st.pooled.push(recall);
+        let w = st.per_key.entry(key).or_default();
+        w.push(recall);
+        // Alert when the one-sided 95% upper bound of the measured mean
+        // sits below the target — i.e. we are confident recall is short.
+        let (n, mean, sem) = (w.count(), w.mean(), w.sem());
+        if target.is_finite() && n >= min_n && sem.is_finite() && mean + 1.96 * sem < target {
+            st.alerts += 1;
+        }
+    }
+
+    fn record_stale(&self) {
+        self.inner.lock().unwrap().stale += 1;
+    }
+
+    /// Snapshot every counter and per-key estimate.
+    pub fn snapshot(&self) -> AuditSnapshot {
+        let st = self.inner.lock().unwrap();
+        let mut keys: Vec<AuditKeyStats> = st
+            .per_key
+            .iter()
+            .map(|((stage1, dtype, epoch), w)| AuditKeyStats {
+                stage1: stage1.clone(),
+                dtype: dtype.clone(),
+                epoch: *epoch,
+                n: w.count(),
+                mean: w.mean(),
+                sem: w.sem(),
+            })
+            .collect();
+        keys.sort_by(|a, b| {
+            (&a.stage1, &a.dtype, a.epoch).cmp(&(&b.stage1, &b.dtype, b.epoch))
+        });
+        AuditSnapshot {
+            samples: st.samples,
+            stale: st.stale,
+            alerts: st.alerts,
+            measured_recall: mean_or_nan(&st.pooled),
+            measured_sem: st.pooled.sem(),
+            keys,
+        }
+    }
+
+    /// Pooled measured recall over every audited sample (NaN when empty).
+    pub fn measured_recall(&self) -> f64 {
+        mean_or_nan(&self.inner.lock().unwrap().pooled)
+    }
+
+    /// SEM of the pooled measured recall (NaN for < 2 samples).
+    pub fn measured_sem(&self) -> f64 {
+        self.inner.lock().unwrap().pooled.sem()
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.inner.lock().unwrap().samples
+    }
+
+    pub fn alerts(&self) -> u64 {
+        self.inner.lock().unwrap().alerts
+    }
+}
+
+/// Handle to the background audit thread: the sender the service feeds
+/// ([`AuditSample`]s; `try_send`, never blocking the reply path), the
+/// shared estimates, and the join handle. Dropping the sender (service
+/// shutdown) ends the thread.
+pub struct RecallAuditor {
+    pub tx: SyncSender<AuditSample>,
+    pub shared: Arc<AuditShared>,
+    pub join: JoinHandle<()>,
+}
+
+/// Audit queue depth: samples beyond this are dropped (counted by the
+/// caller) rather than backpressuring the serving path.
+pub const AUDIT_QUEUE_CAP: usize = 1024;
+
+impl RecallAuditor {
+    /// Spawn the auditor over a snapshot of every shard's rows.
+    /// `shards[s]` is shard s's [`ShardData`]; `offsets` are the global
+    /// row offsets the service merges with.
+    pub fn spawn(cfg: AuditConfig, shards: Vec<ShardData>, offsets: Vec<usize>) -> RecallAuditor {
+        let (tx, rx) = sync_channel::<AuditSample>(AUDIT_QUEUE_CAP);
+        let shared = Arc::new(AuditShared::new());
+        let thread_shared = shared.clone();
+        let join = std::thread::Builder::new()
+            .name("fastk-audit".to_string())
+            .spawn(move || audit_loop(cfg, shards, offsets, rx, thread_shared))
+            .expect("spawn audit thread");
+        RecallAuditor { tx, shared, join }
+    }
+}
+
+fn audit_loop(
+    cfg: AuditConfig,
+    shards: Vec<ShardData>,
+    offsets: Vec<usize>,
+    rx: Receiver<AuditSample>,
+    shared: Arc<AuditShared>,
+) {
+    // Dequantize once: the oracle ground truth is the exact f32 content of
+    // the store (what PR 5's `run_load` plan check scans too).
+    let rows: Vec<Vec<f32>> = shards.iter().map(|s| s.dequantize_all(cfg.d)).collect();
+    let d = cfg.d;
+    let k = cfg.k;
+    let mut scores: Vec<f32> = Vec::new();
+    while let Ok(sample) = rx.recv() {
+        if sample.epoch != cfg.armed_epoch || sample.query.len() != d {
+            shared.record_stale();
+            continue;
+        }
+        let mut per_shard: Vec<ShardTopK> = Vec::with_capacity(rows.len());
+        for (s, shard_rows) in rows.iter().enumerate() {
+            let n = shard_rows.len() / d;
+            scores.clear();
+            scores.resize(n, 0.0);
+            for (j, score) in scores.iter_mut().enumerate() {
+                let row = &shard_rows[j * d..(j + 1) * d];
+                let mut acc = 0.0f32;
+                for i in 0..d {
+                    acc += row[i] * sample.query[i];
+                }
+                *score = acc;
+            }
+            per_shard.push(ShardTopK {
+                shard: s,
+                candidates: topk_quickselect(&scores, k),
+            });
+        }
+        let oracle = merge_shard_results(&per_shard, &offsets, k);
+        let hits = sample
+            .served
+            .iter()
+            .filter(|&&ix| oracle.iter().any(|&(ox, _)| ox == ix as usize))
+            .count();
+        let recall = hits as f64 / k as f64;
+        shared.record(
+            (cfg.stage1.clone(), cfg.dtype.clone(), sample.epoch),
+            recall,
+            cfg.target,
+            cfg.min_n,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::RowSource;
+    use crate::util::Rng;
+
+    fn sample_db(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    fn cfg(d: usize, k: usize, target: f64) -> AuditConfig {
+        AuditConfig {
+            d,
+            k,
+            target,
+            stage1: "bucketed".to_string(),
+            dtype: "f32le".to_string(),
+            armed_epoch: 0,
+            min_n: 3,
+        }
+    }
+
+    /// The auditor's own oracle, reimplemented inline for the test.
+    fn exact_topk(db: &[f32], d: usize, q: &[f32], k: usize) -> Vec<u32> {
+        let n = db.len() / d;
+        let mut scored: Vec<(usize, f32)> = (0..n)
+            .map(|j| {
+                let mut acc = 0.0f32;
+                for i in 0..d {
+                    acc += db[j * d + i] * q[i];
+                }
+                (j, acc)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        scored.truncate(k);
+        scored.into_iter().map(|(j, _)| j as u32).collect()
+    }
+
+    #[test]
+    fn perfect_answers_audit_to_recall_one() {
+        let (n, d, k, s) = (256usize, 8usize, 16usize, 2usize);
+        let mut rng = Rng::new(11);
+        let per = n / s;
+        let dbs: Vec<Vec<f32>> = (0..s).map(|_| sample_db(&mut rng, per, d)).collect();
+        let flat: Vec<f32> = dbs.concat();
+        let shards: Vec<ShardData> = dbs
+            .iter()
+            .map(|db| ShardData::F32(RowSource::from_vec(db.clone())))
+            .collect();
+        let offsets: Vec<usize> = (0..s).map(|i| i * per).collect();
+        let auditor = RecallAuditor::spawn(cfg(d, k, 0.9), shards, offsets);
+        let nq = 8;
+        for _ in 0..nq {
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let served = exact_topk(&flat, d, &q, k);
+            auditor.tx.send(AuditSample { query: q, served, epoch: 0 }).unwrap();
+        }
+        drop(auditor.tx);
+        auditor.join.join().unwrap();
+        let snap = auditor.shared.snapshot();
+        assert_eq!(snap.samples, nq as u64);
+        assert_eq!(snap.stale, 0);
+        assert_eq!(snap.alerts, 0, "perfect recall must not alert");
+        assert!((auditor.shared.measured_recall() - 1.0).abs() < 1e-12);
+        assert_eq!(snap.keys.len(), 1);
+        assert_eq!(snap.keys[0].stage1, "bucketed");
+        assert_eq!(snap.keys[0].n, nq as u64);
+    }
+
+    #[test]
+    fn wrong_answers_alert_once_armed() {
+        let (n, d, k) = (128usize, 4usize, 8usize);
+        let mut rng = Rng::new(13);
+        let db = sample_db(&mut rng, n, d);
+        let shards = vec![ShardData::F32(RowSource::from_vec(db))];
+        let auditor = RecallAuditor::spawn(cfg(d, k, 0.95), shards, vec![0]);
+        for _ in 0..6 {
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            // Served nothing the oracle would pick is recall ~0 (indices
+            // past n never match).
+            let served: Vec<u32> = (1000..1000 + k as u32).collect();
+            auditor.tx.send(AuditSample { query: q, served, epoch: 0 }).unwrap();
+        }
+        drop(auditor.tx);
+        auditor.join.join().unwrap();
+        let snap = auditor.shared.snapshot();
+        assert_eq!(snap.samples, 6);
+        assert!(snap.alerts > 0, "measured 0 recall vs target 0.95 must alert");
+        assert!(auditor.shared.measured_recall() < 0.01);
+    }
+
+    #[test]
+    fn stale_epochs_are_skipped_not_audited() {
+        let (n, d, k) = (64usize, 4usize, 4usize);
+        let mut rng = Rng::new(17);
+        let db = sample_db(&mut rng, n, d);
+        let shards = vec![ShardData::F32(RowSource::from_vec(db))];
+        let auditor = RecallAuditor::spawn(cfg(d, k, f64::NAN), shards, vec![0]);
+        let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        auditor
+            .tx
+            .send(AuditSample { query: q, served: vec![0, 1, 2, 3], epoch: 3 })
+            .unwrap();
+        drop(auditor.tx);
+        auditor.join.join().unwrap();
+        let snap = auditor.shared.snapshot();
+        assert_eq!(snap.samples, 0);
+        assert_eq!(snap.stale, 1);
+        assert!(auditor.shared.measured_recall().is_nan());
+    }
+}

@@ -1,0 +1,321 @@
+//! End-to-end observability: per-stage trace spans, sampled trace
+//! retention, Prometheus text exposition, and the online recall auditor.
+//!
+//! The paper's serving claim is a *predicted* quantity — the planner
+//! picks `(B, K′)` so Theorem-1 expected recall meets the target — and
+//! the stage split (score / select / rescore / merge) is where its §7
+//! evaluation lives. This module makes both observable on live traffic:
+//!
+//! - [`span`]: fixed-slot per-stage nanosecond accounting
+//!   ([`SpanSet`] / [`SharedSpans`]), threaded through the sequential,
+//!   parallel and fused pipelines with zero hot-path allocation.
+//! - [`trace`]: a bounded ring of fully-spanned sampled/slow queries,
+//!   drained by the net `trace` verb.
+//! - [`prom`]: the metric registry + Prometheus text renderer (the
+//!   `metrics` verb and the optional `metrics_listen` HTTP listener),
+//!   generated from the same [`MetricsSnapshot`] walk `summary()` and
+//!   the `stats` verb read — one source of truth.
+//! - [`audit`]: the background exact-oracle recall auditor
+//!   (`measured_recall` next to `predicted_recall`, counted
+//!   `recall_alert`s) — the only recall signal for budget plans whose
+//!   predicted recall is NaN by design.
+//!
+//! [`Observability`] is the per-service hub: runtime-tunable knobs
+//! (atomics, configured after [`MipsService::start`]), the query
+//! counter the samplers key on, the trace ring, and the audit channel.
+//!
+//! [`MetricsSnapshot`]: crate::coordinator::metrics::MetricsSnapshot
+//! [`MipsService::start`]: crate::coordinator::MipsService::start
+
+pub mod audit;
+pub mod prom;
+pub mod span;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::Mutex;
+
+pub use audit::{AuditConfig, AuditSample, AuditShared, AuditSnapshot, RecallAuditor};
+pub use span::{SharedSpans, SpanSet, Stage, NUM_STAGES};
+pub use trace::{ShardSpan, TraceEntry, TraceRing};
+
+/// Runtime observability knobs (all off by default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ObsConfig {
+    /// Retain every Nth query's span tree (0 = off).
+    pub trace_sample_n: u64,
+    /// Retain every query slower than this end-to-end (0 = off).
+    pub slow_query_us: u64,
+    /// Hand ~every Nth query to the recall auditor (0 = off).
+    pub audit_sample_n: u64,
+    /// Seed for the deterministic audit sampler.
+    pub audit_seed: u64,
+}
+
+/// SplitMix64: the audit sampler's stateless hash — the same `(seed,
+/// query index)` always picks the same queries, so audits are replayable.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Per-service observability hub. Created disabled by
+/// [`MipsService::start`]; knobs are plain atomics so `configure` can
+/// flip tracing/auditing on a running service without a restart.
+///
+/// [`MipsService::start`]: crate::coordinator::MipsService::start
+#[derive(Debug)]
+pub struct Observability {
+    trace_sample_n: AtomicU64,
+    slow_query_ns: AtomicU64,
+    audit_sample_n: AtomicU64,
+    audit_seed: AtomicU64,
+    /// Global query index: one `fetch_add` per served query, the key both
+    /// samplers hash.
+    query_counter: AtomicU64,
+    sampled_total: AtomicU64,
+    slow_total: AtomicU64,
+    audit_sent: AtomicU64,
+    audit_dropped: AtomicU64,
+    ring: Mutex<TraceRing>,
+    audit_tx: Mutex<Option<SyncSender<AuditSample>>>,
+}
+
+impl Default for Observability {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Cumulative trace/audit counters (the `stats`/Prometheus view).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceCounters {
+    pub sampled: u64,
+    pub slow: u64,
+    pub ring_dropped: u64,
+    pub audit_sent: u64,
+    pub audit_dropped: u64,
+}
+
+impl Observability {
+    pub fn new() -> Observability {
+        Observability {
+            trace_sample_n: AtomicU64::new(0),
+            slow_query_ns: AtomicU64::new(0),
+            audit_sample_n: AtomicU64::new(0),
+            audit_seed: AtomicU64::new(0),
+            query_counter: AtomicU64::new(0),
+            sampled_total: AtomicU64::new(0),
+            slow_total: AtomicU64::new(0),
+            audit_sent: AtomicU64::new(0),
+            audit_dropped: AtomicU64::new(0),
+            ring: Mutex::new(TraceRing::default()),
+            audit_tx: Mutex::new(None),
+        }
+    }
+
+    /// Apply a knob set (races with serving are benign: each knob is one
+    /// relaxed atomic).
+    pub fn configure(&self, cfg: ObsConfig) {
+        self.trace_sample_n.store(cfg.trace_sample_n, Ordering::Relaxed);
+        self.slow_query_ns
+            .store(cfg.slow_query_us.saturating_mul(1_000), Ordering::Relaxed);
+        self.audit_sample_n.store(cfg.audit_sample_n, Ordering::Relaxed);
+        self.audit_seed.store(cfg.audit_seed, Ordering::Relaxed);
+    }
+
+    /// Whether batches should carry span timing at all (either retention
+    /// gate is armed).
+    #[inline]
+    pub fn tracing_enabled(&self) -> bool {
+        self.trace_sample_n.load(Ordering::Relaxed) > 0
+            || self.slow_query_ns.load(Ordering::Relaxed) > 0
+    }
+
+    /// Whether the audit sampler is armed (an auditor may still not be
+    /// installed — samples are then dropped and counted).
+    #[inline]
+    pub fn audit_enabled(&self) -> bool {
+        self.audit_sample_n.load(Ordering::Relaxed) > 0
+    }
+
+    /// Claim the next global query index (one per served query).
+    #[inline]
+    pub fn next_index(&self) -> u64 {
+        self.query_counter.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Every-Nth trace sampler.
+    #[inline]
+    pub fn should_sample(&self, index: u64) -> bool {
+        let n = self.trace_sample_n.load(Ordering::Relaxed);
+        n > 0 && index % n == 0
+    }
+
+    /// Slow-query gate.
+    #[inline]
+    pub fn is_slow(&self, total_ns: u64) -> bool {
+        let t = self.slow_query_ns.load(Ordering::Relaxed);
+        t > 0 && total_ns >= t
+    }
+
+    /// Deterministic audit sampler: `(seed, index)` hash, ~1/N of
+    /// queries. The same seed always picks the same query indices.
+    #[inline]
+    pub fn audit_pick(&self, index: u64) -> bool {
+        let n = self.audit_sample_n.load(Ordering::Relaxed);
+        n > 0 && splitmix64(self.audit_seed.load(Ordering::Relaxed) ^ index) % n == 0
+    }
+
+    /// Retain a traced query in the ring (counts the retention reason).
+    pub fn retain(&self, entry: TraceEntry) {
+        if entry.slow {
+            self.slow_total.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.sampled_total.fetch_add(1, Ordering::Relaxed);
+        }
+        self.ring.lock().unwrap().push(entry);
+    }
+
+    /// Drain the trace ring: `(entries oldest-first, cumulative dropped)`.
+    pub fn drain_traces(&self) -> (Vec<TraceEntry>, u64) {
+        let mut ring = self.ring.lock().unwrap();
+        let dropped = ring.dropped();
+        (ring.drain(), dropped)
+    }
+
+    /// Install the audit channel (spawned by the launcher once the oracle
+    /// snapshot exists).
+    pub fn install_audit(&self, tx: SyncSender<AuditSample>) {
+        *self.audit_tx.lock().unwrap() = Some(tx);
+    }
+
+    /// Hand a picked sample to the auditor. Never blocks: a full queue or
+    /// missing auditor drops the sample and counts it.
+    pub fn send_audit(&self, sample: AuditSample) {
+        let guard = self.audit_tx.lock().unwrap();
+        match guard.as_ref().map(|tx| tx.try_send(sample)) {
+            Some(Ok(())) => {
+                self.audit_sent.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(Err(TrySendError::Full(_))) | Some(Err(TrySendError::Disconnected(_))) | None => {
+                self.audit_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Cumulative counters for the metrics snapshot.
+    pub fn counters(&self) -> TraceCounters {
+        TraceCounters {
+            sampled: self.sampled_total.load(Ordering::Relaxed),
+            slow: self.slow_total.load(Ordering::Relaxed),
+            ring_dropped: self.ring.lock().unwrap().dropped(),
+            audit_sent: self.audit_sent.load(Ordering::Relaxed),
+            audit_dropped: self.audit_dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default() {
+        let o = Observability::new();
+        assert!(!o.tracing_enabled());
+        assert!(!o.audit_enabled());
+        assert!(!o.should_sample(0));
+        assert!(!o.is_slow(u64::MAX));
+        assert!(!o.audit_pick(0));
+    }
+
+    #[test]
+    fn sampler_takes_every_nth() {
+        let o = Observability::new();
+        o.configure(ObsConfig { trace_sample_n: 4, ..ObsConfig::default() });
+        assert!(o.tracing_enabled());
+        let picks: Vec<u64> = (0..12).filter(|&i| o.should_sample(i)).collect();
+        assert_eq!(picks, vec![0, 4, 8]);
+    }
+
+    #[test]
+    fn slow_gate_uses_us_knob() {
+        let o = Observability::new();
+        o.configure(ObsConfig { slow_query_us: 5, ..ObsConfig::default() });
+        assert!(!o.is_slow(4_999));
+        assert!(o.is_slow(5_000));
+        assert!(o.is_slow(1_000_000));
+    }
+
+    #[test]
+    fn audit_sampler_is_deterministic_per_seed() {
+        // Satellite: the same seed must pick the same query ids; a
+        // different seed must pick a different (overwhelmingly) set.
+        let cfg = ObsConfig { audit_sample_n: 4, audit_seed: 42, ..ObsConfig::default() };
+        let a = Observability::new();
+        a.configure(cfg);
+        let b = Observability::new();
+        b.configure(cfg);
+        let pa: Vec<u64> = (0..1000).filter(|&i| a.audit_pick(i)).collect();
+        let pb: Vec<u64> = (0..1000).filter(|&i| b.audit_pick(i)).collect();
+        assert_eq!(pa, pb, "same seed, same picks");
+        assert!(!pa.is_empty(), "n=4 over 1000 indices must pick some");
+        assert!(pa.len() < 1000, "and not all");
+        let c = Observability::new();
+        c.configure(ObsConfig { audit_seed: 43, ..cfg });
+        let pc: Vec<u64> = (0..1000).filter(|&i| c.audit_pick(i)).collect();
+        assert_ne!(pa, pc, "different seed, different picks");
+    }
+
+    #[test]
+    fn retain_counts_by_reason_and_drains() {
+        let o = Observability::new();
+        let entry = |slow| TraceEntry {
+            id: 1,
+            epoch: 0,
+            slow,
+            degraded: false,
+            total_ns: 10,
+            queue_ns: 1,
+            merge_ns: 1,
+            reply_ns: 1,
+            shards: Vec::new(),
+        };
+        o.retain(entry(false));
+        o.retain(entry(false));
+        o.retain(entry(true));
+        let c = o.counters();
+        assert_eq!((c.sampled, c.slow, c.ring_dropped), (2, 1, 0));
+        let (entries, dropped) = o.drain_traces();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(dropped, 0);
+        assert!(o.drain_traces().0.is_empty());
+    }
+
+    #[test]
+    fn audit_send_without_auditor_is_counted_drop() {
+        let o = Observability::new();
+        o.send_audit(AuditSample { query: vec![], served: vec![], epoch: 0 });
+        assert_eq!(o.counters().audit_dropped, 1);
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        o.install_audit(tx);
+        o.send_audit(AuditSample { query: vec![1.0], served: vec![0], epoch: 0 });
+        assert_eq!(o.counters().audit_sent, 1);
+        assert_eq!(rx.recv().unwrap().query, vec![1.0]);
+        // Queue full -> dropped, not blocked.
+        o.send_audit(AuditSample { query: vec![], served: vec![], epoch: 0 });
+        o.send_audit(AuditSample { query: vec![], served: vec![], epoch: 0 });
+        assert_eq!(o.counters().audit_dropped, 2);
+    }
+
+    #[test]
+    fn splitmix64_is_stable() {
+        // Reference values from the published SplitMix64 test vectors.
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_ne!(splitmix64(1), splitmix64(2));
+    }
+}

@@ -1,0 +1,536 @@
+//! Prometheus text exposition (format 0.0.4) rendered from the same
+//! [`MetricsSnapshot`] walk the `summary()` line and the net `stats` verb
+//! read — one registry, three views, nothing double-counted.
+//!
+//! The metric table below is the registry of record: every exposed family
+//! appears in it with the dotted `stats_path` it mirrors in the `stats`
+//! JSON, and the drift test at the bottom fails the build when a table row
+//! has no `stats` field (or a rendered name escapes the table).
+//! `ci/check_metrics_names.py` lints the literal names between the
+//! markers for snake_case + unit suffix and their presence in
+//! `docs/OPERATIONS.md`.
+
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use crate::coordinator::metrics::{MetricsSnapshot, ServiceMetrics, SERVICE_SHARD};
+use crate::util::stats::LatencyHistogram;
+
+/// Prometheus family kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One registered metric family: its wire name, help text, kind, and the
+/// dotted path of the `stats`-JSON field it is generated from.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricDef {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub kind: MetricKind,
+    pub stats_path: &'static str,
+}
+
+// METRICS-BEGIN (linted by ci/check_metrics_names.py)
+pub const METRICS: &[MetricDef] = &[
+    MetricDef {
+        name: "fastk_requests_total",
+        help: "Queries served (successful replies).",
+        kind: MetricKind::Counter,
+        stats_path: "requests",
+    },
+    MetricDef {
+        name: "fastk_batches_total",
+        help: "Batches dispatched to the shards.",
+        kind: MetricKind::Counter,
+        stats_path: "batches",
+    },
+    MetricDef {
+        name: "fastk_batched_queries_total",
+        help: "Queries carried by dispatched batches.",
+        kind: MetricKind::Counter,
+        stats_path: "batched_queries",
+    },
+    MetricDef {
+        name: "fastk_shard_failures_total",
+        help: "Shard scatter/score failures (per shard per batch).",
+        kind: MetricKind::Counter,
+        stats_path: "shard_failures",
+    },
+    MetricDef {
+        name: "fastk_degraded_requests_total",
+        help: "Requests answered from a strict subset of the shards.",
+        kind: MetricKind::Counter,
+        stats_path: "degraded_requests",
+    },
+    MetricDef {
+        name: "fastk_failed_requests_total",
+        help: "Requests that errored because every shard failed.",
+        kind: MetricKind::Counter,
+        stats_path: "failed_requests",
+    },
+    MetricDef {
+        name: "fastk_overloaded_rejects_total",
+        help: "Requests rejected at admission (queue full).",
+        kind: MetricKind::Counter,
+        stats_path: "overloaded_rejects",
+    },
+    MetricDef {
+        name: "fastk_reloads_total",
+        help: "Successful live shard reloads.",
+        kind: MetricKind::Counter,
+        stats_path: "reload.reloads",
+    },
+    MetricDef {
+        name: "fastk_rollbacks_total",
+        help: "Rolled-back shard reload attempts.",
+        kind: MetricKind::Counter,
+        stats_path: "reload.rollbacks",
+    },
+    MetricDef {
+        name: "fastk_reload_epoch_total",
+        help: "Global swap epoch (+1 per successful reload).",
+        kind: MetricKind::Counter,
+        stats_path: "reload.epoch",
+    },
+    MetricDef {
+        name: "fastk_latency_us",
+        help: "Request latency split by kind: total, queue wait, service.",
+        kind: MetricKind::Histogram,
+        stats_path: "latency",
+    },
+    MetricDef {
+        name: "fastk_stage_us",
+        help: "Per-batch pipeline stage time by stage/shard/epoch \
+               (CPU time summed across workers; shard=\"service\" is the \
+               cross-shard level).",
+        kind: MetricKind::Histogram,
+        stats_path: "stage_spans",
+    },
+    MetricDef {
+        name: "fastk_trace_sampled_total",
+        help: "Queries retained by the every-Nth trace sampler.",
+        kind: MetricKind::Counter,
+        stats_path: "trace.sampled",
+    },
+    MetricDef {
+        name: "fastk_trace_slow_total",
+        help: "Queries retained by the slow-query gate.",
+        kind: MetricKind::Counter,
+        stats_path: "trace.slow",
+    },
+    MetricDef {
+        name: "fastk_trace_dropped_total",
+        help: "Trace-ring entries overwritten before being drained.",
+        kind: MetricKind::Counter,
+        stats_path: "trace.ring_dropped",
+    },
+    MetricDef {
+        name: "fastk_audit_sent_total",
+        help: "Served queries handed to the recall auditor.",
+        kind: MetricKind::Counter,
+        stats_path: "trace.audit_sent",
+    },
+    MetricDef {
+        name: "fastk_audit_dropped_total",
+        help: "Audit samples dropped (queue full or no auditor).",
+        kind: MetricKind::Counter,
+        stats_path: "trace.audit_dropped",
+    },
+    MetricDef {
+        name: "fastk_audit_samples_total",
+        help: "Samples audited against the exact oracle.",
+        kind: MetricKind::Counter,
+        stats_path: "audit.samples",
+    },
+    MetricDef {
+        name: "fastk_audit_stale_total",
+        help: "Audit samples skipped (epoch newer than the oracle).",
+        kind: MetricKind::Counter,
+        stats_path: "audit.stale",
+    },
+    MetricDef {
+        name: "fastk_recall_alerts_total",
+        help: "Times the measured-recall CI fell below the target.",
+        kind: MetricKind::Counter,
+        stats_path: "audit.alerts",
+    },
+    MetricDef {
+        name: "fastk_measured_recall_ratio",
+        help: "Live recall measured by the online auditor (pooled; \
+               labeled series are per stage1/dtype/epoch).",
+        kind: MetricKind::Gauge,
+        stats_path: "audit.measured_recall",
+    },
+    MetricDef {
+        name: "fastk_measured_recall_sem_ratio",
+        help: "Standard error of the pooled measured recall.",
+        kind: MetricKind::Gauge,
+        stats_path: "audit.measured_sem",
+    },
+    MetricDef {
+        name: "fastk_predicted_recall_ratio",
+        help: "Theorem-1 predicted recall of the serving plan (absent \
+               for budget plans: recall is measured, not predicted).",
+        kind: MetricKind::Gauge,
+        stats_path: "plan.predicted_recall",
+    },
+    MetricDef {
+        name: "fastk_plan_inflation_ratio",
+        help: "Quantization-aware (B, K') inflation of the serving plan.",
+        kind: MetricKind::Gauge,
+        stats_path: "plan.inflation",
+    },
+];
+// METRICS-END
+
+/// Every registered metric name (for the docs/CI lints).
+pub fn metric_names() -> Vec<&'static str> {
+    METRICS.iter().map(|d| d.name).collect()
+}
+
+fn header(out: &mut String, def: &MetricDef) {
+    let _ = writeln!(out, "# HELP {} {}", def.name, def.help);
+    let _ = writeln!(out, "# TYPE {} {}", def.name, def.kind.as_str());
+}
+
+fn sample(out: &mut String, name: &str, labels: &str, value: f64) {
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {value}");
+    } else {
+        let _ = writeln!(out, "{name}{{{labels}}} {value}");
+    }
+}
+
+/// Emit one histogram series in µs. The 128 log buckets are coarsened to
+/// one boundary per octave (every 4th edge) plus +Inf — cardinality an
+/// operator can afford, resolution the log scale already bounds.
+fn render_hist(out: &mut String, name: &str, labels: &str, h: &LatencyHistogram) {
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    let mut next_edge = 3usize;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if i == next_edge && i + 1 < counts.len() {
+            let le = h.bucket_upper_ns(i) / 1_000.0;
+            let sep = if labels.is_empty() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{{labels}{sep}le=\"{le:.3}\"}} {cum}"
+            );
+            next_edge += 4;
+        }
+    }
+    let sep = if labels.is_empty() { "" } else { "," };
+    let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {cum}");
+    let sum_us = h.sum_ns() as f64 / 1_000.0;
+    sample(out, &format!("{name}_sum"), labels, sum_us);
+    sample(out, &format!("{name}_count"), labels, h.count() as f64);
+}
+
+/// Render the whole snapshot as Prometheus text. Every registered family
+/// always gets its `# HELP`/`# TYPE` header (so scrapes are schema-stable);
+/// samples whose source is absent (no plan, auditor not armed) are omitted.
+pub fn render(snap: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(8 * 1024);
+    for def in METRICS {
+        header(&mut out, def);
+        match def.name {
+            "fastk_requests_total" => sample(&mut out, def.name, "", snap.requests as f64),
+            "fastk_batches_total" => sample(&mut out, def.name, "", snap.batches as f64),
+            "fastk_batched_queries_total" => {
+                sample(&mut out, def.name, "", snap.batched_queries as f64)
+            }
+            "fastk_shard_failures_total" => {
+                sample(&mut out, def.name, "", snap.shard_failures as f64)
+            }
+            "fastk_degraded_requests_total" => {
+                sample(&mut out, def.name, "", snap.degraded_requests as f64)
+            }
+            "fastk_failed_requests_total" => {
+                sample(&mut out, def.name, "", snap.failed_requests as f64)
+            }
+            "fastk_overloaded_rejects_total" => {
+                sample(&mut out, def.name, "", snap.overloaded as f64)
+            }
+            "fastk_reloads_total" => sample(&mut out, def.name, "", snap.reloads as f64),
+            "fastk_rollbacks_total" => sample(&mut out, def.name, "", snap.rollbacks as f64),
+            "fastk_reload_epoch_total" => sample(&mut out, def.name, "", snap.epoch as f64),
+            "fastk_latency_us" => {
+                render_hist(&mut out, def.name, "kind=\"total\"", &snap.latency);
+                render_hist(&mut out, def.name, "kind=\"queue\"", &snap.queue_latency);
+                render_hist(&mut out, def.name, "kind=\"service\"", &snap.service_latency);
+            }
+            "fastk_stage_us" => {
+                for sh in &snap.stages {
+                    let shard = if sh.shard == SERVICE_SHARD {
+                        "service".to_string()
+                    } else {
+                        sh.shard.to_string()
+                    };
+                    let labels = format!(
+                        "stage=\"{}\",shard=\"{}\",epoch=\"{}\"",
+                        sh.stage.as_str(),
+                        shard,
+                        sh.epoch
+                    );
+                    render_hist(&mut out, def.name, &labels, &sh.hist);
+                }
+            }
+            "fastk_trace_sampled_total" => {
+                if let Some(t) = &snap.trace {
+                    sample(&mut out, def.name, "", t.sampled as f64);
+                }
+            }
+            "fastk_trace_slow_total" => {
+                if let Some(t) = &snap.trace {
+                    sample(&mut out, def.name, "", t.slow as f64);
+                }
+            }
+            "fastk_trace_dropped_total" => {
+                if let Some(t) = &snap.trace {
+                    sample(&mut out, def.name, "", t.ring_dropped as f64);
+                }
+            }
+            "fastk_audit_sent_total" => {
+                if let Some(t) = &snap.trace {
+                    sample(&mut out, def.name, "", t.audit_sent as f64);
+                }
+            }
+            "fastk_audit_dropped_total" => {
+                if let Some(t) = &snap.trace {
+                    sample(&mut out, def.name, "", t.audit_dropped as f64);
+                }
+            }
+            "fastk_audit_samples_total" => {
+                if let Some(a) = &snap.audit {
+                    sample(&mut out, def.name, "", a.samples as f64);
+                }
+            }
+            "fastk_audit_stale_total" => {
+                if let Some(a) = &snap.audit {
+                    sample(&mut out, def.name, "", a.stale as f64);
+                }
+            }
+            "fastk_recall_alerts_total" => {
+                if let Some(a) = &snap.audit {
+                    sample(&mut out, def.name, "", a.alerts as f64);
+                }
+            }
+            "fastk_measured_recall_ratio" => {
+                if let Some(a) = &snap.audit {
+                    if a.measured_recall.is_finite() {
+                        sample(&mut out, def.name, "", a.measured_recall);
+                    }
+                    for k in &a.keys {
+                        if !k.mean.is_finite() {
+                            continue;
+                        }
+                        let labels = format!(
+                            "stage1=\"{}\",dtype=\"{}\",epoch=\"{}\"",
+                            k.stage1, k.dtype, k.epoch
+                        );
+                        sample(&mut out, def.name, &labels, k.mean);
+                    }
+                }
+            }
+            "fastk_measured_recall_sem_ratio" => {
+                if let Some(a) = &snap.audit {
+                    if a.measured_sem.is_finite() {
+                        sample(&mut out, def.name, "", a.measured_sem);
+                    }
+                }
+            }
+            "fastk_predicted_recall_ratio" => {
+                if let Some(p) = &snap.plan {
+                    if p.predicted_recall.is_finite() {
+                        sample(&mut out, def.name, "", p.predicted_recall);
+                    }
+                }
+            }
+            "fastk_plan_inflation_ratio" => {
+                if let Some(p) = &snap.plan {
+                    sample(&mut out, def.name, "", p.inflation());
+                }
+            }
+            other => unreachable!("unregistered metric family {other}"),
+        }
+    }
+    out
+}
+
+/// Serve the exposition over plain HTTP/1.0, one request per connection
+/// (the `metrics_listen` knob). A daemon thread: never joined, dies with
+/// the process. Any request path gets the full exposition — this is a
+/// scrape endpoint, not a router.
+pub fn spawn_metrics_http(listener: TcpListener, metrics: Arc<ServiceMetrics>) {
+    std::thread::Builder::new()
+        .name("fastk-metrics-http".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { continue };
+                // Drain the request line + headers (best effort, bounded);
+                // the response is the same whatever was asked.
+                let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(500)));
+                let mut buf = [0u8; 4096];
+                let _ = stream.read(&mut buf);
+                let body = render(&metrics.snapshot());
+                let resp = format!(
+                    "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = stream.write_all(resp.as_bytes());
+            }
+        })
+        .expect("spawn metrics http thread");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::ServiceMetrics;
+    use crate::obs::{AuditShared, Observability, SpanSet, Stage};
+    use crate::plan::{plan_fixed, PlanSource};
+    use crate::store::Dtype;
+    use crate::util::json::Json;
+    use std::time::Duration;
+
+    /// A fully-populated registry: plan, obs, audit, spans, traffic.
+    fn populated() -> ServiceMetrics {
+        let m = ServiceMetrics::new();
+        m.set_shards(2);
+        m.set_obs(Arc::new(Observability::new()));
+        m.set_audit(Arc::new(AuditShared::new()));
+        m.set_plan(
+            plan_fixed(2, 1024, 16, 128, 2, Dtype::F32, 16, PlanSource::Manual).unwrap(),
+        );
+        m.record_batch(2);
+        m.record_request(Duration::from_micros(120), Duration::from_micros(20), false);
+        let mut spans = SpanSet::new();
+        spans.add_ns(Stage::Stage1Score, 50_000);
+        m.record_stage_spans(0, 0, &spans);
+        m
+    }
+
+    fn resolve<'a>(j: &'a Json, path: &str) -> Option<&'a Json> {
+        let mut cur = j;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    #[test]
+    fn registry_walk_feeds_stats_and_exposition_alike() {
+        // The drift gate: every registered family must (a) mirror a field
+        // that actually exists in the stats JSON and (b) appear in the
+        // rendered exposition — so a metric added to one view without the
+        // other fails here, not in production.
+        let m = populated();
+        let snap = m.snapshot();
+        let stats = snap.to_stats_json();
+        let text = render(&snap);
+        for def in METRICS {
+            assert!(
+                resolve(&stats, def.stats_path).is_some(),
+                "{}: stats path `{}` missing from to_stats_json",
+                def.name,
+                def.stats_path
+            );
+            assert!(
+                text.contains(&format!("# TYPE {} ", def.name)),
+                "{} missing from exposition",
+                def.name
+            );
+        }
+        // And nothing renders that isn't registered: every fastk_ name in
+        // the text resolves back to a registered family.
+        for line in text.lines().filter(|l| l.starts_with("fastk_")) {
+            let name = line
+                .split(|c| c == '{' || c == ' ')
+                .next()
+                .unwrap()
+                .trim_end_matches("_bucket")
+                .trim_end_matches("_sum")
+                .trim_end_matches("_count");
+            assert!(
+                METRICS.iter().any(|d| d.name == name),
+                "unregistered family in exposition: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn exposition_carries_values_and_histogram_shape() {
+        let m = populated();
+        let text = render(&m.snapshot());
+        assert!(text.contains("fastk_requests_total 1"), "{text}");
+        assert!(text.contains("fastk_batched_queries_total 2"), "{text}");
+        // Histogram series: labeled buckets, +Inf terminal, sum+count.
+        assert!(text.contains("fastk_latency_us_bucket{kind=\"total\",le=\"+Inf\"} 1"));
+        assert!(text.contains("fastk_latency_us_count{kind=\"total\"} 1"));
+        assert!(text.contains(
+            "fastk_stage_us_bucket{stage=\"stage1_score\",shard=\"0\",epoch=\"0\",le=\"+Inf\"} 1"
+        ));
+        // Bucket counts are cumulative and end at the total.
+        let cum: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("fastk_latency_us_bucket{kind=\"total\""))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "{cum:?}");
+        assert_eq!(*cum.last().unwrap(), 1);
+        // Manual f32 plan: predicted recall is a real sample.
+        assert!(text.contains("fastk_predicted_recall_ratio 0."), "{text}");
+        // No audited samples yet: header present, no sample line.
+        assert!(text.contains("# TYPE fastk_measured_recall_ratio gauge"));
+        assert!(!text.contains("\nfastk_measured_recall_ratio "), "{text}");
+    }
+
+    #[test]
+    fn headers_are_schema_stable_on_an_empty_registry() {
+        // A fresh service (no plan, no obs, no audit) still exposes every
+        // family's HELP/TYPE so scrape configs can rely on the schema.
+        let text = render(&ServiceMetrics::new().snapshot());
+        for def in METRICS {
+            assert!(text.contains(&format!("# HELP {} ", def.name)));
+            assert!(text.contains(&format!("# TYPE {} ", def.name)));
+        }
+        assert!(!text.contains("fastk_audit_samples_total "), "{text}");
+    }
+
+    #[test]
+    fn http_listener_serves_one_shot_expositions() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let m = Arc::new(populated());
+        spawn_metrics_http(listener, m);
+        // Two sequential scrapes: the endpoint answers each connection.
+        for _ in 0..2 {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+            let mut resp = String::new();
+            conn.read_to_string(&mut resp).unwrap();
+            assert!(resp.starts_with("HTTP/1.0 200 OK"), "{resp}");
+            assert!(resp.contains("text/plain; version=0.0.4"));
+            assert!(resp.contains("fastk_requests_total 1"), "{resp}");
+        }
+    }
+}

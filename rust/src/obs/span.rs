@@ -1,0 +1,213 @@
+//! Per-stage span accounting: fixed-slot nanosecond accumulators with no
+//! allocation on the hot path.
+//!
+//! A [`SpanSet`] is one array slot per pipeline [`Stage`] — workers add
+//! elapsed nanoseconds into their slot, the service merges the sets per
+//! shard and feeds per-stage latency histograms keyed `(shard, epoch)`.
+//! [`SharedSpans`] is the cross-thread variant the fused engine's pool
+//! workers record into: plain relaxed atomics, drained once per batch.
+//!
+//! Semantics: a stage's value is the *CPU time* spent in that stage for
+//! one batch (summed across pool workers when the stage runs lane-
+//! parallel), not wall-clock — so the per-worker spans of a fused batch
+//! can exceed the batch's wall time on multi-core hosts.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Number of traced pipeline stages (slots in a [`SpanSet`]).
+pub const NUM_STAGES: usize = 6;
+
+/// The traced pipeline stages, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Batcher wait: enqueue → batch dispatch.
+    Queue,
+    /// Stage-1 scoring (the dot-product sweep).
+    Stage1Score,
+    /// Stage-1 selection (bucketed / radix / halving ingest + extract).
+    Stage1Select,
+    /// Exact-f32 rescore of quantized Stage-1 survivors.
+    Rescore,
+    /// Stage-2 merge (per-worker and cross-shard candidate merges).
+    Stage2Merge,
+    /// Reply serialization + send back to the caller.
+    ReplyWrite,
+}
+
+impl Stage {
+    /// Every stage, in slot order.
+    pub const ALL: [Stage; NUM_STAGES] = [
+        Stage::Queue,
+        Stage::Stage1Score,
+        Stage::Stage1Select,
+        Stage::Rescore,
+        Stage::Stage2Merge,
+        Stage::ReplyWrite,
+    ];
+
+    /// Slot index in a [`SpanSet`].
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake-case name (the Prometheus / stats label value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Stage1Score => "stage1_score",
+            Stage::Stage1Select => "stage1_select",
+            Stage::Rescore => "rescore",
+            Stage::Stage2Merge => "stage2_merge",
+            Stage::ReplyWrite => "reply_write",
+        }
+    }
+}
+
+/// One nanosecond accumulator per stage. `Copy`, fixed-size, and every
+/// operation is branch-and-add only — safe for the hot path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanSet {
+    ns: [u64; NUM_STAGES],
+}
+
+impl SpanSet {
+    pub fn new() -> SpanSet {
+        SpanSet::default()
+    }
+
+    /// Add `ns` nanoseconds to a stage's slot (saturating).
+    #[inline]
+    pub fn add_ns(&mut self, stage: Stage, ns: u64) {
+        let slot = &mut self.ns[stage.index()];
+        *slot = slot.saturating_add(ns);
+    }
+
+    /// Nanoseconds recorded for a stage.
+    #[inline]
+    pub fn get_ns(&self, stage: Stage) -> u64 {
+        self.ns[stage.index()]
+    }
+
+    /// Slot-wise sum of another set into this one.
+    #[inline]
+    pub fn merge(&mut self, other: &SpanSet) {
+        for (a, b) in self.ns.iter_mut().zip(other.ns.iter()) {
+            *a = a.saturating_add(*b);
+        }
+    }
+
+    /// Sum over all stages.
+    pub fn total_ns(&self) -> u64 {
+        self.ns.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    /// True when no stage recorded any time.
+    pub fn is_empty(&self) -> bool {
+        self.ns.iter().all(|&n| n == 0)
+    }
+}
+
+/// Cross-thread span accumulator for the fused engine's pool workers:
+/// each worker adds its stage times with relaxed atomics, the dispatcher
+/// drains the sums once per batch. `enabled` gates every clock read so an
+/// untraced batch costs one relaxed load per worker run.
+#[derive(Debug, Default)]
+pub struct SharedSpans {
+    enabled: AtomicBool,
+    ns: [AtomicU64; NUM_STAGES],
+}
+
+impl SharedSpans {
+    pub fn new() -> SharedSpans {
+        SharedSpans {
+            enabled: AtomicBool::new(false),
+            ns: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    #[inline]
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether workers should take timestamps this batch.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Worker-side: add `ns` to a stage's slot.
+    #[inline]
+    pub fn add(&self, stage: Stage, ns: u64) {
+        self.ns[stage.index()].fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Dispatcher-side: take the accumulated sums, resetting every slot.
+    pub fn drain(&self) -> SpanSet {
+        let mut out = SpanSet::new();
+        for stage in Stage::ALL {
+            out.add_ns(stage, self.ns[stage.index()].swap(0, Ordering::Relaxed));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_slots_are_dense_and_named() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert!(!s.as_str().is_empty());
+        }
+        // Names are unique.
+        let mut names: Vec<&str> = Stage::ALL.iter().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), NUM_STAGES);
+    }
+
+    #[test]
+    fn spanset_add_merge_total() {
+        let mut a = SpanSet::new();
+        assert!(a.is_empty());
+        a.add_ns(Stage::Stage1Score, 100);
+        a.add_ns(Stage::Stage1Score, 50);
+        a.add_ns(Stage::Rescore, 7);
+        let mut b = SpanSet::new();
+        b.add_ns(Stage::Stage1Select, 3);
+        a.merge(&b);
+        assert_eq!(a.get_ns(Stage::Stage1Score), 150);
+        assert_eq!(a.get_ns(Stage::Stage1Select), 3);
+        assert_eq!(a.get_ns(Stage::Rescore), 7);
+        assert_eq!(a.total_ns(), 160);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn spanset_saturates() {
+        let mut a = SpanSet::new();
+        a.add_ns(Stage::Queue, u64::MAX);
+        a.add_ns(Stage::Queue, 1);
+        assert_eq!(a.get_ns(Stage::Queue), u64::MAX);
+        assert_eq!(a.total_ns(), u64::MAX);
+    }
+
+    #[test]
+    fn shared_spans_drain_resets() {
+        let s = SharedSpans::new();
+        assert!(!s.enabled());
+        s.set_enabled(true);
+        assert!(s.enabled());
+        s.add(Stage::Stage1Score, 10);
+        s.add(Stage::Stage1Score, 5);
+        s.add(Stage::Stage2Merge, 2);
+        let drained = s.drain();
+        assert_eq!(drained.get_ns(Stage::Stage1Score), 15);
+        assert_eq!(drained.get_ns(Stage::Stage2Merge), 2);
+        assert!(s.drain().is_empty());
+    }
+}

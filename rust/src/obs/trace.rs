@@ -1,0 +1,168 @@
+//! Sampled trace retention: a bounded ring of per-query span trees.
+//!
+//! The service samples every Nth query (`trace_sample_n`) and every query
+//! slower than `slow_query_us`; a retained query carries its full span
+//! breakdown — queue / merge / reply at the service plus a [`SpanSet`]
+//! per answering shard — into the ring, drainable via the net `trace`
+//! verb. The ring overwrites oldest-first and counts what it dropped, so
+//! an unread server stays bounded.
+
+use crate::util::json::Json;
+
+use super::span::{SpanSet, Stage};
+
+/// Ring capacity: enough to hold a burst between `trace` drains without
+/// unbounded growth.
+pub const TRACE_RING_CAP: usize = 256;
+
+/// One answering shard's span breakdown for a traced query's batch.
+#[derive(Debug, Clone)]
+pub struct ShardSpan {
+    pub shard: u32,
+    pub spans: SpanSet,
+}
+
+/// A retained query: identity, epoch, why it was kept, end-to-end and
+/// service-level times, and the per-shard stage breakdown of its batch.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub id: u64,
+    pub epoch: u64,
+    /// Retained by the slow-query gate (vs the every-Nth sampler).
+    pub slow: bool,
+    pub degraded: bool,
+    pub total_ns: u64,
+    pub queue_ns: u64,
+    /// Cross-shard merge time of the query's batch.
+    pub merge_ns: u64,
+    /// Reply serialization + send time for this query.
+    pub reply_ns: u64,
+    pub shards: Vec<ShardSpan>,
+}
+
+impl TraceEntry {
+    /// Wire shape of one entry (the `trace` verb's array element).
+    pub fn to_json(&self) -> Json {
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let mut pairs = vec![("shard", Json::num(s.shard as f64))];
+                pairs.extend(Stage::ALL.iter().map(|&st| {
+                    (st.as_str(), Json::num(s.spans.get_ns(st) as f64 / 1000.0))
+                }));
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("slow", Json::Bool(self.slow)),
+            ("degraded", Json::Bool(self.degraded)),
+            ("total_us", Json::num(self.total_ns as f64 / 1000.0)),
+            ("queue_us", Json::num(self.queue_ns as f64 / 1000.0)),
+            ("merge_us", Json::num(self.merge_ns as f64 / 1000.0)),
+            ("reply_us", Json::num(self.reply_ns as f64 / 1000.0)),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+}
+
+/// Bounded oldest-out trace buffer with a cumulative drop counter.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: std::collections::VecDeque<TraceEntry>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::new(TRACE_RING_CAP)
+    }
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing {
+            buf: std::collections::VecDeque::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, entry: TraceEntry) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(entry);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total entries overwritten before being drained (cumulative).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take every retained entry, oldest first. The drop counter is
+    /// cumulative and survives the drain.
+    pub fn drain(&mut self) -> Vec<TraceEntry> {
+        self.buf.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: u64) -> TraceEntry {
+        TraceEntry {
+            id,
+            epoch: 0,
+            slow: false,
+            degraded: false,
+            total_ns: 1000,
+            queue_ns: 100,
+            merge_ns: 10,
+            reply_ns: 5,
+            shards: vec![ShardSpan { shard: 0, spans: SpanSet::new() }],
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r = TraceRing::new(3);
+        for id in 0..5 {
+            r.push(entry(id));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let drained = r.drain();
+        assert_eq!(drained.iter().map(|e| e.id).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert!(r.is_empty());
+        // The drop counter is cumulative.
+        assert_eq!(r.dropped(), 2);
+    }
+
+    #[test]
+    fn entry_json_carries_every_stage() {
+        let mut e = entry(7);
+        e.shards[0].spans.add_ns(Stage::Stage1Score, 2_000);
+        let j = e.to_json();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(7));
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 1);
+        for stage in Stage::ALL {
+            assert!(shards[0].get(stage.as_str()).is_some(), "{}", stage.as_str());
+        }
+        assert_eq!(shards[0].get("stage1_score").unwrap().as_f64(), Some(2.0));
+    }
+}

@@ -56,11 +56,15 @@
 //! database rows (in the stored encoding — quantized tiles hold
 //! proportionally more rows, which is half the bandwidth win).
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use super::parallel::{merge_stage2, LanePool, SliceHandle};
 use super::select::{self, Stage1Algo, Stage1Select};
 use super::simd::SimdKernel;
 use super::twostage::TwoStageParams;
 use super::Candidate;
+use crate::obs::{SharedSpans, SpanSet, Stage};
 use crate::store::{quant, Dtype, ShardData};
 
 /// Auto tile sizing target: keep one tile's database rows around this many
@@ -118,10 +122,14 @@ struct FusedLaneState {
     /// state; rivals: a `lanes·K′` budget), grown on demand and reused
     /// across batches.
     states: Vec<Box<dyn Stage1Select>>,
-    /// `[lanes]` score scratch for one stream row.
+    /// `[tile_rows, lanes]` score scratch for one tile (sized at spawn, so
+    /// the hot path never allocates).
     scores: Vec<f32>,
     /// `[d]` dequantized-row scratch for the int8 exact rescore.
     rescore_row: Vec<f32>,
+    /// Cross-worker per-stage span sink. When disabled (the default) the
+    /// only cost per run is one relaxed load.
+    spans: Arc<SharedSpans>,
 }
 
 impl FusedLaneState {
@@ -163,21 +171,33 @@ impl FusedLaneState {
                 scales: scales.rows(),
             },
         };
+        // Tracing gate: resolved once per run; an untraced batch takes no
+        // timestamps at all. Stage time is accumulated around the *phases*
+        // below (score all tile rows, then ingest them), never per row —
+        // the phase split changes no kernel-call or ingest order, so the
+        // output stays bit-identical to the interleaved pipeline.
+        let tracing = self.spans.enabled();
+        let (mut score_ns, mut select_ns, mut rescore_ns) = (0u64, 0u64, 0u64);
         let mut tile_start = 0;
         while tile_start < self.rows {
             let tile_end = (tile_start + self.tile_rows).min(self.rows);
             for (qi, state) in self.states[..nq].iter_mut().enumerate() {
                 let q = &queries[qi * d..(qi + 1) * d];
+                // Phase 1: score every stream row of the tile into its
+                // `[lanes]` slice of the scratch.
+                let t0 = if tracing { Some(Instant::now()) } else { None };
                 for row in tile_start..tile_end {
                     let base = row * b + lane_lo;
+                    let slot = (row - tile_start) * lanes;
+                    let scores = &mut self.scores[slot..slot + lanes];
                     match db {
                         Resolved::F32(rows) => {
                             let tile = &rows[base * d..(base + lanes) * d];
-                            self.kernel.score_tile(tile, d, q, &mut self.scores);
+                            self.kernel.score_tile(tile, d, q, scores);
                         }
                         Resolved::F16(codes) => {
                             let tile = &codes[base * d..(base + lanes) * d];
-                            self.kernel.score_tile_f16(tile, d, q, &mut self.scores);
+                            self.kernel.score_tile_f16(tile, d, q, scores);
                         }
                         Resolved::I8 { codes, scales } => {
                             let tile = &codes[base * d..(base + lanes) * d];
@@ -187,11 +207,22 @@ impl FusedLaneState {
                                 &qcodes[qi * d..(qi + 1) * d],
                                 &scales[base..base + lanes],
                                 qscales[qi],
-                                &mut self.scores,
+                                scores,
                             );
                         }
                     }
-                    state.ingest(base as u32, &self.scores);
+                }
+                // Phase 2: stream the scored rows into Stage 1, in the
+                // same ascending row order they were scored.
+                let t1 = if tracing { Some(Instant::now()) } else { None };
+                for row in tile_start..tile_end {
+                    let base = row * b + lane_lo;
+                    let slot = (row - tile_start) * lanes;
+                    state.ingest(base as u32, &self.scores[slot..slot + lanes]);
+                }
+                if let (Some(t0), Some(t1)) = (t0, t1) {
+                    score_ns += (t1 - t0).as_nanos() as u64;
+                    select_ns += t1.elapsed().as_nanos() as u64;
                 }
             }
             tile_start = tile_end;
@@ -202,12 +233,17 @@ impl FusedLaneState {
             // The rescore below is candidate-index-based, so it is
             // algorithm-agnostic: whichever selector routed a row through
             // Stage 1, its exact f32 value is recomputed the same way.
+            let t0 = if tracing { Some(Instant::now()) } else { None };
             let mut cands = state.candidates();
+            if let Some(t0) = t0 {
+                select_ns += t0.elapsed().as_nanos() as u64;
+            }
             if rescore {
                 // Exact f32 rescore of this worker's survivors: the same
                 // dequantize + fixed-order dot the sequential operator's
                 // rescore hook runs, so the merged result is identical at
                 // any thread count.
+                let t0 = if tracing { Some(Instant::now()) } else { None };
                 let q = &queries[qi * d..(qi + 1) * d];
                 for c in cands.iter_mut() {
                     self.database.dequantize_row(d, c.index as usize, &mut self.rescore_row);
@@ -220,8 +256,16 @@ impl FusedLaneState {
                     );
                     c.value = exact;
                 }
+                if let Some(t0) = t0 {
+                    rescore_ns += t0.elapsed().as_nanos() as u64;
+                }
             }
             out.push(cands);
+        }
+        if tracing {
+            self.spans.add(Stage::Stage1Score, score_ns);
+            self.spans.add(Stage::Stage1Select, select_ns);
+            self.spans.add(Stage::Rescore, rescore_ns);
         }
         out
     }
@@ -244,6 +288,11 @@ pub struct FusedParallelMips {
     kernel: SimdKernel,
     algo: Stage1Algo,
     pool: LanePool<FusedJob>,
+    /// Pool-shared per-stage span sink (see [`FusedLaneState::spans`]);
+    /// armed only for the duration of a [`run_batch_spanned`] dispatch.
+    ///
+    /// [`run_batch_spanned`]: Self::run_batch_spanned
+    spans: Arc<SharedSpans>,
     cand_scratch: Vec<Candidate>,
     /// `[nq, d]` int8 query codes for the current batch (int8 databases
     /// only), quantized once per batch on the dispatch thread.
@@ -322,6 +371,10 @@ impl FusedParallelMips {
         let t = threads.clamp(1, params.buckets);
         let rows = params.n / params.buckets;
         let elem_bytes = dtype.elem_bytes() as usize;
+        // One shared span sink for the whole pool: workers fetch-add their
+        // per-stage nanoseconds into it while a traced batch is in flight,
+        // and the dispatcher drains it after the reply barrier.
+        let spans = Arc::new(SharedSpans::new());
         let states: Vec<FusedLaneState> = (0..t)
             .map(|w| {
                 let lane_lo = w * params.buckets / t;
@@ -344,8 +397,9 @@ impl FusedParallelMips {
                     algo,
                     kernel,
                     states: Vec::new(),
-                    scores: vec![0.0; lanes],
+                    scores: vec![0.0; tr * lanes],
                     rescore_row: vec![0.0; d],
+                    spans: spans.clone(),
                 }
             })
             .collect();
@@ -368,6 +422,7 @@ impl FusedParallelMips {
             kernel,
             algo,
             pool,
+            spans,
             cand_scratch: Vec::with_capacity(params.num_candidates()),
             qcodes: Vec::new(),
             qscales: Vec::new(),
@@ -409,6 +464,40 @@ impl FusedParallelMips {
         if nq == 0 {
             return Vec::new();
         }
+        let per_worker = self.dispatch(queries, nq);
+        merge_stage2(&per_worker, nq, self.params.k, &mut self.cand_scratch)
+    }
+
+    /// [`run_batch`](Self::run_batch) with per-stage wall-time spans
+    /// accumulated into `spans`: the pool's sink is armed for the duration
+    /// of the dispatch (workers fetch-add score / select / rescore
+    /// nanoseconds, summed across workers), and the Stage-2 merge on the
+    /// calling thread is timed into [`Stage::Stage2Merge`]. Results are
+    /// bit-identical to `run_batch`.
+    pub fn run_batch_spanned(
+        &mut self,
+        queries: &[f32],
+        nq: usize,
+        spans: &mut SpanSet,
+    ) -> Vec<Vec<Candidate>> {
+        assert_eq!(queries.len(), nq * self.d, "query block size mismatch");
+        if nq == 0 {
+            return Vec::new();
+        }
+        self.spans.set_enabled(true);
+        let per_worker = self.dispatch(queries, nq);
+        self.spans.set_enabled(false);
+        spans.merge(&self.spans.drain());
+        let t0 = Instant::now();
+        let out = merge_stage2(&per_worker, nq, self.params.k, &mut self.cand_scratch);
+        spans.add_ns(Stage::Stage2Merge, t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    /// Quantize the batch's queries when needed and run the fused pool:
+    /// the shared dispatch half of [`run_batch`](Self::run_batch) /
+    /// [`run_batch_spanned`](Self::run_batch_spanned).
+    fn dispatch(&mut self, queries: &[f32], nq: usize) -> Vec<Vec<Vec<Candidate>>> {
         if self.dtype == Dtype::I8 {
             // Quantize the batch's queries once here rather than per
             // worker: every worker scores the same codes, and symmetric
@@ -422,13 +511,12 @@ impl FusedParallelMips {
                 );
             }
         }
-        let per_worker = self.pool.dispatch(|_| FusedJob {
+        self.pool.dispatch(|_| FusedJob {
             queries: SliceHandle::new(queries),
             qcodes: SliceHandle::new(&self.qcodes),
             qscales: SliceHandle::new(&self.qscales),
             nq,
-        });
-        merge_stage2(&per_worker, nq, self.params.k, &mut self.cand_scratch)
+        })
     }
 }
 

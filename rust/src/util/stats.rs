@@ -160,9 +160,37 @@ impl LatencyHistogram {
         (b.ceil() as usize).min(HIST_BUCKETS - 1)
     }
 
-    /// Lower edge (ns) of bucket i.
+    /// Upper edge (ns) of bucket i (`bucket_of` is ceil-based, so bucket i
+    /// covers `(base·r^(i-1), base·r^i]`).
     fn bucket_value(i: usize) -> f64 {
         HIST_BASE_NS * HIST_RATIO.powi(i as i32)
+    }
+
+    /// Number of log-scaled buckets (fixed at construction).
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Upper edge (ns) of bucket i — the Prometheus `le` boundary. The
+    /// last bucket is the overflow catch-all: +inf.
+    pub fn bucket_upper_ns(&self, i: usize) -> f64 {
+        if i + 1 >= self.buckets.len() {
+            f64::INFINITY
+        } else {
+            Self::bucket_value(i)
+        }
+    }
+
+    /// Per-bucket counts (index with [`bucket_upper_ns`]).
+    ///
+    /// [`bucket_upper_ns`]: LatencyHistogram::bucket_upper_ns
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Sum of every recorded duration, in nanoseconds.
+    pub fn sum_ns(&self) -> u128 {
+        self.sum_ns
     }
 
     pub fn record_ns(&mut self, ns: u64) {
@@ -340,6 +368,63 @@ mod tests {
         assert_eq!(a.count(), 2);
         assert_eq!(a.max_ns(), 2_000_000);
         assert_eq!(a.min_ns(), 1_000);
+    }
+
+    #[test]
+    fn histogram_bucket_accessors_cover_the_range() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(150); // just above the base bucket
+        assert_eq!(h.num_buckets(), HIST_BUCKETS);
+        assert_eq!(h.bucket_counts().len(), h.num_buckets());
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 1);
+        assert_eq!(h.sum_ns(), 150);
+        // Boundaries ascend and the last is the +inf overflow bucket.
+        for i in 1..h.num_buckets() - 1 {
+            assert!(h.bucket_upper_ns(i) > h.bucket_upper_ns(i - 1));
+        }
+        assert_eq!(h.bucket_upper_ns(h.num_buckets() - 1), f64::INFINITY);
+        // A recorded value lands in the bucket whose upper edge covers it:
+        // count cumulated through bucket i >= 1 exactly when edge >= 150.
+        let mut seen = 0u64;
+        for (i, &c) in h.bucket_counts().iter().enumerate() {
+            seen += c;
+            if h.bucket_upper_ns(i) >= 150.0 {
+                assert_eq!(seen, 1, "bucket {i}");
+                break;
+            }
+            assert_eq!(seen, 0, "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_interleaved_recording() {
+        use crate::util::check::{property, Gen};
+        property("hist merge == interleaved", 64, |g: &mut Gen| {
+            let n = g.usize_in(0..=200);
+            let mut a = LatencyHistogram::new();
+            let mut b = LatencyHistogram::new();
+            let mut both = LatencyHistogram::new();
+            for _ in 0..n {
+                // Span the full bucket range: ~100ns .. ~100s.
+                let ns = (g.f64_in(0.0, 30.0).exp2() * 100.0) as u64;
+                if g.bool() {
+                    a.record_ns(ns);
+                } else {
+                    b.record_ns(ns);
+                }
+                both.record_ns(ns);
+            }
+            a.merge(&b);
+            assert_eq!(a.bucket_counts(), both.bucket_counts());
+            assert_eq!(a.count(), both.count());
+            assert_eq!(a.sum_ns(), both.sum_ns());
+            assert_eq!(a.max_ns(), both.max_ns());
+            assert_eq!(a.min_ns(), both.min_ns());
+            for q in [0.5, 0.9, 0.99, 0.999] {
+                let (pa, pb) = (a.percentile_ns(q), both.percentile_ns(q));
+                assert!(pa == pb || (pa.is_nan() && pb.is_nan()), "q={q}");
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,110 @@
+//! Zero-allocation gate for the span-recording hot path.
+//!
+//! A counting global allocator wraps the system allocator; the single test
+//! below warms every data structure the per-batch tracing path touches
+//! (histogram keys, scratch), then arms the counter and replays the hot
+//! path — span arithmetic, shared-span accumulation, sampler decisions,
+//! and per-stage histogram recording. Any allocation inside the armed
+//! window is a regression: tracing must never put an allocation on the
+//! serving path once its steady-state keys exist.
+//!
+//! This file intentionally holds exactly one `#[test]`: integration tests
+//! in one binary run on concurrent threads, and a sibling test allocating
+//! inside the armed window would count against the gate.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use fastk::coordinator::ServiceMetrics;
+use fastk::obs::{ObsConfig, SharedSpans, SpanSet, Stage};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn span_recording_hot_path_does_not_allocate() {
+    let obs = fastk::obs::Observability::new();
+    obs.configure(ObsConfig {
+        trace_sample_n: 64,
+        slow_query_us: 10_000,
+        audit_sample_n: 100,
+        audit_seed: 7,
+    });
+    let metrics = ServiceMetrics::new();
+    let shared = SharedSpans::new();
+    shared.set_enabled(true);
+
+    // Warm every steady-state key the hot path will touch: the per-stage
+    // histogram map allocates its (stage, shard, epoch) entries on first
+    // sight, never again.
+    let mut warm = SpanSet::new();
+    for &st in Stage::ALL.iter() {
+        warm.add_ns(st, 1_000);
+    }
+    for shard in 0..4u32 {
+        metrics.record_stage_spans(shard, 0, &warm);
+    }
+    metrics.record_stage_spans(fastk::coordinator::SERVICE_SHARD, 0, &warm);
+
+    // ---- armed window: the per-batch tracing path, steady state ----
+    ARMED.store(true, Ordering::SeqCst);
+    for batch in 0..1_000u64 {
+        let mut spans = SpanSet::new();
+        for &st in Stage::ALL.iter() {
+            shared.add(st, 100 + batch);
+        }
+        spans.merge(&shared.drain());
+        spans.add_ns(Stage::Queue, 50);
+        spans.add_ns(Stage::Stage2Merge, 75);
+        let _ = spans.total_ns();
+        assert!(!spans.is_empty());
+        for shard in 0..4u32 {
+            metrics.record_stage_spans(shard, 0, &spans);
+        }
+        metrics.record_stage_spans(fastk::coordinator::SERVICE_SHARD, 0, &spans);
+        // Sampler decisions run per query even when nothing is retained.
+        let idx = obs.next_index();
+        let _ = obs.should_sample(idx);
+        let _ = obs.audit_pick(idx);
+        let _ = obs.is_slow(5_000);
+    }
+    ARMED.store(false, Ordering::SeqCst);
+
+    let counted = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        counted, 0,
+        "the armed span-recording hot path allocated {counted} times"
+    );
+}

@@ -1,0 +1,244 @@
+//! End-to-end observability: a planned service with the span sampler and
+//! the online recall auditor armed, checked from the outside —
+//!
+//! 1. the auditor's measured recall agrees with the plan's Theorem-1
+//!    prediction within the Welford confidence interval on live traffic,
+//! 2. the audit sampler is deterministic in its seed (two runs audit the
+//!    same query stream),
+//! 3. the `trace` / `metrics` verbs and the one-shot Prometheus HTTP
+//!    endpoint serve the same registry a `stats` reader sees.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastk::config::LauncherConfig;
+use fastk::coordinator::net::NetServer;
+use fastk::coordinator::{
+    BackendFactory, BatchPolicy, BatcherConfig, MipsService, NativeBackend, Query, ServiceConfig,
+    ShardBackend,
+};
+use fastk::obs::{AuditConfig, ObsConfig, Observability, RecallAuditor};
+use fastk::params::ParamCache;
+use fastk::plan::ServePlan;
+use fastk::store::{self, RowSource, ShardData};
+use fastk::topk::TwoStageParams;
+use fastk::util::json::Json;
+use fastk::util::Rng;
+
+const D: usize = 16;
+const K: usize = 128;
+const SHARDS: usize = 4;
+const SHARD_SIZE: usize = 1024;
+
+/// A planned 4-shard service over synthetic f32 rows, plus the oracle
+/// snapshot of the same rows for the auditor.
+fn planned_service() -> (Arc<MipsService>, ServePlan, Vec<ShardData>, Vec<usize>) {
+    let cfg = LauncherConfig::from_json(&format!(
+        r#"{{"d": {D}, "k": {K}, "shards": {SHARDS}, "shard_size": {SHARD_SIZE},
+            "recall_target": 0.97}}"#
+    ))
+    .unwrap();
+    let plan = cfg.resolve_plan(&mut ParamCache::new()).unwrap();
+    assert!(plan.predicted_recall >= 0.97, "planner met the target");
+    let params = TwoStageParams::new(
+        SHARD_SIZE,
+        K,
+        plan.buckets as usize,
+        plan.local_k as usize,
+    );
+    let mut factories: Vec<BackendFactory> = Vec::new();
+    let mut oracle = Vec::new();
+    let mut offsets = Vec::new();
+    for s in 0..SHARDS {
+        offsets.push(s * SHARD_SIZE);
+        let rows = store::generate_shard_rows(cfg.seed, s, SHARD_SIZE, D);
+        oracle.push(ShardData::F32(RowSource::from_vec(rows.clone())));
+        factories.push(Box::new(move || {
+            Ok(Box::new(NativeBackend::new(rows, D, K, Some(params))) as Box<dyn ShardBackend>)
+        }));
+    }
+    let svc = Arc::new(
+        MipsService::start(
+            ServiceConfig {
+                d: D,
+                k: K,
+                batcher: BatcherConfig {
+                    max_batch: 8,
+                    max_delay: Duration::from_micros(200),
+                    policy: BatchPolicy::Adaptive,
+                },
+                plan: Some(plan.clone()),
+            },
+            factories,
+            offsets.clone(),
+        )
+        .unwrap(),
+    );
+    (svc, plan, oracle, offsets)
+}
+
+fn run_queries(svc: &MipsService, nq: usize, seed: u64) {
+    let mut rng = Rng::new(seed).split();
+    let mut pending = Vec::with_capacity(nq);
+    for id in 0..nq {
+        let q: Vec<f32> = (0..D).map(|_| rng.next_gaussian() as f32).collect();
+        pending.push(svc.submit(Query { id: id as u64, vector: q }).unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn live_measured_recall_agrees_with_theorem_1() {
+    let (svc, plan, oracle, offsets) = planned_service();
+    let auditor = RecallAuditor::spawn(
+        AuditConfig {
+            d: D,
+            k: K,
+            target: 0.97,
+            stage1: "bucketed".to_string(),
+            dtype: "f32le".to_string(),
+            armed_epoch: 0,
+            min_n: 30,
+        },
+        oracle,
+        offsets,
+    );
+    svc.obs.install_audit(auditor.tx.clone());
+    svc.metrics.set_audit(auditor.shared.clone());
+    svc.obs.configure(ObsConfig {
+        trace_sample_n: 16,
+        audit_sample_n: 1,
+        audit_seed: 7,
+        ..Default::default()
+    });
+
+    let nq = 64;
+    run_queries(&svc, nq, 42);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while auditor.shared.samples() < nq as u64 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(auditor.shared.samples(), nq as u64, "every served query audited");
+
+    let snap = auditor.shared.snapshot();
+    let tol = 1.96 * if snap.measured_sem.is_finite() { snap.measured_sem } else { 0.0 } + 0.03;
+    assert!(
+        (snap.measured_recall - plan.predicted_recall).abs() <= tol,
+        "measured {:.4} vs Theorem-1 predicted {:.4} beyond tolerance {:.4}",
+        snap.measured_recall,
+        plan.predicted_recall,
+        tol
+    );
+    assert_eq!(snap.stale, 0);
+    assert_eq!(snap.keys.len(), 1);
+    assert_eq!(snap.keys[0].stage1, "bucketed");
+
+    // The measured estimate surfaces through the service's own registry:
+    // snapshot, summary line and stats JSON all carry it.
+    let m = svc.metrics.snapshot();
+    let audit = m.audit.expect("auditor installed");
+    assert_eq!(audit.samples, nq as u64);
+    assert!((audit.measured_recall - snap.measured_recall).abs() < 1e-12);
+    assert!(m.summary_line().contains("audit(samples=64"), "{}", m.summary_line());
+    let stats = m.to_stats_json();
+    let measured = stats
+        .get("audit")
+        .and_then(|a| a.get("measured_recall"))
+        .and_then(|v| v.as_f64())
+        .expect("stats carry measured_recall");
+    assert!((measured - snap.measured_recall).abs() < 1e-9);
+    // Traced batches land per-stage per-shard histograms too.
+    assert!(
+        m.stages.iter().any(|s| s.shard == 0),
+        "shard span histograms recorded"
+    );
+}
+
+#[test]
+fn audit_sampler_is_deterministic_in_its_seed() {
+    let picks = |seed: u64| -> Vec<u64> {
+        let obs = Observability::new();
+        obs.configure(ObsConfig {
+            audit_sample_n: 4,
+            audit_seed: seed,
+            ..Default::default()
+        });
+        (0..4096u64).filter(|&i| obs.audit_pick(i)).collect()
+    };
+    let a = picks(7);
+    let b = picks(7);
+    assert_eq!(a, b, "same seed must audit the same query stream");
+    assert!(!a.is_empty());
+    // Roughly every 4th query (splitmix64 % 4): between 1/8 and 1/2.
+    assert!(a.len() > 4096 / 8 && a.len() < 4096 / 2, "picked {}", a.len());
+    let c = picks(8);
+    assert_ne!(a, c, "a different seed audits a different stream");
+}
+
+#[test]
+fn trace_metrics_verbs_and_http_exposition_share_the_registry() {
+    let (svc, _plan, _oracle, _offsets) = planned_service();
+    svc.obs.configure(ObsConfig {
+        trace_sample_n: 1,
+        ..Default::default()
+    });
+    let server = NetServer::start("127.0.0.1:0", svc.clone()).unwrap();
+    let conn = TcpStream::connect(server.addr).unwrap();
+    let mut w = conn.try_clone().unwrap();
+    let mut r = BufReader::new(conn);
+    let mut line = String::new();
+
+    run_queries(&svc, 3, 5);
+
+    // trace: every query was sampled; entries carry per-shard spans.
+    // Retention follows each reply write by a hair, so poll the
+    // (destructive) drain until all three land.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut seen = 0usize;
+    while seen < 3 && Instant::now() < deadline {
+        line.clear();
+        w.write_all(b"{\"cmd\": \"trace\"}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        for e in j.get("trace").unwrap().as_arr().unwrap() {
+            assert_eq!(
+                e.get("shards").unwrap().as_arr().unwrap().len(),
+                SHARDS,
+                "every shard reports spans"
+            );
+            seen += 1;
+        }
+        if seen < 3 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    assert_eq!(seen, 3, "all sampled queries reach the ring");
+
+    // metrics verb and the one-shot HTTP endpoint render the same
+    // exposition from the same registry.
+    line.clear();
+    w.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+    r.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    let verb_text = j.get("metrics").unwrap().as_str().unwrap().to_string();
+    assert!(verb_text.contains("fastk_requests_total 3"), "{verb_text}");
+    assert!(verb_text.contains("fastk_predicted_recall_ratio"), "{verb_text}");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    fastk::obs::prom::spawn_metrics_http(listener, svc.metrics.clone());
+    let mut http = TcpStream::connect(addr).unwrap();
+    http.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+    let mut body = String::new();
+    http.read_to_string(&mut body).unwrap();
+    assert!(body.starts_with("HTTP/1.0 200 OK"), "{body}");
+    assert!(body.contains("# TYPE fastk_requests_total counter"), "{body}");
+    assert!(body.contains("fastk_requests_total 3"), "{body}");
+    assert!(body.contains("fastk_stage_us_bucket"), "{body}");
+
+    server.shutdown();
+}
